@@ -1,0 +1,43 @@
+//! Ablation: the paper's max-reachability placement (Alg. 3) vs
+//! first-fit / last-fit / random, under identical small/medium churn
+//! traffic with periodic large-slice requests. Rejection rate of the
+//! large requests quantifies the "premature fragmentation" the paper's
+//! partition manager claims to avoid (§4.2).
+
+use std::sync::Arc;
+
+use migm::mig::{churn_experiment, GpuSpec, PlacementPolicy};
+use migm::util::bench::Bench;
+
+fn main() {
+    let spec = Arc::new(GpuSpec::a100_40gb());
+    println!("policy            large-rejection-rate  mean-fcr");
+    println!("--------------------------------------------------");
+    for policy in [
+        PlacementPolicy::MaxReachability,
+        PlacementPolicy::LastFit,
+        PlacementPolicy::FirstFit,
+        PlacementPolicy::Random,
+    ] {
+        let runs = 32;
+        let (mut rej, mut fcr) = (0.0, 0.0);
+        for seed in 0..runs {
+            let r = churn_experiment(&spec, policy, 600, seed);
+            rej += r.rejection_rate();
+            fcr += r.mean_fcr;
+        }
+        println!(
+            "{:<17} {:>18.1}% {:>9.2}",
+            format!("{policy:?}"),
+            rej / runs as f64 * 100.0,
+            fcr / runs as f64
+        );
+    }
+    // placement-decision latency per policy
+    let b = Bench::new();
+    for policy in [PlacementPolicy::MaxReachability, PlacementPolicy::FirstFit] {
+        b.run(&format!("churn_600_steps_{policy:?}"), || {
+            churn_experiment(&spec, policy, 600, 3)
+        });
+    }
+}

@@ -1,0 +1,45 @@
+//! Serving-path decode-step latency (L3/runtime §Perf target).
+//!
+//! Compares the literal-argument path (every step re-uploads ~7MB of
+//! parameters) against the buffer path (parameters resident on the PJRT
+//! device, uploaded once at engine init).
+
+use migm::runtime::{DecodeEngine, Manifest, Runtime};
+use migm::util::bench::{black_box, Bench};
+
+fn main() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping decode_step bench: run `make artifacts`");
+        return;
+    }
+    let man = Manifest::load(&dir).unwrap();
+    let dm = man.decode["decode_s128"].clone();
+    let mut rt = Runtime::cpu().unwrap();
+    let eng = DecodeEngine::new(&mut rt, &dm, 7).unwrap();
+    let (k, v) = eng.empty_kv().unwrap();
+    let tokens: Vec<i32> = (0..dm.batch as i32).collect();
+    let pos = vec![3i32; dm.batch];
+
+    let b = Bench::coarse();
+    b.run("decode_step_literal_args", || {
+        black_box(eng.step(&tokens, &pos, &k, &v).unwrap().next_tokens)
+    });
+    b.run("decode_step_resident_params", || {
+        black_box(eng.step_resident(&tokens, &pos, &k, &v).unwrap().next_tokens)
+    });
+
+    // A full 16-token generation (the e2e serving unit).
+    b.run("decode_16_step_generation", || {
+        let (mut k, mut v) = eng.empty_kv().unwrap();
+        let mut toks = tokens.clone();
+        for step in 0..16 {
+            let p = vec![step as i32; dm.batch];
+            let out = eng.step_resident(&toks, &p, &k, &v).unwrap();
+            k = out.k_cache;
+            v = out.v_cache;
+            toks = out.next_tokens;
+        }
+        black_box(toks)
+    });
+}

@@ -1,0 +1,56 @@
+//! DES engine throughput: simulated-event processing rate on a fully
+//! loaded GPU. This bounds how fast the figure harnesses run and is the
+//! main L3 perf target (EXPERIMENTS.md §Perf).
+
+use std::sync::Arc;
+
+use migm::mig::GpuSpec;
+use migm::sim::GpuSim;
+use migm::util::bench::{black_box, Bench};
+use migm::workloads::rodinia;
+
+fn main() {
+    let spec = Arc::new(GpuSpec::a100_40gb());
+    let b = Bench::new();
+
+    // 7 concurrent small jobs, full run.
+    let job = rodinia::by_name("gaussian").unwrap().job(7);
+    b.run("sim_7x_gaussian_full_run", || {
+        let mut s = GpuSim::new(spec.clone(), false);
+        for _ in 0..7 {
+            let i = s.mgr.alloc(0).unwrap();
+            s.launch(job.clone(), i, 0.0);
+        }
+        let mut n = 0;
+        while s.advance().is_some() {
+            n += 1;
+        }
+        black_box(n)
+    });
+
+    // An iterative LLM job is ~200 IterKernel events + checks.
+    let llm = migm::workloads::llm::qwen2_7b().job(3);
+    b.run("sim_llm_200iters_with_prediction", || {
+        let mut s = GpuSim::new(spec.clone(), true);
+        let p20 = s.spec.profile_index("3g.20gb").unwrap();
+        let i = s.mgr.alloc(p20).unwrap();
+        s.launch(llm.clone(), i, 0.0);
+        let mut n = 0;
+        while s.advance().is_some() {
+            n += 1;
+        }
+        black_box(n)
+    });
+
+    // PCIe-heavy: transfer sharing recomputation dominates.
+    let nw = rodinia::by_name("nw").unwrap().job(7);
+    b.run("sim_7x_nw_pcie_contention", || {
+        let mut s = GpuSim::new(spec.clone(), false);
+        for _ in 0..7 {
+            let i = s.mgr.alloc(0).unwrap();
+            s.launch(nw.clone(), i, 0.0);
+        }
+        while s.advance().is_some() {}
+        black_box(s.now())
+    });
+}

@@ -1,0 +1,40 @@
+//! Figure 4e–4h (dynamic rows) end-to-end harness: the four LLM
+//! workloads under Scheme A, A+prediction and B+prediction, plus the
+//! prediction-vs-OOM case study (paper §5.2.2).
+
+use std::time::Instant;
+
+use migm::config::DEFAULT_SEED;
+use migm::report;
+
+fn main() {
+    let t0 = Instant::now();
+    let (rows, table) = report::fig4_llm(DEFAULT_SEED);
+    println!("{}", table.render());
+
+    // prediction must dominate no-prediction per workload
+    for mix in ["FLAN-T5-train", "FLAN-T5", "Qwen2", "Llama 3"] {
+        let a = rows.iter().find(|r| r.mix == mix && r.scheme == "A").unwrap();
+        let ap = rows
+            .iter()
+            .find(|r| r.mix == mix && r.scheme == "A+pred")
+            .unwrap();
+        assert!(
+            ap.norm.throughput >= a.norm.throughput,
+            "{mix}: prediction did not help"
+        );
+    }
+
+    let (cases, case_table) = report::oom_case_study(DEFAULT_SEED);
+    println!("{}", case_table.render());
+    let avg_err =
+        cases.iter().map(|r| r.err_at_10pct).sum::<f64>() / cases.len() as f64;
+    println!(
+        "avg prediction error at 10% of iterations: {:.2}% (paper: 14.98%)",
+        avg_err * 100.0
+    );
+    println!(
+        "\nbench fig4_llm: full harness (4 workloads x 4 runs) in {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,30 @@
+//! Figure 4e–4h (DNN rows) end-to-end harness: Ml1–Ml3 under both
+//! schemes, normalized to the baseline; asserts the paper's Ml3 corner
+//! case (the one mix where Scheme B wins).
+
+use std::time::Instant;
+
+use migm::config::DEFAULT_SEED;
+use migm::report;
+
+fn main() {
+    let t0 = Instant::now();
+    let (rows, table) = report::fig4_ml(DEFAULT_SEED);
+    println!("{}", table.render());
+    let a3 = rows.iter().find(|r| r.mix == "Ml3" && r.scheme == "A").unwrap();
+    let b3 = rows.iter().find(|r| r.mix == "Ml3" && r.scheme == "B").unwrap();
+    println!(
+        "Ml3 corner case: A {:.2}x vs B {:.2}x (paper: A 1.24x < B 1.43x)",
+        a3.norm.throughput, b3.norm.throughput
+    );
+    assert!(
+        b3.norm.throughput > a3.norm.throughput,
+        "Ml3 corner case lost: A {} vs B {}",
+        a3.norm.throughput,
+        b3.norm.throughput
+    );
+    println!(
+        "\nbench fig4_ml: full harness (3 mixes x 3 runs) in {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
+}

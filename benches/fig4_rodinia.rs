@@ -1,0 +1,28 @@
+//! Figure 4a–4d end-to-end harness: regenerates the paper's Rodinia
+//! rows (throughput / energy / mem-util / turnaround, normalized to the
+//! baseline) and times the full harness.
+
+use std::time::Instant;
+
+use migm::config::DEFAULT_SEED;
+use migm::report;
+
+fn main() {
+    let t0 = Instant::now();
+    let (rows, table) = report::fig4_rodinia(DEFAULT_SEED);
+    println!("{}", table.render());
+    println!(
+        "paper shapes: Hm2/Hm3 up to 6.2x thr & 5.93x energy; Hm4 ~1.7x; \
+         Ht1 +64%/+47% (A/B); Ht3 +29%/+21%; A >= B on heterogeneous mixes"
+    );
+    let hm_best = rows
+        .iter()
+        .filter(|r| r.mix.starts_with("Hm"))
+        .map(|r| r.norm.throughput)
+        .fold(0.0f64, f64::max);
+    assert!(hm_best > 4.0, "homogeneous best {hm_best} lost its shape");
+    println!(
+        "\nbench fig4_rodinia: full harness (7 mixes x 3 runs) in {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
+}

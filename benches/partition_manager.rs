@@ -1,0 +1,55 @@
+//! Micro-benchmarks of the partition manager — the L3 control-plane hot
+//! path (every scheduling decision calls alloc/free/plan_reconfig).
+
+use std::sync::Arc;
+
+use migm::mig::{GpuSpec, PartitionManager, ReachabilityTable};
+use migm::util::bench::{black_box, Bench};
+
+fn main() {
+    let spec = Arc::new(GpuSpec::a100_40gb());
+    let b = Bench::new();
+
+    b.run("reachability_precompute_a100", || {
+        black_box(ReachabilityTable::precompute(&spec))
+    });
+
+    let table = Arc::new(ReachabilityTable::precompute(&spec));
+    b.run("manager_new_with_shared_table", || {
+        black_box(PartitionManager::with_table(spec.clone(), table.clone()))
+    });
+
+    b.run("alloc_free_cycle_7x1g", || {
+        let mut m = PartitionManager::with_table(spec.clone(), table.clone());
+        let ids: Vec<_> = (0..7).map(|_| m.alloc(0).unwrap()).collect();
+        for id in ids {
+            m.free(id).unwrap();
+        }
+        black_box(m.current_fcr())
+    });
+
+    b.run("alloc_free_cycle_mixed_profiles", || {
+        let mut m = PartitionManager::with_table(spec.clone(), table.clone());
+        let a = m.alloc(3).unwrap(); // 4g
+        let c = m.alloc(1).unwrap(); // 2g
+        let d = m.alloc(0).unwrap(); // 1g
+        for id in [a, c, d] {
+            m.free(id).unwrap();
+        }
+        black_box(m.instance_count())
+    });
+
+    // Fusion planning: 7 idle 1g instances, want a 2g.
+    let mut filled = PartitionManager::with_table(spec.clone(), table.clone());
+    let ids: Vec<_> = (0..7).map(|_| filled.alloc(0).unwrap()).collect();
+    b.run("plan_reconfig_fusion_2g_from_1gs", || {
+        black_box(filled.plan_reconfig(1, &ids))
+    });
+    b.run("plan_reconfig_fission_full_gpu", || {
+        black_box(filled.plan_reconfig(4, &ids))
+    });
+
+    b.run("placement_candidates_1g", || {
+        black_box(filled.placement_candidates(0))
+    });
+}

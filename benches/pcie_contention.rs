@@ -1,0 +1,28 @@
+//! Table 4 harness: Needleman-Wunsch PCIe contention — solo runtime vs
+//! 7-way-concurrent runtime, and the batch-21 throughput factor.
+
+use std::time::Instant;
+
+use migm::report;
+
+fn main() {
+    let t0 = Instant::now();
+    let (r, table) = report::table4_nw();
+    println!("{}", table.render());
+    let slowdown = r.contended_runtime_s / r.solo_runtime_s;
+    println!(
+        "individual slowdown {slowdown:.2}x (paper 2.24x); \
+         batch-21 throughput {:.2}x (paper 1.92x)",
+        r.batch21_throughput_x
+    );
+    assert!(slowdown > 1.3, "PCIe contention shape lost");
+    assert!(r.batch21_throughput_x > 1.2 && r.batch21_throughput_x < 4.0);
+
+    // Table 3 alongside (same phase-overhead family).
+    let (_, t3) = report::table3_myocyte();
+    println!("{}", t3.render());
+    println!(
+        "\nbench pcie_contention: in {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
+}

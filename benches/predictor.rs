@@ -1,0 +1,48 @@
+//! Predictor benches: the host Alg. 1 fit at several window lengths, and
+//! the AOT Pallas artifact via PJRT (when artifacts exist). The host fit
+//! runs inside the simulator's per-iteration hot loop, so its latency
+//! bounds the whole DES.
+
+use migm::predictor::{host::fit_one, FitEngine, HostFit, Z_99};
+use migm::runtime::{Manifest, PjrtPredictor, Runtime};
+use migm::util::bench::{black_box, Bench};
+
+fn series(n: usize) -> (Vec<f64>, Vec<f64>) {
+    let m: Vec<f64> = (0..n).map(|t| 2.0 + 0.05 * t as f64).collect();
+    let r: Vec<f64> = (0..n).map(|t| 1.0 + 0.01 * t as f64).collect();
+    (m, r)
+}
+
+fn main() {
+    let b = Bench::new();
+    for n in [8usize, 32, 64, 128, 256] {
+        let (m, r) = series(n);
+        b.run(&format!("host_fit_one_w{n}"), || {
+            black_box(fit_one(&m, &r, 400.0, Z_99))
+        });
+    }
+
+    // batched host engine, 16 jobs x 64 obs (the predictor artifact's shape)
+    let batch: Vec<Vec<f64>> = (0..16).map(|_| series(64).0).collect();
+    let inv: Vec<Vec<f64>> = (0..16).map(|_| series(64).1).collect();
+    let hz = vec![200.0; 16];
+    let mut host = HostFit::new();
+    b.run("host_fit_batch_16x64", || {
+        black_box(host.fit(&batch, &inv, &hz))
+    });
+
+    // PJRT Pallas artifact
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let man = Manifest::load(&dir).unwrap();
+        let mut rt = Runtime::cpu().unwrap();
+        let pm = man.predictor["predictor_b16_w64"].clone();
+        let mut pjrt = PjrtPredictor::new(&mut rt, &pm).unwrap();
+        let b2 = Bench::coarse();
+        b2.run("pjrt_pallas_fit_batch_16x64", || {
+            black_box(pjrt.fit(&batch, &inv, &hz))
+        });
+    } else {
+        eprintln!("(skipping pjrt predictor bench: run `make artifacts`)");
+    }
+}

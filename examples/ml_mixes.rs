@@ -1,0 +1,49 @@
+//! Figures 4e–4h: the DNN mixes (Ml1–Ml3) and the dynamic LLM
+//! workloads, with and without time-series prediction.
+//!
+//! ```sh
+//! cargo run --release --example ml_mixes [seed]
+//! ```
+
+use migm::config::DEFAULT_SEED;
+use migm::report;
+
+fn main() {
+    let seed = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_SEED);
+
+    println!("== Figures 4e-4h (DNN): Ml1-Ml3 (seed {seed}) ==\n");
+    let (ml_rows, t) = report::fig4_ml(seed);
+    println!("{}", t.render());
+
+    // Paper §5.2.1 corner case: Ml3 is the one mix where B beats A
+    // (static split over the asymmetric 4g/3g pair idles the fast half).
+    let a3 = ml_rows.iter().find(|r| r.mix == "Ml3" && r.scheme == "A").unwrap();
+    let b3 = ml_rows.iter().find(|r| r.mix == "Ml3" && r.scheme == "B").unwrap();
+    println!(
+        "Ml3 corner case: A {:.2}x vs B {:.2}x (paper: A 1.24x, B 1.43x — B wins)\n",
+        a3.norm.throughput, b3.norm.throughput
+    );
+
+    println!("== Figures 4e-4h (dynamic): LLM workloads ==\n");
+    let (llm_rows, t) = report::fig4_llm(seed);
+    println!("{}", t.render());
+
+    let avg = |label: &str| {
+        let rs: Vec<_> = llm_rows.iter().filter(|r| r.scheme == label).collect();
+        let thr = rs.iter().map(|r| r.norm.throughput).sum::<f64>() / rs.len() as f64;
+        let en = rs.iter().map(|r| r.norm.energy).sum::<f64>() / rs.len() as f64;
+        let ut = rs.iter().map(|r| r.norm.mem_utilization).sum::<f64>() / rs.len() as f64;
+        (thr, en, ut)
+    };
+    let (thr, en, ut) = avg("A+pred");
+    println!(
+        "A+prediction averages: throughput {:.1}% energy {:.1}% mem-util {:.1}% \
+         (paper: +25.13% / +6.96% / +20.73%)",
+        (thr - 1.0) * 100.0,
+        (en - 1.0) * 100.0,
+        (ut - 1.0) * 100.0
+    );
+}

@@ -1,0 +1,28 @@
+//! Tables 3 and 4: per-phase overheads of MIG slicing.
+//!
+//! * Table 3 — myocyte phase breakdown: allocator bookkeeping grows with
+//!   the number of live MIG instances.
+//! * Table 4 — Needleman-Wunsch: PCIe bandwidth contention stretches the
+//!   transfer-bound benchmark when 7 copies run concurrently.
+//!
+//! ```sh
+//! cargo run --release --example phase_breakdown
+//! ```
+
+use migm::report;
+
+fn main() {
+    println!("== Table 3: myocyte run breakdown, Scheme A vs baseline ==\n");
+    let (_, t3) = report::table3_myocyte();
+    println!("{}", t3.render());
+
+    println!("== Table 4: Needleman-Wunsch under PCIe contention ==\n");
+    let (r, t4) = report::table4_nw();
+    println!("{}", t4.render());
+    println!(
+        "individual slowdown: {:.2}x (paper: 1171507us / 523406us = 2.24x)\n\
+         batch-21 throughput: {:.2}x of baseline (paper: 1.92x vs 7x ceiling)",
+        r.contended_runtime_s / r.solo_runtime_s,
+        r.batch21_throughput_x
+    );
+}

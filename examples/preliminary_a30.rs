@@ -1,0 +1,26 @@
+//! The §1 preliminary experiment: 14 random Rodinia jobs on an A30,
+//! tightest-fit slices vs next-largest slices (paper: +20.6% throughput,
+//! +6.3% energy for tight fits).
+//!
+//! ```sh
+//! cargo run --release --example preliminary_a30 [seed]
+//! ```
+
+use migm::config::DEFAULT_SEED;
+use migm::report;
+
+fn main() {
+    let seed = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_SEED);
+    println!("== §1 preliminary experiment on the A30 (seed {seed}) ==\n");
+    let (r, t) = report::preliminary_a30(seed);
+    println!("{}", t.render());
+    println!(
+        "tightest-fit improvement: throughput +{:.1}% (paper +20.6%), \
+         energy +{:.1}% (paper +6.3%)",
+        (r.throughput_gain - 1.0) * 100.0,
+        (r.energy_gain - 1.0) * 100.0
+    );
+}

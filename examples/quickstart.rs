@@ -1,0 +1,64 @@
+//! Quickstart: run one heterogeneous Rodinia batch under every
+//! scheduling policy and compare against the sequential baseline.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use migm::config::DEFAULT_SEED;
+use migm::metrics::{fx, Table};
+use migm::mig::GpuSpec;
+use migm::scheduler::{baseline, scheme_a, scheme_b};
+use migm::workloads::mix;
+
+fn main() {
+    let spec = Arc::new(GpuSpec::a100_40gb());
+    let m = mix::ht3(DEFAULT_SEED);
+    println!(
+        "mix {} — {} jobs on {} ({} GPCs, {} GB)\n",
+        m.name,
+        m.jobs.len(),
+        spec.name,
+        spec.total_compute,
+        spec.total_mem_gb
+    );
+
+    let base = baseline::run(spec.clone(), &m);
+    let a = scheme_a::run(spec.clone(), &m, false);
+    let b = scheme_b::run(spec.clone(), &m, false);
+
+    let mut t = Table::new(&[
+        "policy",
+        "makespan (s)",
+        "throughput",
+        "energy",
+        "mem-util",
+        "turnaround",
+        "reconfigs",
+    ]);
+    t.row(vec![
+        "baseline (sequential)".into(),
+        format!("{:.1}", base.metrics.makespan_s),
+        "1.00x".into(),
+        "1.00x".into(),
+        "1.00x".into(),
+        "1.00x".into(),
+        "0".into(),
+    ]);
+    for (name, r) in [("scheme A (by size)", &a), ("scheme B (FIFO)", &b)] {
+        let n = r.metrics.normalized_vs(&base.metrics);
+        t.row(vec![
+            name.into(),
+            format!("{:.1}", r.metrics.makespan_s),
+            fx(n.throughput),
+            fx(n.energy),
+            fx(n.mem_utilization),
+            fx(n.turnaround),
+            format!("{}", r.metrics.reconfig_ops),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(normalized factors: >1.00x means better than the baseline)");
+}

@@ -1,0 +1,36 @@
+//! Figures 4a–4d: all seven Rodinia mixes (Table 1) under Scheme A and
+//! Scheme B, normalized to the sequential full-GPU baseline.
+//!
+//! ```sh
+//! cargo run --release --example rodinia_mixes [seed]
+//! ```
+
+use migm::config::DEFAULT_SEED;
+use migm::report;
+
+fn main() {
+    let seed = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_SEED);
+    println!("== Figures 4a-4d: Rodinia mixes (seed {seed}) ==\n");
+    let (rows, table) = report::fig4_rodinia(seed);
+    println!("{}", table.render());
+    // Headline checks from the paper's §5.1.
+    let best = rows
+        .iter()
+        .max_by(|a, b| a.norm.throughput.partial_cmp(&b.norm.throughput).unwrap())
+        .unwrap();
+    println!(
+        "best throughput: {} under scheme {} at {:.2}x (paper: up to 6.20x)",
+        best.mix, best.scheme, best.norm.throughput
+    );
+    let best_e = rows
+        .iter()
+        .max_by(|a, b| a.norm.energy.partial_cmp(&b.norm.energy).unwrap())
+        .unwrap();
+    println!(
+        "best energy saving: {} under scheme {} at {:.2}x (paper: up to 5.93x)",
+        best_e.mix, best_e.scheme, best_e.norm.energy
+    );
+}

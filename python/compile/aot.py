@@ -1,0 +1,88 @@
+"""AOT lowering: jax graphs -> HLO *text* artifacts + manifest.json.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run from python/: ``python -m compile.aot --out-dir ../artifacts``.
+This is the ONLY python entrypoint in the deployed system; the rust binary
+is self-contained once artifacts exist.
+"""
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model, predictor
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_decode(cfg: model.DecodeConfig) -> str:
+    fn = model.decode_step_flat(cfg)
+    return to_hlo_text(jax.jit(fn).lower(*model.example_args(cfg)))
+
+
+def lower_predictor(cfg: predictor.PredictorConfig) -> str:
+    fn = predictor.peak_predictor(cfg)
+    return to_hlo_text(jax.jit(fn).lower(*predictor.example_args(cfg)))
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"decode": {}, "predictor": {}}
+
+    for cfg in model.DECODE_VARIANTS:
+        text = lower_decode(cfg)
+        path = os.path.join(args.out_dir, f"{cfg.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["decode"][cfg.name] = {
+            "file": f"{cfg.name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "config": dataclasses.asdict(cfg),
+            "params": [
+                {"name": n, "shape": list(s)} for n, s in cfg.param_specs()
+            ],
+            "kv_shape": list(cfg.kv_shape()),
+            "kv_cache_bytes": cfg.kv_cache_bytes(),
+            "param_bytes": cfg.param_bytes(),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for cfg in predictor.PREDICTOR_VARIANTS:
+        text = lower_predictor(cfg)
+        path = os.path.join(args.out_dir, f"{cfg.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["predictor"][cfg.name] = {
+            "file": f"{cfg.name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "config": dataclasses.asdict(cfg),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

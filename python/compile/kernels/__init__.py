@@ -1,0 +1,6 @@
+"""L1: Pallas kernels for MIGM's compute hot spots (+ pure-jnp oracles)."""
+
+from . import ref  # noqa: F401
+from .attention import decode_attention  # noqa: F401
+from .linreg import linreg_stats  # noqa: F401
+from .matmul import matmul  # noqa: F401

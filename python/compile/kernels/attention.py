@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: single-token decode attention over a KV cache.
+
+Grid is (requests, heads); each step pulls one head's full cache tile
+[S, Dh] into VMEM plus the 1-token query, computes masked softmax
+attention, and writes the [Dh] context vector.
+
+TPU mapping (vs. the CUDA flash-decoding the paper's LLM workloads use):
+instead of a threadblock-per-split over the sequence with shared-memory
+reductions, we block over (request, head) and keep the whole per-head
+cache tile resident in VMEM (S*Dh*4B = 32 KiB at S=128, Dh=64 — far under
+the ~16 MiB VMEM budget), so the softmax is a single VPU pass and the
+p@V contraction feeds the MXU. For longer S this kernel would add a
+sequence-block grid axis with an online-softmax accumulator; at serving
+shapes here a single tile is strictly better (no rescaling traffic).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, b_ref, o_ref, *, scale):
+    q = q_ref[0]  # [H, Dh]
+    k = k_ref[0]  # [H, S, Dh]
+    v = v_ref[0]  # [H, S, Dh]
+    bias = b_ref[0, :]  # [S]
+    s = jnp.einsum("hsd,hd->hs", k, q) * scale + bias[None, :]
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.einsum("hs,hsd->hd", p, v)
+
+
+@jax.jit
+def decode_attention(q, k, v, bias):
+    """q [R,H,Dh], k/v [R,H,S,Dh], bias [R,S] -> [R,H,Dh].
+
+    Grid is one step per request with the whole per-request cache tile
+    [H, S, Dh] resident in VMEM (H*S*Dh*4B*2 = 256 KiB at the serving
+    shapes — far under the ~16 MiB budget). The earlier (request, head)
+    grid used 4x more grid steps for no VMEM benefit; fewer, fatter
+    steps keep the MXU fed and cut the per-step dispatch overhead
+    (§Perf: 32 -> 8 grid steps per call).
+    """
+    r, h, dh = q.shape
+    s = k.shape[2]
+    scale = 1.0 / (dh**0.5)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h, s, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, s, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, h, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v, bias)

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: batched time-series peak-memory predictor (paper Alg. 1).
+
+One grid step per tracked job. Each step loads that job's full observation
+window (W f32 values for requested memory and for the inverse reuse ratio)
+into VMEM, computes two masked least-squares fits plus residual sigmas, and
+emits the 8-wide stats row consumed by the rust scheduler.
+
+TPU mapping: the whole row (W <= 256 floats) fits trivially in VMEM; the
+reductions are VPU work, not MXU work, so the block shape is simply one row
+per grid step and the kernel is memory-bound on the HBM->VMEM stream of the
+observation matrix. interpret=True everywhere (CPU PJRT cannot run Mosaic).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import Z_99
+
+
+def _fit(t, m, v):
+    """Masked least squares of v ~ a*t + b; returns (a, b, sigma)."""
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    st = jnp.sum(t * m)
+    stt = jnp.sum(t * t * m)
+    sy = jnp.sum(v * m)
+    sty = jnp.sum(t * v * m)
+    denom = n * stt - st * st
+    safe = jnp.abs(denom) > 1e-6
+    a = jnp.where(safe, (n * sty - st * sy) / jnp.where(safe, denom, 1.0), 0.0)
+    b = (sy - a * st) / n
+    resid = (v - (a * t + b)) * m
+    dof = jnp.maximum(n - 2.0, 1.0)
+    sigma = jnp.sqrt(jnp.sum(resid * resid) / dof)
+    return a, b, sigma
+
+
+def _linreg_kernel(y_ref, r_ref, nv_ref, hz_ref, out_ref, *, z):
+    y = y_ref[0, :]  # [W] requested memory series
+    r = r_ref[0, :]  # [W] inverse reuse ratio series
+    nv = nv_ref[0, 0]
+    h = hz_ref[0, 0]
+    w = y.shape[-1]
+    t = jax.lax.broadcasted_iota(jnp.float32, (w,), 0)
+    m = (t < nv).astype(jnp.float32)
+    am, bm, sm = _fit(t, m, y)
+    ar, br, sr = _fit(t, m, r)
+    mem_pred = am * h + bm + z * sm
+    inv_lo = jnp.maximum(ar * h + br - z * sr, 1.0)
+    peak = mem_pred / inv_lo
+    out_ref[0, :] = jnp.stack([am, bm, sm, ar, br, sr, mem_pred, peak])
+
+
+@functools.partial(jax.jit, static_argnames=("z",))
+def linreg_stats(req_mem, inv_reuse, n_valid, horizon, z=Z_99):
+    """Batched Alg. 1 fit. Shapes: [B, W], [B, W], [B], [B] -> [B, 8]."""
+    b, w = req_mem.shape
+    nv = n_valid.astype(jnp.float32).reshape(b, 1)
+    hz = horizon.astype(jnp.float32).reshape(b, 1)
+    return pl.pallas_call(
+        functools.partial(_linreg_kernel, z=z),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 8), jnp.float32),
+        interpret=True,
+    )(req_mem, inv_reuse, nv, hz)

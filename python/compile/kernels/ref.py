@@ -1,0 +1,78 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+is validated against the function of the same name here (pytest +
+hypothesis sweeps in python/tests/). Keep these boring and obviously
+correct — no tiling, no tricks.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# 99% two-sided confidence level z-score used by the paper's Alg. 1.
+Z_99 = 2.576
+
+
+def masked_linfit_ref(y, mask):
+    """Least-squares fit y ~ a*t + b over masked prefix, plus residual sigma.
+
+    y, mask: [..., W]; t is the iteration index 0..W-1.
+    Returns (a, b, sigma), each [...].
+    """
+    w = y.shape[-1]
+    t = jnp.arange(w, dtype=jnp.float32)
+    m = mask.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(m, axis=-1), 1.0)
+    st = jnp.sum(t * m, axis=-1)
+    stt = jnp.sum(t * t * m, axis=-1)
+    sy = jnp.sum(y * m, axis=-1)
+    sty = jnp.sum(t * y * m, axis=-1)
+    denom = n * stt - st * st
+    safe = jnp.abs(denom) > 1e-6
+    a = jnp.where(safe, (n * sty - st * sy) / jnp.where(safe, denom, 1.0), 0.0)
+    b = (sy - a * st) / n
+    resid = (y - (a[..., None] * t + b[..., None])) * m
+    dof = jnp.maximum(n - 2.0, 1.0)
+    sigma = jnp.sqrt(jnp.sum(resid * resid, axis=-1) / dof)
+    return a, b, sigma
+
+
+def linreg_stats_ref(req_mem, inv_reuse, n_valid, horizon, z=Z_99):
+    """Reference for the batched peak-memory predictor (paper Alg. 1).
+
+    req_mem, inv_reuse: [B, W] per-iteration series (padded past n_valid).
+    n_valid, horizon:   [B] float32.
+    Returns stats [B, 8]:
+      [a_m, b_m, sigma_m, a_r, b_r, sigma_r, mem_pred, peak_physical]
+    where mem_pred is the z-CI upper bound on requested memory at `horizon`
+    and peak_physical divides by the z-CI *lower* bound on the inverse
+    reuse ratio (less reuse => more physical memory; conservative).
+    """
+    w = req_mem.shape[-1]
+    t = jnp.arange(w, dtype=jnp.float32)
+    mask = t[None, :] < n_valid[:, None]
+    am, bm, sm = masked_linfit_ref(req_mem, mask)
+    ar, br, sr = masked_linfit_ref(inv_reuse, mask)
+    mem_pred = am * horizon + bm + z * sm
+    inv_lo = jnp.maximum(ar * horizon + br - z * sr, 1.0)
+    peak = mem_pred / inv_lo
+    return jnp.stack([am, bm, sm, ar, br, sr, mem_pred, peak], axis=-1)
+
+
+def decode_attention_ref(q, k, v, bias):
+    """Single-token decode attention over a KV cache.
+
+    q:    [R, H, Dh]     query for the current token
+    k, v: [R, H, S, Dh]  cache (current token already written)
+    bias: [R, S]         additive mask (0 for valid positions, -1e9 past len)
+    Returns [R, H, Dh].
+    """
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum("rhsd,rhd->rhs", k, q) * scale + bias[:, None, :]
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("rhs,rhsd->rhd", p, v)
+
+
+def matmul_ref(x, w):
+    """Plain f32 matmul, [M, K] @ [K, N] -> [M, N]."""
+    return jnp.matmul(x, w)

@@ -1,0 +1,165 @@
+"""L2: JAX compute graphs that lower into MIGM's AOT artifacts.
+
+Two graphs, both calling the L1 Pallas kernels:
+
+  * ``decode_step`` — one batched decode step of a tiny pre-norm
+    transformer LM (the real-compute LLM workload served by the rust
+    coordinator in ``examples/llm_serving.rs``). KV caches are carried
+    functionally: the step takes them as inputs and returns the updated
+    caches, so the rust side owns all state between steps.
+
+  * ``init_hidden`` is folded into decode_step via the embedding table —
+    the step takes raw token ids, not hidden states.
+
+Shapes are all static (AOT); variants are points in ``DECODE_VARIANTS``.
+Python is build-time only — these functions run once under jax.jit.lower.
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attention
+from .kernels.matmul import matmul
+
+NEG_INF = -1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeConfig:
+    """Static hyperparameters of one compiled decode-step variant."""
+
+    name: str
+    batch: int = 8  # R: requests batched per step by the rust batcher
+    layers: int = 2  # L
+    heads: int = 4  # H
+    head_dim: int = 64  # Dh
+    d_model: int = 256  # D == H * Dh
+    d_ff: int = 1024  # F
+    max_seq: int = 128  # S: KV-cache capacity
+    vocab: int = 512  # V
+
+    def __post_init__(self):
+        assert self.d_model == self.heads * self.head_dim
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Flattened (name, shape) list defining the artifact's param order.
+
+        The rust runtime materializes literals in exactly this order; the
+        list is exported verbatim into artifacts/manifest.json.
+        """
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        specs = [("embedding", (v, d))]
+        for l in range(self.layers):
+            specs += [
+                (f"layer{l}.ln1", (d,)),
+                (f"layer{l}.wqkv", (d, 3 * d)),
+                (f"layer{l}.wo", (d, d)),
+                (f"layer{l}.ln2", (d,)),
+                (f"layer{l}.w1", (d, f)),
+                (f"layer{l}.w2", (f, d)),
+            ]
+        specs.append(("ln_f", (d,)))
+        return specs
+
+    def kv_shape(self) -> Tuple[int, ...]:
+        return (self.layers, self.batch, self.heads, self.max_seq, self.head_dim)
+
+    def kv_cache_bytes(self) -> int:
+        import math
+
+        return 2 * math.prod(self.kv_shape()) * 4
+
+    def param_bytes(self) -> int:
+        import math
+
+        return sum(4 * math.prod(s) for _, s in self.param_specs())
+
+
+DECODE_VARIANTS = [
+    DecodeConfig(name="decode_s128"),
+    DecodeConfig(name="decode_s256", batch=4, max_seq=256),
+]
+
+
+def rmsnorm(x, scale):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def _write_kv(cache, new, pos):
+    """cache [R,H,S,Dh], new [R,H,Dh], pos [R] -> cache with row written."""
+
+    def one(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n[:, None, :], (0, p, 0))
+
+    return jax.vmap(one)(cache, new, pos)
+
+
+def decode_step(cfg: DecodeConfig, params, tokens, pos, k_cache, v_cache):
+    """One decode step.
+
+    params:   list of arrays per cfg.param_specs()
+    tokens:   [R] int32 current token ids
+    pos:      [R] int32 write position of the current token (0-based)
+    k_cache, v_cache: [L, R, H, S, Dh]
+    Returns (next_tokens [R] i32, logits [R, V] f32, k_cache, v_cache).
+    """
+    r, h, dh, s = cfg.batch, cfg.heads, cfg.head_dim, cfg.max_seq
+    it = iter(params)
+    emb = next(it)  # [V, D]
+    x = emb[tokens]  # [R, D]
+
+    # Additive attention bias: positions <= pos are visible.
+    seq = jnp.arange(s, dtype=jnp.int32)
+    bias = jnp.where(seq[None, :] <= pos[:, None], 0.0, NEG_INF).astype(jnp.float32)
+
+    new_k, new_v = [], []
+    for l in range(cfg.layers):
+        ln1, wqkv, wo, ln2, w1, w2 = (next(it) for _ in range(6))
+        xn = rmsnorm(x, ln1)
+        qkv = matmul(xn, wqkv)  # [R, 3D] — L1 Pallas matmul
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(r, h, dh)
+        k = k.reshape(r, h, dh)
+        v = v.reshape(r, h, dh)
+        kc = _write_kv(k_cache[l], k, pos)
+        vc = _write_kv(v_cache[l], v, pos)
+        new_k.append(kc)
+        new_v.append(vc)
+        ctx = decode_attention(q, kc, vc, bias)  # L1 Pallas attention
+        x = x + matmul(ctx.reshape(r, h * dh), wo)
+        xn = rmsnorm(x, ln2)
+        x = x + matmul(jax.nn.gelu(matmul(xn, w1)), w2)
+
+    ln_f = next(it)
+    x = rmsnorm(x, ln_f)
+    logits = matmul(x, emb.T)  # weight-tied LM head
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tokens, logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def decode_step_flat(cfg: DecodeConfig):
+    """Flat-signature wrapper for AOT lowering: fn(*params, tokens, pos, k, v)."""
+    n_params = len(cfg.param_specs())
+
+    def fn(*args):
+        params = list(args[:n_params])
+        tokens, pos, k_cache, v_cache = args[n_params:]
+        return decode_step(cfg, params, tokens, pos, k_cache, v_cache)
+
+    return fn
+
+
+def example_args(cfg: DecodeConfig):
+    """ShapeDtypeStructs matching decode_step_flat's signature."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    args = [jax.ShapeDtypeStruct(s, f32) for _, s in cfg.param_specs()]
+    args.append(jax.ShapeDtypeStruct((cfg.batch,), i32))  # tokens
+    args.append(jax.ShapeDtypeStruct((cfg.batch,), i32))  # pos
+    args.append(jax.ShapeDtypeStruct(cfg.kv_shape(), f32))  # k_cache
+    args.append(jax.ShapeDtypeStruct(cfg.kv_shape(), f32))  # v_cache
+    return args

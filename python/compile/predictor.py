@@ -1,0 +1,44 @@
+"""L2: the batched peak-memory predictor graph (paper Alg. 1) for AOT.
+
+The rust scheduler tracks up to B jobs' allocator series and calls the
+compiled artifact with padded [B, W] windows. Output is the [B, 8] stats
+matrix from kernels.linreg (slopes, intercepts, sigmas, mem_pred, peak).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.linreg import linreg_stats
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictorConfig:
+    name: str = "predictor_b16_w64"
+    batch: int = 16  # B: jobs tracked concurrently
+    window: int = 64  # W: observation window length
+
+
+PREDICTOR_VARIANTS = [
+    PredictorConfig(),
+    PredictorConfig(name="predictor_b4_w128", batch=4, window=128),
+]
+
+
+def peak_predictor(cfg: PredictorConfig):
+    def fn(req_mem, inv_reuse, n_valid, horizon):
+        return (linreg_stats(req_mem, inv_reuse, n_valid, horizon),)
+
+    return fn
+
+
+def example_args(cfg: PredictorConfig):
+    f32 = jnp.float32
+    b, w = cfg.batch, cfg.window
+    return [
+        jax.ShapeDtypeStruct((b, w), f32),
+        jax.ShapeDtypeStruct((b, w), f32),
+        jax.ShapeDtypeStruct((b,), f32),
+        jax.ShapeDtypeStruct((b,), f32),
+    ]

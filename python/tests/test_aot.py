@@ -1,0 +1,47 @@
+"""AOT pipeline: lowering produces parseable HLO text + coherent manifest."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model, predictor
+
+
+def test_predictor_lowers_to_hlo_text():
+    cfg = predictor.PredictorConfig(name="t", batch=2, window=16)
+    text = aot.lower_predictor(cfg)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # batched input shape must appear
+    assert "f32[2,16]" in text
+
+
+def test_decode_lowers_to_hlo_text():
+    cfg = model.DecodeConfig(name="t", batch=2, layers=1, heads=2, head_dim=16,
+                             d_model=32, d_ff=64, max_seq=16, vocab=32)
+    text = aot.lower_decode(cfg)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # output is a tuple (return_tuple=True): next_tokens s32[2]
+    assert "s32[2]" in text
+
+
+def test_main_writes_manifest(tmp_path, monkeypatch):
+    # Use tiny variants to keep the test fast.
+    tiny_d = model.DecodeConfig(name="tiny_decode", batch=2, layers=1, heads=2,
+                                head_dim=16, d_model=32, d_ff=64, max_seq=16,
+                                vocab=32)
+    tiny_p = predictor.PredictorConfig(name="tiny_pred", batch=2, window=8)
+    monkeypatch.setattr(model, "DECODE_VARIANTS", [tiny_d])
+    monkeypatch.setattr(predictor, "PREDICTOR_VARIANTS", [tiny_p])
+    monkeypatch.setattr("sys.argv", ["aot", "--out-dir", str(tmp_path)])
+    aot.main()
+
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert "tiny_decode" in man["decode"]
+    assert "tiny_pred" in man["predictor"]
+    entry = man["decode"]["tiny_decode"]
+    assert (tmp_path / entry["file"]).exists()
+    assert entry["params"][0]["name"] == "embedding"
+    assert entry["kv_shape"] == list(tiny_d.kv_shape())

@@ -1,0 +1,140 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes and seeds; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention
+from compile.kernels.linreg import linreg_stats
+from compile.kernels.matmul import matmul
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- linreg
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 8),
+    w=st.integers(8, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linreg_matches_ref(b, w, seed):
+    r = rng(seed)
+    slope = r.uniform(0.0, 0.3, size=(b, 1)).astype(np.float32)
+    base = r.uniform(1.0, 8.0, size=(b, 1)).astype(np.float32)
+    t = np.arange(w, dtype=np.float32)[None, :]
+    req = base + slope * t + r.normal(0, 0.05, size=(b, w)).astype(np.float32)
+    inv = 1.0 + 0.01 * t + r.normal(0, 0.01, size=(b, w)).astype(np.float32)
+    n_valid = r.integers(3, w + 1, size=b).astype(np.float32)
+    horizon = r.uniform(w, 4 * w, size=b).astype(np.float32)
+
+    got = np.asarray(linreg_stats(req, inv, n_valid, horizon))
+    want = np.asarray(ref.linreg_stats_ref(req, inv, n_valid, horizon))
+    assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_linreg_exact_line_recovered():
+    """A noiseless line must be recovered exactly: sigma ~ 0, pred on line."""
+    w = 32
+    t = np.arange(w, dtype=np.float32)
+    req = (2.0 + 0.5 * t)[None, :]
+    inv = np.ones((1, w), dtype=np.float32)
+    stats = np.asarray(
+        linreg_stats(req, inv, np.array([w], np.float32), np.array([100.0], np.float32))
+    )[0]
+    a_m, b_m, sigma_m = stats[0], stats[1], stats[2]
+    assert abs(a_m - 0.5) < 1e-4
+    assert abs(b_m - 2.0) < 1e-3
+    assert sigma_m < 1e-3
+    # mem_pred = 0.5*100 + 2 = 52 (+ z*~0)
+    assert abs(stats[6] - 52.0) < 0.01
+    # inv_reuse == 1 everywhere -> peak == mem_pred
+    assert abs(stats[7] - stats[6]) < 0.05
+
+
+def test_linreg_short_window_is_finite():
+    """n_valid < 3 (degenerate fit) must not produce NaN/Inf."""
+    b, w = 2, 16
+    req = np.full((b, w), 5.0, np.float32)
+    inv = np.ones((b, w), np.float32)
+    out = np.asarray(
+        linreg_stats(
+            req, inv, np.array([1.0, 2.0], np.float32), np.array([50.0, 50.0], np.float32)
+        )
+    )
+    assert np.isfinite(out).all()
+
+
+# ------------------------------------------------------------- attention
+
+
+@settings(**SETTINGS)
+@given(
+    r_=st.integers(1, 4),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([16, 64, 128]),
+    dh=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(r_, h, s, dh, seed):
+    g = rng(seed)
+    q = g.normal(size=(r_, h, dh)).astype(np.float32)
+    k = g.normal(size=(r_, h, s, dh)).astype(np.float32)
+    v = g.normal(size=(r_, h, s, dh)).astype(np.float32)
+    lens = g.integers(1, s + 1, size=r_)
+    bias = np.where(np.arange(s)[None, :] < lens[:, None], 0.0, -1e9).astype(np.float32)
+
+    got = np.asarray(decode_attention(q, k, v, bias))
+    want = np.asarray(ref.decode_attention_ref(q, k, v, bias))
+    assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_attention_single_visible_position_returns_v():
+    """With exactly one unmasked position, output must equal v there."""
+    r_, h, s, dh = 2, 2, 8, 16
+    g = rng(0)
+    q = g.normal(size=(r_, h, dh)).astype(np.float32)
+    k = g.normal(size=(r_, h, s, dh)).astype(np.float32)
+    v = g.normal(size=(r_, h, s, dh)).astype(np.float32)
+    bias = np.full((r_, s), -1e9, np.float32)
+    bias[:, 3] = 0.0
+    got = np.asarray(decode_attention(q, k, v, bias))
+    assert_allclose(got, v[:, :, 3, :], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 4, 8, 128, 256]),
+    k=st.sampled_from([16, 256]),
+    n=st.sampled_from([8, 128, 512, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    g = rng(seed)
+    x = g.normal(size=(m, k)).astype(np.float32)
+    w = g.normal(size=(k, n)).astype(np.float32)
+    got = np.asarray(matmul(x, w))
+    want = np.asarray(ref.matmul_ref(x, w))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_identity():
+    x = np.eye(128, dtype=np.float32)
+    w = rng(1).normal(size=(128, 128)).astype(np.float32)
+    assert_allclose(np.asarray(matmul(x, w)), w, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,44 @@
+//! Memory & compute estimation for incoming jobs (paper §4.3).
+//!
+//! Three tiers, matching the paper's estimation strategy:
+//!
+//! * [`compiler_analysis`] — CASE-style static analysis for scientific
+//!   workloads: derives the device-memory footprint and warp/GPC demand
+//!   from a kernel-resource descriptor (the tuple the paper's compiler
+//!   pass [4] emits), plus the warp-folding optimization.
+//! * [`dnnmem`] — DNNMem-style offline estimation for DNN training
+//!   jobs: walks the layer graph and sums weights, gradients, optimizer
+//!   state, activations and library workspace.
+//! * time-series prediction (module [`crate::predictor`]) for workloads
+//!   whose memory grows dynamically; the scheduler starts those on the
+//!   smallest slice and relies on prediction/OOM restart.
+
+pub mod compiler_analysis;
+pub mod dnnmem;
+pub mod workspace;
+
+pub use compiler_analysis::{fold_warps, KernelResource, WorkloadAnalysis};
+pub use workspace::{estimate_workspace_gb, parse_cublas_workspace_config, WorkspacePool};
+pub use dnnmem::{DnnEstimate, Layer, ModelDef, Optimizer};
+
+/// How a job's memory requirement was obtained.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EstimationMethod {
+    /// Static/JIT compiler analysis (scientific workloads).
+    CompilerAnalysis,
+    /// Offline model-size estimation (DNNMem).
+    ModelSize,
+    /// Unknown upfront; runtime time-series prediction.
+    TimeSeries,
+}
+
+/// The estimate consumed by the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryEstimate {
+    /// Peak device memory, GB. For `TimeSeries` this is the *initial*
+    /// guess (smallest slice) and is refined online.
+    pub mem_gb: f64,
+    /// Compute demand in GPC units (soft constraint).
+    pub compute_gpcs: u8,
+    pub method: EstimationMethod,
+}

@@ -1,0 +1,140 @@
+//! Third-party-library workspace estimation (paper §3.2.2).
+//!
+//! cuDNN/cuBLAS allocate fixed workspace pools on behalf of the model;
+//! these do **not** grow with context size, so the predictor must
+//! discount them from the time-series fit. The paper infers their size
+//! by parsing environment configuration such as
+//! `CUBLAS_WORKSPACE_CONFIG=:4096:8,:16:8` (pool-size-KiB : pool-count
+//! pairs) and by walking model layers for per-layer cuDNN scratch.
+
+use crate::estimator::dnnmem::{Layer, ModelDef};
+
+/// One workspace pool parsed from `CUBLAS_WORKSPACE_CONFIG`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkspacePool {
+    pub size_kib: u64,
+    pub count: u64,
+}
+
+impl WorkspacePool {
+    pub fn bytes(&self) -> u64 {
+        self.size_kib * 1024 * self.count
+    }
+}
+
+/// Parse a `CUBLAS_WORKSPACE_CONFIG` value. Format: comma-separated
+/// `:<size_kib>:<count>` entries (the leading colon is part of the
+/// documented syntax). Unparseable entries are rejected.
+pub fn parse_cublas_workspace_config(value: &str) -> Option<Vec<WorkspacePool>> {
+    let mut pools = Vec::new();
+    for entry in value.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let rest = entry.strip_prefix(':')?;
+        let (size, count) = rest.split_once(':')?;
+        pools.push(WorkspacePool {
+            size_kib: size.trim().parse().ok()?,
+            count: count.trim().parse().ok()?,
+        });
+    }
+    Some(pools)
+}
+
+/// The CUDA default when the variable is unset (`:4096:2,:16:8` per the
+/// cuBLAS documentation for deterministic workspaces).
+pub fn default_pools() -> Vec<WorkspacePool> {
+    vec![
+        WorkspacePool { size_kib: 4096, count: 2 },
+        WorkspacePool { size_kib: 16, count: 8 },
+    ]
+}
+
+/// Per-layer cuDNN scratch (batch-independent part), bytes.
+fn layer_scratch_bytes(layer: &Layer) -> u64 {
+    match layer {
+        // implicit-GEMM algorithm workspace
+        Layer::Conv2d { .. } => 64 << 20,
+        // cuBLAS GEMM scratch
+        Layer::Linear { .. } | Layer::TransformerBlock { .. } => 8 << 20,
+        _ => 0,
+    }
+}
+
+/// Aggregate workspace estimate for a model (paper: "walks through model
+/// layers, estimates per-layer workspace sizes, and aggregates them").
+/// `env_config` is the raw `CUBLAS_WORKSPACE_CONFIG` value if set.
+pub fn estimate_workspace_gb(model: &ModelDef, env_config: Option<&str>) -> f64 {
+    let pools = env_config
+        .and_then(parse_cublas_workspace_config)
+        .unwrap_or_else(default_pools);
+    let pool_bytes: u64 = pools.iter().map(|p| p.bytes()).sum();
+    // Per-layer scratch is reused across layers of the same kind; take
+    // the max conv scratch + max gemm scratch rather than the sum.
+    let conv = model
+        .layers
+        .iter()
+        .filter(|l| matches!(l, Layer::Conv2d { .. }))
+        .map(layer_scratch_bytes)
+        .max()
+        .unwrap_or(0);
+    let gemm = model
+        .layers
+        .iter()
+        .filter(|l| !matches!(l, Layer::Conv2d { .. }))
+        .map(layer_scratch_bytes)
+        .max()
+        .unwrap_or(0);
+    (pool_bytes + conv + gemm) as f64 / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::dnnmem;
+
+    #[test]
+    fn parses_documented_syntax() {
+        let pools = parse_cublas_workspace_config(":4096:8,:16:8").unwrap();
+        assert_eq!(
+            pools,
+            vec![
+                WorkspacePool { size_kib: 4096, count: 8 },
+                WorkspacePool { size_kib: 16, count: 8 },
+            ]
+        );
+        assert_eq!(pools[0].bytes(), 4096 * 1024 * 8);
+    }
+
+    #[test]
+    fn rejects_malformed_entries() {
+        assert!(parse_cublas_workspace_config("4096:8").is_none());
+        assert!(parse_cublas_workspace_config(":x:8").is_none());
+        assert!(parse_cublas_workspace_config(":4096").is_none());
+    }
+
+    #[test]
+    fn empty_config_gives_no_pools() {
+        assert_eq!(parse_cublas_workspace_config("").unwrap(), vec![]);
+    }
+
+    #[test]
+    fn workspace_is_fixed_wrt_batch() {
+        // The whole point of §3.2.2: workspace must be batch-independent
+        // so it can be excluded from the time-series fit.
+        let m = dnnmem::vgg16();
+        let a = estimate_workspace_gb(&m, None);
+        let b = estimate_workspace_gb(&m, None);
+        assert_eq!(a, b);
+        assert!(a > 0.05 && a < 1.0, "{a}");
+    }
+
+    #[test]
+    fn env_override_changes_estimate() {
+        let m = dnnmem::bert_base(128);
+        let small = estimate_workspace_gb(&m, Some(":16:1"));
+        let big = estimate_workspace_gb(&m, Some(":4096:16"));
+        assert!(big > small);
+    }
+}

@@ -1,0 +1,51 @@
+//! # MIGM — Multi-Instance GPU Manager
+//!
+//! A reproduction of *"Managing Multi Instance GPUs for High Throughput and
+//! Energy Savings"* (CS.DC 2025): dynamic MIG partition management,
+//! memory-estimation-driven scheduling, and time-series peak-memory
+//! prediction for dynamically growing (LLM) workloads.
+//!
+//! The crate is the L3 coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the batched
+//!   linear-regression peak predictor and the decode-step hot loops.
+//! * **L2** — JAX graphs (`python/compile/{model,predictor}.py`), lowered
+//!   once to HLO-text artifacts by `make artifacts`.
+//! * **L3** — this crate: partition state machine, schedulers,
+//!   discrete-event GPU simulator, PJRT runtime, serving loop. Python is
+//!   never on the request path.
+//!
+//! Module map (see `DESIGN.md` for the full inventory):
+//!
+//! * [`mig`] — MIG geometry, partition-state FSM, future-configuration
+//!   reachability, the max-reachability allocator (paper Alg. 2/3).
+//! * [`estimator`] — compile-time analysis stand-in + DNNMem-style model
+//!   size estimation.
+//! * [`predictor`] — time-series peak-memory prediction (paper Alg. 1).
+//! * [`trace`] — synthetic PyTorch-allocator traces for dynamic workloads.
+//! * [`workloads`] — Rodinia / DNN / LLM workload models and the paper's
+//!   job mixes (Tables 1–2).
+//! * [`sim`] — discrete-event GPU simulator: phases, PCIe sharing, power.
+//! * [`scheduler`] — baseline, Scheme A, Scheme B, OOM restart, predictive
+//!   early restart.
+//! * [`runtime`] — PJRT-CPU loading/execution of the AOT artifacts.
+//! * [`server`] — tokio JSON-lines job submission server.
+//! * [`metrics`] / [`report`] — evaluation metrics and paper-figure
+//!   harnesses.
+//! * [`config`] — TOML configuration for GPUs, mixes, and policies.
+
+pub mod config;
+pub mod estimator;
+pub mod metrics;
+pub mod mig;
+pub mod predictor;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod trace;
+pub mod util;
+pub mod workloads;
+
+pub use mig::{GpuSpec, PartitionManager};

@@ -1,0 +1,251 @@
+//! `migm` — the MIGM command-line launcher.
+//!
+//! ```text
+//! migm run --mix ht2 --scheme a [--prediction] [--gpu a100] [--seed N]
+//! migm run --config experiment.json
+//! migm report <all|fig3|reach|prelim|fig4-rodinia|fig4-ml|fig4-llm|oom|seeds|table3|table4>
+//! migm mig <list-configs|reachability> [--gpu a100]
+//! migm serve [--port 7700] [--replicas 2] [--variant decode_s128]
+//! migm client [--port 7700] --prompt 3,17,9 [--max-new 16]
+//! ```
+
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use migm::config::{ExperimentConfig, Scheme, DEFAULT_SEED};
+use migm::metrics::fx;
+use migm::mig::GpuSpec;
+use migm::report;
+use migm::scheduler;
+use migm::server::{serve, ServingConfig, ServingSystem};
+
+/// Tiny flag parser: `--key value` and `--switch`.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let value = argv.get(i + 1).filter(|v| !v.starts_with("--")).cloned();
+                if value.is_some() {
+                    i += 1;
+                }
+                flags.push((name.to_string(), value));
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "report" => cmd_report(&args),
+        "mig" => cmd_mig(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `migm help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "migm — Multi-Instance GPU Manager (MIGM, CS.DC 2025 reproduction)
+
+USAGE:
+  migm run --mix <name> [--scheme baseline|a|b] [--prediction]
+           [--gpu a100|a30|a100-80gb|h100] [--seed N] [--compare]
+  migm run --config <file.json>
+  migm report <all|fig3|reach|prelim|fig4-rodinia|fig4-ml|fig4-llm|oom|seeds|table3|table4>
+  migm mig <list-configs|reachability> [--gpu a100]
+  migm serve [--port 7700] [--replicas 2] [--variant decode_s128]
+  migm client [--port 7700] --prompt 3,17,9 [--max-new 16]
+
+Mixes: hm1-4, ht1-3, ml1-3, flan-t5-train, flan-t5, qwen2, llama3,
+       preliminary-a30."
+    );
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::from_file(&PathBuf::from(path))?
+    } else {
+        let mix = args.get("mix").context("--mix (or --config) required")?;
+        let scheme = Scheme::parse(args.get("scheme").unwrap_or("a"))?;
+        let seed = args
+            .get("seed")
+            .map(|s| s.parse::<u64>())
+            .transpose()?
+            .unwrap_or(DEFAULT_SEED);
+        ExperimentConfig::new(
+            args.get("gpu").unwrap_or("a100"),
+            mix,
+            scheme,
+            args.has("prediction"),
+            seed,
+        )?
+    };
+    let r = scheduler::run_experiment(&cfg);
+    let m = &r.metrics;
+    println!(
+        "mix={} gpu={} scheme={} prediction={} seed={}",
+        cfg.mix_name,
+        cfg.gpu.name,
+        cfg.scheme.name(),
+        cfg.prediction,
+        cfg.seed
+    );
+    println!(
+        "jobs={} makespan={:.2}s throughput={:.3} j/s energy={:.0}J \
+         energy/job={:.0}J mem-util={:.1}% turnaround={:.2}s reconf={} oom={} early={}",
+        m.n_jobs,
+        m.makespan_s,
+        m.throughput_jps,
+        m.energy_j,
+        m.energy_per_job_j,
+        m.mem_utilization * 100.0,
+        m.avg_turnaround_s,
+        m.reconfig_ops,
+        m.oom_restarts,
+        m.early_restarts
+    );
+    if args.has("compare") && cfg.scheme != Scheme::Baseline {
+        let base_cfg = ExperimentConfig {
+            scheme: Scheme::Baseline,
+            prediction: false,
+            ..cfg.clone()
+        };
+        let b = scheduler::run_experiment(&base_cfg);
+        let n = m.normalized_vs(&b.metrics);
+        println!(
+            "vs baseline: throughput {}  energy {}  mem-util {}  turnaround {}",
+            fx(n.throughput),
+            fx(n.energy),
+            fx(n.mem_utilization),
+            fx(n.turnaround)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let seed = args
+        .get("seed")
+        .map(|s| s.parse::<u64>())
+        .transpose()?
+        .unwrap_or(DEFAULT_SEED);
+    let spec = GpuSpec::by_name(args.get("gpu").unwrap_or("a100")).context("gpu")?;
+    let out = match what {
+        "all" => report::all_reports(),
+        "fig3" => report::fig3_configs(&spec).1.render(),
+        "reach" => report::reachability_example(&spec).1.render(),
+        "prelim" => report::preliminary_a30(seed).1.render(),
+        "fig4-rodinia" => report::fig4_rodinia(seed).1.render(),
+        "fig4-ml" => report::fig4_ml(seed).1.render(),
+        "fig4-llm" => report::fig4_llm(seed).1.render(),
+        "oom" => report::oom_case_study(seed).1.render(),
+        "seeds" => report::seed_sweep(&[1, 2, 3, 4, 5, 6]).render(),
+        "table3" => report::table3_myocyte().1.render(),
+        "table4" => report::table4_nw().1.render(),
+        other => bail!("unknown report '{other}'"),
+    };
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_mig(args: &Args) -> Result<()> {
+    let spec = GpuSpec::by_name(args.get("gpu").unwrap_or("a100")).context("gpu")?;
+    match args.positional.first().map(String::as_str) {
+        Some("list-configs") => {
+            let (rows, t) = report::fig3_configs(&spec);
+            println!("{} fully-configured states on {}:", rows.len(), spec.name);
+            println!("{}", t.render());
+        }
+        Some("reachability") => {
+            println!("{}", report::reachability_example(&spec).1.render());
+        }
+        _ => bail!("usage: migm mig <list-configs|reachability>"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let port: u16 = args.get("port").unwrap_or("7700").parse()?;
+    let cfg = ServingConfig {
+        replicas: args.get("replicas").unwrap_or("2").parse()?,
+        variant: args.get("variant").unwrap_or("decode_s128").to_string(),
+        ..Default::default()
+    };
+    let sys = Arc::new(ServingSystem::start(cfg)?);
+    println!("replicas on slices: {:?}", sys.replica_slices);
+    let listener = TcpListener::bind(("127.0.0.1", port))?;
+    println!("migm serving on 127.0.0.1:{port} (JSON lines; op=generate|stats|shutdown)");
+    serve(listener, sys)?;
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let port: u16 = args.get("port").unwrap_or("7700").parse()?;
+    let prompt = args.get("prompt").unwrap_or("1,2,3");
+    let max_new: usize = args.get("max-new").unwrap_or("16").parse()?;
+    let tokens: Vec<&str> = prompt.split(',').collect();
+    let mut conn = TcpStream::connect(("127.0.0.1", port))?;
+    writeln!(
+        conn,
+        r#"{{"op":"generate","prompt":[{}],"max_new":{}}}"#,
+        tokens.join(","),
+        max_new
+    )?;
+    let mut line = String::new();
+    BufReader::new(conn).read_line(&mut line)?;
+    println!("{}", line.trim());
+    Ok(())
+}

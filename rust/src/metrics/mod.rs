@@ -1,0 +1,150 @@
+//! Evaluation metrics (paper §5): throughput, energy, memory
+//! utilization, job turnaround — absolute and normalized to the
+//! sequential full-GPU baseline.
+
+/// Metrics of one batch run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchMetrics {
+    pub n_jobs: usize,
+    /// Batch makespan (s).
+    pub makespan_s: f64,
+    /// Jobs per second.
+    pub throughput_jps: f64,
+    /// Total energy (J).
+    pub energy_j: f64,
+    pub energy_per_job_j: f64,
+    /// Time-averaged fraction of GPU memory covered by running jobs'
+    /// actual footprints.
+    pub mem_utilization: f64,
+    /// Mean job turnaround (submit -> completion), s.
+    pub avg_turnaround_s: f64,
+    /// Count of GPU reconfiguration operations performed.
+    pub reconfig_ops: usize,
+    /// Jobs that hit a real OOM and restarted.
+    pub oom_restarts: usize,
+    /// Jobs restarted early by the predictor.
+    pub early_restarts: usize,
+}
+
+impl BatchMetrics {
+    /// Normalized improvements vs a baseline run (>1 is better for all
+    /// four, matching the paper's Figure 4 normalization).
+    pub fn normalized_vs(&self, base: &BatchMetrics) -> NormalizedMetrics {
+        NormalizedMetrics {
+            throughput: self.throughput_jps / base.throughput_jps,
+            energy: base.energy_j / self.energy_j,
+            mem_utilization: self.mem_utilization / base.mem_utilization.max(1e-12),
+            turnaround: base.avg_turnaround_s / self.avg_turnaround_s.max(1e-12),
+        }
+    }
+}
+
+/// Improvement factors relative to the baseline (1.0 = parity).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NormalizedMetrics {
+    pub throughput: f64,
+    pub energy: f64,
+    pub mem_utilization: f64,
+    pub turnaround: f64,
+}
+
+/// Simple fixed-width table renderer for the report harnesses.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&format!("{:<w$}", c, w = widths[i]));
+            }
+            out.push('\n');
+        };
+        line(&self.header, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            line(r, &mut out);
+        }
+        out
+    }
+}
+
+/// `x.yz`x formatting for normalized factors.
+pub fn fx(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(thr: f64, e: f64, util: f64, tat: f64) -> BatchMetrics {
+        BatchMetrics {
+            n_jobs: 10,
+            makespan_s: 10.0 / thr,
+            throughput_jps: thr,
+            energy_j: e,
+            energy_per_job_j: e / 10.0,
+            mem_utilization: util,
+            avg_turnaround_s: tat,
+            reconfig_ops: 0,
+            oom_restarts: 0,
+            early_restarts: 0,
+        }
+    }
+
+    #[test]
+    fn normalization_directions() {
+        let base = m(1.0, 1000.0, 0.1, 50.0);
+        let better = m(2.0, 500.0, 0.3, 25.0);
+        let n = better.normalized_vs(&base);
+        assert!((n.throughput - 2.0).abs() < 1e-12);
+        assert!((n.energy - 2.0).abs() < 1e-12);
+        assert!((n.mem_utilization - 3.0).abs() < 1e-12);
+        assert!((n.turnaround - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["mix", "thr"]);
+        t.row(vec!["Hm1".into(), "1.25x".into()]);
+        t.row(vec!["longer-name".into(), "2x".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("mix"));
+        assert!(lines[2].starts_with("Hm1"));
+    }
+
+    #[test]
+    fn fx_format() {
+        assert_eq!(fx(1.589), "1.59x");
+    }
+}

@@ -1,0 +1,342 @@
+//! The dynamic partition manager (paper §4.2, Algorithm 3).
+//!
+//! Owns the live partition state of one GPU, allocates instances by
+//! maximizing future-configuration reachability, frees them, and plans
+//! fusion/fission reconfigurations (destroy idle instances + create a
+//! bigger/smaller one) on behalf of Scheme B.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::profile::GpuSpec;
+use super::reachability::ReachabilityTable;
+use super::state::{PartitionState, Placement};
+
+/// Handle to one live MIG instance.
+pub type InstanceId = u32;
+
+/// A reconfiguration plan: instances to destroy (fusion/fission inputs)
+/// so that `create` becomes placeable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReconfigPlan {
+    pub destroy: Vec<InstanceId>,
+    pub create_profile: usize,
+    /// Number of create/destroy operations (for latency accounting).
+    pub ops: usize,
+}
+
+/// Errors from the partition manager.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum MigError {
+    #[error("no legal placement for profile {0} in the current state")]
+    NoPlacement(String),
+    #[error("unknown instance id {0}")]
+    UnknownInstance(InstanceId),
+}
+
+/// Live partition manager for one GPU.
+#[derive(Debug, Clone)]
+pub struct PartitionManager {
+    spec: Arc<GpuSpec>,
+    table: Arc<ReachabilityTable>,
+    state: PartitionState,
+    instances: HashMap<InstanceId, Placement>,
+    next_id: InstanceId,
+}
+
+impl PartitionManager {
+    pub fn new(spec: Arc<GpuSpec>) -> Self {
+        let table = ReachabilityTable::shared(&spec);
+        PartitionManager {
+            spec,
+            table,
+            state: PartitionState::empty(),
+            instances: HashMap::new(),
+            next_id: 1,
+        }
+    }
+
+    /// Share the (expensive) reachability table across managers.
+    pub fn with_table(spec: Arc<GpuSpec>, table: Arc<ReachabilityTable>) -> Self {
+        PartitionManager {
+            spec,
+            table,
+            state: PartitionState::empty(),
+            instances: HashMap::new(),
+            next_id: 1,
+        }
+    }
+
+    pub fn spec(&self) -> &GpuSpec {
+        &self.spec
+    }
+
+    pub fn table(&self) -> &ReachabilityTable {
+        &self.table
+    }
+
+    pub fn state(&self) -> &PartitionState {
+        &self.state
+    }
+
+    pub fn instance_count(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn placement_of(&self, id: InstanceId) -> Option<Placement> {
+        self.instances.get(&id).copied()
+    }
+
+    pub fn profile_of(&self, id: InstanceId) -> Option<usize> {
+        self.instances.get(&id).map(|p| p.profile as usize)
+    }
+
+    pub fn mem_gb_of(&self, id: InstanceId) -> Option<f64> {
+        self.profile_of(id).map(|p| self.spec.profiles[p].mem_gb)
+    }
+
+    pub fn compute_slices_of(&self, id: InstanceId) -> Option<u8> {
+        self.profile_of(id)
+            .map(|p| self.spec.profiles[p].compute_slices)
+    }
+
+    /// All successor placements for `profile` with their fcr scores.
+    pub fn placement_candidates(&self, profile: usize) -> Vec<(Placement, u32)> {
+        let prof = &self.spec.profiles[profile];
+        let mut out = Vec::new();
+        for &s in &prof.placements {
+            let p = Placement {
+                profile: profile as u8,
+                start: s,
+            };
+            if self.state.can_place(&self.spec, p) {
+                if let Some(f) = self.table.fcr(&self.state.with(p)) {
+                    out.push((p, f));
+                }
+            }
+        }
+        out
+    }
+
+    /// Whether an instance of `profile` could be created right now.
+    pub fn can_alloc(&self, profile: usize) -> bool {
+        !self.placement_candidates(profile).is_empty()
+    }
+
+    /// Paper Algorithm 3: allocate by maximizing future-configuration
+    /// reachability; ties broken toward the highest start slice (which is
+    /// also what the paper's worked example picks).
+    pub fn alloc(&mut self, profile: usize) -> Result<InstanceId, MigError> {
+        let mut cands = self.placement_candidates(profile);
+        if cands.is_empty() {
+            return Err(MigError::NoPlacement(
+                self.spec.profiles[profile].name.clone(),
+            ));
+        }
+        cands.sort_by_key(|(p, f)| (*f, p.start));
+        let (p, _) = *cands.last().unwrap();
+        self.state = self.state.with(p);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.instances.insert(id, p);
+        Ok(id)
+    }
+
+    /// Deallocate an instance (paper: "online de-allocation is trivial").
+    pub fn free(&mut self, id: InstanceId) -> Result<(), MigError> {
+        let p = self
+            .instances
+            .remove(&id)
+            .ok_or(MigError::UnknownInstance(id))?;
+        self.state = self
+            .state
+            .without(p)
+            .expect("instance placement must be present in state");
+        Ok(())
+    }
+
+    /// Plan a fusion/fission reconfiguration: find the cheapest subset of
+    /// `destroyable` (idle) instances whose removal makes `profile`
+    /// placeable. Returns `None` if no subset works.
+    ///
+    /// Used by Scheme B: *merge* neighboring small partitions or *split*
+    /// bigger partitions to create the tightest fit for the current job.
+    pub fn plan_reconfig(
+        &self,
+        profile: usize,
+        destroyable: &[InstanceId],
+    ) -> Option<ReconfigPlan> {
+        let n = destroyable.len().min(16);
+        let mut best: Option<ReconfigPlan> = None;
+        // Subsets in increasing popcount order => first hit is cheapest.
+        for bits in 1u32..(1 << n) {
+            let mut s = self.state.clone();
+            let ids: Vec<InstanceId> = (0..n)
+                .filter(|i| bits & (1 << i) != 0)
+                .map(|i| destroyable[i])
+                .collect();
+            let mut ok = true;
+            for &id in &ids {
+                match self.instances.get(&id) {
+                    Some(p) => s = s.without(*p).unwrap(),
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                continue;
+            }
+            let prof = &self.spec.profiles[profile];
+            let placeable = prof.placements.iter().any(|&st| {
+                let p = Placement {
+                    profile: profile as u8,
+                    start: st,
+                };
+                s.can_place(&self.spec, p) && self.table.is_valid(&s.with(p))
+            });
+            if placeable {
+                let plan = ReconfigPlan {
+                    ops: ids.len() + 1,
+                    destroy: ids,
+                    create_profile: profile,
+                };
+                match &best {
+                    None => best = Some(plan),
+                    Some(b) if plan.destroy.len() < b.destroy.len() => best = Some(plan),
+                    _ => {}
+                }
+            }
+        }
+        best
+    }
+
+    /// Free memory (GB) not held by any instance.
+    pub fn free_mem_gb(&self) -> f64 {
+        self.spec.total_mem_gb - self.state.mem_used_gb(&self.spec)
+    }
+
+    /// fcr of the current state.
+    pub fn current_fcr(&self) -> u32 {
+        self.table.fcr(&self.state).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> PartitionManager {
+        PartitionManager::new(Arc::new(GpuSpec::a100_40gb()))
+    }
+
+    #[test]
+    fn alloc_prefers_max_reachability_slot() {
+        // Paper §4.2 worked example: first 1g.5gb allocation must land on
+        // the placement with maximal fcr (the last slice on the A100).
+        let mut m = mgr();
+        let id = m.alloc(0).unwrap();
+        let p = m.placement_of(id).unwrap();
+        let best = m
+            .table()
+            .fcr(m.state())
+            .unwrap();
+        // No alternative placement of the same profile from empty state
+        // has strictly higher fcr.
+        let empty = PartitionState::empty();
+        for s in 0..=6u8 {
+            let alt = empty.with(Placement { profile: 0, start: s });
+            assert!(m.table().fcr(&alt).unwrap() <= best);
+        }
+        assert_eq!(p.start, 6, "A100 1g.5gb argmax placement is slice 6");
+    }
+
+    #[test]
+    fn seven_small_instances_fit() {
+        let mut m = mgr();
+        let ids: Vec<_> = (0..7).map(|_| m.alloc(0).unwrap()).collect();
+        assert_eq!(ids.len(), 7);
+        assert!(!m.can_alloc(0));
+        for id in ids {
+            m.free(id).unwrap();
+        }
+        assert_eq!(m.instance_count(), 0);
+        assert_eq!(m.current_fcr(), 19);
+    }
+
+    #[test]
+    fn twenty_gb_pair_uses_4g_plus_3g() {
+        // Scheme A's "two 20GB instances" split: the first allocation can
+        // be 4g.20gb (start 0), the second 3g.20gb (start 4); paper
+        // §5.2.1 notes the resulting 4/7 vs 3/7 compute asymmetry.
+        let mut m = mgr();
+        let a = m.alloc(3).unwrap(); // 4g.20gb
+        let b = m.alloc(2).unwrap(); // 3g.20gb
+        assert_eq!(m.compute_slices_of(a), Some(4));
+        assert_eq!(m.compute_slices_of(b), Some(3));
+        assert!(!m.can_alloc(0), "no memory left for a 1g.5gb");
+    }
+
+    #[test]
+    fn alloc_fails_when_full() {
+        let mut m = mgr();
+        m.alloc(4).unwrap(); // 7g.40gb takes the whole GPU
+        assert_eq!(
+            m.alloc(0),
+            Err(MigError::NoPlacement("1g.5gb".into()))
+        );
+    }
+
+    #[test]
+    fn free_unknown_instance_errors() {
+        let mut m = mgr();
+        assert_eq!(m.free(42), Err(MigError::UnknownInstance(42)));
+    }
+
+    #[test]
+    fn plan_reconfig_merges_small_into_large() {
+        // Partition fusion: two idle 1g.5gb on slices 0..2 block a
+        // 2g.10gb; destroying them makes it placeable.
+        let mut m = mgr();
+        let ids: Vec<_> = (0..7).map(|_| m.alloc(0).unwrap()).collect();
+        assert!(!m.can_alloc(1));
+        let plan = m.plan_reconfig(1, &ids).expect("fusion plan");
+        assert_eq!(plan.create_profile, 1);
+        assert_eq!(plan.destroy.len(), 2, "cheapest fusion destroys 2 slices");
+        // Execute the plan and verify.
+        for id in &plan.destroy {
+            m.free(*id).unwrap();
+        }
+        assert!(m.can_alloc(1));
+        m.alloc(1).unwrap();
+    }
+
+    #[test]
+    fn plan_reconfig_none_when_nothing_destroyable() {
+        let mut m = mgr();
+        let _held: Vec<_> = (0..7).map(|_| m.alloc(0).unwrap()).collect();
+        assert!(m.plan_reconfig(4, &[]).is_none());
+    }
+
+    #[test]
+    fn state_stays_valid_through_alloc_free_cycles() {
+        let mut m = mgr();
+        let a = m.alloc(1).unwrap();
+        let b = m.alloc(2).unwrap();
+        let c = m.alloc(0).unwrap();
+        assert!(m.table().is_valid(m.state()));
+        m.free(b).unwrap();
+        assert!(m.table().is_valid(m.state()));
+        let d = m.alloc(3);
+        // 4g.20gb needs slices 0..4; may or may not fit depending on
+        // earlier placements, but the state must stay valid either way.
+        assert!(m.table().is_valid(m.state()));
+        m.free(a).unwrap();
+        m.free(c).unwrap();
+        if let Ok(d) = d {
+            m.free(d).unwrap();
+        }
+        assert!(m.state().is_empty());
+    }
+}

@@ -1,0 +1,21 @@
+//! MIG geometry, the partition-state FSM, and the dynamic partition
+//! manager (paper §4 — Algorithms 2 and 3).
+//!
+//! * [`profile`] — hardware profile tables (A100/A30/H100 etc.).
+//! * [`state`] — placements, canonical partition states, enumeration of
+//!   valid and fully-configured states (reproduces Figure 3's 19 configs).
+//! * [`reachability`] — precomputed future-configuration reachability.
+//! * [`manager`] — the live allocator: max-reachability placement,
+//!   deallocation, fusion/fission reconfiguration planning.
+
+pub mod alloc_policy;
+pub mod manager;
+pub mod profile;
+pub mod reachability;
+pub mod state;
+
+pub use alloc_policy::{churn_experiment, ChurnResult, PlacementPolicy, PolicyManager};
+pub use manager::{InstanceId, MigError, PartitionManager, ReconfigPlan};
+pub use profile::{GpuSpec, MigProfile};
+pub use reachability::ReachabilityTable;
+pub use state::{enumerate_states, PartitionState, Placement};

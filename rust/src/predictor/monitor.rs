@@ -1,0 +1,240 @@
+//! Per-job prediction monitor: the online loop of paper Algorithm 1.
+//!
+//! The scheduler owns one [`JobMonitor`] per dynamically-allocating job.
+//! Every iteration it pushes the allocator observation; the monitor
+//! re-fits, projects the peak physical memory at the job's horizon, and
+//! reports convergence once the projection stabilizes. A converged
+//! projection above the partition size triggers a predictive early
+//! restart (paper §2.3/§5.2.2).
+
+use super::host::fit_one;
+use super::{FitStats, Observation, Z_99};
+
+/// Convergence policy for the prediction sequence.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvergenceCfg {
+    /// Minimum observations before any prediction is trusted.
+    pub min_obs: usize,
+    /// Number of consecutive predictions compared for stability.
+    pub window: usize,
+    /// Max relative spread among the window's predictions.
+    pub rel_tol: f64,
+    /// z-score of the CI band.
+    pub z: f64,
+}
+
+impl Default for ConvergenceCfg {
+    fn default() -> Self {
+        ConvergenceCfg {
+            min_obs: 5,
+            window: 3,
+            rel_tol: 0.02,
+            z: Z_99,
+        }
+    }
+}
+
+/// Result of pushing one observation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PredictionOutcome {
+    /// Not enough data / not stable yet.
+    Pending,
+    /// Projection converged to a stable peak (GB).
+    Converged { peak_physical_gb: f64 },
+}
+
+/// Online Alg. 1 state for one job.
+#[derive(Debug, Clone)]
+pub struct JobMonitor {
+    cfg: ConvergenceCfg,
+    /// Expected total iterations (the projection horizon).
+    horizon: f64,
+    req_mem: Vec<f64>,
+    inv_reuse: Vec<f64>,
+    predictions: Vec<f64>,
+    converged: Option<f64>,
+}
+
+impl JobMonitor {
+    pub fn new(horizon_iters: usize, cfg: ConvergenceCfg) -> Self {
+        JobMonitor {
+            cfg,
+            horizon: horizon_iters as f64,
+            req_mem: Vec::new(),
+            inv_reuse: Vec::new(),
+            predictions: Vec::new(),
+            converged: None,
+        }
+    }
+
+    pub fn observations(&self) -> usize {
+        self.req_mem.len()
+    }
+
+    pub fn series(&self) -> (&[f64], &[f64]) {
+        (&self.req_mem, &self.inv_reuse)
+    }
+
+    pub fn horizon(&self) -> f64 {
+        self.horizon
+    }
+
+    /// Latest full fit (None before min_obs).
+    pub fn latest_fit(&self) -> Option<FitStats> {
+        if self.req_mem.len() < self.cfg.min_obs {
+            return None;
+        }
+        Some(fit_one(&self.req_mem, &self.inv_reuse, self.horizon, self.cfg.z))
+    }
+
+    /// Converged projection if any.
+    pub fn converged_peak(&self) -> Option<f64> {
+        self.converged
+    }
+
+    /// Push one iteration's observation; re-fit and test convergence.
+    pub fn push(&mut self, obs: Observation) -> PredictionOutcome {
+        self.req_mem.push(obs.req_mem_gb);
+        self.inv_reuse.push(1.0 / obs.reuse_ratio.max(1e-6));
+        if let Some(p) = self.converged {
+            return PredictionOutcome::Converged { peak_physical_gb: p };
+        }
+        if self.req_mem.len() < self.cfg.min_obs {
+            return PredictionOutcome::Pending;
+        }
+        let fit = fit_one(&self.req_mem, &self.inv_reuse, self.horizon, self.cfg.z);
+        self.predictions.push(fit.peak_physical_gb);
+        if self.predictions.len() >= self.cfg.window {
+            let w = &self.predictions[self.predictions.len() - self.cfg.window..];
+            let lo = w.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            if hi > 0.0 && (hi - lo) / hi <= self.cfg.rel_tol {
+                let peak = *w.last().unwrap();
+                self.converged = Some(peak);
+                return PredictionOutcome::Converged {
+                    peak_physical_gb: peak,
+                };
+            }
+        }
+        PredictionOutcome::Pending
+    }
+
+    /// Accept an externally-computed peak (e.g. from the PJRT engine) for
+    /// this monitor's convergence bookkeeping.
+    pub fn push_external_prediction(&mut self, peak_gb: f64) -> PredictionOutcome {
+        self.predictions.push(peak_gb);
+        if self.predictions.len() >= self.cfg.window && self.req_mem.len() >= self.cfg.min_obs {
+            let w = &self.predictions[self.predictions.len() - self.cfg.window..];
+            let lo = w.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            if hi > 0.0 && (hi - lo) / hi <= self.cfg.rel_tol {
+                self.converged = Some(peak_gb);
+                return PredictionOutcome::Converged {
+                    peak_physical_gb: peak_gb,
+                };
+            }
+        }
+        PredictionOutcome::Pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(m: f64, r: f64) -> Observation {
+        Observation {
+            req_mem_gb: m,
+            reuse_ratio: r,
+        }
+    }
+
+    #[test]
+    fn converges_quickly_on_clean_linear_growth() {
+        // The paper's Qwen2 case: clean growth converges by ~iteration 6
+        // with min_obs = 5.
+        let mut mon = JobMonitor::new(200, ConvergenceCfg::default());
+        let mut converged_at = None;
+        for i in 0..20 {
+            let m = 8.0 + 0.02128 * i as f64;
+            if let PredictionOutcome::Converged { .. } = mon.push(obs(m, 1.0)) {
+                converged_at = Some(i + 1);
+                break;
+            }
+        }
+        let at = converged_at.expect("should converge");
+        assert!(at <= 8, "converged at iteration {at}, expected <= 8");
+    }
+
+    #[test]
+    fn converged_projection_is_accurate() {
+        let horizon = 200usize;
+        let g = 0.02128;
+        let b = 8.0;
+        let mut mon = JobMonitor::new(horizon, ConvergenceCfg::default());
+        let mut peak = None;
+        for i in 0..horizon {
+            let m = b + g * i as f64;
+            if let PredictionOutcome::Converged { peak_physical_gb } = mon.push(obs(m, 1.0)) {
+                peak = Some(peak_physical_gb);
+                break;
+            }
+        }
+        let truth = b + g * horizon as f64; // 12.256
+        let p = peak.unwrap();
+        assert!((p - truth).abs() / truth < 0.05, "pred {p} vs truth {truth}");
+    }
+
+    #[test]
+    fn noisy_series_converges_later_than_clean() {
+        use crate::util::Rng;
+        let cfg = ConvergenceCfg::default();
+        let run = |sigma: f64| -> usize {
+            let mut rng = Rng::new(42);
+            let mut mon = JobMonitor::new(100, cfg);
+            for i in 0..100 {
+                let m = 3.5 + 0.0366 * i as f64 + rng.normal_ms(0.0, sigma);
+                if let PredictionOutcome::Converged { .. } = mon.push(obs(m.max(0.1), 1.0)) {
+                    return i + 1;
+                }
+            }
+            100
+        };
+        let clean = run(0.001);
+        let noisy = run(0.35);
+        assert!(clean < noisy, "clean {clean} !< noisy {noisy}");
+    }
+
+    #[test]
+    fn stays_converged_once_converged() {
+        let mut mon = JobMonitor::new(50, ConvergenceCfg::default());
+        let mut after = 0;
+        for i in 0..30 {
+            let m = 1.0 + 0.1 * i as f64;
+            match mon.push(obs(m, 1.0)) {
+                PredictionOutcome::Converged { .. } => after += 1,
+                PredictionOutcome::Pending => assert_eq!(after, 0),
+            }
+        }
+        assert!(after > 0);
+        assert!(mon.converged_peak().is_some());
+    }
+
+    #[test]
+    fn reuse_ratio_lowers_physical_prediction() {
+        let mk = |r: f64| {
+            let mut mon = JobMonitor::new(100, ConvergenceCfg::default());
+            let mut last = 0.0;
+            for i in 0..20 {
+                let m = 4.0 + 0.1 * i as f64;
+                if let PredictionOutcome::Converged { peak_physical_gb } = mon.push(obs(m, r)) {
+                    last = peak_physical_gb;
+                }
+            }
+            last
+        };
+        let no_reuse = mk(1.0);
+        let heavy_reuse = mk(0.5);
+        assert!(heavy_reuse < no_reuse, "{heavy_reuse} !< {no_reuse}");
+    }
+}

@@ -1,0 +1,176 @@
+//! Loader for `artifacts/manifest.json` (written by `python -m
+//! compile.aot`). The manifest is the only contract between the
+//! build-time python layer and the rust runtime: artifact file names,
+//! parameter order/shapes, and static model dimensions.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// One decode-step variant's manifest entry.
+#[derive(Debug, Clone)]
+pub struct DecodeManifest {
+    pub name: String,
+    pub file: PathBuf,
+    /// Flattened parameter order: (name, shape).
+    pub params: Vec<(String, Vec<usize>)>,
+    /// [L, R, H, S, Dh]
+    pub kv_shape: Vec<usize>,
+    pub batch: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub kv_cache_bytes: u64,
+    pub param_bytes: u64,
+}
+
+/// One predictor variant's manifest entry.
+#[derive(Debug, Clone)]
+pub struct PredictorManifest {
+    pub name: String,
+    pub file: PathBuf,
+    pub batch: usize,
+    pub window: usize,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub decode: BTreeMap<String, DecodeManifest>,
+    pub predictor: BTreeMap<String, PredictorManifest>,
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .as_u64()
+        .map(|v| v as usize)
+        .with_context(|| format!("manifest: missing numeric field '{key}'"))
+}
+
+impl Manifest {
+    /// Load from the artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let mut out = Manifest::default();
+
+        let decode = doc.get("decode").as_obj().context("manifest: no 'decode'")?;
+        for (name, entry) in decode {
+            let cfg = entry.get("config");
+            let params = entry
+                .get("params")
+                .as_arr()
+                .context("manifest: decode params")?
+                .iter()
+                .map(|p| {
+                    let pname = p.get("name").as_str().unwrap_or_default().to_string();
+                    let shape: Vec<usize> = p
+                        .get("shape")
+                        .as_arr()
+                        .map(|a| a.iter().filter_map(|x| x.as_u64()).map(|v| v as usize).collect())
+                        .unwrap_or_default();
+                    (pname, shape)
+                })
+                .collect::<Vec<_>>();
+            if params.is_empty() {
+                bail!("manifest: decode variant {name} has no params");
+            }
+            let kv_shape: Vec<usize> = entry
+                .get("kv_shape")
+                .as_arr()
+                .context("manifest: kv_shape")?
+                .iter()
+                .filter_map(|x| x.as_u64())
+                .map(|v| v as usize)
+                .collect();
+            out.decode.insert(
+                name.clone(),
+                DecodeManifest {
+                    name: name.clone(),
+                    file: dir.join(entry.get("file").as_str().context("decode file")?),
+                    params,
+                    kv_shape,
+                    batch: usize_field(&cfg, "batch")?,
+                    layers: usize_field(&cfg, "layers")?,
+                    heads: usize_field(&cfg, "heads")?,
+                    head_dim: usize_field(&cfg, "head_dim")?,
+                    d_model: usize_field(&cfg, "d_model")?,
+                    d_ff: usize_field(&cfg, "d_ff")?,
+                    max_seq: usize_field(&cfg, "max_seq")?,
+                    vocab: usize_field(&cfg, "vocab")?,
+                    kv_cache_bytes: entry.get("kv_cache_bytes").as_u64().unwrap_or(0),
+                    param_bytes: entry.get("param_bytes").as_u64().unwrap_or(0),
+                },
+            );
+        }
+
+        let pred = doc
+            .get("predictor")
+            .as_obj()
+            .context("manifest: no 'predictor'")?;
+        for (name, entry) in pred {
+            let cfg = entry.get("config");
+            out.predictor.insert(
+                name.clone(),
+                PredictorManifest {
+                    name: name.clone(),
+                    file: dir.join(entry.get("file").as_str().context("predictor file")?),
+                    batch: usize_field(&cfg, "batch")?,
+                    window: usize_field(&cfg, "window")?,
+                },
+            );
+        }
+        Ok(out)
+    }
+
+    /// Default artifacts dir: `$MIGM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MIGM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests that need real artifacts are skipped when `make artifacts`
+    /// has not run (e.g. pure-rust CI).
+    pub fn artifacts_dir() -> Option<PathBuf> {
+        let dir = Manifest::default_dir();
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.decode.contains_key("decode_s128"));
+        assert!(m.predictor.contains_key("predictor_b16_w64"));
+        let d = &m.decode["decode_s128"];
+        assert_eq!(d.params[0].0, "embedding");
+        assert_eq!(d.kv_shape.len(), 5);
+        assert_eq!(d.kv_shape[0], d.layers);
+        assert_eq!(d.batch, d.kv_shape[1]);
+        assert!(d.file.exists());
+    }
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let err = Manifest::load(Path::new("/nonexistent-dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,422 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them from
+//! the rust request path (python is build-time only).
+//!
+//! * [`manifest`] — artifact manifest loader.
+//! * [`Runtime`] — one PJRT-CPU client + executable cache.
+//! * [`DecodeEngine`] — a compiled decode-step variant with materialized
+//!   parameters and a functional KV cache (the real-compute LLM served
+//!   by `examples/llm_serving.rs`).
+//! * [`PjrtPredictor`] — the AOT Pallas peak-memory predictor behind the
+//!   [`crate::predictor::FitEngine`] trait, interchangeable with (and
+//!   validated against) the host implementation.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::predictor::{FitEngine, FitStats};
+use crate::util::Rng;
+pub use manifest::{DecodeManifest, Manifest, PredictorManifest};
+
+/// A PJRT-CPU client plus a cache of compiled executables
+/// (one per model variant, compiled once at startup).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, Arc<xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by name).
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let exe = Arc::new(exe);
+        self.cache.insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+}
+
+/// Random f32 literal with the given shape (deterministic by seed).
+fn random_param(rng: &mut Rng, shape: &[usize], scale: f64) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n).map(|_| (rng.normal() * scale) as f32).collect();
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+}
+
+/// One-valued f32 literal (norm scales).
+fn ones_param(shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&vec![1.0f32; n]).reshape(&dims)?)
+}
+
+/// Output of one decode step.
+pub struct DecodeStepOut {
+    pub next_tokens: Vec<i32>,
+    pub logits: Vec<f32>,
+    pub k_cache: xla::Literal,
+    pub v_cache: xla::Literal,
+}
+
+/// A compiled decode-step variant with its parameters resident.
+///
+/// The KV cache is carried functionally: `step` takes the caches and
+/// returns the updated ones, so the caller (the serving loop) owns all
+/// cross-step state — exactly the AOT contract of
+/// `python/compile/model.py::decode_step`.
+pub struct DecodeEngine {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    pub manifest: DecodeManifest,
+    params: Vec<xla::Literal>,
+    /// Device-resident copies of `params`, uploaded lazily.
+    param_bufs: std::cell::RefCell<Option<Vec<xla::PjRtBuffer>>>,
+}
+
+impl DecodeEngine {
+    /// Load a variant and materialize deterministic random parameters.
+    pub fn new(rt: &mut Runtime, m: &DecodeManifest, seed: u64) -> Result<Self> {
+        let exe = rt.load(&m.name, &m.file)?;
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::with_capacity(m.params.len());
+        for (name, shape) in &m.params {
+            let p = if name.contains("ln") {
+                ones_param(shape)?
+            } else {
+                // ~Xavier-ish scale keeps logits sane through 2 layers.
+                random_param(&mut rng, shape, 0.05)?
+            };
+            params.push(p);
+        }
+        Ok(DecodeEngine {
+            exe,
+            manifest: m.clone(),
+            params,
+            param_bufs: std::cell::RefCell::new(None),
+        })
+    }
+
+    /// Fresh zeroed KV caches.
+    pub fn empty_kv(&self) -> Result<(xla::Literal, xla::Literal)> {
+        let dims: Vec<i64> = self.manifest.kv_shape.iter().map(|&d| d as i64).collect();
+        let n: usize = self.manifest.kv_shape.iter().product();
+        let z = xla::Literal::vec1(&vec![0.0f32; n]).reshape(&dims)?;
+        let z2 = xla::Literal::vec1(&vec![0.0f32; n]).reshape(&dims)?;
+        Ok((z, z2))
+    }
+
+    /// Run one batched decode step.
+    pub fn step(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        k_cache: &xla::Literal,
+        v_cache: &xla::Literal,
+    ) -> Result<DecodeStepOut> {
+        let r = self.manifest.batch;
+        anyhow::ensure!(tokens.len() == r && pos.len() == r, "batch mismatch");
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        let tok = xla::Literal::vec1(tokens);
+        let pos_l = xla::Literal::vec1(pos);
+        args.push(&tok);
+        args.push(&pos_l);
+        args.push(k_cache);
+        args.push(v_cache);
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 4, "decode returns a 4-tuple");
+        let mut it = parts.into_iter();
+        let next_tokens = it.next().unwrap().to_vec::<i32>()?;
+        let logits = it.next().unwrap().to_vec::<f32>()?;
+        let k = it.next().unwrap();
+        let v = it.next().unwrap();
+        Ok(DecodeStepOut {
+            next_tokens,
+            logits,
+            k_cache: k,
+            v_cache: v,
+        })
+    }
+
+    /// KV-cache bytes actually used at the given per-request positions —
+    /// the allocator signal the serving loop feeds the predictor.
+    pub fn kv_bytes_used(&self, pos: &[i32]) -> u64 {
+        let per_tok =
+            (self.manifest.layers * self.manifest.heads * self.manifest.head_dim * 4 * 2) as u64;
+        pos.iter().map(|&p| (p.max(0) as u64 + 1) * per_tok).sum()
+    }
+}
+
+/// The AOT Pallas predictor as a [`FitEngine`].
+pub struct PjrtPredictor {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    pub manifest: PredictorManifest,
+}
+
+impl PjrtPredictor {
+    pub fn new(rt: &mut Runtime, m: &PredictorManifest) -> Result<Self> {
+        Ok(PjrtPredictor {
+            exe: rt.load(&m.name, &m.file)?,
+            manifest: m.clone(),
+        })
+    }
+
+    /// Run one batched fit on padded [B, W] windows.
+    pub fn fit_batch(
+        &self,
+        req_mem: &[Vec<f64>],
+        inv_reuse: &[Vec<f64>],
+        horizon: &[f64],
+    ) -> Result<Vec<FitStats>> {
+        let b = self.manifest.batch;
+        let w = self.manifest.window;
+        anyhow::ensure!(req_mem.len() <= b, "batch exceeds compiled size");
+        let mut mem = vec![0.0f32; b * w];
+        let mut inv = vec![0.0f32; b * w];
+        let mut nv = vec![0.0f32; b];
+        let mut hz = vec![0.0f32; b];
+        for (i, series) in req_mem.iter().enumerate() {
+            // Keep the most recent `w` observations.
+            let start = series.len().saturating_sub(w);
+            let tail = &series[start..];
+            let tail_r = &inv_reuse[i][start..];
+            for (j, (&m, &r)) in tail.iter().zip(tail_r).enumerate() {
+                mem[i * w + j] = m as f32;
+                inv[i * w + j] = r as f32;
+            }
+            nv[i] = tail.len() as f32;
+            // The horizon is relative to the window origin.
+            hz[i] = (horizon[i] - start as f64).max(0.0) as f32;
+        }
+        let mem_l = xla::Literal::vec1(&mem).reshape(&[b as i64, w as i64])?;
+        let inv_l = xla::Literal::vec1(&inv).reshape(&[b as i64, w as i64])?;
+        let nv_l = xla::Literal::vec1(&nv);
+        let hz_l = xla::Literal::vec1(&hz);
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&[mem_l, inv_l, nv_l, hz_l])?[0][0]
+            .to_literal_sync()?;
+        let stats = out.to_tuple1()?.to_vec::<f32>()?;
+        anyhow::ensure!(stats.len() == b * 8, "stats shape");
+        Ok(req_mem
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                let row = &stats[i * 8..(i + 1) * 8];
+                FitStats {
+                    a_mem: row[0] as f64,
+                    b_mem: row[1] as f64,
+                    sigma_mem: row[2] as f64,
+                    a_inv_reuse: row[3] as f64,
+                    b_inv_reuse: row[4] as f64,
+                    sigma_inv_reuse: row[5] as f64,
+                    mem_pred_gb: row[6] as f64,
+                    peak_physical_gb: row[7] as f64,
+                }
+            })
+            .collect())
+    }
+}
+
+impl FitEngine for PjrtPredictor {
+    fn fit(
+        &mut self,
+        req_mem: &[Vec<f64>],
+        inv_reuse: &[Vec<f64>],
+        horizon: &[f64],
+    ) -> Vec<FitStats> {
+        self.fit_batch(req_mem, inv_reuse, horizon)
+            .expect("pjrt predictor execution")
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-pallas"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::{host::fit_one, Z_99};
+
+    fn rt_and_manifest() -> Option<(Runtime, Manifest)> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return None;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        Some((Runtime::cpu().unwrap(), m))
+    }
+
+    #[test]
+    fn predictor_artifact_matches_host_engine() {
+        let Some((mut rt, man)) = rt_and_manifest() else { return };
+        let pm = man.predictor.values().next().unwrap().clone();
+        let pred = PjrtPredictor::new(&mut rt, &pm).unwrap();
+        // Two synthetic jobs with known linear growth.
+        let m1: Vec<f64> = (0..20).map(|t| 2.0 + 0.1 * t as f64).collect();
+        let r1 = vec![1.0; 20];
+        let m2: Vec<f64> = (0..12).map(|t| 5.0 + 0.05 * t as f64).collect();
+        let r2: Vec<f64> = (0..12).map(|t| 1.0 + 0.01 * t as f64).collect();
+        let hz = [100.0, 60.0];
+        let got = pred
+            .fit_batch(&[m1.clone(), m2.clone()], &[r1.clone(), r2.clone()], &hz)
+            .unwrap();
+        let wants = [fit_one(&m1, &r1, 100.0, Z_99), fit_one(&m2, &r2, 60.0, Z_99)];
+        for (g, want) in got.iter().zip(wants) {
+            assert!(
+                (g.peak_physical_gb - want.peak_physical_gb).abs()
+                    / want.peak_physical_gb.max(1e-9)
+                    < 5e-3,
+                "pjrt {g:?} vs host {want:?}"
+            );
+            assert!((g.a_mem - want.a_mem).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn predictor_windowing_keeps_recent_tail() {
+        let Some((mut rt, man)) = rt_and_manifest() else { return };
+        let pm = man.predictor.values().next().unwrap().clone();
+        let pred = PjrtPredictor::new(&mut rt, &pm).unwrap();
+        // Series longer than the compiled window: must still track the
+        // linear trend via the tail.
+        let n = pm.window + 40;
+        let m: Vec<f64> = (0..n).map(|t| 1.0 + 0.02 * t as f64).collect();
+        let r = vec![1.0; n];
+        let horizon = 2.0 * n as f64;
+        let got = pred.fit_batch(&[m], &[r], &[horizon]).unwrap();
+        let truth = 1.0 + 0.02 * horizon;
+        assert!(
+            (got[0].peak_physical_gb - truth).abs() / truth < 0.05,
+            "{} vs {}",
+            got[0].peak_physical_gb,
+            truth
+        );
+    }
+
+    #[test]
+    fn decode_engine_runs_and_is_deterministic() {
+        let Some((mut rt, man)) = rt_and_manifest() else { return };
+        let dm = man.decode["decode_s128"].clone();
+        let eng = DecodeEngine::new(&mut rt, &dm, 7).unwrap();
+        let (k, v) = eng.empty_kv().unwrap();
+        let tokens: Vec<i32> = (0..dm.batch as i32).collect();
+        let pos = vec![0i32; dm.batch];
+        let a = eng.step(&tokens, &pos, &k, &v).unwrap();
+        let b = eng.step(&tokens, &pos, &k, &v).unwrap();
+        assert_eq!(a.next_tokens, b.next_tokens);
+        assert_eq!(a.next_tokens.len(), dm.batch);
+        assert!(a
+            .next_tokens
+            .iter()
+            .all(|&t| t >= 0 && (t as usize) < dm.vocab));
+        assert_eq!(a.logits.len(), dm.batch * dm.vocab);
+        assert!(a.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn decode_engine_multi_step_updates_cache() {
+        let Some((mut rt, man)) = rt_and_manifest() else { return };
+        let dm = man.decode["decode_s128"].clone();
+        let eng = DecodeEngine::new(&mut rt, &dm, 3).unwrap();
+        let (mut k, mut v) = eng.empty_kv().unwrap();
+        let mut tokens: Vec<i32> = vec![5; dm.batch];
+        let mut seq = Vec::new();
+        for step in 0..4 {
+            let pos = vec![step as i32; dm.batch];
+            let out = eng.step(&tokens, &pos, &k, &v).unwrap();
+            k = out.k_cache;
+            v = out.v_cache;
+            tokens = out.next_tokens.clone();
+            seq.push(out.next_tokens);
+        }
+        assert_eq!(seq.len(), 4);
+        // kv accounting grows with positions
+        assert!(eng.kv_bytes_used(&[3, 3]) > eng.kv_bytes_used(&[0, 0]));
+    }
+}
+
+impl DecodeEngine {
+    /// Upload the parameters to the PJRT device once and cache them.
+    /// Subsequent [`Self::step_resident`] calls skip the ~7MB per-step
+    /// parameter upload of the literal path (EXPERIMENTS.md §Perf).
+    fn ensure_resident(&self) -> Result<()> {
+        let mut slot = self.param_bufs.borrow_mut();
+        if slot.is_none() {
+            let client = self.exe.client();
+            let mut bufs = Vec::with_capacity(self.params.len());
+            for p in &self.params {
+                bufs.push(client.buffer_from_host_literal(None, p)?);
+            }
+            *slot = Some(bufs);
+        }
+        Ok(())
+    }
+
+    /// One batched decode step with device-resident parameters
+    /// (tokens/pos/kv still travel per step — the KV cache comes back as
+    /// one tuple literal either way because this PJRT wrapper does not
+    /// untuple results).
+    pub fn step_resident(
+        &self,
+        tokens: &[i32],
+        pos: &[i32],
+        k_cache: &xla::Literal,
+        v_cache: &xla::Literal,
+    ) -> Result<DecodeStepOut> {
+        let r = self.manifest.batch;
+        anyhow::ensure!(tokens.len() == r && pos.len() == r, "batch mismatch");
+        self.ensure_resident()?;
+        let client = self.exe.client();
+        let slot = self.param_bufs.borrow();
+        let params = slot.as_ref().unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = params.iter().collect();
+        let tok = client.buffer_from_host_buffer(tokens, &[r], None)?;
+        let pos_b = client.buffer_from_host_buffer(pos, &[r], None)?;
+        let k_b = client.buffer_from_host_literal(None, k_cache)?;
+        let v_b = client.buffer_from_host_literal(None, v_cache)?;
+        args.push(&tok);
+        args.push(&pos_b);
+        args.push(&k_b);
+        args.push(&v_b);
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 4, "decode returns a 4-tuple");
+        let mut it = parts.into_iter();
+        let next_tokens = it.next().unwrap().to_vec::<i32>()?;
+        let logits = it.next().unwrap().to_vec::<f32>()?;
+        let k = it.next().unwrap();
+        let v = it.next().unwrap();
+        Ok(DecodeStepOut {
+            next_tokens,
+            logits,
+            k_cache: k,
+            v_cache: v,
+        })
+    }
+}

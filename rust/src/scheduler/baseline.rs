@@ -1,0 +1,64 @@
+//! The paper's baseline: a non-partitioned GPU executing the batch
+//! sequentially, one workload at a time (§5, "the baseline scheduler for
+//! all experiments").
+
+use std::sync::Arc;
+
+use crate::mig::GpuSpec;
+use crate::sim::{GpuSim, SimEvent};
+use crate::workloads::mix::Mix;
+
+use super::{finalize, largest_profile, RunResult};
+
+/// Run the batch sequentially on the full GPU.
+pub fn run(spec: Arc<GpuSpec>, mix: &Mix) -> RunResult {
+    let mut sim = GpuSim::new(spec.clone(), false);
+    let full = largest_profile(&spec);
+    let inst = sim.mgr.alloc(full).expect("empty GPU fits the full profile");
+    let n = mix.jobs.len();
+    for job in &mix.jobs {
+        sim.launch(job.clone(), inst, 0.0);
+        loop {
+            match sim.advance() {
+                Some(SimEvent::Finished { .. }) => break,
+                Some(SimEvent::Oom { spec: s, .. }) => {
+                    // Can only happen if a job exceeds the whole GPU.
+                    panic!("job {} OOMs on the full GPU", s.name);
+                }
+                Some(_) => {}
+                None => panic!("job vanished"),
+            }
+        }
+    }
+    sim.mgr.free(inst).unwrap();
+    finalize(&sim, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mix;
+
+    #[test]
+    fn baseline_runs_all_jobs_sequentially() {
+        let spec = Arc::new(GpuSpec::a100_40gb());
+        let m = mix::hm2();
+        let r = run(spec, &m);
+        assert_eq!(r.metrics.n_jobs, 50);
+        assert_eq!(r.records.len(), 50);
+        // sequential: makespan ~= 50 x single-job runtime (2.37s)
+        assert!((r.metrics.makespan_s - 50.0 * 2.37).abs() < 10.0, "{}", r.metrics.makespan_s);
+        assert_eq!(r.metrics.reconfig_ops, 0);
+        assert_eq!(r.metrics.oom_restarts, 0);
+    }
+
+    #[test]
+    fn baseline_handles_llm_mixes_without_oom() {
+        let spec = Arc::new(GpuSpec::a100_40gb());
+        let m = mix::llm_mix("qwen2", 3).unwrap();
+        let r = run(spec, &m);
+        assert_eq!(r.metrics.n_jobs, 1);
+        assert_eq!(r.metrics.oom_restarts, 0);
+        assert!(r.metrics.makespan_s > 10.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Batch schedulers (paper §4.3): the sequential baseline, Scheme A
+//! (schedule by size, Algorithm 4) and Scheme B (FIFO with dynamic
+//! reconfiguration, Algorithm 5) — each with OOM restart and optional
+//! predictive early restart for dynamic workloads.
+
+pub mod baseline;
+pub mod scheme_a;
+pub mod scheme_b;
+
+use std::sync::Arc;
+
+use crate::config::{ExperimentConfig, Scheme};
+use crate::estimator::EstimationMethod;
+use crate::metrics::BatchMetrics;
+use crate::mig::GpuSpec;
+use crate::sim::{GpuSim, JobRecord, SimCounters};
+use crate::workloads::mix::Mix;
+use crate::workloads::JobSpec;
+
+/// Result of one batch run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub metrics: BatchMetrics,
+    pub records: Vec<JobRecord>,
+    pub counters: SimCounters,
+}
+
+/// A queued job (batch submission: all at t=0).
+#[derive(Debug, Clone)]
+pub struct PendingJob {
+    pub spec: JobSpec,
+    pub submit_time: f64,
+}
+
+/// Pick the target profile for a job: tightest memory fit, compute as a
+/// soft constraint; unknown-memory (time-series) jobs start on the
+/// smallest slice (grow-on-demand, paper §5.2.2).
+pub fn target_profile(spec: &GpuSpec, job: &JobSpec) -> usize {
+    if job.est.method == EstimationMethod::TimeSeries && job.est.mem_gb <= 0.0 {
+        return smallest_profile(spec);
+    }
+    spec.tightest_profile(job.est.mem_gb, job.est.compute_gpcs)
+        .unwrap_or_else(|| largest_profile(spec))
+}
+
+/// Index of the smallest-memory profile.
+pub fn smallest_profile(spec: &GpuSpec) -> usize {
+    spec.profiles
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.mem_gb.partial_cmp(&b.1.mem_gb).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Index of the largest-memory profile (the full GPU).
+pub fn largest_profile(spec: &GpuSpec) -> usize {
+    spec.profiles
+        .iter()
+        .enumerate()
+        .max_by(|a, b| {
+            (a.1.mem_gb, a.1.compute_slices)
+                .partial_cmp(&(b.1.mem_gb, b.1.compute_slices))
+                .unwrap()
+        })
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// The GPU's distinct memory sizes, ascending (its size-class ladder).
+pub fn size_ladder(spec: &GpuSpec) -> Vec<f64> {
+    let mut sizes: Vec<f64> = spec.profiles.iter().map(|p| p.mem_gb).collect();
+    sizes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sizes.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+    sizes
+}
+
+/// Class index of a memory requirement on this GPU's ladder.
+pub fn class_of(spec: &GpuSpec, mem_gb: f64) -> usize {
+    let ladder = size_ladder(spec);
+    ladder
+        .iter()
+        .position(|&s| mem_gb <= s + 1e-9)
+        .unwrap_or(ladder.len() - 1)
+}
+
+/// Grow a requeued job's estimate after an OOM on `cur_profile`
+/// (paper: "reschedules the same on the next largest slice").
+pub fn bump_estimate_after_oom(spec: &GpuSpec, job: &mut JobSpec, cur_profile: usize) {
+    match spec.next_larger_profile(cur_profile) {
+        Some(next) => job.est.mem_gb = spec.profiles[next].mem_gb,
+        None => job.est.mem_gb = spec.total_mem_gb,
+    }
+}
+
+/// Finalize metrics from a finished sim.
+pub fn finalize(sim: &GpuSim, n_jobs: usize) -> RunResult {
+    let makespan = sim.now().max(1e-9);
+    let records = sim.records.clone();
+    let turnaround: f64 = records
+        .iter()
+        .map(|r| r.finish_time - r.submit_time)
+        .sum::<f64>()
+        / records.len().max(1) as f64;
+    let energy = sim.energy_j();
+    let metrics = BatchMetrics {
+        n_jobs,
+        makespan_s: makespan,
+        throughput_jps: n_jobs as f64 / makespan,
+        energy_j: energy,
+        energy_per_job_j: energy / n_jobs.max(1) as f64,
+        mem_utilization: sim.mem_gb_integral() / (makespan * sim.spec.total_mem_gb),
+        avg_turnaround_s: turnaround,
+        reconfig_ops: sim.counters.reconfig_ops,
+        oom_restarts: sim.counters.oom_restarts,
+        early_restarts: sim.counters.early_restarts,
+    };
+    RunResult {
+        metrics,
+        records,
+        counters: sim.counters,
+    }
+}
+
+/// Run a mix under a scheme.
+pub fn run_mix(
+    spec: Arc<GpuSpec>,
+    mix: &Mix,
+    scheme: Scheme,
+    prediction: bool,
+) -> RunResult {
+    match scheme {
+        Scheme::Baseline => baseline::run(spec, mix),
+        Scheme::A => scheme_a::run(spec, mix, prediction),
+        Scheme::B => scheme_b::run(spec, mix, prediction),
+    }
+}
+
+/// Run a full experiment config.
+pub fn run_experiment(cfg: &ExperimentConfig) -> RunResult {
+    let mix = cfg.build_mix();
+    run_mix(Arc::new(cfg.gpu.clone()), &mix, cfg.scheme, cfg.prediction)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::rodinia;
+
+    #[test]
+    fn ladder_and_classes_on_a100() {
+        let spec = GpuSpec::a100_40gb();
+        assert_eq!(size_ladder(&spec), vec![5.0, 10.0, 20.0, 40.0]);
+        assert_eq!(class_of(&spec, 0.4), 0);
+        assert_eq!(class_of(&spec, 6.0), 1);
+        assert_eq!(class_of(&spec, 17.0), 2);
+        assert_eq!(class_of(&spec, 25.0), 3);
+        assert_eq!(class_of(&spec, 99.0), 3);
+    }
+
+    #[test]
+    fn unknown_memory_jobs_start_smallest() {
+        let spec = GpuSpec::a100_40gb();
+        let job = crate::workloads::llm::qwen2_7b().job(1);
+        assert_eq!(target_profile(&spec, &job), smallest_profile(&spec));
+    }
+
+    #[test]
+    fn static_jobs_get_tightest_profile() {
+        let spec = GpuSpec::a100_40gb();
+        let job = rodinia::by_name("euler3d").unwrap().job(7);
+        let p = target_profile(&spec, &job);
+        assert_eq!(spec.profiles[p].mem_gb, 20.0);
+    }
+
+    #[test]
+    fn oom_bump_walks_the_ladder() {
+        let spec = GpuSpec::a100_40gb();
+        let mut job = crate::workloads::llm::qwen2_7b().job(1);
+        bump_estimate_after_oom(&spec, &mut job, 0);
+        assert_eq!(job.est.mem_gb, 10.0);
+        bump_estimate_after_oom(&spec, &mut job, 1);
+        assert_eq!(job.est.mem_gb, 20.0);
+        bump_estimate_after_oom(&spec, &mut job, 4);
+        assert_eq!(job.est.mem_gb, 40.0);
+    }
+}

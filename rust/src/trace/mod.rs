@@ -1,0 +1,195 @@
+//! Synthetic PyTorch-allocator traces for dynamically-growing workloads.
+//!
+//! The paper instruments PyTorch's caching allocator to obtain, per
+//! iteration, the requested memory and the reuse ratio (§3.2). Without
+//! CUDA/PyTorch, we generate traces from the same statistical model the
+//! paper's predictor assumes — linear physical-memory growth with
+//! Gaussian fluctuation, plus a linearly-growing inverse reuse ratio —
+//! parameterized per workload to hit the paper's observed crossing
+//! points (e.g. Qwen2 exceeding 10 GB at iteration 94 with a 12.23 GB
+//! final peak).
+
+use crate::predictor::Observation;
+use crate::util::Rng;
+
+/// Statistical model of one workload's allocator behaviour.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Physical memory at iteration 0 (weights + fixed pools), GB.
+    pub base_gb: f64,
+    /// Physical growth per iteration (KV cache / context growth), GB.
+    pub growth_gb_per_iter: f64,
+    /// σ of the per-iteration fluctuation, GB.
+    pub noise_sigma_gb: f64,
+    /// Inverse reuse ratio at iteration 0 (>= 1; 1 = no reuse).
+    pub inv_reuse_base: f64,
+    /// Inverse reuse growth per iteration (reuse improves over time).
+    pub inv_reuse_growth: f64,
+    /// σ of the reuse fluctuation.
+    pub inv_reuse_noise: f64,
+    /// Total iterations the workload runs.
+    pub n_iters: usize,
+    /// Fixed CUDA-context + framework overhead, GB (paper §3.2.1: a
+    /// per-workload constant).
+    pub context_gb: f64,
+}
+
+/// A realized trace: per-iteration physical and requested memory.
+#[derive(Debug, Clone)]
+pub struct AllocatorTrace {
+    /// Peak physical memory that must fit in the partition, per iteration
+    /// (includes the fixed context overhead).
+    pub phys_gb: Vec<f64>,
+    /// Requested (logical) memory seen by the allocator, per iteration.
+    pub req_gb: Vec<f64>,
+    /// Reuse ratio in (0, 1], per iteration.
+    pub reuse_ratio: Vec<f64>,
+}
+
+impl TraceSpec {
+    /// Generate a reproducible trace.
+    pub fn generate(&self, seed: u64) -> AllocatorTrace {
+        let mut rng = Rng::new(seed);
+        let n = self.n_iters;
+        let mut phys = Vec::with_capacity(n);
+        let mut req = Vec::with_capacity(n);
+        let mut reuse = Vec::with_capacity(n);
+        for i in 0..n {
+            let p = (self.base_gb
+                + self.growth_gb_per_iter * i as f64
+                + rng.normal_ms(0.0, self.noise_sigma_gb))
+            .max(0.05)
+                + self.context_gb;
+            let inv = (self.inv_reuse_base
+                + self.inv_reuse_growth * i as f64
+                + rng.normal_ms(0.0, self.inv_reuse_noise))
+            .max(1.0);
+            phys.push(p);
+            req.push(p * inv);
+            reuse.push(1.0 / inv);
+        }
+        AllocatorTrace {
+            phys_gb: phys,
+            req_gb: req,
+            reuse_ratio: reuse,
+        }
+    }
+
+    /// Deterministic (noise-free) physical memory at iteration `i`.
+    pub fn mean_phys_gb(&self, i: usize) -> f64 {
+        self.base_gb + self.context_gb + self.growth_gb_per_iter * i as f64
+    }
+
+    /// First iteration whose *mean* physical memory exceeds `cap_gb`
+    /// (None if it never does).
+    pub fn mean_oom_iter(&self, cap_gb: f64) -> Option<usize> {
+        (0..self.n_iters).find(|&i| self.mean_phys_gb(i) > cap_gb)
+    }
+
+    /// Deterministic final peak (mean model).
+    pub fn mean_peak_gb(&self) -> f64 {
+        self.mean_phys_gb(self.n_iters.saturating_sub(1))
+    }
+}
+
+impl AllocatorTrace {
+    pub fn len(&self) -> usize {
+        self.phys_gb.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.phys_gb.is_empty()
+    }
+
+    /// Observation fed to the predictor at iteration `i`.
+    pub fn observation(&self, i: usize) -> Observation {
+        Observation {
+            req_mem_gb: self.req_gb[i],
+            reuse_ratio: self.reuse_ratio[i],
+        }
+    }
+
+    /// First iteration whose realized physical memory exceeds `cap_gb`.
+    pub fn oom_iter(&self, cap_gb: f64) -> Option<usize> {
+        self.phys_gb.iter().position(|&p| p > cap_gb)
+    }
+
+    /// Realized peak physical memory.
+    pub fn peak_gb(&self) -> f64 {
+        self.phys_gb.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qwen2ish() -> TraceSpec {
+        TraceSpec {
+            base_gb: 7.5,
+            growth_gb_per_iter: 0.02128,
+            noise_sigma_gb: 0.02,
+            inv_reuse_base: 1.05,
+            inv_reuse_growth: 0.002,
+            inv_reuse_noise: 0.005,
+            n_iters: 200,
+            context_gb: 0.5,
+        }
+    }
+
+    #[test]
+    fn trace_is_reproducible() {
+        let s = qwen2ish();
+        let a = s.generate(9);
+        let b = s.generate(9);
+        assert_eq!(a.phys_gb, b.phys_gb);
+        assert_ne!(a.phys_gb, s.generate(10).phys_gb);
+    }
+
+    #[test]
+    fn mean_model_crossing_matches_construction() {
+        let s = qwen2ish();
+        // mean phys(i) = 8.0 + 0.02128 i; crosses 10GB just after i = 94.
+        let oom = s.mean_oom_iter(10.0).unwrap();
+        assert!((93..=96).contains(&oom), "oom at {oom}");
+        // final peak ~ 12.23 GB
+        let peak = s.mean_peak_gb();
+        assert!((12.0..12.5).contains(&peak), "peak {peak}");
+    }
+
+    #[test]
+    fn realized_oom_close_to_mean_with_small_noise() {
+        let s = qwen2ish();
+        let t = s.generate(3);
+        let oom = t.oom_iter(10.0).unwrap();
+        let mean = s.mean_oom_iter(10.0).unwrap();
+        assert!((oom as i64 - mean as i64).abs() < 15, "{oom} vs {mean}");
+    }
+
+    #[test]
+    fn requested_exceeds_physical_exactly_by_inv_reuse() {
+        let s = qwen2ish();
+        let t = s.generate(1);
+        for i in 0..t.len() {
+            let inv = 1.0 / t.reuse_ratio[i];
+            assert!((t.req_gb[i] - t.phys_gb[i] * inv).abs() < 1e-9);
+            assert!(t.req_gb[i] >= t.phys_gb[i] - 1e-9);
+        }
+    }
+
+    #[test]
+    fn flat_trace_never_ooms_on_big_partition() {
+        let s = TraceSpec {
+            base_gb: 2.0,
+            growth_gb_per_iter: 0.0,
+            noise_sigma_gb: 0.01,
+            inv_reuse_base: 1.0,
+            inv_reuse_growth: 0.0,
+            inv_reuse_noise: 0.0,
+            n_iters: 50,
+            context_gb: 0.3,
+        };
+        assert_eq!(s.generate(4).oom_iter(5.0), None);
+        assert_eq!(s.mean_oom_iter(5.0), None);
+    }
+}

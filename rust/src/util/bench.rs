@@ -1,0 +1,134 @@
+//! Criterion-style micro-benchmark harness (offline build has no
+//! criterion). Provides warmup, repeated timed runs, and robust summary
+//! statistics printed in a stable, grep-friendly format:
+//!
+//! ```text
+//! bench <name> ... median 12.3us  mean 12.5us  p95 13.0us  (n=200)
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// One benchmark group, mirroring criterion's `Criterion` entrypoint.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    max_iters: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub n: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Faster settings for expensive end-to-end benches.
+    pub fn coarse() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(400),
+            max_iters: 10_000,
+        }
+    }
+
+    /// Run `f` repeatedly, print and return stats.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Measure individual iterations.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && (samples_ns.len() as u64) < self.max_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len() as u64;
+        let mean = samples_ns.iter().sum::<f64>() / n as f64;
+        let pct = |p: f64| samples_ns[((p * (n as f64 - 1.0)) as usize).min(samples_ns.len() - 1)];
+        let stats = BenchStats {
+            name: name.to_string(),
+            n,
+            mean_ns: mean,
+            median_ns: pct(0.5),
+            p95_ns: pct(0.95),
+            min_ns: samples_ns[0],
+        };
+        println!(
+            "bench {:<44} median {:>10}  mean {:>10}  p95 {:>10}  (n={})",
+            stats.name,
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p95_ns),
+            stats.n
+        );
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            max_iters: 100_000,
+        };
+        let s = b.run("noop-ish", || (0..100u64).sum::<u64>());
+        assert!(s.n > 10);
+        assert!(s.median_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn format_scales() {
+        assert_eq!(fmt_ns(5.0), "5.0ns");
+        assert_eq!(fmt_ns(5_000.0), "5.00us");
+        assert_eq!(fmt_ns(5_000_000.0), "5.00ms");
+        assert_eq!(fmt_ns(5e9), "5.000s");
+    }
+}

@@ -1,0 +1,10 @@
+//! Small in-tree substrates the offline build cannot pull from crates.io:
+//! a deterministic PRNG ([`rng`]), a JSON codec ([`json`]), and a
+//! criterion-style micro-bench harness ([`bench`]).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,151 @@
+//! DNN training jobs for the ML mixes (paper §5.2.1, Table 2).
+//!
+//! Sizes come from the DNNMem-style estimator; training is modeled as a
+//! per-step minibatch transfer + compute loop (the paper observes these
+//! jobs are PCIe-transfer intensive, which caps their MIG speedup).
+
+use crate::estimator::dnnmem::{self, estimate, ModelDef, Optimizer};
+use crate::estimator::{EstimationMethod, MemoryEstimate};
+use crate::workloads::{ComputeModel, JobKind, JobSpec, PhaseProfile};
+
+/// A DNN training job template.
+#[derive(Debug, Clone)]
+pub struct DnnJob {
+    pub model: ModelDef,
+    pub batch: u64,
+    pub opt: Optimizer,
+    pub demand_gpcs: u8,
+    /// Training steps simulated per job.
+    pub steps: u32,
+    /// Compute per step with enough GPCs (s).
+    pub step_s: f64,
+    /// Minibatch host->device transfer per step at exclusive PCIe (s).
+    pub step_pcie_s: f64,
+}
+
+impl DnnJob {
+    pub fn job(&self) -> JobSpec {
+        let e = estimate(&self.model, self.batch, self.opt);
+        let phases = PhaseProfile {
+            alloc_s: 0.5,
+            h2d_pcie_s: e.weights_gb / 12.0 + 0.2, // weights + first batch
+            steps: self.steps,
+            step_s: self.step_s,
+            step_pcie_s: self.step_pcie_s,
+            d2h_pcie_s: e.weights_gb / 12.0, // checkpoint back
+            free_s: 0.05,
+        };
+        JobSpec {
+            name: format!("{}-b{}", self.model.name, self.batch),
+            kind: JobKind::Dnn,
+            demand_gpcs: self.demand_gpcs,
+            true_mem_gb: e.total_gb,
+            est: MemoryEstimate {
+                mem_gb: e.total_gb,
+                compute_gpcs: self.demand_gpcs,
+                method: EstimationMethod::ModelSize,
+            },
+            compute: ComputeModel::Phases(phases),
+        }
+    }
+}
+
+/// VGG16 training — 20GB class.
+pub fn vgg16_train() -> DnnJob {
+    DnnJob {
+        model: dnnmem::vgg16(),
+        batch: 32,
+        opt: Optimizer::Adam,
+        demand_gpcs: 4,
+        steps: 20,
+        step_s: 0.30,
+        step_pcie_s: 0.15,
+    }
+}
+
+/// ResNet50 training — 20GB class.
+pub fn resnet50_train() -> DnnJob {
+    DnnJob {
+        model: dnnmem::resnet50(),
+        batch: 64,
+        opt: Optimizer::Adam,
+        demand_gpcs: 3,
+        steps: 24,
+        step_s: 0.25,
+        step_pcie_s: 0.14,
+    }
+}
+
+/// InceptionV3 training — 20GB class.
+pub fn inceptionv3_train() -> DnnJob {
+    DnnJob {
+        model: dnnmem::inceptionv3(),
+        batch: 64,
+        opt: Optimizer::Adam,
+        demand_gpcs: 3,
+        steps: 24,
+        step_s: 0.28,
+        step_pcie_s: 0.13,
+    }
+}
+
+/// BERT small variant (~3.5 GB) — 5GB class (paper Ml2).
+pub fn bert_small_train() -> DnnJob {
+    DnnJob {
+        model: dnnmem::bert_base(128),
+        batch: 16,
+        opt: Optimizer::Sgd,
+        demand_gpcs: 2,
+        steps: 30,
+        step_s: 0.18,
+        step_pcie_s: 0.06,
+    }
+}
+
+/// BERT larger variant (~4.7 GB) — still 5GB class (paper Ml2).
+pub fn bert_large_seq_train() -> DnnJob {
+    DnnJob {
+        model: dnnmem::bert_base(256),
+        batch: 16,
+        opt: Optimizer::Sgd,
+        demand_gpcs: 2,
+        steps: 30,
+        step_s: 0.22,
+        step_pcie_s: 0.07,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::SizeClass;
+
+    #[test]
+    fn cnn_jobs_are_20gb_class() {
+        for j in [vgg16_train(), resnet50_train(), inceptionv3_train()] {
+            let job = j.job();
+            assert_eq!(job.size_class(), SizeClass::Large, "{}", job.name);
+            assert_eq!(job.kind, JobKind::Dnn);
+        }
+    }
+
+    #[test]
+    fn bert_jobs_are_5gb_class_and_near_saturation() {
+        // Paper Ml2: ~3.5 and ~4.7 GB, almost saturating the 5GB slice.
+        let a = bert_small_train().job();
+        let b = bert_large_seq_train().job();
+        assert_eq!(a.size_class(), SizeClass::Small);
+        assert_eq!(b.size_class(), SizeClass::Small);
+        assert!(a.est.mem_gb > 2.8 && b.est.mem_gb > 4.0, "{} {}", a.est.mem_gb, b.est.mem_gb);
+    }
+
+    #[test]
+    fn training_is_transfer_intensive() {
+        // The per-step PCIe share must be significant (paper §5.2.1
+        // attributes the sub-linear MIG speedup to transfer contention).
+        for j in [vgg16_train(), resnet50_train(), bert_small_train()] {
+            let frac = j.step_pcie_s / (j.step_s + j.step_pcie_s);
+            assert!(frac > 0.2, "{}: {frac}", j.model.name);
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! The four dynamic LLM workloads (paper §5.2.2, Table 2).
+//!
+//! Memory behaviour is trace-driven (see [`crate::trace`]); the trace
+//! parameters are set so the *mean* model reproduces the paper's
+//! observed crossings and peaks:
+//!
+//! | workload       | OOM crossing            | final peak |
+//! |----------------|-------------------------|-----------|
+//! | Qwen2-7B       | >10 GB at iteration 94  | 12.23 GB  |
+//! | Llama-3-3B     | >10 GB at iteration 72  | 16.63 GB  |
+//! | FLAN-T5 train  | >5 GB at iteration 41   | ~7.2 GB   |
+//! | FLAN-T5 infer  | >5 GB at iteration 27   | ~6.0 GB   |
+//!
+//! FLAN-T5's allocator series is noisier (training batches vary), which
+//! delays predictor convergence — matching the paper's later prediction
+//! points (31 / 21 vs 6 for the big decoders).
+
+use crate::estimator::{EstimationMethod, MemoryEstimate};
+use crate::trace::TraceSpec;
+use crate::workloads::{ComputeModel, IterativeProfile, JobKind, JobSpec};
+
+/// A named LLM workload template.
+#[derive(Debug, Clone)]
+pub struct LlmWorkload {
+    pub name: &'static str,
+    pub demand_gpcs: u8,
+    pub iter_step_s: f64,
+    pub weights_gb: f64,
+    pub trace: TraceSpec,
+}
+
+impl LlmWorkload {
+    /// Build the schedulable job. `seed` individualizes the trace noise.
+    pub fn job(&self, seed: u64) -> JobSpec {
+        let trace = self.trace.generate(seed);
+        let true_peak = trace.peak_gb();
+        JobSpec {
+            name: self.name.to_string(),
+            kind: JobKind::Llm,
+            demand_gpcs: self.demand_gpcs,
+            true_mem_gb: true_peak,
+            // Memory is unknown upfront: the scheduler starts on the
+            // smallest slice (grow-on-demand) and refines via prediction.
+            est: MemoryEstimate {
+                mem_gb: 0.0,
+                compute_gpcs: self.demand_gpcs,
+                method: EstimationMethod::TimeSeries,
+            },
+            compute: ComputeModel::Iterative(IterativeProfile {
+                alloc_s: 0.6,
+                h2d_pcie_s: self.weights_gb / 12.0,
+                iter_step_s: self.iter_step_s,
+                d2h_pcie_s: 0.05,
+                free_s: 0.03,
+                trace: self.trace.clone(),
+                trace_seed: seed,
+            }),
+        }
+    }
+}
+
+/// Qwen2-7B iterative inference with growing context (paper §2.3).
+pub fn qwen2_7b() -> LlmWorkload {
+    LlmWorkload {
+        name: "qwen2-7b",
+        // decode is memory-bandwidth-bound: modest GPC demand (it runs
+        // at near-full speed on a 2-3 GPC slice, as on the real A100)
+        demand_gpcs: 2,
+        iter_step_s: 0.35,
+        weights_gb: 7.0,
+        trace: TraceSpec {
+            base_gb: 7.5,
+            growth_gb_per_iter: 0.02128,
+            noise_sigma_gb: 0.02,
+            inv_reuse_base: 1.05,
+            inv_reuse_growth: 0.002,
+            inv_reuse_noise: 0.004,
+            n_iters: 200,
+            context_gb: 0.5,
+        },
+    }
+}
+
+/// Llama-3-3B inference with growing context.
+pub fn llama3_3b() -> LlmWorkload {
+    LlmWorkload {
+        name: "llama3-3b",
+        demand_gpcs: 2,
+        iter_step_s: 0.28,
+        weights_gb: 6.0,
+        trace: TraceSpec {
+            base_gb: 6.0,
+            growth_gb_per_iter: 0.0486,
+            noise_sigma_gb: 0.03,
+            inv_reuse_base: 1.04,
+            inv_reuse_growth: 0.0015,
+            inv_reuse_noise: 0.004,
+            n_iters: 208,
+            context_gb: 0.5,
+        },
+    }
+}
+
+/// FLAN-T5 fine-tuning (noisy allocator series).
+pub fn flan_t5_train() -> LlmWorkload {
+    LlmWorkload {
+        name: "flan-t5-train",
+        demand_gpcs: 1,
+        iter_step_s: 0.25,
+        weights_gb: 1.0,
+        trace: TraceSpec {
+            base_gb: 3.1,
+            growth_gb_per_iter: 0.0366,
+            noise_sigma_gb: 0.30,
+            inv_reuse_base: 1.10,
+            inv_reuse_growth: 0.003,
+            inv_reuse_noise: 0.02,
+            n_iters: 100,
+            context_gb: 0.4,
+        },
+    }
+}
+
+/// FLAN-T5 batched inference (moderately noisy).
+pub fn flan_t5_infer() -> LlmWorkload {
+    LlmWorkload {
+        name: "flan-t5-infer",
+        demand_gpcs: 1,
+        iter_step_s: 0.15,
+        weights_gb: 1.0,
+        trace: TraceSpec {
+            base_gb: 3.6,
+            growth_gb_per_iter: 0.037,
+            noise_sigma_gb: 0.18,
+            inv_reuse_base: 1.08,
+            inv_reuse_growth: 0.002,
+            inv_reuse_noise: 0.012,
+            n_iters: 80,
+            context_gb: 0.4,
+        },
+    }
+}
+
+/// All four, in Table-2 order.
+pub fn all() -> Vec<LlmWorkload> {
+    vec![flan_t5_train(), flan_t5_infer(), qwen2_7b(), llama3_3b()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen2_mean_crossing_matches_paper() {
+        let w = qwen2_7b();
+        let oom = w.trace.mean_oom_iter(10.0).unwrap();
+        assert!((92..=96).contains(&oom), "qwen2 crosses 10GB at {oom}");
+        let peak = w.trace.mean_peak_gb();
+        assert!((12.0..12.5).contains(&peak), "peak {peak}");
+    }
+
+    #[test]
+    fn llama3_mean_crossing_matches_paper() {
+        let w = llama3_3b();
+        let oom = w.trace.mean_oom_iter(10.0).unwrap();
+        assert!((70..=74).contains(&oom), "llama3 crosses 10GB at {oom}");
+        let peak = w.trace.mean_peak_gb();
+        assert!((16.3..17.0).contains(&peak), "peak {peak}");
+    }
+
+    #[test]
+    fn flan_t5_crossings_match_paper() {
+        let t = flan_t5_train();
+        let oom_t = t.trace.mean_oom_iter(5.0).unwrap();
+        assert!((39..=43).contains(&oom_t), "train crosses at {oom_t}");
+        let i = flan_t5_infer();
+        let oom_i = i.trace.mean_oom_iter(5.0).unwrap();
+        assert!((25..=29).contains(&oom_i), "infer crosses at {oom_i}");
+    }
+
+    #[test]
+    fn jobs_start_with_unknown_memory() {
+        for w in all() {
+            let j = w.job(1);
+            assert_eq!(j.est.method, crate::estimator::EstimationMethod::TimeSeries);
+            assert_eq!(j.est.mem_gb, 0.0);
+            assert!(j.true_mem_gb > 4.0);
+        }
+    }
+
+    #[test]
+    fn peaks_fit_their_final_slices() {
+        // After the predictive resize each job must fit some real slice.
+        assert!(qwen2_7b().job(2).true_mem_gb <= 20.0);
+        assert!(llama3_3b().job(2).true_mem_gb <= 20.0);
+        assert!(flan_t5_train().job(2).true_mem_gb <= 10.0 + 1.5);
+        assert!(flan_t5_infer().job(2).true_mem_gb <= 10.0);
+    }
+}

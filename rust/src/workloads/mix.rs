@@ -1,0 +1,271 @@
+//! The paper's job mixes (Tables 1 and 2) plus the §1 preliminary batch.
+//!
+//! Heterogeneous mixes draw from the Rodinia pool with a seeded RNG and
+//! shuffle the arrival order, exactly as described in §5.1 ("taking
+//! different benchmarks and parameter combinations ... and randomizing
+//! the order of the mix").
+
+use crate::util::Rng;
+use crate::workloads::llm;
+use crate::workloads::rodinia::{self, RodiniaBench};
+use crate::workloads::{dnn, JobSpec, SizeClass};
+
+/// A named mix: ordered batch of jobs.
+#[derive(Debug, Clone)]
+pub struct Mix {
+    pub name: &'static str,
+    pub jobs: Vec<JobSpec>,
+}
+
+fn bucket(pool: &[RodiniaBench], class: SizeClass) -> Vec<RodiniaBench> {
+    pool.iter()
+        .filter(|b| SizeClass::of_mem(b.mem_gb) == class)
+        .cloned()
+        .collect()
+}
+
+fn repeat(b: &RodiniaBench, n: usize, gpcs: u8) -> Vec<JobSpec> {
+    (0..n).map(|_| b.job(gpcs)).collect()
+}
+
+/// Hm1: 50x particlefilter (Table 1).
+pub fn hm1() -> Mix {
+    Mix {
+        name: "Hm1",
+        jobs: repeat(&rodinia::by_name("particlefilter").unwrap(), 50, 7),
+    }
+}
+
+/// Hm2: 50x gaussian.
+pub fn hm2() -> Mix {
+    Mix {
+        name: "Hm2",
+        jobs: repeat(&rodinia::by_name("gaussian").unwrap(), 50, 7),
+    }
+}
+
+/// Hm3: 100x myocyte.
+pub fn hm3() -> Mix {
+    Mix {
+        name: "Hm3",
+        jobs: repeat(&rodinia::by_name("myocyte").unwrap(), 100, 7),
+    }
+}
+
+/// Hm4: 50x euler3D (half-GPU jobs; 2x theoretical ceiling).
+pub fn hm4() -> Mix {
+    Mix {
+        name: "Hm4",
+        jobs: repeat(&rodinia::by_name("euler3d").unwrap(), 50, 7),
+    }
+}
+
+/// Ht1: 11 small + 2 medium + 2 large with roughly equal per-group
+/// total runtime (Table 1 note).
+pub fn ht1(seed: u64) -> Mix {
+    let pool = rodinia::pool();
+    let mut rng = Rng::new(seed);
+    let mut jobs = Vec::new();
+    // group target: pick benches whose group durations roughly balance;
+    // gaussian(small) x11 ~ 24s, srad_v2(medium) x2 ~ 11s... use the
+    // heavier mediums/larges to balance.
+    let small = bucket(&pool, SizeClass::Small);
+    for _ in 0..11 {
+        jobs.push(rng.choice(&small).job(7));
+    }
+    jobs.extend(repeat(&rodinia::by_name("streamcluster").unwrap(), 2, 7));
+    jobs.extend(repeat(&rodinia::by_name("euler3d").unwrap(), 2, 7));
+    rng.shuffle(&mut jobs);
+    Mix { name: "Ht1", jobs }
+}
+
+/// Ht2: ratio 1:0:1:1 (small:medium:large:full), batch 18.
+pub fn ht2(seed: u64) -> Mix {
+    ratio_mix("Ht2", seed, [6, 0, 6, 6])
+}
+
+/// Ht3: ratio 4:0:1:1, batch 36.
+pub fn ht3(seed: u64) -> Mix {
+    ratio_mix("Ht3", seed, [24, 0, 6, 6])
+}
+
+fn ratio_mix(name: &'static str, seed: u64, counts: [usize; 4]) -> Mix {
+    let pool = rodinia::pool();
+    let mut rng = Rng::new(seed);
+    let mut jobs = Vec::new();
+    for (class, n) in [
+        (SizeClass::Small, counts[0]),
+        (SizeClass::Medium, counts[1]),
+        (SizeClass::Large, counts[2]),
+        (SizeClass::Full, counts[3]),
+    ] {
+        let b = bucket(&pool, class);
+        for _ in 0..n {
+            jobs.push(rng.choice(&b).job(7));
+        }
+    }
+    rng.shuffle(&mut jobs);
+    Mix { name, jobs }
+}
+
+/// Ml1: equal small/large DNN jobs, batch 14 (Table 2: 1:0:1:0).
+pub fn ml1(seed: u64) -> Mix {
+    let mut rng = Rng::new(seed);
+    let mut jobs = Vec::new();
+    let small = [dnn::bert_small_train(), dnn::bert_large_seq_train()];
+    let large = [
+        dnn::vgg16_train(),
+        dnn::resnet50_train(),
+        dnn::inceptionv3_train(),
+    ];
+    for _ in 0..7 {
+        jobs.push(small[rng.below(small.len())].job());
+    }
+    for _ in 0..7 {
+        jobs.push(large[rng.below(large.len())].job());
+    }
+    rng.shuffle(&mut jobs);
+    Mix { name: "Ml1", jobs }
+}
+
+/// Ml2: only small DNN jobs (BERT variants), batch 21.
+pub fn ml2(seed: u64) -> Mix {
+    let mut rng = Rng::new(seed);
+    let variants = [dnn::bert_small_train(), dnn::bert_large_seq_train()];
+    let jobs = (0..21)
+        .map(|_| variants[rng.below(variants.len())].job())
+        .collect();
+    Mix { name: "Ml2", jobs }
+}
+
+/// Ml3: only large DNN jobs, batch 18.
+pub fn ml3(seed: u64) -> Mix {
+    let mut rng = Rng::new(seed);
+    let large = [
+        dnn::vgg16_train(),
+        dnn::resnet50_train(),
+        dnn::inceptionv3_train(),
+    ];
+    let jobs = (0..18).map(|_| large[rng.below(large.len())].job()).collect();
+    Mix { name: "Ml3", jobs }
+}
+
+/// Homogeneous LLM mixes (Table 2 batch sizes).
+pub fn llm_mix(name: &str, seed: u64) -> Option<Mix> {
+    let (w, batch, label): (llm::LlmWorkload, usize, &'static str) = match name {
+        "flan-t5-train" => (llm::flan_t5_train(), 4, "FLAN-T5-train"),
+        "flan-t5" | "flan-t5-infer" => (llm::flan_t5_infer(), 6, "FLAN-T5"),
+        "qwen2" => (llm::qwen2_7b(), 1, "Qwen2"),
+        "llama3" => (llm::llama3_3b(), 1, "Llama 3"),
+        _ => return None,
+    };
+    let jobs = (0..batch).map(|i| w.job(seed.wrapping_add(i as u64))).collect();
+    Some(Mix { name: label, jobs })
+}
+
+/// §1 preliminary experiment: 14 random Rodinia jobs that fit an A30.
+pub fn preliminary_a30(seed: u64) -> Mix {
+    let pool: Vec<RodiniaBench> = rodinia::pool()
+        .into_iter()
+        .filter(|b| b.mem_gb <= 24.0)
+        .collect();
+    let mut rng = Rng::new(seed);
+    let jobs = (0..14).map(|_| rng.choice(&pool).job(4)).collect();
+    Mix {
+        name: "preliminary-a30",
+        jobs,
+    }
+}
+
+/// Mix registry for the CLI / config loader.
+pub fn by_name(name: &str, seed: u64) -> Option<Mix> {
+    match name.to_ascii_lowercase().as_str() {
+        "hm1" => Some(hm1()),
+        "hm2" => Some(hm2()),
+        "hm3" => Some(hm3()),
+        "hm4" => Some(hm4()),
+        "ht1" => Some(ht1(seed)),
+        "ht2" => Some(ht2(seed)),
+        "ht3" => Some(ht3(seed)),
+        "ml1" => Some(ml1(seed)),
+        "ml2" => Some(ml2(seed)),
+        "ml3" => Some(ml3(seed)),
+        "preliminary-a30" => Some(preliminary_a30(seed)),
+        other => llm_mix(other, seed),
+    }
+}
+
+/// All Rodinia mix names (Figure 4a-4d).
+pub const RODINIA_MIXES: [&str; 7] = ["Hm1", "Hm2", "Hm3", "Hm4", "Ht1", "Ht2", "Ht3"];
+/// All ML mix names (Figure 4e-4h).
+pub const ML_MIXES: [&str; 3] = ["Ml1", "Ml2", "Ml3"];
+/// All LLM workload names (Figure 4e-4h, dynamic group).
+pub const LLM_MIXES: [&str; 4] = ["flan-t5-train", "flan-t5", "qwen2", "llama3"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::JobKind;
+
+    #[test]
+    fn table1_batch_sizes() {
+        assert_eq!(hm1().jobs.len(), 50);
+        assert_eq!(hm2().jobs.len(), 50);
+        assert_eq!(hm3().jobs.len(), 100);
+        assert_eq!(hm4().jobs.len(), 50);
+        assert_eq!(ht1(1).jobs.len(), 15);
+        assert_eq!(ht2(1).jobs.len(), 18);
+        assert_eq!(ht3(1).jobs.len(), 36);
+    }
+
+    #[test]
+    fn table2_batch_sizes() {
+        assert_eq!(ml1(1).jobs.len(), 14);
+        assert_eq!(ml2(1).jobs.len(), 21);
+        assert_eq!(ml3(1).jobs.len(), 18);
+        assert_eq!(llm_mix("flan-t5-train", 1).unwrap().jobs.len(), 4);
+        assert_eq!(llm_mix("flan-t5", 1).unwrap().jobs.len(), 6);
+        assert_eq!(llm_mix("qwen2", 1).unwrap().jobs.len(), 1);
+        assert_eq!(llm_mix("llama3", 1).unwrap().jobs.len(), 1);
+    }
+
+    #[test]
+    fn ht3_has_4_1_1_ratio() {
+        let m = ht3(7);
+        let count = |c| m.jobs.iter().filter(|j| j.size_class() == c).count();
+        assert_eq!(count(SizeClass::Small), 24);
+        assert_eq!(count(SizeClass::Large), 6);
+        assert_eq!(count(SizeClass::Full), 6);
+    }
+
+    #[test]
+    fn mixes_are_seed_deterministic() {
+        let a: Vec<String> = ht2(5).jobs.iter().map(|j| j.name.clone()).collect();
+        let b: Vec<String> = ht2(5).jobs.iter().map(|j| j.name.clone()).collect();
+        let c: Vec<String> = ht2(6).jobs.iter().map(|j| j.name.clone()).collect();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn registry_resolves_every_published_mix() {
+        for n in RODINIA_MIXES.iter().chain(&ML_MIXES).chain(&LLM_MIXES) {
+            assert!(by_name(n, 3).is_some(), "{n}");
+        }
+        assert!(by_name("nope", 3).is_none());
+    }
+
+    #[test]
+    fn llm_mixes_are_llm_kind() {
+        for j in llm_mix("qwen2", 2).unwrap().jobs {
+            assert_eq!(j.kind, JobKind::Llm);
+        }
+    }
+
+    #[test]
+    fn preliminary_mix_fits_a30() {
+        for j in preliminary_a30(11).jobs {
+            assert!(j.true_mem_gb <= 24.0);
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Workload models: everything the paper schedules.
+//!
+//! * [`rodinia`] — the 23 Rodinia benchmark+parameter descriptors
+//!   (footprints and phase timings calibrated from paper Tables 3–4),
+//!   analyzed through the compile-time path.
+//! * [`dnn`] — the DNN training jobs of the ML mixes, sized via
+//!   [`crate::estimator::dnnmem`].
+//! * [`llm`] — the four dynamic LLM workloads with allocator traces.
+//! * [`mix`] — the paper's job mixes (Tables 1 and 2).
+
+pub mod dnn;
+pub mod llm;
+pub mod mix;
+pub mod rodinia;
+
+use crate::estimator::MemoryEstimate;
+use crate::trace::TraceSpec;
+
+/// Workload family (drives the estimation tier).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    Rodinia,
+    Dnn,
+    Llm,
+}
+
+/// A100 size buckets used throughout the evaluation
+/// (small:medium:large:full = 5/10/20/40 GB).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SizeClass {
+    Small,
+    Medium,
+    Large,
+    Full,
+}
+
+impl SizeClass {
+    /// Classify a footprint on the A100-40GB bucket boundaries.
+    pub fn of_mem(mem_gb: f64) -> SizeClass {
+        if mem_gb <= 5.0 {
+            SizeClass::Small
+        } else if mem_gb <= 10.0 {
+            SizeClass::Medium
+        } else if mem_gb <= 20.0 {
+            SizeClass::Large
+        } else {
+            SizeClass::Full
+        }
+    }
+}
+
+/// Phase timing of a static (non-iterative-memory) workload. Transfer
+/// durations are at *exclusive* PCIe use; the simulator stretches them
+/// under contention. Kernel time on `c` GPCs is
+/// `steps_time = ceil(demand/c) * step_s` per step wave (warp model).
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseProfile {
+    pub alloc_s: f64,
+    pub h2d_pcie_s: f64,
+    pub steps: u32,
+    pub step_s: f64,
+    /// Per-step transfer (minibatch loading); 0 for one-shot kernels.
+    pub step_pcie_s: f64,
+    pub d2h_pcie_s: f64,
+    pub free_s: f64,
+}
+
+impl PhaseProfile {
+    /// Ideal single-job runtime on a full, uncontended GPU.
+    pub fn ideal_runtime_s(&self, demand_gpcs: u8, gpcs: u8) -> f64 {
+        let waves = demand_gpcs.div_ceil(gpcs.max(1)) as f64;
+        self.alloc_s
+            + self.h2d_pcie_s
+            + self.steps as f64 * (self.step_s * waves + self.step_pcie_s)
+            + self.d2h_pcie_s
+            + self.free_s
+    }
+}
+
+/// Iterative workload whose memory follows an allocator trace (LLMs).
+#[derive(Debug, Clone)]
+pub struct IterativeProfile {
+    pub alloc_s: f64,
+    pub h2d_pcie_s: f64,
+    /// One iteration's kernel time with enough GPCs.
+    pub iter_step_s: f64,
+    pub d2h_pcie_s: f64,
+    pub free_s: f64,
+    pub trace: TraceSpec,
+    pub trace_seed: u64,
+}
+
+/// How the job consumes the GPU.
+#[derive(Debug, Clone)]
+pub enum ComputeModel {
+    Phases(PhaseProfile),
+    Iterative(IterativeProfile),
+}
+
+/// One schedulable job.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub kind: JobKind,
+    /// Compute demand in GPC units.
+    pub demand_gpcs: u8,
+    /// Actual peak physical memory (GB). For iterative jobs this is the
+    /// trace's realized peak and is filled in by the generator.
+    pub true_mem_gb: f64,
+    /// The scheduler's a-priori estimate (see `estimator`).
+    pub est: MemoryEstimate,
+    pub compute: ComputeModel,
+}
+
+impl JobSpec {
+    pub fn size_class(&self) -> SizeClass {
+        SizeClass::of_mem(self.est.mem_gb)
+    }
+
+    /// Baseline (full exclusive GPU) runtime, used for calibration tests.
+    pub fn baseline_runtime_s(&self, gpcs: u8) -> f64 {
+        match &self.compute {
+            ComputeModel::Phases(p) => p.ideal_runtime_s(self.demand_gpcs, gpcs),
+            ComputeModel::Iterative(it) => {
+                let waves = self.demand_gpcs.div_ceil(gpcs.max(1)) as f64;
+                it.alloc_s
+                    + it.h2d_pcie_s
+                    + it.trace.n_iters as f64 * it.iter_step_s * waves
+                    + it.d2h_pcie_s
+                    + it.free_s
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_class_boundaries() {
+        assert_eq!(SizeClass::of_mem(0.4), SizeClass::Small);
+        assert_eq!(SizeClass::of_mem(5.0), SizeClass::Small);
+        assert_eq!(SizeClass::of_mem(5.1), SizeClass::Medium);
+        assert_eq!(SizeClass::of_mem(10.0), SizeClass::Medium);
+        assert_eq!(SizeClass::of_mem(17.0), SizeClass::Large);
+        assert_eq!(SizeClass::of_mem(20.5), SizeClass::Full);
+    }
+
+    #[test]
+    fn ideal_runtime_accounts_for_waves() {
+        let p = PhaseProfile {
+            alloc_s: 0.1,
+            h2d_pcie_s: 0.2,
+            steps: 4,
+            step_s: 0.5,
+            step_pcie_s: 0.0,
+            d2h_pcie_s: 0.2,
+            free_s: 0.1,
+        };
+        // demand 2 on 1 GPC -> 2 waves per step
+        let slow = p.ideal_runtime_s(2, 1);
+        let fast = p.ideal_runtime_s(2, 7);
+        assert!((fast - (0.6 + 4.0 * 0.5)).abs() < 1e-9);
+        assert!((slow - (0.6 + 4.0 * 1.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,208 @@
+//! The Rodinia v3.1 benchmark pool (23 benchmark+parameter combinations,
+//! paper §5/A.1), modeled as kernel-resource descriptors + phase
+//! profiles.
+//!
+//! Footprints and phase durations are calibrated against the paper's
+//! published breakdowns: Table 3 (myocyte: alloc 0.24 s, h2d 0.0122 s,
+//! kernel 3.6 ms, d2h 3.36 s, free 0.58 ms on the full GPU) and Table 4
+//! (needleman-wunsch: 0.523 s single-job baseline, PCIe-transfer-bound).
+//! Every job is estimated through the compile-time analysis path, as in
+//! the paper.
+
+use crate::estimator::compiler_analysis::{analyze, BufferDecl, KernelResource};
+use crate::workloads::{ComputeModel, JobKind, JobSpec, PhaseProfile};
+
+/// One pool entry: a benchmark+parameter combination.
+#[derive(Debug, Clone)]
+pub struct RodiniaBench {
+    pub name: &'static str,
+    /// Device footprint (GB) the kernel-resource descriptor encodes.
+    pub mem_gb: f64,
+    /// Compute demand (GPC units) encoded via launch geometry.
+    pub demand_gpcs: u8,
+    pub phases: PhaseProfile,
+}
+
+impl RodiniaBench {
+    /// The descriptor the compiler pass would emit for this benchmark.
+    pub fn kernel_resource(&self) -> KernelResource {
+        const CONTEXT_GB: f64 = 0.25;
+        let bytes = ((self.mem_gb - CONTEXT_GB).max(0.01) * 1e9) as u64;
+        // 8 warps per block at 256 threads; 896 warps per GPC
+        // (14 SMs x 64 warps).
+        let blocks = self.demand_gpcs as u64 * 112;
+        KernelResource {
+            name: self.name.to_string(),
+            buffers: vec![BufferDecl {
+                name: "dev".into(),
+                elems: bytes / 4,
+                elem_bytes: 4,
+                copies: 1,
+            }],
+            threads_per_block: 256,
+            blocks,
+            context_gb: CONTEXT_GB,
+        }
+    }
+
+    /// Build the schedulable job (estimate via compile-time analysis).
+    pub fn job(&self, total_gpcs: u8) -> JobSpec {
+        let analysis = analyze(&self.kernel_resource(), total_gpcs);
+        JobSpec {
+            name: self.name.to_string(),
+            kind: JobKind::Rodinia,
+            demand_gpcs: self.demand_gpcs,
+            true_mem_gb: self.mem_gb,
+            est: analysis.to_estimate(),
+            compute: ComputeModel::Phases(self.phases),
+        }
+    }
+}
+
+const fn ph(
+    alloc_s: f64,
+    h2d: f64,
+    steps: u32,
+    step_s: f64,
+    d2h: f64,
+    free_s: f64,
+) -> PhaseProfile {
+    PhaseProfile {
+        alloc_s,
+        h2d_pcie_s: h2d,
+        steps,
+        step_s,
+        step_pcie_s: 0.0,
+        d2h_pcie_s: d2h,
+        free_s,
+    }
+}
+
+/// The full 23-combination pool.
+pub fn pool() -> Vec<RodiniaBench> {
+    vec![
+        // ---- small (<= 5 GB) --------------------------------------------
+        // myocyte: calibrated from paper Table 3 — d2h dominated.
+        RodiniaBench { name: "myocyte", mem_gb: 0.45, demand_gpcs: 1,
+            phases: ph(0.24, 0.0122, 1, 0.0036, 3.36, 0.0006) },
+        // needleman-wunsch: calibrated from Table 4 — 0.523 s baseline,
+        // transfer-bound.
+        RodiniaBench { name: "nw", mem_gb: 3.2, demand_gpcs: 1,
+            phases: ph(0.06, 0.18, 2, 0.0415, 0.18, 0.02) },
+        RodiniaBench { name: "gaussian", mem_gb: 2.2, demand_gpcs: 1,
+            phases: ph(0.10, 0.05, 4, 0.50, 0.05, 0.01) },
+        RodiniaBench { name: "particlefilter", mem_gb: 4.0, demand_gpcs: 1,
+            phases: ph(0.15, 0.30, 3, 0.40, 0.30, 0.01) },
+        RodiniaBench { name: "backprop", mem_gb: 1.5, demand_gpcs: 1,
+            phases: ph(0.08, 0.12, 2, 0.20, 0.10, 0.01) },
+        RodiniaBench { name: "bfs", mem_gb: 0.9, demand_gpcs: 1,
+            phases: ph(0.05, 0.08, 3, 0.10, 0.06, 0.01) },
+        RodiniaBench { name: "hotspot", mem_gb: 1.2, demand_gpcs: 1,
+            phases: ph(0.06, 0.06, 4, 0.15, 0.05, 0.01) },
+        RodiniaBench { name: "lud", mem_gb: 0.8, demand_gpcs: 1,
+            phases: ph(0.05, 0.04, 3, 0.25, 0.04, 0.01) },
+        RodiniaBench { name: "nn", mem_gb: 0.5, demand_gpcs: 1,
+            phases: ph(0.04, 0.10, 1, 0.05, 0.08, 0.01) },
+        RodiniaBench { name: "pathfinder", mem_gb: 1.8, demand_gpcs: 1,
+            phases: ph(0.07, 0.15, 2, 0.30, 0.05, 0.01) },
+        RodiniaBench { name: "srad_v1", mem_gb: 2.5, demand_gpcs: 1,
+            phases: ph(0.09, 0.10, 5, 0.30, 0.08, 0.01) },
+        RodiniaBench { name: "b+tree", mem_gb: 3.6, demand_gpcs: 1,
+            phases: ph(0.12, 0.25, 2, 0.20, 0.15, 0.02) },
+        // ---- medium (<= 10 GB) ------------------------------------------
+        RodiniaBench { name: "hotspot3D", mem_gb: 7.5, demand_gpcs: 2,
+            phases: ph(0.15, 0.40, 5, 0.40, 0.20, 0.02) },
+        RodiniaBench { name: "kmeans", mem_gb: 6.0, demand_gpcs: 2,
+            phases: ph(0.12, 0.50, 6, 0.30, 0.30, 0.02) },
+        RodiniaBench { name: "srad_v2", mem_gb: 8.2, demand_gpcs: 2,
+            phases: ph(0.18, 0.35, 6, 0.45, 0.20, 0.02) },
+        RodiniaBench { name: "streamcluster", mem_gb: 9.0, demand_gpcs: 2,
+            phases: ph(0.20, 0.60, 8, 0.35, 0.40, 0.03) },
+        RodiniaBench { name: "dwt2d", mem_gb: 5.5, demand_gpcs: 2,
+            phases: ph(0.10, 0.45, 3, 0.25, 0.35, 0.02) },
+        // ---- large (<= 20 GB) -------------------------------------------
+        // euler3D (cfd): the paper's Hm4 — occupies half the A100.
+        RodiniaBench { name: "euler3d", mem_gb: 17.0, demand_gpcs: 3,
+            phases: ph(0.30, 0.80, 5, 1.00, 0.50, 0.02) },
+        RodiniaBench { name: "lavaMD", mem_gb: 12.0, demand_gpcs: 3,
+            phases: ph(0.25, 0.60, 4, 0.90, 0.40, 0.02) },
+        RodiniaBench { name: "leukocyte", mem_gb: 15.0, demand_gpcs: 3,
+            phases: ph(0.28, 0.70, 6, 0.70, 0.30, 0.02) },
+        RodiniaBench { name: "heartwall", mem_gb: 18.0, demand_gpcs: 4,
+            phases: ph(0.30, 0.90, 5, 0.80, 0.50, 0.03) },
+        // ---- full (<= 40 GB) --------------------------------------------
+        RodiniaBench { name: "mummergpu", mem_gb: 25.0, demand_gpcs: 6,
+            phases: ph(0.40, 1.20, 4, 1.10, 0.80, 0.03) },
+        RodiniaBench { name: "hybridsort", mem_gb: 22.0, demand_gpcs: 6,
+            phases: ph(0.35, 1.50, 3, 0.90, 1.20, 0.03) },
+    ]
+}
+
+/// Look up one benchmark by name.
+pub fn by_name(name: &str) -> Option<RodiniaBench> {
+    pool().into_iter().find(|b| b.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::SizeClass;
+
+    #[test]
+    fn pool_has_23_combinations() {
+        assert_eq!(pool().len(), 23);
+    }
+
+    #[test]
+    fn pool_covers_all_four_buckets() {
+        let mut counts = [0usize; 4];
+        for b in pool() {
+            let j = b.job(7);
+            counts[match j.size_class() {
+                SizeClass::Small => 0,
+                SizeClass::Medium => 1,
+                SizeClass::Large => 2,
+                SizeClass::Full => 3,
+            }] += 1;
+        }
+        assert!(counts.iter().all(|&c| c >= 2), "{counts:?}");
+        assert_eq!(counts.iter().sum::<usize>(), 23);
+    }
+
+    #[test]
+    fn compile_time_estimate_tracks_descriptor_footprint() {
+        for b in pool() {
+            let j = b.job(7);
+            assert!(
+                (j.est.mem_gb - b.mem_gb).abs() < 0.05,
+                "{}: est {} vs true {}",
+                b.name,
+                j.est.mem_gb,
+                b.mem_gb
+            );
+            assert!(j.est.compute_gpcs >= 1 && j.est.compute_gpcs <= 7);
+        }
+    }
+
+    #[test]
+    fn nw_baseline_runtime_matches_table4() {
+        // Table 4: 0.523 s single-job baseline on the full GPU.
+        let j = by_name("nw").unwrap().job(7);
+        let t = j.baseline_runtime_s(7);
+        assert!((t - 0.523).abs() < 0.02, "{t}");
+    }
+
+    #[test]
+    fn myocyte_baseline_matches_table3_total() {
+        // Table 3 phases sum to ~3.62 s on the full GPU.
+        let j = by_name("myocyte").unwrap().job(7);
+        let t = j.baseline_runtime_s(7);
+        assert!((3.4..3.9).contains(&t), "{t}");
+    }
+
+    #[test]
+    fn small_jobs_fold_to_one_gpc() {
+        let j = by_name("myocyte").unwrap().job(7);
+        assert_eq!(j.est.compute_gpcs, 1);
+    }
+}

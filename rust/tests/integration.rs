@@ -1,0 +1,283 @@
+//! Integration tests: schedulers x simulator x partition manager across
+//! every published mix, plus randomized property tests (hand-rolled —
+//! the offline build has no proptest) on the core invariants.
+
+use std::sync::Arc;
+
+use migm::config::{ExperimentConfig, Scheme, DEFAULT_SEED};
+use migm::mig::{GpuSpec, PartitionManager, ReachabilityTable};
+use migm::scheduler::{self, run_mix};
+use migm::util::{Json, Rng};
+use migm::workloads::mix;
+
+fn a100() -> Arc<GpuSpec> {
+    Arc::new(GpuSpec::a100_40gb())
+}
+
+// ---------------------------------------------------------------- end2end
+
+#[test]
+fn every_published_mix_completes_under_every_scheme() {
+    let spec = a100();
+    let mixes: Vec<&str> = mix::RODINIA_MIXES
+        .iter()
+        .chain(&mix::ML_MIXES)
+        .chain(&mix::LLM_MIXES)
+        .copied()
+        .collect();
+    for name in mixes {
+        let m = mix::by_name(name, DEFAULT_SEED).unwrap();
+        for scheme in [Scheme::Baseline, Scheme::A, Scheme::B] {
+            for pred in [false, true] {
+                if scheme == Scheme::Baseline && pred {
+                    continue;
+                }
+                let r = run_mix(spec.clone(), &m, scheme, pred);
+                assert_eq!(
+                    r.records.len(),
+                    m.jobs.len(),
+                    "{name} under {scheme:?} pred={pred}: jobs lost or duplicated"
+                );
+                assert!(r.metrics.makespan_s > 0.0);
+                assert!(r.metrics.throughput_jps > 0.0);
+                // energy is bounded by the power envelope
+                let min_e = spec.idle_power_w * r.metrics.makespan_s;
+                let max_e = spec.max_power_w * r.metrics.makespan_s;
+                assert!(
+                    r.metrics.energy_j >= min_e - 1e-6 && r.metrics.energy_j <= max_e + 1e-6,
+                    "{name}: energy {} outside [{min_e}, {max_e}]",
+                    r.metrics.energy_j
+                );
+                assert!(r.metrics.mem_utilization >= 0.0 && r.metrics.mem_utilization <= 1.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn mig_schemes_beat_baseline_on_every_rodinia_mix() {
+    let spec = a100();
+    for name in mix::RODINIA_MIXES {
+        let m = mix::by_name(name, DEFAULT_SEED).unwrap();
+        let base = scheduler::baseline::run(spec.clone(), &m);
+        let a = run_mix(spec.clone(), &m, Scheme::A, false);
+        assert!(
+            a.metrics.throughput_jps > base.metrics.throughput_jps,
+            "{name}: A {} !> base {}",
+            a.metrics.throughput_jps,
+            base.metrics.throughput_jps
+        );
+        assert!(
+            a.metrics.energy_j < base.metrics.energy_j,
+            "{name}: A energy {} !< base {}",
+            a.metrics.energy_j,
+            base.metrics.energy_j
+        );
+    }
+}
+
+#[test]
+fn prediction_dominates_no_prediction_for_dynamic_mixes() {
+    let spec = a100();
+    for name in mix::LLM_MIXES {
+        let m = mix::by_name(name, DEFAULT_SEED).unwrap();
+        let without = run_mix(spec.clone(), &m, Scheme::A, false);
+        let with = run_mix(spec.clone(), &m, Scheme::A, true);
+        assert!(
+            with.metrics.throughput_jps >= without.metrics.throughput_jps,
+            "{name}: pred {} !>= nopred {}",
+            with.metrics.throughput_jps,
+            without.metrics.throughput_jps
+        );
+        assert!(with.metrics.oom_restarts <= without.metrics.oom_restarts);
+    }
+}
+
+#[test]
+fn experiment_config_file_roundtrip() {
+    let dir = std::env::temp_dir();
+    let path = dir.join("migm_test_config.json");
+    std::fs::write(
+        &path,
+        r#"{"gpu": "a100", "mix": "hm2", "scheme": "b", "prediction": false, "seed": 3}"#,
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_file(&path).unwrap();
+    let r = scheduler::run_experiment(&cfg);
+    assert_eq!(r.records.len(), 50);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn a30_and_h100_also_schedule() {
+    for gpu in ["a30", "h100"] {
+        let cfg = ExperimentConfig::new(gpu, "preliminary-a30", Scheme::A, false, 2).unwrap();
+        let r = scheduler::run_experiment(&cfg);
+        assert_eq!(r.records.len(), 14, "{gpu}");
+    }
+}
+
+// ----------------------------------------------------------- properties
+
+/// Property: random alloc/free sequences keep the partition state valid
+/// (subset of some full configuration) and never overlap.
+#[test]
+fn prop_partition_state_always_valid() {
+    let spec = a100();
+    let table = ReachabilityTable::precompute(&spec);
+    let mut rng = Rng::new(0xF00D);
+    for _case in 0..200 {
+        let mut mgr = PartitionManager::new(spec.clone());
+        let mut live: Vec<u32> = Vec::new();
+        for _step in 0..40 {
+            if rng.bool(0.6) || live.is_empty() {
+                let profile = rng.below(spec.profiles.len());
+                if let Ok(id) = mgr.alloc(profile) {
+                    live.push(id);
+                }
+            } else {
+                let idx = rng.below(live.len());
+                let id = live.swap_remove(idx);
+                mgr.free(id).unwrap();
+            }
+            let s = mgr.state();
+            assert!(table.is_valid(s), "invalid state {}", s.render(&spec));
+            assert!(s.compute_used(&spec) <= spec.total_compute);
+            assert_eq!(s.len(), live.len());
+        }
+        for id in live {
+            mgr.free(id).unwrap();
+        }
+        assert!(mgr.state().is_empty());
+        assert_eq!(mgr.current_fcr(), 19);
+    }
+}
+
+/// Property: alloc always picks an argmax-fcr placement.
+#[test]
+fn prop_alloc_is_argmax_reachability() {
+    let spec = a100();
+    let mut rng = Rng::new(0xBEEF);
+    for _case in 0..100 {
+        let mut mgr = PartitionManager::new(spec.clone());
+        for _step in 0..10 {
+            let profile = rng.below(spec.profiles.len());
+            let cands = mgr.placement_candidates(profile);
+            if cands.is_empty() {
+                continue;
+            }
+            let best = cands.iter().map(|(_, f)| *f).max().unwrap();
+            let before = mgr.state().clone();
+            let id = mgr.alloc(profile).unwrap();
+            let placed = mgr.placement_of(id).unwrap();
+            let achieved = mgr
+                .table()
+                .fcr(&before.with(placed))
+                .expect("allocated state is valid");
+            assert_eq!(achieved, best, "alloc not argmax for profile {profile}");
+        }
+    }
+}
+
+/// Property: any fusion/fission plan the manager produces actually makes
+/// the requested profile placeable after executing the destroys.
+#[test]
+fn prop_reconfig_plans_are_sound() {
+    let spec = a100();
+    let mut rng = Rng::new(0xCAFE);
+    for _case in 0..150 {
+        let mut mgr = PartitionManager::new(spec.clone());
+        let mut live = Vec::new();
+        // fill with random small/medium instances
+        for _ in 0..rng.range(2, 8) {
+            let profile = rng.below(3);
+            if let Ok(id) = mgr.alloc(profile) {
+                live.push(id);
+            }
+        }
+        let want = rng.below(spec.profiles.len());
+        if mgr.can_alloc(want) {
+            continue;
+        }
+        if let Some(plan) = mgr.plan_reconfig(want, &live) {
+            assert_eq!(plan.ops, plan.destroy.len() + 1);
+            for id in &plan.destroy {
+                mgr.free(*id).unwrap();
+            }
+            assert!(
+                mgr.can_alloc(want),
+                "plan did not enable profile {want}"
+            );
+        }
+    }
+}
+
+/// Property: scheduling is deterministic — same seed, same metrics.
+#[test]
+fn prop_runs_are_deterministic() {
+    let spec = a100();
+    for seed in [1u64, 9, 77] {
+        let m1 = mix::ht2(seed);
+        let m2 = mix::ht2(seed);
+        let a = run_mix(spec.clone(), &m1, Scheme::A, false);
+        let b = run_mix(spec.clone(), &m2, Scheme::A, false);
+        assert_eq!(a.metrics.makespan_s, b.metrics.makespan_s);
+        assert_eq!(a.metrics.energy_j, b.metrics.energy_j);
+        assert_eq!(a.metrics.reconfig_ops, b.metrics.reconfig_ops);
+    }
+}
+
+/// Property: random job batches never lose jobs, and the DES keeps all
+/// aggregate invariants, across random sizes/seeds and both schemes.
+#[test]
+fn prop_random_batches_conserve_jobs() {
+    use migm::workloads::rodinia;
+    let spec = a100();
+    let pool = rodinia::pool();
+    let mut rng = Rng::new(0xDADA);
+    for case in 0..25 {
+        let n = rng.range(3, 25);
+        let jobs: Vec<_> = (0..n).map(|_| rng.choice(&pool).job(7)).collect();
+        let m = mix::Mix {
+            name: "random",
+            jobs,
+        };
+        let scheme = if case % 2 == 0 { Scheme::A } else { Scheme::B };
+        let r = run_mix(spec.clone(), &m, scheme, false);
+        assert_eq!(r.records.len(), n, "case {case}");
+        // turnarounds are sane
+        for rec in &r.records {
+            assert!(rec.finish_time >= rec.submit_time);
+            assert!(rec.finish_time <= r.metrics.makespan_s + 1e-9);
+        }
+    }
+}
+
+/// Property: the JSON codec roundtrips arbitrary machine-generated docs.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.f64() * 2000.0 - 1000.0).round() / 8.0),
+            3 => {
+                let n = rng.below(12);
+                Json::Str((0..n).map(|_| *rng.choice(&['a', '"', '\\', 'é', '\n', 'z'])).collect())
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::new(0x1209);
+    for _ in 0..300 {
+        let doc = gen(&mut rng, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(back, doc, "{text}");
+    }
+}

@@ -1,0 +1,96 @@
+//! End-to-end serving tests over the real PJRT artifacts. Skipped (with
+//! a notice) when `make artifacts` has not been run.
+
+use std::sync::Arc;
+
+use migm::runtime::Manifest;
+use migm::server::{GenRequest, ServingConfig, ServingSystem};
+
+fn have_artifacts() -> bool {
+    let ok = Manifest::default_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping serving e2e: run `make artifacts`");
+    }
+    ok
+}
+
+#[test]
+fn batch_of_requests_is_served_with_correct_lengths() {
+    if !have_artifacts() {
+        return;
+    }
+    let sys = Arc::new(
+        ServingSystem::start(ServingConfig {
+            replicas: 2,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for i in 0..10usize {
+        let sys = sys.clone();
+        let max_new = 2 + (i % 5);
+        handles.push(std::thread::spawn(move || {
+            let r = sys
+                .generate(GenRequest {
+                    prompt: vec![(i as i32) + 1, 7, 13],
+                    max_new,
+                })
+                .unwrap();
+            (max_new, r)
+        }));
+    }
+    let mut total = 0;
+    for h in handles {
+        let (max_new, r) = h.join().unwrap();
+        assert_eq!(r.tokens.len(), max_new);
+        assert!(r.latency_ms > 0.0);
+        total += r.tokens.len();
+    }
+    let st = sys.stats().unwrap();
+    assert_eq!(st.requests, 10);
+    assert!(st.tokens_generated >= total as u64);
+    assert!(st.decode_steps > 0);
+}
+
+#[test]
+fn same_seed_same_generation() {
+    if !have_artifacts() {
+        return;
+    }
+    let gen = |seed| {
+        let sys = ServingSystem::start(ServingConfig {
+            replicas: 1,
+            seed,
+            ..Default::default()
+        })
+        .unwrap();
+        let r = sys
+            .generate(GenRequest {
+                prompt: vec![42, 17],
+                max_new: 6,
+            })
+            .unwrap();
+        sys.shutdown();
+        r.tokens
+    };
+    assert_eq!(gen(9), gen(9));
+}
+
+#[test]
+fn replica_slices_come_from_the_partition_manager() {
+    if !have_artifacts() {
+        return;
+    }
+    let sys = ServingSystem::start(ServingConfig {
+        replicas: 3,
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(sys.replica_slices.len(), 3);
+    // slices must be distinct placements
+    let mut s = sys.replica_slices.clone();
+    s.dedup();
+    assert_eq!(s.len(), 3, "{:?}", sys.replica_slices);
+    sys.shutdown();
+}
