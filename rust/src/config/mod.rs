@@ -6,9 +6,16 @@
 //!   "mix": "ht2",
 //!   "scheme": "a",
 //!   "prediction": true,
-//!   "seed": 42
+//!   "seed": 42,
+//!   "arrivals": {"kind": "poisson", "rate": 0.5}
 //! }
 //! ```
+//!
+//! `arrivals` selects the submission scenario: absent (or
+//! `{"kind": "batch"}`) submits every job at t=0, the paper's setting;
+//! `{"kind": "poisson", "rate": R}` draws exponential inter-arrival
+//! gaps at `R` jobs/second; an array of numbers is an explicit arrival
+//! trace (one timestamp per job, sorted).
 
 use std::path::Path;
 
@@ -53,6 +60,62 @@ impl Scheme {
     }
 }
 
+/// How jobs enter the system.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalSpec {
+    /// Every job at t=0 (the paper's batch experiments).
+    Batch,
+    /// Poisson process: exponential inter-arrival gaps at `rate_jps`
+    /// jobs/second, seeded from the experiment seed.
+    Poisson { rate_jps: f64 },
+    /// Explicit arrival trace, one timestamp per job, sorted.
+    Trace { times: Vec<f64> },
+}
+
+impl ArrivalSpec {
+    /// Parse the `arrivals` field of a config document.
+    pub fn from_json(doc: &Json) -> Result<ArrivalSpec> {
+        match doc {
+            Json::Null => Ok(ArrivalSpec::Batch),
+            Json::Arr(xs) => {
+                let times: Vec<f64> = xs
+                    .iter()
+                    .map(|x| x.as_f64().context("arrival trace entries must be numbers"))
+                    .collect::<Result<_>>()?;
+                Ok(ArrivalSpec::Trace { times })
+            }
+            Json::Obj(_) => match doc.get("kind") {
+                Json::Null => Ok(ArrivalSpec::Batch),
+                Json::Str(kind) => match kind.as_str() {
+                    "batch" => Ok(ArrivalSpec::Batch),
+                    "poisson" => {
+                        let rate = doc
+                            .get("rate")
+                            .as_f64()
+                            .context("poisson arrivals need a 'rate' (jobs/s)")?;
+                        if rate <= 0.0 {
+                            bail!("poisson rate must be positive, got {rate}");
+                        }
+                        Ok(ArrivalSpec::Poisson { rate_jps: rate })
+                    }
+                    other => bail!("unknown arrival kind '{other}' (batch|poisson)"),
+                },
+                other => bail!("arrival 'kind' must be a string, got {other}"),
+            },
+            other => bail!("'arrivals' must be an object or an array, got {other}"),
+        }
+    }
+
+    /// Stamp the arrival times onto a mix.
+    pub fn apply(&self, mix: Mix, seed: u64) -> Mix {
+        match self {
+            ArrivalSpec::Batch => mix,
+            ArrivalSpec::Poisson { rate_jps } => mix.with_poisson_arrivals(*rate_jps, seed),
+            ArrivalSpec::Trace { times } => mix.with_arrival_trace(times.clone()),
+        }
+    }
+}
+
 /// A fully-resolved experiment.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -62,6 +125,8 @@ pub struct ExperimentConfig {
     /// Enable the time-series predictor (early restarts).
     pub prediction: bool,
     pub seed: u64,
+    /// Submission scenario (batch unless configured otherwise).
+    pub arrivals: ArrivalSpec,
 }
 
 impl ExperimentConfig {
@@ -75,7 +140,14 @@ impl ExperimentConfig {
             scheme,
             prediction,
             seed,
+            arrivals: ArrivalSpec::Batch,
         })
+    }
+
+    /// Builder: replace the submission scenario.
+    pub fn with_arrivals(mut self, arrivals: ArrivalSpec) -> Self {
+        self.arrivals = arrivals;
+        self
     }
 
     /// Parse from a JSON config document.
@@ -88,7 +160,27 @@ impl ExperimentConfig {
         let scheme = Scheme::parse(doc.get("scheme").as_str().unwrap_or("a"))?;
         let prediction = doc.get("prediction").as_bool().unwrap_or(false);
         let seed = doc.get("seed").as_u64().unwrap_or(DEFAULT_SEED);
-        Self::new(gpu, mix_name, scheme, prediction, seed)
+        let arrivals = ArrivalSpec::from_json(doc.get("arrivals"))?;
+        let cfg = Self::new(gpu, mix_name, scheme, prediction, seed)?;
+        // Validate a trace here so a bad config file is a clean error,
+        // not a panic inside build_mix's invariant asserts.
+        if let ArrivalSpec::Trace { times } = &arrivals {
+            let n = mix::by_name(&cfg.mix_name, seed)
+                .expect("validated at construction")
+                .jobs
+                .len();
+            if times.len() != n {
+                bail!(
+                    "arrival trace has {} entries but mix '{}' has {n} jobs",
+                    times.len(),
+                    cfg.mix_name
+                );
+            }
+            if !times.windows(2).all(|w| w[0] <= w[1]) {
+                bail!("arrival trace must be sorted (non-decreasing)");
+            }
+        }
+        Ok(cfg.with_arrivals(arrivals))
     }
 
     pub fn from_file(path: &Path) -> Result<Self> {
@@ -98,9 +190,10 @@ impl ExperimentConfig {
         Self::from_json(&doc)
     }
 
-    /// Materialize the job batch.
+    /// Materialize the job batch, with arrival times stamped on.
     pub fn build_mix(&self) -> Mix {
-        mix::by_name(&self.mix_name, self.seed).expect("validated at construction")
+        let m = mix::by_name(&self.mix_name, self.seed).expect("validated at construction");
+        self.arrivals.apply(m, self.seed)
     }
 }
 
@@ -139,6 +232,51 @@ mod tests {
         assert_eq!(c.scheme, Scheme::B);
         assert!(c.prediction);
         assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn arrival_spec_parses_all_shapes() {
+        let doc = Json::parse(r#"{"mix": "hm2"}"#).unwrap();
+        let c = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(c.arrivals, ArrivalSpec::Batch);
+        assert!(c.build_mix().is_batch());
+
+        let doc = Json::parse(
+            r#"{"mix": "hm2", "arrivals": {"kind": "poisson", "rate": 2.0}}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(c.arrivals, ArrivalSpec::Poisson { rate_jps: 2.0 });
+        let m = c.build_mix();
+        assert!(!m.is_batch());
+        assert_eq!(m.arrivals.len(), m.jobs.len());
+
+        let doc = Json::parse(r#"{"mix": "qwen2", "arrivals": [1.5]}"#).unwrap();
+        let c = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(
+            c.arrivals,
+            ArrivalSpec::Trace { times: vec![1.5] }
+        );
+        assert_eq!(c.build_mix().arrival_of(0), 1.5);
+    }
+
+    #[test]
+    fn arrival_spec_rejects_bad_inputs() {
+        for bad in [
+            r#"{"mix": "hm2", "arrivals": {"kind": "poisson"}}"#,
+            r#"{"mix": "hm2", "arrivals": {"kind": "poisson", "rate": -1}}"#,
+            r#"{"mix": "hm2", "arrivals": {"kind": "warp"}}"#,
+            r#"{"mix": "hm2", "arrivals": "soon"}"#,
+            // mis-typed kind must error, not silently run batch
+            r#"{"mix": "hm2", "arrivals": {"kind": 1}}"#,
+            // wrong trace length (Hm2 has 50 jobs)
+            r#"{"mix": "hm2", "arrivals": [1.0]}"#,
+            // unsorted trace (FLAN-T5 has 6 jobs)
+            r#"{"mix": "flan-t5", "arrivals": [2.0, 1.0, 3.0, 4.0, 5.0, 6.0]}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_json(&doc).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -24,15 +24,27 @@
 //! * [`predictor`] — time-series peak-memory prediction (paper Alg. 1).
 //! * [`trace`] — synthetic PyTorch-allocator traces for dynamic workloads.
 //! * [`workloads`] — Rodinia / DNN / LLM workload models and the paper's
-//!   job mixes (Tables 1–2).
-//! * [`sim`] — discrete-event GPU simulator: phases, PCIe sharing, power.
-//! * [`scheduler`] — baseline, Scheme A, Scheme B, OOM restart, predictive
-//!   early restart.
+//!   job mixes (Tables 1–2), plus per-job arrival times
+//!   (Poisson/trace generators) for online scenarios.
+//! * [`sim`] — discrete-event GPU simulator: phases, PCIe sharing, power,
+//!   horizon-bounded advancement for arrival interleaving.
+//! * [`scheduler`] — the policy/orchestrator split:
+//!   [`scheduler::SchedulingPolicy`] (the event-handler trait the
+//!   paper's schemes implement — `BaselinePolicy`, `SchemeAPolicy`,
+//!   `SchemeBPolicy`, each with OOM restart and predictive early
+//!   restart) and [`scheduler::Orchestrator`] (the event loop driving
+//!   one or more simulated GPUs). Batch entry points: the per-scheme
+//!   `run()` wrappers / [`scheduler::run_mix`]; online entry point: the
+//!   same, with arrival times stamped on the mix (`Mix::with_poisson_arrivals`,
+//!   `Mix::with_arrival_trace`, or the config `arrivals` field).
 //! * [`runtime`] — PJRT-CPU loading/execution of the AOT artifacts.
-//! * [`server`] — tokio JSON-lines job submission server.
-//! * [`metrics`] / [`report`] — evaluation metrics and paper-figure
-//!   harnesses.
-//! * [`config`] — TOML configuration for GPUs, mixes, and policies.
+//! * [`server`] — JSON-lines LLM serving front-end; replica placement
+//!   and request-latency accounting route through the scheduling
+//!   [`scheduler::Orchestrator`].
+//! * [`metrics`] / [`report`] — evaluation metrics (incl. p50/p99
+//!   queueing + turnaround percentiles) and paper-figure harnesses.
+//! * [`config`] — JSON configuration for GPUs, mixes, schemes, and
+//!   arrival scenarios.
 
 pub mod config;
 pub mod estimator;
@@ -40,8 +52,10 @@ pub mod metrics;
 pub mod mig;
 pub mod predictor;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod scheduler;
+#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod sim;
 pub mod trace;

@@ -3,15 +3,14 @@
 //! ```text
 //! migm run --mix ht2 --scheme a [--prediction] [--gpu a100] [--seed N]
 //! migm run --config experiment.json
-//! migm report <all|fig3|reach|prelim|fig4-rodinia|fig4-ml|fig4-llm|oom|seeds|table3|table4>
+//! migm report <all|fig3|reach|prelim|fig4-rodinia|fig4-ml|fig4-llm|oom|online|seeds|table3|table4>
 //! migm mig <list-configs|reachability> [--gpu a100]
 //! migm serve [--port 7700] [--replicas 2] [--variant decode_s128]
 //! migm client [--port 7700] --prompt 3,17,9 [--max-new 16]
 //! ```
 
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpStream;
 use std::path::PathBuf;
-use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -20,6 +19,7 @@ use migm::metrics::fx;
 use migm::mig::GpuSpec;
 use migm::report;
 use migm::scheduler;
+#[cfg(feature = "pjrt")]
 use migm::server::{serve, ServingConfig, ServingSystem};
 
 /// Tiny flag parser: `--key value` and `--switch`.
@@ -80,7 +80,10 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "run" => cmd_run(&args),
         "report" => cmd_report(&args),
         "mig" => cmd_mig(&args),
+        #[cfg(feature = "pjrt")]
         "serve" => cmd_serve(&args),
+        #[cfg(not(feature = "pjrt"))]
+        "serve" => bail!("this build lacks the 'pjrt' feature (PJRT runtime + serving)"),
         "client" => cmd_client(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -98,7 +101,7 @@ USAGE:
   migm run --mix <name> [--scheme baseline|a|b] [--prediction]
            [--gpu a100|a30|a100-80gb|h100] [--seed N] [--compare]
   migm run --config <file.json>
-  migm report <all|fig3|reach|prelim|fig4-rodinia|fig4-ml|fig4-llm|oom|seeds|table3|table4>
+  migm report <all|fig3|reach|prelim|fig4-rodinia|fig4-ml|fig4-llm|oom|online|seeds|table3|table4>
   migm mig <list-configs|reachability> [--gpu a100]
   migm serve [--port 7700] [--replicas 2] [--variant decode_s128]
   migm client [--port 7700] --prompt 3,17,9 [--max-new 16]
@@ -151,6 +154,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         m.oom_restarts,
         m.early_restarts
     );
+    let l = &r.latency;
+    println!(
+        "latency: queue p50={:.2}s p99={:.2}s turnaround p50={:.2}s p99={:.2}s",
+        l.p50_queue_s, l.p99_queue_s, l.p50_turnaround_s, l.p99_turnaround_s
+    );
     if args.has("compare") && cfg.scheme != Scheme::Baseline {
         let base_cfg = ExperimentConfig {
             scheme: Scheme::Baseline,
@@ -191,6 +199,14 @@ fn cmd_report(args: &Args) -> Result<()> {
         "fig4-ml" => report::fig4_ml(seed).1.render(),
         "fig4-llm" => report::fig4_llm(seed).1.render(),
         "oom" => report::oom_case_study(seed).1.render(),
+        "online" => {
+            let rate: f64 = args
+                .get("rate")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(0.25);
+            report::online_arrivals(seed, rate).1.render()
+        }
         "seeds" => report::seed_sweep(&[1, 2, 3, 4, 5, 6]).render(),
         "table3" => report::table3_myocyte().1.render(),
         "table4" => report::table4_nw().1.render(),
@@ -216,7 +232,10 @@ fn cmd_mig(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args) -> Result<()> {
+    use std::net::TcpListener;
+    use std::sync::Arc;
     let port: u16 = args.get("port").unwrap_or("7700").parse()?;
     let cfg = ServingConfig {
         replicas: args.get("replicas").unwrap_or("2").parse()?,

@@ -48,6 +48,60 @@ pub struct NormalizedMetrics {
     pub turnaround: f64,
 }
 
+/// Nearest-rank percentile of a sample; `q` in [0, 100]. Returns 0 for
+/// an empty sample. Sorts a copy — for repeated queries over one
+/// sample, sort once and use [`percentile_sorted`].
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, q)
+}
+
+/// Nearest-rank percentile of an already-sorted (ascending) sample.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Per-arrival latency distribution of a run (online scenarios): how
+/// long jobs queued before their final launch, and submit→completion
+/// turnaround. All in seconds.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LatencyStats {
+    pub mean_queue_s: f64,
+    pub p50_queue_s: f64,
+    pub p99_queue_s: f64,
+    pub mean_turnaround_s: f64,
+    pub p50_turnaround_s: f64,
+    pub p99_turnaround_s: f64,
+}
+
+impl LatencyStats {
+    /// Build from parallel per-job queueing-delay and turnaround samples
+    /// (each array is sorted once, then both percentiles read off it).
+    pub fn from_samples(queue_s: &[f64], turnaround_s: &[f64]) -> LatencyStats {
+        let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+        let sorted = |xs: &[f64]| {
+            let mut s = xs.to_vec();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s
+        };
+        let q = sorted(queue_s);
+        let t = sorted(turnaround_s);
+        LatencyStats {
+            mean_queue_s: mean(queue_s),
+            p50_queue_s: percentile_sorted(&q, 50.0),
+            p99_queue_s: percentile_sorted(&q, 99.0),
+            mean_turnaround_s: mean(turnaround_s),
+            p50_turnaround_s: percentile_sorted(&t, 50.0),
+            p99_turnaround_s: percentile_sorted(&t, 99.0),
+        }
+    }
+}
+
 /// Simple fixed-width table renderer for the report harnesses.
 pub struct Table {
     pub header: Vec<String>,
@@ -146,5 +200,31 @@ mod tests {
     #[test]
     fn fx_format() {
         assert_eq!(fx(1.589), "1.59x");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        // unsorted input is handled
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 50.0), 2.0);
+    }
+
+    #[test]
+    fn latency_stats_from_samples() {
+        let queue = [0.0, 1.0, 2.0, 3.0];
+        let turn = [10.0, 20.0, 30.0, 40.0];
+        let l = LatencyStats::from_samples(&queue, &turn);
+        assert!((l.mean_queue_s - 1.5).abs() < 1e-12);
+        assert_eq!(l.p50_queue_s, 1.0);
+        assert_eq!(l.p99_queue_s, 3.0);
+        assert!((l.mean_turnaround_s - 25.0).abs() < 1e-12);
+        assert_eq!(l.p50_turnaround_s, 20.0);
+        assert_eq!(l.p99_turnaround_s, 40.0);
     }
 }

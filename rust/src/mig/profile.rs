@@ -50,12 +50,19 @@ pub struct GpuSpec {
     /// Additive cudaFree bookkeeping per extra active instance (s)
     /// (paper Table 3: 0.58ms -> 24.7ms at 7 slices).
     pub free_overhead_per_instance_s: f64,
+    /// Distinct profile memory sizes, ascending — the GPU's size-class
+    /// ladder. Cached at construction; schedulers classify jobs against
+    /// it on every placement decision, so it must not be recomputed per
+    /// call. Private so it cannot drift from `profiles`: mutate
+    /// `profiles` only inside this module, followed by
+    /// [`GpuSpec::rebuild_ladder`]; read via [`GpuSpec::ladder`].
+    size_ladder: Vec<f64>,
 }
 
 impl GpuSpec {
     /// NVIDIA A100 40GB PCIe — the paper's main testbed.
     pub fn a100_40gb() -> Self {
-        GpuSpec {
+        let mut spec = GpuSpec {
             name: "A100-40GB".into(),
             total_mem_slices: 8,
             total_compute: 7,
@@ -103,12 +110,15 @@ impl GpuSpec {
             reconfig_op_s: 0.1,
             alloc_overhead_per_instance: 0.5,
             free_overhead_per_instance_s: 0.004,
-            }
+            size_ladder: Vec::new(),
+        };
+        spec.rebuild_ladder();
+        spec
     }
 
     /// NVIDIA A30 24GB — used in the paper's §1 preliminary experiment.
     pub fn a30_24gb() -> Self {
-        GpuSpec {
+        let mut spec = GpuSpec {
             name: "A30-24GB".into(),
             total_mem_slices: 4,
             total_compute: 4,
@@ -142,7 +152,10 @@ impl GpuSpec {
             reconfig_op_s: 0.1,
             alloc_overhead_per_instance: 0.5,
             free_overhead_per_instance_s: 0.004,
-        }
+            size_ladder: Vec::new(),
+        };
+        spec.rebuild_ladder();
+        spec
     }
 
     /// NVIDIA A100 80GB — same geometry as A100-40GB, 10GB memory slices.
@@ -156,6 +169,7 @@ impl GpuSpec {
             p.mem_gb *= 2.0;
         }
         spec.max_power_w = 300.0;
+        spec.rebuild_ladder();
         spec
     }
 
@@ -244,6 +258,28 @@ impl GpuSpec {
     pub fn profile_index(&self, name: &str) -> Option<usize> {
         self.profiles.iter().position(|p| p.name == name)
     }
+
+    /// Recompute the cached size ladder. Must be called after any
+    /// mutation of `profiles` (the named constructors already do).
+    pub fn rebuild_ladder(&mut self) {
+        let mut sizes: Vec<f64> = self.profiles.iter().map(|p| p.mem_gb).collect();
+        sizes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sizes.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        self.size_ladder = sizes;
+    }
+
+    /// The cached size-class ladder (distinct memory sizes, ascending).
+    pub fn ladder(&self) -> &[f64] {
+        &self.size_ladder
+    }
+
+    /// Class index of a memory requirement on this GPU's ladder.
+    pub fn class_of(&self, mem_gb: f64) -> usize {
+        self.size_ladder
+            .iter()
+            .position(|&s| mem_gb <= s + 1e-9)
+            .unwrap_or(self.size_ladder.len().saturating_sub(1))
+    }
 }
 
 #[cfg(test)]
@@ -280,6 +316,28 @@ mod tests {
         assert_eq!(spec.next_larger_profile(2), Some(4));
         assert_eq!(spec.next_larger_profile(3), Some(4));
         assert_eq!(spec.next_larger_profile(4), None);
+    }
+
+    #[test]
+    fn ladder_is_cached_and_correct_for_every_model() {
+        for name in ["a100", "a30", "h100", "a100-80gb"] {
+            let spec = GpuSpec::by_name(name).unwrap();
+            let mut expect: Vec<f64> = spec.profiles.iter().map(|p| p.mem_gb).collect();
+            expect.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            expect.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+            assert_eq!(spec.ladder(), &expect[..], "{name}");
+        }
+        assert_eq!(GpuSpec::a100_40gb().ladder(), &[5.0, 10.0, 20.0, 40.0]);
+        assert_eq!(GpuSpec::a100_80gb().ladder(), &[10.0, 20.0, 40.0, 80.0]);
+    }
+
+    #[test]
+    fn class_of_walks_the_cached_ladder() {
+        let spec = GpuSpec::a100_40gb();
+        assert_eq!(spec.class_of(0.4), 0);
+        assert_eq!(spec.class_of(6.0), 1);
+        assert_eq!(spec.class_of(17.0), 2);
+        assert_eq!(spec.class_of(99.0), 3);
     }
 
     #[test]

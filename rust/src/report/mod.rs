@@ -313,10 +313,7 @@ pub fn table4_nw() -> (Table4Result, Table) {
     while s.advance().is_some() {}
     let contended = s.now();
     // batch of 21 under scheme A vs baseline
-    let m = mix::Mix {
-        name: "nw-x21",
-        jobs: (0..21).map(|_| job.clone()).collect(),
-    };
+    let m = mix::Mix::batch("nw-x21", (0..21).map(|_| job.clone()).collect());
     let base = scheduler::baseline::run(spec.clone(), &m);
     let a = scheduler::scheme_a::run(spec.clone(), &m, false);
     let thr = a.metrics.throughput_jps / base.metrics.throughput_jps;
@@ -389,6 +386,58 @@ pub fn preliminary_a30(seed: u64) -> (PreliminaryResult, Table) {
         String::new(),
     ]);
     (res, t)
+}
+
+/// E11 — online arrivals: one row per policy over a Poisson arrival
+/// stream, reporting throughput/energy plus the per-arrival latency
+/// percentiles the batch experiments cannot express.
+#[derive(Debug, Clone)]
+pub struct OnlineRow {
+    pub policy: &'static str,
+    pub metrics: BatchMetrics,
+    pub latency: crate::metrics::LatencyStats,
+}
+
+/// Run the three policies over the same Poisson-arrival Ht2 stream
+/// (`rate_jps` jobs/second) through the orchestrator.
+pub fn online_arrivals(seed: u64, rate_jps: f64) -> (Vec<OnlineRow>, Table) {
+    let spec = Arc::new(GpuSpec::a100_40gb());
+    let m = mix::ht2(seed).with_poisson_arrivals(rate_jps, seed);
+    let mut rows = Vec::new();
+    for (policy, scheme) in [
+        ("baseline", Scheme::Baseline),
+        ("scheme-A", Scheme::A),
+        ("scheme-B", Scheme::B),
+    ] {
+        let r = run_mix(spec.clone(), &m, scheme, false);
+        rows.push(OnlineRow {
+            policy,
+            metrics: r.metrics,
+            latency: r.latency,
+        });
+    }
+    let mut t = Table::new(&[
+        "policy",
+        "makespan (s)",
+        "throughput (j/s)",
+        "energy (J)",
+        "queue p50/p99 (s)",
+        "turnaround p50/p99 (s)",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.policy.to_string(),
+            format!("{:.1}", r.metrics.makespan_s),
+            format!("{:.3}", r.metrics.throughput_jps),
+            format!("{:.0}", r.metrics.energy_j),
+            format!("{:.2} / {:.2}", r.latency.p50_queue_s, r.latency.p99_queue_s),
+            format!(
+                "{:.2} / {:.2}",
+                r.latency.p50_turnaround_s, r.latency.p99_turnaround_s
+            ),
+        ]);
+    }
+    (rows, t)
 }
 
 /// Seed-sensitivity sweep over the heterogeneous mixes (EXPERIMENTS.md
@@ -484,6 +533,30 @@ mod tests {
         // paper: +20.6% throughput, +6.3% energy
         assert!(r.throughput_gain > 1.02, "thr {}", r.throughput_gain);
         assert!(r.energy_gain > 1.0, "energy {}", r.energy_gain);
+    }
+
+    #[test]
+    fn online_report_covers_all_policies_with_latency() {
+        let (rows, t) = online_arrivals(DEFAULT_SEED, 0.25);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(t.rows.len(), 3);
+        for r in &rows {
+            assert_eq!(r.metrics.n_jobs, 18); // Ht2
+            assert!(r.latency.p99_turnaround_s >= r.latency.p50_turnaround_s);
+            assert!(r.latency.p99_queue_s >= r.latency.p50_queue_s);
+        }
+        // MIG policies must not queue arrivals longer than the
+        // sequential baseline does.
+        let base = &rows[0];
+        for r in &rows[1..] {
+            assert!(
+                r.latency.p99_queue_s <= base.latency.p99_queue_s * 1.5 + 5.0,
+                "{}: queue p99 {} vs baseline {}",
+                r.policy,
+                r.latency.p99_queue_s,
+                base.latency.p99_queue_s
+            );
+        }
     }
 
     #[test]

@@ -1,37 +1,140 @@
-//! The paper's baseline: a non-partitioned GPU executing the batch
-//! sequentially, one workload at a time (§5, "the baseline scheduler for
-//! all experiments").
+//! The paper's baseline: a non-partitioned GPU executing jobs
+//! sequentially, one at a time (§5, "the baseline scheduler for all
+//! experiments") — now a [`SchedulingPolicy`] so the same logic serves
+//! batch runs and online arrival streams through the
+//! [`Orchestrator`](super::Orchestrator).
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::mig::GpuSpec;
-use crate::sim::{GpuSim, SimEvent};
+use crate::mig::{GpuSpec, InstanceId};
 use crate::workloads::mix::Mix;
 
-use super::{finalize, largest_profile, RunResult};
+use super::policy::{Action, CreateRequest, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
+use super::{largest_profile, Orchestrator, PendingJob, RunResult};
 
-/// Run the batch sequentially on the full GPU.
-pub fn run(spec: Arc<GpuSpec>, mix: &Mix) -> RunResult {
-    let mut sim = GpuSim::new(spec.clone(), false);
-    let full = largest_profile(&spec);
-    let inst = sim.mgr.alloc(full).expect("empty GPU fits the full profile");
-    let n = mix.jobs.len();
-    for job in &mix.jobs {
-        sim.launch(job.clone(), inst, 0.0);
-        loop {
-            match sim.advance() {
-                Some(SimEvent::Finished { .. }) => break,
-                Some(SimEvent::Oom { spec: s, .. }) => {
-                    // Can only happen if a job exceeds the whole GPU.
-                    panic!("job {} OOMs on the full GPU", s.name);
-                }
-                Some(_) => {}
-                None => panic!("job vanished"),
-            }
+/// Sequential full-GPU policy: claims the whole GPU once (instantly —
+/// the baseline never pays reconfiguration latency) and runs jobs
+/// strictly in arrival order.
+pub struct BaselinePolicy {
+    gpu: GpuId,
+    queue: VecDeque<PendingJob>,
+    inst: Option<InstanceId>,
+}
+
+impl BaselinePolicy {
+    pub fn new() -> Self {
+        BaselinePolicy {
+            gpu: 0,
+            queue: VecDeque::new(),
+            inst: None,
         }
     }
-    sim.mgr.free(inst).unwrap();
-    finalize(&sim, n)
+
+    /// Claim the full GPU with no driver window (legacy-parity: the
+    /// baseline's single allocation is free and instantaneous).
+    fn claim_full_gpu(&self, ctx: &PolicyCtx) -> Action {
+        Action::Reconfig {
+            gpu: self.gpu,
+            destroy: Vec::new(),
+            create: CreateRequest::FillNow {
+                candidates: vec![largest_profile(ctx.spec(self.gpu))],
+            },
+            ops: Some(0),
+        }
+    }
+
+    fn launch_next(&mut self) -> Vec<Action> {
+        let Some(inst) = self.inst else {
+            return Vec::new();
+        };
+        match self.queue.pop_front() {
+            Some(job) => vec![Action::Launch {
+                gpu: self.gpu,
+                job,
+                instance: inst,
+            }],
+            None => Vec::new(),
+        }
+    }
+}
+
+impl Default for BaselinePolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SchedulingPolicy for BaselinePolicy {
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+
+    fn on_submit(&mut self, ctx: &PolicyCtx, job: PendingJob) -> Vec<Action> {
+        self.queue.push_back(job);
+        // Online: an idle GPU takes the arrival immediately.
+        if self.inst.is_some() && ctx.gpu(self.gpu).n_running() == 0 {
+            return self.launch_next();
+        }
+        Vec::new()
+    }
+
+    fn on_job_finish(&mut self, _ctx: &PolicyCtx, _ev: JobEvent) -> Vec<Action> {
+        self.launch_next()
+    }
+
+    fn on_oom(&mut self, _ctx: &PolicyCtx, ev: JobEvent, _iter: usize, _mem_gb: f64) -> Vec<Action> {
+        panic!("job {} OOMs on the full GPU", ev.job.name);
+    }
+
+    fn on_early_restart_signal(
+        &mut self,
+        _ctx: &PolicyCtx,
+        mut ev: JobEvent,
+        _iter: usize,
+        predicted_peak_gb: f64,
+    ) -> Vec<Action> {
+        // The full GPU is the largest slice there is; a restart cannot
+        // move anywhere bigger. Requeue at the back with the refined
+        // estimate (only reachable when prediction is enabled).
+        ev.job.est.mem_gb = predicted_peak_gb;
+        self.queue.push_back(PendingJob {
+            spec: ev.job,
+            submit_time: ev.submit_time,
+        });
+        self.launch_next()
+    }
+
+    fn on_reconfig_done(
+        &mut self,
+        _ctx: &PolicyCtx,
+        _gpu: GpuId,
+        created: &[InstanceId],
+    ) -> Vec<Action> {
+        assert!(!created.is_empty(), "full-GPU profile must be placeable");
+        self.inst = Some(created[0]);
+        self.launch_next()
+    }
+
+    fn on_stalled(&mut self, ctx: &PolicyCtx) -> Vec<Action> {
+        if self.queue.is_empty() {
+            return Vec::new();
+        }
+        match self.inst {
+            None => vec![self.claim_full_gpu(ctx)],
+            Some(_) => self.launch_next(),
+        }
+    }
+
+    fn has_pending_work(&self) -> bool {
+        !self.queue.is_empty()
+    }
+}
+
+/// Run the mix sequentially on the full GPU (batch or online, depending
+/// on the mix's arrival times).
+pub fn run(spec: Arc<GpuSpec>, mix: &Mix) -> RunResult {
+    Orchestrator::single(spec, false, BaselinePolicy::new()).run_mix(mix)
 }
 
 #[cfg(test)]
@@ -60,5 +163,20 @@ mod tests {
         assert_eq!(r.metrics.n_jobs, 1);
         assert_eq!(r.metrics.oom_restarts, 0);
         assert!(r.metrics.makespan_s > 10.0);
+    }
+
+    #[test]
+    fn baseline_serves_online_arrivals_in_order() {
+        let spec = Arc::new(GpuSpec::a100_40gb());
+        let m = mix::hm2();
+        let n = m.jobs.len();
+        let m = m.with_arrival_trace((0..n).map(|i| i as f64 * 5.0).collect());
+        let r = run(spec, &m);
+        assert_eq!(r.records.len(), n);
+        // gaussian solo ~2.4s < 5s gap: each job starts at its arrival
+        for (i, rec) in r.records.iter().enumerate() {
+            assert!((rec.submit_time - i as f64 * 5.0).abs() < 1e-9);
+            assert!(rec.start_time - rec.submit_time < 1.0, "job {i} queued too long");
+        }
     }
 }

@@ -1,0 +1,289 @@
+//! The pre-orchestrator scheduler loops, preserved verbatim as the
+//! golden reference for the policy-parity tests (`super::parity`). The
+//! public `run()` entry points now drive the trait-based policies
+//! through the [`super::Orchestrator`]; these monolithic loops exist
+//! only to prove, mix by mix, that the rewrite is bit-for-bit faithful.
+//!
+//! Do not extend this module — new scheduling behavior belongs in
+//! [`super::policy`] implementations.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::mig::{GpuSpec, InstanceId};
+use crate::sim::{GpuSim, SimEvent};
+use crate::workloads::mix::Mix;
+
+use super::{
+    bump_estimate_after_oom, class_of, finalize, largest_profile, target_profile, PendingJob,
+    RunResult,
+};
+
+/// Legacy sequential baseline (one full-GPU instance, jobs in order).
+pub fn baseline_run(spec: Arc<GpuSpec>, mix: &Mix) -> RunResult {
+    let mut sim = GpuSim::new(spec.clone(), false);
+    let full = largest_profile(&spec);
+    let inst = sim.mgr.alloc(full).expect("empty GPU fits the full profile");
+    let n = mix.jobs.len();
+    for job in &mix.jobs {
+        sim.launch(job.clone(), inst, 0.0);
+        loop {
+            match sim.advance() {
+                Some(SimEvent::Finished { .. }) => break,
+                Some(SimEvent::Oom { spec: s, .. }) => {
+                    panic!("job {} OOMs on the full GPU", s.name);
+                }
+                Some(_) => {}
+                None => panic!("job vanished"),
+            }
+        }
+    }
+    sim.mgr.free(inst).unwrap();
+    finalize(&sim, n)
+}
+
+/// Profiles whose memory equals the class cap, preferring more compute.
+fn class_profiles(spec: &GpuSpec, cap_gb: f64) -> Vec<usize> {
+    let mut ps: Vec<usize> = spec
+        .profiles
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| (p.mem_gb - cap_gb).abs() < 1e-9)
+        .map(|(i, _)| i)
+        .collect();
+    ps.sort_by_key(|&i| std::cmp::Reverse(spec.profiles[i].compute_slices));
+    ps
+}
+
+/// Legacy Scheme A (Algorithm 4) batch loop.
+pub fn scheme_a_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResult {
+    let mut sim = GpuSim::new(spec.clone(), prediction);
+    let ladder = super::size_ladder(&spec);
+    let n_jobs = mix.jobs.len();
+
+    let mut groups: BTreeMap<usize, VecDeque<PendingJob>> = BTreeMap::new();
+    for job in &mix.jobs {
+        let class = class_of(&spec, job.est.mem_gb.max(0.0));
+        groups.entry(class).or_default().push_back(PendingJob {
+            spec: job.clone(),
+            submit_time: 0.0,
+        });
+    }
+
+    let mut held: Vec<InstanceId> = Vec::new();
+    while let Some((&class, _)) = groups.iter().find(|(_, q)| !q.is_empty()) {
+        let queue = groups.remove(&class).unwrap();
+        let destroyed = held.len();
+        for id in held.drain(..) {
+            sim.mgr.free(id).unwrap();
+        }
+        let cap = ladder[class.min(ladder.len() - 1)];
+        let candidates = class_profiles(&spec, cap);
+        let mut instances: Vec<InstanceId> = Vec::new();
+        loop {
+            let mut placed = false;
+            for &p in &candidates {
+                if sim.mgr.can_alloc(p) {
+                    instances.push(sim.mgr.alloc(p).unwrap());
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                break;
+            }
+        }
+        assert!(!instances.is_empty(), "class {class} produced no slices");
+        sim.begin_reconfig(destroyed + instances.len());
+        while sim.is_reconfiguring() {
+            match sim.advance() {
+                Some(SimEvent::ReconfigDone) => break,
+                Some(_) => {}
+                None => break,
+            }
+        }
+
+        let k = instances.len();
+        let mut local: Vec<VecDeque<PendingJob>> = vec![VecDeque::new(); k];
+        for (i, job) in queue.into_iter().enumerate() {
+            local[i % k].push_back(job);
+        }
+        for (slot, inst) in instances.iter().enumerate() {
+            if let Some(pj) = local[slot].pop_front() {
+                sim.launch(pj.spec, *inst, pj.submit_time);
+            }
+        }
+
+        loop {
+            let all_empty = local.iter().all(|q| q.is_empty());
+            if all_empty && sim.n_running() == 0 {
+                break;
+            }
+            match sim.advance() {
+                Some(SimEvent::Finished { instance, .. }) => {
+                    let slot = instances.iter().position(|&i| i == instance).unwrap();
+                    if let Some(pj) = local[slot].pop_front() {
+                        sim.launch(pj.spec, instance, pj.submit_time);
+                    }
+                }
+                Some(SimEvent::Oom {
+                    spec: mut job_spec,
+                    instance,
+                    ..
+                }) => {
+                    let cur_prof = sim.mgr.profile_of(instance).unwrap();
+                    bump_estimate_after_oom(&spec, &mut job_spec, cur_prof);
+                    let new_class = class_of(&spec, job_spec.est.mem_gb);
+                    groups.entry(new_class).or_default().push_back(PendingJob {
+                        spec: job_spec,
+                        submit_time: 0.0,
+                    });
+                    let slot = instances.iter().position(|&i| i == instance).unwrap();
+                    if let Some(pj) = local[slot].pop_front() {
+                        sim.launch(pj.spec, instance, pj.submit_time);
+                    }
+                }
+                Some(SimEvent::Preempted {
+                    spec: mut job_spec,
+                    instance,
+                    predicted_peak_gb,
+                    ..
+                }) => {
+                    job_spec.est.mem_gb = predicted_peak_gb;
+                    let new_class = class_of(&spec, predicted_peak_gb);
+                    groups.entry(new_class).or_default().push_back(PendingJob {
+                        spec: job_spec,
+                        submit_time: 0.0,
+                    });
+                    let slot = instances.iter().position(|&i| i == instance).unwrap();
+                    if let Some(pj) = local[slot].pop_front() {
+                        sim.launch(pj.spec, instance, pj.submit_time);
+                    }
+                }
+                Some(SimEvent::ReconfigDone) => {}
+                None => break,
+            }
+        }
+        held = instances;
+    }
+    for id in held.drain(..) {
+        sim.mgr.free(id).unwrap();
+    }
+    finalize(&sim, n_jobs)
+}
+
+/// Legacy Scheme B (Algorithm 5) batch loop.
+pub fn scheme_b_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResult {
+    let mut sim = GpuSim::new(spec.clone(), prediction);
+    let n_jobs = mix.jobs.len();
+    let mut queue: VecDeque<PendingJob> = mix
+        .jobs
+        .iter()
+        .map(|j| PendingJob {
+            spec: j.clone(),
+            submit_time: 0.0,
+        })
+        .collect();
+    let mut idle: Vec<InstanceId> = Vec::new();
+    let mut pending_launch: Option<(PendingJob, usize)> = None;
+
+    loop {
+        while pending_launch.is_none() {
+            let Some(head) = queue.front() else { break };
+            let prof = target_profile(&spec, &head.spec);
+            let want_mem = spec.profiles[prof].mem_gb;
+
+            if let Some(pos) = idle
+                .iter()
+                .position(|&i| (sim.mgr.mem_gb_of(i).unwrap() - want_mem).abs() < 1e-9)
+            {
+                let inst = idle.swap_remove(pos);
+                let pj = queue.pop_front().unwrap();
+                sim.launch(pj.spec, inst, pj.submit_time);
+                continue;
+            }
+            if !sim.is_reconfiguring() && sim.mgr.can_alloc(prof) {
+                sim.begin_reconfig(1);
+                pending_launch = Some((queue.pop_front().unwrap(), prof));
+                break;
+            }
+            if !sim.is_reconfiguring() {
+                if let Some(plan) = sim
+                    .mgr
+                    .plan_reconfig(prof, &idle)
+                    .filter(|p| p.destroy.len() <= 2)
+                {
+                    for id in &plan.destroy {
+                        idle.retain(|i| i != id);
+                        sim.mgr.free(*id).unwrap();
+                    }
+                    sim.begin_reconfig(plan.ops);
+                    pending_launch = Some((queue.pop_front().unwrap(), prof));
+                    break;
+                }
+            }
+            break;
+        }
+
+        match sim.advance() {
+            Some(SimEvent::Finished { instance, .. }) => {
+                idle.push(instance);
+            }
+            Some(SimEvent::Oom {
+                spec: mut job_spec,
+                instance,
+                ..
+            }) => {
+                let cur_prof = sim.mgr.profile_of(instance).unwrap();
+                bump_estimate_after_oom(&spec, &mut job_spec, cur_prof);
+                idle.push(instance);
+                queue.push_back(PendingJob {
+                    spec: job_spec,
+                    submit_time: 0.0,
+                });
+            }
+            Some(SimEvent::Preempted {
+                spec: mut job_spec,
+                instance,
+                predicted_peak_gb,
+                ..
+            }) => {
+                job_spec.est.mem_gb = predicted_peak_gb;
+                idle.push(instance);
+                queue.push_back(PendingJob {
+                    spec: job_spec,
+                    submit_time: 0.0,
+                });
+            }
+            Some(SimEvent::ReconfigDone) => {
+                if let Some((pj, prof)) = pending_launch.take() {
+                    let inst = sim
+                        .mgr
+                        .alloc(prof)
+                        .expect("planned reconfiguration must make the profile placeable");
+                    sim.launch(pj.spec, inst, pj.submit_time);
+                }
+            }
+            None => {
+                if queue.is_empty() && pending_launch.is_none() {
+                    break;
+                }
+                if !idle.is_empty() {
+                    let ops = idle.len();
+                    for id in idle.drain(..) {
+                        sim.mgr.free(id).unwrap();
+                    }
+                    sim.begin_reconfig(ops);
+                    continue;
+                }
+                let head = queue.front().map(|p| p.spec.name.clone());
+                panic!("deadlock: job {head:?} cannot be placed on an empty GPU");
+            }
+        }
+    }
+    for id in idle.drain(..) {
+        sim.mgr.free(id).unwrap();
+    }
+    finalize(&sim, n_jobs)
+}

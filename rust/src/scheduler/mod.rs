@@ -1,9 +1,40 @@
-//! Batch schedulers (paper §4.3): the sequential baseline, Scheme A
-//! (schedule by size, Algorithm 4) and Scheme B (FIFO with dynamic
-//! reconfiguration, Algorithm 5) — each with OOM restart and optional
-//! predictive early restart for dynamic workloads.
+//! Scheduling: policies, the event-driven orchestrator, and the shared
+//! placement rules.
+//!
+//! The layer is split in two (the policy/orchestrator inversion):
+//!
+//! * [`policy`] — the [`SchedulingPolicy`] trait: a stateful event
+//!   handler (`on_submit`, `on_job_finish`, `on_oom`,
+//!   `on_early_restart_signal`, `on_reconfig_done`, `on_stalled`)
+//!   returning placement/reconfiguration [`Action`]s.
+//! * [`orchestrator`] — the [`Orchestrator`]: owns the event loop, one
+//!   or more [`GpuSim`]s, and the arrival queue; applies policy
+//!   actions; also carries the serving front-end's placement and
+//!   submission accounting.
+//!
+//! The paper's schemes are policy implementations:
+//!
+//! * [`baseline::BaselinePolicy`] — sequential full-GPU execution.
+//! * [`scheme_a::SchemeAPolicy`] — schedule by size (Algorithm 4).
+//! * [`scheme_b::SchemeBPolicy`] — FIFO with dynamic reconfiguration
+//!   (Algorithm 5).
+//!
+//! All three handle OOM restart and (Schemes A/B) predictive early
+//! restart for dynamic workloads. Each module keeps a thin `run()`
+//! wrapper for the batch entry point; the same policies run online
+//! scenarios when the [`Mix`](crate::workloads::mix::Mix) carries
+//! arrival times (`Mix::with_poisson_arrivals` /
+//! `Mix::with_arrival_trace`). The [`legacy`] module (tests only)
+//! preserves the pre-orchestrator loops as the golden reference for the
+//! [`parity`] tests.
 
 pub mod baseline;
+#[cfg(test)]
+pub mod legacy;
+pub mod orchestrator;
+#[cfg(test)]
+mod parity;
+pub mod policy;
 pub mod scheme_a;
 pub mod scheme_b;
 
@@ -11,21 +42,27 @@ use std::sync::Arc;
 
 use crate::config::{ExperimentConfig, Scheme};
 use crate::estimator::EstimationMethod;
-use crate::metrics::BatchMetrics;
+use crate::metrics::{BatchMetrics, LatencyStats};
 use crate::mig::GpuSpec;
 use crate::sim::{GpuSim, JobRecord, SimCounters};
 use crate::workloads::mix::Mix;
 use crate::workloads::JobSpec;
 
-/// Result of one batch run.
+pub use orchestrator::Orchestrator;
+pub use policy::{Action, CreateRequest, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
+
+/// Result of one run (batch or online).
 #[derive(Debug, Clone)]
 pub struct RunResult {
     pub metrics: BatchMetrics,
     pub records: Vec<JobRecord>,
     pub counters: SimCounters,
+    /// Per-arrival queueing/turnaround percentiles (meaningful for
+    /// online runs; degenerate-but-correct for batch runs).
+    pub latency: LatencyStats,
 }
 
-/// A queued job (batch submission: all at t=0).
+/// A queued job with its submission time (0 for batch submission).
 #[derive(Debug, Clone)]
 pub struct PendingJob {
     pub spec: JobSpec,
@@ -68,20 +105,17 @@ pub fn largest_profile(spec: &GpuSpec) -> usize {
 }
 
 /// The GPU's distinct memory sizes, ascending (its size-class ladder).
+/// Backward-compatible wrapper over the ladder cached on [`GpuSpec`] at
+/// construction; the hot-path accessors are [`GpuSpec::ladder`] (no
+/// allocation) and [`GpuSpec::class_of`], which the policies use
+/// directly.
 pub fn size_ladder(spec: &GpuSpec) -> Vec<f64> {
-    let mut sizes: Vec<f64> = spec.profiles.iter().map(|p| p.mem_gb).collect();
-    sizes.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    sizes.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
-    sizes
+    spec.ladder().to_vec()
 }
 
 /// Class index of a memory requirement on this GPU's ladder.
 pub fn class_of(spec: &GpuSpec, mem_gb: f64) -> usize {
-    let ladder = size_ladder(spec);
-    ladder
-        .iter()
-        .position(|&s| mem_gb <= s + 1e-9)
-        .unwrap_or(ladder.len() - 1)
+    spec.class_of(mem_gb)
 }
 
 /// Grow a requeued job's estimate after an OOM on `cur_profile`
@@ -93,7 +127,10 @@ pub fn bump_estimate_after_oom(spec: &GpuSpec, job: &mut JobSpec, cur_profile: u
     }
 }
 
-/// Finalize metrics from a finished sim.
+/// Finalize metrics from a finished sim. `n_jobs` is the number of
+/// *submitted* jobs; completion records may differ (e.g. restart
+/// duplicates), so the per-job means divide by `n_jobs`, not by the
+/// record count.
 pub fn finalize(sim: &GpuSim, n_jobs: usize) -> RunResult {
     let makespan = sim.now().max(1e-9);
     let records = sim.records.clone();
@@ -101,7 +138,9 @@ pub fn finalize(sim: &GpuSim, n_jobs: usize) -> RunResult {
         .iter()
         .map(|r| r.finish_time - r.submit_time)
         .sum::<f64>()
-        / records.len().max(1) as f64;
+        / n_jobs.max(1) as f64;
+    let queue_s: Vec<f64> = records.iter().map(|r| r.start_time - r.submit_time).collect();
+    let turn_s: Vec<f64> = records.iter().map(|r| r.finish_time - r.submit_time).collect();
     let energy = sim.energy_j();
     let metrics = BatchMetrics {
         n_jobs,
@@ -119,10 +158,12 @@ pub fn finalize(sim: &GpuSim, n_jobs: usize) -> RunResult {
         metrics,
         records,
         counters: sim.counters,
+        latency: LatencyStats::from_samples(&queue_s, &turn_s),
     }
 }
 
-/// Run a mix under a scheme.
+/// Run a mix under a scheme (batch, or online if the mix carries
+/// arrival times).
 pub fn run_mix(
     spec: Arc<GpuSpec>,
     mix: &Mix,
@@ -183,5 +224,33 @@ mod tests {
         assert_eq!(job.est.mem_gb, 20.0);
         bump_estimate_after_oom(&spec, &mut job, 4);
         assert_eq!(job.est.mem_gb, 40.0);
+    }
+
+    #[test]
+    fn finalize_divides_turnaround_by_submitted_jobs() {
+        // Regression pin: a record set smaller (or larger) than n_jobs
+        // must average over n_jobs, not over the record count.
+        use std::sync::Arc;
+        let spec = Arc::new(GpuSpec::a100_40gb());
+        let mut sim = GpuSim::new(spec.clone(), false);
+        let full = largest_profile(&spec);
+        let inst = sim.mgr.alloc(full).unwrap();
+        let job = rodinia::by_name("gaussian").unwrap().job(7);
+        for _ in 0..2 {
+            sim.launch(job.clone(), inst, 0.0);
+            while sim.advance().is_some() {}
+        }
+        assert_eq!(sim.records.len(), 2);
+        let sum: f64 = sim
+            .records
+            .iter()
+            .map(|r| r.finish_time - r.submit_time)
+            .sum();
+        // pretend 4 jobs were submitted: the mean must halve
+        let r4 = finalize(&sim, 4);
+        assert!((r4.metrics.avg_turnaround_s - sum / 4.0).abs() < 1e-12);
+        let r2 = finalize(&sim, 2);
+        assert!((r2.metrics.avg_turnaround_s - sum / 2.0).abs() < 1e-12);
+        assert!((r4.metrics.avg_turnaround_s * 2.0 - r2.metrics.avg_turnaround_s).abs() < 1e-12);
     }
 }

@@ -1,0 +1,700 @@
+//! The event-driven scheduling orchestrator.
+//!
+//! Owns one or more [`GpuSim`]s and the arrival queue, advances
+//! simulated time, and feeds events to a [`SchedulingPolicy`], applying
+//! the [`Action`]s it returns. This is the single entry point for batch
+//! runs (all arrivals at t=0 — the paper's experiments), online
+//! open-loop runs (Poisson / trace arrivals), and the serving
+//! front-end's placement + submission accounting
+//! ([`reserve_instances`](Orchestrator::reserve_instances) /
+//! [`submit_external`](Orchestrator::submit_external)).
+//!
+//! Multi-GPU note: the sims are independent (no cross-GPU contention is
+//! modeled). The orchestrator always advances the least-advanced busy
+//! GPU, bounded by both the next undelivered arrival and the other
+//! busy GPUs' clocks (leapfrog), delivers an arrival only once the
+//! least-advanced *busy* clock reaches it, and fast-forwards a
+//! quiescent GPU to global time before acting on it. Together these
+//! keep every launch at or after its job's arrival time on the target
+//! GPU's own clock. The remaining approximation: when two busy GPUs'
+//! clocks tie, their next events may be handed to the policy slightly
+//! out of global order (bounded by one simulator event; irrelevant to
+//! the shipped single-GPU policies).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::metrics::LatencyStats;
+use crate::mig::{GpuSpec, InstanceId, MigError};
+use crate::sim::{GpuSim, JobRecord, SimEvent};
+use crate::workloads::mix::Mix;
+use crate::workloads::JobSpec;
+
+use super::policy::{Action, CreateRequest, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
+use super::{finalize, PendingJob, RunResult};
+
+const EPS: f64 = 1e-9;
+
+/// Sliding-window size for the external (server) submission ledger:
+/// latency percentiles are computed over at least this many most-recent
+/// completions (see [`Orchestrator::complete_external`]).
+pub const EXTERNAL_LEDGER_KEEP: usize = 4096;
+
+/// An externally-driven (wall-clock) job tracked by the orchestrator on
+/// behalf of the serving front-end.
+struct ExternalJob {
+    name: String,
+    submit_s: f64,
+    start_s: Option<f64>,
+}
+
+/// The event loop that drives policies over one or more simulated GPUs.
+pub struct Orchestrator<P: SchedulingPolicy> {
+    gpus: Vec<GpuSim>,
+    policy: P,
+    /// Future arrivals, sorted by time (stable: ties keep submit order).
+    arrivals: Vec<(f64, JobSpec)>,
+    next_arrival: usize,
+    n_jobs: usize,
+    /// Per-GPU deferred create (a `OneDeferred` reconfig in flight).
+    pending_create: Vec<Option<usize>>,
+    /// Per-GPU instances created by an in-flight `FillNow` reconfig.
+    fill_created: Vec<Vec<InstanceId>>,
+    // -- external (wall-clock) submission ledger, for the server --
+    external_open: HashMap<u64, ExternalJob>,
+    external_next: u64,
+    external_records: Vec<JobRecord>,
+}
+
+impl<P: SchedulingPolicy> Orchestrator<P> {
+    /// Orchestrator over a fleet of identical-or-mixed GPUs.
+    pub fn new(specs: Vec<Arc<GpuSpec>>, prediction: bool, policy: P) -> Self {
+        assert!(!specs.is_empty(), "orchestrator needs at least one GPU");
+        let n = specs.len();
+        Orchestrator {
+            gpus: specs
+                .into_iter()
+                .map(|s| GpuSim::new(s, prediction))
+                .collect(),
+            policy,
+            arrivals: Vec::new(),
+            next_arrival: 0,
+            n_jobs: 0,
+            pending_create: vec![None; n],
+            fill_created: vec![Vec::new(); n],
+            external_open: HashMap::new(),
+            external_next: 0,
+            external_records: Vec::new(),
+        }
+    }
+
+    /// The common single-GPU case.
+    pub fn single(spec: Arc<GpuSpec>, prediction: bool, policy: P) -> Self {
+        Self::new(vec![spec], prediction, policy)
+    }
+
+    /// Global simulated time: the furthest-advanced clock in the fleet.
+    pub fn now(&self) -> f64 {
+        self.gpus
+            .iter()
+            .map(|g| g.now())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    pub fn gpu(&self, g: GpuId) -> &GpuSim {
+        &self.gpus[g]
+    }
+
+    pub fn policy(&self) -> &P {
+        &self.policy
+    }
+
+    /// Queue one job arrival at time `t` (>= 0). Must be called before
+    /// [`run_to_completion`](Self::run_to_completion).
+    pub fn submit_at(&mut self, spec: JobSpec, t: f64) {
+        assert!(
+            self.next_arrival == 0,
+            "submissions must precede the run"
+        );
+        self.arrivals.push((t.max(0.0), spec));
+        self.n_jobs += 1;
+    }
+
+    /// Queue a whole mix (batch if it carries no arrival times).
+    pub fn submit_mix(&mut self, mix: &Mix) {
+        for (i, job) in mix.jobs.iter().enumerate() {
+            self.submit_at(job.clone(), mix.arrival_of(i));
+        }
+    }
+
+    /// Drive the world until the policy is out of work and every GPU is
+    /// drained.
+    pub fn run_to_completion(&mut self) {
+        self.arrivals
+            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        while self.step() {}
+    }
+
+    /// Convenience: submit `mix`, run to completion, and finalize the
+    /// single-GPU result (metrics + records + latency percentiles).
+    pub fn run_mix(mut self, mix: &Mix) -> RunResult {
+        assert_eq!(self.gpus.len(), 1, "run_mix is the single-GPU path");
+        self.submit_mix(mix);
+        self.run_to_completion();
+        finalize(&self.gpus[0], self.n_jobs)
+    }
+
+    /// Per-GPU results for fleet runs (each finalized over the jobs that
+    /// completed on that GPU).
+    pub fn results(&self) -> Vec<RunResult> {
+        self.gpus
+            .iter()
+            .map(|g| finalize(g, g.records.len()))
+            .collect()
+    }
+
+    /// One scheduling step. Returns false when everything is done.
+    fn step(&mut self) -> bool {
+        self.deliver_due_arrivals();
+        if let Some(g) = self.busy_gpu() {
+            // Leapfrog bound: never let this GPU's clock pass another
+            // busy GPU's (strictly greater) clock or the next arrival —
+            // fleet clocks interleave and arrivals stay causal.
+            let mut horizon = self.next_arrival_time();
+            let g_now = self.gpus[g].now();
+            for (i, other) in self.gpus.iter().enumerate() {
+                if i == g || !(other.n_running() > 0 || other.is_reconfiguring()) {
+                    continue;
+                }
+                if other.now() > g_now + EPS {
+                    horizon = Some(match horizon {
+                        Some(h) => h.min(other.now()),
+                        None => other.now(),
+                    });
+                }
+            }
+            if let Some(ev) = self.gpus[g].advance_with_horizon(horizon) {
+                self.dispatch(g, ev);
+            }
+            // On None the clock reached the horizon (arrival delivered
+            // or another GPU re-picked next step) or the GPU drained.
+            return true;
+        }
+        // The fleet is quiescent: let the policy restart (destroy idle
+        // instances, open the next class, ...) before skipping time.
+        if self.policy.has_pending_work() {
+            let acts = self.call_policy(|p, ctx| p.on_stalled(ctx));
+            if !acts.is_empty() {
+                self.apply(acts);
+                return true;
+            }
+        }
+        if let Some(t) = self.next_arrival_time() {
+            for g in &mut self.gpus {
+                g.idle_until(t);
+            }
+            return true;
+        }
+        if self.policy.has_pending_work() {
+            panic!(
+                "policy '{}' stalled with pending work, no actions, and no arrivals",
+                self.policy.name()
+            );
+        }
+        false
+    }
+
+    fn busy_gpu(&self) -> Option<GpuId> {
+        self.gpus
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.n_running() > 0 || g.is_reconfiguring())
+            .min_by(|a, b| a.1.now().partial_cmp(&b.1.now()).unwrap())
+            .map(|(i, _)| i)
+    }
+
+    fn next_arrival_time(&self) -> Option<f64> {
+        self.arrivals.get(self.next_arrival).map(|a| a.0)
+    }
+
+    /// The clock arrivals gate on: the *least-advanced busy* GPU — so a
+    /// delivered arrival is never in any busy GPU's future-relative
+    /// past — or global time when the fleet is idle.
+    fn arrival_gate(&self) -> f64 {
+        let min_busy = self
+            .gpus
+            .iter()
+            .filter(|g| g.n_running() > 0 || g.is_reconfiguring())
+            .map(|g| g.now())
+            .fold(f64::INFINITY, f64::min);
+        if min_busy.is_finite() {
+            min_busy
+        } else {
+            self.now()
+        }
+    }
+
+    fn deliver_due_arrivals(&mut self) {
+        while let Some(&(t, _)) = self.arrivals.get(self.next_arrival) {
+            if t > self.arrival_gate() + EPS {
+                break;
+            }
+            let spec = self.arrivals[self.next_arrival].1.clone();
+            self.next_arrival += 1;
+            let pj = PendingJob {
+                spec,
+                submit_time: t,
+            };
+            let acts = self.call_policy(|p, ctx| p.on_submit(ctx, pj));
+            self.apply(acts);
+        }
+    }
+
+    fn dispatch(&mut self, g: GpuId, ev: SimEvent) {
+        let acts = match ev {
+            SimEvent::Finished {
+                spec,
+                instance,
+                submit_time,
+                ..
+            } => {
+                let ev = JobEvent {
+                    gpu: g,
+                    job: spec,
+                    instance,
+                    submit_time,
+                };
+                self.call_policy(|p, ctx| p.on_job_finish(ctx, ev))
+            }
+            SimEvent::Oom {
+                spec,
+                instance,
+                submit_time,
+                iter,
+                mem_gb,
+                ..
+            } => {
+                let ev = JobEvent {
+                    gpu: g,
+                    job: spec,
+                    instance,
+                    submit_time,
+                };
+                self.call_policy(|p, ctx| p.on_oom(ctx, ev, iter, mem_gb))
+            }
+            SimEvent::Preempted {
+                spec,
+                instance,
+                submit_time,
+                iter,
+                predicted_peak_gb,
+                ..
+            } => {
+                let ev = JobEvent {
+                    gpu: g,
+                    job: spec,
+                    instance,
+                    submit_time,
+                };
+                self.call_policy(|p, ctx| {
+                    p.on_early_restart_signal(ctx, ev, iter, predicted_peak_gb)
+                })
+            }
+            SimEvent::ReconfigDone => {
+                let created: Vec<InstanceId> = if let Some(prof) = self.pending_create[g].take() {
+                    vec![self.gpus[g]
+                        .mgr
+                        .alloc(prof)
+                        .expect("planned reconfiguration must make the profile placeable")]
+                } else {
+                    std::mem::take(&mut self.fill_created[g])
+                };
+                self.call_policy(|p, ctx| p.on_reconfig_done(ctx, g, &created))
+            }
+        };
+        self.apply(acts);
+    }
+
+    fn call_policy<F>(&mut self, f: F) -> Vec<Action>
+    where
+        F: FnOnce(&mut P, &PolicyCtx) -> Vec<Action>,
+    {
+        let now = self
+            .gpus
+            .iter()
+            .map(|g| g.now())
+            .fold(0.0, f64::max);
+        let ctx = PolicyCtx {
+            now,
+            gpus: &self.gpus,
+        };
+        f(&mut self.policy, &ctx)
+    }
+
+    /// A quiescent GPU's clock can lag the fleet while other GPUs run;
+    /// before acting on it, bring it up to global time so the action
+    /// doesn't execute in its past (no-op for the single-GPU case and
+    /// for busy GPUs, whose clocks are mid-event by construction).
+    fn sync_if_idle(&mut self, gpu: GpuId) {
+        let now = self.now();
+        let g = &mut self.gpus[gpu];
+        if g.n_running() == 0 && !g.is_reconfiguring() {
+            g.idle_until(now);
+        }
+    }
+
+    fn apply(&mut self, actions: Vec<Action>) {
+        for a in actions {
+            match a {
+                Action::Launch { gpu, job, instance } => {
+                    self.sync_if_idle(gpu);
+                    self.gpus[gpu].launch(job.spec, instance, job.submit_time);
+                }
+                Action::Reconfig {
+                    gpu,
+                    destroy,
+                    create,
+                    ops,
+                } => {
+                    self.sync_if_idle(gpu);
+                    let mut n_ops = destroy.len();
+                    for id in destroy {
+                        self.gpus[gpu]
+                            .mgr
+                            .free(id)
+                            .expect("policy destroyed an unknown instance");
+                    }
+                    let mut created = Vec::new();
+                    match create {
+                        CreateRequest::None => {}
+                        CreateRequest::FillNow { candidates } => {
+                            loop {
+                                let mut placed = false;
+                                for &p in &candidates {
+                                    if self.gpus[gpu].mgr.can_alloc(p) {
+                                        created.push(self.gpus[gpu].mgr.alloc(p).unwrap());
+                                        placed = true;
+                                        break;
+                                    }
+                                }
+                                if !placed {
+                                    break;
+                                }
+                            }
+                            n_ops += created.len();
+                        }
+                        CreateRequest::OneDeferred { profile } => {
+                            assert!(
+                                self.pending_create[gpu].is_none(),
+                                "deferred create already pending on gpu {gpu}"
+                            );
+                            self.pending_create[gpu] = Some(profile);
+                            n_ops += 1;
+                        }
+                    }
+                    let n_ops = ops.unwrap_or(n_ops);
+                    if n_ops == 0 {
+                        // Instantaneous layout change (no driver window):
+                        // report completion synchronously.
+                        assert!(
+                            self.pending_create[gpu].is_none(),
+                            "a deferred create needs a reconfiguration window"
+                        );
+                        let acts =
+                            self.call_policy(|p, ctx| p.on_reconfig_done(ctx, gpu, &created));
+                        self.apply(acts);
+                    } else {
+                        self.fill_created[gpu] = created;
+                        self.gpus[gpu].begin_reconfig(n_ops);
+                    }
+                }
+            }
+        }
+    }
+
+    // ---------------------------------------------------- server hooks
+
+    /// Reserve `n` identical instances able to hold `mem_gb` (with
+    /// `compute_gpcs` as the usual soft compute constraint) on `gpu`,
+    /// using the same tightest-fit rule as the scheduling policies and
+    /// the max-reachability allocator. This is the serving front-end's
+    /// replica-placement path. On failure nothing stays allocated.
+    pub fn reserve_instances(
+        &mut self,
+        gpu: GpuId,
+        mem_gb: f64,
+        compute_gpcs: u8,
+        n: usize,
+    ) -> Result<Vec<InstanceId>, MigError> {
+        let prof = self.gpus[gpu]
+            .spec
+            .tightest_profile(mem_gb, compute_gpcs)
+            .ok_or_else(|| MigError::NoPlacement(format!("{mem_gb:.1}GB")))?;
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.gpus[gpu].mgr.alloc(prof) {
+                Ok(id) => ids.push(id),
+                Err(e) => {
+                    for id in ids {
+                        let _ = self.gpus[gpu].mgr.free(id);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(ids)
+    }
+
+    /// Record an external (wall-clock) job submission; returns a token.
+    pub fn submit_external(&mut self, name: impl Into<String>, submit_s: f64) -> u64 {
+        let token = self.external_next;
+        self.external_next += 1;
+        self.external_open.insert(
+            token,
+            ExternalJob {
+                name: name.into(),
+                submit_s,
+                start_s: None,
+            },
+        );
+        token
+    }
+
+    /// Record that an external job left the queue and started executing.
+    pub fn start_external(&mut self, token: u64, start_s: f64) {
+        if let Some(j) = self.external_open.get_mut(&token) {
+            j.start_s = Some(start_s);
+        }
+    }
+
+    /// Record external-job completion, closing its latency record. The
+    /// ledger is bounded: once it reaches twice
+    /// [`EXTERNAL_LEDGER_KEEP`], the oldest half is dropped (amortized
+    /// O(1)), so a long-running server keeps a sliding window of the
+    /// most recent completions rather than growing without bound.
+    pub fn complete_external(&mut self, token: u64, finish_s: f64) {
+        if let Some(j) = self.external_open.remove(&token) {
+            if self.external_records.len() >= 2 * EXTERNAL_LEDGER_KEEP {
+                self.external_records.drain(..EXTERNAL_LEDGER_KEEP);
+            }
+            self.external_records.push(JobRecord {
+                name: j.name,
+                submit_time: j.submit_s,
+                start_time: j.start_s.unwrap_or(finish_s),
+                finish_time: finish_s,
+            });
+        }
+    }
+
+    /// Latency records of completed external jobs.
+    pub fn external_records(&self) -> &[JobRecord] {
+        &self.external_records
+    }
+
+    /// p50/p99 queueing + turnaround over completed external jobs.
+    pub fn external_latency(&self) -> LatencyStats {
+        let queue: Vec<f64> = self
+            .external_records
+            .iter()
+            .map(|r| r.start_time - r.submit_time)
+            .collect();
+        let turn: Vec<f64> = self
+            .external_records
+            .iter()
+            .map(|r| r.finish_time - r.submit_time)
+            .collect();
+        LatencyStats::from_samples(&queue, &turn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::scheme_b::SchemeBPolicy;
+    use crate::workloads::{mix, rodinia};
+
+    fn a100() -> Arc<GpuSpec> {
+        Arc::new(GpuSpec::a100_40gb())
+    }
+
+    #[test]
+    fn online_arrivals_flow_through_a_policy() {
+        // Staggered arrivals: the orchestrator must idle-skip to each
+        // arrival and every job must complete with a sane latency.
+        let m = mix::hm2();
+        let n = m.jobs.len();
+        let times: Vec<f64> = (0..n).map(|i| i as f64 * 2.0).collect();
+        let m = m.with_arrival_trace(times);
+        let spec = a100();
+        let r = Orchestrator::single(spec.clone(), false, SchemeBPolicy::new(spec)).run_mix(&m);
+        assert_eq!(r.records.len(), n);
+        for rec in &r.records {
+            assert!(rec.start_time >= rec.submit_time - 1e-9);
+            assert!(rec.finish_time > rec.start_time);
+        }
+        // last job arrives at 98s, so the makespan must reach past it
+        assert!(r.metrics.makespan_s >= 98.0);
+        assert!(r.latency.p99_turnaround_s >= r.latency.p50_turnaround_s);
+    }
+
+    #[test]
+    fn sparse_arrivals_have_near_zero_queueing() {
+        // One job every 100s on an idle GPU: queueing delay ~ 0 (only
+        // the instance-creation window), turnaround ~ solo runtime.
+        let m = mix::Mix::batch(
+            "sparse",
+            (0..5).map(|_| rodinia::by_name("gaussian").unwrap().job(7)).collect(),
+        );
+        let m = m.with_arrival_trace((0..5).map(|i| i as f64 * 100.0).collect());
+        let spec = a100();
+        let r = Orchestrator::single(spec.clone(), false, SchemeBPolicy::new(spec)).run_mix(&m);
+        assert_eq!(r.records.len(), 5);
+        assert!(
+            r.latency.p99_queue_s < 1.0,
+            "queue p99 {} should be tiny",
+            r.latency.p99_queue_s
+        );
+    }
+
+    #[test]
+    fn multi_gpu_fleet_runs_independent_batches() {
+        use std::collections::VecDeque;
+
+        /// Minimal fleet policy: round-robin jobs across GPUs, one
+        /// full-GPU instance each, sequential per GPU.
+        struct RoundRobin {
+            queues: Vec<VecDeque<PendingJob>>,
+            inst: Vec<Option<InstanceId>>,
+            next: usize,
+        }
+        impl SchedulingPolicy for RoundRobin {
+            fn name(&self) -> &'static str {
+                "round-robin"
+            }
+            fn on_submit(&mut self, _ctx: &PolicyCtx, job: PendingJob) -> Vec<Action> {
+                let g = self.next % self.queues.len();
+                self.next += 1;
+                self.queues[g].push_back(job);
+                Vec::new()
+            }
+            fn on_job_finish(&mut self, _ctx: &PolicyCtx, ev: JobEvent) -> Vec<Action> {
+                match self.queues[ev.gpu].pop_front() {
+                    Some(job) => vec![Action::Launch {
+                        gpu: ev.gpu,
+                        job,
+                        instance: ev.instance,
+                    }],
+                    None => Vec::new(),
+                }
+            }
+            fn on_oom(&mut self, _ctx: &PolicyCtx, ev: JobEvent, _i: usize, _m: f64) -> Vec<Action> {
+                panic!("{} OOM on a full GPU", ev.job.name);
+            }
+            fn on_early_restart_signal(
+                &mut self,
+                _ctx: &PolicyCtx,
+                _ev: JobEvent,
+                _i: usize,
+                _p: f64,
+            ) -> Vec<Action> {
+                Vec::new()
+            }
+            fn on_reconfig_done(
+                &mut self,
+                _ctx: &PolicyCtx,
+                gpu: usize,
+                created: &[InstanceId],
+            ) -> Vec<Action> {
+                self.inst[gpu] = Some(created[0]);
+                match self.queues[gpu].pop_front() {
+                    Some(job) => vec![Action::Launch {
+                        gpu,
+                        job,
+                        instance: created[0],
+                    }],
+                    None => Vec::new(),
+                }
+            }
+            fn on_stalled(&mut self, ctx: &PolicyCtx) -> Vec<Action> {
+                let mut acts = Vec::new();
+                for g in 0..ctx.n_gpus() {
+                    if self.queues[g].is_empty() {
+                        continue;
+                    }
+                    match self.inst[g] {
+                        None => acts.push(Action::Reconfig {
+                            gpu: g,
+                            destroy: Vec::new(),
+                            create: CreateRequest::FillNow {
+                                candidates: vec![ctx.spec(g).profiles.len() - 1],
+                            },
+                            ops: Some(0),
+                        }),
+                        Some(inst) => {
+                            let job = self.queues[g].pop_front().unwrap();
+                            acts.push(Action::Launch { gpu: g, job, instance: inst });
+                        }
+                    }
+                }
+                acts
+            }
+            fn has_pending_work(&self) -> bool {
+                self.queues.iter().any(|q| !q.is_empty())
+            }
+        }
+
+        let spec = a100();
+        let policy = RoundRobin {
+            queues: vec![VecDeque::new(), VecDeque::new()],
+            inst: vec![None, None],
+            next: 0,
+        };
+        let mut orch = Orchestrator::new(vec![spec.clone(), spec], false, policy);
+        for _ in 0..10 {
+            orch.submit_at(rodinia::by_name("gaussian").unwrap().job(7), 0.0);
+        }
+        orch.run_to_completion();
+        let results = orch.results();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].records.len(), 5);
+        assert_eq!(results[1].records.len(), 5);
+        // two GPUs halve the sequential makespan
+        let solo = rodinia::by_name("gaussian").unwrap().job(7).baseline_runtime_s(7);
+        for r in &results {
+            assert!(r.metrics.makespan_s < 10.0 * solo);
+        }
+    }
+
+    #[test]
+    fn external_ledger_tracks_latency() {
+        let spec = a100();
+        let mut orch = Orchestrator::single(spec.clone(), false, SchemeBPolicy::new(spec));
+        let a = orch.submit_external("req-a", 0.0);
+        let b = orch.submit_external("req-b", 1.0);
+        orch.start_external(a, 0.5);
+        orch.start_external(b, 1.0);
+        orch.complete_external(a, 2.5);
+        orch.complete_external(b, 2.0);
+        assert_eq!(orch.external_records().len(), 2);
+        let l = orch.external_latency();
+        assert!((l.p99_queue_s - 0.5).abs() < 1e-12);
+        assert!((l.p99_turnaround_s - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reserve_instances_places_replicas_tightly() {
+        let spec = a100();
+        let mut orch = Orchestrator::single(spec.clone(), false, SchemeBPolicy::new(spec));
+        let ids = orch.reserve_instances(0, 8.0, 1, 3).unwrap();
+        assert_eq!(ids.len(), 3);
+        for id in &ids {
+            assert_eq!(orch.gpu(0).mgr.mem_gb_of(*id), Some(10.0)); // 2g.10gb
+        }
+        // a fourth 10GB replica no longer fits next to three
+        assert!(orch.reserve_instances(0, 8.0, 1, 2).is_err());
+    }
+}

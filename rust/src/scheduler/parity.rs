@@ -1,0 +1,154 @@
+//! Policy-parity golden tests: the trait-based policies driven through
+//! the [`Orchestrator`](super::Orchestrator) must reproduce the legacy
+//! monolithic scheduler loops **bit for bit** — identical
+//! [`BatchMetrics`](crate::metrics::BatchMetrics) (makespan, energy,
+//! reconfiguration ops, OOM/early restarts, ...) and identical per-job
+//! records on every published mix of the paper.
+
+use std::sync::Arc;
+
+use crate::config::DEFAULT_SEED;
+use crate::mig::GpuSpec;
+use crate::workloads::mix;
+
+use super::{baseline, legacy, scheme_a, scheme_b, RunResult};
+
+fn a100() -> Arc<GpuSpec> {
+    Arc::new(GpuSpec::a100_40gb())
+}
+
+/// Exact equality of everything a run reports.
+fn assert_identical(mix_name: &str, label: &str, new: &RunResult, old: &RunResult) {
+    assert_eq!(
+        new.metrics, old.metrics,
+        "{mix_name} [{label}]: metrics diverge"
+    );
+    assert_eq!(
+        new.records.len(),
+        old.records.len(),
+        "{mix_name} [{label}]: record count diverges"
+    );
+    for (i, (n, o)) in new.records.iter().zip(&old.records).enumerate() {
+        assert_eq!(n.name, o.name, "{mix_name} [{label}]: record {i} name");
+        assert_eq!(
+            n.submit_time, o.submit_time,
+            "{mix_name} [{label}]: record {i} submit"
+        );
+        assert_eq!(
+            n.start_time, o.start_time,
+            "{mix_name} [{label}]: record {i} start"
+        );
+        assert_eq!(
+            n.finish_time, o.finish_time,
+            "{mix_name} [{label}]: record {i} finish"
+        );
+    }
+    assert_eq!(new.counters.reconfig_ops, old.counters.reconfig_ops);
+    assert_eq!(new.counters.oom_restarts, old.counters.oom_restarts);
+    assert_eq!(new.counters.early_restarts, old.counters.early_restarts);
+}
+
+fn all_mix_names() -> Vec<&'static str> {
+    mix::RODINIA_MIXES
+        .iter()
+        .chain(&mix::ML_MIXES)
+        .chain(&mix::LLM_MIXES)
+        .copied()
+        .collect()
+}
+
+#[test]
+fn baseline_policy_matches_legacy_on_every_mix() {
+    let spec = a100();
+    for name in all_mix_names() {
+        let m = mix::by_name(name, DEFAULT_SEED).unwrap();
+        let new = baseline::run(spec.clone(), &m);
+        let old = legacy::baseline_run(spec.clone(), &m);
+        assert_identical(name, "baseline", &new, &old);
+    }
+}
+
+#[test]
+fn scheme_a_policy_matches_legacy_on_rodinia_mixes() {
+    let spec = a100();
+    for name in mix::RODINIA_MIXES {
+        let m = mix::by_name(name, DEFAULT_SEED).unwrap();
+        let new = scheme_a::run(spec.clone(), &m, false);
+        let old = legacy::scheme_a_run(spec.clone(), &m, false);
+        assert_identical(name, "A", &new, &old);
+    }
+}
+
+#[test]
+fn scheme_a_policy_matches_legacy_on_ml_and_llm_mixes() {
+    let spec = a100();
+    for name in mix::ML_MIXES.iter().chain(&mix::LLM_MIXES) {
+        let m = mix::by_name(name, DEFAULT_SEED).unwrap();
+        for pred in [false, true] {
+            let new = scheme_a::run(spec.clone(), &m, pred);
+            let old = legacy::scheme_a_run(spec.clone(), &m, pred);
+            assert_identical(name, if pred { "A+pred" } else { "A" }, &new, &old);
+        }
+    }
+}
+
+#[test]
+fn scheme_b_policy_matches_legacy_on_rodinia_mixes() {
+    let spec = a100();
+    for name in mix::RODINIA_MIXES {
+        let m = mix::by_name(name, DEFAULT_SEED).unwrap();
+        let new = scheme_b::run(spec.clone(), &m, false);
+        let old = legacy::scheme_b_run(spec.clone(), &m, false);
+        assert_identical(name, "B", &new, &old);
+    }
+}
+
+#[test]
+fn scheme_b_policy_matches_legacy_on_ml_and_llm_mixes() {
+    let spec = a100();
+    for name in mix::ML_MIXES.iter().chain(&mix::LLM_MIXES) {
+        let m = mix::by_name(name, DEFAULT_SEED).unwrap();
+        for pred in [false, true] {
+            let new = scheme_b::run(spec.clone(), &m, pred);
+            let old = legacy::scheme_b_run(spec.clone(), &m, pred);
+            assert_identical(name, if pred { "B+pred" } else { "B" }, &new, &old);
+        }
+    }
+}
+
+#[test]
+fn parity_holds_across_seeds_and_gpus() {
+    // A broader sweep on the shuffle-sensitive heterogeneous mixes and
+    // a different GPU model.
+    for seed in [1u64, 7, 42] {
+        let spec = a100();
+        for m in [mix::ht1(seed), mix::ht2(seed), mix::ht3(seed)] {
+            assert_identical(
+                m.name,
+                "A/seeds",
+                &scheme_a::run(spec.clone(), &m, false),
+                &legacy::scheme_a_run(spec.clone(), &m, false),
+            );
+            assert_identical(
+                m.name,
+                "B/seeds",
+                &scheme_b::run(spec.clone(), &m, false),
+                &legacy::scheme_b_run(spec.clone(), &m, false),
+            );
+        }
+    }
+    let a30 = Arc::new(GpuSpec::a30_24gb());
+    let m = mix::preliminary_a30(DEFAULT_SEED);
+    assert_identical(
+        "preliminary-a30",
+        "A/a30",
+        &scheme_a::run(a30.clone(), &m, false),
+        &legacy::scheme_a_run(a30.clone(), &m, false),
+    );
+    assert_identical(
+        "preliminary-a30",
+        "B/a30",
+        &scheme_b::run(a30.clone(), &m, false),
+        &legacy::scheme_b_run(a30, &m, false),
+    );
+}

@@ -1,0 +1,156 @@
+//! The scheduling-policy abstraction (the inversion of control at the
+//! heart of the scheduler redesign).
+//!
+//! A [`SchedulingPolicy`] is a *stateful event handler*: the
+//! [`Orchestrator`](super::Orchestrator) owns the event loop and the
+//! GPU simulators, delivers job arrivals and simulator events to the
+//! policy, and executes the [`Action`]s the policy returns. Policies
+//! never touch the simulator directly — they observe the world through
+//! a read-only [`PolicyCtx`] and decide; the orchestrator applies.
+//!
+//! This split lets the same policy logic drive:
+//! * batch runs (the paper's setting — every job submitted at t=0),
+//! * online open-loop runs (Poisson / trace-driven arrivals), and
+//! * the serving front-end (`crate::server`), which routes its replica
+//!   placement and submission accounting through the orchestrator.
+
+use crate::mig::{GpuSpec, InstanceId, PartitionManager};
+use crate::sim::GpuSim;
+use crate::workloads::JobSpec;
+
+use super::PendingJob;
+
+/// Index of a GPU within the orchestrator's fleet.
+pub type GpuId = usize;
+
+/// Read-only view of the world a policy decides against.
+pub struct PolicyCtx<'a> {
+    /// Global simulated time (max over the fleet's clocks).
+    pub now: f64,
+    /// The fleet; policies may inspect but never mutate.
+    pub gpus: &'a [GpuSim],
+}
+
+impl<'a> PolicyCtx<'a> {
+    pub fn n_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    pub fn gpu(&self, id: GpuId) -> &GpuSim {
+        &self.gpus[id]
+    }
+
+    pub fn spec(&self, id: GpuId) -> &GpuSpec {
+        &self.gpus[id].spec
+    }
+
+    pub fn mgr(&self, id: GpuId) -> &PartitionManager {
+        &self.gpus[id].mgr
+    }
+}
+
+/// What a reconfiguration should create.
+#[derive(Debug, Clone)]
+pub enum CreateRequest {
+    /// Destroy-only reconfiguration (e.g. clearing idle instances).
+    None,
+    /// Greedily allocate instances from `candidates` (first fitting
+    /// profile each round) until nothing fits, *before* the
+    /// reconfiguration window opens — Scheme A's per-class homogeneous
+    /// layout. The created ids are reported via
+    /// [`SchedulingPolicy::on_reconfig_done`].
+    FillNow { candidates: Vec<usize> },
+    /// Allocate exactly one instance of `profile` *after* the window
+    /// completes — Scheme B's serialized instance creation (the driver
+    /// op and the window are one and the same). The created id is
+    /// reported via [`SchedulingPolicy::on_reconfig_done`].
+    OneDeferred { profile: usize },
+}
+
+/// A decision returned by a policy callback. Actions are applied by the
+/// orchestrator in order.
+#[derive(Debug, Clone)]
+pub enum Action {
+    /// Launch `job` on an already-allocated, idle `instance`.
+    Launch {
+        gpu: GpuId,
+        job: PendingJob,
+        instance: InstanceId,
+    },
+    /// Destroy `destroy`, then create per `create`, charging one
+    /// reconfiguration window of `ops` driver operations (`None` =
+    /// destroyed + created count). `ops == Some(0)` applies the layout
+    /// change instantly with no window — used by the sequential
+    /// baseline's one-time full-GPU claim, mirroring its legacy
+    /// behavior of never paying reconfiguration latency.
+    Reconfig {
+        gpu: GpuId,
+        destroy: Vec<InstanceId>,
+        create: CreateRequest,
+        ops: Option<usize>,
+    },
+}
+
+/// Payload of a per-job simulator event.
+#[derive(Debug, Clone)]
+pub struct JobEvent {
+    pub gpu: GpuId,
+    pub job: JobSpec,
+    pub instance: InstanceId,
+    /// The job's original submission time (for requeueing: restarts keep
+    /// their arrival anchor so online latency accounting stays honest).
+    pub submit_time: f64,
+}
+
+/// A scheduling policy: stateful handler of orchestrator events.
+///
+/// Contract:
+/// * Callbacks run with the simulator quiescent at `ctx.now`; returned
+///   actions are applied immediately, in order, at that instant.
+/// * At most one reconfiguration may be in flight per GPU; a policy
+///   must not issue a `Reconfig` for a GPU whose window is open
+///   (`ctx.gpu(g).is_reconfiguring()`).
+/// * [`on_stalled`](Self::on_stalled) is the forward-progress hook: it
+///   fires when nothing is running, no window is open, no arrival is
+///   due, yet [`has_pending_work`](Self::has_pending_work) is true.
+///   Returning no actions there is fatal (the orchestrator panics
+///   rather than spin).
+pub trait SchedulingPolicy {
+    /// Short display name ("baseline", "scheme-A", ...).
+    fn name(&self) -> &'static str;
+
+    /// A job entered the system (batch setup or online arrival).
+    fn on_submit(&mut self, ctx: &PolicyCtx, job: PendingJob) -> Vec<Action>;
+
+    /// A job ran to completion; its instance is idle but allocated.
+    fn on_job_finish(&mut self, ctx: &PolicyCtx, ev: JobEvent) -> Vec<Action>;
+
+    /// A job exceeded its instance's memory and was killed.
+    fn on_oom(&mut self, ctx: &PolicyCtx, ev: JobEvent, iter: usize, mem_gb: f64) -> Vec<Action>;
+
+    /// The predictor flagged a job as outgrowing its instance; the job
+    /// was preempted (the paper's early restart).
+    fn on_early_restart_signal(
+        &mut self,
+        ctx: &PolicyCtx,
+        ev: JobEvent,
+        iter: usize,
+        predicted_peak_gb: f64,
+    ) -> Vec<Action>;
+
+    /// A reconfiguration window completed on `gpu`; `created` holds the
+    /// instances produced by the window's `CreateRequest` (in
+    /// allocation order; empty for destroy-only reconfigurations).
+    fn on_reconfig_done(
+        &mut self,
+        ctx: &PolicyCtx,
+        gpu: GpuId,
+        created: &[InstanceId],
+    ) -> Vec<Action>;
+
+    /// The world is quiescent but the policy still holds work.
+    fn on_stalled(&mut self, ctx: &PolicyCtx) -> Vec<Action>;
+
+    /// Whether the policy still holds jobs it has not yet launched.
+    fn has_pending_work(&self) -> bool;
+}

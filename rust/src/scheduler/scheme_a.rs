@@ -1,26 +1,29 @@
-//! Scheme A — scheduling by size (paper §4.3, Algorithm 4).
+//! Scheme A — scheduling by size (paper §4.3, Algorithm 4), as a
+//! [`SchedulingPolicy`].
 //!
-//! The batch is sorted into size-class groups. Classes are processed in
-//! ascending order: the GPU is reconfigured once per class into a
-//! homogeneous layout of tightest slices, the group's jobs are assigned
-//! *statically* round-robin to the slices (the paper's lock-free
-//! multi-threaded scheme), and the next class starts only when the
-//! group drains. This minimizes reconfigurations; the static split also
-//! reproduces the paper's Ml3 corner case where the 4g/3g compute
-//! asymmetry idles the faster half early.
+//! Jobs are grouped into size classes. Classes run in ascending order:
+//! the GPU is reconfigured once per class into a homogeneous layout of
+//! tightest slices, the group's jobs are assigned *statically*
+//! round-robin to the slices (the paper's lock-free multi-threaded
+//! scheme), and the next class starts only when the group drains. This
+//! minimizes reconfigurations; the static split also reproduces the
+//! paper's Ml3 corner case where the 4g/3g compute asymmetry idles the
+//! faster half early.
 //!
-//! OOM'd and predictively-preempted jobs re-enter the group map at their
-//! new (larger) class, which has not been processed yet.
+//! OOM'd and predictively-preempted jobs re-enter the group map at
+//! their new (larger) class, which has not been processed yet. Online
+//! arrivals simply join their class; a quiescent GPU opens the next
+//! non-empty class via the orchestrator's stall hook.
 
 use std::collections::BTreeMap;
 use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::mig::{GpuSpec, InstanceId};
-use crate::sim::{GpuSim, SimEvent};
 use crate::workloads::mix::Mix;
 
-use super::{bump_estimate_after_oom, class_of, finalize, PendingJob, RunResult};
+use super::policy::{Action, CreateRequest, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
+use super::{bump_estimate_after_oom, class_of, Orchestrator, PendingJob, RunResult};
 
 /// Profiles whose memory equals the class cap, preferring more compute
 /// (on the A100's 20GB class this yields 4g.20gb before 3g.20gb,
@@ -37,129 +40,174 @@ fn class_profiles(spec: &GpuSpec, cap_gb: f64) -> Vec<usize> {
     ps
 }
 
-/// Run Scheme A over the mix.
-pub fn run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResult {
-    let mut sim = GpuSim::new(spec.clone(), prediction);
-    let ladder = super::size_ladder(&spec);
-    let n_jobs = mix.jobs.len();
+/// Schedule-by-size policy state.
+pub struct SchemeAPolicy {
+    spec: Arc<GpuSpec>,
+    gpu: GpuId,
+    /// Unprocessed jobs, keyed by size class.
+    groups: BTreeMap<usize, VecDeque<PendingJob>>,
+    /// The class whose homogeneous layout is being reconfigured.
+    staged: VecDeque<PendingJob>,
+    reconfiguring: bool,
+    /// The current class's slices and their static per-slot queues.
+    instances: Vec<InstanceId>,
+    local: Vec<VecDeque<PendingJob>>,
+}
 
-    // Group by class, ascending.
-    let mut groups: BTreeMap<usize, VecDeque<PendingJob>> = BTreeMap::new();
-    for job in &mix.jobs {
-        let class = class_of(&spec, job.est.mem_gb.max(0.0));
-        groups.entry(class).or_default().push_back(PendingJob {
-            spec: job.clone(),
-            submit_time: 0.0,
-        });
+impl SchemeAPolicy {
+    pub fn new(spec: Arc<GpuSpec>) -> Self {
+        SchemeAPolicy {
+            spec,
+            gpu: 0,
+            groups: BTreeMap::new(),
+            staged: VecDeque::new(),
+            reconfiguring: false,
+            instances: Vec::new(),
+            local: Vec::new(),
+        }
     }
 
-    let mut held: Vec<InstanceId> = Vec::new();
-    while let Some((&class, _)) = groups.iter().find(|(_, q)| !q.is_empty()) {
-        let queue = groups.remove(&class).unwrap();
-        // ---- reconfigure to this class's homogeneous layout ----
-        let destroyed = held.len();
-        for id in held.drain(..) {
-            sim.mgr.free(id).unwrap();
-        }
+    /// Open the next non-empty class: tear down the previous layout and
+    /// request this class's homogeneous fill in one reconfiguration.
+    fn start_next_class(&mut self) -> Vec<Action> {
+        let Some((&class, _)) = self.groups.iter().find(|(_, q)| !q.is_empty()) else {
+            return Vec::new();
+        };
+        self.staged = self.groups.remove(&class).unwrap();
+        self.reconfiguring = true;
+        let ladder = self.spec.ladder();
         let cap = ladder[class.min(ladder.len() - 1)];
-        let candidates = class_profiles(&spec, cap);
-        let mut instances: Vec<InstanceId> = Vec::new();
-        loop {
-            let mut placed = false;
-            for &p in &candidates {
-                if sim.mgr.can_alloc(p) {
-                    instances.push(sim.mgr.alloc(p).unwrap());
-                    placed = true;
-                    break;
-                }
-            }
-            if !placed {
-                break;
-            }
-        }
-        assert!(!instances.is_empty(), "class {class} produced no slices");
-        sim.begin_reconfig(destroyed + instances.len());
-        // Let the reconfiguration window elapse before launching.
-        while sim.is_reconfiguring() {
-            match sim.advance() {
-                Some(SimEvent::ReconfigDone) => break,
-                Some(_) => {}
-                None => break,
-            }
-        }
-
-        // ---- static round-robin assignment (paper's multi-threaded,
-        // lock-free per-slice queues) ----
-        let k = instances.len();
-        let mut local: Vec<VecDeque<PendingJob>> = vec![VecDeque::new(); k];
-        for (i, job) in queue.into_iter().enumerate() {
-            local[i % k].push_back(job);
-        }
-        let mut inst_of_job: Vec<(crate::sim::JobId, usize)> = Vec::new();
-        for (slot, inst) in instances.iter().enumerate() {
-            if let Some(pj) = local[slot].pop_front() {
-                let id = sim.launch(pj.spec, *inst, pj.submit_time);
-                inst_of_job.push((id, slot));
-            }
-        }
-
-        // ---- drain the group ----
-        loop {
-            let all_empty = local.iter().all(|q| q.is_empty());
-            if all_empty && sim.n_running() == 0 {
-                break;
-            }
-            match sim.advance() {
-                Some(SimEvent::Finished { instance, .. }) => {
-                    let slot = instances.iter().position(|&i| i == instance).unwrap();
-                    if let Some(pj) = local[slot].pop_front() {
-                        sim.launch(pj.spec, instance, pj.submit_time);
-                    }
-                }
-                Some(SimEvent::Oom {
-                    spec: mut job_spec,
-                    instance,
-                    ..
-                }) => {
-                    let cur_prof = sim.mgr.profile_of(instance).unwrap();
-                    bump_estimate_after_oom(&spec, &mut job_spec, cur_prof);
-                    let new_class = class_of(&spec, job_spec.est.mem_gb);
-                    groups.entry(new_class).or_default().push_back(PendingJob {
-                        spec: job_spec,
-                        submit_time: 0.0,
-                    });
-                    let slot = instances.iter().position(|&i| i == instance).unwrap();
-                    if let Some(pj) = local[slot].pop_front() {
-                        sim.launch(pj.spec, instance, pj.submit_time);
-                    }
-                }
-                Some(SimEvent::Preempted {
-                    spec: mut job_spec,
-                    instance,
-                    predicted_peak_gb,
-                    ..
-                }) => {
-                    job_spec.est.mem_gb = predicted_peak_gb;
-                    let new_class = class_of(&spec, predicted_peak_gb);
-                    groups.entry(new_class).or_default().push_back(PendingJob {
-                        spec: job_spec,
-                        submit_time: 0.0,
-                    });
-                    let slot = instances.iter().position(|&i| i == instance).unwrap();
-                    if let Some(pj) = local[slot].pop_front() {
-                        sim.launch(pj.spec, instance, pj.submit_time);
-                    }
-                }
-                Some(SimEvent::ReconfigDone) => {}
-                None => break,
-            }
-        }
-        held = instances;
+        let candidates = class_profiles(&self.spec, cap);
+        let destroy = std::mem::take(&mut self.instances);
+        self.local.clear();
+        vec![Action::Reconfig {
+            gpu: self.gpu,
+            destroy,
+            create: CreateRequest::FillNow { candidates },
+            ops: None,
+        }]
     }
-    for id in held.drain(..) {
-        sim.mgr.free(id).unwrap();
+
+    /// After an event on `instance`: feed its slot's next job, or (when
+    /// the whole group has drained) open the next class.
+    fn refill_slot(&mut self, ctx: &PolicyCtx, instance: InstanceId) -> Vec<Action> {
+        let slot = self
+            .instances
+            .iter()
+            .position(|&i| i == instance)
+            .expect("event from an instance outside the current class");
+        if let Some(pj) = self.local[slot].pop_front() {
+            return vec![Action::Launch {
+                gpu: self.gpu,
+                job: pj,
+                instance,
+            }];
+        }
+        self.maybe_next_class(ctx)
     }
-    finalize(&sim, n_jobs)
+
+    fn maybe_next_class(&mut self, ctx: &PolicyCtx) -> Vec<Action> {
+        let drained = !self.reconfiguring
+            && self.staged.is_empty()
+            && self.local.iter().all(|q| q.is_empty())
+            && ctx.gpu(self.gpu).n_running() == 0;
+        if drained {
+            self.start_next_class()
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// Requeue a restarted job at its (larger) class.
+    fn requeue(&mut self, job: PendingJob) {
+        let class = class_of(&self.spec, job.spec.est.mem_gb);
+        self.groups.entry(class).or_default().push_back(job);
+    }
+}
+
+impl SchedulingPolicy for SchemeAPolicy {
+    fn name(&self) -> &'static str {
+        "scheme-A"
+    }
+
+    fn on_submit(&mut self, _ctx: &PolicyCtx, job: PendingJob) -> Vec<Action> {
+        let class = class_of(&self.spec, job.spec.est.mem_gb.max(0.0));
+        self.groups.entry(class).or_default().push_back(job);
+        // Batch grouping must see the whole submission wave before the
+        // first class opens; the orchestrator's stall hook starts it.
+        Vec::new()
+    }
+
+    fn on_job_finish(&mut self, ctx: &PolicyCtx, ev: JobEvent) -> Vec<Action> {
+        self.refill_slot(ctx, ev.instance)
+    }
+
+    fn on_oom(&mut self, ctx: &PolicyCtx, mut ev: JobEvent, _iter: usize, _mem_gb: f64) -> Vec<Action> {
+        let cur_prof = ctx.mgr(self.gpu).profile_of(ev.instance).unwrap();
+        bump_estimate_after_oom(&self.spec, &mut ev.job, cur_prof);
+        self.requeue(PendingJob {
+            spec: ev.job,
+            submit_time: ev.submit_time,
+        });
+        self.refill_slot(ctx, ev.instance)
+    }
+
+    fn on_early_restart_signal(
+        &mut self,
+        ctx: &PolicyCtx,
+        mut ev: JobEvent,
+        _iter: usize,
+        predicted_peak_gb: f64,
+    ) -> Vec<Action> {
+        ev.job.est.mem_gb = predicted_peak_gb;
+        self.requeue(PendingJob {
+            spec: ev.job,
+            submit_time: ev.submit_time,
+        });
+        self.refill_slot(ctx, ev.instance)
+    }
+
+    fn on_reconfig_done(
+        &mut self,
+        _ctx: &PolicyCtx,
+        gpu: GpuId,
+        created: &[InstanceId],
+    ) -> Vec<Action> {
+        assert!(!created.is_empty(), "class produced no slices");
+        self.reconfiguring = false;
+        self.instances = created.to_vec();
+        let k = created.len();
+        self.local = vec![VecDeque::new(); k];
+        for (i, job) in std::mem::take(&mut self.staged).into_iter().enumerate() {
+            self.local[i % k].push_back(job);
+        }
+        let mut acts = Vec::new();
+        for (slot, &inst) in self.instances.iter().enumerate() {
+            if let Some(pj) = self.local[slot].pop_front() {
+                acts.push(Action::Launch {
+                    gpu,
+                    job: pj,
+                    instance: inst,
+                });
+            }
+        }
+        acts
+    }
+
+    fn on_stalled(&mut self, ctx: &PolicyCtx) -> Vec<Action> {
+        self.maybe_next_class(ctx)
+    }
+
+    fn has_pending_work(&self) -> bool {
+        !self.staged.is_empty()
+            || self.local.iter().any(|q| !q.is_empty())
+            || self.groups.values().any(|q| !q.is_empty())
+    }
+}
+
+/// Run Scheme A over the mix (batch or online).
+pub fn run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResult {
+    Orchestrator::single(spec.clone(), prediction, SchemeAPolicy::new(spec)).run_mix(mix)
 }
 
 #[cfg(test)]
@@ -245,5 +293,20 @@ mod tests {
         let m = mix::hm3();
         let r = run_mix(a100(), &m, Scheme::A, false);
         assert_eq!(r.records.len(), 100);
+    }
+
+    #[test]
+    fn online_arrivals_group_into_waves() {
+        // Two widely-spaced arrival bursts: each burst is scheduled as
+        // its own class wave; all jobs complete with bounded queueing.
+        let m = mix::hm2();
+        let n = m.jobs.len();
+        let times: Vec<f64> = (0..n)
+            .map(|i| if i < n / 2 { 0.0 } else { 60.0 })
+            .collect();
+        let m = m.with_arrival_trace(times);
+        let r = run(a100(), &m, false);
+        assert_eq!(r.records.len(), n);
+        assert!(r.latency.p99_turnaround_s < 60.0, "{}", r.latency.p99_turnaround_s);
     }
 }

@@ -1,8 +1,8 @@
 //! Scheme B — FIFO scheduling with dynamic reconfiguration (paper §4.3,
-//! Algorithm 5).
+//! Algorithm 5), as a [`SchedulingPolicy`].
 //!
 //! Jobs are scheduled strictly in arrival order (fairness). For the head
-//! job the scheduler:
+//! job the policy:
 //! 1. reuses an idle instance that *tightly* fits,
 //! 2. else creates a new tightest instance if the current partition
 //!    state allows it,
@@ -11,145 +11,202 @@
 //! 4. else waits for a running job to finish.
 //!
 //! Head-of-line blocking is intentional — the paper attributes Scheme
-//! B's lower throughput on heterogeneous mixes to exactly this.
+//! B's lower throughput on heterogeneous mixes to exactly this. Being
+//! head-of-line-only, the policy is naturally online: arrivals append
+//! to the FIFO and the same decision procedure runs on every event.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::mig::{GpuSpec, InstanceId};
-use crate::sim::{GpuSim, SimEvent};
 use crate::workloads::mix::Mix;
 
-use super::{bump_estimate_after_oom, finalize, target_profile, PendingJob, RunResult};
+use super::policy::{Action, CreateRequest, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
+use super::{bump_estimate_after_oom, target_profile, Orchestrator, PendingJob, RunResult};
 
-/// Run Scheme B over the mix.
-pub fn run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResult {
-    let mut sim = GpuSim::new(spec.clone(), prediction);
-    let n_jobs = mix.jobs.len();
-    let mut queue: VecDeque<PendingJob> = mix
-        .jobs
-        .iter()
-        .map(|j| PendingJob {
-            spec: j.clone(),
-            submit_time: 0.0,
-        })
-        .collect();
-    let mut idle: Vec<InstanceId> = Vec::new();
-    // Job waiting for a reconfiguration window to finish.
-    let mut pending_launch: Option<(PendingJob, usize)> = None;
+/// FIFO-with-dynamic-reconfiguration policy state.
+pub struct SchemeBPolicy {
+    spec: Arc<GpuSpec>,
+    gpu: GpuId,
+    queue: VecDeque<PendingJob>,
+    /// Idle (allocated, unoccupied) instances.
+    idle: Vec<InstanceId>,
+    /// Job waiting for an in-flight instance-creation window.
+    pending_launch: Option<PendingJob>,
+}
 
-    loop {
-        // ---- TRY_SCHEDULE the head job (Alg. 5 inner loop) ----
-        while pending_launch.is_none() {
-            let Some(head) = queue.front() else { break };
-            let prof = target_profile(&spec, &head.spec);
-            let want_mem = spec.profiles[prof].mem_gb;
+impl SchemeBPolicy {
+    pub fn new(spec: Arc<GpuSpec>) -> Self {
+        SchemeBPolicy {
+            spec,
+            gpu: 0,
+            queue: VecDeque::new(),
+            idle: Vec::new(),
+            pending_launch: None,
+        }
+    }
+
+    /// Algorithm 5's TRY_SCHEDULE inner loop: place head jobs until one
+    /// blocks (or a reconfiguration is requested).
+    fn try_schedule(&mut self, ctx: &PolicyCtx) -> Vec<Action> {
+        let mut acts = Vec::new();
+        let mgr = ctx.mgr(self.gpu);
+        let reconfiguring = ctx.gpu(self.gpu).is_reconfiguring();
+        while self.pending_launch.is_none() {
+            let Some(head) = self.queue.front() else { break };
+            let prof = target_profile(&self.spec, &head.spec);
+            let want_mem = self.spec.profiles[prof].mem_gb;
 
             // 1. idle instance that tightly fits
-            if let Some(pos) = idle
+            if let Some(pos) = self
+                .idle
                 .iter()
-                .position(|&i| (sim.mgr.mem_gb_of(i).unwrap() - want_mem).abs() < 1e-9)
+                .position(|&i| (mgr.mem_gb_of(i).unwrap() - want_mem).abs() < 1e-9)
             {
-                let inst = idle.swap_remove(pos);
-                let pj = queue.pop_front().unwrap();
-                sim.launch(pj.spec, inst, pj.submit_time);
+                let inst = self.idle.swap_remove(pos);
+                let pj = self.queue.pop_front().unwrap();
+                acts.push(Action::Launch {
+                    gpu: self.gpu,
+                    job: pj,
+                    instance: inst,
+                });
                 continue;
             }
             // 2. create a new tightest slice (one driver op; instance
             //    creation serializes on the MIG manager, so the launch
             //    waits for the reconfiguration window)
-            if !sim.is_reconfiguring() && sim.mgr.can_alloc(prof) {
-                sim.begin_reconfig(1);
-                pending_launch = Some((queue.pop_front().unwrap(), prof));
+            if !reconfiguring && mgr.can_alloc(prof) {
+                self.pending_launch = Some(self.queue.pop_front().unwrap());
+                acts.push(Action::Reconfig {
+                    gpu: self.gpu,
+                    destroy: Vec::new(),
+                    create: CreateRequest::OneDeferred { profile: prof },
+                    ops: Some(1),
+                });
                 break;
             }
             // 3. fusion/fission over idle instances. The paper merges
             //    *neighboring* partitions (pairwise) or splits one larger
             //    partition — so only plans destroying at most two idle
             //    instances are admissible; wider merges mean waiting.
-            if !sim.is_reconfiguring() {
-                if let Some(plan) = sim
-                    .mgr
-                    .plan_reconfig(prof, &idle)
+            if !reconfiguring {
+                if let Some(plan) = mgr
+                    .plan_reconfig(prof, &self.idle)
                     .filter(|p| p.destroy.len() <= 2)
                 {
                     for id in &plan.destroy {
-                        idle.retain(|i| i != id);
-                        sim.mgr.free(*id).unwrap();
+                        self.idle.retain(|i| i != id);
                     }
-                    sim.begin_reconfig(plan.ops);
-                    pending_launch = Some((queue.pop_front().unwrap(), prof));
+                    self.pending_launch = Some(self.queue.pop_front().unwrap());
+                    acts.push(Action::Reconfig {
+                        gpu: self.gpu,
+                        destroy: plan.destroy,
+                        create: CreateRequest::OneDeferred { profile: prof },
+                        ops: Some(plan.ops),
+                    });
                     break;
                 }
             }
             // 4. wait
             break;
         }
+        acts
+    }
 
-        // ---- advance the world ----
-        match sim.advance() {
-            Some(SimEvent::Finished { instance, .. }) => {
-                idle.push(instance);
-            }
-            Some(SimEvent::Oom {
-                spec: mut job_spec,
-                instance,
-                ..
-            }) => {
-                let cur_prof = sim.mgr.profile_of(instance).unwrap();
-                bump_estimate_after_oom(&spec, &mut job_spec, cur_prof);
-                idle.push(instance);
-                queue.push_back(PendingJob {
-                    spec: job_spec,
-                    submit_time: 0.0,
-                });
-            }
-            Some(SimEvent::Preempted {
-                spec: mut job_spec,
-                instance,
-                predicted_peak_gb,
-                ..
-            }) => {
-                job_spec.est.mem_gb = predicted_peak_gb;
-                idle.push(instance);
-                queue.push_back(PendingJob {
-                    spec: job_spec,
-                    submit_time: 0.0,
-                });
-            }
-            Some(SimEvent::ReconfigDone) => {
-                if let Some((pj, prof)) = pending_launch.take() {
-                    let inst = sim
-                        .mgr
-                        .alloc(prof)
-                        .expect("planned reconfiguration must make the profile placeable");
-                    sim.launch(pj.spec, inst, pj.submit_time);
-                }
-            }
-            None => {
-                if queue.is_empty() && pending_launch.is_none() {
-                    break;
-                }
-                // Nothing running and the head can't be placed: destroy
-                // all idle instances and retry; if that can't help the
-                // job simply cannot fit on this GPU.
-                if !idle.is_empty() {
-                    let ops = idle.len();
-                    for id in idle.drain(..) {
-                        sim.mgr.free(id).unwrap();
-                    }
-                    sim.begin_reconfig(ops);
-                    continue;
-                }
-                let head = queue.front().map(|p| p.spec.name.clone());
-                panic!("deadlock: job {head:?} cannot be placed on an empty GPU");
-            }
+    fn requeue(&mut self, job: PendingJob) {
+        self.queue.push_back(job);
+    }
+}
+
+impl SchedulingPolicy for SchemeBPolicy {
+    fn name(&self) -> &'static str {
+        "scheme-B"
+    }
+
+    fn on_submit(&mut self, ctx: &PolicyCtx, job: PendingJob) -> Vec<Action> {
+        self.queue.push_back(job);
+        self.try_schedule(ctx)
+    }
+
+    fn on_job_finish(&mut self, ctx: &PolicyCtx, ev: JobEvent) -> Vec<Action> {
+        self.idle.push(ev.instance);
+        self.try_schedule(ctx)
+    }
+
+    fn on_oom(&mut self, ctx: &PolicyCtx, mut ev: JobEvent, _iter: usize, _mem_gb: f64) -> Vec<Action> {
+        let cur_prof = ctx.mgr(self.gpu).profile_of(ev.instance).unwrap();
+        bump_estimate_after_oom(&self.spec, &mut ev.job, cur_prof);
+        self.idle.push(ev.instance);
+        self.requeue(PendingJob {
+            spec: ev.job,
+            submit_time: ev.submit_time,
+        });
+        self.try_schedule(ctx)
+    }
+
+    fn on_early_restart_signal(
+        &mut self,
+        ctx: &PolicyCtx,
+        mut ev: JobEvent,
+        _iter: usize,
+        predicted_peak_gb: f64,
+    ) -> Vec<Action> {
+        ev.job.est.mem_gb = predicted_peak_gb;
+        self.idle.push(ev.instance);
+        self.requeue(PendingJob {
+            spec: ev.job,
+            submit_time: ev.submit_time,
+        });
+        self.try_schedule(ctx)
+    }
+
+    fn on_reconfig_done(
+        &mut self,
+        ctx: &PolicyCtx,
+        gpu: GpuId,
+        created: &[InstanceId],
+    ) -> Vec<Action> {
+        let mut acts = Vec::new();
+        if let Some(pj) = self.pending_launch.take() {
+            acts.push(Action::Launch {
+                gpu,
+                job: pj,
+                instance: created[0],
+            });
         }
+        acts.extend(self.try_schedule(ctx));
+        acts
     }
-    for id in idle.drain(..) {
-        sim.mgr.free(id).unwrap();
+
+    fn on_stalled(&mut self, _ctx: &PolicyCtx) -> Vec<Action> {
+        if self.queue.is_empty() {
+            return Vec::new();
+        }
+        // Nothing running and the head can't be placed: destroy all idle
+        // instances and retry; if that can't help the job simply cannot
+        // fit on this GPU.
+        if !self.idle.is_empty() {
+            let destroy = std::mem::take(&mut self.idle);
+            let ops = destroy.len();
+            return vec![Action::Reconfig {
+                gpu: self.gpu,
+                destroy,
+                create: CreateRequest::None,
+                ops: Some(ops),
+            }];
+        }
+        let head = self.queue.front().map(|p| p.spec.name.clone());
+        panic!("deadlock: job {head:?} cannot be placed on an empty GPU");
     }
-    finalize(&sim, n_jobs)
+
+    fn has_pending_work(&self) -> bool {
+        !self.queue.is_empty() || self.pending_launch.is_some()
+    }
+}
+
+/// Run Scheme B over the mix (batch or online).
+pub fn run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResult {
+    Orchestrator::single(spec.clone(), prediction, SchemeBPolicy::new(spec)).run_mix(mix)
 }
 
 #[cfg(test)]
@@ -214,5 +271,22 @@ mod tests {
         let r = run(a100(), &m, true);
         assert_eq!(r.records.len(), 1);
         assert!(r.metrics.early_restarts >= 1);
+    }
+
+    #[test]
+    fn online_fifo_reuses_warm_slices() {
+        // Identical jobs arriving sparsely reuse the first slice: only
+        // the first arrival pays the instance-creation window.
+        let jobs: Vec<_> = (0..6)
+            .map(|_| crate::workloads::rodinia::by_name("gaussian").unwrap().job(7))
+            .collect();
+        let m = mix::Mix::batch("sparse-fifo", jobs)
+            .with_arrival_trace((0..6).map(|i| i as f64 * 30.0).collect());
+        let r = run(a100(), &m, false);
+        assert_eq!(r.records.len(), 6);
+        assert_eq!(
+            r.metrics.reconfig_ops, 1,
+            "warm slice must be reused across arrivals"
+        );
     }
 }

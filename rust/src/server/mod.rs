@@ -1,13 +1,21 @@
 //! LLM serving front-end: the online face of MIGM.
 //!
-//! A [`ServingSystem`] partitions the (simulated) GPU into replica
-//! slices via the partition manager, hosts one AOT [`DecodeEngine`] per
-//! replica, and serves generation requests with continuous slot
-//! batching — the vLLM-router-shaped L3 of this stack. All engines live
-//! on a dedicated engine thread (PJRT handles are not `Send`); a
-//! shortest-queue router feeds per-replica slot maps; KV usage per
-//! replica is tracked and fed to the AOT predictor so growth beyond the
-//! slice budget is flagged before it happens.
+//! A [`ServingSystem`] routes its GPU-facing bookkeeping through the
+//! scheduling [`Orchestrator`]: replica slices are placed via
+//! [`Orchestrator::reserve_instances`] (the schedulers' tightest-fit
+//! profile rule + the partition manager's max-reachability allocator —
+//! shared mechanisms, not a policy event loop), and every generation
+//! request is submitted through the orchestrator's external-job
+//! ledger, which yields the same queueing/turnaround percentile
+//! accounting as the simulated online scenarios. The embedded FIFO
+//! policy is inert today; it is the seam where simulated admission
+//! control plugs in. One AOT [`DecodeEngine`] runs per
+//! replica with continuous slot batching — the vLLM-router-shaped L3
+//! of this stack. All engines live on a dedicated engine thread (PJRT
+//! handles are not `Send`); a shortest-queue router feeds per-replica
+//! slot maps; KV usage per replica is tracked and fed to the AOT
+//! predictor so growth beyond the slice budget is flagged before it
+//! happens.
 //!
 //! The TCP front speaks JSON-lines:
 //!
@@ -28,9 +36,17 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::mig::{GpuSpec, PartitionManager};
+use crate::mig::GpuSpec;
 use crate::runtime::{DecodeEngine, Manifest, PjrtPredictor, Runtime};
+use crate::scheduler::scheme_b::SchemeBPolicy;
+use crate::scheduler::Orchestrator;
 use crate::util::Json;
+
+/// The serving stack's orchestrator flavor. Today the server uses the
+/// orchestrator for replica placement and request-latency accounting
+/// only; the FIFO (Scheme B) policy is carried inert as the seam for
+/// future simulated admission control.
+type ServerOrchestrator = Orchestrator<SchemeBPolicy>;
 
 /// A generation request.
 #[derive(Debug, Clone)]
@@ -57,6 +73,13 @@ pub struct ServingStats {
     pub kv_alerts: u64,
     /// Per-replica generated-token counts.
     pub per_replica_tokens: Vec<u64>,
+    /// Request queueing-delay percentiles (ms), from the orchestrator's
+    /// external-job ledger.
+    pub p50_queue_ms: f64,
+    pub p99_queue_ms: f64,
+    /// End-to-end request latency percentiles (ms).
+    pub p50_latency_ms: f64,
+    pub p99_latency_ms: f64,
 }
 
 impl ServingStats {
@@ -104,6 +127,8 @@ struct Slot {
     cur_token: i32,
     started: Instant,
     reply: Sender<Result<GenResponse, String>>,
+    /// External-job token in the orchestrator's submission ledger.
+    token: u64,
 }
 
 /// Engine-thread state for one replica.
@@ -112,7 +137,7 @@ struct Replica {
     k: xla::Literal,
     v: xla::Literal,
     slots: Vec<Option<Slot>>,
-    queue: VecDeque<(GenRequest, Sender<Result<GenResponse, String>>)>,
+    queue: VecDeque<(GenRequest, Sender<Result<GenResponse, String>>, u64)>,
     tokens_out: u64,
     /// KV bytes series for the predictor.
     kv_series: Vec<f64>,
@@ -127,11 +152,11 @@ pub struct ServingSystem {
 }
 
 impl ServingSystem {
-    /// Start the engine thread: allocate replica slices, load artifacts,
-    /// and begin the decode loop.
+    /// Start the engine thread: place replica slices through the
+    /// scheduling orchestrator, load artifacts, and begin the decode
+    /// loop.
     pub fn start(cfg: ServingConfig) -> Result<ServingSystem> {
         let spec = Arc::new(cfg.gpu.clone());
-        // Router-side partition plan: one tightest slice per replica.
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         let dm = manifest
             .decode
@@ -139,25 +164,37 @@ impl ServingSystem {
             .with_context(|| format!("unknown decode variant {}", cfg.variant))?
             .clone();
         let need_gb = (dm.param_bytes + dm.kv_cache_bytes) as f64 / 1e9 + 0.5;
-        let mut mgr = PartitionManager::new(spec.clone());
+        // Replica placement goes through the orchestrator: the same
+        // tightest-fit rule and max-reachability allocator the batch
+        // policies use, instead of an ad-hoc manager loop.
+        // Eager fit check (clean error + budget fallback for replicas=0).
         let prof = spec
             .tightest_profile(need_gb, 1)
             .context("model does not fit any MIG profile")?;
+        let mut orch =
+            ServerOrchestrator::single(spec.clone(), false, SchemeBPolicy::new(spec.clone()));
+        let ids = orch
+            .reserve_instances(0, need_gb, 1, cfg.replicas)
+            .context("not enough MIG slices for replicas")?;
+        // The KV-alert budget comes from the slice actually placed, so
+        // it can never diverge from the reservation rule.
+        let mem_budget_gb = ids
+            .first()
+            .and_then(|id| orch.gpu(0).mgr.mem_gb_of(*id))
+            .unwrap_or(spec.profiles[prof].mem_gb);
         let mut slices = Vec::new();
-        for _ in 0..cfg.replicas {
-            let id = mgr.alloc(prof).context("not enough MIG slices for replicas")?;
-            let p = mgr.placement_of(id).unwrap();
+        for id in &ids {
+            let p = orch.gpu(0).mgr.placement_of(*id).unwrap();
             slices.push(format!(
                 "{}@slice{}",
                 spec.profiles[p.profile as usize].name, p.start
             ));
         }
-        let mem_budget_gb = spec.profiles[prof].mem_gb;
 
         let (tx, rx) = channel::<Cmd>();
         let pm = manifest.predictor.values().next().cloned();
         let join = std::thread::spawn(move || {
-            engine_thread(cfg, dm, pm, mem_budget_gb, rx);
+            engine_thread(cfg, dm, pm, mem_budget_gb, rx, orch);
         });
         Ok(ServingSystem {
             tx,
@@ -208,6 +245,7 @@ fn engine_thread(
     pm: Option<crate::runtime::PredictorManifest>,
     mem_budget_gb: f64,
     rx: Receiver<Cmd>,
+    mut orch: ServerOrchestrator,
 ) {
     // PJRT handles are created on this thread and never leave it.
     let mut rt = match Runtime::cpu() {
@@ -267,6 +305,10 @@ fn engine_thread(
             match cmd {
                 Cmd::Generate(req, reply) => {
                     stats.requests += 1;
+                    // submission enters the orchestrator's ledger (the
+                    // queueing/turnaround accounting of online runs)
+                    let token =
+                        orch.submit_external("generate", started.elapsed().as_secs_f64());
                     // shortest-queue router
                     let (ri, _) = replicas
                         .iter()
@@ -275,7 +317,7 @@ fn engine_thread(
                             r.queue.len() + r.slots.iter().filter(|s| s.is_some()).count()
                         })
                         .unwrap();
-                    replicas[ri].queue.push_back((req, reply));
+                    replicas[ri].queue.push_back((req, reply, token));
                     if !busy {
                         break;
                     }
@@ -284,6 +326,11 @@ fn engine_thread(
                     stats.elapsed_s = started.elapsed().as_secs_f64();
                     stats.per_replica_tokens =
                         replicas.iter().map(|r| r.tokens_out).collect();
+                    let lat = orch.external_latency();
+                    stats.p50_queue_ms = lat.p50_queue_s * 1e3;
+                    stats.p99_queue_ms = lat.p99_queue_s * 1e3;
+                    stats.p50_latency_ms = lat.p50_turnaround_s * 1e3;
+                    stats.p99_latency_ms = lat.p99_turnaround_s * 1e3;
                     let _ = reply.send(stats.clone());
                 }
                 Cmd::Shutdown => break 'outer,
@@ -295,7 +342,8 @@ fn engine_thread(
             // fill empty slots (continuous batching)
             for slot in rep.slots.iter_mut() {
                 if slot.is_none() {
-                    if let Some((req, reply)) = rep.queue.pop_front() {
+                    if let Some((req, reply, token)) = rep.queue.pop_front() {
+                        orch.start_external(token, started.elapsed().as_secs_f64());
                         let mut prompt: VecDeque<i32> = req.prompt.iter().copied().collect();
                         let first = prompt.pop_front().unwrap_or(1).rem_euclid(
                             rep.engine.manifest.vocab as i32,
@@ -308,6 +356,7 @@ fn engine_thread(
                             cur_token: first,
                             started: Instant::now(),
                             reply,
+                            token,
                         });
                     }
                 }
@@ -353,6 +402,7 @@ fn engine_thread(
                 }
                 if s.generated.len() >= s.max_new || s.pos >= max_seq - 1 {
                     let done = slot.take().unwrap();
+                    orch.complete_external(done.token, started.elapsed().as_secs_f64());
                     let _ = done.reply.send(Ok(GenResponse {
                         tokens: done.generated,
                         replica: ri,
@@ -382,7 +432,7 @@ fn engine_thread(
     }
     // Fail any queued work on shutdown.
     for rep in replicas {
-        for (_, reply) in rep.queue {
+        for (_, reply, _) in rep.queue {
             let _ = reply.send(Err("server shut down".into()));
         }
     }
@@ -452,6 +502,10 @@ fn handle_client(
                         ("decode_steps", Json::num(s.decode_steps as f64)),
                         ("tokens_per_s", Json::num(s.tokens_per_s())),
                         ("kv_alerts", Json::num(s.kv_alerts as f64)),
+                        ("p50_queue_ms", Json::num(s.p50_queue_ms)),
+                        ("p99_queue_ms", Json::num(s.p99_queue_ms)),
+                        ("p50_latency_ms", Json::num(s.p50_latency_ms)),
+                        ("p99_latency_ms", Json::num(s.p99_latency_ms)),
                     ]),
                     Err(e) => Json::obj(vec![
                         ("ok", Json::Bool(false)),
@@ -503,6 +557,10 @@ mod tests {
         let st = sys.stats().unwrap();
         assert_eq!(st.requests, 1);
         assert!(st.tokens_generated >= 8);
+        // the orchestrator ledger recorded the request's latency
+        assert!(st.p99_latency_ms > 0.0);
+        assert!(st.p99_latency_ms >= st.p50_latency_ms);
+        assert!(st.p99_queue_ms <= st.p99_latency_ms);
         sys.shutdown();
     }
 

@@ -66,6 +66,8 @@ struct Running {
     /// Realized allocator trace (iterative jobs only).
     trace: Option<AllocatorTrace>,
     submit_time: f64,
+    /// When this (re)launch actually started on the instance.
+    start_time: f64,
     /// Memory charged against the utilization integral right now.
     cur_mem_gb: f64,
 }
@@ -75,6 +77,9 @@ struct Running {
 pub struct JobRecord {
     pub name: String,
     pub submit_time: f64,
+    /// When the final (successful) launch started; `start_time -
+    /// submit_time` is the job's queueing delay.
+    pub start_time: f64,
     pub finish_time: f64,
 }
 
@@ -94,12 +99,14 @@ pub enum SimEvent {
         job: JobId,
         spec: JobSpec,
         instance: InstanceId,
+        submit_time: f64,
     },
     /// Iterative job exceeded its instance memory at `iter`.
     Oom {
         job: JobId,
         spec: JobSpec,
         instance: InstanceId,
+        submit_time: f64,
         iter: usize,
         mem_gb: f64,
     },
@@ -108,6 +115,7 @@ pub enum SimEvent {
         job: JobId,
         spec: JobSpec,
         instance: InstanceId,
+        submit_time: f64,
         iter: usize,
         predicted_peak_gb: f64,
     },
@@ -292,6 +300,11 @@ impl GpuSim {
                 monitor,
                 trace,
                 submit_time,
+                // Clamp: fleet runs deliver arrivals against the
+                // least-advanced busy clock, so `now` can trail the
+                // submit time by at most an epsilon — a record never
+                // shows a job starting before it was submitted.
+                start_time: self.now.max(submit_time),
                 cur_mem_gb: 0.0,
             },
         );
@@ -361,6 +374,16 @@ impl GpuSim {
     /// Advance simulated time until the next scheduler-visible event.
     /// Returns `None` when nothing is running and no reconfig is pending.
     pub fn advance(&mut self) -> Option<SimEvent> {
+        self.advance_with_horizon(None)
+    }
+
+    /// Like [`advance`](Self::advance), but never moves the clock past
+    /// `horizon` (used by the orchestrator so online job arrivals can
+    /// interleave with in-flight work). Returns `None` either when the
+    /// sim is drained or when the horizon is reached without a
+    /// scheduler-visible event; the caller distinguishes the two by
+    /// checking [`now`](Self::now) against the horizon.
+    pub fn advance_with_horizon(&mut self, horizon: Option<f64>) -> Option<SimEvent> {
         loop {
             if self.running.is_empty() && self.reconfig_rem.is_none() {
                 return None;
@@ -377,7 +400,17 @@ impl GpuSim {
                 dt = dt.min(rr);
             }
             debug_assert!(dt.is_finite());
-            let dt = dt.max(0.0);
+            let mut dt = dt.max(0.0);
+            // Clip to the horizon: no transition completes before it, so
+            // after integrating up to the horizon we hand control back.
+            let mut clipped = false;
+            if let Some(h) = horizon {
+                let lim = (h - self.now).max(0.0);
+                if lim + EPS < dt {
+                    dt = lim;
+                    clipped = true;
+                }
+            }
 
             // 2. integrate power + memory over [now, now+dt)
             if dt > 0.0 {
@@ -433,6 +466,22 @@ impl GpuSim {
             if let Some(ev) = fired {
                 return Some(ev);
             }
+            if clipped {
+                return None;
+            }
+        }
+    }
+
+    /// Fast-forward an idle GPU to `t` (online mode: nothing to do until
+    /// the next arrival). Only the idle power floor accrues.
+    pub fn idle_until(&mut self, t: f64) {
+        debug_assert!(
+            self.running.is_empty() && self.reconfig_rem.is_none(),
+            "idle_until on a busy sim"
+        );
+        if t > self.now {
+            self.energy_j += self.spec.idle_power_w * (t - self.now);
+            self.now = t;
         }
     }
 
@@ -489,12 +538,14 @@ impl GpuSim {
             self.records.push(JobRecord {
                 name: r.spec.name.clone(),
                 submit_time: r.submit_time,
+                start_time: r.start_time,
                 finish_time: self.now,
             });
             return Some(SimEvent::Finished {
                 job: id,
                 spec: r.spec,
                 instance: r.instance,
+                submit_time: r.submit_time,
             });
         }
         None
@@ -508,6 +559,7 @@ impl GpuSim {
                 job: id,
                 spec: r.spec,
                 instance: r.instance,
+                submit_time: r.submit_time,
                 iter,
                 mem_gb,
             },
@@ -515,6 +567,7 @@ impl GpuSim {
                 job: id,
                 spec: r.spec,
                 instance: r.instance,
+                submit_time: r.submit_time,
                 iter,
                 predicted_peak_gb: peak,
             },
@@ -773,6 +826,53 @@ mod tests {
         while s.advance().is_some() {}
         let util = s.mem_gb_integral() / (s.now() * s.spec.total_mem_gb);
         assert!(util > 0.0 && util < 1.0, "{util}");
+    }
+
+    #[test]
+    fn horizon_clips_the_clock_without_losing_work() {
+        let job = rodinia::by_name("gaussian").unwrap().job(7);
+        // reference: run to completion without a horizon
+        let mut a = sim();
+        let i = a.mgr.alloc(0).unwrap();
+        a.launch(job.clone(), i, 0.0);
+        while a.advance().is_some() {}
+        let t_ref = a.now();
+        // same run, interrupted at an arbitrary horizon mid-flight
+        let mut b = sim();
+        let i = b.mgr.alloc(0).unwrap();
+        b.launch(job, i, 0.0);
+        let h = t_ref * 0.3;
+        let ev = b.advance_with_horizon(Some(h));
+        // either an event fired before the horizon or we stopped at it
+        if ev.is_none() {
+            assert!((b.now() - h).abs() < 1e-9, "stopped at {} not {h}", b.now());
+        }
+        while b.advance().is_some() {}
+        assert!((b.now() - t_ref).abs() < 1e-9, "{} vs {}", b.now(), t_ref);
+    }
+
+    #[test]
+    fn idle_until_charges_idle_power_only() {
+        let mut s = sim();
+        s.idle_until(10.0);
+        assert!((s.now() - 10.0).abs() < 1e-12);
+        assert!((s.energy_j() - 10.0 * s.spec.idle_power_w).abs() < 1e-9);
+        s.idle_until(5.0); // never goes backwards
+        assert!((s.now() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn records_carry_queueing_anchor() {
+        let mut s = sim();
+        let prof = full_profile(&s);
+        let inst = s.mgr.alloc(prof).unwrap();
+        s.idle_until(2.0);
+        s.launch(rodinia::by_name("gaussian").unwrap().job(7), inst, 0.5);
+        while s.advance().is_some() {}
+        let r = &s.records[0];
+        assert!((r.submit_time - 0.5).abs() < 1e-12);
+        assert!((r.start_time - 2.0).abs() < 1e-12);
+        assert!(r.finish_time > r.start_time);
     }
 
     #[test]

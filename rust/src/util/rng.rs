@@ -95,6 +95,15 @@ impl Rng {
         mean + sigma * self.normal()
     }
 
+    /// Exponential with rate `rate` (mean `1/rate`): the inter-arrival
+    /// distribution of a Poisson process, used by the online arrival
+    /// generators. Panics if `rate <= 0`.
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0, "exponential rate must be positive");
+        // f64() is in [0, 1), so 1 - u is in (0, 1] and ln is finite.
+        -(1.0 - self.f64()).ln() / rate
+    }
+
     /// Pick one element by reference.
     pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.below(xs.len())]
@@ -155,6 +164,19 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.02, "mean={mean}");
         assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut r = Rng::new(21);
+        let n = 50_000;
+        let rate = 2.5;
+        let mean = (0..n).map(|_| r.exp(rate)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.01, "mean={mean}");
+        let mut r2 = Rng::new(21);
+        for _ in 0..1000 {
+            assert!(r2.exp(rate) >= 0.0);
+        }
     }
 
     #[test]

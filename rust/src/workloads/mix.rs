@@ -10,11 +10,67 @@ use crate::workloads::llm;
 use crate::workloads::rodinia::{self, RodiniaBench};
 use crate::workloads::{dnn, JobSpec, SizeClass};
 
-/// A named mix: ordered batch of jobs.
+/// A named mix: ordered batch of jobs plus (optionally) per-job arrival
+/// times. An empty `arrivals` vector means batch submission (all jobs
+/// at t=0, the paper's setting); otherwise `arrivals[i]` is the time
+/// job `i` enters the system, enabling the online open-loop scenarios
+/// driven by [`crate::scheduler::Orchestrator`].
 #[derive(Debug, Clone)]
 pub struct Mix {
     pub name: &'static str,
     pub jobs: Vec<JobSpec>,
+    /// Per-job arrival times (s), same length as `jobs`, or empty for
+    /// batch submission.
+    pub arrivals: Vec<f64>,
+}
+
+impl Mix {
+    /// Batch mix: every job submitted at t=0.
+    pub fn batch(name: &'static str, jobs: Vec<JobSpec>) -> Mix {
+        Mix {
+            name,
+            jobs,
+            arrivals: Vec::new(),
+        }
+    }
+
+    /// Arrival time of job `i` (0 for batch mixes).
+    pub fn arrival_of(&self, i: usize) -> f64 {
+        self.arrivals.get(i).copied().unwrap_or(0.0)
+    }
+
+    /// Whether every job arrives at t=0.
+    pub fn is_batch(&self) -> bool {
+        self.arrivals.iter().all(|&t| t <= 0.0)
+    }
+
+    /// Overlay a Poisson arrival process: job `i` arrives after the
+    /// `i`-th exponential inter-arrival gap at `rate_jps` jobs/second.
+    pub fn with_poisson_arrivals(mut self, rate_jps: f64, seed: u64) -> Mix {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        self.arrivals = self
+            .jobs
+            .iter()
+            .map(|_| {
+                t += rng.exp(rate_jps);
+                t
+            })
+            .collect();
+        self
+    }
+
+    /// Overlay an explicit arrival trace (must be non-decreasing and one
+    /// entry per job; the orchestrator submits in trace order).
+    pub fn with_arrival_trace(mut self, times: Vec<f64>) -> Mix {
+        assert_eq!(times.len(), self.jobs.len(), "one arrival per job");
+        assert!(
+            times.windows(2).all(|w| w[0] <= w[1]),
+            "arrival trace must be sorted"
+        );
+        self.arrivals = times;
+        self
+    }
 }
 
 fn bucket(pool: &[RodiniaBench], class: SizeClass) -> Vec<RodiniaBench> {
@@ -30,34 +86,22 @@ fn repeat(b: &RodiniaBench, n: usize, gpcs: u8) -> Vec<JobSpec> {
 
 /// Hm1: 50x particlefilter (Table 1).
 pub fn hm1() -> Mix {
-    Mix {
-        name: "Hm1",
-        jobs: repeat(&rodinia::by_name("particlefilter").unwrap(), 50, 7),
-    }
+    Mix::batch("Hm1", repeat(&rodinia::by_name("particlefilter").unwrap(), 50, 7))
 }
 
 /// Hm2: 50x gaussian.
 pub fn hm2() -> Mix {
-    Mix {
-        name: "Hm2",
-        jobs: repeat(&rodinia::by_name("gaussian").unwrap(), 50, 7),
-    }
+    Mix::batch("Hm2", repeat(&rodinia::by_name("gaussian").unwrap(), 50, 7))
 }
 
 /// Hm3: 100x myocyte.
 pub fn hm3() -> Mix {
-    Mix {
-        name: "Hm3",
-        jobs: repeat(&rodinia::by_name("myocyte").unwrap(), 100, 7),
-    }
+    Mix::batch("Hm3", repeat(&rodinia::by_name("myocyte").unwrap(), 100, 7))
 }
 
 /// Hm4: 50x euler3D (half-GPU jobs; 2x theoretical ceiling).
 pub fn hm4() -> Mix {
-    Mix {
-        name: "Hm4",
-        jobs: repeat(&rodinia::by_name("euler3d").unwrap(), 50, 7),
-    }
+    Mix::batch("Hm4", repeat(&rodinia::by_name("euler3d").unwrap(), 50, 7))
 }
 
 /// Ht1: 11 small + 2 medium + 2 large with roughly equal per-group
@@ -76,7 +120,7 @@ pub fn ht1(seed: u64) -> Mix {
     jobs.extend(repeat(&rodinia::by_name("streamcluster").unwrap(), 2, 7));
     jobs.extend(repeat(&rodinia::by_name("euler3d").unwrap(), 2, 7));
     rng.shuffle(&mut jobs);
-    Mix { name: "Ht1", jobs }
+    Mix::batch("Ht1", jobs)
 }
 
 /// Ht2: ratio 1:0:1:1 (small:medium:large:full), batch 18.
@@ -105,7 +149,7 @@ fn ratio_mix(name: &'static str, seed: u64, counts: [usize; 4]) -> Mix {
         }
     }
     rng.shuffle(&mut jobs);
-    Mix { name, jobs }
+    Mix::batch(name, jobs)
 }
 
 /// Ml1: equal small/large DNN jobs, batch 14 (Table 2: 1:0:1:0).
@@ -125,7 +169,7 @@ pub fn ml1(seed: u64) -> Mix {
         jobs.push(large[rng.below(large.len())].job());
     }
     rng.shuffle(&mut jobs);
-    Mix { name: "Ml1", jobs }
+    Mix::batch("Ml1", jobs)
 }
 
 /// Ml2: only small DNN jobs (BERT variants), batch 21.
@@ -135,7 +179,7 @@ pub fn ml2(seed: u64) -> Mix {
     let jobs = (0..21)
         .map(|_| variants[rng.below(variants.len())].job())
         .collect();
-    Mix { name: "Ml2", jobs }
+    Mix::batch("Ml2", jobs)
 }
 
 /// Ml3: only large DNN jobs, batch 18.
@@ -147,7 +191,7 @@ pub fn ml3(seed: u64) -> Mix {
         dnn::inceptionv3_train(),
     ];
     let jobs = (0..18).map(|_| large[rng.below(large.len())].job()).collect();
-    Mix { name: "Ml3", jobs }
+    Mix::batch("Ml3", jobs)
 }
 
 /// Homogeneous LLM mixes (Table 2 batch sizes).
@@ -160,7 +204,7 @@ pub fn llm_mix(name: &str, seed: u64) -> Option<Mix> {
         _ => return None,
     };
     let jobs = (0..batch).map(|i| w.job(seed.wrapping_add(i as u64))).collect();
-    Some(Mix { name: label, jobs })
+    Some(Mix::batch(label, jobs))
 }
 
 /// §1 preliminary experiment: 14 random Rodinia jobs that fit an A30.
@@ -171,10 +215,7 @@ pub fn preliminary_a30(seed: u64) -> Mix {
         .collect();
     let mut rng = Rng::new(seed);
     let jobs = (0..14).map(|_| rng.choice(&pool).job(4)).collect();
-    Mix {
-        name: "preliminary-a30",
-        jobs,
-    }
+    Mix::batch("preliminary-a30", jobs)
 }
 
 /// Mix registry for the CLI / config loader.
@@ -260,6 +301,36 @@ mod tests {
         for j in llm_mix("qwen2", 2).unwrap().jobs {
             assert_eq!(j.kind, JobKind::Llm);
         }
+    }
+
+    #[test]
+    fn batch_mixes_have_zero_arrivals() {
+        let m = hm1();
+        assert!(m.is_batch());
+        assert_eq!(m.arrival_of(0), 0.0);
+        assert_eq!(m.arrival_of(49), 0.0);
+    }
+
+    #[test]
+    fn poisson_arrivals_are_sorted_deterministic_and_rate_scaled() {
+        let a = ht2(3).with_poisson_arrivals(0.5, 9);
+        let b = ht2(3).with_poisson_arrivals(0.5, 9);
+        assert_eq!(a.arrivals, b.arrivals);
+        assert_eq!(a.arrivals.len(), a.jobs.len());
+        assert!(!a.is_batch());
+        assert!(a.arrivals.windows(2).all(|w| w[0] <= w[1]));
+        // mean inter-arrival ~ 1/rate
+        let gaps: f64 = a.arrivals.last().unwrap() / a.arrivals.len() as f64;
+        assert!(gaps > 0.5 && gaps < 8.0, "mean gap {gaps}");
+    }
+
+    #[test]
+    fn arrival_trace_roundtrip() {
+        let n = hm1().jobs.len();
+        let times: Vec<f64> = (0..n).map(|i| i as f64 * 0.25).collect();
+        let m = hm1().with_arrival_trace(times.clone());
+        assert_eq!(m.arrivals, times);
+        assert_eq!(m.arrival_of(4), 1.0);
     }
 
     #[test]

@@ -109,6 +109,44 @@ fn experiment_config_file_roundtrip() {
 }
 
 #[test]
+fn online_poisson_scenario_runs_end_to_end() {
+    // The acceptance scenario: a Poisson arrival stream through the
+    // orchestrator under every policy, with latency percentiles out.
+    let spec = a100();
+    let m = mix::ht2(DEFAULT_SEED).with_poisson_arrivals(0.2, DEFAULT_SEED);
+    for scheme in [Scheme::Baseline, Scheme::A, Scheme::B] {
+        let r = run_mix(spec.clone(), &m, scheme, false);
+        assert_eq!(r.records.len(), m.jobs.len(), "{scheme:?}");
+        // every job respects its arrival time
+        for (i, rec) in r.records.iter().enumerate() {
+            assert!(rec.submit_time >= 0.0, "{scheme:?} record {i}");
+            assert!(rec.start_time >= rec.submit_time - 1e-9, "{scheme:?} record {i}");
+            assert!(rec.finish_time >= rec.start_time, "{scheme:?} record {i}");
+        }
+        // no job can finish before the first arrival
+        let first_arrival = m.arrivals.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(r.metrics.makespan_s >= first_arrival);
+        assert!(r.latency.p99_turnaround_s >= r.latency.p50_turnaround_s, "{scheme:?}");
+        assert!(r.latency.p50_queue_s >= 0.0);
+    }
+}
+
+#[test]
+fn online_and_batch_agree_when_arrivals_are_zero() {
+    // An all-zeros arrival trace is the batch scenario by definition.
+    let spec = a100();
+    let m = mix::ht3(DEFAULT_SEED);
+    let zeros = m.clone().with_arrival_trace(vec![0.0; m.jobs.len()]);
+    for scheme in [Scheme::Baseline, Scheme::A, Scheme::B] {
+        let batch = run_mix(spec.clone(), &m, scheme, false);
+        let online = run_mix(spec.clone(), &zeros, scheme, false);
+        assert_eq!(batch.metrics.makespan_s, online.metrics.makespan_s, "{scheme:?}");
+        assert_eq!(batch.metrics.energy_j, online.metrics.energy_j, "{scheme:?}");
+        assert_eq!(batch.metrics.reconfig_ops, online.metrics.reconfig_ops, "{scheme:?}");
+    }
+}
+
+#[test]
 fn a30_and_h100_also_schedule() {
     for gpu in ["a30", "h100"] {
         let cfg = ExperimentConfig::new(gpu, "preliminary-a30", Scheme::A, false, 2).unwrap();
@@ -238,10 +276,7 @@ fn prop_random_batches_conserve_jobs() {
     for case in 0..25 {
         let n = rng.range(3, 25);
         let jobs: Vec<_> = (0..n).map(|_| rng.choice(&pool).job(7)).collect();
-        let m = mix::Mix {
-            name: "random",
-            jobs,
-        };
+        let m = mix::Mix::batch("random", jobs);
         let scheme = if case % 2 == 0 { Scheme::A } else { Scheme::B };
         let r = run_mix(spec.clone(), &m, scheme, false);
         assert_eq!(r.records.len(), n, "case {case}");
