@@ -43,13 +43,46 @@ fn main() {
     let mut filled = PartitionManager::with_table(spec.clone(), table.clone());
     let ids: Vec<_> = (0..7).map(|_| filled.alloc(0).unwrap()).collect();
     b.run("plan_reconfig_fusion_2g_from_1gs", || {
-        black_box(filled.plan_reconfig(1, &ids))
+        black_box(filled.plan_reconfig(1, &ids).unwrap())
     });
     b.run("plan_reconfig_fission_full_gpu", || {
-        black_box(filled.plan_reconfig(4, &ids))
+        black_box(filled.plan_reconfig(4, &ids).unwrap())
     });
 
     b.run("placement_candidates_1g", || {
         black_box(filled.placement_candidates(0))
     });
+
+    // Planner shoot-out: graph search (production) vs the legacy
+    // O(2^n) exhaustive enumeration, on worst-case fragmentation —
+    // every slice held by an idle 1g instance and the scheduler asking
+    // for the full-GPU profile (the deepest destroy set there is).
+    for gpu in [GpuSpec::a100_40gb(), GpuSpec::h100_80gb()] {
+        let name = gpu.name.clone();
+        let spec = Arc::new(gpu);
+        let table = Arc::new(ReachabilityTable::precompute(&spec));
+        let mut m = PartitionManager::with_table(spec.clone(), table.clone());
+        let mut ids = Vec::new();
+        while m.can_alloc(0) {
+            ids.push(m.alloc(0).unwrap());
+        }
+        let full = spec.profiles.len() - 1;
+        // sanity: both planners agree before we race them
+        assert_eq!(
+            m.plan_reconfig(full, &ids)
+                .unwrap()
+                .destroys()
+                .collect::<Vec<_>>(),
+            m.plan_reconfig_exhaustive(full, &ids)
+                .unwrap()
+                .destroys()
+                .collect::<Vec<_>>()
+        );
+        b.run(&format!("planner_graph_worstcase_{name}"), || {
+            black_box(m.plan_reconfig(full, &ids).unwrap())
+        });
+        b.run(&format!("planner_bruteforce_worstcase_{name}"), || {
+            black_box(m.plan_reconfig_exhaustive(full, &ids).unwrap())
+        });
+    }
 }

@@ -7,7 +7,8 @@
 //!   "scheme": "a",
 //!   "prediction": true,
 //!   "seed": 42,
-//!   "arrivals": {"kind": "poisson", "rate": 0.5}
+//!   "arrivals": {"kind": "poisson", "rate": 0.5},
+//!   "reconfig": {"create_s": 0.2, "destroy_s": 0.05, "per_mem_slice_s": 0.01}
 //! }
 //! ```
 //!
@@ -16,6 +17,11 @@
 //! `{"kind": "poisson", "rate": R}` draws exponential inter-arrival
 //! gaps at `R` jobs/second; an array of numbers is an explicit arrival
 //! trace (one timestamp per job, sorted).
+//!
+//! `reconfig` overrides the GPU's per-op reconfiguration cost model
+//! (seconds per `nvidia-smi mig` create/destroy plus an optional
+//! per-memory-slice term) used to price `PartitionPlan` windows;
+//! absent fields keep the model's uniform default.
 
 use std::path::Path;
 
@@ -161,7 +167,40 @@ impl ExperimentConfig {
         let prediction = doc.get("prediction").as_bool().unwrap_or(false);
         let seed = doc.get("seed").as_u64().unwrap_or(DEFAULT_SEED);
         let arrivals = ArrivalSpec::from_json(doc.get("arrivals"))?;
-        let cfg = Self::new(gpu, mix_name, scheme, prediction, seed)?;
+        let mut cfg = Self::new(gpu, mix_name, scheme, prediction, seed)?;
+        // Optional per-op reconfiguration cost overrides (seconds):
+        // `{"reconfig": {"create_s": 0.2, "destroy_s": 0.05,
+        //                "per_mem_slice_s": 0.01}}`. Absent fields keep
+        // the GPU's defaults (the uniform legacy cost).
+        match doc.get("reconfig") {
+            Json::Null => {}
+            r @ Json::Obj(_) => {
+                let field = |name: &str| -> Result<Option<f64>> {
+                    match r.get(name) {
+                        Json::Null => Ok(None),
+                        v => {
+                            let x = v
+                                .as_f64()
+                                .with_context(|| format!("reconfig.{name} must be a number"))?;
+                            if x < 0.0 {
+                                bail!("reconfig.{name} must be >= 0, got {x}");
+                            }
+                            Ok(Some(x))
+                        }
+                    }
+                };
+                if let Some(v) = field("create_s")? {
+                    cfg.gpu.reconfig_create_s = v;
+                }
+                if let Some(v) = field("destroy_s")? {
+                    cfg.gpu.reconfig_destroy_s = v;
+                }
+                if let Some(v) = field("per_mem_slice_s")? {
+                    cfg.gpu.reconfig_per_mem_slice_s = v;
+                }
+            }
+            other => bail!("'reconfig' must be an object, got {other}"),
+        }
         // Validate a trace here so a bad config file is a clean error,
         // not a panic inside build_mix's invariant asserts.
         if let ArrivalSpec::Trace { times } = &arrivals {
@@ -273,6 +312,31 @@ mod tests {
             r#"{"mix": "hm2", "arrivals": [1.0]}"#,
             // unsorted trace (FLAN-T5 has 6 jobs)
             r#"{"mix": "flan-t5", "arrivals": [2.0, 1.0, 3.0, 4.0, 5.0, 6.0]}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_json(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn reconfig_cost_overrides_apply() {
+        let doc = Json::parse(
+            r#"{"mix": "hm2",
+                "reconfig": {"create_s": 0.2, "per_mem_slice_s": 0.01}}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&doc).unwrap();
+        assert!((c.gpu.reconfig_create_s - 0.2).abs() < 1e-12);
+        assert!((c.gpu.reconfig_destroy_s - 0.1).abs() < 1e-12, "default kept");
+        assert!((c.gpu.reconfig_per_mem_slice_s - 0.01).abs() < 1e-12);
+        // the per-op model reflects the overrides
+        assert!((c.gpu.create_cost_s(0) - 0.21).abs() < 1e-12); // 1 mem slice
+        assert!((c.gpu.destroy_cost_s(4) - 0.18).abs() < 1e-12); // 8 mem slices
+
+        for bad in [
+            r#"{"mix": "hm2", "reconfig": 1}"#,
+            r#"{"mix": "hm2", "reconfig": {"create_s": -0.1}}"#,
+            r#"{"mix": "hm2", "reconfig": {"destroy_s": "fast"}}"#,
         ] {
             let doc = Json::parse(bad).unwrap();
             assert!(ExperimentConfig::from_json(&doc).is_err(), "{bad}");

@@ -18,7 +18,9 @@
 //! Module map (see `DESIGN.md` for the full inventory):
 //!
 //! * [`mig`] — MIG geometry, partition-state FSM, future-configuration
-//!   reachability, the max-reachability allocator (paper Alg. 2/3).
+//!   reachability, the max-reachability allocator (paper Alg. 2/3), and
+//!   transactional [`mig::PartitionPlan`] reconfigurations (validated,
+//!   cost-modeled, all-or-nothing via `begin`/`commit`).
 //! * [`estimator`] — compile-time analysis stand-in + DNNMem-style model
 //!   size estimation.
 //! * [`predictor`] — time-series peak-memory prediction (paper Alg. 1).

@@ -142,7 +142,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     println!(
         "jobs={} makespan={:.2}s throughput={:.3} j/s energy={:.0}J \
-         energy/job={:.0}J mem-util={:.1}% turnaround={:.2}s reconf={} oom={} early={}",
+         energy/job={:.0}J mem-util={:.1}% turnaround={:.2}s reconf={} \
+         reconf-windows={} reconf-s={:.1} oom={} early={}",
         m.n_jobs,
         m.makespan_s,
         m.throughput_jps,
@@ -151,6 +152,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         m.mem_utilization * 100.0,
         m.avg_turnaround_s,
         m.reconfig_ops,
+        m.reconfig_windows,
+        m.reconfig_time_s,
         m.oom_restarts,
         m.early_restarts
     );

@@ -20,6 +20,12 @@ pub struct BatchMetrics {
     pub avg_turnaround_s: f64,
     /// Count of GPU reconfiguration operations performed.
     pub reconfig_ops: usize,
+    /// Reconfiguration windows opened (plans executed with a window).
+    pub reconfig_windows: usize,
+    /// Total simulated seconds spent inside reconfiguration windows —
+    /// the wall-clock the run lost to `nvidia-smi mig` create/destroy
+    /// latency (derived from each plan's per-op cost model).
+    pub reconfig_time_s: f64,
     /// Jobs that hit a real OOM and restarted.
     pub oom_restarts: usize,
     /// Jobs restarted early by the predictor.
@@ -169,6 +175,8 @@ mod tests {
             mem_utilization: util,
             avg_turnaround_s: tat,
             reconfig_ops: 0,
+            reconfig_windows: 0,
+            reconfig_time_s: 0.0,
             oom_restarts: 0,
             early_restarts: 0,
         }

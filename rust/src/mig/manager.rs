@@ -1,29 +1,39 @@
-//! The dynamic partition manager (paper §4.2, Algorithm 3).
+//! The dynamic partition manager (paper §4.2, Algorithm 3) and the
+//! transactional reconfiguration engine.
 //!
-//! Owns the live partition state of one GPU, allocates instances by
-//! maximizing future-configuration reachability, frees them, and plans
-//! fusion/fission reconfigurations (destroy idle instances + create a
-//! bigger/smaller one) on behalf of Scheme B.
+//! Owns the live partition state of one GPU. Two API layers:
+//!
+//! * **Micro ops** — [`alloc`](PartitionManager::alloc) /
+//!   [`free`](PartitionManager::free): single-instance mutations using
+//!   the paper's max-reachability placement rule.
+//! * **Plans** — a [`PartitionPlan`] is an ordered list of typed
+//!   create/destroy ops executed as one transaction:
+//!   [`begin`](PartitionManager::begin) validates the whole op sequence
+//!   against the partition-state FSM, snapshots, and applies the
+//!   destroys; [`commit`](PartitionManager::commit) applies the creates
+//!   (or rolls back to the snapshot), so a plan either fully applies or
+//!   leaves the manager untouched. [`plan_cost_s`](PartitionManager::plan_cost_s)
+//!   prices a plan with the [`GpuSpec`] per-op latency model — the
+//!   simulator charges that as a reconfiguration window between `begin`
+//!   and `commit`, during which the plan's instances are unavailable.
+//!
+//! Planning helpers produce plans rather than mutating:
+//! [`plan_reconfig`](PartitionManager::plan_reconfig) (cheapest-first
+//! fusion/fission search over the state graph),
+//! [`plan_fill`](PartitionManager::plan_fill) (greedy homogeneous fill
+//! for Scheme A / replica reservation).
 
+use std::cmp::Ordering;
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use super::plan::{PartitionPlan, PlanError, PlanOp};
 use super::profile::GpuSpec;
 use super::reachability::ReachabilityTable;
 use super::state::{PartitionState, Placement};
 
 /// Handle to one live MIG instance.
 pub type InstanceId = u32;
-
-/// A reconfiguration plan: instances to destroy (fusion/fission inputs)
-/// so that `create` becomes placeable.
-#[derive(Debug, Clone, PartialEq)]
-pub struct ReconfigPlan {
-    pub destroy: Vec<InstanceId>,
-    pub create_profile: usize,
-    /// Number of create/destroy operations (for latency accounting).
-    pub ops: usize,
-}
 
 /// Errors from the partition manager.
 #[derive(Debug, thiserror::Error, PartialEq)]
@@ -32,6 +42,20 @@ pub enum MigError {
     NoPlacement(String),
     #[error("unknown instance id {0}")]
     UnknownInstance(InstanceId),
+    /// A plan failed validation or execution (see [`PlanError`]).
+    #[error(transparent)]
+    Plan(#[from] PlanError),
+}
+
+/// Snapshot + resolved creates of an open reconfiguration transaction.
+#[derive(Debug, Clone)]
+struct PlanTxn {
+    /// Create placements resolved at `begin` (validation time), in op
+    /// order.
+    resolved_creates: Vec<Placement>,
+    snap_state: PartitionState,
+    snap_instances: HashMap<InstanceId, Placement>,
+    snap_next_id: InstanceId,
 }
 
 /// Live partition manager for one GPU.
@@ -42,18 +66,14 @@ pub struct PartitionManager {
     state: PartitionState,
     instances: HashMap<InstanceId, Placement>,
     next_id: InstanceId,
+    /// Open `begin`/`commit` transaction, if any.
+    txn: Option<PlanTxn>,
 }
 
 impl PartitionManager {
     pub fn new(spec: Arc<GpuSpec>) -> Self {
         let table = ReachabilityTable::shared(&spec);
-        PartitionManager {
-            spec,
-            table,
-            state: PartitionState::empty(),
-            instances: HashMap::new(),
-            next_id: 1,
-        }
+        Self::with_table(spec, table)
     }
 
     /// Share the (expensive) reachability table across managers.
@@ -64,7 +84,30 @@ impl PartitionManager {
             state: PartitionState::empty(),
             instances: HashMap::new(),
             next_id: 1,
+            txn: None,
         }
+    }
+
+    /// A manager pre-populated with `state` (one instance per
+    /// placement, ids in placement order). Used by tests and tools that
+    /// need to start from an arbitrary enumerated state.
+    ///
+    /// Panics if `state` is not a valid state of `spec`.
+    pub fn from_state(spec: Arc<GpuSpec>, state: &PartitionState) -> (Self, Vec<InstanceId>) {
+        let mut m = Self::new(spec);
+        assert!(
+            m.table.is_valid(state),
+            "from_state requires a valid partition state"
+        );
+        let mut ids = Vec::with_capacity(state.len());
+        for &p in state.placements() {
+            m.state = m.state.with(p);
+            let id = m.next_id;
+            m.next_id += 1;
+            m.instances.insert(id, p);
+            ids.push(id);
+        }
+        (m, ids)
     }
 
     pub fn spec(&self) -> &GpuSpec {
@@ -123,18 +166,42 @@ impl PartitionManager {
         !self.placement_candidates(profile).is_empty()
     }
 
+    /// Paper Algorithm 3's placement rule against an arbitrary state:
+    /// argmax fcr, ties broken toward the highest start slice. This is
+    /// the single resolution rule shared by [`alloc`](Self::alloc),
+    /// plan validation, and the planning helpers, so placements can
+    /// never drift between the micro-op and transactional paths.
+    fn argmax_placement(&self, state: &PartitionState, profile: usize) -> Option<Placement> {
+        let prof = &self.spec.profiles[profile];
+        let mut best: Option<(Placement, u32)> = None;
+        for &s in &prof.placements {
+            let p = Placement {
+                profile: profile as u8,
+                start: s,
+            };
+            if !state.can_place(&self.spec, p) {
+                continue;
+            }
+            if let Some(f) = self.table.fcr(&state.with(p)) {
+                let better = match best {
+                    None => true,
+                    Some((bp, bf)) => (f, p.start) > (bf, bp.start),
+                };
+                if better {
+                    best = Some((p, f));
+                }
+            }
+        }
+        best.map(|(p, _)| p)
+    }
+
     /// Paper Algorithm 3: allocate by maximizing future-configuration
     /// reachability; ties broken toward the highest start slice (which is
     /// also what the paper's worked example picks).
     pub fn alloc(&mut self, profile: usize) -> Result<InstanceId, MigError> {
-        let mut cands = self.placement_candidates(profile);
-        if cands.is_empty() {
-            return Err(MigError::NoPlacement(
-                self.spec.profiles[profile].name.clone(),
-            ));
-        }
-        cands.sort_by_key(|(p, f)| (*f, p.start));
-        let (p, _) = *cands.last().unwrap();
+        let p = self
+            .argmax_placement(&self.state, profile)
+            .ok_or_else(|| MigError::NoPlacement(self.spec.profiles[profile].name.clone()))?;
         self.state = self.state.with(p);
         let id = self.next_id;
         self.next_id += 1;
@@ -155,21 +222,354 @@ impl PartitionManager {
         Ok(())
     }
 
-    /// Plan a fusion/fission reconfiguration: find the cheapest subset of
-    /// `destroyable` (idle) instances whose removal makes `profile`
-    /// placeable. Returns `None` if no subset works.
+    // ------------------------------------------------- plan execution
+
+    /// Whether a `begin`/`commit` transaction is open.
+    pub fn in_txn(&self) -> bool {
+        self.txn.is_some()
+    }
+
+    /// Shared destroy-op resolution rule: simulate removing `id` from
+    /// `state`, rejecting duplicates (against `seen`) and unknown ids.
+    /// Used by plan validation and every plan builder so destroy
+    /// semantics cannot drift between them.
+    fn resolve_destroy(
+        &self,
+        id: InstanceId,
+        seen: &[InstanceId],
+        state: &PartitionState,
+    ) -> Result<PartitionState, PlanError> {
+        if seen.contains(&id) {
+            return Err(PlanError::DuplicateDestroy(id));
+        }
+        let p = self
+            .instances
+            .get(&id)
+            .ok_or(PlanError::UnknownInstance(id))?;
+        Ok(state
+            .without(*p)
+            .expect("live instance placement present in state"))
+    }
+
+    /// Validate `plan` end-to-end against the partition-state FSM
+    /// without mutating: simulate the ops in order, resolve every
+    /// create to a concrete placement (pinned start, or argmax
+    /// reachability when unpinned), and check each intermediate state
+    /// is one the [`ReachabilityTable`] recognizes. Returns the
+    /// resolved create placements in op order.
+    pub fn validate_plan(&self, plan: &PartitionPlan) -> Result<Vec<Placement>, PlanError> {
+        let mut state = self.state.clone();
+        let mut destroyed: Vec<InstanceId> = Vec::new();
+        let mut resolved = Vec::new();
+        for (i, op) in plan.ops().iter().enumerate() {
+            match *op {
+                PlanOp::Destroy(id) => {
+                    state = self.resolve_destroy(id, &destroyed, &state)?;
+                    destroyed.push(id);
+                }
+                PlanOp::Create { profile, start } => {
+                    let placed = match start {
+                        Some(s) => {
+                            let p = Placement {
+                                profile: profile as u8,
+                                start: s,
+                            };
+                            (state.can_place(&self.spec, p)
+                                && self.table.is_valid(&state.with(p)))
+                            .then_some(p)
+                        }
+                        None => self.argmax_placement(&state, profile),
+                    };
+                    let p = placed.ok_or_else(|| PlanError::Unplaceable {
+                        profile: self.spec.profiles[profile].name.clone(),
+                        op_index: i,
+                    })?;
+                    state = state.with(p);
+                    resolved.push(p);
+                }
+            }
+        }
+        Ok(resolved)
+    }
+
+    /// Total driver latency of `plan` under this GPU's per-op cost
+    /// model (create/destroy base cost + per-memory-slice term).
+    pub fn plan_cost_s(&self, plan: &PartitionPlan) -> Result<f64, PlanError> {
+        let mut total = 0.0;
+        for op in plan.ops() {
+            total += match *op {
+                PlanOp::Destroy(id) => {
+                    let p = self
+                        .instances
+                        .get(&id)
+                        .ok_or(PlanError::UnknownInstance(id))?;
+                    self.spec.destroy_cost_s(p.profile as usize)
+                }
+                PlanOp::Create { profile, .. } => self.spec.create_cost_s(profile),
+            };
+        }
+        Ok(total)
+    }
+
+    /// Open a reconfiguration transaction: validate the whole plan,
+    /// snapshot the current layout, and apply the destroys. The creates
+    /// stay pending (their instances do not exist — and the destroyed
+    /// ones no longer exist — until [`commit`](Self::commit), which is
+    /// how the simulator models instance unavailability during the
+    /// driver's reconfiguration window).
     ///
-    /// Used by Scheme B: *merge* neighboring small partitions or *split*
-    /// bigger partitions to create the tightest fit for the current job.
+    /// On error nothing is mutated. Mutating the manager between
+    /// `begin` and `commit` is a contract violation: mutations that
+    /// collide with a resolved create make `commit` roll everything —
+    /// the intruding mutation included — back to the `begin` snapshot;
+    /// non-colliding mutations are merged silently. Don't do either.
+    pub fn begin(&mut self, plan: &PartitionPlan) -> Result<(), PlanError> {
+        if self.txn.is_some() {
+            return Err(PlanError::TxnInProgress);
+        }
+        let resolved_creates = self.validate_plan(plan)?;
+        let txn = PlanTxn {
+            resolved_creates,
+            snap_state: self.state.clone(),
+            snap_instances: self.instances.clone(),
+            snap_next_id: self.next_id,
+        };
+        for id in plan.destroys() {
+            let p = self
+                .instances
+                .remove(&id)
+                .expect("destroy validated against live instances");
+            self.state = self
+                .state
+                .without(p)
+                .expect("validated destroy present in state");
+        }
+        self.txn = Some(txn);
+        Ok(())
+    }
+
+    /// Close the open transaction by applying its creates, returning
+    /// the new instance ids in op order. If a resolved create no longer
+    /// fits (the manager was mutated under the transaction), the whole
+    /// transaction — destroys included — is rolled back to the `begin`
+    /// snapshot and [`PlanError::Conflict`] is returned.
+    pub fn commit(&mut self) -> Result<Vec<InstanceId>, PlanError> {
+        let txn = self.txn.take().ok_or(PlanError::NoTxn)?;
+        let mut state = self.state.clone();
+        for &p in &txn.resolved_creates {
+            if !state.can_place(&self.spec, p) || !self.table.is_valid(&state.with(p)) {
+                self.state = txn.snap_state;
+                self.instances = txn.snap_instances;
+                self.next_id = txn.snap_next_id;
+                return Err(PlanError::Conflict);
+            }
+            state = state.with(p);
+        }
+        self.state = state;
+        let mut created = Vec::with_capacity(txn.resolved_creates.len());
+        for p in txn.resolved_creates {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.instances.insert(id, p);
+            created.push(id);
+        }
+        Ok(created)
+    }
+
+    /// Abandon the open transaction, restoring the `begin` snapshot
+    /// (un-destroying its instances).
+    pub fn abort(&mut self) -> Result<(), PlanError> {
+        let txn = self.txn.take().ok_or(PlanError::NoTxn)?;
+        self.state = txn.snap_state;
+        self.instances = txn.snap_instances;
+        self.next_id = txn.snap_next_id;
+        Ok(())
+    }
+
+    /// `begin` + `commit` in one breath (no simulated window): validate
+    /// and apply `plan` atomically. Used by paths that reconfigure
+    /// outside simulated time (e.g. the serving front-end's replica
+    /// reservation).
+    pub fn apply_plan(&mut self, plan: &PartitionPlan) -> Result<Vec<InstanceId>, PlanError> {
+        self.begin(plan)?;
+        self.commit()
+    }
+
+    // -------------------------------------------------- plan builders
+
+    /// Plan a fusion/fission reconfiguration: find the **cheapest**
+    /// subset of `destroyable` (idle) instances whose removal makes
+    /// `profile` placeable, as a cheapest-first (Dijkstra) search over
+    /// the partition-state graph, priced by the per-op cost model.
+    /// Ties break toward fewer destroys, then toward the
+    /// lowest-indexed candidates. Under the default uniform cost model
+    /// all costs tie exactly, so this returns precisely the subset the
+    /// legacy exhaustive search returned (asserted by the parity and
+    /// oracle tests). Under a custom model, mathematically equal costs
+    /// may differ in the last float ulp (order-dependent summation), in
+    /// which case cost — not the index tie-break — decides; the result
+    /// is still deterministic for a given candidate order.
+    ///
+    /// Unlike the legacy O(2^n) subset enumeration (preserved as
+    /// [`plan_reconfig_exhaustive`](Self::plan_reconfig_exhaustive)),
+    /// this handles **any** number of destroy candidates — no silent
+    /// truncation. Duplicate ids in `destroyable` are deduplicated;
+    /// unknown ids are a typed error. Returns
+    /// [`PlanError::NoPlan`] when even destroying every candidate
+    /// would not make `profile` placeable.
     pub fn plan_reconfig(
         &self,
         profile: usize,
         destroyable: &[InstanceId],
-    ) -> Option<ReconfigPlan> {
+    ) -> Result<PartitionPlan, PlanError> {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+
+        // Resolve and dedup the candidate set. The u64 slice mask caps
+        // live instances at 64, so a u128 subset mask always fits.
+        let mut cand: Vec<(InstanceId, Placement, f64)> = Vec::new();
+        for &id in destroyable {
+            if cand.iter().any(|(c, _, _)| *c == id) {
+                continue;
+            }
+            let p = *self
+                .instances
+                .get(&id)
+                .ok_or(PlanError::UnknownInstance(id))?;
+            cand.push((id, p, self.spec.destroy_cost_s(p.profile as usize)));
+        }
+        debug_assert!(cand.len() < 128, "subset mask width exceeded");
+
+        let placeable = |s: &PartitionState| {
+            self.spec.profiles[profile].placements.iter().any(|&st| {
+                let p = Placement {
+                    profile: profile as u8,
+                    start: st,
+                };
+                s.can_place(&self.spec, p) && self.table.is_valid(&s.with(p))
+            })
+        };
+
+        // Destroying strictly frees capacity, so the all-destroyed state
+        // dominates every other: if even it cannot host the profile, no
+        // subset can — bail before searching.
+        let mut stripped = self.state.clone();
+        for (_, p, _) in &cand {
+            stripped = stripped
+                .without(*p)
+                .expect("live candidate placement present in state");
+        }
+        if !placeable(&stripped) {
+            return Err(PlanError::NoPlan {
+                profile: self.spec.profiles[profile].name.clone(),
+            });
+        }
+
+        /// Search frontier entry; the priority is (cost, destroys,
+        /// subset-mask) — the mask tie-break reproduces the legacy
+        /// ascending-bits subset order.
+        struct Node {
+            cost: f64,
+            len: u32,
+            bits: u128,
+            state: PartitionState,
+        }
+        impl Node {
+            fn key(&self) -> (f64, u32, u128) {
+                (self.cost, self.len, self.bits)
+            }
+        }
+        /// The single priority comparator: (cost, destroys, subset
+        /// mask). `bits` uniquely identifies the subset (and therefore
+        /// the state), so this is already a total order over nodes.
+        fn key_cmp(a: (f64, u32, u128), b: (f64, u32, u128)) -> Ordering {
+            a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+        }
+        fn key_lt(a: (f64, u32, u128), b: (f64, u32, u128)) -> bool {
+            key_cmp(a, b) == Ordering::Less
+        }
+        impl PartialEq for Node {
+            fn eq(&self, o: &Self) -> bool {
+                self.cmp(o) == Ordering::Equal
+            }
+        }
+        impl Eq for Node {}
+        impl Ord for Node {
+            fn cmp(&self, o: &Self) -> Ordering {
+                key_cmp(self.key(), o.key())
+            }
+        }
+        impl PartialOrd for Node {
+            fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+
+        let mut best: HashMap<PartitionState, (f64, u32, u128)> = HashMap::new();
+        let mut heap: BinaryHeap<Reverse<Node>> = BinaryHeap::new();
+        let start = Node {
+            cost: 0.0,
+            len: 0,
+            bits: 0,
+            state: self.state.clone(),
+        };
+        best.insert(start.state.clone(), start.key());
+        heap.push(Reverse(start));
+        while let Some(Reverse(node)) = heap.pop() {
+            match best.get(&node.state) {
+                Some(&k) if k == node.key() => {}
+                _ => continue, // superseded by a cheaper path
+            }
+            if placeable(&node.state) {
+                let mut plan = PartitionPlan::new();
+                for (i, (id, _, _)) in cand.iter().enumerate() {
+                    if node.bits & (1u128 << i) != 0 {
+                        plan.push_destroy(*id);
+                    }
+                }
+                plan.push_create(profile);
+                return Ok(plan);
+            }
+            for (i, (_, p, c)) in cand.iter().enumerate() {
+                if node.bits & (1u128 << i) != 0 {
+                    continue;
+                }
+                let next_state = node
+                    .state
+                    .without(*p)
+                    .expect("undestroyed candidate still in state");
+                let key = (node.cost + c, node.len + 1, node.bits | (1u128 << i));
+                let improved = match best.get(&next_state) {
+                    None => true,
+                    Some(&k) => key_lt(key, k),
+                };
+                if improved {
+                    best.insert(next_state.clone(), key);
+                    heap.push(Reverse(Node {
+                        cost: key.0,
+                        len: key.1,
+                        bits: key.2,
+                        state: next_state,
+                    }));
+                }
+            }
+        }
+        unreachable!("all-destroyed pre-check guarantees a reachable goal")
+    }
+
+    /// The legacy exhaustive fusion/fission planner — O(2^n) subset
+    /// enumeration, **silently truncated at 16 candidates**. Preserved
+    /// verbatim as the reference oracle for the planner benchmarks and
+    /// cross-validation tests; production planning is
+    /// [`plan_reconfig`](Self::plan_reconfig).
+    pub fn plan_reconfig_exhaustive(
+        &self,
+        profile: usize,
+        destroyable: &[InstanceId],
+    ) -> Option<PartitionPlan> {
         let n = destroyable.len().min(16);
-        let mut best: Option<ReconfigPlan> = None;
-        // Subsets in increasing popcount order => first hit is cheapest.
-        for bits in 1u32..(1 << n) {
+        let mut best: Option<Vec<InstanceId>> = None;
+        for bits in 1u32..(1u32 << n) {
             let mut s = self.state.clone();
             let ids: Vec<InstanceId> = (0..n)
                 .filter(|i| bits & (1 << i) != 0)
@@ -177,8 +577,8 @@ impl PartitionManager {
                 .collect();
             let mut ok = true;
             for &id in &ids {
-                match self.instances.get(&id) {
-                    Some(p) => s = s.without(*p).unwrap(),
+                match self.instances.get(&id).and_then(|p| s.without(*p)) {
+                    Some(t) => s = t,
                     None => {
                         ok = false;
                         break;
@@ -197,19 +597,53 @@ impl PartitionManager {
                 s.can_place(&self.spec, p) && self.table.is_valid(&s.with(p))
             });
             if placeable {
-                let plan = ReconfigPlan {
-                    ops: ids.len() + 1,
-                    destroy: ids,
-                    create_profile: profile,
-                };
                 match &best {
-                    None => best = Some(plan),
-                    Some(b) if plan.destroy.len() < b.destroy.len() => best = Some(plan),
+                    None => best = Some(ids),
+                    Some(b) if ids.len() < b.len() => best = Some(ids),
                     _ => {}
                 }
             }
         }
-        best
+        best.map(|ids| {
+            let mut plan = PartitionPlan::destroy_only(ids);
+            plan.push_create(profile);
+            plan
+        })
+    }
+
+    /// Plan a greedy homogeneous fill: destroy `destroy`, then create
+    /// instances by scanning `candidates` in order (first placeable
+    /// profile each round, argmax-reachability slot) until nothing
+    /// fits — Scheme A's per-class layout and the server's replica
+    /// reservation, as one multi-create plan with pinned placements.
+    pub fn plan_fill(
+        &self,
+        destroy: &[InstanceId],
+        candidates: &[usize],
+    ) -> Result<PartitionPlan, PlanError> {
+        let mut plan = PartitionPlan::new();
+        let mut state = self.state.clone();
+        let mut seen: Vec<InstanceId> = Vec::new();
+        for &id in destroy {
+            state = self.resolve_destroy(id, &seen, &state)?;
+            seen.push(id);
+            plan.push_destroy(id);
+        }
+        loop {
+            let mut placed = false;
+            for &prof in candidates {
+                if let Some(p) = self.argmax_placement(&state, prof) {
+                    state = state.with(p);
+                    plan.push_create_at(prof, p.start);
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                break;
+            }
+        }
+        Ok(plan)
     }
 
     /// Free memory (GB) not held by any instance.
@@ -226,6 +660,7 @@ impl PartitionManager {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mig::profile::MigProfile;
 
     fn mgr() -> PartitionManager {
         PartitionManager::new(Arc::new(GpuSpec::a100_40gb()))
@@ -238,10 +673,7 @@ mod tests {
         let mut m = mgr();
         let id = m.alloc(0).unwrap();
         let p = m.placement_of(id).unwrap();
-        let best = m
-            .table()
-            .fcr(m.state())
-            .unwrap();
+        let best = m.table().fcr(m.state()).unwrap();
         // No alternative placement of the same profile from empty state
         // has strictly higher fcr.
         let empty = PartitionState::empty();
@@ -282,10 +714,7 @@ mod tests {
     fn alloc_fails_when_full() {
         let mut m = mgr();
         m.alloc(4).unwrap(); // 7g.40gb takes the whole GPU
-        assert_eq!(
-            m.alloc(0),
-            Err(MigError::NoPlacement("1g.5gb".into()))
-        );
+        assert_eq!(m.alloc(0), Err(MigError::NoPlacement("1g.5gb".into())));
     }
 
     #[test]
@@ -296,27 +725,227 @@ mod tests {
 
     #[test]
     fn plan_reconfig_merges_small_into_large() {
-        // Partition fusion: two idle 1g.5gb on slices 0..2 block a
-        // 2g.10gb; destroying them makes it placeable.
+        // Partition fusion: two idle 1g.5gb block a 2g.10gb; the plan
+        // destroys them and creates the 2g, priced by the cost model.
         let mut m = mgr();
         let ids: Vec<_> = (0..7).map(|_| m.alloc(0).unwrap()).collect();
         assert!(!m.can_alloc(1));
         let plan = m.plan_reconfig(1, &ids).expect("fusion plan");
-        assert_eq!(plan.create_profile, 1);
-        assert_eq!(plan.destroy.len(), 2, "cheapest fusion destroys 2 slices");
-        // Execute the plan and verify.
-        for id in &plan.destroy {
-            m.free(*id).unwrap();
-        }
-        assert!(m.can_alloc(1));
-        m.alloc(1).unwrap();
+        assert_eq!(plan.n_destroys(), 2, "cheapest fusion destroys 2 slices");
+        assert_eq!(plan.n_creates(), 1);
+        let cost = m.plan_cost_s(&plan).unwrap();
+        assert!(
+            (cost - 3.0 * m.spec().reconfig_op_s).abs() < 1e-12,
+            "3 uniform ops at the default cost model, got {cost}"
+        );
+        // Execute transactionally and verify.
+        let created = m.apply_plan(&plan).unwrap();
+        assert_eq!(created.len(), 1);
+        assert_eq!(m.profile_of(created[0]), Some(1));
+        assert!(m.table().is_valid(m.state()));
     }
 
     #[test]
-    fn plan_reconfig_none_when_nothing_destroyable() {
+    fn plan_reconfig_errors_when_nothing_destroyable() {
         let mut m = mgr();
         let _held: Vec<_> = (0..7).map(|_| m.alloc(0).unwrap()).collect();
-        assert!(m.plan_reconfig(4, &[]).is_none());
+        assert!(matches!(
+            m.plan_reconfig(4, &[]),
+            Err(PlanError::NoPlan { .. })
+        ));
+        assert_eq!(
+            m.plan_reconfig(1, &[99]),
+            Err(PlanError::UnknownInstance(99))
+        );
+    }
+
+    #[test]
+    fn planner_matches_exhaustive_reference() {
+        // The graph search must return exactly the subset the legacy
+        // O(2^n) enumeration picked (min cost, then fewest destroys,
+        // then ascending-bits order) on every profile from a fragmented
+        // A100 — this is what keeps scheme-B runs reproducible across
+        // the planner swap.
+        let mut m = mgr();
+        let mut ids: Vec<_> = (0..7).map(|_| m.alloc(0).unwrap()).collect();
+        // free two to create a realistic fragmentation pattern
+        m.free(ids.remove(2)).unwrap();
+        m.free(ids.remove(4)).unwrap();
+        for profile in 0..m.spec().profiles.len() {
+            let fast = m.plan_reconfig(profile, &ids).ok();
+            let slow = m.plan_reconfig_exhaustive(profile, &ids);
+            match (&fast, &slow) {
+                // The graph search also answers when no destroys are
+                // needed; the exhaustive oracle never considers the
+                // empty subset, so only compare real fusion plans.
+                (Some(f), _) if f.n_destroys() == 0 => {
+                    assert!(m.can_alloc(profile), "profile {profile}");
+                }
+                (Some(f), Some(s)) => {
+                    assert_eq!(
+                        f.destroys().collect::<Vec<_>>(),
+                        s.destroys().collect::<Vec<_>>(),
+                        "profile {profile}: planners disagree"
+                    );
+                }
+                (None, None) => {}
+                (None, Some(_)) => panic!("profile {profile}: graph search missed a plan"),
+                (Some(_), None) => panic!("profile {profile}: oracle missed a plan"),
+            }
+        }
+    }
+
+    #[test]
+    fn plan_fill_reproduces_scheme_a_two_way_split() {
+        // The multi-create path: one plan that creates both halves of
+        // Scheme A's 20GB class (4g.20gb then 3g.20gb).
+        let mut m = mgr();
+        let plan = m.plan_fill(&[], &[3, 2]).unwrap();
+        assert_eq!(plan.n_creates(), 2);
+        assert_eq!(plan.n_destroys(), 0);
+        let created = m.apply_plan(&plan).unwrap();
+        assert_eq!(created.len(), 2);
+        assert_eq!(m.compute_slices_of(created[0]), Some(4));
+        assert_eq!(m.compute_slices_of(created[1]), Some(3));
+        assert!(!m.can_alloc(0), "no memory left for a 1g.5gb");
+    }
+
+    #[test]
+    fn txn_applies_all_or_nothing() {
+        // Invalid destroy: nothing mutates.
+        let mut m = mgr();
+        let a = m.alloc(0).unwrap();
+        let before = m.state().clone();
+        let mut bad = PartitionPlan::destroy_only([a, 999]);
+        bad.push_create(1);
+        assert_eq!(m.begin(&bad), Err(PlanError::UnknownInstance(999)));
+        assert_eq!(m.state(), &before);
+        assert_eq!(m.instance_count(), 1);
+
+        // Unplaceable create: nothing mutates.
+        let mut full = mgr();
+        full.alloc(4).unwrap();
+        let before = full.state().clone();
+        assert!(matches!(
+            full.begin(&PartitionPlan::create_one(0)),
+            Err(PlanError::Unplaceable { .. })
+        ));
+        assert_eq!(full.state(), &before);
+
+        // Conflict at commit: everything (destroys included) rolls back
+        // to the begin snapshot.
+        let mut m = mgr();
+        let held = m.alloc(0).unwrap();
+        let before = m.state().clone();
+        let mut plan = PartitionPlan::destroy_only([held]);
+        plan.push_create(4); // 7g needs the whole GPU
+        m.begin(&plan).unwrap();
+        assert!(m.in_txn());
+        assert_eq!(m.instance_count(), 0, "destroys apply at begin");
+        // contract violation: mutate under the open txn
+        let intruder = m.alloc(0).unwrap();
+        assert_eq!(m.commit(), Err(PlanError::Conflict));
+        assert!(!m.in_txn());
+        assert_eq!(m.state(), &before, "rolled back to the begin snapshot");
+        assert_eq!(m.free(intruder), Err(MigError::UnknownInstance(intruder)));
+
+        // begin-begin and commit-without-begin are typed errors.
+        let mut m = mgr();
+        m.begin(&PartitionPlan::create_one(0)).unwrap();
+        assert_eq!(
+            m.begin(&PartitionPlan::create_one(0)),
+            Err(PlanError::TxnInProgress)
+        );
+        let created = m.commit().unwrap();
+        assert_eq!(created.len(), 1);
+        assert_eq!(m.commit(), Err(PlanError::NoTxn));
+
+        // abort un-destroys.
+        let mut m = mgr();
+        let a = m.alloc(1).unwrap();
+        let before = m.state().clone();
+        m.begin(&PartitionPlan::destroy_only([a])).unwrap();
+        assert_eq!(m.instance_count(), 0);
+        m.abort().unwrap();
+        assert_eq!(m.state(), &before);
+        assert_eq!(m.placement_of(a).map(|p| p.profile), Some(1));
+    }
+
+    #[test]
+    fn from_state_rebuilds_any_valid_state() {
+        let spec = Arc::new(GpuSpec::a100_40gb());
+        let s = PartitionState::from_placements(vec![
+            Placement { profile: 0, start: 0 },
+            Placement { profile: 2, start: 4 },
+        ]);
+        let (m, ids) = PartitionManager::from_state(spec, &s);
+        assert_eq!(m.state(), &s);
+        assert_eq!(ids.len(), 2);
+        assert_eq!(m.profile_of(ids[0]), Some(0));
+        assert_eq!(m.profile_of(ids[1]), Some(2));
+    }
+
+    /// A synthetic 17-slice GPU: 17 one-slice instances can be live at
+    /// once — more destroy candidates than the legacy planner's silent
+    /// 16-candidate truncation could ever see. The 2-slice profile
+    /// places only at slice 15, so fusing it requires destroying the
+    /// instances on slices 15 *and* 16 and the search stays shallow
+    /// (the ~2^17-state reachability precompute is inherent to having
+    /// 17 live instances, but the Dijkstra itself stops at depth 2).
+    fn wide_spec() -> GpuSpec {
+        GpuSpec::custom(
+            "WIDE-17",
+            17,
+            17,
+            85.0,
+            vec![
+                MigProfile {
+                    name: "1g.5gb".into(),
+                    compute_slices: 1,
+                    mem_slices: 1,
+                    mem_gb: 5.0,
+                    placements: (0..17).collect(),
+                },
+                MigProfile {
+                    name: "2g.10gb".into(),
+                    compute_slices: 2,
+                    mem_slices: 2,
+                    mem_gb: 10.0,
+                    placements: vec![15],
+                },
+            ],
+        )
+    }
+
+    #[test]
+    fn planner_handles_more_than_16_destroy_candidates() {
+        // Regression: the legacy planner truncated `destroyable` at 16
+        // entries, silently reporting "no plan" whenever the answer
+        // needed candidate #17. Order the candidates by slice so the
+        // fusion must destroy the instances at indices 15 and 16 — the
+        // last of which the truncated enumeration can never consider.
+        let spec = Arc::new(wide_spec());
+        let mut m = PartitionManager::new(spec);
+        let mut ids: Vec<_> = (0..17).map(|_| m.alloc(0).unwrap()).collect();
+        assert_eq!(ids.len(), 17);
+        ids.sort_by_key(|&id| m.placement_of(id).unwrap().start);
+        assert!(!m.can_alloc(1));
+        assert!(
+            m.plan_reconfig_exhaustive(1, &ids).is_none(),
+            "legacy truncation misses the plan needing candidate #17"
+        );
+        let plan = m
+            .plan_reconfig(1, &ids)
+            .expect("graph planner handles >16 candidates");
+        assert_eq!(plan.n_destroys(), 2);
+        let destroyed_slices: Vec<u8> = plan
+            .destroys()
+            .map(|id| m.placement_of(id).unwrap().start)
+            .collect();
+        assert_eq!(destroyed_slices, vec![15, 16]);
+        let created = m.apply_plan(&plan).unwrap();
+        assert_eq!(m.profile_of(created[0]), Some(1));
+        assert!(m.table().is_valid(m.state()));
     }
 
     #[test]

@@ -1,21 +1,53 @@
 //! MIG geometry, the partition-state FSM, and the dynamic partition
-//! manager (paper §4 — Algorithms 2 and 3).
+//! manager (paper §4 — Algorithms 2 and 3), built around a
+//! **transactional reconfiguration model**: every layout change is a
+//! typed, validated, cost-accounted [`PartitionPlan`].
 //!
-//! * [`profile`] — hardware profile tables (A100/A30/H100 etc.).
+//! * [`profile`] — hardware profile tables (A100/A30/H100 etc.) plus
+//!   the per-op reconfiguration **cost model**
+//!   ([`GpuSpec::create_cost_s`] / [`GpuSpec::destroy_cost_s`]): the
+//!   latency one `nvidia-smi mig` create/destroy op charges, defaulting
+//!   to the uniform legacy `reconfig_op_s`.
 //! * [`state`] — placements, canonical partition states, enumeration of
-//!   valid and fully-configured states (reproduces Figure 3's 19 configs).
-//! * [`reachability`] — precomputed future-configuration reachability.
-//! * [`manager`] — the live allocator: max-reachability placement,
-//!   deallocation, fusion/fission reconfiguration planning.
+//!   valid and fully-configured states (reproduces Figure 3's 19
+//!   configs). Slice masks are `u64`, so synthetic specs up to 63
+//!   memory slices are representable.
+//! * [`reachability`] — precomputed future-configuration reachability:
+//!   the state graph the allocator scores against and the planner
+//!   searches over.
+//! * [`plan`] — [`PartitionPlan`]: an ordered list of typed
+//!   `Destroy`/`Create` ops with multi-create support, plus the
+//!   [`PlanError`] taxonomy.
+//! * [`manager`] — the live manager. Micro ops ([`PartitionManager::alloc`]
+//!   / [`PartitionManager::free`], max-reachability placement) and the
+//!   transaction protocol ([`PartitionManager::begin`] validates against
+//!   the FSM and applies destroys, [`PartitionManager::commit`] applies
+//!   creates, any failure rolls back — all-or-nothing). Planning
+//!   helpers: [`PartitionManager::plan_reconfig`] (cheapest-first
+//!   fusion/fission search over the state graph — no candidate-count
+//!   truncation), [`PartitionManager::plan_fill`] (greedy homogeneous
+//!   fill), and the legacy O(2^n)
+//!   [`PartitionManager::plan_reconfig_exhaustive`] oracle kept for
+//!   benchmarks/cross-checks.
+//! * [`alloc_policy`] — ablation placement policies (first-fit,
+//!   last-fit, random) and the fragmentation churn experiment.
+//!
+//! The scheduling layer consumes plans through
+//! `scheduler::Action::Reconfig`; the simulator charges
+//! [`PartitionManager::plan_cost_s`] as a reconfiguration window
+//! between `begin` and `commit`, during which the plan's instances are
+//! unavailable.
 
 pub mod alloc_policy;
 pub mod manager;
+pub mod plan;
 pub mod profile;
 pub mod reachability;
 pub mod state;
 
 pub use alloc_policy::{churn_experiment, ChurnResult, PlacementPolicy, PolicyManager};
-pub use manager::{InstanceId, MigError, PartitionManager, ReconfigPlan};
+pub use manager::{InstanceId, MigError, PartitionManager};
+pub use plan::{PartitionPlan, PlanError, PlanOp};
 pub use profile::{GpuSpec, MigProfile};
 pub use reachability::ReachabilityTable;
 pub use state::{enumerate_states, PartitionState, Placement};

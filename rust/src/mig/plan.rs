@@ -1,0 +1,233 @@
+//! Transactional partition reconfiguration plans.
+//!
+//! A [`PartitionPlan`] is an *ordered list of typed driver operations* —
+//! [`PlanOp::Destroy`] and [`PlanOp::Create`] — describing one atomic
+//! reconfiguration of a GPU's MIG layout. Plans are the unit of
+//! validation, cost accounting, and execution:
+//!
+//! * **Validation** — [`PartitionManager::begin`] simulates the ops in
+//!   order against the partition-state FSM (every intermediate create
+//!   must be placeable and leave a state the [`ReachabilityTable`]
+//!   recognizes as valid) before anything mutates.
+//! * **Cost** — every op has a latency derived from the
+//!   [`GpuSpec`](super::GpuSpec) cost model
+//!   ([`GpuSpec::create_cost_s`](super::GpuSpec::create_cost_s) /
+//!   [`GpuSpec::destroy_cost_s`](super::GpuSpec::destroy_cost_s));
+//!   [`PartitionManager::plan_cost_s`] sums them. The simulator charges
+//!   the sum as one reconfiguration window during which the affected
+//!   instances are unavailable.
+//! * **Atomicity** — `begin` applies the destroys and stashes a
+//!   snapshot; [`PartitionManager::commit`] applies the creates; any
+//!   failure restores the snapshot, so a plan either fully applies or
+//!   leaves the manager untouched.
+//!
+//! Plans support **multiple creates** (Scheme A's homogeneous class
+//! fill, the server's replica reservation) as well as destroy-only and
+//! mixed fusion/fission shapes.
+//!
+//! [`PartitionManager::begin`]: super::PartitionManager::begin
+//! [`PartitionManager::commit`]: super::PartitionManager::commit
+//! [`PartitionManager::plan_cost_s`]: super::PartitionManager::plan_cost_s
+//! [`ReachabilityTable`]: super::ReachabilityTable
+
+use super::manager::InstanceId;
+
+/// One typed driver operation inside a [`PartitionPlan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanOp {
+    /// Destroy a live (idle) instance.
+    Destroy(InstanceId),
+    /// Create an instance of `profile`. `start` pins the placement;
+    /// `None` lets the executor pick the argmax-reachability slot (the
+    /// paper's Algorithm 3 rule) at validation time.
+    Create {
+        /// Index into `GpuSpec::profiles`.
+        profile: usize,
+        /// Start memory slice, or `None` for max-reachability placement.
+        start: Option<u8>,
+    },
+}
+
+/// Errors from plan validation, planning, and the begin/commit
+/// transaction protocol.
+#[derive(Debug, Clone, thiserror::Error, PartialEq, Eq)]
+pub enum PlanError {
+    /// A destroy op references an instance this manager does not hold.
+    #[error("plan destroys unknown instance {0}")]
+    UnknownInstance(InstanceId),
+    /// The same instance is destroyed twice in one plan.
+    #[error("plan destroys instance {0} twice")]
+    DuplicateDestroy(InstanceId),
+    /// A create op has no legal placement (or none with a valid
+    /// resulting state) at its point in the op sequence.
+    #[error("no legal placement for profile {profile} at op {op_index}")]
+    Unplaceable {
+        /// Profile name of the create that failed.
+        profile: String,
+        /// Index of the failing op within the plan.
+        op_index: usize,
+    },
+    /// The planner found no destroy subset that makes the profile
+    /// placeable (even destroying every candidate would not help).
+    #[error("no reconfiguration of the destroyable set enables profile {profile}")]
+    NoPlan {
+        /// Profile name that could not be enabled.
+        profile: String,
+    },
+    /// `begin` was called while another transaction is open.
+    #[error("a reconfiguration transaction is already in progress")]
+    TxnInProgress,
+    /// `commit`/`abort` was called with no open transaction.
+    #[error("no reconfiguration transaction is in progress")]
+    NoTxn,
+    /// The manager was mutated between `begin` and `commit` and a
+    /// resolved create no longer fits; the transaction was rolled back
+    /// to the `begin` snapshot.
+    #[error("partition state changed under the open transaction; rolled back")]
+    Conflict,
+}
+
+/// An ordered, typed, multi-op reconfiguration transaction.
+///
+/// See the [module docs](self) for the validation/cost/atomicity
+/// contract. Construction helpers cover the common shapes; arbitrary
+/// op sequences can be assembled with [`push`](Self::push).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PartitionPlan {
+    ops: Vec<PlanOp>,
+}
+
+impl PartitionPlan {
+    /// An empty plan (push ops onto it).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A plan from an explicit op sequence.
+    pub fn from_ops(ops: Vec<PlanOp>) -> Self {
+        PartitionPlan { ops }
+    }
+
+    /// Create exactly one instance of `profile` (max-reachability slot).
+    pub fn create_one(profile: usize) -> Self {
+        Self::create_n(profile, 1)
+    }
+
+    /// Create `n` instances of `profile` (max-reachability slots,
+    /// resolved sequentially) — the multi-create shape used by
+    /// replica reservation.
+    pub fn create_n(profile: usize, n: usize) -> Self {
+        PartitionPlan {
+            ops: (0..n)
+                .map(|_| PlanOp::Create {
+                    profile,
+                    start: None,
+                })
+                .collect(),
+        }
+    }
+
+    /// Destroy-only plan (e.g. clearing idle instances).
+    pub fn destroy_only(ids: impl IntoIterator<Item = InstanceId>) -> Self {
+        PartitionPlan {
+            ops: ids.into_iter().map(PlanOp::Destroy).collect(),
+        }
+    }
+
+    /// Append an op.
+    pub fn push(&mut self, op: PlanOp) {
+        self.ops.push(op);
+    }
+
+    /// Append a destroy op.
+    pub fn push_destroy(&mut self, id: InstanceId) {
+        self.ops.push(PlanOp::Destroy(id));
+    }
+
+    /// Append a create op with max-reachability placement.
+    pub fn push_create(&mut self, profile: usize) {
+        self.ops.push(PlanOp::Create {
+            profile,
+            start: None,
+        });
+    }
+
+    /// Append a create op pinned to `start`.
+    pub fn push_create_at(&mut self, profile: usize, start: u8) {
+        self.ops.push(PlanOp::Create {
+            profile,
+            start: Some(start),
+        });
+    }
+
+    /// The op sequence.
+    pub fn ops(&self) -> &[PlanOp] {
+        &self.ops
+    }
+
+    /// Number of driver operations (destroys + creates).
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Instance ids destroyed by this plan, in op order.
+    pub fn destroys(&self) -> impl Iterator<Item = InstanceId> + '_ {
+        self.ops.iter().filter_map(|op| match op {
+            PlanOp::Destroy(id) => Some(*id),
+            _ => None,
+        })
+    }
+
+    /// Profiles created by this plan, in op order.
+    pub fn creates(&self) -> impl Iterator<Item = usize> + '_ {
+        self.ops.iter().filter_map(|op| match op {
+            PlanOp::Create { profile, .. } => Some(*profile),
+            _ => None,
+        })
+    }
+
+    pub fn n_destroys(&self) -> usize {
+        self.destroys().count()
+    }
+
+    pub fn n_creates(&self) -> usize {
+        self.creates().count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_shape_the_op_sequence() {
+        let p = PartitionPlan::create_n(2, 3);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.n_creates(), 3);
+        assert_eq!(p.n_destroys(), 0);
+        assert!(p.creates().all(|prof| prof == 2));
+
+        let d = PartitionPlan::destroy_only([4, 9]);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.destroys().collect::<Vec<_>>(), vec![4, 9]);
+        assert_eq!(d.n_creates(), 0);
+
+        let mut m = PartitionPlan::new();
+        assert!(m.is_empty());
+        m.push_destroy(1);
+        m.push_create_at(0, 6);
+        m.push_create(3);
+        assert_eq!(m.len(), 3);
+        assert_eq!(
+            m.ops()[1],
+            PlanOp::Create {
+                profile: 0,
+                start: Some(6)
+            }
+        );
+    }
+}

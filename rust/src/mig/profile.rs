@@ -42,8 +42,21 @@ pub struct GpuSpec {
     pub idle_power_w: f64,
     /// Board power at full utilization (W).
     pub max_power_w: f64,
-    /// Latency of one `create`/`destroy` instance operation (s).
+    /// Latency of one `create`/`destroy` instance operation (s) — the
+    /// legacy *uniform* reconfiguration cost. Kept as the default the
+    /// per-op model below falls back to, so the modeled plan cost of a
+    /// k-op plan coincides with the historical `k * reconfig_op_s`
+    /// unless a spec (or config file) overrides the per-op fields.
     pub reconfig_op_s: f64,
+    /// Per-op cost model for [`PartitionPlan`](super::PartitionPlan)
+    /// pricing: base latency of one `nvidia-smi mig` create op (s).
+    pub reconfig_create_s: f64,
+    /// Base latency of one destroy op (s).
+    pub reconfig_destroy_s: f64,
+    /// Additional create/destroy latency per memory slice of the
+    /// affected profile (s) — larger instances take longer to
+    /// (de)materialize. Zero by default (uniform legacy model).
+    pub reconfig_per_mem_slice_s: f64,
     /// Multiplicative allocator-bookkeeping overhead per extra active
     /// instance (paper Table 3: cudaMalloc 0.24s -> 0.98s at 7 slices).
     pub alloc_overhead_per_instance: f64,
@@ -108,6 +121,9 @@ impl GpuSpec {
             idle_power_w: 55.0,
             max_power_w: 250.0,
             reconfig_op_s: 0.1,
+            reconfig_create_s: 0.1,
+            reconfig_destroy_s: 0.1,
+            reconfig_per_mem_slice_s: 0.0,
             alloc_overhead_per_instance: 0.5,
             free_overhead_per_instance_s: 0.004,
             size_ladder: Vec::new(),
@@ -150,6 +166,9 @@ impl GpuSpec {
             idle_power_w: 30.0,
             max_power_w: 165.0,
             reconfig_op_s: 0.1,
+            reconfig_create_s: 0.1,
+            reconfig_destroy_s: 0.1,
+            reconfig_per_mem_slice_s: 0.0,
             alloc_overhead_per_instance: 0.5,
             free_overhead_per_instance_s: 0.004,
             size_ladder: Vec::new(),
@@ -181,6 +200,53 @@ impl GpuSpec {
         spec.max_power_w = 350.0;
         spec.pcie_gbps = 25.0;
         spec
+    }
+
+    /// Build a synthetic spec (tests, what-if studies). Power, PCIe,
+    /// overhead, and reconfiguration-cost fields take the A100
+    /// defaults; adjust them on the returned value if needed.
+    pub fn custom(
+        name: &str,
+        total_mem_slices: u8,
+        total_compute: u8,
+        total_mem_gb: f64,
+        profiles: Vec<MigProfile>,
+    ) -> Self {
+        assert!(
+            total_mem_slices < 64,
+            "placement masks are u64: at most 63 memory slices"
+        );
+        let mut spec = GpuSpec {
+            name: name.into(),
+            total_mem_slices,
+            total_compute,
+            total_mem_gb,
+            profiles,
+            pcie_gbps: 12.0,
+            idle_power_w: 55.0,
+            max_power_w: 250.0,
+            reconfig_op_s: 0.1,
+            reconfig_create_s: 0.1,
+            reconfig_destroy_s: 0.1,
+            reconfig_per_mem_slice_s: 0.0,
+            alloc_overhead_per_instance: 0.5,
+            free_overhead_per_instance_s: 0.004,
+            size_ladder: Vec::new(),
+        };
+        spec.rebuild_ladder();
+        spec
+    }
+
+    /// Modeled latency of creating one instance of `profile` (s).
+    pub fn create_cost_s(&self, profile: usize) -> f64 {
+        self.reconfig_create_s
+            + self.reconfig_per_mem_slice_s * self.profiles[profile].mem_slices as f64
+    }
+
+    /// Modeled latency of destroying one instance of `profile` (s).
+    pub fn destroy_cost_s(&self, profile: usize) -> f64 {
+        self.reconfig_destroy_s
+            + self.reconfig_per_mem_slice_s * self.profiles[profile].mem_slices as f64
     }
 
     /// Look up a GPU spec by name (used by the config loader and CLI).
@@ -338,6 +404,44 @@ mod tests {
         assert_eq!(spec.class_of(6.0), 1);
         assert_eq!(spec.class_of(17.0), 2);
         assert_eq!(spec.class_of(99.0), 3);
+    }
+
+    #[test]
+    fn default_cost_model_matches_the_uniform_legacy_cost() {
+        // Parity anchor: with no overrides, every op costs exactly
+        // `reconfig_op_s`, so modeled plan costs equal the historical
+        // ops-count accounting bit for bit.
+        for name in ["a100", "a30", "h100", "a100-80gb"] {
+            let spec = GpuSpec::by_name(name).unwrap();
+            for p in 0..spec.profiles.len() {
+                assert_eq!(spec.create_cost_s(p), spec.reconfig_op_s, "{name}/{p}");
+                assert_eq!(spec.destroy_cost_s(p), spec.reconfig_op_s, "{name}/{p}");
+            }
+        }
+        // the per-slice term scales costs by instance size
+        let mut spec = GpuSpec::a100_40gb();
+        spec.reconfig_per_mem_slice_s = 0.05;
+        assert!((spec.create_cost_s(0) - 0.15).abs() < 1e-12); // 1 slice
+        assert!((spec.create_cost_s(4) - 0.50).abs() < 1e-12); // 8 slices
+    }
+
+    #[test]
+    fn custom_spec_builds_and_caches_ladder() {
+        let spec = GpuSpec::custom(
+            "TEST-2",
+            2,
+            2,
+            10.0,
+            vec![MigProfile {
+                name: "1g.5gb".into(),
+                compute_slices: 1,
+                mem_slices: 1,
+                mem_gb: 5.0,
+                placements: vec![0, 1],
+            }],
+        );
+        assert_eq!(spec.ladder(), &[5.0]);
+        assert_eq!(spec.total_mem_slices, 2);
     }
 
     #[test]

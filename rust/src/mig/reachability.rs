@@ -46,8 +46,8 @@ impl ReachabilityTable {
             // Credit every subset of this maximal state's placements.
             let ps: Vec<Placement> = f.placements().to_vec();
             let n = ps.len();
-            assert!(n <= 16, "maximal config unexpectedly large");
-            for bits in 0..(1u32 << n) {
+            assert!(n <= 24, "maximal config unexpectedly large");
+            for bits in 0..(1u64 << n) {
                 let subset: Vec<Placement> = (0..n)
                     .filter(|i| bits & (1 << i) != 0)
                     .map(|i| ps[i])

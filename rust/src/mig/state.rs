@@ -22,10 +22,11 @@ pub struct Placement {
 }
 
 impl Placement {
-    /// Occupied memory slices as a bitmask.
-    pub fn mask(&self, spec: &GpuSpec) -> u16 {
+    /// Occupied memory slices as a bitmask (u64: synthetic specs may
+    /// define up to 63 memory slices; the NVIDIA parts use 4–8).
+    pub fn mask(&self, spec: &GpuSpec) -> u64 {
         let m = spec.profiles[self.profile as usize].mem_slices;
-        (((1u32 << m) - 1) << self.start) as u16
+        ((1u64 << m) - 1) << self.start
     }
 }
 
@@ -58,7 +59,7 @@ impl PartitionState {
     }
 
     /// Bitmask of occupied memory slices.
-    pub fn mask(&self, spec: &GpuSpec) -> u16 {
+    pub fn mask(&self, spec: &GpuSpec) -> u64 {
         self.placements.iter().fold(0, |m, p| m | p.mask(spec))
     }
 

@@ -90,6 +90,8 @@ fn render_fig4(rows: &[Fig4Row]) -> Table {
         "mem-util",
         "turnaround",
         "reconf",
+        "reconf-s",
+        "reconf-lost",
         "oom",
         "early",
     ]);
@@ -102,6 +104,11 @@ fn render_fig4(rows: &[Fig4Row]) -> Table {
             fx(r.norm.mem_utilization),
             fx(r.norm.turnaround),
             format!("{}", r.metrics.reconfig_ops),
+            format!("{:.1}", r.metrics.reconfig_time_s),
+            format!(
+                "{:.1}%",
+                100.0 * r.metrics.reconfig_time_s / r.metrics.makespan_s.max(1e-9)
+            ),
             format!("{}", r.metrics.oom_restarts),
             format!("{}", r.metrics.early_restarts),
         ]);
@@ -421,6 +428,7 @@ pub fn online_arrivals(seed: u64, rate_jps: f64) -> (Vec<OnlineRow>, Table) {
         "makespan (s)",
         "throughput (j/s)",
         "energy (J)",
+        "reconf (n/s)",
         "queue p50/p99 (s)",
         "turnaround p50/p99 (s)",
     ]);
@@ -430,6 +438,10 @@ pub fn online_arrivals(seed: u64, rate_jps: f64) -> (Vec<OnlineRow>, Table) {
             format!("{:.1}", r.metrics.makespan_s),
             format!("{:.3}", r.metrics.throughput_jps),
             format!("{:.0}", r.metrics.energy_j),
+            format!(
+                "{} / {:.1}",
+                r.metrics.reconfig_ops, r.metrics.reconfig_time_s
+            ),
             format!("{:.2} / {:.2}", r.latency.p50_queue_s, r.latency.p99_queue_s),
             format!(
                 "{:.2} / {:.2}",
@@ -540,6 +552,10 @@ mod tests {
         let (rows, t) = online_arrivals(DEFAULT_SEED, 0.25);
         assert_eq!(rows.len(), 3);
         assert_eq!(t.rows.len(), 3);
+        // the online report surfaces reconfiguration cost too
+        assert!(t.header.contains(&"reconf (n/s)".to_string()));
+        assert_eq!(rows[0].metrics.reconfig_time_s, 0.0, "baseline is zero-cost");
+        assert!(rows[2].metrics.reconfig_time_s > 0.0, "scheme-B pays for windows");
         for r in &rows {
             assert_eq!(r.metrics.n_jobs, 18); // Ht2
             assert!(r.latency.p99_turnaround_s >= r.latency.p50_turnaround_s);
@@ -557,6 +573,58 @@ mod tests {
                 base.latency.p99_queue_s
             );
         }
+    }
+
+    #[test]
+    fn fig4_table_pins_reconfig_cost_fields() {
+        // Pin the report surface: the fig4-style tables must carry the
+        // reconfiguration-cost columns (op count, total seconds, and
+        // the share of the makespan lost to windows), formatted as
+        // rendered here.
+        let metrics = BatchMetrics {
+            n_jobs: 10,
+            makespan_s: 50.0,
+            throughput_jps: 0.2,
+            energy_j: 1000.0,
+            energy_per_job_j: 100.0,
+            mem_utilization: 0.5,
+            avg_turnaround_s: 25.0,
+            reconfig_ops: 7,
+            reconfig_windows: 3,
+            reconfig_time_s: 0.7,
+            oom_restarts: 1,
+            early_restarts: 2,
+        };
+        let row = Fig4Row {
+            mix: "Hm1".into(),
+            scheme: "B",
+            prediction: false,
+            norm: metrics.normalized_vs(&metrics),
+            metrics,
+        };
+        let t = render_fig4(&[row]);
+        assert_eq!(
+            t.header,
+            vec![
+                "mix",
+                "scheme",
+                "throughput",
+                "energy",
+                "mem-util",
+                "turnaround",
+                "reconf",
+                "reconf-s",
+                "reconf-lost",
+                "oom",
+                "early"
+            ]
+        );
+        let cells = &t.rows[0];
+        assert_eq!(cells[6], "7"); // reconfig ops
+        assert_eq!(cells[7], "0.7"); // seconds in windows
+        assert_eq!(cells[8], "1.4%"); // 0.7s of a 50s makespan
+        assert_eq!(cells[9], "1");
+        assert_eq!(cells[10], "2");
     }
 
     #[test]

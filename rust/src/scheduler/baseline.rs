@@ -7,10 +7,10 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::mig::{GpuSpec, InstanceId};
+use crate::mig::{GpuSpec, InstanceId, PartitionPlan};
 use crate::workloads::mix::Mix;
 
-use super::policy::{Action, CreateRequest, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
+use super::policy::{Action, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
 use super::{largest_profile, Orchestrator, PendingJob, RunResult};
 
 /// Sequential full-GPU policy: claims the whole GPU once (instantly —
@@ -32,15 +32,13 @@ impl BaselinePolicy {
     }
 
     /// Claim the full GPU with no driver window (legacy-parity: the
-    /// baseline's single allocation is free and instantaneous).
+    /// baseline's single allocation is free and instantaneous — the
+    /// plan API's zero-cost `instant` mode).
     fn claim_full_gpu(&self, ctx: &PolicyCtx) -> Action {
         Action::Reconfig {
             gpu: self.gpu,
-            destroy: Vec::new(),
-            create: CreateRequest::FillNow {
-                candidates: vec![largest_profile(ctx.spec(self.gpu))],
-            },
-            ops: Some(0),
+            plan: PartitionPlan::create_one(largest_profile(ctx.spec(self.gpu))),
+            instant: true,
         }
     }
 
@@ -109,6 +107,7 @@ impl SchedulingPolicy for BaselinePolicy {
         &mut self,
         _ctx: &PolicyCtx,
         _gpu: GpuId,
+        _plan: &PartitionPlan,
         created: &[InstanceId],
     ) -> Vec<Action> {
         assert!(!created.is_empty(), "full-GPU profile must be placeable");
@@ -152,6 +151,10 @@ mod tests {
         // sequential: makespan ~= 50 x single-job runtime (2.37s)
         assert!((r.metrics.makespan_s - 50.0 * 2.37).abs() < 10.0, "{}", r.metrics.makespan_s);
         assert_eq!(r.metrics.reconfig_ops, 0);
+        // zero-cost mode: the full-GPU claim opens no window and loses
+        // no simulated time to reconfiguration
+        assert_eq!(r.metrics.reconfig_windows, 0);
+        assert_eq!(r.metrics.reconfig_time_s, 0.0);
         assert_eq!(r.metrics.oom_restarts, 0);
     }
 

@@ -209,16 +209,20 @@ pub fn scheme_b_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResul
                 break;
             }
             if !sim.is_reconfiguring() {
+                // The golden loop plans with the preserved exhaustive
+                // oracle (the pre-redesign algorithm); the parity tests
+                // prove the policies' graph planner picks identical
+                // destroy sets.
                 if let Some(plan) = sim
                     .mgr
-                    .plan_reconfig(prof, &idle)
-                    .filter(|p| p.destroy.len() <= 2)
+                    .plan_reconfig_exhaustive(prof, &idle)
+                    .filter(|p| p.n_destroys() <= 2)
                 {
-                    for id in &plan.destroy {
-                        idle.retain(|i| i != id);
-                        sim.mgr.free(*id).unwrap();
+                    for id in plan.destroys() {
+                        idle.retain(|i| *i != id);
+                        sim.mgr.free(id).unwrap();
                     }
-                    sim.begin_reconfig(plan.ops);
+                    sim.begin_reconfig(plan.len());
                     pending_launch = Some((queue.pop_front().unwrap(), prof));
                     break;
                 }

@@ -6,11 +6,14 @@
 //! * [`policy`] — the [`SchedulingPolicy`] trait: a stateful event
 //!   handler (`on_submit`, `on_job_finish`, `on_oom`,
 //!   `on_early_restart_signal`, `on_reconfig_done`, `on_stalled`)
-//!   returning placement/reconfiguration [`Action`]s.
+//!   returning placement/reconfiguration [`Action`]s. Reconfigurations
+//!   carry a transactional [`PartitionPlan`](crate::mig::PartitionPlan)
+//!   whose modeled per-op cost the simulator charges as wall-clock (see
+//!   the [`policy`] module docs for the plan/transaction model).
 //! * [`orchestrator`] — the [`Orchestrator`]: owns the event loop, one
 //!   or more [`GpuSim`]s, and the arrival queue; applies policy
-//!   actions; also carries the serving front-end's placement and
-//!   submission accounting.
+//!   actions (`begin` → window → `commit` for plans); also carries the
+//!   serving front-end's placement and submission accounting.
 //!
 //! The paper's schemes are policy implementations:
 //!
@@ -49,7 +52,7 @@ use crate::workloads::mix::Mix;
 use crate::workloads::JobSpec;
 
 pub use orchestrator::Orchestrator;
-pub use policy::{Action, CreateRequest, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
+pub use policy::{Action, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
 
 /// Result of one run (batch or online).
 #[derive(Debug, Clone)]
@@ -151,6 +154,8 @@ pub fn finalize(sim: &GpuSim, n_jobs: usize) -> RunResult {
         mem_utilization: sim.mem_gb_integral() / (makespan * sim.spec.total_mem_gb),
         avg_turnaround_s: turnaround,
         reconfig_ops: sim.counters.reconfig_ops,
+        reconfig_windows: sim.counters.reconfig_windows,
+        reconfig_time_s: sim.counters.reconfig_time_s,
         oom_restarts: sim.counters.oom_restarts,
         early_restarts: sim.counters.early_restarts,
     };

@@ -25,12 +25,12 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::metrics::LatencyStats;
-use crate::mig::{GpuSpec, InstanceId, MigError};
+use crate::mig::{GpuSpec, InstanceId, MigError, PartitionPlan};
 use crate::sim::{GpuSim, JobRecord, SimEvent};
 use crate::workloads::mix::Mix;
 use crate::workloads::JobSpec;
 
-use super::policy::{Action, CreateRequest, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
+use super::policy::{Action, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
 use super::{finalize, PendingJob, RunResult};
 
 const EPS: f64 = 1e-9;
@@ -56,10 +56,10 @@ pub struct Orchestrator<P: SchedulingPolicy> {
     arrivals: Vec<(f64, JobSpec)>,
     next_arrival: usize,
     n_jobs: usize,
-    /// Per-GPU deferred create (a `OneDeferred` reconfig in flight).
-    pending_create: Vec<Option<usize>>,
-    /// Per-GPU instances created by an in-flight `FillNow` reconfig.
-    fill_created: Vec<Vec<InstanceId>>,
+    /// Per-GPU plan whose reconfiguration window is open: destroys are
+    /// applied (`mgr.begin`), creates pending until the window's
+    /// `ReconfigDone` commits them.
+    in_flight: Vec<Option<PartitionPlan>>,
     // -- external (wall-clock) submission ledger, for the server --
     external_open: HashMap<u64, ExternalJob>,
     external_next: u64,
@@ -80,8 +80,7 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
             arrivals: Vec::new(),
             next_arrival: 0,
             n_jobs: 0,
-            pending_create: vec![None; n],
-            fill_created: vec![Vec::new(); n],
+            in_flight: vec![None; n],
             external_open: HashMap::new(),
             external_next: 0,
             external_records: Vec::new(),
@@ -305,15 +304,14 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
                 })
             }
             SimEvent::ReconfigDone => {
-                let created: Vec<InstanceId> = if let Some(prof) = self.pending_create[g].take() {
-                    vec![self.gpus[g]
-                        .mgr
-                        .alloc(prof)
-                        .expect("planned reconfiguration must make the profile placeable")]
-                } else {
-                    std::mem::take(&mut self.fill_created[g])
-                };
-                self.call_policy(|p, ctx| p.on_reconfig_done(ctx, g, &created))
+                let plan = self.in_flight[g]
+                    .take()
+                    .expect("reconfiguration window without an in-flight plan");
+                let created = self.gpus[g]
+                    .mgr
+                    .commit()
+                    .expect("validated plan must commit cleanly");
+                self.call_policy(|p, ctx| p.on_reconfig_done(ctx, g, &plan, &created))
             }
         };
         self.apply(acts);
@@ -354,62 +352,39 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
                     self.sync_if_idle(gpu);
                     self.gpus[gpu].launch(job.spec, instance, job.submit_time);
                 }
-                Action::Reconfig {
-                    gpu,
-                    destroy,
-                    create,
-                    ops,
-                } => {
+                Action::Reconfig { gpu, plan, instant } => {
                     self.sync_if_idle(gpu);
-                    let mut n_ops = destroy.len();
-                    for id in destroy {
+                    // An empty plan has no window to wait for; apply it
+                    // synchronously whatever the requested mode.
+                    let instant = instant || plan.is_empty();
+                    // Price the plan before `begin` (destroy costs need
+                    // the still-live instances' profiles).
+                    let cost_s = if instant {
+                        0.0
+                    } else {
                         self.gpus[gpu]
                             .mgr
-                            .free(id)
-                            .expect("policy destroyed an unknown instance");
-                    }
-                    let mut created = Vec::new();
-                    match create {
-                        CreateRequest::None => {}
-                        CreateRequest::FillNow { candidates } => {
-                            loop {
-                                let mut placed = false;
-                                for &p in &candidates {
-                                    if self.gpus[gpu].mgr.can_alloc(p) {
-                                        created.push(self.gpus[gpu].mgr.alloc(p).unwrap());
-                                        placed = true;
-                                        break;
-                                    }
-                                }
-                                if !placed {
-                                    break;
-                                }
-                            }
-                            n_ops += created.len();
-                        }
-                        CreateRequest::OneDeferred { profile } => {
-                            assert!(
-                                self.pending_create[gpu].is_none(),
-                                "deferred create already pending on gpu {gpu}"
-                            );
-                            self.pending_create[gpu] = Some(profile);
-                            n_ops += 1;
-                        }
-                    }
-                    let n_ops = ops.unwrap_or(n_ops);
-                    if n_ops == 0 {
-                        // Instantaneous layout change (no driver window):
-                        // report completion synchronously.
-                        assert!(
-                            self.pending_create[gpu].is_none(),
-                            "a deferred create needs a reconfiguration window"
-                        );
-                        let acts =
-                            self.call_policy(|p, ctx| p.on_reconfig_done(ctx, gpu, &created));
+                            .plan_cost_s(&plan)
+                            .unwrap_or_else(|e| panic!("unpriceable partition plan: {e}"))
+                    };
+                    self.gpus[gpu]
+                        .mgr
+                        .begin(&plan)
+                        .unwrap_or_else(|e| panic!("policy issued an invalid partition plan: {e}"));
+                    if instant {
+                        // Zero-cost mode: commit synchronously, charge
+                        // neither window time nor driver ops (the
+                        // baseline's legacy-parity full-GPU claim).
+                        let created = self.gpus[gpu]
+                            .mgr
+                            .commit()
+                            .expect("validated plan must commit cleanly");
+                        let acts = self
+                            .call_policy(|p, ctx| p.on_reconfig_done(ctx, gpu, &plan, &created));
                         self.apply(acts);
                     } else {
-                        self.fill_created[gpu] = created;
-                        self.gpus[gpu].begin_reconfig(n_ops);
+                        self.gpus[gpu].begin_reconfig_window(cost_s, plan.len());
+                        self.in_flight[gpu] = Some(plan);
                     }
                 }
             }
@@ -422,7 +397,11 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
     /// `compute_gpcs` as the usual soft compute constraint) on `gpu`,
     /// using the same tightest-fit rule as the scheduling policies and
     /// the max-reachability allocator. This is the serving front-end's
-    /// replica-placement path. On failure nothing stays allocated.
+    /// replica-placement path: one **multi-create [`PartitionPlan`]**
+    /// validated end-to-end and applied transactionally, so on failure
+    /// nothing stays allocated (all-or-nothing by construction, not by
+    /// manual rollback). Runs outside simulated time — no
+    /// reconfiguration window is charged.
     pub fn reserve_instances(
         &mut self,
         gpu: GpuId,
@@ -434,19 +413,8 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
             .spec
             .tightest_profile(mem_gb, compute_gpcs)
             .ok_or_else(|| MigError::NoPlacement(format!("{mem_gb:.1}GB")))?;
-        let mut ids = Vec::with_capacity(n);
-        for _ in 0..n {
-            match self.gpus[gpu].mgr.alloc(prof) {
-                Ok(id) => ids.push(id),
-                Err(e) => {
-                    for id in ids {
-                        let _ = self.gpus[gpu].mgr.free(id);
-                    }
-                    return Err(e);
-                }
-            }
-        }
-        Ok(ids)
+        let plan = PartitionPlan::create_n(prof, n);
+        Ok(self.gpus[gpu].mgr.apply_plan(&plan)?)
     }
 
     /// Record an external (wall-clock) job submission; returns a token.
@@ -607,6 +575,7 @@ mod tests {
                 &mut self,
                 _ctx: &PolicyCtx,
                 gpu: usize,
+                _plan: &PartitionPlan,
                 created: &[InstanceId],
             ) -> Vec<Action> {
                 self.inst[gpu] = Some(created[0]);
@@ -628,11 +597,8 @@ mod tests {
                     match self.inst[g] {
                         None => acts.push(Action::Reconfig {
                             gpu: g,
-                            destroy: Vec::new(),
-                            create: CreateRequest::FillNow {
-                                candidates: vec![ctx.spec(g).profiles.len() - 1],
-                            },
-                            ops: Some(0),
+                            plan: PartitionPlan::create_one(ctx.spec(g).profiles.len() - 1),
+                            instant: true,
                         }),
                         Some(inst) => {
                             let job = self.queues[g].pop_front().unwrap();
@@ -667,6 +633,32 @@ mod tests {
         for r in &results {
             assert!(r.metrics.makespan_s < 10.0 * solo);
         }
+    }
+
+    #[test]
+    fn reconfig_windows_charge_modeled_time() {
+        // Every window's duration comes from the plan's per-op cost
+        // model; with the default (uniform) model the total must equal
+        // ops * reconfig_op_s, and the counters must surface both the
+        // window count and the seconds lost.
+        let m = mix::ht3(9);
+        let spec = a100();
+        let r = Orchestrator::single(spec.clone(), false, SchemeBPolicy::new(spec.clone()))
+            .run_mix(&m);
+        assert!(r.counters.reconfig_windows > 0);
+        assert!(r.counters.reconfig_ops >= r.counters.reconfig_windows);
+        assert!(
+            (r.counters.reconfig_time_s
+                - r.counters.reconfig_ops as f64 * spec.reconfig_op_s)
+                .abs()
+                < 1e-9,
+            "uniform model: time {} vs ops {}",
+            r.counters.reconfig_time_s,
+            r.counters.reconfig_ops
+        );
+        assert_eq!(r.metrics.reconfig_windows, r.counters.reconfig_windows);
+        assert!((r.metrics.reconfig_time_s - r.counters.reconfig_time_s).abs() < 1e-12);
+        assert!(r.metrics.reconfig_time_s < r.metrics.makespan_s);
     }
 
     #[test]

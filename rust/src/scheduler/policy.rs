@@ -1,5 +1,6 @@
 //! The scheduling-policy abstraction (the inversion of control at the
-//! heart of the scheduler redesign).
+//! heart of the scheduler redesign) and the **plan/transaction model**
+//! the policies speak.
 //!
 //! A [`SchedulingPolicy`] is a *stateful event handler*: the
 //! [`Orchestrator`](super::Orchestrator) owns the event loop and the
@@ -8,13 +9,52 @@
 //! never touch the simulator directly — they observe the world through
 //! a read-only [`PolicyCtx`] and decide; the orchestrator applies.
 //!
+//! ## Reconfiguration = one transactional plan
+//!
+//! Every layout change is an [`Action::Reconfig`] carrying a
+//! [`PartitionPlan`] — an ordered list of typed `Destroy`/`Create` ops
+//! (multiple creates per plan are first-class: Scheme A's homogeneous
+//! class fill is a single plan). Policies build plans with the
+//! partition manager's planning helpers
+//! ([`plan_reconfig`](crate::mig::PartitionManager::plan_reconfig),
+//! [`plan_fill`](crate::mig::PartitionManager::plan_fill)) or the
+//! [`PartitionPlan`] constructors, all reachable through
+//! [`PolicyCtx::mgr`]. The orchestrator executes a plan as a
+//! transaction:
+//!
+//! 1. `mgr.begin(plan)` validates the whole op sequence against the
+//!    partition-state FSM and applies the destroys;
+//! 2. a simulator reconfiguration window opens, charging the plan's
+//!    modeled per-op cost (`mgr.plan_cost_s`) in simulated wall-clock
+//!    time — the plan's instances are unavailable meanwhile;
+//! 3. when the window completes, `mgr.commit()` applies the creates and
+//!    [`SchedulingPolicy::on_reconfig_done`] delivers the executed plan
+//!    plus the created instance ids.
+//!
+//! An invalid plan never half-applies: `begin` rejects it atomically
+//! (the orchestrator treats that as a policy bug and panics).
+//!
+//! ## Reconfiguration cost accounting
+//!
+//! The per-op cost model lives on [`GpuSpec`]
+//! ([`create_cost_s`](GpuSpec::create_cost_s) /
+//! [`destroy_cost_s`](GpuSpec::destroy_cost_s); defaults reproduce the
+//! uniform legacy `reconfig_op_s`). Window time is tallied into
+//! `SimCounters::{reconfig_windows, reconfig_time_s}` and surfaces in
+//! `BatchMetrics` and the reports, so throughput/energy tables reflect
+//! what fusion/fission actually costs. `Action::Reconfig { instant:
+//! true }` is the preserved zero-cost mode: the plan applies
+//! synchronously with no window and no op accounting (the sequential
+//! baseline's one-time full-GPU claim — legacy parity).
+//!
 //! This split lets the same policy logic drive:
 //! * batch runs (the paper's setting — every job submitted at t=0),
 //! * online open-loop runs (Poisson / trace-driven arrivals), and
 //! * the serving front-end (`crate::server`), which routes its replica
-//!   placement and submission accounting through the orchestrator.
+//!   placement (a multi-create plan) and submission accounting through
+//!   the orchestrator.
 
-use crate::mig::{GpuSpec, InstanceId, PartitionManager};
+use crate::mig::{GpuSpec, InstanceId, PartitionManager, PartitionPlan};
 use crate::sim::GpuSim;
 use crate::workloads::JobSpec;
 
@@ -49,24 +89,6 @@ impl<'a> PolicyCtx<'a> {
     }
 }
 
-/// What a reconfiguration should create.
-#[derive(Debug, Clone)]
-pub enum CreateRequest {
-    /// Destroy-only reconfiguration (e.g. clearing idle instances).
-    None,
-    /// Greedily allocate instances from `candidates` (first fitting
-    /// profile each round) until nothing fits, *before* the
-    /// reconfiguration window opens — Scheme A's per-class homogeneous
-    /// layout. The created ids are reported via
-    /// [`SchedulingPolicy::on_reconfig_done`].
-    FillNow { candidates: Vec<usize> },
-    /// Allocate exactly one instance of `profile` *after* the window
-    /// completes — Scheme B's serialized instance creation (the driver
-    /// op and the window are one and the same). The created id is
-    /// reported via [`SchedulingPolicy::on_reconfig_done`].
-    OneDeferred { profile: usize },
-}
-
 /// A decision returned by a policy callback. Actions are applied by the
 /// orchestrator in order.
 #[derive(Debug, Clone)]
@@ -77,17 +99,21 @@ pub enum Action {
         job: PendingJob,
         instance: InstanceId,
     },
-    /// Destroy `destroy`, then create per `create`, charging one
-    /// reconfiguration window of `ops` driver operations (`None` =
-    /// destroyed + created count). `ops == Some(0)` applies the layout
-    /// change instantly with no window — used by the sequential
-    /// baseline's one-time full-GPU claim, mirroring its legacy
-    /// behavior of never paying reconfiguration latency.
+    /// Execute `plan` as one transactional reconfiguration: validate,
+    /// apply the destroys, charge one window of the plan's modeled
+    /// per-op cost (instances unavailable meanwhile), then apply the
+    /// creates and report them — with the executed plan — via
+    /// [`SchedulingPolicy::on_reconfig_done`].
+    ///
+    /// `instant: true` is the zero-cost mode: the plan applies
+    /// synchronously (no window, no op accounting) and
+    /// `on_reconfig_done` fires before `apply` returns — used by the
+    /// sequential baseline's one-time full-GPU claim, mirroring its
+    /// legacy behavior of never paying reconfiguration latency.
     Reconfig {
         gpu: GpuId,
-        destroy: Vec<InstanceId>,
-        create: CreateRequest,
-        ops: Option<usize>,
+        plan: PartitionPlan,
+        instant: bool,
     },
 }
 
@@ -109,7 +135,12 @@ pub struct JobEvent {
 ///   actions are applied immediately, in order, at that instant.
 /// * At most one reconfiguration may be in flight per GPU; a policy
 ///   must not issue a `Reconfig` for a GPU whose window is open
-///   (`ctx.gpu(g).is_reconfiguring()`).
+///   (`ctx.gpu(g).is_reconfiguring()`). The partition manager enforces
+///   this transactionally (`begin` on an open transaction is an
+///   error).
+/// * A plan's destroyed instances vanish at window open and its created
+///   instances exist only from `on_reconfig_done` — launching on either
+///   during the window is a policy bug.
 /// * [`on_stalled`](Self::on_stalled) is the forward-progress hook: it
 ///   fires when nothing is running, no window is open, no arrival is
 ///   due, yet [`has_pending_work`](Self::has_pending_work) is true.
@@ -138,13 +169,14 @@ pub trait SchedulingPolicy {
         predicted_peak_gb: f64,
     ) -> Vec<Action>;
 
-    /// A reconfiguration window completed on `gpu`; `created` holds the
-    /// instances produced by the window's `CreateRequest` (in
-    /// allocation order; empty for destroy-only reconfigurations).
+    /// A reconfiguration completed on `gpu`: `plan` is the executed
+    /// [`PartitionPlan`] and `created` holds the instances its create
+    /// ops produced (in op order; empty for destroy-only plans).
     fn on_reconfig_done(
         &mut self,
         ctx: &PolicyCtx,
         gpu: GpuId,
+        plan: &PartitionPlan,
         created: &[InstanceId],
     ) -> Vec<Action>;
 

@@ -19,10 +19,10 @@ use std::collections::BTreeMap;
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::mig::{GpuSpec, InstanceId};
+use crate::mig::{GpuSpec, InstanceId, PartitionPlan};
 use crate::workloads::mix::Mix;
 
-use super::policy::{Action, CreateRequest, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
+use super::policy::{Action, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
 use super::{bump_estimate_after_oom, class_of, Orchestrator, PendingJob, RunResult};
 
 /// Profiles whose memory equals the class cap, preferring more compute
@@ -68,8 +68,10 @@ impl SchemeAPolicy {
     }
 
     /// Open the next non-empty class: tear down the previous layout and
-    /// request this class's homogeneous fill in one reconfiguration.
-    fn start_next_class(&mut self) -> Vec<Action> {
+    /// build this class's homogeneous fill as one multi-create
+    /// [`PartitionPlan`] (destroys + every create of the new layout),
+    /// charged as a single reconfiguration window.
+    fn start_next_class(&mut self, ctx: &PolicyCtx) -> Vec<Action> {
         let Some((&class, _)) = self.groups.iter().find(|(_, q)| !q.is_empty()) else {
             return Vec::new();
         };
@@ -80,11 +82,14 @@ impl SchemeAPolicy {
         let candidates = class_profiles(&self.spec, cap);
         let destroy = std::mem::take(&mut self.instances);
         self.local.clear();
+        let plan = ctx
+            .mgr(self.gpu)
+            .plan_fill(&destroy, &candidates)
+            .expect("class teardown destroys only instances this policy holds");
         vec![Action::Reconfig {
             gpu: self.gpu,
-            destroy,
-            create: CreateRequest::FillNow { candidates },
-            ops: None,
+            plan,
+            instant: false,
         }]
     }
 
@@ -112,7 +117,7 @@ impl SchemeAPolicy {
             && self.local.iter().all(|q| q.is_empty())
             && ctx.gpu(self.gpu).n_running() == 0;
         if drained {
-            self.start_next_class()
+            self.start_next_class(ctx)
         } else {
             Vec::new()
         }
@@ -171,6 +176,7 @@ impl SchedulingPolicy for SchemeAPolicy {
         &mut self,
         _ctx: &PolicyCtx,
         gpu: GpuId,
+        _plan: &PartitionPlan,
         created: &[InstanceId],
     ) -> Vec<Action> {
         assert!(!created.is_empty(), "class produced no slices");

@@ -18,10 +18,10 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::mig::{GpuSpec, InstanceId};
+use crate::mig::{GpuSpec, InstanceId, PartitionPlan};
 use crate::workloads::mix::Mix;
 
-use super::policy::{Action, CreateRequest, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
+use super::policy::{Action, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
 use super::{bump_estimate_after_oom, target_profile, Orchestrator, PendingJob, RunResult};
 
 /// FIFO-with-dynamic-reconfiguration policy state.
@@ -72,37 +72,37 @@ impl SchemeBPolicy {
                 });
                 continue;
             }
-            // 2. create a new tightest slice (one driver op; instance
-            //    creation serializes on the MIG manager, so the launch
-            //    waits for the reconfiguration window)
+            // 2. create a new tightest slice (a one-create plan; the
+            //    instance materializes only when the reconfiguration
+            //    window commits, so the launch waits for it)
             if !reconfiguring && mgr.can_alloc(prof) {
                 self.pending_launch = Some(self.queue.pop_front().unwrap());
                 acts.push(Action::Reconfig {
                     gpu: self.gpu,
-                    destroy: Vec::new(),
-                    create: CreateRequest::OneDeferred { profile: prof },
-                    ops: Some(1),
+                    plan: PartitionPlan::create_one(prof),
+                    instant: false,
                 });
                 break;
             }
-            // 3. fusion/fission over idle instances. The paper merges
-            //    *neighboring* partitions (pairwise) or splits one larger
-            //    partition — so only plans destroying at most two idle
-            //    instances are admissible; wider merges mean waiting.
+            // 3. fusion/fission over idle instances: ask the planner for
+            //    the cheapest destroy-set. The paper merges *neighboring*
+            //    partitions (pairwise) or splits one larger partition —
+            //    so only plans destroying at most two idle instances are
+            //    admissible; wider merges mean waiting.
             if !reconfiguring {
                 if let Some(plan) = mgr
                     .plan_reconfig(prof, &self.idle)
-                    .filter(|p| p.destroy.len() <= 2)
+                    .ok()
+                    .filter(|p| p.n_destroys() <= 2)
                 {
-                    for id in &plan.destroy {
-                        self.idle.retain(|i| i != id);
+                    for id in plan.destroys() {
+                        self.idle.retain(|i| *i != id);
                     }
                     self.pending_launch = Some(self.queue.pop_front().unwrap());
                     acts.push(Action::Reconfig {
                         gpu: self.gpu,
-                        destroy: plan.destroy,
-                        create: CreateRequest::OneDeferred { profile: prof },
-                        ops: Some(plan.ops),
+                        plan,
+                        instant: false,
                     });
                     break;
                 }
@@ -164,8 +164,10 @@ impl SchedulingPolicy for SchemeBPolicy {
         &mut self,
         ctx: &PolicyCtx,
         gpu: GpuId,
+        plan: &PartitionPlan,
         created: &[InstanceId],
     ) -> Vec<Action> {
+        debug_assert_eq!(created.len(), plan.n_creates());
         let mut acts = Vec::new();
         if let Some(pj) = self.pending_launch.take() {
             acts.push(Action::Launch {
@@ -183,16 +185,14 @@ impl SchedulingPolicy for SchemeBPolicy {
             return Vec::new();
         }
         // Nothing running and the head can't be placed: destroy all idle
-        // instances and retry; if that can't help the job simply cannot
-        // fit on this GPU.
+        // instances (a destroy-only plan) and retry; if that can't help
+        // the job simply cannot fit on this GPU.
         if !self.idle.is_empty() {
             let destroy = std::mem::take(&mut self.idle);
-            let ops = destroy.len();
             return vec![Action::Reconfig {
                 gpu: self.gpu,
-                destroy,
-                create: CreateRequest::None,
-                ops: Some(ops),
+                plan: PartitionPlan::destroy_only(destroy),
+                instant: false,
             }];
         }
         let head = self.queue.front().map(|p| p.spec.name.clone());

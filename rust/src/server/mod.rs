@@ -2,9 +2,11 @@
 //!
 //! A [`ServingSystem`] routes its GPU-facing bookkeeping through the
 //! scheduling [`Orchestrator`]: replica slices are placed via
-//! [`Orchestrator::reserve_instances`] (the schedulers' tightest-fit
-//! profile rule + the partition manager's max-reachability allocator —
-//! shared mechanisms, not a policy event loop), and every generation
+//! [`Orchestrator::reserve_instances`] — one atomic multi-create
+//! `PartitionPlan` validated end-to-end, using the schedulers'
+//! tightest-fit profile rule + the partition manager's
+//! max-reachability allocator (shared mechanisms, not a policy event
+//! loop; all-or-nothing by construction) — and every generation
 //! request is submitted through the orchestrator's external-job
 //! ledger, which yields the same queueing/turnaround percentile
 //! accounting as the simulated online scenarios. The embedded FIFO

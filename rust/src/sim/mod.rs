@@ -15,6 +15,13 @@
 //!   `ceil(demand/c)` waves (paper §4.3's warp-folding model).
 //! * **Power** — `P = idle + per_gpc · Σ util_i · gpc_i`, integrated at
 //!   event granularity; energy is `∫P dt`.
+//! * **Reconfiguration windows** — executing a
+//!   [`PartitionPlan`](crate::mig::PartitionPlan) opens a window whose
+//!   duration is the plan's modeled per-op cost
+//!   ([`begin_reconfig_window`](GpuSim::begin_reconfig_window)); the
+//!   plan's instances are unavailable until the window's
+//!   [`SimEvent::ReconfigDone`] fires, and the time is tallied in
+//!   [`SimCounters::reconfig_time_s`].
 //! * **OOM / prediction** — iterative jobs carry an allocator trace;
 //!   exceeding the instance's memory raises an OOM event, and (with
 //!   prediction enabled) a converged projection above the instance size
@@ -86,7 +93,14 @@ pub struct JobRecord {
 /// Counters the metrics layer consumes.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SimCounters {
+    /// Driver create/destroy operations executed.
     pub reconfig_ops: usize,
+    /// Reconfiguration windows opened (plans executed with a window).
+    pub reconfig_windows: usize,
+    /// Total simulated seconds spent inside reconfiguration windows —
+    /// the wall-clock cost of fusion/fission the throughput and energy
+    /// tables must account for.
+    pub reconfig_time_s: f64,
     pub oom_restarts: usize,
     pub early_restarts: usize,
 }
@@ -312,16 +326,37 @@ impl GpuSim {
         id
     }
 
-    /// Begin a reconfiguration window of `ops` create/destroy operations.
-    /// The partition-manager state should already reflect the new layout;
-    /// this charges the latency and blocks further reconfigs.
+    /// Begin a reconfiguration window of `ops` create/destroy operations
+    /// at the uniform legacy cost (`ops * reconfig_op_s`). Retained for
+    /// the legacy golden loops and uniform-cost callers; plan-driven
+    /// callers charge the modeled cost via
+    /// [`begin_reconfig_window`](Self::begin_reconfig_window).
     pub fn begin_reconfig(&mut self, ops: usize) {
+        // Accumulate exactly like `PartitionManager::plan_cost_s` (one
+        // add per op) so the uniform path and the plan-priced path stay
+        // bit-for-bit identical — the parity tests compare makespans
+        // exactly.
+        let duration: f64 = (0..ops).fold(0.0, |acc, _| acc + self.spec.reconfig_op_s);
+        self.begin_reconfig_window(duration, ops);
+    }
+
+    /// Begin a reconfiguration window of `duration_s` simulated seconds
+    /// covering `n_ops` driver operations (a `PartitionPlan`'s modeled
+    /// cost). While the window is open no further reconfiguration may
+    /// start; the orchestrator commits the plan's creates only when the
+    /// window's [`SimEvent::ReconfigDone`] fires, so the affected
+    /// instances are unavailable for the whole window. A call with zero
+    /// ops and zero duration is a no-op (no window, no event).
+    pub fn begin_reconfig_window(&mut self, duration_s: f64, n_ops: usize) {
         assert!(self.reconfig_rem.is_none(), "reconfig already in flight");
-        if ops == 0 {
+        if n_ops == 0 && duration_s <= 0.0 {
             return;
         }
-        self.counters.reconfig_ops += ops;
-        self.reconfig_rem = Some(ops as f64 * self.spec.reconfig_op_s);
+        let duration_s = duration_s.max(0.0);
+        self.counters.reconfig_ops += n_ops;
+        self.counters.reconfig_windows += 1;
+        self.counters.reconfig_time_s += duration_s;
+        self.reconfig_rem = Some(duration_s);
     }
 
     /// Instantaneous power draw (W).
@@ -816,6 +851,28 @@ mod tests {
         assert!(matches!(ev, SimEvent::ReconfigDone));
         assert!((s.now() - 3.0 * s.spec.reconfig_op_s).abs() < 1e-9);
         assert_eq!(s.counters.reconfig_ops, 3);
+        assert_eq!(s.counters.reconfig_windows, 1);
+        assert!((s.counters.reconfig_time_s - 3.0 * s.spec.reconfig_op_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timed_reconfig_window_charges_the_modeled_cost() {
+        // A plan-priced window: arbitrary duration, op count tracked
+        // separately; zero-op/zero-duration calls open no window.
+        let mut s = sim();
+        s.begin_reconfig_window(0.0, 0);
+        assert!(!s.is_reconfiguring());
+        assert_eq!(s.counters.reconfig_windows, 0);
+        s.begin_reconfig_window(0.75, 4);
+        assert!(s.is_reconfiguring());
+        let ev = s.advance().unwrap();
+        assert!(matches!(ev, SimEvent::ReconfigDone));
+        assert!((s.now() - 0.75).abs() < 1e-9);
+        assert_eq!(s.counters.reconfig_ops, 4);
+        assert_eq!(s.counters.reconfig_windows, 1);
+        assert!((s.counters.reconfig_time_s - 0.75).abs() < 1e-12);
+        // idle energy accrued during the window
+        assert!((s.energy_j() - 0.75 * s.spec.idle_power_w).abs() < 1e-9);
     }
 
     #[test]

@@ -5,7 +5,9 @@
 use std::sync::Arc;
 
 use migm::config::{ExperimentConfig, Scheme, DEFAULT_SEED};
-use migm::mig::{GpuSpec, PartitionManager, ReachabilityTable};
+use migm::mig::{
+    enumerate_states, GpuSpec, PartitionManager, PartitionPlan, PlanError, ReachabilityTable,
+};
 use migm::scheduler::{self, run_mix};
 use migm::util::{Json, Rng};
 use migm::workloads::mix;
@@ -217,8 +219,10 @@ fn prop_alloc_is_argmax_reachability() {
     }
 }
 
-/// Property: any fusion/fission plan the manager produces actually makes
-/// the requested profile placeable after executing the destroys.
+/// Property: any fusion/fission plan the manager produces actually
+/// yields an instance of the requested profile when executed
+/// transactionally, is priced by the per-op cost model, and leaves a
+/// valid state.
 #[test]
 fn prop_reconfig_plans_are_sound() {
     let spec = a100();
@@ -237,16 +241,90 @@ fn prop_reconfig_plans_are_sound() {
         if mgr.can_alloc(want) {
             continue;
         }
-        if let Some(plan) = mgr.plan_reconfig(want, &live) {
-            assert_eq!(plan.ops, plan.destroy.len() + 1);
-            for id in &plan.destroy {
-                mgr.free(*id).unwrap();
-            }
-            assert!(
-                mgr.can_alloc(want),
+        if let Ok(plan) = mgr.plan_reconfig(want, &live) {
+            assert_eq!(plan.n_creates(), 1);
+            assert_eq!(plan.len(), plan.n_destroys() + 1);
+            // default (uniform) cost model: every op costs reconfig_op_s
+            let cost = mgr.plan_cost_s(&plan).unwrap();
+            assert!((cost - plan.len() as f64 * spec.reconfig_op_s).abs() < 1e-12);
+            let created = mgr.apply_plan(&plan).unwrap();
+            assert_eq!(
+                mgr.profile_of(created[0]),
+                Some(want),
                 "plan did not enable profile {want}"
             );
+            assert!(mgr.table().is_valid(mgr.state()));
         }
+    }
+}
+
+/// Property (the new planner's FSM contract): from **every** enumerated
+/// valid partition state, planning with all instances destroyable
+/// always succeeds, executing the plan transactionally lands in
+/// another valid state (checked via `ReachabilityTable::is_valid`),
+/// and — whenever destroys are actually needed — the graph planner
+/// picks exactly the destroy subset the legacy exhaustive oracle picks.
+#[test]
+fn prop_planned_reconfigs_preserve_validity_from_every_state() {
+    let spec = a100();
+    let (all, _) = enumerate_states(&spec);
+    let table = ReachabilityTable::precompute(&spec);
+    for s in &all {
+        let (mgr, ids) = PartitionManager::from_state(spec.clone(), s);
+        for want in 0..spec.profiles.len() {
+            // Destroying everything empties the GPU, where any profile
+            // fits, so planning can never fail here.
+            let plan = mgr
+                .plan_reconfig(want, &ids)
+                .unwrap_or_else(|e| panic!("{}: profile {want}: {e}", s.render(&spec)));
+            let mut m2 = mgr.clone();
+            let created = m2.apply_plan(&plan).expect("validated plan applies");
+            assert!(
+                table.is_valid(m2.state()),
+                "invalid state after plan from {}",
+                s.render(&spec)
+            );
+            assert_eq!(m2.profile_of(*created.last().unwrap()), Some(want));
+            if plan.n_destroys() > 0 {
+                let oracle = mgr
+                    .plan_reconfig_exhaustive(want, &ids)
+                    .expect("oracle must also find a plan");
+                assert_eq!(
+                    plan.destroys().collect::<Vec<_>>(),
+                    oracle.destroys().collect::<Vec<_>>(),
+                    "{}: profile {want}: planner/oracle divergence",
+                    s.render(&spec)
+                );
+            }
+        }
+    }
+}
+
+/// Property: plan execution is all-or-nothing under failure injection —
+/// corrupted plans (unknown destroy id, create pinned onto an occupied
+/// slot) are rejected atomically, leaving the manager untouched.
+#[test]
+fn prop_plan_execution_is_all_or_nothing_under_failure_injection() {
+    let spec = a100();
+    let (all, _) = enumerate_states(&spec);
+    for s in all.iter().filter(|s| !s.is_empty()).step_by(7) {
+        let (mut mgr, ids) = PartitionManager::from_state(spec.clone(), s);
+        let before = mgr.state().clone();
+        // unknown destroy id buried in an otherwise-fine plan
+        let mut bad = PartitionPlan::destroy_only(ids.iter().copied().chain([9999]));
+        bad.push_create(0);
+        assert_eq!(mgr.begin(&bad), Err(PlanError::UnknownInstance(9999)));
+        assert_eq!(mgr.state(), &before, "begin must not half-apply");
+        assert_eq!(mgr.instance_count(), ids.len());
+        // create pinned onto an occupied slot
+        let occupied = s.placements()[0];
+        let mut clash = PartitionPlan::new();
+        clash.push_create_at(occupied.profile as usize, occupied.start);
+        assert!(matches!(
+            mgr.begin(&clash),
+            Err(PlanError::Unplaceable { .. })
+        ));
+        assert_eq!(mgr.state(), &before);
     }
 }
 
