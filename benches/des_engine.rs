@@ -1,22 +1,69 @@
-//! DES engine throughput: simulated-event processing rate on a fully
-//! loaded GPU. This bounds how fast the figure harnesses run and is the
-//! main L3 perf target (EXPERIMENTS.md §Perf).
+//! DES engine throughput: simulated-event processing rate on loaded
+//! GPUs, head-to-head against the retained scan-and-decrement oracle
+//! (`migm::sim::naive`). This bounds how fast the figure harnesses and
+//! policy-search sweeps run and is the main L3 perf target.
+//!
+//! The fleet benches put 1k / 10k jobs in flight across a fleet of
+//! synthetic 16-instance GPUs (16 concurrent jobs *per engine* — the
+//! reachability precompute enumerates 2^slices states, which caps the
+//! per-GPU geometry; fleet-wide concurrency comes from the GPU count).
+//! Per event the oracle pays four O(n) scans plus a `Vec` clone, the
+//! indexed engine O(log n); the measured naive/indexed speedup is
+//! printed (target: ≥5x on the 1k fleet).
+//!
+//! Set `MIGM_BENCH_SMOKE=1` for the CI smoke run (shorter measurement
+//! windows, smaller fleet, the 10k fleet skipped).
 
 use std::sync::Arc;
 
-use migm::mig::GpuSpec;
+use migm::sim::naive::NaiveGpuSim;
 use migm::sim::GpuSim;
 use migm::util::bench::{black_box, Bench};
 use migm::workloads::rodinia;
+use migm::workloads::synthetic::{fleet_job, many_instance_spec};
+use migm::GpuSpec;
+
+/// Fill every instance of `sims` fresh engines with `job` copies and
+/// drain them to completion; one macro so the indexed and oracle
+/// drivers can never drift apart.
+macro_rules! run_fleet {
+    ($engine:ty, $spec:expr, $sims:expr, $per_sim:expr, $job:expr) => {{
+        let mut total = 0.0;
+        for _ in 0..$sims {
+            let mut s = <$engine>::new($spec.clone(), false);
+            for _ in 0..$per_sim {
+                let i = s.mgr.alloc(0).unwrap();
+                s.launch($job.clone(), i, 0.0);
+            }
+            while s.advance().is_some() {}
+            total += s.now();
+        }
+        total
+    }};
+}
 
 fn main() {
+    let smoke = std::env::var("MIGM_BENCH_SMOKE").is_ok();
     let spec = Arc::new(GpuSpec::a100_40gb());
-    let b = Bench::new();
+    let b = if smoke { Bench::coarse() } else { Bench::new() };
 
-    // 7 concurrent small jobs, full run.
+    // 7 concurrent small jobs, full run (the paper-scale case),
+    // indexed vs oracle.
     let job = rodinia::by_name("gaussian").unwrap().job(7);
     b.run("sim_7x_gaussian_full_run", || {
         let mut s = GpuSim::new(spec.clone(), false);
+        for _ in 0..7 {
+            let i = s.mgr.alloc(0).unwrap();
+            s.launch(job.clone(), i, 0.0);
+        }
+        let mut n = 0;
+        while s.advance().is_some() {
+            n += 1;
+        }
+        black_box(n)
+    });
+    b.run("sim_7x_gaussian_full_run_naive", || {
+        let mut s = NaiveGpuSim::new(spec.clone(), false);
         for _ in 0..7 {
             let i = s.mgr.alloc(0).unwrap();
             s.launch(job.clone(), i, 0.0);
@@ -42,7 +89,8 @@ fn main() {
         black_box(n)
     });
 
-    // PCIe-heavy: transfer sharing recomputation dominates.
+    // PCIe-heavy: transfer-sharing recomputation dominates the oracle;
+    // the indexed engine reindexes sharer changes in O(1) virtual time.
     let nw = rodinia::by_name("nw").unwrap().job(7);
     b.run("sim_7x_nw_pcie_contention", || {
         let mut s = GpuSim::new(spec.clone(), false);
@@ -53,4 +101,52 @@ fn main() {
         while s.advance().is_some() {}
         black_box(s.now())
     });
+    b.run("sim_7x_nw_pcie_contention_naive", || {
+        let mut s = NaiveGpuSim::new(spec.clone(), false);
+        for _ in 0..7 {
+            let i = s.mgr.alloc(0).unwrap();
+            s.launch(nw.clone(), i, 0.0);
+        }
+        while s.advance().is_some() {}
+        black_box(s.now())
+    });
+
+    // ---- fleet benches: 1k / 10k in-flight jobs --------------------
+    // Concurrency is 16 per engine (synthetic-geometry cap, see module
+    // docs); the fleet dimension scales total event volume and total
+    // in-flight jobs, which is the figure-harness / policy-search load.
+    let synth = Arc::new(many_instance_spec(16));
+    // Warm the shared reachability table outside the timed region.
+    let _ = GpuSim::new(synth.clone(), false);
+    let fjob = fleet_job(if smoke { 20 } else { 100 });
+    let fleet = if smoke { 8 } else { 64 }; // x16 jobs per sim
+    let per = 16;
+
+    let idx = b.run("fleet_1k_jobs_16wide_indexed", || {
+        black_box(run_fleet!(GpuSim, synth, fleet, per, fjob))
+    });
+    let nv = b.run("fleet_1k_jobs_16wide_naive", || {
+        black_box(run_fleet!(NaiveGpuSim, synth, fleet, per, fjob))
+    });
+    println!(
+        "fleet_1k ({} jobs across {} x 16-instance GPUs) speedup naive/indexed: {:.2}x",
+        fleet * per,
+        fleet,
+        nv.median_ns / idx.median_ns
+    );
+
+    if !smoke {
+        let cb = Bench::coarse();
+        let idx = cb.run("fleet_10k_jobs_16wide_indexed", || {
+            black_box(run_fleet!(GpuSim, synth, 640, per, fjob))
+        });
+        let nv = cb.run("fleet_10k_jobs_16wide_naive", || {
+            black_box(run_fleet!(NaiveGpuSim, synth, 640, per, fjob))
+        });
+        println!(
+            "fleet_10k ({} jobs across 640 x 16-instance GPUs) speedup naive/indexed: {:.2}x",
+            640 * per,
+            nv.median_ns / idx.median_ns
+        );
+    }
 }

@@ -29,7 +29,11 @@
 //!   job mixes (Tables 1–2), plus per-job arrival times
 //!   (Poisson/trace generators) for online scenarios.
 //! * [`sim`] — discrete-event GPU simulator: phases, PCIe sharing, power,
-//!   horizon-bounded advancement for arrival interleaving.
+//!   horizon-bounded advancement for arrival interleaving. The engine is
+//!   an indexed O(log n) event calendar (lazy-invalidated heaps +
+//!   virtual-time fair queueing for shared PCIe bandwidth + incremental
+//!   power/memory accumulators); the original scan-and-decrement loop
+//!   survives as the differential-testing oracle in [`sim::naive`].
 //! * [`scheduler`] — the policy/orchestrator split:
 //!   [`scheduler::SchedulingPolicy`] (the event-handler trait the
 //!   paper's schemes implement — `BaselinePolicy`, `SchemeAPolicy`,

@@ -57,9 +57,14 @@ pub struct NormalizedMetrics {
 /// Nearest-rank percentile of a sample; `q` in [0, 100]. Returns 0 for
 /// an empty sample. Sorts a copy — for repeated queries over one
 /// sample, sort once and use [`percentile_sorted`].
+///
+/// NaN samples are tolerated (sorted by [`f64::total_cmp`], so positive
+/// NaNs land at the top instead of panicking mid-sort); callers feeding
+/// latency samples from a poisoned run get a well-defined answer rather
+/// than a `partial_cmp().unwrap()` panic.
 pub fn percentile(samples: &[f64], q: f64) -> f64 {
     let mut s = samples.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     percentile_sorted(&s, q)
 }
 
@@ -92,7 +97,8 @@ impl LatencyStats {
         let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
         let sorted = |xs: &[f64]| {
             let mut s = xs.to_vec();
-            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: NaN samples must not panic the percentile path.
+            s.sort_by(f64::total_cmp);
             s
         };
         let q = sorted(queue_s);
@@ -221,6 +227,19 @@ mod tests {
         assert_eq!(percentile(&[], 50.0), 0.0);
         // unsorted input is handled
         assert_eq!(percentile(&[3.0, 1.0, 2.0], 50.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // Regression: partial_cmp().unwrap() used to panic mid-sort on
+        // NaN. total_cmp sorts positive NaNs last, so finite quantiles
+        // stay meaningful and nothing panics.
+        let xs = [1.0, f64::NAN, 2.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+        let l = LatencyStats::from_samples(&xs, &xs);
+        assert_eq!(l.p50_queue_s, 2.0);
+        assert!(l.mean_turnaround_s.is_nan());
     }
 
     #[test]

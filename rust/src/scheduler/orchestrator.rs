@@ -133,8 +133,9 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
     /// Drive the world until the policy is out of work and every GPU is
     /// drained.
     pub fn run_to_completion(&mut self) {
-        self.arrivals
-            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // total_cmp: a NaN arrival time (poisoned trace) must not
+        // panic the sort; `submit_at` already clamps negatives.
+        self.arrivals.sort_by(|a, b| a.0.total_cmp(&b.0));
         while self.step() {}
     }
 
@@ -212,7 +213,7 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
             .iter()
             .enumerate()
             .filter(|(_, g)| g.n_running() > 0 || g.is_reconfiguring())
-            .min_by(|a, b| a.1.now().partial_cmp(&b.1.now()).unwrap())
+            .min_by(|a, b| a.1.now().total_cmp(&b.1.now()))
             .map(|(i, _)| i)
     }
 

@@ -1,0 +1,344 @@
+//! Differential property tests: the indexed engine ([`GpuSim`]) against
+//! the scan-and-decrement oracle ([`naive::NaiveGpuSim`]).
+//!
+//! Both engines are driven in lockstep with identical stimuli — same
+//! launches, same random horizons, same mid-run reconfiguration windows
+//! and instance-count changes, same OOM/early-restart relaunches — and
+//! must produce the **same event sequence** (kind, job id, instance,
+//! iteration) with clocks, energy, and memory integrals agreeing within
+//! `REL_TOL = 1e-6` relative tolerance. The tolerance exists because
+//! the oracle *decrements* remaining times per event while the indexed
+//! engine schedules *absolute* instants; the two accumulate float
+//! rounding differently (well below 1e-9 per event in practice).
+
+use std::sync::Arc;
+
+use crate::mig::{GpuSpec, InstanceId};
+use crate::util::Rng;
+use crate::workloads::{llm, mix, JobSpec};
+
+use super::naive::NaiveGpuSim;
+use super::{GpuSim, SimEvent};
+
+/// Documented agreement tolerance between the two engines (relative).
+const REL_TOL: f64 = 1e-6;
+
+fn assert_close(what: &str, x: f64, y: f64) {
+    let tol = REL_TOL * (1.0 + x.abs().max(y.abs()));
+    assert!((x - y).abs() <= tol, "{what}: indexed {x} vs oracle {y}");
+}
+
+/// Equivalence of one event pair: same kind, job, instance, iteration.
+fn assert_events_equiv(x: &SimEvent, y: &SimEvent) {
+    match (x, y) {
+        (
+            SimEvent::Finished {
+                job: ja,
+                instance: ia,
+                ..
+            },
+            SimEvent::Finished {
+                job: jb,
+                instance: ib,
+                ..
+            },
+        ) => assert_eq!((ja, ia), (jb, ib), "finish mismatch"),
+        (
+            SimEvent::Oom {
+                job: ja,
+                instance: ia,
+                iter: ta,
+                ..
+            },
+            SimEvent::Oom {
+                job: jb,
+                instance: ib,
+                iter: tb,
+                ..
+            },
+        ) => assert_eq!((ja, ia, ta), (jb, ib, tb), "oom mismatch"),
+        (
+            SimEvent::Preempted {
+                job: ja,
+                instance: ia,
+                iter: ta,
+                ..
+            },
+            SimEvent::Preempted {
+                job: jb,
+                instance: ib,
+                iter: tb,
+                ..
+            },
+        ) => assert_eq!((ja, ia, ta), (jb, ib, tb), "preempt mismatch"),
+        (SimEvent::ReconfigDone, SimEvent::ReconfigDone) => {}
+        _ => panic!("event kind mismatch: {x:?} vs {y:?}"),
+    }
+}
+
+fn ev_instance(ev: &SimEvent) -> Option<InstanceId> {
+    match ev {
+        SimEvent::Finished { instance, .. }
+        | SimEvent::Oom { instance, .. }
+        | SimEvent::Preempted { instance, .. } => Some(*instance),
+        SimEvent::ReconfigDone => None,
+    }
+}
+
+fn is_kill(ev: &SimEvent) -> bool {
+    matches!(ev, SimEvent::Oom { .. } | SimEvent::Preempted { .. })
+}
+
+fn ev_spec(ev: &SimEvent) -> Option<&JobSpec> {
+    match ev {
+        SimEvent::Finished { spec, .. }
+        | SimEvent::Oom { spec, .. }
+        | SimEvent::Preempted { spec, .. } => Some(spec),
+        SimEvent::ReconfigDone => None,
+    }
+}
+
+/// Drive both engines in lockstep over `jobs` on `profile`-sized
+/// instances, with seeded random horizons, reconfiguration windows,
+/// instance-count changes, and kill-relaunches. Panics on the first
+/// divergence.
+fn lockstep(spec: Arc<GpuSpec>, profile: usize, jobs: &[JobSpec], prediction: bool, seed: u64) {
+    let mut a = GpuSim::new(spec.clone(), prediction);
+    let mut b = NaiveGpuSim::new(spec.clone(), prediction);
+    // Fill the GPU with `profile` instances (identically on both).
+    let mut insts = Vec::new();
+    while let Ok(i) = a.mgr.alloc(profile) {
+        assert_eq!(b.mgr.alloc(profile).unwrap(), i);
+        insts.push(i);
+    }
+    assert!(!insts.is_empty(), "profile {profile} must fit the GPU");
+    let mut backlog: Vec<JobSpec> = jobs.to_vec();
+    backlog.reverse();
+    for &inst in &insts {
+        let Some(job) = backlog.pop() else { break };
+        assert_eq!(a.launch(job.clone(), inst, 0.0), b.launch(job, inst, 0.0));
+    }
+
+    let mut rng = Rng::new(seed);
+    let mut extras: Vec<InstanceId> = Vec::new();
+    let mut relaunches = 0usize;
+    let mut steps = 0usize;
+    loop {
+        steps += 1;
+        assert!(steps < 1_000_000, "lockstep did not converge");
+        let (ea, eb) = if rng.below(4) == 0 {
+            let h = a.now() + rng.f64() * 5.0;
+            (
+                a.advance_with_horizon(Some(h)),
+                b.advance_with_horizon(Some(h)),
+            )
+        } else {
+            (a.advance(), b.advance())
+        };
+        match (ea, eb) {
+            (None, None) => {
+                assert_eq!(a.n_running(), b.n_running(), "running-set size diverged");
+                assert_eq!(a.is_reconfiguring(), b.is_reconfiguring());
+                assert_close("clock at horizon", a.now(), b.now());
+                if a.n_running() == 0 && !a.is_reconfiguring() {
+                    break;
+                }
+            }
+            (Some(x), Some(y)) => {
+                assert_events_equiv(&x, &y);
+                assert_close("event clock", a.now(), b.now());
+                // Backlog drains onto freed instances (a FIFO in
+                // miniature: launches at t > 0, staggered arming).
+                if matches!(x, SimEvent::Finished { .. }) {
+                    if let (Some(inst), Some(job)) = (ev_instance(&x), backlog.pop()) {
+                        let t = a.now();
+                        assert_eq!(
+                            a.launch(job.clone(), inst, t),
+                            b.launch(job, inst, t)
+                        );
+                    }
+                }
+                // Killed jobs occasionally restart in place (the
+                // paper's OOM-restart path), with a global bound so a
+                // chronically-too-big job cannot loop forever.
+                if is_kill(&x) && relaunches < 6 && rng.below(2) == 0 {
+                    if let (Some(inst), Some(job)) = (ev_instance(&x), ev_spec(&x)) {
+                        let (job, t) = (job.clone(), a.now());
+                        assert_eq!(
+                            a.launch(job.clone(), inst, t),
+                            b.launch(job, inst, t)
+                        );
+                        relaunches += 1;
+                    }
+                }
+                // Random mid-run perturbations, mirrored on both sims.
+                match rng.below(8) {
+                    0 if !a.is_reconfiguring() => {
+                        let d = rng.f64() * 0.4;
+                        a.begin_reconfig_window(d, 1);
+                        b.begin_reconfig_window(d, 1);
+                    }
+                    1 => {
+                        // Layout change: the live instance count shifts,
+                        // so later-armed ops pay different overheads.
+                        match (a.mgr.alloc(profile), b.mgr.alloc(profile)) {
+                            (Ok(i), Ok(j)) => {
+                                assert_eq!(i, j);
+                                extras.push(i);
+                            }
+                            (Err(_), Err(_)) => {}
+                            _ => panic!("managers diverged on alloc"),
+                        }
+                    }
+                    2 => {
+                        if let Some(i) = extras.pop() {
+                            a.mgr.free(i).unwrap();
+                            b.mgr.free(i).unwrap();
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            (x, y) => panic!("event presence diverged: indexed {x:?} vs oracle {y:?}"),
+        }
+    }
+
+    // Final-state agreement.
+    assert_close("makespan", a.now(), b.now());
+    assert_close("energy", a.energy_j(), b.energy_j());
+    assert_close("mem integral", a.mem_gb_integral(), b.mem_gb_integral());
+    assert_eq!(a.counters.reconfig_ops, b.counters.reconfig_ops);
+    assert_eq!(a.counters.reconfig_windows, b.counters.reconfig_windows);
+    assert_eq!(a.counters.oom_restarts, b.counters.oom_restarts);
+    assert_eq!(a.counters.early_restarts, b.counters.early_restarts);
+    assert_close(
+        "reconfig time",
+        a.counters.reconfig_time_s,
+        b.counters.reconfig_time_s,
+    );
+    assert_eq!(a.records.len(), b.records.len());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.name, rb.name);
+        assert_close("record submit", ra.submit_time, rb.submit_time);
+        assert_close("record start", ra.start_time, rb.start_time);
+        assert_close("record finish", ra.finish_time, rb.finish_time);
+    }
+}
+
+fn specs() -> Vec<Arc<GpuSpec>> {
+    vec![
+        Arc::new(GpuSpec::a100_40gb()),
+        Arc::new(GpuSpec::a30_24gb()),
+        Arc::new(GpuSpec::h100_80gb()),
+    ]
+}
+
+#[test]
+fn property_sweep_static_mixes() {
+    // Rodinia/paper mixes on the smallest slice of every GPU model:
+    // kernel-bound and transfer-bound jobs, alloc-phase OOMs for
+    // anything over the slice, PCIe sharing across all of them.
+    for spec in specs() {
+        for seed in [1u64, 2, 3] {
+            let mixes = [mix::hm2(), mix::ht3(seed), mix::ml1(seed)];
+            for m in &mixes {
+                lockstep(spec.clone(), 0, &m.jobs, false, seed);
+            }
+        }
+    }
+}
+
+#[test]
+fn property_sweep_iterative_llm() {
+    // Trace-carrying LLM jobs: iteration-level memory checks, OOM at
+    // the trace crossing, predictive early restart when enabled.
+    for spec in specs() {
+        for (seed, prediction) in [(7u64, false), (8, true), (9, true)] {
+            let jobs = vec![
+                llm::qwen2_7b().job(seed),
+                llm::llama3_3b().job(seed + 1),
+                llm::flan_t5_infer().job(seed + 2),
+                llm::flan_t5_train().job(seed + 3),
+            ];
+            // profile 1: 10GB-class slices (A30: 12GB) — qwen2 crosses.
+            lockstep(spec.clone(), 1, &jobs, prediction, seed);
+        }
+    }
+}
+
+#[test]
+fn property_sweep_mixed_pool_on_larger_slices() {
+    // Static + iterative jobs side by side on mid-size slices, so
+    // completions, trace events, and bw-sharing joins interleave.
+    for spec in specs() {
+        let mut jobs = mix::hm4().jobs;
+        jobs.insert(1, llm::qwen2_7b().job(11));
+        jobs.insert(3, llm::flan_t5_infer().job(12));
+        for seed in [21u64, 22] {
+            lockstep(spec.clone(), 2, &jobs, seed % 2 == 0, seed);
+        }
+    }
+}
+
+#[test]
+fn simultaneous_completions_identical_across_engines() {
+    // Exact ties: identical jobs, identical launch instant. Both
+    // engines must fire the co-due completions in ascending JobId
+    // order (the oracle's run_order rule == the indexed tie-break).
+    let spec = Arc::new(GpuSpec::a100_40gb());
+    let job = crate::workloads::rodinia::by_name("gaussian").unwrap().job(7);
+    let mut a = GpuSim::new(spec.clone(), false);
+    let mut b = NaiveGpuSim::new(spec, false);
+    for _ in 0..7 {
+        let i = a.mgr.alloc(0).unwrap();
+        assert_eq!(b.mgr.alloc(0).unwrap(), i);
+        a.launch(job.clone(), i, 0.0);
+        b.launch(job.clone(), i, 0.0);
+    }
+    let mut order_a = Vec::new();
+    let mut order_b = Vec::new();
+    while let Some(ev) = a.advance() {
+        if let SimEvent::Finished { job, .. } = ev {
+            order_a.push(job);
+        }
+    }
+    while let Some(ev) = b.advance() {
+        if let SimEvent::Finished { job, .. } = ev {
+            order_b.push(job);
+        }
+    }
+    assert_eq!(order_a, vec![0, 1, 2, 3, 4, 5, 6]);
+    assert_eq!(order_a, order_b);
+    assert_close("tie makespan", a.now(), b.now());
+    assert_close("tie energy", a.energy_j(), b.energy_j());
+}
+
+#[test]
+fn zero_length_horizon_windows_agree() {
+    // Horizon == current clock: both engines must return None without
+    // moving time, integrating energy, or firing events — repeatedly.
+    let spec = Arc::new(GpuSpec::a100_40gb());
+    let job = crate::workloads::rodinia::by_name("nw").unwrap().job(7);
+    let mut a = GpuSim::new(spec.clone(), false);
+    let mut b = NaiveGpuSim::new(spec, false);
+    let i = a.mgr.alloc(0).unwrap();
+    assert_eq!(b.mgr.alloc(0).unwrap(), i);
+    a.launch(job.clone(), i, 0.0);
+    b.launch(job, i, 0.0);
+    let h = 0.02; // inside the alloc phase
+    assert!(a.advance_with_horizon(Some(h)).is_none());
+    assert!(b.advance_with_horizon(Some(h)).is_none());
+    for _ in 0..4 {
+        let (ta, ea) = (a.now(), a.energy_j());
+        let (tb, eb) = (b.now(), b.energy_j());
+        assert!(a.advance_with_horizon(Some(h)).is_none());
+        assert!(b.advance_with_horizon(Some(h)).is_none());
+        assert_eq!(a.now(), ta);
+        assert_eq!(a.energy_j(), ea);
+        assert_eq!(b.now(), tb);
+        assert_eq!(b.energy_j(), eb);
+    }
+    while a.advance().is_some() {}
+    while b.advance().is_some() {}
+    assert_close("post-clip makespan", a.now(), b.now());
+}

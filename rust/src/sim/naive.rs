@@ -1,0 +1,465 @@
+//! The scan-and-decrement DES oracle.
+//!
+//! [`NaiveGpuSim`] is the original `GpuSim` event loop, retained as the
+//! golden reference for the indexed engine in [`super`]: per event it
+//! recomputes the bandwidth-sharer count, the minimum ETA, the power
+//! draw, and the resident-memory sum with full O(n) scans over the
+//! running set, then decrements every in-flight op. It is deliberately
+//! simple — four obvious reductions and one clone per event — which is
+//! what makes it trustworthy as an oracle and hopeless as an engine
+//! (O(n²·ops) per fleet, the bottleneck this module's rewrite removed).
+//!
+//! Semantics are identical to [`super::GpuSim`] by construction: both
+//! engines share the op compiler ([`super::compile_ops`]), the
+//! op-start overhead model ([`super::arm_op`]), and the kill/finish
+//! logic; `super::difftest` proves event-sequence equivalence and
+//! makespan/energy agreement within 1e-6 relative tolerance under
+//! random mixes, horizons, and reconfiguration interleavings.
+//!
+//! Used by tests and by `benches/des_engine.rs` (the ≥5x fleet-bench
+//! comparison); not wired into any scheduler path.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::mig::{GpuSpec, InstanceId, PartitionManager};
+use crate::predictor::{ConvergenceCfg, PredictionOutcome};
+use crate::workloads::{ComputeModel, JobSpec};
+
+use super::{
+    arm_op, op_active, EPS, JobId, JobRecord, KillKind, Op, Running, SimCounters, SimEvent,
+};
+
+/// The simulated GPU, original scan-and-decrement engine (oracle).
+pub struct NaiveGpuSim {
+    pub spec: Arc<GpuSpec>,
+    pub mgr: PartitionManager,
+    now: f64,
+    running: HashMap<JobId, Running>,
+    /// Deterministic processing order.
+    run_order: Vec<JobId>,
+    reconfig_rem: Option<f64>,
+    next_id: JobId,
+    energy_j: f64,
+    mem_gb_integral: f64,
+    pub counters: SimCounters,
+    pub records: Vec<JobRecord>,
+    prediction: bool,
+    conv_cfg: ConvergenceCfg,
+}
+
+impl NaiveGpuSim {
+    pub fn new(spec: Arc<GpuSpec>, prediction: bool) -> Self {
+        let mgr = PartitionManager::new(spec.clone());
+        NaiveGpuSim {
+            spec,
+            mgr,
+            now: 0.0,
+            running: HashMap::new(),
+            run_order: Vec::new(),
+            reconfig_rem: None,
+            next_id: 0,
+            energy_j: 0.0,
+            mem_gb_integral: 0.0,
+            counters: SimCounters::default(),
+            records: Vec::new(),
+            prediction,
+            conv_cfg: ConvergenceCfg::default(),
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    pub fn mem_gb_integral(&self) -> f64 {
+        self.mem_gb_integral
+    }
+
+    pub fn n_running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn running_on(&self, instance: InstanceId) -> bool {
+        self.running.values().any(|r| r.instance == instance)
+    }
+
+    pub fn is_reconfiguring(&self) -> bool {
+        self.reconfig_rem.is_some()
+    }
+
+    /// Launch `spec` on an already-allocated instance.
+    pub fn launch(&mut self, spec: JobSpec, instance: InstanceId, submit_time: f64) -> JobId {
+        assert!(
+            !self.running_on(instance),
+            "instance {instance} already busy"
+        );
+        let c = self
+            .mgr
+            .compute_slices_of(instance)
+            .expect("launch on unknown instance");
+        let inst_mem = self.mgr.mem_gb_of(instance).unwrap();
+        let n_inst = self.mgr.instance_count();
+        let prediction = self.prediction.then_some(self.conv_cfg);
+        let mut r = Running::launch(spec, instance, inst_mem, c, self.now, submit_time, prediction);
+        if let Some(op) = r.ops.first_mut() {
+            arm_op(op, &self.spec, n_inst);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.running.insert(id, r);
+        self.run_order.push(id);
+        id
+    }
+
+    /// Uniform-cost reconfiguration window (see the indexed engine).
+    pub fn begin_reconfig(&mut self, ops: usize) {
+        let duration: f64 = (0..ops).fold(0.0, |acc, _| acc + self.spec.reconfig_op_s);
+        self.begin_reconfig_window(duration, ops);
+    }
+
+    /// Timed reconfiguration window (see the indexed engine).
+    pub fn begin_reconfig_window(&mut self, duration_s: f64, n_ops: usize) {
+        assert!(self.reconfig_rem.is_none(), "reconfig already in flight");
+        if n_ops == 0 && duration_s <= 0.0 {
+            return;
+        }
+        let duration_s = duration_s.max(0.0);
+        self.counters.reconfig_ops += n_ops;
+        self.counters.reconfig_windows += 1;
+        self.counters.reconfig_time_s += duration_s;
+        self.reconfig_rem = Some(duration_s);
+    }
+
+    /// Instantaneous power draw (W) — full scan over the running set,
+    /// one [`op_active`] term per job (the same model the indexed
+    /// engine maintains incrementally).
+    fn power_w(&self) -> f64 {
+        let per_gpc =
+            (self.spec.max_power_w - self.spec.idle_power_w) / self.spec.total_compute as f64;
+        let mut active = 0.0;
+        for r in self.running.values() {
+            if let Some(op) = r.ops.get(r.cursor) {
+                active += op_active(op, r.inst_slices);
+            }
+        }
+        self.spec.idle_power_w + per_gpc * active
+    }
+
+    fn n_bw_transfers(&self) -> usize {
+        self.running
+            .values()
+            .filter(|r| {
+                matches!(
+                    r.ops.get(r.cursor),
+                    Some(Op::Pcie { fixed_rem, bw_rem }) if *fixed_rem <= EPS && *bw_rem > EPS
+                )
+            })
+            .count()
+    }
+
+    /// Wall time until the op completes, given `n_bw` bandwidth sharers.
+    fn op_eta(op: &Op, n_bw: usize) -> f64 {
+        match op {
+            Op::Fixed { rem, .. } | Op::IterKernel { rem, .. } => *rem,
+            Op::Pcie { fixed_rem, bw_rem } => {
+                if *fixed_rem > EPS {
+                    // the bw part's sharer count may change later; only
+                    // schedule to the end of the fixed part.
+                    *fixed_rem
+                } else {
+                    *bw_rem * n_bw.max(1) as f64
+                }
+            }
+        }
+    }
+
+    /// Advance simulated time until the next scheduler-visible event.
+    pub fn advance(&mut self) -> Option<SimEvent> {
+        self.advance_with_horizon(None)
+    }
+
+    /// See [`super::GpuSim::advance_with_horizon`]; identical contract.
+    pub fn advance_with_horizon(&mut self, horizon: Option<f64>) -> Option<SimEvent> {
+        loop {
+            if self.running.is_empty() && self.reconfig_rem.is_none() {
+                return None;
+            }
+            // 1. earliest transition, under the current sharing regime.
+            // A job whose program is exhausted is due immediately (dt=0)
+            // — never leave dt infinite, or a release build integrates
+            // `power * ∞` into energy (the NaN-poisoning regression).
+            let n_bw = self.n_bw_transfers();
+            let mut dt = f64::INFINITY;
+            for r in self.running.values() {
+                match r.ops.get(r.cursor) {
+                    Some(op) => dt = dt.min(Self::op_eta(op, n_bw)),
+                    None => dt = 0.0,
+                }
+            }
+            if let Some(rr) = self.reconfig_rem {
+                dt = dt.min(rr);
+            }
+            debug_assert!(dt.is_finite());
+            let mut dt = if dt.is_finite() { dt.max(0.0) } else { 0.0 };
+            // Clip to the horizon: no transition completes before it, so
+            // after integrating up to the horizon we hand control back.
+            let mut clipped = false;
+            if let Some(h) = horizon {
+                let lim = (h - self.now).max(0.0);
+                if lim + EPS < dt {
+                    dt = lim;
+                    clipped = true;
+                }
+            }
+
+            // 2. integrate power + memory over [now, now+dt)
+            if dt > 0.0 {
+                self.energy_j += self.power_w() * dt;
+                let mem_now: f64 = self.running.values().map(|r| r.cur_mem_gb).sum();
+                self.mem_gb_integral += mem_now * dt;
+                self.now += dt;
+            }
+
+            // 3. apply progress
+            for r in self.running.values_mut() {
+                if let Some(op) = r.ops.get_mut(r.cursor) {
+                    match op {
+                        Op::Fixed { rem, .. } | Op::IterKernel { rem, .. } => *rem -= dt,
+                        Op::Pcie { fixed_rem, bw_rem } => {
+                            if *fixed_rem > EPS {
+                                *fixed_rem -= dt;
+                            } else {
+                                *bw_rem -= dt / n_bw.max(1) as f64;
+                            }
+                        }
+                    }
+                }
+            }
+            if let Some(rr) = &mut self.reconfig_rem {
+                *rr -= dt;
+                if *rr <= EPS {
+                    self.reconfig_rem = None;
+                    return Some(SimEvent::ReconfigDone);
+                }
+            }
+
+            // 4. fire at most one job transition (deterministic order)
+            let order: Vec<JobId> = self.run_order.clone();
+            let mut fired = None;
+            for id in order {
+                let Some(r) = self.running.get(&id) else {
+                    continue;
+                };
+                let done = match r.ops.get(r.cursor) {
+                    Some(Op::Fixed { rem, .. }) | Some(Op::IterKernel { rem, .. }) => *rem <= EPS,
+                    Some(Op::Pcie { fixed_rem, bw_rem }) => *fixed_rem <= EPS && *bw_rem <= EPS,
+                    None => true,
+                };
+                if !done {
+                    continue;
+                }
+                fired = self.complete_op(id);
+                if fired.is_some() {
+                    break;
+                }
+            }
+            if let Some(ev) = fired {
+                return Some(ev);
+            }
+            if clipped {
+                return None;
+            }
+        }
+    }
+
+    /// Fast-forward an idle GPU to `t`. Hard error on a busy sim:
+    /// skipping time over running jobs would silently drop their energy
+    /// in release builds.
+    pub fn idle_until(&mut self, t: f64) {
+        assert!(
+            self.running.is_empty() && self.reconfig_rem.is_none(),
+            "idle_until on a busy sim"
+        );
+        if t > self.now {
+            self.energy_j += self.spec.idle_power_w * (t - self.now);
+            self.now = t;
+        }
+    }
+
+    /// Handle completion of job `id`'s current op; may emit an event.
+    fn complete_op(&mut self, id: JobId) -> Option<SimEvent> {
+        let r = self.running.get_mut(&id).unwrap();
+        match r.ops.get(r.cursor) {
+            Some(Op::Fixed { .. }) | Some(Op::Pcie { .. }) => {
+                // Memory becomes resident once the alloc (cursor 0) ends.
+                if r.cursor == 0 {
+                    if let ComputeModel::Phases(_) = r.spec.compute {
+                        r.cur_mem_gb = r.spec.true_mem_gb;
+                        // Mis-estimated static job: OOM as soon as the
+                        // allocation exceeds the slice.
+                        if r.spec.true_mem_gb > r.inst_mem_gb + EPS {
+                            let mem = r.spec.true_mem_gb;
+                            self.counters.oom_restarts += 1;
+                            return Some(self.kill(id, KillKind::Oom { iter: 0, mem_gb: mem }));
+                        }
+                    }
+                }
+            }
+            Some(Op::IterKernel { iter, .. }) => {
+                let iter = *iter;
+                let trace = r.trace.as_ref().expect("iterative job has a trace");
+                let mem = trace.phys_gb[iter];
+                let obs = trace.observation(iter);
+                r.cur_mem_gb = mem.min(r.inst_mem_gb);
+                if mem > r.inst_mem_gb + EPS {
+                    self.counters.oom_restarts += 1;
+                    return Some(self.kill(id, KillKind::Oom { iter, mem_gb: mem }));
+                }
+                if let Some(mon) = &mut r.monitor {
+                    if let PredictionOutcome::Converged { peak_physical_gb } = mon.push(obs) {
+                        if peak_physical_gb > r.inst_mem_gb + EPS {
+                            self.counters.early_restarts += 1;
+                            return Some(self.kill(
+                                id,
+                                KillKind::Preempt {
+                                    iter,
+                                    peak: peak_physical_gb,
+                                },
+                            ));
+                        }
+                    }
+                }
+            }
+            // Exhausted program (dt=0 path above): finish below.
+            None => {}
+        }
+        // Advance the cursor; finish the job if the program is done.
+        let r = self.running.get_mut(&id).unwrap();
+        if r.cursor < r.ops.len() {
+            r.cursor += 1;
+        }
+        if r.cursor >= r.ops.len() {
+            let r = self.running.remove(&id).unwrap();
+            self.run_order.retain(|&j| j != id);
+            self.records.push(JobRecord {
+                name: r.spec.name.clone(),
+                submit_time: r.submit_time,
+                start_time: r.start_time,
+                finish_time: self.now,
+            });
+            return Some(SimEvent::Finished {
+                job: id,
+                spec: r.spec,
+                instance: r.instance,
+                submit_time: r.submit_time,
+            });
+        }
+        // Arm the next op under the *live* instance layout (Table-3
+        // overheads are taken at op start, not at launch).
+        let n_inst = self.mgr.instance_count();
+        let r = self.running.get_mut(&id).unwrap();
+        arm_op(&mut r.ops[r.cursor], &self.spec, n_inst);
+        None
+    }
+
+    fn kill(&mut self, id: JobId, kind: KillKind) -> SimEvent {
+        let r = self.running.remove(&id).unwrap();
+        self.run_order.retain(|&j| j != id);
+        match kind {
+            KillKind::Oom { iter, mem_gb } => SimEvent::Oom {
+                job: id,
+                spec: r.spec,
+                instance: r.instance,
+                submit_time: r.submit_time,
+                iter,
+                mem_gb,
+            },
+            KillKind::Preempt { iter, peak } => SimEvent::Preempted {
+                job: id,
+                spec: r.spec,
+                instance: r.instance,
+                submit_time: r.submit_time,
+                iter,
+                predicted_peak_gb: peak,
+            },
+        }
+    }
+
+    /// Test hook mirroring [`super::GpuSim::inject_empty_job_for_test`].
+    #[cfg(test)]
+    pub(crate) fn inject_empty_job_for_test(
+        &mut self,
+        spec: JobSpec,
+        instance: InstanceId,
+        submit_time: f64,
+    ) -> JobId {
+        assert!(!self.running_on(instance));
+        let c = self.mgr.compute_slices_of(instance).unwrap();
+        let inst_mem = self.mgr.mem_gb_of(instance).unwrap();
+        let mut r = Running::launch(spec, instance, inst_mem, c, self.now, submit_time, None);
+        r.ops.clear();
+        let id = self.next_id;
+        self.next_id += 1;
+        self.running.insert(id, r);
+        self.run_order.push(id);
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::rodinia;
+
+    fn sim() -> NaiveGpuSim {
+        NaiveGpuSim::new(Arc::new(GpuSpec::a100_40gb()), false)
+    }
+
+    #[test]
+    fn oracle_matches_ideal_single_job_runtime() {
+        let mut s = sim();
+        let prof = s.spec.profile_index("7g.40gb").unwrap();
+        let inst = s.mgr.alloc(prof).unwrap();
+        let job = rodinia::by_name("nw").unwrap().job(7);
+        let ideal = job.baseline_runtime_s(7);
+        s.launch(job, inst, 0.0);
+        while s.advance().is_some() {}
+        assert!((s.now() - ideal).abs() < 1e-6, "{} vs {ideal}", s.now());
+    }
+
+    #[test]
+    fn oracle_exhausted_op_program_finishes_cleanly() {
+        // The dt=∞ regression, oracle side: an exhausted program is due
+        // immediately and finishes without poisoning energy (critical
+        // under `cargo test --release`, where debug_assert! is off).
+        let mut s = sim();
+        let inst = s.mgr.alloc(0).unwrap();
+        s.inject_empty_job_for_test(rodinia::by_name("gaussian").unwrap().job(7), inst, 0.0);
+        let ev = s.advance().expect("must finish");
+        assert!(matches!(ev, SimEvent::Finished { .. }));
+        assert!(s.advance().is_none());
+        assert!(s.energy_j().is_finite());
+        assert_eq!(s.records.len(), 1);
+    }
+
+    #[test]
+    fn oracle_horizon_clip_preserves_completion_time() {
+        let job = rodinia::by_name("gaussian").unwrap().job(7);
+        let mut a = sim();
+        let i = a.mgr.alloc(0).unwrap();
+        a.launch(job.clone(), i, 0.0);
+        while a.advance().is_some() {}
+        let t_ref = a.now();
+        let mut b = sim();
+        let i = b.mgr.alloc(0).unwrap();
+        b.launch(job, i, 0.0);
+        assert!(b.advance_with_horizon(Some(t_ref * 0.4)).is_none());
+        while b.advance().is_some() {}
+        assert!((b.now() - t_ref).abs() < 1e-9);
+    }
+}

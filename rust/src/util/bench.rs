@@ -83,7 +83,7 @@ impl Bench {
             black_box(f());
             samples_ns.push(t0.elapsed().as_nanos() as f64);
         }
-        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples_ns.sort_by(f64::total_cmp);
         let n = samples_ns.len() as u64;
         let mean = samples_ns.iter().sum::<f64>() / n as f64;
         let pct = |p: f64| samples_ns[((p * (n as f64 - 1.0)) as usize).min(samples_ns.len() - 1)];

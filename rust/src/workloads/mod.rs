@@ -7,11 +7,14 @@
 //!   [`crate::estimator::dnnmem`].
 //! * [`llm`] — the four dynamic LLM workloads with allocator traces.
 //! * [`mix`] — the paper's job mixes (Tables 1 and 2).
+//! * [`synthetic`] — artificial many-instance GPU models + filler jobs
+//!   for the scale benches and fleet examples.
 
 pub mod dnn;
 pub mod llm;
 pub mod mix;
 pub mod rodinia;
+pub mod synthetic;
 
 use crate::estimator::MemoryEstimate;
 use crate::trace::TraceSpec;

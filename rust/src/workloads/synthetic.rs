@@ -1,0 +1,86 @@
+//! Synthetic what-if models for scale benches and examples.
+//!
+//! Real MIG geometries top out at 7 instances per GPU, which caps how
+//! much per-engine concurrency a DES benchmark can generate. These
+//! helpers build an artificial-but-valid model with many independent
+//! single-slice instances, plus a cheap long-program job to fill them.
+//! Shared by `benches/des_engine.rs` and `examples/fleet_scale.rs` so
+//! the example always demonstrates exactly the benched scenario (and
+//! because the reachability cache is keyed by spec *name*, divergent
+//! copies under one name would silently share the wrong table).
+
+use crate::estimator::{EstimationMethod, MemoryEstimate};
+use crate::mig::{GpuSpec, MigProfile};
+use crate::workloads::{ComputeModel, JobKind, JobSpec, PhaseProfile};
+
+/// A MIG model with `slices` independent 1-GPC/1-GB instances, so one
+/// sim can hold `slices` concurrent jobs. Keep `slices` modest (~16):
+/// the reachability precompute enumerates 2^`slices` subset states.
+pub fn many_instance_spec(slices: u8) -> GpuSpec {
+    GpuSpec::custom(
+        &format!("SYNTH-{slices}x1g"),
+        slices,
+        slices,
+        slices as f64,
+        vec![MigProfile {
+            name: "1g.1gb".into(),
+            compute_slices: 1,
+            mem_slices: 1,
+            mem_gb: 1.0,
+            placements: (0..slices).collect(),
+        }],
+    )
+}
+
+/// A cheap synthetic job with a long op program (kernel steps with
+/// per-step minibatch transfers) so engine time dominates setup in
+/// benches that drain thousands of these.
+pub fn fleet_job(steps: u32) -> JobSpec {
+    JobSpec {
+        name: "synthetic".into(),
+        kind: JobKind::Rodinia,
+        demand_gpcs: 1,
+        true_mem_gb: 0.8,
+        est: MemoryEstimate {
+            mem_gb: 0.8,
+            compute_gpcs: 1,
+            method: EstimationMethod::CompilerAnalysis,
+        },
+        compute: ComputeModel::Phases(PhaseProfile {
+            alloc_s: 0.05,
+            h2d_pcie_s: 0.4,
+            steps,
+            step_s: 0.01,
+            step_pcie_s: 0.005,
+            d2h_pcie_s: 0.4,
+            free_s: 0.02,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::GpuSim;
+    use std::sync::Arc;
+
+    #[test]
+    fn synthetic_spec_fills_to_capacity_and_runs() {
+        let spec = Arc::new(many_instance_spec(8));
+        let mut s = GpuSim::new(spec, false);
+        let job = fleet_job(3);
+        for _ in 0..8 {
+            let i = s.mgr.alloc(0).unwrap();
+            s.launch(job.clone(), i, 0.0);
+        }
+        assert!(s.mgr.alloc(0).is_err(), "9th instance must not fit");
+        let mut n = 0;
+        while let Some(ev) = s.advance() {
+            if matches!(ev, crate::sim::SimEvent::Finished { .. }) {
+                n += 1;
+            }
+        }
+        assert_eq!(n, 8);
+        assert!(s.now() > 0.0 && s.energy_j().is_finite());
+    }
+}
