@@ -1,0 +1,137 @@
+//! Orchestrator-path fleet benches (the ROADMAP's missing counterpart
+//! to `des_engine`'s raw-`GpuSim` fleet benches): 1k / 10k jobs driven
+//! through the real [`Orchestrator`] — sharded per-GPU policies,
+//! arrival queue, leapfrog clock bounding, transactional
+//! reconfiguration windows — across fleets of synthetic GPUs. This is
+//! the load the policy-search sweeps put on the engine, so it bounds
+//! `migm tune` throughput too.
+//!
+//! Set `MIGM_BENCH_SMOKE=1` for the CI smoke run (smaller fleet, the
+//! 10k fleet skipped). Set `MIGM_BENCH_JSON=<path>` to also write the
+//! stats as JSON (uploaded as a CI perf artifact next to
+//! `BENCH_policy_search.json`).
+
+use std::sync::Arc;
+
+use migm::scheduler::scheme_a::{SchemeAKnobs, SchemeAPolicy};
+use migm::scheduler::scheme_b::{SchemeBKnobs, SchemeBPolicy};
+use migm::scheduler::{Orchestrator, ShardedPolicy};
+use migm::util::bench::{black_box, Bench, BenchStats};
+use migm::util::{Json, Rng};
+use migm::workloads::synthetic::{fleet_job, many_instance_spec, sized_job, tiered_spec};
+use migm::GpuSpec;
+
+/// Drain `n_gpus * per_gpu` copies of `job` through a sharded Scheme-B
+/// fleet; returns the fleet makespan (a value the optimizer can't
+/// discard).
+fn drain_scheme_b(
+    spec: &Arc<GpuSpec>,
+    n_gpus: usize,
+    per_gpu: usize,
+    job: &migm::workloads::JobSpec,
+    arrival_rate: Option<f64>,
+) -> f64 {
+    let policy = ShardedPolicy::new(
+        (0..n_gpus)
+            .map(|g| SchemeBPolicy::new_on(spec.clone(), SchemeBKnobs::default(), g))
+            .collect(),
+    );
+    let mut orch = Orchestrator::new(vec![spec.clone(); n_gpus], false, policy);
+    let mut rng = Rng::new(7);
+    let mut t = 0.0;
+    for _ in 0..n_gpus * per_gpu {
+        if let Some(rate) = arrival_rate {
+            t += rng.exp(rate);
+        }
+        orch.submit_at(job.clone(), t);
+    }
+    orch.run_to_completion();
+    orch.fleet_result().metrics.makespan_s
+}
+
+/// Same shape for Scheme A on the tiered spec (class waves + one
+/// multi-create plan per wave).
+fn drain_scheme_a_tiered(spec: &Arc<GpuSpec>, n_gpus: usize, per_gpu: usize) -> f64 {
+    let policy = ShardedPolicy::new(
+        (0..n_gpus)
+            .map(|g| SchemeAPolicy::new_on(spec.clone(), SchemeAKnobs::default(), g))
+            .collect(),
+    );
+    let mut orch = Orchestrator::new(vec![spec.clone(); n_gpus], false, policy);
+    let small = sized_job("tier-small", 0.9, 20);
+    let large = sized_job("tier-large", 3.6, 40);
+    for i in 0..n_gpus * per_gpu {
+        let job = if i % 5 == 4 { large.clone() } else { small.clone() };
+        orch.submit_at(job, 0.0);
+    }
+    orch.run_to_completion();
+    orch.fleet_result().metrics.makespan_s
+}
+
+fn main() {
+    let smoke = std::env::var("MIGM_BENCH_SMOKE").is_ok();
+    let b = if smoke { Bench::coarse() } else { Bench::new() };
+    let mut all: Vec<BenchStats> = Vec::new();
+
+    // ---- 1k-job fleet through the orchestrator ---------------------
+    // 16 concurrent jobs per engine (synthetic-geometry cap); the GPU
+    // count scales total in-flight jobs, mirroring des_engine's fleet
+    // benches so orchestrator overhead reads directly against them.
+    let synth = Arc::new(many_instance_spec(16));
+    // Warm the shared reachability table outside the timed region.
+    {
+        let warm = ShardedPolicy::new(vec![SchemeBPolicy::new_on(
+            synth.clone(),
+            SchemeBKnobs::default(),
+            0,
+        )]);
+        let _ = Orchestrator::new(vec![synth.clone()], false, warm);
+    }
+    let fjob = fleet_job(if smoke { 20 } else { 100 });
+    let fleet = if smoke { 8 } else { 64 }; // x16 jobs per GPU
+    let per = 16;
+
+    all.push(b.run("orch_fleet_1k_jobs_scheme_b_batch", || {
+        black_box(drain_scheme_b(&synth, fleet, per, &fjob, None))
+    }));
+    all.push(b.run("orch_fleet_1k_jobs_scheme_b_poisson", || {
+        black_box(drain_scheme_b(&synth, fleet, per, &fjob, Some(8.0)))
+    }));
+
+    // ---- tiered fleet through Scheme A class waves -----------------
+    let tiered = Arc::new(tiered_spec(12));
+    let tiered_gpus = if smoke { 4 } else { 16 };
+    all.push(b.run("orch_fleet_tiered_scheme_a_waves", || {
+        black_box(drain_scheme_a_tiered(&tiered, tiered_gpus, 15))
+    }));
+
+    if !smoke {
+        let cb = Bench::coarse();
+        all.push(cb.run("orch_fleet_10k_jobs_scheme_b_batch", || {
+            black_box(drain_scheme_b(&synth, 640, per, &fjob, None))
+        }));
+    }
+
+    if let Ok(path) = std::env::var("MIGM_BENCH_JSON") {
+        let results: Vec<Json> = all
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(s.name.clone())),
+                    ("n", Json::num(s.n as f64)),
+                    ("median_ns", Json::num(s.median_ns)),
+                    ("mean_ns", Json::num(s.mean_ns)),
+                    ("p95_ns", Json::num(s.p95_ns)),
+                    ("min_ns", Json::num(s.min_ns)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("schema", Json::str("migm.bench.orchestrator_fleet.v1")),
+            ("smoke", Json::Bool(smoke)),
+            ("results", Json::Arr(results)),
+        ]);
+        std::fs::write(&path, format!("{doc}\n")).expect("writing bench JSON");
+        println!("wrote {path}");
+    }
+}

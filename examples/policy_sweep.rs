@@ -1,0 +1,48 @@
+//! Policy-search sweep over scheduler knobs on simulated fleets.
+//!
+//! Demonstrates the `tuner` subsystem end to end: build a typed
+//! `ParamSpace` over Scheme A/B knobs, prune it with successive
+//! halving on short horizons, re-score the survivors on full fleets
+//! (paper Ht2 on an A100 plus a 2-GPU tiered synthetic fleet), and
+//! print the ranked, reproducible report — the same path as
+//! `migm tune`, whose JSON artifact feeds the CI perf trajectory.
+//!
+//! Run with: `cargo run --example policy_sweep`
+
+use migm::config::DEFAULT_SEED;
+use migm::tuner::{sweep, Generator, ParamSpace, Scenario, SweepConfig};
+
+fn main() {
+    let seed = DEFAULT_SEED;
+    let cfg = SweepConfig {
+        space: ParamSpace::smoke(),
+        scenarios: vec![
+            Scenario::synthetic_fleet(2, seed),
+            Scenario::paper("ht2", seed).expect("known mix"),
+        ],
+        generator: Generator::Halving {
+            n: 0, // prune the full grid
+            eta: 2,
+            finalists: 3,
+            short_frac: 0.3,
+        },
+        seed,
+        threads: std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+    };
+    let report = sweep(&cfg).expect("sweep");
+    println!("{}", report.render());
+
+    let best = report.best();
+    println!(
+        "winner: {}  (objective {:.4}, reference = 1.0)",
+        best.candidate.label(),
+        best.objective
+    );
+    println!("winning candidate JSON: {}", best.candidate.to_json());
+    println!(
+        "sweep trajectory rounds: {} (last = full horizon)",
+        report.trajectory.len()
+    );
+}

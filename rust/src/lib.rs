@@ -43,6 +43,18 @@
 //!   `run()` wrappers / [`scheduler::run_mix`]; online entry point: the
 //!   same, with arrival times stamped on the mix (`Mix::with_poisson_arrivals`,
 //!   `Mix::with_arrival_trace`, or the config `arrivals` field).
+//!   Scheme knobs are first-class tunables
+//!   ([`scheduler::SchemeAKnobs`] / [`scheduler::SchemeBKnobs`]), and
+//!   [`scheduler::ShardedPolicy`] lifts any single-GPU policy to a
+//!   multi-GPU fleet.
+//! * [`tuner`] — policy-search sweeps (`migm tune`): a typed
+//!   [`tuner::ParamSpace`] over the scheduler knobs (Scheme A ladder,
+//!   Scheme B fusion/reuse thresholds, predictor, arrival intensity),
+//!   grid / seeded-random / successive-halving generators, and a
+//!   thread-parallel evaluator that scores candidates through the real
+//!   orchestrator on paper mixes and synthetic multi-GPU fleets,
+//!   emitting a deterministic, schema-stable
+//!   [`tuner::SweepReport`] (the CI perf-trajectory artifact).
 //! * [`runtime`] — PJRT-CPU loading/execution of the AOT artifacts.
 //! * [`server`] — JSON-lines LLM serving front-end; replica placement
 //!   and request-latency accounting route through the scheduling
@@ -65,6 +77,7 @@ pub mod scheduler;
 pub mod server;
 pub mod sim;
 pub mod trace;
+pub mod tuner;
 pub mod util;
 pub mod workloads;
 

@@ -4,6 +4,8 @@
 //! migm run --mix ht2 --scheme a [--prediction] [--gpu a100] [--seed N]
 //! migm run --config experiment.json
 //! migm report <all|fig3|reach|prelim|fig4-rodinia|fig4-ml|fig4-llm|oom|online|seeds|table3|table4>
+//! migm tune [--smoke] [--generator grid|random|halving] [--n 32] [--gpus 4]
+//!           [--seed N] [--threads N] [--out FILE] [--trajectory FILE]
 //! migm mig <list-configs|reachability> [--gpu a100]
 //! migm serve [--port 7700] [--replicas 2] [--variant decode_s128]
 //! migm client [--port 7700] --prompt 3,17,9 [--max-new 16]
@@ -79,6 +81,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(&args),
         "report" => cmd_report(&args),
+        "tune" => cmd_tune(&args),
         "mig" => cmd_mig(&args),
         #[cfg(feature = "pjrt")]
         "serve" => cmd_serve(&args),
@@ -102,12 +105,20 @@ USAGE:
            [--gpu a100|a30|a100-80gb|h100] [--seed N] [--compare]
   migm run --config <file.json>
   migm report <all|fig3|reach|prelim|fig4-rodinia|fig4-ml|fig4-llm|oom|online|seeds|table3|table4>
+  migm tune [--smoke] [--generator grid|random|halving] [--n 32] [--gpus 4]
+            [--seed N] [--threads N] [--out FILE] [--trajectory FILE]
   migm mig <list-configs|reachability> [--gpu a100]
   migm serve [--port 7700] [--replicas 2] [--variant decode_s128]
   migm client [--port 7700] --prompt 3,17,9 [--max-new 16]
 
 Mixes: hm1-4, ht1-3, ml1-3, flan-t5-train, flan-t5, qwen2, llama3,
-       preliminary-a30."
+       preliminary-a30.
+
+tune: policy-search sweep over scheduler knobs on simulated fleets.
+      Writes a schema-stable report (default BENCH_policy_search.json),
+      optionally appends a summary row to a trajectory file, and (for
+      grid runs) fails unless some candidate beats the default Scheme B
+      knobs on at least one scenario."
     );
 }
 
@@ -216,6 +227,146 @@ fn cmd_report(args: &Args) -> Result<()> {
         other => bail!("unknown report '{other}'"),
     };
     println!("{out}");
+    Ok(())
+}
+
+/// `migm tune` — run a policy-search sweep and gate on the result.
+///
+/// `--smoke` (or `MIGM_BENCH_SMOKE=1`) shrinks the space and fleet for
+/// the CI perf-trajectory step. The sweep is deterministic per seed, so
+/// the exit-code gate (grid runs must show some candidate beating the
+/// default Scheme B knobs on at least one scenario) cannot flake.
+fn cmd_tune(args: &Args) -> Result<()> {
+    use migm::tuner::{sweep, Generator, ParamSpace, Scenario, SweepConfig};
+    use migm::util::Json;
+
+    let smoke = args.has("smoke") || std::env::var("MIGM_BENCH_SMOKE").is_ok();
+    let seed = args
+        .get("seed")
+        .map(|s| s.parse::<u64>())
+        .transpose()?
+        .unwrap_or(DEFAULT_SEED);
+    let threads = args
+        .get("threads")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        });
+    let n_gpus = args
+        .get("gpus")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(if smoke { 2 } else { 4 })
+        .max(1);
+    let n = args
+        .get("n")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(32);
+    let generator = match args.get("generator").unwrap_or("grid") {
+        "grid" => Generator::Grid,
+        "random" => Generator::Random { n },
+        "halving" => Generator::Halving {
+            n,
+            eta: 3,
+            finalists: 4,
+            short_frac: 0.3,
+        },
+        other => bail!("unknown generator '{other}' (grid|random|halving)"),
+    };
+    let space = if smoke {
+        ParamSpace::smoke()
+    } else {
+        ParamSpace::full()
+    };
+    let mut scenarios = vec![
+        Scenario::synthetic_fleet(n_gpus, seed),
+        Scenario::paper("ht2", seed).expect("known mix"),
+    ];
+    if !smoke {
+        scenarios.push(Scenario::paper("ht3", seed).expect("known mix"));
+        scenarios.push(Scenario::paper("ml1", seed).expect("known mix"));
+        scenarios.push(Scenario::synthetic_fleet_online(n_gpus, seed, 2.0));
+    }
+    let cfg = SweepConfig {
+        space,
+        scenarios,
+        generator,
+        seed,
+        threads,
+    };
+    let report = sweep(&cfg)?;
+    println!("{}", report.render());
+
+    let out = args.get("out").unwrap_or("BENCH_policy_search.json");
+    std::fs::write(out, format!("{}\n", report.to_json()))
+        .with_context(|| format!("writing sweep report {out}"))?;
+    println!("wrote {out}");
+
+    if let Some(path) = args.get("trajectory") {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) if !t.trim().is_empty() => t,
+            _ => "[]".to_string(),
+        };
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing trajectory file {path}: {e}"))?;
+        let Json::Arr(mut rows) = doc else {
+            bail!("trajectory file {path} must hold a JSON array");
+        };
+        rows.push(report.summary_json());
+        std::fs::write(path, format!("{}\n", Json::Arr(rows)))
+            .with_context(|| format!("writing trajectory {path}"))?;
+        println!("appended summary to {path}");
+    }
+
+    // Perf gate (relative, deterministic per seed): some non-default
+    // candidate must strictly beat the default-knob Scheme B reference
+    // on at least one scenario — the structural knob advantage the
+    // tiered synthetic fleet is built to expose. If a scheduler or
+    // simulator change erases it, this exits non-zero. Absolute drift
+    // (a uniformly slower simulator rescales reference and candidates
+    // alike) is NOT gated here; it shows up in the trajectory rows'
+    // absolute reference numbers instead.
+    let best = report.best();
+    if best.objective + 1e-9 < 1.0 {
+        bail!(
+            "perf gate: best candidate '{}' scores {:.4}, below the default Scheme B reference",
+            best.candidate.label(),
+            best.objective
+        );
+    }
+    // Only nominal-load candidates count as knob wins: a candidate
+    // whose arrival_scale lowers the offered load beats the (nominal
+    // load) reference by changing the workload, not the policy.
+    let knob_wins: Vec<&str> = report
+        .ranked
+        .iter()
+        .filter(|c| !c.is_reference && (c.candidate.arrival_scale - 1.0).abs() < 1e-12)
+        .flat_map(|c| c.outcomes.iter())
+        .filter(|o| o.score > 1.0 + 1e-9)
+        .map(|o| o.scenario.as_str())
+        .collect();
+    if knob_wins.is_empty() {
+        // Only the exhaustive grid is guaranteed to contain the winning
+        // knob point; random pools may miss it and halving may prune it
+        // on a short horizon, so those runs just warn.
+        if matches!(cfg.generator, Generator::Grid) {
+            bail!(
+                "perf gate: no candidate beats the default Scheme B knobs on any scenario \
+                 (the knob advantage regressed)"
+            );
+        }
+        println!("warning: no candidate beat the default Scheme B knobs in this pool");
+    }
+    println!(
+        "perf gate OK: best '{}' objective {:.4}; default beaten on {} scenario run(s)",
+        best.candidate.label(),
+        best.objective,
+        knob_wins.len()
+    );
     Ok(())
 }
 

@@ -24,8 +24,13 @@ pub struct BaselinePolicy {
 
 impl BaselinePolicy {
     pub fn new() -> Self {
+        Self::new_on(0)
+    }
+
+    /// A baseline shard driving GPU `gpu` of an orchestrator fleet.
+    pub fn new_on(gpu: GpuId) -> Self {
         BaselinePolicy {
-            gpu: 0,
+            gpu,
             queue: VecDeque::new(),
             inst: None,
         }

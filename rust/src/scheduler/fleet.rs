@@ -1,0 +1,195 @@
+//! Fleet scheduling: shard a single-GPU policy across every GPU of an
+//! [`Orchestrator`](super::Orchestrator).
+//!
+//! The shipped paper policies each drive one GPU. A [`ShardedPolicy`]
+//! lifts any of them to a fleet: it holds one inner policy per GPU
+//! (each constructed with its own `GpuId` via the policies' `new_on`
+//! constructors), deals arrivals round-robin, and routes every
+//! simulator event to the shard owning that GPU. Stall notifications
+//! fan out to every shard, so each GPU's forward-progress invariants
+//! are exactly the single-GPU ones.
+//!
+//! Shards may be heterogeneous: `ShardedPolicy<Box<dyn
+//! SchedulingPolicy>>` mixes schemes across the fleet (the
+//! [`tuner`](crate::tuner) builds its candidate fleets this way).
+//!
+//! Round-robin is deliberate: it is deterministic, stateless with
+//! respect to the inner policies, and — with the identical-GPU fleets
+//! the benches and the tuner drive — load-balanced by construction.
+
+use super::policy::{Action, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
+use super::PendingJob;
+use crate::mig::{InstanceId, PartitionPlan};
+
+/// One inner policy per GPU; arrivals dealt round-robin, events routed
+/// by the GPU that raised them.
+pub struct ShardedPolicy<P> {
+    inner: Vec<P>,
+    next: usize,
+}
+
+impl<P: SchedulingPolicy> ShardedPolicy<P> {
+    /// Wrap one policy per GPU. `inner[g]` must have been constructed
+    /// for GPU `g` (the policies' `new_on` constructors).
+    pub fn new(inner: Vec<P>) -> Self {
+        assert!(!inner.is_empty(), "a fleet needs at least one shard");
+        ShardedPolicy { inner, next: 0 }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn shard(&self, gpu: GpuId) -> &P {
+        &self.inner[gpu]
+    }
+}
+
+impl<P: SchedulingPolicy> SchedulingPolicy for ShardedPolicy<P> {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn on_submit(&mut self, ctx: &PolicyCtx, job: PendingJob) -> Vec<Action> {
+        let g = self.next % self.inner.len();
+        self.next += 1;
+        self.inner[g].on_submit(ctx, job)
+    }
+
+    fn on_job_finish(&mut self, ctx: &PolicyCtx, ev: JobEvent) -> Vec<Action> {
+        self.inner[ev.gpu].on_job_finish(ctx, ev)
+    }
+
+    fn on_oom(&mut self, ctx: &PolicyCtx, ev: JobEvent, iter: usize, mem_gb: f64) -> Vec<Action> {
+        self.inner[ev.gpu].on_oom(ctx, ev, iter, mem_gb)
+    }
+
+    fn on_early_restart_signal(
+        &mut self,
+        ctx: &PolicyCtx,
+        ev: JobEvent,
+        iter: usize,
+        predicted_peak_gb: f64,
+    ) -> Vec<Action> {
+        self.inner[ev.gpu].on_early_restart_signal(ctx, ev, iter, predicted_peak_gb)
+    }
+
+    fn on_reconfig_done(
+        &mut self,
+        ctx: &PolicyCtx,
+        gpu: GpuId,
+        plan: &PartitionPlan,
+        created: &[InstanceId],
+    ) -> Vec<Action> {
+        self.inner[gpu].on_reconfig_done(ctx, gpu, plan, created)
+    }
+
+    fn on_stalled(&mut self, ctx: &PolicyCtx) -> Vec<Action> {
+        // Fan out: the fleet is quiescent, so every shard holding work
+        // gets its chance to restart its own GPU.
+        let mut acts = Vec::new();
+        for p in &mut self.inner {
+            acts.extend(p.on_stalled(ctx));
+        }
+        acts
+    }
+
+    fn has_pending_work(&self) -> bool {
+        self.inner.iter().any(|p| p.has_pending_work())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::mig::GpuSpec;
+    use crate::scheduler::scheme_a::{SchemeAKnobs, SchemeAPolicy};
+    use crate::scheduler::scheme_b::{SchemeBKnobs, SchemeBPolicy};
+    use crate::scheduler::Orchestrator;
+    use crate::workloads::rodinia;
+
+    fn a100() -> Arc<GpuSpec> {
+        Arc::new(GpuSpec::a100_40gb())
+    }
+
+    fn gaussian_jobs(n: usize) -> Vec<crate::workloads::JobSpec> {
+        (0..n)
+            .map(|_| rodinia::by_name("gaussian").unwrap().job(7))
+            .collect()
+    }
+
+    #[test]
+    fn sharded_scheme_b_splits_a_batch_across_the_fleet() {
+        let spec = a100();
+        let n_gpus = 2;
+        let policy = ShardedPolicy::new(
+            (0..n_gpus)
+                .map(|g| SchemeBPolicy::new_on(spec.clone(), SchemeBKnobs::default(), g))
+                .collect(),
+        );
+        let mut orch = Orchestrator::new(vec![spec.clone(), spec], false, policy);
+        for job in gaussian_jobs(10) {
+            orch.submit_at(job, 0.0);
+        }
+        orch.run_to_completion();
+        // round-robin: 5 jobs complete on each GPU
+        assert_eq!(orch.gpu(0).records.len(), 5);
+        assert_eq!(orch.gpu(1).records.len(), 5);
+        let fleet = orch.fleet_result();
+        assert_eq!(fleet.metrics.n_jobs, 10);
+        assert_eq!(fleet.records.len(), 10);
+        // the fleet halves the single-GPU makespan (same per-GPU load)
+        let solo = Orchestrator::single(
+            a100(),
+            false,
+            SchemeBPolicy::new(a100()),
+        )
+        .run_mix(&crate::workloads::mix::Mix::batch("solo", gaussian_jobs(10)));
+        assert!(fleet.metrics.makespan_s < solo.metrics.makespan_s);
+        assert_eq!(
+            fleet.counters.reconfig_ops,
+            orch.gpu(0).counters.reconfig_ops + orch.gpu(1).counters.reconfig_ops
+        );
+    }
+
+    #[test]
+    fn sharded_scheme_a_runs_class_waves_per_gpu() {
+        let spec = a100();
+        let n_gpus = 2;
+        let policy = ShardedPolicy::new(
+            (0..n_gpus)
+                .map(|g| SchemeAPolicy::new_on(spec.clone(), SchemeAKnobs::default(), g))
+                .collect(),
+        );
+        let mut orch = Orchestrator::new(vec![spec.clone(), spec], false, policy);
+        let m = crate::workloads::mix::ht2(crate::config::DEFAULT_SEED);
+        orch.submit_mix(&m);
+        orch.run_to_completion();
+        let fleet = orch.fleet_result();
+        assert_eq!(fleet.records.len(), m.jobs.len());
+        assert_eq!(fleet.metrics.n_jobs, m.jobs.len());
+        assert!(fleet.metrics.oom_restarts == 0);
+        assert!(fleet.latency.p99_turnaround_s >= fleet.latency.p50_turnaround_s);
+    }
+
+    #[test]
+    fn boxed_shards_mix_schemes() {
+        let spec = a100();
+        let shards: Vec<Box<dyn SchedulingPolicy>> = vec![
+            Box::new(SchemeBPolicy::new_on(spec.clone(), SchemeBKnobs::default(), 0)),
+            Box::new(SchemeAPolicy::new_on(spec.clone(), SchemeAKnobs::default(), 1)),
+        ];
+        let policy = ShardedPolicy::new(shards);
+        assert_eq!(policy.n_shards(), 2);
+        assert_eq!(policy.shard(0).name(), "scheme-B");
+        assert_eq!(policy.shard(1).name(), "scheme-A");
+        let mut orch = Orchestrator::new(vec![spec.clone(), spec], false, policy);
+        for job in gaussian_jobs(6) {
+            orch.submit_at(job, 0.0);
+        }
+        orch.run_to_completion();
+        assert_eq!(orch.fleet_result().records.len(), 6);
+    }
+}

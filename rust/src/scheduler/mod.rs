@@ -30,8 +30,19 @@
 //! `Mix::with_arrival_trace`). The [`legacy`] module (tests only)
 //! preserves the pre-orchestrator loops as the golden reference for the
 //! [`parity`] tests.
+//!
+//! Scheme A and B carry *knob structs*
+//! ([`SchemeAKnobs`](scheme_a::SchemeAKnobs) /
+//! [`SchemeBKnobs`](scheme_b::SchemeBKnobs)): constructible,
+//! JSON-serializable tuning parameters whose defaults reproduce the
+//! paper bit for bit, swept by the [`tuner`](crate::tuner). The
+//! [`fleet`] module lifts any single-GPU policy to a multi-GPU fleet
+//! ([`fleet::ShardedPolicy`]: round-robin arrivals, per-GPU event
+//! routing), and [`Orchestrator::fleet_result`] aggregates a fleet run
+//! into one scored result.
 
 pub mod baseline;
+pub mod fleet;
 #[cfg(test)]
 pub mod legacy;
 pub mod orchestrator;
@@ -51,8 +62,11 @@ use crate::sim::{GpuSim, JobRecord, SimCounters};
 use crate::workloads::mix::Mix;
 use crate::workloads::JobSpec;
 
+pub use fleet::ShardedPolicy;
 pub use orchestrator::Orchestrator;
 pub use policy::{Action, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
+pub use scheme_a::SchemeAKnobs;
+pub use scheme_b::SchemeBKnobs;
 
 /// Result of one run (batch or online).
 #[derive(Debug, Clone)]

@@ -24,9 +24,9 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::metrics::LatencyStats;
+use crate::metrics::{BatchMetrics, LatencyStats};
 use crate::mig::{GpuSpec, InstanceId, MigError, PartitionPlan};
-use crate::sim::{GpuSim, JobRecord, SimEvent};
+use crate::sim::{GpuSim, JobRecord, SimCounters, SimEvent};
 use crate::workloads::mix::Mix;
 use crate::workloads::JobSpec;
 
@@ -155,6 +155,58 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
             .iter()
             .map(|g| finalize(g, g.records.len()))
             .collect()
+    }
+
+    /// One aggregate result over the whole fleet: makespan is the
+    /// furthest-advanced clock, energy/memory integrals and counters
+    /// sum across GPUs, per-job means divide by the *submitted* job
+    /// count, and latency percentiles pool every GPU's records (in GPU
+    /// order — deterministic). This is what the fleet benches and the
+    /// [`tuner`](crate::tuner) score candidates on.
+    pub fn fleet_result(&self) -> RunResult {
+        let makespan = self.now().max(1e-9);
+        let mut records: Vec<JobRecord> = Vec::new();
+        let mut counters = SimCounters::default();
+        let (mut energy, mut mem_integral, mut total_mem) = (0.0, 0.0, 0.0);
+        for g in &self.gpus {
+            records.extend(g.records.iter().cloned());
+            counters.reconfig_ops += g.counters.reconfig_ops;
+            counters.reconfig_windows += g.counters.reconfig_windows;
+            counters.reconfig_time_s += g.counters.reconfig_time_s;
+            counters.oom_restarts += g.counters.oom_restarts;
+            counters.early_restarts += g.counters.early_restarts;
+            energy += g.energy_j();
+            mem_integral += g.mem_gb_integral();
+            total_mem += g.spec.total_mem_gb;
+        }
+        let n_jobs = self.n_jobs;
+        let turnaround: f64 = records
+            .iter()
+            .map(|r| r.finish_time - r.submit_time)
+            .sum::<f64>()
+            / n_jobs.max(1) as f64;
+        let queue_s: Vec<f64> = records.iter().map(|r| r.start_time - r.submit_time).collect();
+        let turn_s: Vec<f64> = records.iter().map(|r| r.finish_time - r.submit_time).collect();
+        let metrics = BatchMetrics {
+            n_jobs,
+            makespan_s: makespan,
+            throughput_jps: n_jobs as f64 / makespan,
+            energy_j: energy,
+            energy_per_job_j: energy / n_jobs.max(1) as f64,
+            mem_utilization: mem_integral / (makespan * total_mem.max(1e-12)),
+            avg_turnaround_s: turnaround,
+            reconfig_ops: counters.reconfig_ops,
+            reconfig_windows: counters.reconfig_windows,
+            reconfig_time_s: counters.reconfig_time_s,
+            oom_restarts: counters.oom_restarts,
+            early_restarts: counters.early_restarts,
+        };
+        RunResult {
+            metrics,
+            records,
+            counters,
+            latency: LatencyStats::from_samples(&queue_s, &turn_s),
+        }
     }
 
     /// One scheduling step. Returns false when everything is done.

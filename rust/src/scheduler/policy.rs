@@ -186,3 +186,53 @@ pub trait SchedulingPolicy {
     /// Whether the policy still holds jobs it has not yet launched.
     fn has_pending_work(&self) -> bool;
 }
+
+/// Boxed policies are policies, so heterogeneous fleets (and the
+/// [`tuner`](crate::tuner)'s candidate-built shards) can pick a scheme
+/// at runtime: `ShardedPolicy<Box<dyn SchedulingPolicy>>` drives an
+/// `Orchestrator` like any concrete policy.
+impl<P: SchedulingPolicy + ?Sized> SchedulingPolicy for Box<P> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn on_submit(&mut self, ctx: &PolicyCtx, job: PendingJob) -> Vec<Action> {
+        (**self).on_submit(ctx, job)
+    }
+
+    fn on_job_finish(&mut self, ctx: &PolicyCtx, ev: JobEvent) -> Vec<Action> {
+        (**self).on_job_finish(ctx, ev)
+    }
+
+    fn on_oom(&mut self, ctx: &PolicyCtx, ev: JobEvent, iter: usize, mem_gb: f64) -> Vec<Action> {
+        (**self).on_oom(ctx, ev, iter, mem_gb)
+    }
+
+    fn on_early_restart_signal(
+        &mut self,
+        ctx: &PolicyCtx,
+        ev: JobEvent,
+        iter: usize,
+        predicted_peak_gb: f64,
+    ) -> Vec<Action> {
+        (**self).on_early_restart_signal(ctx, ev, iter, predicted_peak_gb)
+    }
+
+    fn on_reconfig_done(
+        &mut self,
+        ctx: &PolicyCtx,
+        gpu: GpuId,
+        plan: &PartitionPlan,
+        created: &[InstanceId],
+    ) -> Vec<Action> {
+        (**self).on_reconfig_done(ctx, gpu, plan, created)
+    }
+
+    fn on_stalled(&mut self, ctx: &PolicyCtx) -> Vec<Action> {
+        (**self).on_stalled(ctx)
+    }
+
+    fn has_pending_work(&self) -> bool {
+        (**self).has_pending_work()
+    }
+}

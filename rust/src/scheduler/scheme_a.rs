@@ -19,11 +19,56 @@ use std::collections::BTreeMap;
 use std::collections::VecDeque;
 use std::sync::Arc;
 
+use anyhow::{bail, Result};
+
 use crate::mig::{GpuSpec, InstanceId, PartitionPlan};
+use crate::util::Json;
 use crate::workloads::mix::Mix;
 
 use super::policy::{Action, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
-use super::{bump_estimate_after_oom, class_of, Orchestrator, PendingJob, RunResult};
+use super::{bump_estimate_after_oom, Orchestrator, PendingJob, RunResult};
+
+/// Tunable knobs of Scheme A, constructible and serializable so the
+/// [`tuner`](crate::tuner) can sweep them instead of them being baked
+/// into the policy internals. `Default` reproduces the paper's
+/// behavior bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SchemeAKnobs {
+    /// Merge the lowest `ladder_skip` size classes into the next rung
+    /// up: the policy's effective class ladder is the GPU ladder with
+    /// its `ladder_skip` smallest rungs dropped (clamped so at least
+    /// one rung remains). 0 — the paper's setting — keeps every
+    /// distinct profile size as its own class; a coarser ladder trades
+    /// per-class parallelism for fewer reconfiguration waves and wider
+    /// slices for the merged small jobs.
+    pub ladder_skip: usize,
+}
+
+impl SchemeAKnobs {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("ladder_skip", Json::num(self.ladder_skip as f64))])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let ladder_skip = match doc.get("ladder_skip") {
+            Json::Null => 0,
+            // as_u64 alone would truncate 2.9 to 2; require a whole number
+            v => match v.as_f64() {
+                Some(x) if x >= 0.0 && x.fract() == 0.0 => x as usize,
+                _ => bail!("ladder_skip must be a non-negative integer, got {v}"),
+            },
+        };
+        Ok(SchemeAKnobs { ladder_skip })
+    }
+
+    /// The effective class ladder on `spec`: the GPU ladder with the
+    /// `ladder_skip` smallest rungs dropped (never emptied).
+    pub fn effective_ladder(&self, spec: &GpuSpec) -> Vec<f64> {
+        let full = spec.ladder();
+        let skip = self.ladder_skip.min(full.len().saturating_sub(1));
+        full[skip..].to_vec()
+    }
+}
 
 /// Profiles whose memory equals the class cap, preferring more compute
 /// (on the A100's 20GB class this yields 4g.20gb before 3g.20gb,
@@ -44,6 +89,9 @@ fn class_profiles(spec: &GpuSpec, cap_gb: f64) -> Vec<usize> {
 pub struct SchemeAPolicy {
     spec: Arc<GpuSpec>,
     gpu: GpuId,
+    /// Effective class ladder (ascending memory caps, resolved from the
+    /// knobs against `spec` at construction; never empty).
+    ladder: Vec<f64>,
     /// Unprocessed jobs, keyed by size class.
     groups: BTreeMap<usize, VecDeque<PendingJob>>,
     /// The class whose homogeneous layout is being reconfigured.
@@ -56,15 +104,35 @@ pub struct SchemeAPolicy {
 
 impl SchemeAPolicy {
     pub fn new(spec: Arc<GpuSpec>) -> Self {
+        Self::new_on(spec, SchemeAKnobs::default(), 0)
+    }
+
+    pub fn with_knobs(spec: Arc<GpuSpec>, knobs: SchemeAKnobs) -> Self {
+        Self::new_on(spec, knobs, 0)
+    }
+
+    /// A Scheme-A shard driving GPU `gpu` of an orchestrator fleet.
+    pub fn new_on(spec: Arc<GpuSpec>, knobs: SchemeAKnobs, gpu: GpuId) -> Self {
+        let ladder = knobs.effective_ladder(&spec);
+        assert!(!ladder.is_empty(), "GPU spec has no profiles");
         SchemeAPolicy {
             spec,
-            gpu: 0,
+            gpu,
+            ladder,
             groups: BTreeMap::new(),
             staged: VecDeque::new(),
             reconfiguring: false,
             instances: Vec::new(),
             local: Vec::new(),
         }
+    }
+
+    /// Class index of a memory requirement on the effective ladder.
+    fn class_of(&self, mem_gb: f64) -> usize {
+        self.ladder
+            .iter()
+            .position(|&s| mem_gb <= s + 1e-9)
+            .unwrap_or(self.ladder.len() - 1)
     }
 
     /// Open the next non-empty class: tear down the previous layout and
@@ -77,8 +145,7 @@ impl SchemeAPolicy {
         };
         self.staged = self.groups.remove(&class).unwrap();
         self.reconfiguring = true;
-        let ladder = self.spec.ladder();
-        let cap = ladder[class.min(ladder.len() - 1)];
+        let cap = self.ladder[class.min(self.ladder.len() - 1)];
         let candidates = class_profiles(&self.spec, cap);
         let destroy = std::mem::take(&mut self.instances);
         self.local.clear();
@@ -125,7 +192,7 @@ impl SchemeAPolicy {
 
     /// Requeue a restarted job at its (larger) class.
     fn requeue(&mut self, job: PendingJob) {
-        let class = class_of(&self.spec, job.spec.est.mem_gb);
+        let class = self.class_of(job.spec.est.mem_gb);
         self.groups.entry(class).or_default().push_back(job);
     }
 }
@@ -136,7 +203,7 @@ impl SchedulingPolicy for SchemeAPolicy {
     }
 
     fn on_submit(&mut self, _ctx: &PolicyCtx, job: PendingJob) -> Vec<Action> {
-        let class = class_of(&self.spec, job.spec.est.mem_gb.max(0.0));
+        let class = self.class_of(job.spec.est.mem_gb.max(0.0));
         self.groups.entry(class).or_default().push_back(job);
         // Batch grouping must see the whole submission wave before the
         // first class opens; the orchestrator's stall hook starts it.
@@ -299,6 +366,50 @@ mod tests {
         let m = mix::hm3();
         let r = run_mix(a100(), &m, Scheme::A, false);
         assert_eq!(r.records.len(), 100);
+    }
+
+    #[test]
+    fn knobs_roundtrip_and_resolve_ladder() {
+        let k = SchemeAKnobs { ladder_skip: 2 };
+        let j = k.to_json();
+        assert_eq!(SchemeAKnobs::from_json(&j).unwrap(), k);
+        assert_eq!(
+            SchemeAKnobs::from_json(&crate::util::Json::parse("{}").unwrap()).unwrap(),
+            SchemeAKnobs::default()
+        );
+        // fractional counts must be rejected, not silently truncated
+        let frac = crate::util::Json::parse(r#"{"ladder_skip": 1.5}"#).unwrap();
+        assert!(SchemeAKnobs::from_json(&frac).is_err());
+        let spec = GpuSpec::a100_40gb();
+        assert_eq!(SchemeAKnobs::default().effective_ladder(&spec), vec![5.0, 10.0, 20.0, 40.0]);
+        assert_eq!(k.effective_ladder(&spec), vec![20.0, 40.0]);
+        // the skip clamps: at least one rung always remains
+        let deep = SchemeAKnobs { ladder_skip: 99 };
+        assert_eq!(deep.effective_ladder(&spec), vec![40.0]);
+    }
+
+    #[test]
+    fn coarse_ladder_merges_small_classes_into_fewer_slices() {
+        // Hm2 (50 small gaussian jobs): the default ladder runs them as
+        // 7x1g.5gb; with the two lowest rungs skipped the class cap is
+        // 20GB, so the wave is the two-slice 4g.20gb/3g.20gb split —
+        // fewer create ops, less parallelism. Both must complete.
+        let m = mix::hm2();
+        let default_r = run(a100(), &m, false);
+        let coarse = Orchestrator::single(
+            a100(),
+            false,
+            SchemeAPolicy::with_knobs(a100(), SchemeAKnobs { ladder_skip: 2 }),
+        )
+        .run_mix(&m);
+        assert_eq!(default_r.records.len(), 50);
+        assert_eq!(coarse.records.len(), 50);
+        assert!(
+            coarse.metrics.reconfig_ops < default_r.metrics.reconfig_ops,
+            "coarse {} !< default {}",
+            coarse.metrics.reconfig_ops,
+            default_r.metrics.reconfig_ops
+        );
     }
 
     #[test]

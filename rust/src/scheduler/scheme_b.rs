@@ -18,16 +18,77 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
+use anyhow::{bail, Result};
+
 use crate::mig::{GpuSpec, InstanceId, PartitionPlan};
+use crate::util::Json;
 use crate::workloads::mix::Mix;
 
 use super::policy::{Action, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
 use super::{bump_estimate_after_oom, target_profile, Orchestrator, PendingJob, RunResult};
 
+/// Tunable knobs of Scheme B, constructible and serializable so the
+/// [`tuner`](crate::tuner) can sweep them instead of them being baked
+/// into the policy internals. `Default` reproduces the paper's
+/// behavior bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchemeBKnobs {
+    /// Maximum idle instances one fusion/fission plan may destroy. The
+    /// paper merges *neighboring* partitions (pairwise) or splits one
+    /// larger partition, i.e. 2; raising it admits wider merges (a
+    /// blocked large head job can fuse 4x1g at once), lowering it to 1
+    /// restricts reconfiguration to pure splits.
+    pub max_fusion_destroys: usize,
+    /// Idle-reuse slack: the head job may reuse an idle instance whose
+    /// memory is up to `(1 + reuse_slack) x` its tight profile's. 0 —
+    /// the paper's rule — reuses exact fits only; a positive slack
+    /// trades slice tightness for skipped creation windows.
+    pub reuse_slack: f64,
+}
+
+impl Default for SchemeBKnobs {
+    fn default() -> Self {
+        SchemeBKnobs {
+            max_fusion_destroys: 2,
+            reuse_slack: 0.0,
+        }
+    }
+}
+
+impl SchemeBKnobs {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_fusion_destroys", Json::num(self.max_fusion_destroys as f64)),
+            ("reuse_slack", Json::num(self.reuse_slack)),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let mut knobs = SchemeBKnobs::default();
+        match doc.get("max_fusion_destroys") {
+            Json::Null => {}
+            // as_u64 alone would truncate 2.9 to 2; require a whole number
+            v => match v.as_f64() {
+                Some(x) if x >= 0.0 && x.fract() == 0.0 => knobs.max_fusion_destroys = x as usize,
+                _ => bail!("max_fusion_destroys must be a non-negative integer, got {v}"),
+            },
+        }
+        match doc.get("reuse_slack") {
+            Json::Null => {}
+            v => match v.as_f64() {
+                Some(x) if x >= 0.0 => knobs.reuse_slack = x,
+                _ => bail!("reuse_slack must be a non-negative number, got {v}"),
+            },
+        }
+        Ok(knobs)
+    }
+}
+
 /// FIFO-with-dynamic-reconfiguration policy state.
 pub struct SchemeBPolicy {
     spec: Arc<GpuSpec>,
     gpu: GpuId,
+    knobs: SchemeBKnobs,
     queue: VecDeque<PendingJob>,
     /// Idle (allocated, unoccupied) instances.
     idle: Vec<InstanceId>,
@@ -37,9 +98,19 @@ pub struct SchemeBPolicy {
 
 impl SchemeBPolicy {
     pub fn new(spec: Arc<GpuSpec>) -> Self {
+        Self::new_on(spec, SchemeBKnobs::default(), 0)
+    }
+
+    pub fn with_knobs(spec: Arc<GpuSpec>, knobs: SchemeBKnobs) -> Self {
+        Self::new_on(spec, knobs, 0)
+    }
+
+    /// A Scheme-B shard driving GPU `gpu` of an orchestrator fleet.
+    pub fn new_on(spec: Arc<GpuSpec>, knobs: SchemeBKnobs, gpu: GpuId) -> Self {
         SchemeBPolicy {
             spec,
-            gpu: 0,
+            gpu,
+            knobs,
             queue: VecDeque::new(),
             idle: Vec::new(),
             pending_launch: None,
@@ -57,12 +128,20 @@ impl SchemeBPolicy {
             let prof = target_profile(&self.spec, &head.spec);
             let want_mem = self.spec.profiles[prof].mem_gb;
 
-            // 1. idle instance that tightly fits
-            if let Some(pos) = self
-                .idle
-                .iter()
-                .position(|&i| (mgr.mem_gb_of(i).unwrap() - want_mem).abs() < 1e-9)
-            {
+            // 1. idle instance that fits within the reuse slack
+            //    (tightest match first; slack 0 = the paper's exact fit)
+            let max_mem = want_mem * (1.0 + self.knobs.reuse_slack) + 1e-9;
+            let mut reuse: Option<(usize, f64)> = None;
+            for (pos, &i) in self.idle.iter().enumerate() {
+                let m = mgr.mem_gb_of(i).unwrap();
+                if m + 1e-9 >= want_mem && m <= max_mem {
+                    match reuse {
+                        Some((_, best)) if m >= best - 1e-9 => {}
+                        _ => reuse = Some((pos, m)),
+                    }
+                }
+            }
+            if let Some((pos, _)) = reuse {
                 let inst = self.idle.swap_remove(pos);
                 let pj = self.queue.pop_front().unwrap();
                 acts.push(Action::Launch {
@@ -87,13 +166,14 @@ impl SchemeBPolicy {
             // 3. fusion/fission over idle instances: ask the planner for
             //    the cheapest destroy-set. The paper merges *neighboring*
             //    partitions (pairwise) or splits one larger partition —
-            //    so only plans destroying at most two idle instances are
-            //    admissible; wider merges mean waiting.
+            //    so by default only plans destroying at most two idle
+            //    instances are admissible (`max_fusion_destroys`); wider
+            //    merges mean waiting.
             if !reconfiguring {
                 if let Some(plan) = mgr
                     .plan_reconfig(prof, &self.idle)
                     .ok()
-                    .filter(|p| p.n_destroys() <= 2)
+                    .filter(|p| p.n_destroys() <= self.knobs.max_fusion_destroys)
                 {
                     for id in plan.destroys() {
                         self.idle.retain(|i| *i != id);
@@ -271,6 +351,90 @@ mod tests {
         let r = run(a100(), &m, true);
         assert_eq!(r.records.len(), 1);
         assert!(r.metrics.early_restarts >= 1);
+    }
+
+    #[test]
+    fn knobs_roundtrip_and_default_matches_paper() {
+        let k = SchemeBKnobs {
+            max_fusion_destroys: 4,
+            reuse_slack: 1.0,
+        };
+        let j = k.to_json();
+        assert_eq!(SchemeBKnobs::from_json(&j).unwrap(), k);
+        let d = SchemeBKnobs::from_json(&crate::util::Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d, SchemeBKnobs::default());
+        assert_eq!(d.max_fusion_destroys, 2);
+        assert_eq!(d.reuse_slack, 0.0);
+        let bad = crate::util::Json::parse(r#"{"reuse_slack": -1}"#).unwrap();
+        assert!(SchemeBKnobs::from_json(&bad).is_err());
+        // fractional counts must be rejected, not silently truncated
+        let frac = crate::util::Json::parse(r#"{"max_fusion_destroys": 2.9}"#).unwrap();
+        assert!(SchemeBKnobs::from_json(&frac).is_err());
+    }
+
+    #[test]
+    fn wider_fusion_unblocks_large_head_jobs_earlier() {
+        // Tiered synthetic spec: 8 small (1g) jobs then one large (4g)
+        // job. The 4g head needs four aligned 1g destroys; the default
+        // pairwise limit makes it wait for a full drain plus the
+        // stall-path destroy-all, while max_fusion_destroys=4 fuses as
+        // soon as an aligned quad of slices goes idle.
+        use crate::workloads::synthetic::{sized_job, tiered_spec};
+        let spec = Arc::new(tiered_spec(8));
+        let mut jobs: Vec<_> = (0..8).map(|_| sized_job("tier-s", 0.9, 30)).collect();
+        jobs.push(sized_job("tier-l", 3.6, 30));
+        let m = mix::Mix::batch("tier-fuse", jobs);
+        let run_with = |knobs: SchemeBKnobs| {
+            Orchestrator::single(spec.clone(), false, SchemeBPolicy::with_knobs(spec.clone(), knobs))
+                .run_mix(&m)
+        };
+        let narrow = run_with(SchemeBKnobs::default());
+        let wide = run_with(SchemeBKnobs {
+            max_fusion_destroys: 4,
+            ..SchemeBKnobs::default()
+        });
+        assert_eq!(narrow.records.len(), 9);
+        assert_eq!(wide.records.len(), 9);
+        assert!(
+            wide.metrics.makespan_s < narrow.metrics.makespan_s,
+            "wide {} !< narrow {}",
+            wide.metrics.makespan_s,
+            narrow.metrics.makespan_s
+        );
+    }
+
+    #[test]
+    fn reuse_slack_skips_creation_windows() {
+        // A medium (2g) job finishes, leaving a 2g slice idle; small
+        // (1g) jobs then arrive sparsely. Exact-fit reuse creates fresh
+        // 1g slices; slack 1.0 admits the idle 2g slice (2.0 <= 1.0 x
+        // (1 + 1.0)), skipping creation windows.
+        use crate::workloads::synthetic::{sized_job, tiered_spec};
+        let spec = Arc::new(tiered_spec(8));
+        let jobs = vec![
+            sized_job("tier-m", 1.8, 30),
+            sized_job("tier-s", 0.9, 30),
+            sized_job("tier-s", 0.9, 30),
+        ];
+        let m = mix::Mix::batch("tier-reuse", jobs)
+            .with_arrival_trace(vec![0.0, 60.0, 120.0]);
+        let run_with = |knobs: SchemeBKnobs| {
+            Orchestrator::single(spec.clone(), false, SchemeBPolicy::with_knobs(spec.clone(), knobs))
+                .run_mix(&m)
+        };
+        let exact = run_with(SchemeBKnobs::default());
+        let slack = run_with(SchemeBKnobs {
+            reuse_slack: 1.0,
+            ..SchemeBKnobs::default()
+        });
+        assert_eq!(exact.records.len(), 3);
+        assert_eq!(slack.records.len(), 3);
+        assert!(
+            slack.metrics.reconfig_ops < exact.metrics.reconfig_ops,
+            "slack {} !< exact {}",
+            slack.metrics.reconfig_ops,
+            exact.metrics.reconfig_ops
+        );
     }
 
     #[test]

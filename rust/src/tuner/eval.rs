@@ -1,0 +1,404 @@
+//! Candidate evaluation: run a [`Candidate`] through the real
+//! [`Orchestrator`] over a [`Scenario`] fleet and score the outcome
+//! against the default-knob reference.
+//!
+//! Scoring is *relative*: each scenario is first run once with
+//! [`Candidate::reference`] (Scheme B, paper-default knobs) at the same
+//! arrival intensity model, and a candidate's per-scenario score is a
+//! weighted sum of normalized ratios — throughput up, energy down, p99
+//! turnaround down:
+//!
+//! ```text
+//! score = 0.5 * thr/thr_ref + 0.25 * energy_ref/energy + 0.25 * p99_ref/p99
+//! ```
+//!
+//! so the reference scores exactly 1.0 everywhere and "beats the
+//! default" is simply `score > 1`. Components are capped at 10x to keep
+//! one degenerate ratio from drowning the rest. The overall objective
+//! is the mean over scenarios, accumulated in fixed scenario order —
+//! evaluations are bitwise deterministic and independent per candidate,
+//! which is what lets [`evaluate_all`] fan out across threads without
+//! affecting a single output bit.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::Scheme;
+use crate::metrics::BatchMetrics;
+use crate::mig::GpuSpec;
+use crate::scheduler::{
+    baseline::BaselinePolicy, scheme_a::SchemeAPolicy, scheme_b::SchemeBPolicy, Orchestrator,
+    RunResult, SchedulingPolicy, ShardedPolicy,
+};
+use crate::workloads::mix::{self, Mix};
+use crate::workloads::synthetic::{sized_job, tiered_spec};
+
+use super::space::Candidate;
+
+/// Scoring weights (must sum to 1).
+pub const W_THROUGHPUT: f64 = 0.5;
+pub const W_ENERGY: f64 = 0.25;
+pub const W_P99: f64 = 0.25;
+/// Cap on any single normalized component.
+pub const COMPONENT_CAP: f64 = 10.0;
+
+/// One fleet workload a sweep scores candidates on.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    /// Per-GPU model (the fleet is homogeneous).
+    pub spec: Arc<GpuSpec>,
+    pub n_gpus: usize,
+    /// The job stream (round-robin sharded across the fleet).
+    pub mix: Mix,
+    /// Poisson arrival rate (jobs/s) at `arrival_scale = 1.0`; `None`
+    /// runs the paper's batch setting (everything at t=0).
+    pub base_rate_jps: Option<f64>,
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// A paper mix on a single A100 (batch submission).
+    pub fn paper(mix_name: &str, seed: u64) -> Option<Scenario> {
+        let m = mix::by_name(mix_name, seed)?;
+        Some(Scenario {
+            name: format!("paper-{}", m.name),
+            spec: Arc::new(GpuSpec::a100_40gb()),
+            n_gpus: 1,
+            mix: m,
+            base_rate_jps: None,
+            seed,
+        })
+    }
+
+    /// A paper mix on a single A100 under Poisson arrivals.
+    pub fn paper_online(mix_name: &str, seed: u64, rate_jps: f64) -> Option<Scenario> {
+        let mut s = Self::paper(mix_name, seed)?;
+        s.name = format!("{}-poisson{rate_jps}", s.name);
+        s.base_rate_jps = Some(rate_jps);
+        Some(s)
+    }
+
+    /// The synthetic tiered fleet: `n_gpus` 12-slice tiered GPUs, each
+    /// dealt 12 small (1g) jobs followed by 3 large (4g) jobs. The
+    /// small wave occupies every slice, so placing the large tail
+    /// exercises exactly the fusion/fission knobs (a 4g slice needs
+    /// four aligned 1g destroys — more than the paper's pairwise
+    /// limit).
+    pub fn synthetic_fleet(n_gpus: usize, seed: u64) -> Scenario {
+        assert!(n_gpus >= 1);
+        let small = sized_job("tier-small", 0.9, 20);
+        let large = sized_job("tier-large", 3.6, 40);
+        let mut jobs = Vec::with_capacity(15 * n_gpus);
+        for _ in 0..12 * n_gpus {
+            jobs.push(small.clone());
+        }
+        for _ in 0..3 * n_gpus {
+            jobs.push(large.clone());
+        }
+        Scenario {
+            name: format!("synthetic-tier12-x{n_gpus}"),
+            spec: Arc::new(tiered_spec(12)),
+            n_gpus,
+            mix: Mix::batch("synthetic-tier-fleet", jobs),
+            base_rate_jps: None,
+            seed,
+        }
+    }
+
+    /// The tiered fleet under open-loop Poisson arrivals (the
+    /// arrival-intensity axis bites here).
+    pub fn synthetic_fleet_online(n_gpus: usize, seed: u64, rate_jps: f64) -> Scenario {
+        let mut s = Self::synthetic_fleet(n_gpus, seed);
+        s.name = format!("{}-poisson{rate_jps}", s.name);
+        s.base_rate_jps = Some(rate_jps);
+        s
+    }
+
+    /// A shortened copy for successive-halving prune rounds: the first
+    /// `ceil(frac * n)` jobs (and their arrival times). Same name — a
+    /// truncated scenario stands in for its full version.
+    pub fn truncated(&self, frac: f64) -> Scenario {
+        let n = self.mix.jobs.len();
+        let keep = ((n as f64 * frac).ceil() as usize).clamp(1, n);
+        let mut s = self.clone();
+        s.mix.jobs.truncate(keep);
+        if !s.mix.arrivals.is_empty() {
+            s.mix.arrivals.truncate(keep);
+        }
+        s
+    }
+
+    /// Stamp this scenario's arrival model for a candidate.
+    fn mix_for(&self, cand: &Candidate) -> Mix {
+        match self.base_rate_jps {
+            Some(rate) => {
+                assert!(cand.arrival_scale > 0.0, "arrival_scale must be positive");
+                self.mix
+                    .clone()
+                    .with_poisson_arrivals(rate * cand.arrival_scale, self.seed)
+            }
+            None => self.mix.clone(),
+        }
+    }
+}
+
+fn shard_for(cand: &Candidate, spec: &Arc<GpuSpec>, gpu: usize) -> Box<dyn SchedulingPolicy> {
+    match cand.scheme {
+        Scheme::Baseline => Box::new(BaselinePolicy::new_on(gpu)),
+        Scheme::A => Box::new(SchemeAPolicy::new_on(spec.clone(), cand.a, gpu)),
+        Scheme::B => Box::new(SchemeBPolicy::new_on(spec.clone(), cand.b, gpu)),
+    }
+}
+
+/// Run one candidate over one scenario through the real orchestrator
+/// (sharded fleet policy, arrival queue, transactional reconfiguration
+/// windows) and return the fleet-level result.
+pub fn run_candidate(cand: &Candidate, scen: &Scenario) -> RunResult {
+    let specs = vec![scen.spec.clone(); scen.n_gpus];
+    let policy = ShardedPolicy::new(
+        (0..scen.n_gpus)
+            .map(|g| shard_for(cand, &scen.spec, g))
+            .collect(),
+    );
+    let mut orch = Orchestrator::new(specs, cand.prediction, policy);
+    orch.submit_mix(&scen.mix_for(cand));
+    orch.run_to_completion();
+    orch.fleet_result()
+}
+
+/// The reference numbers a scenario's scores normalize against.
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioRef {
+    pub throughput_jps: f64,
+    pub energy_j: f64,
+    pub p99_turnaround_s: f64,
+}
+
+impl ScenarioRef {
+    pub fn from_result(r: &RunResult) -> Self {
+        ScenarioRef {
+            throughput_jps: r.metrics.throughput_jps,
+            energy_j: r.metrics.energy_j,
+            p99_turnaround_s: r.latency.p99_turnaround_s,
+        }
+    }
+}
+
+/// Run [`Candidate::reference`] once per scenario (sequential),
+/// returning both the normalization stats and the reference's own
+/// scored result — exactly 1.0 per scenario by construction — so the
+/// sweep drivers never re-simulate the reference inside a pool.
+pub fn reference_results(scens: &[Scenario]) -> (Vec<ScenarioRef>, CandidateResult) {
+    let cand = Candidate::reference();
+    let mut refs = Vec::with_capacity(scens.len());
+    let mut outcomes = Vec::with_capacity(scens.len());
+    let mut sum = 0.0;
+    for scen in scens {
+        let r = run_candidate(&cand, scen);
+        let stats = ScenarioRef::from_result(&r);
+        let score = score_vs(&r, &stats);
+        sum += score;
+        outcomes.push(ScenarioOutcome {
+            scenario: scen.name.clone(),
+            score,
+            metrics: r.metrics,
+            p99_turnaround_s: r.latency.p99_turnaround_s,
+        });
+        refs.push(stats);
+    }
+    let result = CandidateResult {
+        candidate: cand,
+        objective: sum / scens.len().max(1) as f64,
+        outcomes,
+    };
+    (refs, result)
+}
+
+/// Just the normalization stats (see [`reference_results`]).
+pub fn reference_stats(scens: &[Scenario]) -> Vec<ScenarioRef> {
+    reference_results(scens).0
+}
+
+/// One candidate's outcome on one scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    pub scenario: String,
+    pub score: f64,
+    pub metrics: BatchMetrics,
+    pub p99_turnaround_s: f64,
+}
+
+/// One candidate's aggregate over all scenarios.
+#[derive(Debug, Clone)]
+pub struct CandidateResult {
+    pub candidate: Candidate,
+    /// Mean per-scenario score; the reference scores exactly 1.0.
+    pub objective: f64,
+    pub outcomes: Vec<ScenarioOutcome>,
+}
+
+fn ratio(num: f64, den: f64) -> f64 {
+    if den <= 0.0 {
+        if num <= 0.0 {
+            1.0
+        } else {
+            COMPONENT_CAP
+        }
+    } else {
+        (num / den).min(COMPONENT_CAP)
+    }
+}
+
+/// The weighted normalized score of a run against its reference.
+pub fn score_vs(r: &RunResult, reference: &ScenarioRef) -> f64 {
+    let thr = ratio(r.metrics.throughput_jps, reference.throughput_jps);
+    let energy = ratio(reference.energy_j, r.metrics.energy_j);
+    let p99 = ratio(reference.p99_turnaround_s, r.latency.p99_turnaround_s);
+    W_THROUGHPUT * thr + W_ENERGY * energy + W_P99 * p99
+}
+
+/// Evaluate one candidate over every scenario (fixed order).
+pub fn evaluate_candidate(
+    cand: &Candidate,
+    scens: &[Scenario],
+    refs: &[ScenarioRef],
+) -> CandidateResult {
+    assert_eq!(scens.len(), refs.len());
+    let mut outcomes = Vec::with_capacity(scens.len());
+    let mut sum = 0.0;
+    for (scen, reference) in scens.iter().zip(refs) {
+        let r = run_candidate(cand, scen);
+        let score = score_vs(&r, reference);
+        sum += score;
+        outcomes.push(ScenarioOutcome {
+            scenario: scen.name.clone(),
+            score,
+            metrics: r.metrics,
+            p99_turnaround_s: r.latency.p99_turnaround_s,
+        });
+    }
+    CandidateResult {
+        candidate: cand.clone(),
+        objective: sum / scens.len().max(1) as f64,
+        outcomes,
+    }
+}
+
+/// Evaluate every candidate, fanning out over `threads` worker threads.
+/// Each candidate's evaluation is self-contained, so the result vector
+/// (index-aligned with `cands`) is bitwise identical for any thread
+/// count.
+pub fn evaluate_all(
+    cands: &[Candidate],
+    scens: &[Scenario],
+    refs: &[ScenarioRef],
+    threads: usize,
+) -> Vec<CandidateResult> {
+    let threads = threads.clamp(1, cands.len().max(1));
+    let slots: Vec<Mutex<Option<CandidateResult>>> =
+        cands.iter().map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cands.len() {
+                    break;
+                }
+                let r = evaluate_candidate(&cands[i], scens, refs);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("no worker panicked")
+                .expect("every slot evaluated")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_scores_exactly_one() {
+        let scens = vec![Scenario::synthetic_fleet(1, 5)];
+        let refs = reference_stats(&scens);
+        let r = evaluate_candidate(&Candidate::reference(), &scens, &refs);
+        assert_eq!(r.objective, 1.0);
+        assert_eq!(r.outcomes.len(), 1);
+        assert_eq!(r.outcomes[0].score, 1.0);
+    }
+
+    #[test]
+    fn wider_fusion_beats_reference_on_the_tiered_fleet() {
+        // The structural win the sweep gate relies on: the large-job
+        // tail needs four aligned 1g destroys, which the default
+        // pairwise limit refuses.
+        let scens = vec![Scenario::synthetic_fleet(2, 5)];
+        let refs = reference_stats(&scens);
+        let mut cand = Candidate::reference();
+        cand.b.max_fusion_destroys = 4;
+        let r = evaluate_candidate(&cand, &scens, &refs);
+        assert!(r.objective > 1.0, "objective {}", r.objective);
+    }
+
+    #[test]
+    fn truncation_shortens_the_job_stream() {
+        let s = Scenario::synthetic_fleet(2, 5);
+        assert_eq!(s.mix.jobs.len(), 30);
+        let t = s.truncated(0.3);
+        assert_eq!(t.mix.jobs.len(), 9);
+        assert_eq!(t.name, s.name);
+        let online = Scenario::synthetic_fleet_online(1, 5, 2.0).truncated(0.5);
+        assert_eq!(online.mix.jobs.len(), 8);
+        // arrivals are stamped per candidate, not stored on the mix
+        assert!(online.mix.arrivals.is_empty());
+        assert_eq!(online.base_rate_jps, Some(2.0));
+    }
+
+    #[test]
+    fn arrival_scale_stretches_online_scenarios() {
+        let scen = Scenario::synthetic_fleet_online(1, 5, 1.0);
+        let slow = Candidate {
+            arrival_scale: 0.05,
+            ..Candidate::reference()
+        };
+        let fast = Candidate {
+            arrival_scale: 20.0,
+            ..Candidate::reference()
+        };
+        let r_slow = run_candidate(&slow, &scen);
+        let r_fast = run_candidate(&fast, &scen);
+        assert_eq!(r_slow.records.len(), r_fast.records.len());
+        // 400x less offered load stretches the makespan
+        assert!(r_slow.metrics.makespan_s > r_fast.metrics.makespan_s);
+    }
+
+    #[test]
+    fn ratio_guards_degenerate_references() {
+        assert_eq!(ratio(0.0, 0.0), 1.0);
+        assert_eq!(ratio(3.0, 0.0), COMPONENT_CAP);
+        assert_eq!(ratio(30.0, 1.0), COMPONENT_CAP);
+        assert!((ratio(3.0, 2.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_evaluation_is_bitwise_identical_to_serial() {
+        let scens = vec![Scenario::synthetic_fleet(1, 5)];
+        let refs = reference_stats(&scens);
+        let cands = super::super::space::ParamSpace::smoke().grid().unwrap();
+        let serial = evaluate_all(&cands, &scens, &refs, 1);
+        let parallel = evaluate_all(&cands, &scens, &refs, 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.candidate, p.candidate);
+            assert_eq!(s.objective.to_bits(), p.objective.to_bits());
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Policy-search sweeps over simulated fleets (`migm tune`).
+//!
+//! The paper's Scheme A/B results hinge on hand-picked knobs — class
+//! ladders, reconfiguration thresholds, prediction on/off. MISO
+//! (arXiv:2207.11428) and hierarchical-RL partitioning
+//! (arXiv:2405.08754) show that *searching* the MIG configuration
+//! space beats any fixed choice, and the indexed O(log n) DES engine
+//! makes thousands of what-if fleet evaluations cheap. This module is
+//! that search harness:
+//!
+//! * [`space`] — the typed [`ParamSpace`] over scheduler knobs
+//!   ([`SchemeAKnobs`](crate::scheduler::SchemeAKnobs) class-ladder
+//!   coarsening, [`SchemeBKnobs`](crate::scheduler::SchemeBKnobs)
+//!   fusion width + idle-reuse slack, the predictor switch, arrival
+//!   intensity) and the deterministic candidate generators (grid,
+//!   seeded random).
+//! * [`eval`] — [`Scenario`] fleets (paper mixes on the A100, tiered
+//!   synthetic multi-GPU fleets, batch or Poisson arrivals) and the
+//!   thread-parallel evaluator. Every candidate runs through the real
+//!   [`Orchestrator`](crate::scheduler::Orchestrator) — sharded fleet
+//!   policy, arrival queue, transactional reconfiguration windows —
+//!   not a raw `GpuSim`, and is scored on throughput, energy, and p99
+//!   turnaround normalized to the default-knob Scheme B reference.
+//! * [`search`] — the sweep drivers: full [`Generator::Grid`] /
+//!   [`Generator::Random`] evaluation, and
+//!   [`Generator::Halving`] (successive halving: prune losers on short
+//!   horizons, re-score survivors on full fleets).
+//! * [`report`] — the ranked [`SweepReport`] with schema-stable JSON
+//!   (`migm.policy_search.v1`): CI runs `migm tune --smoke` every
+//!   build, uploads `BENCH_policy_search.json`, and appends the
+//!   summary row to the perf trajectory.
+//!
+//! Determinism is load-bearing: same seed + space + scenarios ⇒
+//! byte-identical reports for any worker-thread count, so trajectory
+//! diffs across CI runs mean the *code* changed, not the harness.
+
+pub mod eval;
+pub mod report;
+pub mod search;
+pub mod space;
+
+pub use eval::{evaluate_all, reference_stats, run_candidate, CandidateResult, Scenario};
+pub use report::{RankedCandidate, SweepReport, TrajectoryPoint};
+pub use search::{successive_halving, sweep, Generator, SweepConfig};
+pub use space::{Candidate, ParamSpace};

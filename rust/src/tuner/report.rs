@@ -1,0 +1,361 @@
+//! The ranked, reproducible sweep report and its schema-stable JSON
+//! form (`migm.policy_search.v1`) — the artifact CI uploads on every
+//! run (`BENCH_policy_search.json`) and the row format appended to the
+//! perf trajectory (`perf/trajectory.json`).
+//!
+//! The JSON is deliberately free of timestamps, host names, and thread
+//! counts: two runs of the same sweep must be byte-identical, which is
+//! what makes the perf trajectory diffable across CI runs.
+
+use crate::metrics::Table;
+use crate::util::Json;
+
+use super::eval::{ScenarioOutcome, ScenarioRef};
+use super::space::Candidate;
+
+/// One scenario's identity and reference numbers.
+#[derive(Debug, Clone)]
+pub struct ScenarioInfo {
+    pub name: String,
+    pub gpu: String,
+    pub n_gpus: usize,
+    pub n_jobs: usize,
+    pub online: bool,
+    pub reference: ScenarioRef,
+}
+
+/// One point of the in-sweep perf trajectory (one successive-halving
+/// round, plus the final full-horizon ranking).
+#[derive(Debug, Clone)]
+pub struct TrajectoryPoint {
+    pub round: usize,
+    pub horizon_frac: f64,
+    pub n_candidates: usize,
+    pub best_objective: f64,
+    pub best_label: String,
+}
+
+/// A fully-scored candidate in rank order.
+#[derive(Debug, Clone)]
+pub struct RankedCandidate {
+    pub candidate: Candidate,
+    pub objective: f64,
+    /// Whether this is the default-knob Scheme B reference point.
+    pub is_reference: bool,
+    pub outcomes: Vec<ScenarioOutcome>,
+}
+
+/// The result of one sweep: ranking, reference numbers, trajectory.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub schema: &'static str,
+    pub seed: u64,
+    pub generator: String,
+    pub scenarios: Vec<ScenarioInfo>,
+    pub trajectory: Vec<TrajectoryPoint>,
+    /// Best first; always contains the reference candidate.
+    pub ranked: Vec<RankedCandidate>,
+    /// Scenarios on which the best candidate strictly beats the
+    /// default-knob Scheme B reference.
+    pub best_beats_reference_on: Vec<String>,
+}
+
+fn reference_json(r: &ScenarioRef) -> Json {
+    Json::obj(vec![
+        ("throughput_jps", Json::num(r.throughput_jps)),
+        ("energy_j", Json::num(r.energy_j)),
+        ("p99_turnaround_s", Json::num(r.p99_turnaround_s)),
+    ])
+}
+
+fn outcome_json(o: &ScenarioOutcome) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(o.scenario.clone())),
+        ("score", Json::num(o.score)),
+        ("throughput_jps", Json::num(o.metrics.throughput_jps)),
+        ("energy_j", Json::num(o.metrics.energy_j)),
+        ("p99_turnaround_s", Json::num(o.p99_turnaround_s)),
+        ("makespan_s", Json::num(o.metrics.makespan_s)),
+        ("reconfig_ops", Json::num(o.metrics.reconfig_ops as f64)),
+        ("reconfig_time_s", Json::num(o.metrics.reconfig_time_s)),
+        ("oom_restarts", Json::num(o.metrics.oom_restarts as f64)),
+        ("early_restarts", Json::num(o.metrics.early_restarts as f64)),
+    ])
+}
+
+impl SweepReport {
+    /// Schema tag of [`Self::to_json`]; bump on any shape change.
+    pub const SCHEMA: &'static str = "migm.policy_search.v1";
+    /// Schema tag of [`Self::summary_json`] trajectory rows.
+    pub const SUMMARY_SCHEMA: &'static str = "migm.policy_search.summary.v1";
+
+    /// The winning candidate.
+    pub fn best(&self) -> &RankedCandidate {
+        &self.ranked[0]
+    }
+
+    /// The full schema-stable document (`BENCH_policy_search.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(self.schema)),
+            ("seed", Json::num(self.seed as f64)),
+            ("generator", Json::str(self.generator.clone())),
+            (
+                "scenarios",
+                Json::Arr(
+                    self.scenarios
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("name", Json::str(s.name.clone())),
+                                ("gpu", Json::str(s.gpu.clone())),
+                                ("n_gpus", Json::num(s.n_gpus as f64)),
+                                ("n_jobs", Json::num(s.n_jobs as f64)),
+                                ("online", Json::Bool(s.online)),
+                                ("reference", reference_json(&s.reference)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "trajectory",
+                Json::Arr(
+                    self.trajectory
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("round", Json::num(t.round as f64)),
+                                ("horizon_frac", Json::num(t.horizon_frac)),
+                                ("n_candidates", Json::num(t.n_candidates as f64)),
+                                ("best_objective", Json::num(t.best_objective)),
+                                ("best", Json::str(t.best_label.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "ranked",
+                Json::Arr(
+                    self.ranked
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("candidate", r.candidate.to_json()),
+                                ("label", Json::str(r.candidate.label())),
+                                ("objective", Json::num(r.objective)),
+                                ("is_reference", Json::Bool(r.is_reference)),
+                                (
+                                    "scenarios",
+                                    Json::Arr(r.outcomes.iter().map(outcome_json).collect()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "best_beats_reference_on",
+                Json::Arr(
+                    self.best_beats_reference_on
+                        .iter()
+                        .map(|s| Json::str(s.clone()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// One compact row for the append-only perf trajectory file.
+    pub fn summary_json(&self) -> Json {
+        let best = self.best();
+        Json::obj(vec![
+            ("schema", Json::str(Self::SUMMARY_SCHEMA)),
+            ("seed", Json::num(self.seed as f64)),
+            ("generator", Json::str(self.generator.clone())),
+            ("n_candidates", Json::num(self.ranked.len() as f64)),
+            ("best_objective", Json::num(best.objective)),
+            ("best_label", Json::str(best.candidate.label())),
+            ("best_candidate", best.candidate.to_json()),
+            (
+                "beats_reference_on",
+                Json::Arr(
+                    self.best_beats_reference_on
+                        .iter()
+                        .map(|s| Json::str(s.clone()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable ranking table for the CLI and the example.
+    pub fn render(&self) -> String {
+        let mut header: Vec<String> = vec!["#".into(), "candidate".into(), "objective".into()];
+        for s in &self.scenarios {
+            header.push(s.name.clone());
+        }
+        let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+        let mut t = Table::new(&header_refs);
+        for (i, r) in self.ranked.iter().enumerate() {
+            let mut cells = vec![
+                format!("{}", i + 1),
+                if r.is_reference {
+                    format!("{} [default]", r.candidate.label())
+                } else {
+                    r.candidate.label()
+                },
+                format!("{:.4}", r.objective),
+            ];
+            for s in &self.scenarios {
+                let cell = r
+                    .outcomes
+                    .iter()
+                    .find(|o| o.scenario == s.name)
+                    .map(|o| format!("{:.3}", o.score))
+                    .unwrap_or_else(|| "-".into());
+                cells.push(cell);
+            }
+            t.row(cells);
+        }
+        let mut out = format!(
+            "policy sweep: generator={} seed={} scenarios={}\n",
+            self.generator,
+            self.seed,
+            self.scenarios.len()
+        );
+        out.push_str(&t.render());
+        if self.best_beats_reference_on.is_empty() {
+            out.push_str("best candidate does not beat the default Scheme B knobs\n");
+        } else {
+            out.push_str(&format!(
+                "best candidate beats default Scheme B on: {}\n",
+                self.best_beats_reference_on.join(", ")
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::BatchMetrics;
+
+    fn metrics() -> BatchMetrics {
+        BatchMetrics {
+            n_jobs: 2,
+            makespan_s: 10.0,
+            throughput_jps: 0.2,
+            energy_j: 100.0,
+            energy_per_job_j: 50.0,
+            mem_utilization: 0.5,
+            avg_turnaround_s: 5.0,
+            reconfig_ops: 3,
+            reconfig_windows: 2,
+            reconfig_time_s: 0.3,
+            oom_restarts: 0,
+            early_restarts: 1,
+        }
+    }
+
+    fn tiny_report() -> SweepReport {
+        let cand = Candidate::reference();
+        SweepReport {
+            schema: SweepReport::SCHEMA,
+            seed: 5,
+            generator: "grid".into(),
+            scenarios: vec![ScenarioInfo {
+                name: "s1".into(),
+                gpu: "A100-40GB".into(),
+                n_gpus: 2,
+                n_jobs: 30,
+                online: false,
+                reference: ScenarioRef {
+                    throughput_jps: 0.2,
+                    energy_j: 100.0,
+                    p99_turnaround_s: 9.0,
+                },
+            }],
+            trajectory: vec![TrajectoryPoint {
+                round: 0,
+                horizon_frac: 1.0,
+                n_candidates: 1,
+                best_objective: 1.0,
+                best_label: cand.label(),
+            }],
+            ranked: vec![RankedCandidate {
+                candidate: cand.clone(),
+                objective: 1.0,
+                is_reference: true,
+                outcomes: vec![ScenarioOutcome {
+                    scenario: "s1".into(),
+                    score: 1.0,
+                    metrics: metrics(),
+                    p99_turnaround_s: 9.0,
+                }],
+            }],
+            best_beats_reference_on: vec![],
+        }
+    }
+
+    #[test]
+    fn json_schema_is_pinned() {
+        // Pin the top-level keys and the schema tag: CI consumers parse
+        // this document — shape changes must bump SCHEMA.
+        let doc = tiny_report().to_json();
+        assert_eq!(doc.get("schema").as_str(), Some("migm.policy_search.v1"));
+        for key in [
+            "schema",
+            "seed",
+            "generator",
+            "scenarios",
+            "trajectory",
+            "ranked",
+            "best_beats_reference_on",
+        ] {
+            assert!(!doc.get(key).is_null(), "missing key '{key}'");
+        }
+        let ranked = doc.get("ranked").at(0);
+        for key in ["candidate", "label", "objective", "is_reference", "scenarios"] {
+            assert!(!ranked.get(key).is_null(), "ranked missing '{key}'");
+        }
+        let outcome = ranked.get("scenarios").at(0);
+        for key in [
+            "name",
+            "score",
+            "throughput_jps",
+            "energy_j",
+            "p99_turnaround_s",
+            "makespan_s",
+            "reconfig_ops",
+            "reconfig_time_s",
+            "oom_restarts",
+            "early_restarts",
+        ] {
+            assert!(!outcome.get(key).is_null(), "outcome missing '{key}'");
+        }
+        // the document round-trips through the parser
+        let s = doc.to_string();
+        assert_eq!(Json::parse(&s).unwrap(), doc);
+    }
+
+    #[test]
+    fn summary_row_is_compact_and_tagged() {
+        let s = tiny_report().summary_json();
+        assert_eq!(
+            s.get("schema").as_str(),
+            Some("migm.policy_search.summary.v1")
+        );
+        assert_eq!(s.get("best_objective").as_f64(), Some(1.0));
+        assert!(!s.get("best_candidate").get("scheme").is_null());
+    }
+
+    #[test]
+    fn render_marks_the_reference() {
+        let out = tiny_report().render();
+        assert!(out.contains("[default]"));
+        assert!(out.contains("does not beat"));
+    }
+}

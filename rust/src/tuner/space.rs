@@ -1,0 +1,364 @@
+//! The typed parameter space and candidate generators.
+//!
+//! A [`Candidate`] is one concrete knob assignment: a scheme, its knob
+//! struct, the predictor switch, and the arrival-intensity scale. A
+//! [`ParamSpace`] is a set of per-axis value lists; the generators
+//! ([`ParamSpace::grid`], [`ParamSpace::random`]) enumerate candidates
+//! from it **canonically**: deduplicated by [`Candidate::key`] and
+//! returned in key order, so downstream ranking is invariant to how the
+//! space was written down (axis order, duplicates, enumeration order).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Scheme;
+use crate::scheduler::{SchemeAKnobs, SchemeBKnobs};
+use crate::util::{Json, Rng};
+
+/// One concrete knob assignment evaluated by the sweep.
+///
+/// Only the knobs of the selected scheme matter (the other scheme's sit
+/// at their defaults), which the generators exploit to avoid emitting
+/// duplicate candidates that differ only in dead axes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    pub scheme: Scheme,
+    pub a: SchemeAKnobs,
+    pub b: SchemeBKnobs,
+    /// Enable the time-series peak-memory predictor (early restarts).
+    pub prediction: bool,
+    /// Multiplier on each online scenario's base Poisson rate (ignored
+    /// by batch scenarios). Must be positive.
+    pub arrival_scale: f64,
+}
+
+impl Candidate {
+    /// The reference point every sweep scores against: Scheme B with
+    /// its paper-default knobs, no prediction, nominal arrival rate.
+    pub fn reference() -> Self {
+        Candidate {
+            scheme: Scheme::B,
+            a: SchemeAKnobs::default(),
+            b: SchemeBKnobs::default(),
+            prediction: false,
+            arrival_scale: 1.0,
+        }
+    }
+
+    /// Canonical serialization — `Json::Obj` is a BTreeMap, so the
+    /// string is unique per logical candidate and doubles as the
+    /// dedup/tie-break key.
+    pub fn key(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Compact human label for tables and logs.
+    pub fn label(&self) -> String {
+        let tail = |s: &Self| {
+            let mut t = String::new();
+            if s.prediction {
+                t.push_str(" +pred");
+            }
+            if (s.arrival_scale - 1.0).abs() > 1e-12 {
+                t.push_str(&format!(" x{:.2}", s.arrival_scale));
+            }
+            t
+        };
+        match self.scheme {
+            Scheme::Baseline => format!("baseline{}", tail(self)),
+            Scheme::A => format!("A skip={}{}", self.a.ladder_skip, tail(self)),
+            Scheme::B => format!(
+                "B fuse<={} slack={:.2}{}",
+                self.b.max_fusion_destroys,
+                self.b.reuse_slack,
+                tail(self)
+            ),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scheme", Json::str(self.scheme.name())),
+            ("a", self.a.to_json()),
+            ("b", self.b.to_json()),
+            ("prediction", Json::Bool(self.prediction)),
+            ("arrival_scale", Json::num(self.arrival_scale)),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let scheme = Scheme::parse(
+            doc.get("scheme")
+                .as_str()
+                .context("candidate requires a 'scheme'")?,
+        )?;
+        let a = SchemeAKnobs::from_json(doc.get("a"))?;
+        let b = SchemeBKnobs::from_json(doc.get("b"))?;
+        let prediction = doc.get("prediction").as_bool().unwrap_or(false);
+        let arrival_scale = match doc.get("arrival_scale") {
+            Json::Null => 1.0,
+            v => v.as_f64().context("arrival_scale must be a number")?,
+        };
+        if arrival_scale <= 0.0 {
+            bail!("arrival_scale must be positive, got {arrival_scale}");
+        }
+        Ok(Candidate {
+            scheme,
+            a,
+            b,
+            prediction,
+            arrival_scale,
+        })
+    }
+}
+
+/// Per-axis value lists the generators draw from. Axes tied to a scheme
+/// (`ladder_skips` for A, `max_fusion_destroys`/`reuse_slacks` for B)
+/// only vary on candidates of that scheme.
+#[derive(Debug, Clone)]
+pub struct ParamSpace {
+    pub schemes: Vec<Scheme>,
+    /// Scheme A: how many low ladder rungs to merge upward.
+    pub ladder_skips: Vec<usize>,
+    /// Scheme B: fusion/fission plan width limit.
+    pub max_fusion_destroys: Vec<usize>,
+    /// Scheme B: idle-reuse slack fractions (>= 0).
+    pub reuse_slacks: Vec<f64>,
+    pub predictions: Vec<bool>,
+    /// Arrival-intensity multipliers (> 0) for online scenarios.
+    pub arrival_scales: Vec<f64>,
+}
+
+impl ParamSpace {
+    /// The CI smoke space: small enough for a sub-second sweep, rich
+    /// enough that the best candidate beats the Scheme-B defaults on
+    /// the synthetic tiered-fleet scenario (wider fusion, idle-reuse
+    /// slack, coarser Scheme-A ladder).
+    pub fn smoke() -> Self {
+        ParamSpace {
+            schemes: vec![Scheme::A, Scheme::B],
+            ladder_skips: vec![0, 1],
+            max_fusion_destroys: vec![2, 4],
+            reuse_slacks: vec![0.0, 1.0],
+            predictions: vec![false],
+            arrival_scales: vec![1.0],
+        }
+    }
+
+    /// The full default space for `migm tune` (grid size ~114; the
+    /// arrival-scale axis only differentiates candidates on online
+    /// scenarios — batch scenarios ignore it). Note that scale != 1
+    /// candidates are scored against the nominal-load reference, so
+    /// their scores measure load sensitivity jointly with the knobs;
+    /// the CLI's knob-advantage gate ignores them for exactly that
+    /// reason.
+    pub fn full() -> Self {
+        ParamSpace {
+            schemes: vec![Scheme::A, Scheme::B],
+            ladder_skips: vec![0, 1, 2],
+            max_fusion_destroys: vec![1, 2, 4, 8],
+            reuse_slacks: vec![0.0, 0.5, 1.0, 3.0],
+            predictions: vec![false, true],
+            arrival_scales: vec![0.5, 1.0, 2.0],
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        for (name, empty) in [
+            ("schemes", self.schemes.is_empty()),
+            ("ladder_skips", self.ladder_skips.is_empty()),
+            ("max_fusion_destroys", self.max_fusion_destroys.is_empty()),
+            ("reuse_slacks", self.reuse_slacks.is_empty()),
+            ("predictions", self.predictions.is_empty()),
+            ("arrival_scales", self.arrival_scales.is_empty()),
+        ] {
+            if empty {
+                bail!("ParamSpace axis '{name}' is empty");
+            }
+        }
+        if self.reuse_slacks.iter().any(|&s| s < 0.0) {
+            bail!("reuse_slacks must be >= 0");
+        }
+        if self.arrival_scales.iter().any(|&s| s <= 0.0) {
+            bail!("arrival_scales must be > 0");
+        }
+        Ok(())
+    }
+
+    fn push(map: &mut BTreeMap<String, Candidate>, c: Candidate) {
+        map.entry(c.key()).or_insert(c);
+    }
+
+    /// Exhaustive cartesian product over the live axes, canonicalized
+    /// (deduplicated, key-sorted).
+    pub fn grid(&self) -> Result<Vec<Candidate>> {
+        self.validate()?;
+        let mut by_key = BTreeMap::new();
+        for &scheme in &self.schemes {
+            for &prediction in &self.predictions {
+                for &arrival_scale in &self.arrival_scales {
+                    let base = Candidate {
+                        scheme,
+                        a: SchemeAKnobs::default(),
+                        b: SchemeBKnobs::default(),
+                        prediction,
+                        arrival_scale,
+                    };
+                    match scheme {
+                        Scheme::Baseline => Self::push(&mut by_key, base),
+                        Scheme::A => {
+                            for &ladder_skip in &self.ladder_skips {
+                                let mut c = base.clone();
+                                c.a = SchemeAKnobs { ladder_skip };
+                                Self::push(&mut by_key, c);
+                            }
+                        }
+                        Scheme::B => {
+                            for &max_fusion_destroys in &self.max_fusion_destroys {
+                                for &reuse_slack in &self.reuse_slacks {
+                                    let mut c = base.clone();
+                                    c.b = SchemeBKnobs {
+                                        max_fusion_destroys,
+                                        reuse_slack,
+                                    };
+                                    Self::push(&mut by_key, c);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(by_key.into_values().collect())
+    }
+
+    /// `n` distinct candidates drawn uniformly per axis with a seeded
+    /// RNG (deterministic per seed), canonicalized like [`Self::grid`].
+    /// Returns fewer than `n` only when the space itself is smaller.
+    pub fn random(&self, n: usize, seed: u64) -> Result<Vec<Candidate>> {
+        self.validate()?;
+        let mut rng = Rng::new(seed);
+        let mut by_key = BTreeMap::new();
+        let mut attempts = 0usize;
+        let max_attempts = n.saturating_mul(20).saturating_add(100);
+        while by_key.len() < n && attempts < max_attempts {
+            attempts += 1;
+            let scheme = *rng.choice(&self.schemes);
+            // Draw every axis so the RNG stream is scheme-independent,
+            // then zero the dead ones (canonical form).
+            let ladder_skip = *rng.choice(&self.ladder_skips);
+            let max_fusion_destroys = *rng.choice(&self.max_fusion_destroys);
+            let reuse_slack = *rng.choice(&self.reuse_slacks);
+            let prediction = *rng.choice(&self.predictions);
+            let arrival_scale = *rng.choice(&self.arrival_scales);
+            let c = Candidate {
+                scheme,
+                a: match scheme {
+                    Scheme::A => SchemeAKnobs { ladder_skip },
+                    _ => SchemeAKnobs::default(),
+                },
+                b: match scheme {
+                    Scheme::B => SchemeBKnobs {
+                        max_fusion_destroys,
+                        reuse_slack,
+                    },
+                    _ => SchemeBKnobs::default(),
+                },
+                prediction,
+                arrival_scale,
+            };
+            Self::push(&mut by_key, c);
+        }
+        Ok(by_key.into_values().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidate_json_roundtrip_and_key_is_canonical() {
+        let c = Candidate {
+            scheme: Scheme::B,
+            a: SchemeAKnobs { ladder_skip: 1 },
+            b: SchemeBKnobs {
+                max_fusion_destroys: 4,
+                reuse_slack: 0.5,
+            },
+            prediction: true,
+            arrival_scale: 2.0,
+        };
+        let back = Candidate::from_json(&Json::parse(&c.key()).unwrap()).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.key(), c.key());
+        // reference parses too and scores as the default Scheme B
+        let r = Candidate::reference();
+        assert_eq!(r.scheme, Scheme::B);
+        assert_eq!(r.b, SchemeBKnobs::default());
+        assert!(Candidate::from_json(&Json::parse(&r.key()).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn grid_is_deduped_and_key_sorted() {
+        let space = ParamSpace::smoke();
+        let g = space.grid().unwrap();
+        // A x 2 skips + B x (2 fusion x 2 slack) = 6
+        assert_eq!(g.len(), 6);
+        let keys: Vec<String> = g.iter().map(Candidate::key).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+        let mut dedup = keys.clone();
+        dedup.dedup();
+        assert_eq!(dedup.len(), keys.len());
+        // the reference candidate is part of the smoke grid
+        assert!(keys.contains(&Candidate::reference().key()));
+    }
+
+    #[test]
+    fn grid_ignores_dead_axes_per_scheme() {
+        let space = ParamSpace {
+            schemes: vec![Scheme::A],
+            ladder_skips: vec![0],
+            max_fusion_destroys: vec![1, 2, 4, 8],
+            reuse_slacks: vec![0.0, 1.0],
+            predictions: vec![false],
+            arrival_scales: vec![1.0],
+        };
+        // B-only axes don't multiply A candidates
+        assert_eq!(space.grid().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn random_is_seed_deterministic_and_distinct() {
+        let space = ParamSpace::full();
+        let a = space.random(10, 7).unwrap();
+        let b = space.random(10, 7).unwrap();
+        let c = space.random(10, 8).unwrap();
+        let keys = |v: &[Candidate]| v.iter().map(Candidate::key).collect::<Vec<_>>();
+        assert_eq!(keys(&a), keys(&b));
+        assert_ne!(keys(&a), keys(&c));
+        assert_eq!(a.len(), 10);
+        let mut k = keys(&a);
+        k.dedup();
+        assert_eq!(k.len(), 10);
+    }
+
+    #[test]
+    fn random_saturates_small_spaces() {
+        let space = ParamSpace::smoke();
+        // ask for more candidates than the 6-point space holds
+        let all = space.random(50, 3).unwrap();
+        assert_eq!(all.len(), 6);
+    }
+
+    #[test]
+    fn empty_axes_are_rejected() {
+        let mut space = ParamSpace::smoke();
+        space.predictions.clear();
+        assert!(space.grid().is_err());
+        assert!(space.random(3, 1).is_err());
+    }
+}

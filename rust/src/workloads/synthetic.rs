@@ -32,6 +32,76 @@ pub fn many_instance_spec(slices: u8) -> GpuSpec {
     )
 }
 
+/// A tiered MIG model for policy-search scenarios: `slices` memory
+/// slices (a multiple of 4, at most 16 — reachability enumerates
+/// 2^`slices` subset states) carrying 1-, 2- and 4-slice profiles, so
+/// fusion/fission and class-ladder knobs actually matter — unlike
+/// [`many_instance_spec`], whose single profile leaves schedulers
+/// nothing to decide.
+pub fn tiered_spec(slices: u8) -> GpuSpec {
+    assert!(
+        slices >= 4 && slices % 4 == 0 && slices <= 16,
+        "tiered spec needs 4 <= slices <= 16, a multiple of 4"
+    );
+    GpuSpec::custom(
+        &format!("SYNTH-TIER-{slices}"),
+        slices,
+        slices,
+        slices as f64,
+        vec![
+            MigProfile {
+                name: "1g.1gb".into(),
+                compute_slices: 1,
+                mem_slices: 1,
+                mem_gb: 1.0,
+                placements: (0..slices).collect(),
+            },
+            MigProfile {
+                name: "2g.2gb".into(),
+                compute_slices: 2,
+                mem_slices: 2,
+                mem_gb: 2.0,
+                placements: (0..slices).step_by(2).collect(),
+            },
+            MigProfile {
+                name: "4g.4gb".into(),
+                compute_slices: 4,
+                mem_slices: 4,
+                mem_gb: 4.0,
+                placements: (0..slices).step_by(4).collect(),
+            },
+        ],
+    )
+}
+
+/// A statically-sized synthetic job for the tiered spec: `mem_gb`
+/// decides its slice class (compute demand rounds up with it), `steps`
+/// its kernel-phase length. Estimation is exact (compiler analysis), so
+/// runs are OOM-free and fully deterministic.
+pub fn sized_job(name: &str, mem_gb: f64, steps: u32) -> JobSpec {
+    let gpcs = (mem_gb.ceil() as u8).max(1);
+    JobSpec {
+        name: name.into(),
+        kind: JobKind::Rodinia,
+        demand_gpcs: gpcs,
+        true_mem_gb: mem_gb,
+        est: MemoryEstimate {
+            mem_gb,
+            compute_gpcs: gpcs,
+            method: EstimationMethod::CompilerAnalysis,
+        },
+        compute: ComputeModel::Phases(PhaseProfile {
+            alloc_s: 0.05,
+            h2d_pcie_s: 0.2,
+            steps,
+            step_s: 0.01,
+            step_pcie_s: 0.002,
+            d2h_pcie_s: 0.2,
+            free_s: 0.02,
+        }),
+    }
+}
+
 /// A cheap synthetic job with a long op program (kernel steps with
 /// per-step minibatch transfers) so engine time dominates setup in
 /// benches that drain thousands of these.
@@ -82,5 +152,35 @@ mod tests {
         }
         assert_eq!(n, 8);
         assert!(s.now() > 0.0 && s.energy_j().is_finite());
+    }
+
+    #[test]
+    fn tiered_spec_hosts_all_three_classes() {
+        let spec = Arc::new(tiered_spec(8));
+        assert_eq!(spec.ladder(), &[1.0, 2.0, 4.0]);
+        let mut s = GpuSim::new(spec.clone(), false);
+        // one of each class fits side by side: 4 + 2 + 1 <= 8 slices
+        let i4 = s.mgr.alloc(2).unwrap();
+        let i2 = s.mgr.alloc(1).unwrap();
+        let i1 = s.mgr.alloc(0).unwrap();
+        s.launch(sized_job("l", 3.6, 5), i4, 0.0);
+        s.launch(sized_job("m", 1.8, 5), i2, 0.0);
+        s.launch(sized_job("s", 0.9, 5), i1, 0.0);
+        let mut done = 0;
+        while let Some(ev) = s.advance() {
+            if matches!(ev, crate::sim::SimEvent::Finished { .. }) {
+                done += 1;
+            }
+        }
+        assert_eq!(done, 3, "no job may OOM: estimates are exact");
+    }
+
+    #[test]
+    fn sized_job_classes_map_to_tiered_profiles() {
+        let spec = tiered_spec(12);
+        let prof = |mem| crate::scheduler::target_profile(&spec, &sized_job("j", mem, 1));
+        assert_eq!(spec.profiles[prof(0.9)].mem_gb, 1.0);
+        assert_eq!(spec.profiles[prof(1.8)].mem_gb, 2.0);
+        assert_eq!(spec.profiles[prof(3.6)].mem_gb, 4.0);
     }
 }
