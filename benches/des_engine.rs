@@ -75,9 +75,12 @@ fn main() {
         black_box(n)
     });
 
-    // An iterative LLM job is ~200 IterKernel events + checks.
+    // An iterative LLM job is ~200 IterKernel events + checks; with
+    // observation emission on, every iteration also surfaces a
+    // MemObserved event (the belief-ledger feed; the ledger-side fit
+    // cost is benched separately in benches/estimator.rs).
     let llm = migm::workloads::llm::qwen2_7b().job(3);
-    b.run("sim_llm_200iters_with_prediction", || {
+    b.run("sim_llm_200iters_observed", || {
         let mut s = GpuSim::new(spec.clone(), true);
         let p20 = s.spec.profile_index("3g.20gb").unwrap();
         let i = s.mgr.alloc(p20).unwrap();

@@ -1,0 +1,100 @@
+//! Estimation-pipeline benches: construction-path estimates (the
+//! tiered pipeline vs the direct legacy tier call it replaced) and
+//! belief-update throughput (the ledger's per-observation cost, with
+//! and without the online Algorithm-1 fits) — the ledger sits on the
+//! orchestrator's per-iteration event path, so its per-observation cost
+//! bounds how cheaply dynamic jobs can be tracked.
+//!
+//! Set `MIGM_BENCH_SMOKE=1` for the CI smoke run. Set
+//! `MIGM_BENCH_JSON=<path>` to also write the stats as JSON (uploaded
+//! as a CI perf artifact next to `BENCH_policy_search.json`).
+
+use migm::estimator::compiler_analysis::analyze;
+use migm::estimator::{
+    default_pipeline, BeliefConfig, BeliefLedger, EstimateInput,
+};
+use migm::util::bench::{black_box, Bench, BenchStats};
+use migm::util::Json;
+use migm::workloads::{dnn, llm, rodinia, ComputeModel};
+
+fn main() {
+    let smoke = std::env::var("MIGM_BENCH_SMOKE").is_ok();
+    let b = if smoke { Bench::coarse() } else { Bench::new() };
+    let mut all: Vec<BenchStats> = Vec::new();
+
+    // ---- construction path: pipeline vs direct legacy tier ---------
+    let bench = rodinia::by_name("gaussian").unwrap();
+    let kr = bench.kernel_resource();
+    all.push(b.run("pipeline_estimate_kernel", || {
+        black_box(default_pipeline().estimate(&EstimateInput::Kernel {
+            resource: &kr,
+            total_gpcs: 7,
+        }))
+    }));
+    all.push(b.run("legacy_direct_compiler_analysis", || {
+        black_box(analyze(&kr, 7).to_estimate())
+    }));
+    let d = dnn::vgg16_train();
+    all.push(b.run("pipeline_estimate_dnnmem_vgg16", || {
+        black_box(default_pipeline().estimate(&EstimateInput::Model {
+            model: &d.model,
+            batch: d.batch,
+            opt: d.opt,
+            demand_gpcs: d.demand_gpcs,
+        }))
+    }));
+
+    // ---- belief-update throughput ----------------------------------
+    // One full LLM allocator trace through a ledger: ~200 observations,
+    // each re-fitting once min_obs is reached (prediction on), vs the
+    // observation-bookkeeping floor (prediction off).
+    let job = llm::qwen2_7b().job(3);
+    let trace = match &job.compute {
+        ComputeModel::Iterative(it) => it.trace.generate(it.trace_seed),
+        _ => unreachable!("qwen2 is iterative"),
+    };
+    all.push(b.run("belief_observe_200iters_with_fits", || {
+        let mut lg = BeliefLedger::new(BeliefConfig::new(true));
+        let id = lg.register(job.est, job.true_mem_gb);
+        lg.on_launch(id, &job);
+        let mut converged = 0usize;
+        for i in 0..trace.len() {
+            if lg.observe(id, trace.observation(i), trace.phys_gb[i]).is_some() {
+                converged += 1;
+            }
+        }
+        black_box(converged)
+    }));
+    all.push(b.run("belief_observe_200iters_no_prediction", || {
+        let mut lg = BeliefLedger::new(BeliefConfig::new(false));
+        let id = lg.register(job.est, job.true_mem_gb);
+        lg.on_launch(id, &job);
+        for i in 0..trace.len() {
+            black_box(lg.observe(id, trace.observation(i), trace.phys_gb[i]));
+        }
+        black_box(lg.get(id).observed_peak_gb())
+    }));
+
+    if let Ok(path) = std::env::var("MIGM_BENCH_JSON") {
+        let results: Vec<Json> = all
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(s.name.clone())),
+                    ("n", Json::num(s.n as f64)),
+                    ("median_ns", Json::num(s.median_ns)),
+                    ("mean_ns", Json::num(s.mean_ns)),
+                    ("p95_ns", Json::num(s.p95_ns)),
+                    ("min_ns", Json::num(s.min_ns)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("schema", Json::str("migm.bench.estimator.v1")),
+            ("smoke", Json::Bool(smoke)),
+            ("results", Json::Arr(results)),
+        ]);
+        std::fs::write(&path, format!("{doc}\n")).expect("writing bench JSON");
+        println!("wrote {path}");
+    }
+}

@@ -1,0 +1,645 @@
+//! Per-job memory beliefs: the runtime half of the estimation pipeline.
+//!
+//! A [`MemoryBelief`] is everything the system currently knows about
+//! one job's memory requirement: the refined [`Estimate`] (band +
+//! provenance + generation), the peak actually observed so far, the
+//! latest converged projection, and — for dynamic workloads with
+//! prediction enabled — the live Algorithm-1 [`JobMonitor`]. The
+//! [`BeliefLedger`] holds one belief per submitted job and is owned by
+//! the scheduling [`Orchestrator`](crate::scheduler::Orchestrator):
+//! the simulator *emits* allocator [`Observation`]s (it no longer
+//! consumes them internally), the orchestrator routes them into the
+//! ledger, and scheduling policies consult `ctx.belief(id)` — never the
+//! `JobSpec`'s construction-time estimate — for every placement,
+//! fusion, and predictive-restart decision. The serving front-end
+//! routes its per-replica KV-growth tracking through the same ledger
+//! ([`BeliefLedger::observe_external`] / `apply_external_fit`).
+//!
+//! Invariants (property-tested below):
+//! * a belief's upper bound ([`MemoryBelief::upper_bound_gb`]) never
+//!   drops below any peak it has observed;
+//! * refinement generations are strictly monotone;
+//! * with the default [`BeliefKnobs`], the ledger's convergence
+//!   decisions are bit-for-bit those of a bare [`JobMonitor`] with the
+//!   paper's `ConvergenceCfg` — which is what keeps the scheduler
+//!   parity suite green.
+
+use anyhow::{bail, Result};
+
+use crate::mig::GpuSpec;
+use crate::predictor::{
+    ConvergenceCfg, FitStats, JobMonitor, Observation, PredictionOutcome, Z_99,
+};
+use crate::util::Json;
+use crate::workloads::{ComputeModel, JobKind, JobSpec};
+
+use super::{Estimate, MemoryDemand};
+
+/// Index of a belief in its ledger. Assigned at submission; carried by
+/// `PendingJob`/`JobEvent` through every requeue and restart.
+pub type BeliefId = usize;
+
+/// Tunable belief parameters, swept by the [`tuner`](crate::tuner).
+/// `Default` reproduces the paper bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BeliefKnobs {
+    /// z-score of the prediction confidence band (paper: 2.576 = 99%).
+    pub z: f64,
+    /// Convergence window: consecutive projections compared for
+    /// stability (paper: 3).
+    pub window: usize,
+    /// Safety margin applied to a converged projection when refining
+    /// the demand (`point = peak * (1 + margin)`; paper: 0 — restart
+    /// onto the slice the projection itself selects).
+    pub safety_margin: f64,
+}
+
+impl Default for BeliefKnobs {
+    fn default() -> Self {
+        BeliefKnobs {
+            z: Z_99,
+            window: ConvergenceCfg::default().window,
+            safety_margin: 0.0,
+        }
+    }
+}
+
+impl BeliefKnobs {
+    /// The convergence policy these knobs select.
+    pub fn conv_cfg(&self) -> ConvergenceCfg {
+        ConvergenceCfg {
+            window: self.window,
+            z: self.z,
+            ..ConvergenceCfg::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("z", Json::num(self.z)),
+            ("window", Json::num(self.window as f64)),
+            ("safety_margin", Json::num(self.safety_margin)),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let mut k = BeliefKnobs::default();
+        match doc.get("z") {
+            Json::Null => {}
+            v => match v.as_f64() {
+                Some(x) if x > 0.0 => k.z = x,
+                _ => bail!("belief z must be a positive number, got {v}"),
+            },
+        }
+        match doc.get("window") {
+            Json::Null => {}
+            // as_u64 alone would truncate 2.9 to 2; require a whole number
+            v => match v.as_f64() {
+                Some(x) if x >= 1.0 && x.fract() == 0.0 => k.window = x as usize,
+                _ => bail!("belief window must be a positive integer, got {v}"),
+            },
+        }
+        match doc.get("safety_margin") {
+            Json::Null => {}
+            v => match v.as_f64() {
+                Some(x) if x >= 0.0 => k.safety_margin = x,
+                _ => bail!("safety_margin must be a non-negative number, got {v}"),
+            },
+        }
+        Ok(k)
+    }
+}
+
+/// Ledger-wide configuration: the predictor switch plus the belief
+/// knobs. `prediction: false` disables monitors entirely (the paper's
+/// no-prediction arms).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BeliefConfig {
+    pub prediction: bool,
+    pub knobs: BeliefKnobs,
+}
+
+impl BeliefConfig {
+    pub fn new(prediction: bool) -> BeliefConfig {
+        BeliefConfig {
+            prediction,
+            knobs: BeliefKnobs::default(),
+        }
+    }
+}
+
+/// Everything currently believed about one job's memory requirement.
+#[derive(Debug, Clone)]
+pub struct MemoryBelief {
+    est: Estimate,
+    /// Realized peak the job is known to reach (for report accuracy;
+    /// never consulted by scheduling decisions).
+    true_peak_gb: f64,
+    observed_peak_gb: f64,
+    predicted_peak_gb: Option<f64>,
+    monitor: Option<JobMonitor>,
+    /// External (wall-clock) observation series — the server's
+    /// per-replica KV tracking: (req_mem_gb, inv_reuse) per step.
+    external: Option<(Vec<f64>, Vec<f64>)>,
+}
+
+impl MemoryBelief {
+    fn new(est: Estimate, true_peak_gb: f64) -> MemoryBelief {
+        MemoryBelief {
+            est,
+            true_peak_gb,
+            observed_peak_gb: 0.0,
+            predicted_peak_gb: None,
+            monitor: None,
+            external: None,
+        }
+    }
+
+    /// The current refined estimate (band + provenance + generation).
+    pub fn estimate(&self) -> &Estimate {
+        &self.est
+    }
+
+    /// The placement-driving demand (the band's point; 0 when unknown).
+    pub fn demand_gb(&self) -> f64 {
+        self.est.point_gb()
+    }
+
+    pub fn compute_gpcs(&self) -> u8 {
+        self.est.compute_gpcs
+    }
+
+    pub fn is_unknown(&self) -> bool {
+        self.est.is_unknown()
+    }
+
+    pub fn generation(&self) -> u32 {
+        self.est.generation
+    }
+
+    /// The belief's upper bound: never below any observed peak.
+    pub fn upper_bound_gb(&self) -> f64 {
+        self.est.hi_gb().max(self.observed_peak_gb)
+    }
+
+    pub fn observed_peak_gb(&self) -> f64 {
+        self.observed_peak_gb
+    }
+
+    /// Latest converged peak projection, if prediction ever converged.
+    pub fn predicted_peak_gb(&self) -> Option<f64> {
+        self.predicted_peak_gb
+    }
+
+    /// Realized peak recorded at registration (report accuracy anchor).
+    pub fn true_peak_gb(&self) -> f64 {
+        self.true_peak_gb
+    }
+
+    /// The live monitor (dynamic jobs with prediction, while running).
+    pub fn monitor(&self) -> Option<&JobMonitor> {
+        self.monitor.as_ref()
+    }
+
+    /// External observation series (server KV tracking), if any.
+    pub fn external_series(&self) -> Option<(&[f64], &[f64])> {
+        self.external.as_ref().map(|(m, r)| (&m[..], &r[..]))
+    }
+
+    /// Replace the band, bumping the generation and clamping the upper
+    /// edge so it never drops below the observed peak.
+    fn refine_band(&mut self, lo_gb: f64, point_gb: f64, hi_gb: f64) {
+        let hi = hi_gb.max(point_gb).max(self.observed_peak_gb);
+        self.est = self.est.refined(MemoryDemand::Band {
+            lo_gb: lo_gb.min(point_gb),
+            point_gb,
+            hi_gb: hi,
+        });
+    }
+}
+
+/// Aggregate predicted-vs-actual accuracy over a ledger (the `migm
+/// report online` error column).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PredictionAccuracy {
+    /// Beliefs that received at least one allocator observation.
+    pub n_tracked: usize,
+    /// Beliefs whose prediction converged at least once.
+    pub n_predicted: usize,
+    /// Mean |predicted − actual| / actual over converged beliefs.
+    pub mean_abs_pct_err: f64,
+}
+
+/// One belief per submitted job, owned by the orchestrator.
+pub struct BeliefLedger {
+    cfg: BeliefConfig,
+    conv: ConvergenceCfg,
+    beliefs: Vec<MemoryBelief>,
+}
+
+impl BeliefLedger {
+    pub fn new(cfg: BeliefConfig) -> BeliefLedger {
+        BeliefLedger {
+            cfg,
+            conv: cfg.knobs.conv_cfg(),
+            beliefs: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &BeliefConfig {
+        &self.cfg
+    }
+
+    pub fn len(&self) -> usize {
+        self.beliefs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.beliefs.is_empty()
+    }
+
+    /// Open a belief seeded with a pipeline estimate. `true_peak_gb` is
+    /// the realized peak (report accuracy only; 0 if unknown).
+    pub fn register(&mut self, est: Estimate, true_peak_gb: f64) -> BeliefId {
+        self.beliefs.push(MemoryBelief::new(est, true_peak_gb));
+        self.beliefs.len() - 1
+    }
+
+    pub fn get(&self, id: BeliefId) -> &MemoryBelief {
+        &self.beliefs[id]
+    }
+
+    /// A job (re)launched: dynamic (LLM) jobs get a *fresh* monitor when
+    /// prediction is enabled — each launch restarts the Algorithm-1
+    /// series, exactly as the pre-redesign simulator did.
+    pub fn on_launch(&mut self, id: BeliefId, spec: &JobSpec) {
+        let b = &mut self.beliefs[id];
+        b.monitor = match (&spec.compute, self.cfg.prediction, spec.kind) {
+            (ComputeModel::Iterative(it), true, JobKind::Llm) => {
+                Some(JobMonitor::new(it.trace.n_iters, self.conv))
+            }
+            _ => None,
+        };
+    }
+
+    /// One allocator observation from the simulator (`mem_gb` is the
+    /// iteration's physical footprint). Returns the converged peak
+    /// projection, if the monitor has one.
+    pub fn observe(&mut self, id: BeliefId, obs: Observation, mem_gb: f64) -> Option<f64> {
+        let b = &mut self.beliefs[id];
+        b.observed_peak_gb = b.observed_peak_gb.max(mem_gb);
+        let mon = b.monitor.as_mut()?;
+        match mon.push(obs) {
+            PredictionOutcome::Converged { peak_physical_gb } => {
+                b.predicted_peak_gb = Some(peak_physical_gb);
+                Some(peak_physical_gb)
+            }
+            PredictionOutcome::Pending => None,
+        }
+    }
+
+    /// OOM on an instance of `cur_profile`: the paper reschedules on
+    /// the next-largest slice, so the demand becomes that slice's
+    /// memory (the whole GPU off the top of the ladder). `observed_gb`
+    /// is the footprint that triggered the OOM — hard evidence the
+    /// upper bound must never drop below (the demand *point* stays the
+    /// ladder walk, so scheduling decisions are unchanged).
+    pub fn refine_after_oom(
+        &mut self,
+        id: BeliefId,
+        spec: &GpuSpec,
+        cur_profile: usize,
+        observed_gb: f64,
+    ) {
+        let point = match spec.next_larger_profile(cur_profile) {
+            Some(next) => spec.profiles[next].mem_gb,
+            None => spec.total_mem_gb,
+        };
+        let b = &mut self.beliefs[id];
+        b.observed_peak_gb = b.observed_peak_gb.max(observed_gb);
+        let lo = b.observed_peak_gb.min(point);
+        b.refine_band(lo, point, point);
+        b.monitor = None;
+    }
+
+    /// A converged projection exceeded the slice: the demand becomes
+    /// the projected peak widened by the safety margin; the band keeps
+    /// the fit's z-upper requested bound as its top edge.
+    pub fn refine_from_prediction(&mut self, id: BeliefId, peak_gb: f64) {
+        let margin = self.cfg.knobs.safety_margin;
+        let b = &mut self.beliefs[id];
+        let point = peak_gb * (1.0 + margin);
+        let hi = b
+            .monitor
+            .as_ref()
+            .and_then(|m| m.latest_fit())
+            .map(|f| f.mem_pred_gb)
+            .unwrap_or(point)
+            .max(point);
+        let lo = b.observed_peak_gb.min(point);
+        b.predicted_peak_gb = Some(peak_gb);
+        b.refine_band(lo, point, hi);
+        b.monitor = None;
+    }
+
+    /// External (wall-clock) observation — the server's per-replica KV
+    /// usage sample. Tracked in the belief's own series so an external
+    /// fit engine (the AOT PJRT predictor) can be run over it.
+    pub fn observe_external(&mut self, id: BeliefId, obs: Observation, mem_gb: f64) {
+        let b = &mut self.beliefs[id];
+        b.observed_peak_gb = b.observed_peak_gb.max(mem_gb);
+        let (m, r) = b.external.get_or_insert_with(|| (Vec::new(), Vec::new()));
+        m.push(obs.req_mem_gb);
+        r.push(1.0 / obs.reuse_ratio.max(1e-6));
+    }
+
+    /// Fold an externally-computed fit (e.g. the PJRT Pallas engine)
+    /// into the belief: the projection becomes the demand point, the
+    /// fit's z-upper requested bound the band top. Returns the refined
+    /// demand so callers can compare it against their budget.
+    pub fn apply_external_fit(&mut self, id: BeliefId, stats: &FitStats) -> f64 {
+        let b = &mut self.beliefs[id];
+        let point = stats.peak_physical_gb;
+        b.predicted_peak_gb = Some(point);
+        b.refine_band(
+            b.observed_peak_gb.min(point),
+            point,
+            stats.mem_pred_gb.max(point),
+        );
+        b.demand_gb()
+    }
+
+    /// Predicted-vs-actual accuracy over every belief with a converged
+    /// prediction (actual = realized peak recorded at registration).
+    pub fn accuracy(&self) -> PredictionAccuracy {
+        let mut acc = PredictionAccuracy::default();
+        let mut err_sum = 0.0;
+        for b in &self.beliefs {
+            if b.observed_peak_gb > 0.0 {
+                acc.n_tracked += 1;
+            }
+            if let Some(pred) = b.predicted_peak_gb {
+                let actual = if b.true_peak_gb > 0.0 {
+                    b.true_peak_gb
+                } else {
+                    b.observed_peak_gb
+                };
+                if actual > 0.0 {
+                    acc.n_predicted += 1;
+                    err_sum += (pred - actual).abs() / actual;
+                }
+            }
+        }
+        if acc.n_predicted > 0 {
+            acc.mean_abs_pct_err = err_sum / acc.n_predicted as f64;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::llm;
+
+    fn ledger(prediction: bool) -> BeliefLedger {
+        BeliefLedger::new(BeliefConfig::new(prediction))
+    }
+
+    #[test]
+    fn knobs_default_matches_paper_and_roundtrips() {
+        let d = BeliefKnobs::default();
+        assert_eq!(d.z, Z_99);
+        assert_eq!(d.window, ConvergenceCfg::default().window);
+        assert_eq!(d.safety_margin, 0.0);
+        // default knobs select exactly the paper's convergence policy
+        let cfg = d.conv_cfg();
+        let paper = ConvergenceCfg::default();
+        assert_eq!(cfg.min_obs, paper.min_obs);
+        assert_eq!(cfg.window, paper.window);
+        assert_eq!(cfg.rel_tol, paper.rel_tol);
+        assert_eq!(cfg.z, paper.z);
+
+        let k = BeliefKnobs {
+            z: 1.96,
+            window: 5,
+            safety_margin: 0.1,
+        };
+        assert_eq!(BeliefKnobs::from_json(&k.to_json()).unwrap(), k);
+        assert_eq!(
+            BeliefKnobs::from_json(&Json::parse("{}").unwrap()).unwrap(),
+            BeliefKnobs::default()
+        );
+        for bad in [
+            r#"{"z": -1}"#,
+            r#"{"window": 0}"#,
+            r#"{"window": 2.5}"#,
+            r#"{"safety_margin": -0.5}"#,
+        ] {
+            assert!(
+                BeliefKnobs::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    /// Property: the ledger with default knobs converges at exactly the
+    /// same iteration, to exactly the same peak, as a bare JobMonitor —
+    /// the bit-for-bit bridge the parity suite stands on.
+    #[test]
+    fn ledger_reproduces_bare_monitor_decisions_bit_for_bit() {
+        for (w, seed) in [(llm::qwen2_7b(), 7u64), (llm::flan_t5_train(), 9)] {
+            let job = w.job(seed);
+            let ComputeModel::Iterative(it) = &job.compute else {
+                unreachable!()
+            };
+            let trace = it.trace.generate(it.trace_seed);
+            let mut lg = ledger(true);
+            let id = lg.register(job.est, job.true_mem_gb);
+            lg.on_launch(id, &job);
+            let mut bare = JobMonitor::new(it.trace.n_iters, ConvergenceCfg::default());
+            for i in 0..trace.len() {
+                let obs = trace.observation(i);
+                let via_ledger = lg.observe(id, obs, trace.phys_gb[i]);
+                let via_bare = match bare.push(obs) {
+                    PredictionOutcome::Converged { peak_physical_gb } => Some(peak_physical_gb),
+                    PredictionOutcome::Pending => None,
+                };
+                match (via_ledger, via_bare) {
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{} iter {i}", w.name)
+                    }
+                    (None, None) => {}
+                    (a, b) => panic!("{} iter {i}: ledger {a:?} vs bare {b:?}", w.name),
+                }
+            }
+        }
+    }
+
+    /// Property: the upper bound never drops below any observed peak,
+    /// across observations and every refinement kind.
+    #[test]
+    fn upper_bound_never_drops_below_observed_peak() {
+        use crate::util::Rng;
+        let spec = GpuSpec::a100_40gb();
+        for seed in [1u64, 2, 3, 4, 5] {
+            let job = llm::llama3_3b().job(seed);
+            let ComputeModel::Iterative(it) = &job.compute else {
+                unreachable!()
+            };
+            let trace = it.trace.generate(it.trace_seed);
+            let mut lg = ledger(true);
+            let id = lg.register(job.est, job.true_mem_gb);
+            lg.on_launch(id, &job);
+            let mut rng = Rng::new(seed);
+            let mut peak_seen = 0.0f64;
+            for i in 0..trace.len() {
+                let mem = trace.phys_gb[i];
+                peak_seen = peak_seen.max(mem);
+                let converged = lg.observe(id, trace.observation(i), mem);
+                assert!(
+                    lg.get(id).upper_bound_gb() + 1e-12 >= peak_seen,
+                    "seed {seed} iter {i}"
+                );
+                // randomly interleave every refinement kind
+                match rng.below(7) {
+                    0 => {
+                        lg.refine_after_oom(id, &spec, 0, mem);
+                        lg.on_launch(id, &job); // relaunch on the bigger slice
+                    }
+                    1 => {
+                        if let Some(p) = converged {
+                            lg.refine_from_prediction(id, p);
+                            lg.on_launch(id, &job); // relaunch
+                        }
+                    }
+                    2 => {
+                        let _ = lg.apply_external_fit(
+                            id,
+                            &crate::predictor::host::fit_one(
+                                &trace.req_gb[..=i],
+                                &trace.req_gb[..=i].iter().map(|_| 1.0).collect::<Vec<_>>(),
+                                trace.len() as f64,
+                                Z_99,
+                            ),
+                        );
+                    }
+                    _ => {}
+                }
+                assert!(
+                    lg.get(id).upper_bound_gb() + 1e-12 >= peak_seen,
+                    "seed {seed} iter {i} post-refine"
+                );
+            }
+            assert!(lg.get(id).observed_peak_gb() > 0.0);
+        }
+    }
+
+    /// Property: refinement generations are strictly monotone.
+    #[test]
+    fn generations_are_monotone() {
+        let spec = GpuSpec::a100_40gb();
+        let job = llm::qwen2_7b().job(3);
+        let mut lg = ledger(true);
+        let id = lg.register(job.est, job.true_mem_gb);
+        assert_eq!(lg.get(id).generation(), 0);
+        let mut last = 0;
+        lg.refine_after_oom(id, &spec, 0, 6.0);
+        assert!(lg.get(id).generation() > last);
+        last = lg.get(id).generation();
+        lg.refine_from_prediction(id, 12.5);
+        assert!(lg.get(id).generation() > last);
+        last = lg.get(id).generation();
+        // observations alone do not fabricate refinements
+        lg.on_launch(id, &job);
+        lg.observe(id, Observation { req_mem_gb: 8.0, reuse_ratio: 1.0 }, 8.0);
+        assert_eq!(lg.get(id).generation(), last);
+        let _ = lg.apply_external_fit(
+            id,
+            &crate::predictor::host::fit_one(&[8.0, 8.5, 9.0], &[1.0, 1.0, 1.0], 50.0, Z_99),
+        );
+        assert!(lg.get(id).generation() > last);
+    }
+
+    #[test]
+    fn oom_refinement_walks_the_gpu_ladder() {
+        let spec = GpuSpec::a100_40gb();
+        let job = llm::qwen2_7b().job(1);
+        let mut lg = ledger(false);
+        let id = lg.register(job.est, job.true_mem_gb);
+        assert!(lg.get(id).is_unknown());
+        lg.refine_after_oom(id, &spec, 0, 6.2);
+        assert_eq!(lg.get(id).demand_gb(), 10.0);
+        lg.refine_after_oom(id, &spec, 1, 10.4);
+        assert_eq!(lg.get(id).demand_gb(), 20.0);
+        lg.refine_after_oom(id, &spec, 4, 41.0);
+        assert_eq!(lg.get(id).demand_gb(), 40.0);
+        assert_eq!(lg.get(id).generation(), 3);
+        // the OOMing footprints are observed evidence: the upper bound
+        // tracks them even past the demand point (40 GB total ladder).
+        assert_eq!(lg.get(id).observed_peak_gb(), 41.0);
+        assert!(lg.get(id).upper_bound_gb() >= 41.0);
+    }
+
+    #[test]
+    fn safety_margin_widens_the_restart_demand() {
+        let mut cfg = BeliefConfig::new(true);
+        cfg.knobs.safety_margin = 0.1;
+        let mut lg = BeliefLedger::new(cfg);
+        let id = lg.register(Estimate::unknown_upfront(2), 12.0);
+        lg.refine_from_prediction(id, 12.0);
+        assert!((lg.get(id).demand_gb() - 13.2).abs() < 1e-12);
+        // default margin leaves the projection untouched (parity)
+        let mut lg0 = ledger(true);
+        let id0 = lg0.register(Estimate::unknown_upfront(2), 12.0);
+        lg0.refine_from_prediction(id0, 12.0);
+        assert_eq!(lg0.get(id0).demand_gb(), 12.0);
+    }
+
+    #[test]
+    fn prediction_disabled_means_no_monitor() {
+        let job = llm::qwen2_7b().job(2);
+        let mut lg = ledger(false);
+        let id = lg.register(job.est, job.true_mem_gb);
+        lg.on_launch(id, &job);
+        assert!(lg.get(id).monitor().is_none());
+        let got = lg.observe(id, Observation { req_mem_gb: 9.0, reuse_ratio: 1.0 }, 9.0);
+        assert!(got.is_none());
+        assert_eq!(lg.get(id).observed_peak_gb(), 9.0);
+    }
+
+    #[test]
+    fn external_series_feeds_accuracy_and_alerts() {
+        let mut lg = ledger(false);
+        let id = lg.register(Estimate::unknown_upfront(1), 0.0);
+        for i in 0..16 {
+            let gb = 1.0 + 0.1 * i as f64;
+            lg.observe_external(id, Observation { req_mem_gb: gb, reuse_ratio: 1.0 }, gb);
+        }
+        let (m, r) = lg.get(id).external_series().unwrap();
+        assert_eq!(m.len(), 16);
+        assert_eq!(r.len(), 16);
+        let fit = crate::predictor::host::fit_one(m, r, 64.0, Z_99);
+        let demand = lg.apply_external_fit(id, &fit);
+        assert!(demand > 2.0, "projected KV demand {demand}");
+        assert_eq!(lg.get(id).demand_gb(), demand);
+        let acc = lg.accuracy();
+        assert_eq!(acc.n_tracked, 1);
+        assert_eq!(acc.n_predicted, 1);
+    }
+
+    #[test]
+    fn accuracy_measures_prediction_error_against_true_peak() {
+        let mut lg = ledger(true);
+        let a = lg.register(Estimate::unknown_upfront(1), 10.0);
+        let b = lg.register(Estimate::unknown_upfront(1), 20.0);
+        lg.observe(a, Observation { req_mem_gb: 5.0, reuse_ratio: 1.0 }, 5.0);
+        lg.observe(b, Observation { req_mem_gb: 5.0, reuse_ratio: 1.0 }, 5.0);
+        lg.refine_from_prediction(a, 11.0); // 10% err
+        lg.refine_from_prediction(b, 19.0); // 5% err
+        let acc = lg.accuracy();
+        assert_eq!(acc.n_tracked, 2);
+        assert_eq!(acc.n_predicted, 2);
+        assert!((acc.mean_abs_pct_err - 0.075).abs() < 1e-12, "{}", acc.mean_abs_pct_err);
+    }
+}

@@ -8,7 +8,7 @@
 //! and the analyzer folds that into the `(mem_gb, gpcs)` tuple the
 //! scheduler consumes, including the paper's warp-folding optimization.
 
-use super::{EstimationMethod, MemoryEstimate};
+use super::{Estimate, EstimationMethod};
 
 /// A100 SMs per GPC (108 SMs / 7 GPCs, rounded to the MIG slice value).
 pub const SMS_PER_GPC: u32 = 14;
@@ -92,12 +92,14 @@ pub fn analyze(k: &KernelResource, total_gpcs: u8) -> WorkloadAnalysis {
 }
 
 impl WorkloadAnalysis {
-    pub fn to_estimate(self) -> MemoryEstimate {
-        MemoryEstimate {
-            mem_gb: self.mem_gb,
-            compute_gpcs: self.gpcs_folded,
-            method: EstimationMethod::CompilerAnalysis,
-        }
+    /// The pipeline estimate: static analysis is exact, so the band is
+    /// degenerate (lo = point = hi).
+    pub fn to_estimate(self) -> Estimate {
+        Estimate::exact(
+            self.mem_gb,
+            self.gpcs_folded,
+            EstimationMethod::CompilerAnalysis,
+        )
     }
 }
 

@@ -1,25 +1,55 @@
-//! Memory & compute estimation for incoming jobs (paper §4.3).
+//! Memory & compute estimation for incoming jobs (paper §4.3) — the
+//! **estimation pipeline**.
 //!
-//! Three tiers, matching the paper's estimation strategy:
+//! Estimation is a first-class pipeline, not a set of disconnected
+//! helpers: every job's a-priori requirement is produced by an
+//! [`Estimator`] tier behind one entry point
+//! ([`pipeline::EstimationPipeline`], usually via
+//! [`pipeline::default_pipeline`]), as a rich [`Estimate`] — a
+//! lo/point/hi confidence band plus method provenance and a refinement
+//! generation — instead of a write-once scalar. Three tiers, matching
+//! the paper's strategy:
 //!
 //! * [`compiler_analysis`] — CASE-style static analysis for scientific
 //!   workloads: derives the device-memory footprint and warp/GPC demand
 //!   from a kernel-resource descriptor (the tuple the paper's compiler
-//!   pass [4] emits), plus the warp-folding optimization.
+//!   pass [4] emits), plus the warp-folding optimization. Exact: the
+//!   band is degenerate (lo = point = hi).
 //! * [`dnnmem`] — DNNMem-style offline estimation for DNN training
 //!   jobs: walks the layer graph and sums weights, gradients, optimizer
-//!   state, activations and library workspace.
-//! * time-series prediction (module [`crate::predictor`]) for workloads
-//!   whose memory grows dynamically; the scheduler starts those on the
-//!   smallest slice and relies on prediction/OOM restart.
+//!   state, activations and library workspace. The band's lower edge
+//!   strips the allocator-fragmentation slack (the reserved-vs-allocated
+//!   gap is the estimate's main uncertainty).
+//! * time-series (module [`crate::predictor`]) for workloads whose
+//!   memory grows dynamically: the a-priori estimate is the explicit
+//!   [`MemoryDemand::Unknown`] state (no sentinel values) — the
+//!   scheduler starts those on the smallest slice and the per-job
+//!   [`belief::MemoryBelief`] refines the band online from allocator
+//!   observations.
+//!
+//! At runtime each job's current knowledge lives in a
+//! [`belief::MemoryBelief`] inside the orchestrator-owned
+//! [`belief::BeliefLedger`]; scheduling policies consult beliefs — never
+//! the `JobSpec`'s construction-time estimate — for slice selection,
+//! fusion width, and predictive-restart decisions.
+//!
+//! The flat [`MemoryEstimate`] is retained as the legacy surface: the
+//! default pipeline reproduces it bit-for-bit ([`Estimate::to_legacy`];
+//! proven per paper mix by `pipeline::tests`).
 
+pub mod belief;
 pub mod compiler_analysis;
 pub mod dnnmem;
+pub mod pipeline;
 pub mod workspace;
 
+pub use belief::{
+    BeliefConfig, BeliefId, BeliefKnobs, BeliefLedger, MemoryBelief, PredictionAccuracy,
+};
 pub use compiler_analysis::{fold_warps, KernelResource, WorkloadAnalysis};
-pub use workspace::{estimate_workspace_gb, parse_cublas_workspace_config, WorkspacePool};
 pub use dnnmem::{DnnEstimate, Layer, ModelDef, Optimizer};
+pub use pipeline::{default_pipeline, EstimateInput, EstimationPipeline, Estimator};
+pub use workspace::{estimate_workspace_gb, parse_cublas_workspace_config, WorkspacePool};
 
 /// How a job's memory requirement was obtained.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,7 +62,10 @@ pub enum EstimationMethod {
     TimeSeries,
 }
 
-/// The estimate consumed by the scheduler.
+/// The legacy flat estimate. Kept as the compatibility surface the
+/// parity/property tests pin the pipeline against
+/// ([`Estimate::to_legacy`]); nothing on the scheduling path consumes
+/// it anymore.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MemoryEstimate {
     /// Peak device memory, GB. For `TimeSeries` this is the *initial*
@@ -41,4 +74,183 @@ pub struct MemoryEstimate {
     /// Compute demand in GPC units (soft constraint).
     pub compute_gpcs: u8,
     pub method: EstimationMethod,
+}
+
+/// A memory requirement with explicit uncertainty.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MemoryDemand {
+    /// Unknown upfront (the time-series tier before any runtime
+    /// evidence): the scheduler starts on the smallest slice and grows
+    /// on demand. This replaces the old `mem_gb <= 0.0` sentinel.
+    Unknown,
+    /// A confidence band, GB: `lo_gb <= point_gb <= hi_gb`. The point
+    /// drives placement (it is the legacy `mem_gb`); the band carries
+    /// the estimator's uncertainty for consumers that want it
+    /// (tuner state, reports, future RL partitioners).
+    Band {
+        lo_gb: f64,
+        point_gb: f64,
+        hi_gb: f64,
+    },
+}
+
+/// A rich estimate: confidence band + provenance + refinement
+/// generation. Produced by [`Estimator`] tiers at job construction and
+/// refined at runtime through [`belief::MemoryBelief`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Estimate {
+    pub demand: MemoryDemand,
+    /// Compute demand in GPC units (soft constraint).
+    pub compute_gpcs: u8,
+    pub method: EstimationMethod,
+    /// Refinement generation: 0 for the a-priori estimate, incremented
+    /// by every runtime refinement (OOM bump, converged prediction,
+    /// external fit). Strictly monotone per belief.
+    pub generation: u32,
+}
+
+impl Estimate {
+    /// An exact (degenerate-band) estimate.
+    pub fn exact(mem_gb: f64, compute_gpcs: u8, method: EstimationMethod) -> Estimate {
+        Estimate::banded(mem_gb, mem_gb, mem_gb, compute_gpcs, method)
+    }
+
+    /// A banded estimate; the band is clamped to `lo <= point <= hi`.
+    pub fn banded(
+        lo_gb: f64,
+        point_gb: f64,
+        hi_gb: f64,
+        compute_gpcs: u8,
+        method: EstimationMethod,
+    ) -> Estimate {
+        Estimate {
+            demand: MemoryDemand::Band {
+                lo_gb: lo_gb.min(point_gb),
+                point_gb,
+                hi_gb: hi_gb.max(point_gb),
+            },
+            compute_gpcs,
+            method,
+            generation: 0,
+        }
+    }
+
+    /// The explicit unknown-upfront state of the time-series tier.
+    pub fn unknown_upfront(compute_gpcs: u8) -> Estimate {
+        Estimate {
+            demand: MemoryDemand::Unknown,
+            compute_gpcs,
+            method: EstimationMethod::TimeSeries,
+            generation: 0,
+        }
+    }
+
+    pub fn is_unknown(&self) -> bool {
+        matches!(self.demand, MemoryDemand::Unknown)
+    }
+
+    /// The placement-driving point value (the legacy `mem_gb`); 0.0 in
+    /// the unknown state, mirroring the historical sentinel at the one
+    /// boundary ([`to_legacy`](Self::to_legacy)) that still speaks it.
+    pub fn point_gb(&self) -> f64 {
+        match self.demand {
+            MemoryDemand::Unknown => 0.0,
+            MemoryDemand::Band { point_gb, .. } => point_gb,
+        }
+    }
+
+    /// Upper edge of the band (0.0 when unknown).
+    pub fn hi_gb(&self) -> f64 {
+        match self.demand {
+            MemoryDemand::Unknown => 0.0,
+            MemoryDemand::Band { hi_gb, .. } => hi_gb,
+        }
+    }
+
+    /// Lower edge of the band (0.0 when unknown).
+    pub fn lo_gb(&self) -> f64 {
+        match self.demand {
+            MemoryDemand::Unknown => 0.0,
+            MemoryDemand::Band { lo_gb, .. } => lo_gb,
+        }
+    }
+
+    /// A copy whose point (and degenerate band) is `point_gb`, keeping
+    /// provenance and bumping the generation. The refinement edge used
+    /// by OOM bumps and the legacy golden loops.
+    pub fn with_point(self, point_gb: f64) -> Estimate {
+        self.refined(MemoryDemand::Band {
+            lo_gb: point_gb,
+            point_gb,
+            hi_gb: point_gb,
+        })
+    }
+
+    /// A copy with a new demand and the generation incremented.
+    pub fn refined(self, demand: MemoryDemand) -> Estimate {
+        Estimate {
+            demand,
+            generation: self.generation + 1,
+            ..self
+        }
+    }
+
+    /// Collapse to the legacy flat estimate (bit-for-bit what the old
+    /// constructors produced; the unknown state maps back to the 0.0
+    /// sentinel).
+    pub fn to_legacy(&self) -> MemoryEstimate {
+        MemoryEstimate {
+            mem_gb: self.point_gb(),
+            compute_gpcs: self.compute_gpcs,
+            method: self.method,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn band_is_clamped_around_the_point() {
+        let e = Estimate::banded(9.0, 8.0, 7.0, 2, EstimationMethod::ModelSize);
+        assert_eq!(e.lo_gb(), 8.0);
+        assert_eq!(e.point_gb(), 8.0);
+        assert_eq!(e.hi_gb(), 8.0);
+        let e = Estimate::banded(6.0, 8.0, 10.0, 2, EstimationMethod::ModelSize);
+        assert_eq!((e.lo_gb(), e.point_gb(), e.hi_gb()), (6.0, 8.0, 10.0));
+    }
+
+    #[test]
+    fn unknown_maps_to_the_legacy_sentinel_only_at_the_edge() {
+        let e = Estimate::unknown_upfront(2);
+        assert!(e.is_unknown());
+        assert_eq!(e.method, EstimationMethod::TimeSeries);
+        let legacy = e.to_legacy();
+        assert_eq!(legacy.mem_gb, 0.0);
+        assert_eq!(legacy.method, EstimationMethod::TimeSeries);
+    }
+
+    #[test]
+    fn refinement_bumps_the_generation() {
+        let e = Estimate::unknown_upfront(1);
+        assert_eq!(e.generation, 0);
+        let r = e.with_point(10.0);
+        assert_eq!(r.generation, 1);
+        assert!(!r.is_unknown());
+        assert_eq!(r.point_gb(), 10.0);
+        let r2 = r.with_point(20.0);
+        assert_eq!(r2.generation, 2);
+        // provenance survives refinement
+        assert_eq!(r2.method, EstimationMethod::TimeSeries);
+    }
+
+    #[test]
+    fn exact_round_trips_to_legacy() {
+        let e = Estimate::exact(6.0, 2, EstimationMethod::CompilerAnalysis);
+        let l = e.to_legacy();
+        assert_eq!(l.mem_gb, 6.0);
+        assert_eq!(l.compute_gpcs, 2);
+        assert_eq!(l.method, EstimationMethod::CompilerAnalysis);
+    }
 }

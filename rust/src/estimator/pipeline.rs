@@ -1,0 +1,253 @@
+//! The [`Estimator`] trait and the default three-tier pipeline: one
+//! entry point turning a workload description into a rich [`Estimate`].
+//!
+//! Each tier answers the inputs it understands and passes on the rest;
+//! the pipeline asks its tiers in order. The default pipeline
+//! ([`default_pipeline`]) wires the paper's three tiers
+//! (compiler analysis → DNNMem → time-series/unknown) and is what every
+//! workload constructor goes through, so a custom pipeline (a learned
+//! estimator, a profiling cache) swaps in at one seam. Its output
+//! reproduces the legacy flat [`MemoryEstimate`] bit for bit
+//! ([`Estimate::to_legacy`]); the property tests below pin that for
+//! every paper mix.
+
+use std::sync::OnceLock;
+
+use super::compiler_analysis::{analyze, KernelResource};
+use super::dnnmem::{self, ModelDef, Optimizer};
+use super::{Estimate, EstimationMethod};
+
+/// What a tier is asked to estimate: the per-kind workload description
+/// the paper's tiers consume.
+#[derive(Debug, Clone, Copy)]
+pub enum EstimateInput<'a> {
+    /// A compiled scientific kernel (Rodinia): the compiler pass's
+    /// resource descriptor plus the GPU's GPC count for warp folding.
+    Kernel {
+        resource: &'a KernelResource,
+        total_gpcs: u8,
+    },
+    /// A DNN training/inference job: layer graph + batch + optimizer.
+    Model {
+        model: &'a ModelDef,
+        batch: u64,
+        opt: Optimizer,
+        demand_gpcs: u8,
+    },
+    /// A dynamically-growing workload (LLM): nothing is knowable
+    /// upfront beyond the compute demand.
+    Dynamic { demand_gpcs: u8 },
+}
+
+/// One estimation tier. `estimate` returns `None` for inputs the tier
+/// does not understand, letting the pipeline fall through.
+pub trait Estimator: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn estimate(&self, input: &EstimateInput) -> Option<Estimate>;
+}
+
+/// Tier 1 — CASE-style compile-time analysis (exact band).
+pub struct CompilerAnalysisEstimator;
+
+impl Estimator for CompilerAnalysisEstimator {
+    fn name(&self) -> &'static str {
+        "compiler-analysis"
+    }
+
+    fn estimate(&self, input: &EstimateInput) -> Option<Estimate> {
+        match input {
+            EstimateInput::Kernel {
+                resource,
+                total_gpcs,
+            } => Some(analyze(resource, *total_gpcs).to_estimate()),
+            _ => None,
+        }
+    }
+}
+
+/// Tier 2 — DNNMem-style offline model-size estimation. The point is
+/// the DNNMem total; the band's lower edge strips the
+/// allocator-fragmentation slack (the estimate's dominant uncertainty).
+pub struct DnnMemEstimator;
+
+impl Estimator for DnnMemEstimator {
+    fn name(&self) -> &'static str {
+        "dnnmem"
+    }
+
+    fn estimate(&self, input: &EstimateInput) -> Option<Estimate> {
+        match input {
+            EstimateInput::Model {
+                model,
+                batch,
+                opt,
+                demand_gpcs,
+            } => {
+                let e = dnnmem::estimate(model, *batch, *opt);
+                let raw = e.weights_gb
+                    + e.gradients_gb
+                    + e.optimizer_gb
+                    + e.activations_gb
+                    + e.workspace_gb;
+                Some(Estimate::banded(
+                    raw + e.context_gb,
+                    e.total_gb,
+                    e.total_gb,
+                    *demand_gpcs,
+                    EstimationMethod::ModelSize,
+                ))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Tier 3 — the time-series tier's a-priori answer: explicitly unknown.
+pub struct TimeSeriesEstimator;
+
+impl Estimator for TimeSeriesEstimator {
+    fn name(&self) -> &'static str {
+        "time-series"
+    }
+
+    fn estimate(&self, input: &EstimateInput) -> Option<Estimate> {
+        match input {
+            EstimateInput::Dynamic { demand_gpcs } => {
+                Some(Estimate::unknown_upfront(*demand_gpcs))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// An ordered tier list behind one entry point.
+pub struct EstimationPipeline {
+    tiers: Vec<Box<dyn Estimator>>,
+}
+
+impl EstimationPipeline {
+    pub fn new(tiers: Vec<Box<dyn Estimator>>) -> EstimationPipeline {
+        EstimationPipeline { tiers }
+    }
+
+    /// The paper's three tiers in order.
+    pub fn paper_default() -> EstimationPipeline {
+        EstimationPipeline::new(vec![
+            Box::new(CompilerAnalysisEstimator),
+            Box::new(DnnMemEstimator),
+            Box::new(TimeSeriesEstimator),
+        ])
+    }
+
+    /// Ask each tier in order; panics if no tier understands the input
+    /// (a pipeline misconfiguration, not a runtime condition).
+    pub fn estimate(&self, input: &EstimateInput) -> Estimate {
+        self.tiers
+            .iter()
+            .find_map(|t| t.estimate(input))
+            .expect("no estimation tier accepts this input")
+    }
+}
+
+impl Estimator for EstimationPipeline {
+    fn name(&self) -> &'static str {
+        "pipeline"
+    }
+
+    fn estimate(&self, input: &EstimateInput) -> Option<Estimate> {
+        self.tiers.iter().find_map(|t| t.estimate(input))
+    }
+}
+
+/// The shared default pipeline every workload constructor routes
+/// through (built once; tiers are stateless).
+pub fn default_pipeline() -> &'static EstimationPipeline {
+    static PIPELINE: OnceLock<EstimationPipeline> = OnceLock::new();
+    PIPELINE.get_or_init(EstimationPipeline::paper_default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::MemoryEstimate;
+    use crate::workloads::{dnn, llm, mix, rodinia};
+
+    #[test]
+    fn tiers_dispatch_by_input_kind() {
+        let p = default_pipeline();
+        let bench = rodinia::by_name("gaussian").unwrap();
+        let kr = bench.kernel_resource();
+        let e = p.estimate(&EstimateInput::Kernel {
+            resource: &kr,
+            total_gpcs: 7,
+        });
+        assert_eq!(e.method, EstimationMethod::CompilerAnalysis);
+        assert!(!e.is_unknown());
+        assert_eq!(e.lo_gb(), e.hi_gb(), "compiler tier is exact");
+
+        let d = dnn::vgg16_train();
+        let e = p.estimate(&EstimateInput::Model {
+            model: &d.model,
+            batch: d.batch,
+            opt: d.opt,
+            demand_gpcs: d.demand_gpcs,
+        });
+        assert_eq!(e.method, EstimationMethod::ModelSize);
+        assert!(e.lo_gb() < e.point_gb(), "fragmentation slack widens the band");
+        assert_eq!(e.hi_gb(), e.point_gb());
+
+        let e = p.estimate(&EstimateInput::Dynamic { demand_gpcs: 2 });
+        assert!(e.is_unknown());
+        assert_eq!(e.method, EstimationMethod::TimeSeries);
+    }
+
+    /// The property the whole redesign hangs on: for every job of every
+    /// paper mix, the pipeline-produced estimate collapses to exactly
+    /// the legacy flat `MemoryEstimate` the old constructors baked in.
+    #[test]
+    fn default_pipeline_reproduces_legacy_estimates_on_all_paper_mixes() {
+        use crate::config::DEFAULT_SEED;
+        let names: Vec<&str> = mix::RODINIA_MIXES
+            .iter()
+            .chain(&mix::ML_MIXES)
+            .chain(&mix::LLM_MIXES)
+            .copied()
+            .collect();
+        let mut checked = 0usize;
+        for name in names {
+            let m = mix::by_name(name, DEFAULT_SEED).unwrap();
+            for job in &m.jobs {
+                // Re-derive the legacy value straight from the tier
+                // functions (the pre-pipeline construction path).
+                let legacy = match job.est.method {
+                    EstimationMethod::CompilerAnalysis => {
+                        let bench = rodinia::by_name(&job.name).unwrap();
+                        MemoryEstimate {
+                            mem_gb: analyze(&bench.kernel_resource(), 7).mem_gb,
+                            compute_gpcs: analyze(&bench.kernel_resource(), 7).gpcs_folded,
+                            method: EstimationMethod::CompilerAnalysis,
+                        }
+                    }
+                    EstimationMethod::ModelSize => MemoryEstimate {
+                        mem_gb: job.true_mem_gb, // DNN jobs: estimate == DNNMem total
+                        compute_gpcs: job.est.compute_gpcs,
+                        method: EstimationMethod::ModelSize,
+                    },
+                    EstimationMethod::TimeSeries => MemoryEstimate {
+                        mem_gb: 0.0,
+                        compute_gpcs: job.est.compute_gpcs,
+                        method: EstimationMethod::TimeSeries,
+                    },
+                };
+                assert_eq!(job.est.to_legacy(), legacy, "{name}/{}", job.name);
+                assert_eq!(job.est.generation, 0, "a-priori estimates are generation 0");
+                checked += 1;
+            }
+        }
+        assert!(checked > 200, "swept {checked} jobs");
+        // and the dynamic tier: every LLM template starts unknown
+        for w in llm::all() {
+            assert!(w.job(DEFAULT_SEED).est.is_unknown());
+        }
+    }
+}

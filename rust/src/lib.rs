@@ -21,9 +21,17 @@
 //!   reachability, the max-reachability allocator (paper Alg. 2/3), and
 //!   transactional [`mig::PartitionPlan`] reconfigurations (validated,
 //!   cost-modeled, all-or-nothing via `begin`/`commit`).
-//! * [`estimator`] — compile-time analysis stand-in + DNNMem-style model
-//!   size estimation.
-//! * [`predictor`] — time-series peak-memory prediction (paper Alg. 1).
+//! * [`estimator`] — the estimation *pipeline*: an
+//!   [`estimator::Estimator`] tier trait (compile-time analysis,
+//!   DNNMem model sizing, time-series/unknown) behind one entry point
+//!   producing confidence-banded [`estimator::Estimate`]s, plus the
+//!   runtime [`estimator::MemoryBelief`] ledger the orchestrator owns:
+//!   per-job beliefs refined by allocator observations, OOMs, and
+//!   converged predictions — the only memory knowledge scheduling
+//!   policies may consult.
+//! * [`predictor`] — time-series peak-memory prediction (paper Alg. 1):
+//!   the fit engines and the per-launch `JobMonitor` the belief ledger
+//!   drives (the simulator emits observations; it no longer predicts).
 //! * [`trace`] — synthetic PyTorch-allocator traces for dynamic workloads.
 //! * [`workloads`] — Rodinia / DNN / LLM workload models and the paper's
 //!   job mixes (Tables 1–2), plus per-job arrival times
@@ -46,10 +54,12 @@
 //!   Scheme knobs are first-class tunables
 //!   ([`scheduler::SchemeAKnobs`] / [`scheduler::SchemeBKnobs`]), and
 //!   [`scheduler::ShardedPolicy`] lifts any single-GPU policy to a
-//!   multi-GPU fleet.
+//!   multi-GPU fleet. The orchestrator owns the per-job belief ledger;
+//!   policies place/fuse/restart against `ctx.belief(id)` only.
 //! * [`tuner`] — policy-search sweeps (`migm tune`): a typed
 //!   [`tuner::ParamSpace`] over the scheduler knobs (Scheme A ladder,
-//!   Scheme B fusion/reuse thresholds, predictor, arrival intensity),
+//!   Scheme B fusion/reuse thresholds, predictor, belief z-score /
+//!   convergence window / safety margin, arrival intensity),
 //!   grid / seeded-random / successive-halving generators, and a
 //!   thread-parallel evaluator that scores candidates through the real
 //!   orchestrator on paper mixes and synthetic multi-GPU fleets,

@@ -7,11 +7,21 @@
 //! confidence band over the residuals, and projects the peak *physical*
 //! memory at the workload's final iteration.
 //!
+//! This module is pure mechanism. The *state* lives elsewhere: the
+//! simulator emits observations
+//! ([`SimEvent::MemObserved`](crate::sim::SimEvent)) instead of fitting
+//! them, and the orchestrator-owned
+//! [`BeliefLedger`](crate::estimator::BeliefLedger) owns one
+//! [`JobMonitor`] per dynamic launch, turning convergence into
+//! predictive early restarts and confidence-band refinements of the
+//! job's [`MemoryBelief`](crate::estimator::MemoryBelief).
+//!
 //! Two interchangeable engines implement [`FitEngine`]:
-//! * [`host::HostFit`] — pure-rust f64 implementation (default in the
-//!   simulator's hot loop);
+//! * [`host::HostFit`] — pure-rust f64 implementation (default under
+//!   the belief ledger's online loop);
 //! * `runtime::PjrtPredictor` — the AOT-compiled Pallas kernel, used on
-//!   the serving path and validated against the host engine.
+//!   the serving path (fed from the ledger's external KV series) and
+//!   validated against the host engine.
 
 pub mod host;
 pub mod monitor;

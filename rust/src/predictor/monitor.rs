@@ -1,11 +1,13 @@
 //! Per-job prediction monitor: the online loop of paper Algorithm 1.
 //!
-//! The scheduler owns one [`JobMonitor`] per dynamically-allocating job.
-//! Every iteration it pushes the allocator observation; the monitor
+//! The orchestrator's belief ledger
+//! ([`BeliefLedger`](crate::estimator::BeliefLedger)) owns one
+//! [`JobMonitor`] per dynamically-allocating launch. Every iteration it
+//! pushes the allocator observation the simulator emitted; the monitor
 //! re-fits, projects the peak physical memory at the job's horizon, and
 //! reports convergence once the projection stabilizes. A converged
 //! projection above the partition size triggers a predictive early
-//! restart (paper §2.3/§5.2.2).
+//! restart (paper §2.3/§5.2.2), executed through `GpuSim::preempt`.
 
 use super::host::fit_one;
 use super::{FitStats, Observation, Z_99};

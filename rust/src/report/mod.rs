@@ -361,9 +361,9 @@ pub fn preliminary_a30(seed: u64) -> (PreliminaryResult, Table) {
     // next-largest: bump every estimate one class up
     let mut loose_mix = m.clone();
     for j in &mut loose_mix.jobs {
-        let prof = spec.tightest_profile(j.est.mem_gb, 0).unwrap_or(0);
+        let prof = spec.tightest_profile(j.est.point_gb(), 0).unwrap_or(0);
         if let Some(next) = spec.next_larger_profile(prof) {
-            j.est.mem_gb = spec.profiles[next].mem_gb;
+            j.est = j.est.with_point(spec.profiles[next].mem_gb);
         }
     }
     let loose = scheduler::scheme_a::run(spec.clone(), &loose_mix, false);
@@ -397,32 +397,28 @@ pub fn preliminary_a30(seed: u64) -> (PreliminaryResult, Table) {
 
 /// E11 — online arrivals: one row per policy over a Poisson arrival
 /// stream, reporting throughput/energy plus the per-arrival latency
-/// percentiles the batch experiments cannot express.
+/// percentiles the batch experiments cannot express, and the belief
+/// ledger's predicted-vs-actual peak-memory error.
 #[derive(Debug, Clone)]
 pub struct OnlineRow {
     pub policy: &'static str,
     pub metrics: BatchMetrics,
     pub latency: crate::metrics::LatencyStats,
+    /// Predicted-vs-actual peak-memory accuracy (from the run's belief
+    /// ledger; zero-valued for rows without prediction/dynamic jobs).
+    pub prediction: crate::estimator::PredictionAccuracy,
 }
 
-/// Run the three policies over the same Poisson-arrival Ht2 stream
-/// (`rate_jps` jobs/second) through the orchestrator.
-pub fn online_arrivals(seed: u64, rate_jps: f64) -> (Vec<OnlineRow>, Table) {
-    let spec = Arc::new(GpuSpec::a100_40gb());
-    let m = mix::ht2(seed).with_poisson_arrivals(rate_jps, seed);
-    let mut rows = Vec::new();
-    for (policy, scheme) in [
-        ("baseline", Scheme::Baseline),
-        ("scheme-A", Scheme::A),
-        ("scheme-B", Scheme::B),
-    ] {
-        let r = run_mix(spec.clone(), &m, scheme, false);
-        rows.push(OnlineRow {
-            policy,
-            metrics: r.metrics,
-            latency: r.latency,
-        });
+/// Rendered error cell: "-" until some prediction converged.
+fn pred_err_cell(p: &crate::estimator::PredictionAccuracy) -> String {
+    if p.n_predicted == 0 {
+        "-".into()
+    } else {
+        format!("{:.1}%", p.mean_abs_pct_err * 100.0)
     }
+}
+
+fn render_online(rows: &[OnlineRow]) -> Table {
     let mut t = Table::new(&[
         "policy",
         "makespan (s)",
@@ -431,8 +427,9 @@ pub fn online_arrivals(seed: u64, rate_jps: f64) -> (Vec<OnlineRow>, Table) {
         "reconf (n/s)",
         "queue p50/p99 (s)",
         "turnaround p50/p99 (s)",
+        "pred-err",
     ]);
-    for r in &rows {
+    for r in rows {
         t.row(vec![
             r.policy.to_string(),
             format!("{:.1}", r.metrics.makespan_s),
@@ -447,8 +444,38 @@ pub fn online_arrivals(seed: u64, rate_jps: f64) -> (Vec<OnlineRow>, Table) {
                 "{:.2} / {:.2}",
                 r.latency.p50_turnaround_s, r.latency.p99_turnaround_s
             ),
+            pred_err_cell(&r.prediction),
         ]);
     }
+    t
+}
+
+/// Run the three policies over the same Poisson-arrival stream — Ht2
+/// plus one dynamic (Qwen2) job so the predicted-vs-actual column is
+/// fed end to end — at `rate_jps` jobs/second through the
+/// orchestrator. The MIG schemes run with prediction enabled (the
+/// grow-on-demand path: 5 GB → OOM → 10 GB → predictive restart →
+/// 20 GB); the baseline's full GPU never restarts.
+pub fn online_arrivals(seed: u64, rate_jps: f64) -> (Vec<OnlineRow>, Table) {
+    let spec = Arc::new(GpuSpec::a100_40gb());
+    let mut m = mix::ht2(seed);
+    m.jobs.push(llm::qwen2_7b().job(seed));
+    let m = m.with_poisson_arrivals(rate_jps, seed);
+    let mut rows = Vec::new();
+    for (policy, scheme, pred) in [
+        ("baseline", Scheme::Baseline, false),
+        ("scheme-A", Scheme::A, true),
+        ("scheme-B", Scheme::B, true),
+    ] {
+        let r = run_mix(spec.clone(), &m, scheme, pred);
+        rows.push(OnlineRow {
+            policy,
+            metrics: r.metrics,
+            latency: r.latency,
+            prediction: r.prediction,
+        });
+    }
+    let t = render_online(&rows);
     (rows, t)
 }
 
@@ -554,24 +581,31 @@ mod tests {
         assert_eq!(t.rows.len(), 3);
         // the online report surfaces reconfiguration cost too
         assert!(t.header.contains(&"reconf (n/s)".to_string()));
+        assert!(t.header.contains(&"pred-err".to_string()));
         assert_eq!(rows[0].metrics.reconfig_time_s, 0.0, "baseline is zero-cost");
         assert!(rows[2].metrics.reconfig_time_s > 0.0, "scheme-B pays for windows");
         for r in &rows {
-            assert_eq!(r.metrics.n_jobs, 18); // Ht2
+            assert_eq!(r.metrics.n_jobs, 19); // Ht2 + one dynamic job
             assert!(r.latency.p99_turnaround_s >= r.latency.p50_turnaround_s);
             assert!(r.latency.p99_queue_s >= r.latency.p50_queue_s);
         }
-        // MIG policies must not queue arrivals longer than the
-        // sequential baseline does.
-        let base = &rows[0];
+        // The dynamic job never converges a prediction on the baseline's
+        // full GPU (nothing to outgrow); the MIG schemes preempt it off
+        // the grow-on-demand slice and report the ledger's error.
+        assert_eq!(rows[0].prediction.n_predicted, 0);
         for r in &rows[1..] {
             assert!(
-                r.latency.p99_queue_s <= base.latency.p99_queue_s * 1.5 + 5.0,
-                "{}: queue p99 {} vs baseline {}",
-                r.policy,
-                r.latency.p99_queue_s,
-                base.latency.p99_queue_s
+                r.prediction.n_predicted >= 1,
+                "{}: prediction should converge for the dynamic job",
+                r.policy
             );
+            assert!(
+                r.prediction.mean_abs_pct_err < 0.5,
+                "{}: error {}",
+                r.policy,
+                r.prediction.mean_abs_pct_err
+            );
+            assert!(r.metrics.early_restarts >= 1, "{}", r.policy);
         }
     }
 
@@ -625,6 +659,48 @@ mod tests {
         assert_eq!(cells[8], "1.4%"); // 0.7s of a 50s makespan
         assert_eq!(cells[9], "1");
         assert_eq!(cells[10], "2");
+    }
+
+    #[test]
+    fn online_table_pins_prediction_error_field() {
+        // Pin the report surface: the online table carries the belief
+        // ledger's predicted-vs-actual peak-memory error column,
+        // rendered as a percentage (or "-" before any convergence).
+        use crate::estimator::PredictionAccuracy;
+        use crate::metrics::LatencyStats;
+        let metrics = BatchMetrics {
+            n_jobs: 5,
+            makespan_s: 100.0,
+            throughput_jps: 0.05,
+            energy_j: 5000.0,
+            energy_per_job_j: 1000.0,
+            mem_utilization: 0.4,
+            avg_turnaround_s: 40.0,
+            reconfig_ops: 2,
+            reconfig_windows: 1,
+            reconfig_time_s: 0.2,
+            oom_restarts: 1,
+            early_restarts: 1,
+        };
+        let with_pred = OnlineRow {
+            policy: "scheme-B",
+            metrics,
+            latency: LatencyStats::default(),
+            prediction: PredictionAccuracy {
+                n_tracked: 1,
+                n_predicted: 2,
+                mean_abs_pct_err: 0.032,
+            },
+        };
+        let without = OnlineRow {
+            policy: "baseline",
+            prediction: PredictionAccuracy::default(),
+            ..with_pred.clone()
+        };
+        let t = render_online(&[without, with_pred]);
+        assert_eq!(*t.header.last().unwrap(), "pred-err");
+        assert_eq!(t.rows[0].last().unwrap(), "-");
+        assert_eq!(t.rows[1].last().unwrap(), "3.2%");
     }
 
     #[test]

@@ -93,17 +93,18 @@ impl SchedulingPolicy for BaselinePolicy {
     fn on_early_restart_signal(
         &mut self,
         _ctx: &PolicyCtx,
-        mut ev: JobEvent,
+        ev: JobEvent,
         _iter: usize,
-        predicted_peak_gb: f64,
+        _predicted_peak_gb: f64,
     ) -> Vec<Action> {
         // The full GPU is the largest slice there is; a restart cannot
-        // move anywhere bigger. Requeue at the back with the refined
-        // estimate (only reachable when prediction is enabled).
-        ev.job.est.mem_gb = predicted_peak_gb;
+        // move anywhere bigger. Requeue at the back — the orchestrator
+        // already refined the job's belief with the projection (only
+        // reachable when prediction is enabled).
         self.queue.push_back(PendingJob {
             spec: ev.job,
             submit_time: ev.submit_time,
+            belief: ev.belief,
         });
         self.launch_next()
     }

@@ -1,24 +1,115 @@
-//! The pre-orchestrator scheduler loops, preserved verbatim as the
-//! golden reference for the policy-parity tests (`super::parity`). The
-//! public `run()` entry points now drive the trait-based policies
-//! through the [`super::Orchestrator`]; these monolithic loops exist
-//! only to prove, mix by mix, that the rewrite is bit-for-bit faithful.
+//! The pre-orchestrator scheduler loops, preserved as the golden
+//! reference for the policy-parity tests (`super::parity`). The public
+//! `run()` entry points now drive the trait-based policies through the
+//! [`super::Orchestrator`]; these monolithic loops exist only to prove,
+//! mix by mix, that the rewrite is bit-for-bit faithful.
+//!
+//! The loops are deliberately self-contained: they keep their own job
+//! queue type, their own sentinel-era target-profile/OOM-bump rules,
+//! and their own per-launch [`JobMonitor`]s (the [`Monitors`] driver
+//! replicates the old in-sim prediction logic exactly — same
+//! convergence config, same `peak > slice + EPS` threshold, same
+//! kill-at-the-observation-instant timing — against the engine's
+//! emitted [`SimEvent::MemObserved`] stream). They do **not** touch the
+//! belief ledger: parity against them is precisely what proves the
+//! ledger plumbing changes no decision.
 //!
 //! Do not extend this module — new scheduling behavior belongs in
 //! [`super::policy`] implementations.
 
 use std::collections::BTreeMap;
+use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::mig::{GpuSpec, InstanceId};
-use crate::sim::{GpuSim, SimEvent};
+use crate::predictor::{ConvergenceCfg, JobMonitor, PredictionOutcome};
+use crate::sim::{GpuSim, JobId, SimEvent};
 use crate::workloads::mix::Mix;
+use crate::workloads::{ComputeModel, JobKind, JobSpec};
 
-use super::{
-    bump_estimate_after_oom, class_of, finalize, largest_profile, target_profile, PendingJob,
-    RunResult,
-};
+use super::{class_of, finalize, largest_profile, smallest_profile, RunResult};
+
+/// A queued job in the legacy loops (no belief id — the golden loops
+/// predate the ledger).
+struct LegacyJob {
+    spec: JobSpec,
+    submit_time: f64,
+}
+
+/// The sentinel-era placement rule: unknown-upfront time-series jobs
+/// start smallest, everything else takes the tightest fit.
+fn legacy_target_profile(spec: &GpuSpec, job: &JobSpec) -> usize {
+    if job.est.is_unknown() {
+        return smallest_profile(spec);
+    }
+    spec.tightest_profile(job.est.point_gb(), job.est.compute_gpcs)
+        .unwrap_or_else(|| largest_profile(spec))
+}
+
+/// The legacy OOM bump: the estimate becomes the next-larger profile's
+/// memory (the whole GPU off the top of the ladder).
+fn legacy_bump_after_oom(spec: &GpuSpec, job: &mut JobSpec, cur_profile: usize) {
+    let next = match spec.next_larger_profile(cur_profile) {
+        Some(next) => spec.profiles[next].mem_gb,
+        None => spec.total_mem_gb,
+    };
+    job.est = job.est.with_point(next);
+}
+
+/// The old in-sim prediction loop, verbatim, driven from outside: one
+/// fresh monitor per launch (LLM + prediction only), convergence above
+/// the launch slice preempts at the observation instant.
+struct Monitors {
+    enabled: bool,
+    mons: HashMap<JobId, (JobMonitor, f64)>,
+}
+
+impl Monitors {
+    fn new(enabled: bool) -> Monitors {
+        Monitors {
+            enabled,
+            mons: HashMap::new(),
+        }
+    }
+
+    /// Launch through the sim, opening the launch's monitor if due.
+    fn launch(&mut self, sim: &mut GpuSim, spec: JobSpec, inst: InstanceId, t: f64) {
+        let mon = match (&spec.compute, self.enabled, spec.kind) {
+            (ComputeModel::Iterative(it), true, JobKind::Llm) => {
+                Some(JobMonitor::new(it.trace.n_iters, ConvergenceCfg::default()))
+            }
+            _ => None,
+        };
+        let cap = sim.mgr.mem_gb_of(inst).expect("launch instance exists");
+        let id = sim.launch(spec, inst, t);
+        if let Some(m) = mon {
+            self.mons.insert(id, (m, cap));
+        }
+    }
+
+    /// `sim.advance()` with the old prediction semantics folded back
+    /// in: observations are consumed here, and a converged projection
+    /// above the slice returns the resulting `Preempted` event.
+    fn advance(&mut self, sim: &mut GpuSim) -> Option<SimEvent> {
+        loop {
+            match sim.advance() {
+                Some(SimEvent::MemObserved { job, iter, obs, .. }) => {
+                    if let Some((mon, cap)) = self.mons.get_mut(&job) {
+                        if let PredictionOutcome::Converged { peak_physical_gb } = mon.push(obs)
+                        {
+                            if peak_physical_gb > *cap + crate::sim::EPS {
+                                self.mons.remove(&job);
+                                return Some(sim.preempt(job, iter, peak_physical_gb));
+                            }
+                        }
+                    }
+                }
+                other => return other,
+            }
+        }
+    }
+}
 
 /// Legacy sequential baseline (one full-GPU instance, jobs in order).
 pub fn baseline_run(spec: Arc<GpuSpec>, mix: &Mix) -> RunResult {
@@ -59,13 +150,14 @@ fn class_profiles(spec: &GpuSpec, cap_gb: f64) -> Vec<usize> {
 /// Legacy Scheme A (Algorithm 4) batch loop.
 pub fn scheme_a_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResult {
     let mut sim = GpuSim::new(spec.clone(), prediction);
+    let mut mons = Monitors::new(prediction);
     let ladder = super::size_ladder(&spec);
     let n_jobs = mix.jobs.len();
 
-    let mut groups: BTreeMap<usize, VecDeque<PendingJob>> = BTreeMap::new();
+    let mut groups: BTreeMap<usize, VecDeque<LegacyJob>> = BTreeMap::new();
     for job in &mix.jobs {
-        let class = class_of(&spec, job.est.mem_gb.max(0.0));
-        groups.entry(class).or_default().push_back(PendingJob {
+        let class = class_of(&spec, job.est.point_gb().max(0.0));
+        groups.entry(class).or_default().push_back(LegacyJob {
             spec: job.clone(),
             submit_time: 0.0,
         });
@@ -97,7 +189,7 @@ pub fn scheme_a_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResul
         assert!(!instances.is_empty(), "class {class} produced no slices");
         sim.begin_reconfig(destroyed + instances.len());
         while sim.is_reconfiguring() {
-            match sim.advance() {
+            match mons.advance(&mut sim) {
                 Some(SimEvent::ReconfigDone) => break,
                 Some(_) => {}
                 None => break,
@@ -105,13 +197,16 @@ pub fn scheme_a_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResul
         }
 
         let k = instances.len();
-        let mut local: Vec<VecDeque<PendingJob>> = vec![VecDeque::new(); k];
+        let mut local: Vec<VecDeque<LegacyJob>> = Vec::new();
+        for _ in 0..k {
+            local.push(VecDeque::new());
+        }
         for (i, job) in queue.into_iter().enumerate() {
             local[i % k].push_back(job);
         }
         for (slot, inst) in instances.iter().enumerate() {
             if let Some(pj) = local[slot].pop_front() {
-                sim.launch(pj.spec, *inst, pj.submit_time);
+                mons.launch(&mut sim, pj.spec, *inst, pj.submit_time);
             }
         }
 
@@ -120,11 +215,11 @@ pub fn scheme_a_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResul
             if all_empty && sim.n_running() == 0 {
                 break;
             }
-            match sim.advance() {
+            match mons.advance(&mut sim) {
                 Some(SimEvent::Finished { instance, .. }) => {
                     let slot = instances.iter().position(|&i| i == instance).unwrap();
                     if let Some(pj) = local[slot].pop_front() {
-                        sim.launch(pj.spec, instance, pj.submit_time);
+                        mons.launch(&mut sim, pj.spec, instance, pj.submit_time);
                     }
                 }
                 Some(SimEvent::Oom {
@@ -133,15 +228,15 @@ pub fn scheme_a_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResul
                     ..
                 }) => {
                     let cur_prof = sim.mgr.profile_of(instance).unwrap();
-                    bump_estimate_after_oom(&spec, &mut job_spec, cur_prof);
-                    let new_class = class_of(&spec, job_spec.est.mem_gb);
-                    groups.entry(new_class).or_default().push_back(PendingJob {
+                    legacy_bump_after_oom(&spec, &mut job_spec, cur_prof);
+                    let new_class = class_of(&spec, job_spec.est.point_gb());
+                    groups.entry(new_class).or_default().push_back(LegacyJob {
                         spec: job_spec,
                         submit_time: 0.0,
                     });
                     let slot = instances.iter().position(|&i| i == instance).unwrap();
                     if let Some(pj) = local[slot].pop_front() {
-                        sim.launch(pj.spec, instance, pj.submit_time);
+                        mons.launch(&mut sim, pj.spec, instance, pj.submit_time);
                     }
                 }
                 Some(SimEvent::Preempted {
@@ -150,18 +245,19 @@ pub fn scheme_a_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResul
                     predicted_peak_gb,
                     ..
                 }) => {
-                    job_spec.est.mem_gb = predicted_peak_gb;
+                    job_spec.est = job_spec.est.with_point(predicted_peak_gb);
                     let new_class = class_of(&spec, predicted_peak_gb);
-                    groups.entry(new_class).or_default().push_back(PendingJob {
+                    groups.entry(new_class).or_default().push_back(LegacyJob {
                         spec: job_spec,
                         submit_time: 0.0,
                     });
                     let slot = instances.iter().position(|&i| i == instance).unwrap();
                     if let Some(pj) = local[slot].pop_front() {
-                        sim.launch(pj.spec, instance, pj.submit_time);
+                        mons.launch(&mut sim, pj.spec, instance, pj.submit_time);
                     }
                 }
                 Some(SimEvent::ReconfigDone) => {}
+                Some(SimEvent::MemObserved { .. }) => unreachable!("consumed by Monitors"),
                 None => break,
             }
         }
@@ -176,22 +272,23 @@ pub fn scheme_a_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResul
 /// Legacy Scheme B (Algorithm 5) batch loop.
 pub fn scheme_b_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResult {
     let mut sim = GpuSim::new(spec.clone(), prediction);
+    let mut mons = Monitors::new(prediction);
     let n_jobs = mix.jobs.len();
-    let mut queue: VecDeque<PendingJob> = mix
+    let mut queue: VecDeque<LegacyJob> = mix
         .jobs
         .iter()
-        .map(|j| PendingJob {
+        .map(|j| LegacyJob {
             spec: j.clone(),
             submit_time: 0.0,
         })
         .collect();
     let mut idle: Vec<InstanceId> = Vec::new();
-    let mut pending_launch: Option<(PendingJob, usize)> = None;
+    let mut pending_launch: Option<(LegacyJob, usize)> = None;
 
     loop {
         while pending_launch.is_none() {
             let Some(head) = queue.front() else { break };
-            let prof = target_profile(&spec, &head.spec);
+            let prof = legacy_target_profile(&spec, &head.spec);
             let want_mem = spec.profiles[prof].mem_gb;
 
             if let Some(pos) = idle
@@ -200,7 +297,7 @@ pub fn scheme_b_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResul
             {
                 let inst = idle.swap_remove(pos);
                 let pj = queue.pop_front().unwrap();
-                sim.launch(pj.spec, inst, pj.submit_time);
+                mons.launch(&mut sim, pj.spec, inst, pj.submit_time);
                 continue;
             }
             if !sim.is_reconfiguring() && sim.mgr.can_alloc(prof) {
@@ -230,7 +327,7 @@ pub fn scheme_b_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResul
             break;
         }
 
-        match sim.advance() {
+        match mons.advance(&mut sim) {
             Some(SimEvent::Finished { instance, .. }) => {
                 idle.push(instance);
             }
@@ -240,9 +337,9 @@ pub fn scheme_b_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResul
                 ..
             }) => {
                 let cur_prof = sim.mgr.profile_of(instance).unwrap();
-                bump_estimate_after_oom(&spec, &mut job_spec, cur_prof);
+                legacy_bump_after_oom(&spec, &mut job_spec, cur_prof);
                 idle.push(instance);
-                queue.push_back(PendingJob {
+                queue.push_back(LegacyJob {
                     spec: job_spec,
                     submit_time: 0.0,
                 });
@@ -253,9 +350,9 @@ pub fn scheme_b_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResul
                 predicted_peak_gb,
                 ..
             }) => {
-                job_spec.est.mem_gb = predicted_peak_gb;
+                job_spec.est = job_spec.est.with_point(predicted_peak_gb);
                 idle.push(instance);
-                queue.push_back(PendingJob {
+                queue.push_back(LegacyJob {
                     spec: job_spec,
                     submit_time: 0.0,
                 });
@@ -266,9 +363,10 @@ pub fn scheme_b_run(spec: Arc<GpuSpec>, mix: &Mix, prediction: bool) -> RunResul
                         .mgr
                         .alloc(prof)
                         .expect("planned reconfiguration must make the profile placeable");
-                    sim.launch(pj.spec, inst, pj.submit_time);
+                    mons.launch(&mut sim, pj.spec, inst, pj.submit_time);
                 }
             }
+            Some(SimEvent::MemObserved { .. }) => unreachable!("consumed by Monitors"),
             None => {
                 if queue.is_empty() && pending_launch.is_none() {
                     break;

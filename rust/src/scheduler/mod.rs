@@ -11,9 +11,13 @@
 //!   whose modeled per-op cost the simulator charges as wall-clock (see
 //!   the [`policy`] module docs for the plan/transaction model).
 //! * [`orchestrator`] — the [`Orchestrator`]: owns the event loop, one
-//!   or more [`GpuSim`]s, and the arrival queue; applies policy
-//!   actions (`begin` → window → `commit` for plans); also carries the
-//!   serving front-end's placement and submission accounting.
+//!   or more [`GpuSim`]s, the arrival queue, and the per-job
+//!   [`BeliefLedger`](crate::estimator::BeliefLedger) (estimates
+//!   refined by emitted allocator observations, OOMs, and converged
+//!   predictions — policies read `ctx.belief(id)`, never `job.est`);
+//!   applies policy actions (`begin` → window → `commit` for plans);
+//!   also carries the serving front-end's placement and submission
+//!   accounting.
 //!
 //! The paper's schemes are policy implementations:
 //!
@@ -55,7 +59,7 @@ pub mod scheme_b;
 use std::sync::Arc;
 
 use crate::config::{ExperimentConfig, Scheme};
-use crate::estimator::EstimationMethod;
+use crate::estimator::{BeliefId, Estimate, PredictionAccuracy};
 use crate::metrics::{BatchMetrics, LatencyStats};
 use crate::mig::GpuSpec;
 use crate::sim::{GpuSim, JobRecord, SimCounters};
@@ -77,23 +81,31 @@ pub struct RunResult {
     /// Per-arrival queueing/turnaround percentiles (meaningful for
     /// online runs; degenerate-but-correct for batch runs).
     pub latency: LatencyStats,
+    /// Predicted-vs-actual peak-memory accuracy from the belief ledger
+    /// (zeroed for runs without prediction or dynamic jobs).
+    pub prediction: PredictionAccuracy,
 }
 
-/// A queued job with its submission time (0 for batch submission).
+/// A queued job with its submission time (0 for batch submission) and
+/// the id of its [`MemoryBelief`](crate::estimator::MemoryBelief) in
+/// the orchestrator's ledger. The belief id sticks to the job through
+/// every requeue/restart — it is how policies look the job's current
+/// memory knowledge up (`ctx.belief(job.belief)`).
 #[derive(Debug, Clone)]
 pub struct PendingJob {
     pub spec: JobSpec,
     pub submit_time: f64,
+    pub belief: BeliefId,
 }
 
-/// Pick the target profile for a job: tightest memory fit, compute as a
-/// soft constraint; unknown-memory (time-series) jobs start on the
-/// smallest slice (grow-on-demand, paper §5.2.2).
-pub fn target_profile(spec: &GpuSpec, job: &JobSpec) -> usize {
-    if job.est.method == EstimationMethod::TimeSeries && job.est.mem_gb <= 0.0 {
+/// Pick the target profile for a memory requirement: tightest fit,
+/// compute as a soft constraint; the explicit unknown-upfront state
+/// starts on the smallest slice (grow-on-demand, paper §5.2.2).
+pub fn target_profile(spec: &GpuSpec, est: &Estimate) -> usize {
+    if est.is_unknown() {
         return smallest_profile(spec);
     }
-    spec.tightest_profile(job.est.mem_gb, job.est.compute_gpcs)
+    spec.tightest_profile(est.point_gb(), est.compute_gpcs)
         .unwrap_or_else(|| largest_profile(spec))
 }
 
@@ -135,15 +147,6 @@ pub fn class_of(spec: &GpuSpec, mem_gb: f64) -> usize {
     spec.class_of(mem_gb)
 }
 
-/// Grow a requeued job's estimate after an OOM on `cur_profile`
-/// (paper: "reschedules the same on the next largest slice").
-pub fn bump_estimate_after_oom(spec: &GpuSpec, job: &mut JobSpec, cur_profile: usize) {
-    match spec.next_larger_profile(cur_profile) {
-        Some(next) => job.est.mem_gb = spec.profiles[next].mem_gb,
-        None => job.est.mem_gb = spec.total_mem_gb,
-    }
-}
-
 /// Finalize metrics from a finished sim. `n_jobs` is the number of
 /// *submitted* jobs; completion records may differ (e.g. restart
 /// duplicates), so the per-job means divide by `n_jobs`, not by the
@@ -178,6 +181,7 @@ pub fn finalize(sim: &GpuSim, n_jobs: usize) -> RunResult {
         records,
         counters: sim.counters,
         latency: LatencyStats::from_samples(&queue_s, &turn_s),
+        prediction: PredictionAccuracy::default(),
     }
 }
 
@@ -222,27 +226,51 @@ mod tests {
     fn unknown_memory_jobs_start_smallest() {
         let spec = GpuSpec::a100_40gb();
         let job = crate::workloads::llm::qwen2_7b().job(1);
-        assert_eq!(target_profile(&spec, &job), smallest_profile(&spec));
+        assert!(job.est.is_unknown());
+        assert_eq!(target_profile(&spec, &job.est), smallest_profile(&spec));
     }
 
     #[test]
     fn static_jobs_get_tightest_profile() {
         let spec = GpuSpec::a100_40gb();
         let job = rodinia::by_name("euler3d").unwrap().job(7);
-        let p = target_profile(&spec, &job);
+        let p = target_profile(&spec, &job.est);
         assert_eq!(spec.profiles[p].mem_gb, 20.0);
     }
 
+    /// Enforce the redesign's contract: no scheduling-policy
+    /// implementation reads `job.est` (or any `.est` field) on the
+    /// decision path — every placement/fusion/restart decision goes
+    /// through the orchestrator's `MemoryBelief` ledger
+    /// (`ctx.belief(...)`). Grep-style so a regression cannot slip in
+    /// without deleting this test.
     #[test]
-    fn oom_bump_walks_the_ladder() {
-        let spec = GpuSpec::a100_40gb();
-        let mut job = crate::workloads::llm::qwen2_7b().job(1);
-        bump_estimate_after_oom(&spec, &mut job, 0);
-        assert_eq!(job.est.mem_gb, 10.0);
-        bump_estimate_after_oom(&spec, &mut job, 1);
-        assert_eq!(job.est.mem_gb, 20.0);
-        bump_estimate_after_oom(&spec, &mut job, 4);
-        assert_eq!(job.est.mem_gb, 40.0);
+    fn policies_never_read_construction_time_estimates() {
+        let sources = [
+            ("policy.rs", include_str!("policy.rs")),
+            ("baseline.rs", include_str!("baseline.rs")),
+            ("scheme_a.rs", include_str!("scheme_a.rs")),
+            ("scheme_b.rs", include_str!("scheme_b.rs")),
+            ("fleet.rs", include_str!("fleet.rs")),
+        ];
+        for (name, src) in sources {
+            for (i, line) in src.lines().enumerate() {
+                // `.estimate(...)` (the belief accessor) is the only
+                // allowed `.est`-prefixed member; a bare `.est` field
+                // access is the forbidden legacy path.
+                let mut from = 0;
+                while let Some(pos) = line[from..].find(".est") {
+                    let abs = from + pos;
+                    assert!(
+                        line[abs + 4..].starts_with("imate"),
+                        "{name}:{}: policy code must consult the belief ledger, \
+                         not construction-time estimates: `{line}`",
+                        i + 1
+                    );
+                    from = abs + 4;
+                }
+            }
+        }
     }
 
     #[test]

@@ -24,9 +24,10 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::estimator::{BeliefConfig, BeliefId, BeliefLedger};
 use crate::metrics::{BatchMetrics, LatencyStats};
 use crate::mig::{GpuSpec, InstanceId, MigError, PartitionPlan};
-use crate::sim::{GpuSim, JobRecord, SimCounters, SimEvent};
+use crate::sim::{GpuSim, JobId, JobRecord, SimCounters, SimEvent};
 use crate::workloads::mix::Mix;
 use crate::workloads::JobSpec;
 
@@ -48,12 +49,28 @@ struct ExternalJob {
     start_s: Option<f64>,
 }
 
+/// Ledger/launch bookkeeping for one running simulator job.
+#[derive(Debug, Clone, Copy)]
+struct ActiveJob {
+    belief: BeliefId,
+    /// Slice capacity captured at launch — the preemption threshold
+    /// (identical to the capacity the old in-sim monitor compared
+    /// against).
+    inst_mem_gb: f64,
+}
+
 /// The event loop that drives policies over one or more simulated GPUs.
 pub struct Orchestrator<P: SchedulingPolicy> {
     gpus: Vec<GpuSim>,
     policy: P,
+    /// Per-job memory beliefs (estimates refined by runtime evidence);
+    /// the single source of memory knowledge for policies and the
+    /// server's KV tracking.
+    beliefs: BeliefLedger,
+    /// Per-GPU map of running simulator jobs to their beliefs.
+    active: Vec<HashMap<JobId, ActiveJob>>,
     /// Future arrivals, sorted by time (stable: ties keep submit order).
-    arrivals: Vec<(f64, JobSpec)>,
+    arrivals: Vec<(f64, BeliefId, JobSpec)>,
     next_arrival: usize,
     n_jobs: usize,
     /// Per-GPU plan whose reconfiguration window is open: destroys are
@@ -67,16 +84,25 @@ pub struct Orchestrator<P: SchedulingPolicy> {
 }
 
 impl<P: SchedulingPolicy> Orchestrator<P> {
-    /// Orchestrator over a fleet of identical-or-mixed GPUs.
+    /// Orchestrator over a fleet of identical-or-mixed GPUs with the
+    /// default belief knobs (`prediction` switches the predictor).
     pub fn new(specs: Vec<Arc<GpuSpec>>, prediction: bool, policy: P) -> Self {
+        Self::with_belief_config(specs, BeliefConfig::new(prediction), policy)
+    }
+
+    /// Full control over the belief configuration (the tuner's
+    /// z-score/window/safety-margin axes come through here).
+    pub fn with_belief_config(specs: Vec<Arc<GpuSpec>>, cfg: BeliefConfig, policy: P) -> Self {
         assert!(!specs.is_empty(), "orchestrator needs at least one GPU");
         let n = specs.len();
         Orchestrator {
             gpus: specs
                 .into_iter()
-                .map(|s| GpuSim::new(s, prediction))
+                .map(|s| GpuSim::new(s, cfg.prediction))
                 .collect(),
             policy,
+            beliefs: BeliefLedger::new(cfg),
+            active: (0..n).map(|_| HashMap::new()).collect(),
             arrivals: Vec::new(),
             next_arrival: 0,
             n_jobs: 0,
@@ -90,6 +116,17 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
     /// The common single-GPU case.
     pub fn single(spec: Arc<GpuSpec>, prediction: bool, policy: P) -> Self {
         Self::new(vec![spec], prediction, policy)
+    }
+
+    /// The belief ledger (per-job memory knowledge).
+    pub fn beliefs(&self) -> &BeliefLedger {
+        &self.beliefs
+    }
+
+    /// Mutable ledger access for external trackers (the serving
+    /// front-end's per-replica KV-growth beliefs).
+    pub fn beliefs_mut(&mut self) -> &mut BeliefLedger {
+        &mut self.beliefs
     }
 
     /// Global simulated time: the furthest-advanced clock in the fleet.
@@ -113,13 +150,15 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
     }
 
     /// Queue one job arrival at time `t` (>= 0). Must be called before
-    /// [`run_to_completion`](Self::run_to_completion).
+    /// [`run_to_completion`](Self::run_to_completion). Opens the job's
+    /// belief, seeded with its pipeline estimate.
     pub fn submit_at(&mut self, spec: JobSpec, t: f64) {
         assert!(
             self.next_arrival == 0,
             "submissions must precede the run"
         );
-        self.arrivals.push((t.max(0.0), spec));
+        let belief = self.beliefs.register(spec.est, spec.true_mem_gb);
+        self.arrivals.push((t.max(0.0), belief, spec));
         self.n_jobs += 1;
     }
 
@@ -145,11 +184,17 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
         assert_eq!(self.gpus.len(), 1, "run_mix is the single-GPU path");
         self.submit_mix(mix);
         self.run_to_completion();
-        finalize(&self.gpus[0], self.n_jobs)
+        let mut r = finalize(&self.gpus[0], self.n_jobs);
+        r.prediction = self.beliefs.accuracy();
+        r
     }
 
     /// Per-GPU results for fleet runs (each finalized over the jobs that
-    /// completed on that GPU).
+    /// completed on that GPU). Note: the belief ledger is fleet-wide,
+    /// not GPU-partitioned, so these per-GPU rows carry a zeroed
+    /// `prediction` field — read prediction accuracy off
+    /// [`fleet_result`](Self::fleet_result) (or [`beliefs`](Self::beliefs))
+    /// instead.
     pub fn results(&self) -> Vec<RunResult> {
         self.gpus
             .iter()
@@ -206,6 +251,7 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
             records,
             counters,
             latency: LatencyStats::from_samples(&queue_s, &turn_s),
+            prediction: self.beliefs.accuracy(),
         }
     }
 
@@ -291,15 +337,16 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
     }
 
     fn deliver_due_arrivals(&mut self) {
-        while let Some(&(t, _)) = self.arrivals.get(self.next_arrival) {
+        while let Some(&(t, belief, _)) = self.arrivals.get(self.next_arrival) {
             if t > self.arrival_gate() + EPS {
                 break;
             }
-            let spec = self.arrivals[self.next_arrival].1.clone();
+            let spec = self.arrivals[self.next_arrival].2.clone();
             self.next_arrival += 1;
             let pj = PendingJob {
                 spec,
                 submit_time: t,
+                belief,
             };
             let acts = self.call_policy(|p, ctx| p.on_submit(ctx, pj));
             self.apply(acts);
@@ -309,52 +356,101 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
     fn dispatch(&mut self, g: GpuId, ev: SimEvent) {
         let acts = match ev {
             SimEvent::Finished {
+                job,
                 spec,
                 instance,
                 submit_time,
-                ..
             } => {
+                let info = self.active[g]
+                    .remove(&job)
+                    .expect("finished job must be active");
                 let ev = JobEvent {
                     gpu: g,
                     job: spec,
                     instance,
                     submit_time,
+                    belief: info.belief,
                 };
                 self.call_policy(|p, ctx| p.on_job_finish(ctx, ev))
             }
             SimEvent::Oom {
+                job,
                 spec,
                 instance,
                 submit_time,
                 iter,
                 mem_gb,
-                ..
             } => {
+                let info = self.active[g]
+                    .remove(&job)
+                    .expect("OOMed job must be active");
+                // Refine before the callback: the paper's "reschedule
+                // on the next largest slice" is a belief update (and
+                // the OOMing footprint is observed evidence for the
+                // band); the policy then requeues against the
+                // refreshed demand.
+                let gpu_spec = self.gpus[g].spec.clone();
+                let cur_prof = self.gpus[g]
+                    .mgr
+                    .profile_of(instance)
+                    .expect("OOM instance still allocated");
+                self.beliefs
+                    .refine_after_oom(info.belief, &gpu_spec, cur_prof, mem_gb);
                 let ev = JobEvent {
                     gpu: g,
                     job: spec,
                     instance,
                     submit_time,
+                    belief: info.belief,
                 };
                 self.call_policy(|p, ctx| p.on_oom(ctx, ev, iter, mem_gb))
             }
             SimEvent::Preempted {
+                job,
                 spec,
                 instance,
                 submit_time,
                 iter,
                 predicted_peak_gb,
-                ..
             } => {
+                let info = self.active[g]
+                    .remove(&job)
+                    .expect("preempted job must be active");
+                // The converged projection (safety-margin-widened)
+                // becomes the demand before the policy requeues.
+                self.beliefs
+                    .refine_from_prediction(info.belief, predicted_peak_gb);
                 let ev = JobEvent {
                     gpu: g,
                     job: spec,
                     instance,
                     submit_time,
+                    belief: info.belief,
                 };
                 self.call_policy(|p, ctx| {
                     p.on_early_restart_signal(ctx, ev, iter, predicted_peak_gb)
                 })
+            }
+            SimEvent::MemObserved {
+                job,
+                iter,
+                obs,
+                mem_gb,
+                ..
+            } => {
+                // Route the allocator observation into the job's
+                // belief; a projection converging above the launch
+                // slice triggers the paper's predictive early restart
+                // at this very instant (via the sim's preempt hook).
+                if let Some(info) = self.active[g].get(&job).copied() {
+                    if let Some(peak) = self.beliefs.observe(info.belief, obs, mem_gb) {
+                        if peak > info.inst_mem_gb + EPS {
+                            let ev = self.gpus[g].preempt(job, iter, peak);
+                            self.dispatch(g, ev);
+                        }
+                    }
+                }
+                Vec::new()
             }
             SimEvent::ReconfigDone => {
                 let plan = self.in_flight[g]
@@ -382,6 +478,7 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
         let ctx = PolicyCtx {
             now,
             gpus: &self.gpus,
+            beliefs: &self.beliefs,
         };
         f(&mut self.policy, &ctx)
     }
@@ -403,7 +500,21 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
             match a {
                 Action::Launch { gpu, job, instance } => {
                     self.sync_if_idle(gpu);
-                    self.gpus[gpu].launch(job.spec, instance, job.submit_time);
+                    // Fresh monitor for this launch (dynamic jobs with
+                    // prediction), then map the sim job to its belief.
+                    self.beliefs.on_launch(job.belief, &job.spec);
+                    let inst_mem = self.gpus[gpu]
+                        .mgr
+                        .mem_gb_of(instance)
+                        .expect("launch on unknown instance");
+                    let sim_job = self.gpus[gpu].launch(job.spec, instance, job.submit_time);
+                    self.active[gpu].insert(
+                        sim_job,
+                        ActiveJob {
+                            belief: job.belief,
+                            inst_mem_gb: inst_mem,
+                        },
+                    );
                 }
                 Action::Reconfig { gpu, plan, instant } => {
                     self.sync_if_idle(gpu);

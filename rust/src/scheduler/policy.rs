@@ -9,6 +9,20 @@
 //! never touch the simulator directly — they observe the world through
 //! a read-only [`PolicyCtx`] and decide; the orchestrator applies.
 //!
+//! ## Memory knowledge = the belief ledger
+//!
+//! Every `PendingJob`/[`JobEvent`] carries a
+//! [`BeliefId`](crate::estimator::BeliefId) into the orchestrator's
+//! [`BeliefLedger`](crate::estimator::BeliefLedger). Policies consult
+//! `ctx.belief(id)` for every slice-selection, fusion-width, and
+//! restart decision; the construction-time `JobSpec` estimate is off
+//! limits on the decision path (enforced by a scheduler test). The
+//! orchestrator refines beliefs *before* the corresponding callbacks:
+//! on OOM the demand has already been bumped to the next-larger slice,
+//! on a predictive preemption it already holds the converged (and
+//! safety-margin-widened) projection — policies just requeue and
+//! re-place against the refreshed belief.
+//!
 //! ## Reconfiguration = one transactional plan
 //!
 //! Every layout change is an [`Action::Reconfig`] carrying a
@@ -54,6 +68,7 @@
 //!   placement (a multi-create plan) and submission accounting through
 //!   the orchestrator.
 
+use crate::estimator::{BeliefId, BeliefLedger, MemoryBelief};
 use crate::mig::{GpuSpec, InstanceId, PartitionManager, PartitionPlan};
 use crate::sim::GpuSim;
 use crate::workloads::JobSpec;
@@ -69,6 +84,10 @@ pub struct PolicyCtx<'a> {
     pub now: f64,
     /// The fleet; policies may inspect but never mutate.
     pub gpus: &'a [GpuSim],
+    /// The orchestrator's belief ledger: the only sanctioned source of
+    /// per-job memory knowledge on the decision path (policies never
+    /// read a `JobSpec`'s construction-time estimate).
+    pub beliefs: &'a BeliefLedger,
 }
 
 impl<'a> PolicyCtx<'a> {
@@ -86,6 +105,12 @@ impl<'a> PolicyCtx<'a> {
 
     pub fn mgr(&self, id: GpuId) -> &PartitionManager {
         &self.gpus[id].mgr
+    }
+
+    /// The current memory belief for a job (by the belief id its
+    /// [`PendingJob`]/[`JobEvent`] carries).
+    pub fn belief(&self, id: BeliefId) -> &MemoryBelief {
+        self.beliefs.get(id)
     }
 }
 
@@ -126,6 +151,10 @@ pub struct JobEvent {
     /// The job's original submission time (for requeueing: restarts keep
     /// their arrival anchor so online latency accounting stays honest).
     pub submit_time: f64,
+    /// The job's belief in the orchestrator's ledger. On OOM/preempt
+    /// events the orchestrator has already refined it before the policy
+    /// callback runs, so requeue decisions see the updated demand.
+    pub belief: BeliefId,
 }
 
 /// A scheduling policy: stateful handler of orchestrator events.

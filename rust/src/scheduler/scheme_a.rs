@@ -26,7 +26,7 @@ use crate::util::Json;
 use crate::workloads::mix::Mix;
 
 use super::policy::{Action, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
-use super::{bump_estimate_after_oom, Orchestrator, PendingJob, RunResult};
+use super::{Orchestrator, PendingJob, RunResult};
 
 /// Tunable knobs of Scheme A, constructible and serializable so the
 /// [`tuner`](crate::tuner) can sweep them instead of them being baked
@@ -190,9 +190,10 @@ impl SchemeAPolicy {
         }
     }
 
-    /// Requeue a restarted job at its (larger) class.
-    fn requeue(&mut self, job: PendingJob) {
-        let class = self.class_of(job.spec.est.mem_gb);
+    /// Requeue a restarted job at the class of its (already-refined)
+    /// belief.
+    fn requeue(&mut self, ctx: &PolicyCtx, job: PendingJob) {
+        let class = self.class_of(ctx.belief(job.belief).demand_gb());
         self.groups.entry(class).or_default().push_back(job);
     }
 }
@@ -202,8 +203,8 @@ impl SchedulingPolicy for SchemeAPolicy {
         "scheme-A"
     }
 
-    fn on_submit(&mut self, _ctx: &PolicyCtx, job: PendingJob) -> Vec<Action> {
-        let class = self.class_of(job.spec.est.mem_gb.max(0.0));
+    fn on_submit(&mut self, ctx: &PolicyCtx, job: PendingJob) -> Vec<Action> {
+        let class = self.class_of(ctx.belief(job.belief).demand_gb().max(0.0));
         self.groups.entry(class).or_default().push_back(job);
         // Batch grouping must see the whole submission wave before the
         // first class opens; the orchestrator's stall hook starts it.
@@ -214,28 +215,36 @@ impl SchedulingPolicy for SchemeAPolicy {
         self.refill_slot(ctx, ev.instance)
     }
 
-    fn on_oom(&mut self, ctx: &PolicyCtx, mut ev: JobEvent, _iter: usize, _mem_gb: f64) -> Vec<Action> {
-        let cur_prof = ctx.mgr(self.gpu).profile_of(ev.instance).unwrap();
-        bump_estimate_after_oom(&self.spec, &mut ev.job, cur_prof);
-        self.requeue(PendingJob {
-            spec: ev.job,
-            submit_time: ev.submit_time,
-        });
+    fn on_oom(&mut self, ctx: &PolicyCtx, ev: JobEvent, _iter: usize, _mem_gb: f64) -> Vec<Action> {
+        // The orchestrator already bumped the belief to the next-larger
+        // slice; the job re-enters the group map at its new class.
+        self.requeue(
+            ctx,
+            PendingJob {
+                spec: ev.job,
+                submit_time: ev.submit_time,
+                belief: ev.belief,
+            },
+        );
         self.refill_slot(ctx, ev.instance)
     }
 
     fn on_early_restart_signal(
         &mut self,
         ctx: &PolicyCtx,
-        mut ev: JobEvent,
+        ev: JobEvent,
         _iter: usize,
-        predicted_peak_gb: f64,
+        _predicted_peak_gb: f64,
     ) -> Vec<Action> {
-        ev.job.est.mem_gb = predicted_peak_gb;
-        self.requeue(PendingJob {
-            spec: ev.job,
-            submit_time: ev.submit_time,
-        });
+        // Belief already refined with the converged projection.
+        self.requeue(
+            ctx,
+            PendingJob {
+                spec: ev.job,
+                submit_time: ev.submit_time,
+                belief: ev.belief,
+            },
+        );
         self.refill_slot(ctx, ev.instance)
     }
 

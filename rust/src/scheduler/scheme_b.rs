@@ -25,7 +25,7 @@ use crate::util::Json;
 use crate::workloads::mix::Mix;
 
 use super::policy::{Action, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
-use super::{bump_estimate_after_oom, target_profile, Orchestrator, PendingJob, RunResult};
+use super::{target_profile, Orchestrator, PendingJob, RunResult};
 
 /// Tunable knobs of Scheme B, constructible and serializable so the
 /// [`tuner`](crate::tuner) can sweep them instead of them being baked
@@ -125,7 +125,9 @@ impl SchemeBPolicy {
         let reconfiguring = ctx.gpu(self.gpu).is_reconfiguring();
         while self.pending_launch.is_none() {
             let Some(head) = self.queue.front() else { break };
-            let prof = target_profile(&self.spec, &head.spec);
+            // The head job's slice comes from its *belief* (refined by
+            // OOMs/predictions), not its construction-time estimate.
+            let prof = target_profile(&self.spec, ctx.belief(head.belief).estimate());
             let want_mem = self.spec.profiles[prof].mem_gb;
 
             // 1. idle instance that fits within the reuse slack
@@ -213,13 +215,14 @@ impl SchedulingPolicy for SchemeBPolicy {
         self.try_schedule(ctx)
     }
 
-    fn on_oom(&mut self, ctx: &PolicyCtx, mut ev: JobEvent, _iter: usize, _mem_gb: f64) -> Vec<Action> {
-        let cur_prof = ctx.mgr(self.gpu).profile_of(ev.instance).unwrap();
-        bump_estimate_after_oom(&self.spec, &mut ev.job, cur_prof);
+    fn on_oom(&mut self, ctx: &PolicyCtx, ev: JobEvent, _iter: usize, _mem_gb: f64) -> Vec<Action> {
+        // The orchestrator already bumped the belief to the next-larger
+        // slice; FIFO just requeues.
         self.idle.push(ev.instance);
         self.requeue(PendingJob {
             spec: ev.job,
             submit_time: ev.submit_time,
+            belief: ev.belief,
         });
         self.try_schedule(ctx)
     }
@@ -227,15 +230,16 @@ impl SchedulingPolicy for SchemeBPolicy {
     fn on_early_restart_signal(
         &mut self,
         ctx: &PolicyCtx,
-        mut ev: JobEvent,
+        ev: JobEvent,
         _iter: usize,
-        predicted_peak_gb: f64,
+        _predicted_peak_gb: f64,
     ) -> Vec<Action> {
-        ev.job.est.mem_gb = predicted_peak_gb;
+        // Belief already refined with the converged projection.
         self.idle.push(ev.instance);
         self.requeue(PendingJob {
             spec: ev.job,
             submit_time: ev.submit_time,
+            belief: ev.belief,
         });
         self.try_schedule(ctx)
     }

@@ -38,7 +38,9 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::estimator::{BeliefId, Estimate};
 use crate::mig::GpuSpec;
+use crate::predictor::Observation;
 use crate::runtime::{DecodeEngine, Manifest, PjrtPredictor, Runtime};
 use crate::scheduler::scheme_b::SchemeBPolicy;
 use crate::scheduler::Orchestrator;
@@ -141,8 +143,11 @@ struct Replica {
     slots: Vec<Option<Slot>>,
     queue: VecDeque<(GenRequest, Sender<Result<GenResponse, String>>, u64)>,
     tokens_out: u64,
-    /// KV bytes series for the predictor.
-    kv_series: Vec<f64>,
+    /// This replica's KV-growth belief in the orchestrator's ledger:
+    /// the per-step usage series, observed peak, and the predictor's
+    /// refined band all live there (the same `MemoryBelief` machinery
+    /// the simulated schedulers consult).
+    belief: BeliefId,
     mem_budget_gb: f64,
 }
 
@@ -269,6 +274,9 @@ fn engine_thread(
         };
         let (k, v) = engine.empty_kv().expect("kv alloc");
         let r = dm.batch;
+        // KV growth is unknown upfront — exactly the time-series tier's
+        // a-priori state; the PJRT predictor refines the belief online.
+        let belief = orch.beliefs_mut().register(Estimate::unknown_upfront(1), 0.0);
         replicas.push(Replica {
             engine,
             k,
@@ -276,7 +284,7 @@ fn engine_thread(
             slots: (0..r).map(|_| None).collect(),
             queue: VecDeque::new(),
             tokens_out: 0,
-            kv_series: Vec::new(),
+            belief,
             mem_budget_gb,
         });
     }
@@ -412,19 +420,40 @@ fn engine_thread(
                     }));
                 }
             }
-            // KV accounting -> predictor alert (the paper's early-resize
-            // signal on the real serving path)
+            // KV accounting -> belief ledger -> predictor alert (the
+            // paper's early-resize signal on the real serving path,
+            // routed through the same MemoryBelief machinery the
+            // simulated schedulers consult)
             let used_gb = rep.engine.kv_bytes_used(&pos) as f64 / 1e9
                 + rep.engine.manifest.param_bytes as f64 / 1e9;
-            rep.kv_series.push(used_gb);
+            orch.beliefs_mut().observe_external(
+                rep.belief,
+                Observation {
+                    req_mem_gb: used_gb,
+                    reuse_ratio: 1.0,
+                },
+                used_gb,
+            );
             if let Some(pred) = &predictor {
-                if rep.kv_series.len() >= 8 && rep.kv_series.len() % 8 == 0 {
-                    let inv = vec![1.0; rep.kv_series.len()];
-                    let horizon = (rep.kv_series.len() * 4) as f64;
-                    if let Ok(st) =
-                        pred.fit_batch(&[rep.kv_series.clone()], &[inv], &[horizon])
-                    {
-                        if st[0].peak_physical_gb > rep.mem_budget_gb {
+                let n = orch
+                    .beliefs()
+                    .get(rep.belief)
+                    .external_series()
+                    .map(|(m, _)| m.len())
+                    .unwrap_or(0);
+                if n >= 8 && n % 8 == 0 {
+                    let (m, inv) = {
+                        let (m, inv) = orch
+                            .beliefs()
+                            .get(rep.belief)
+                            .external_series()
+                            .expect("series just observed");
+                        (m.to_vec(), inv.to_vec())
+                    };
+                    let horizon = (n * 4) as f64;
+                    if let Ok(st) = pred.fit_batch(&[m], &[inv], &[horizon]) {
+                        let demand = orch.beliefs_mut().apply_external_fit(rep.belief, &st[0]);
+                        if demand > rep.mem_budget_gb {
                             stats.kv_alerts += 1;
                         }
                     }

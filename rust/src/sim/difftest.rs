@@ -5,20 +5,28 @@
 //! launches, same random horizons, same mid-run reconfiguration windows
 //! and instance-count changes, same OOM/early-restart relaunches — and
 //! must produce the **same event sequence** (kind, job id, instance,
-//! iteration) with clocks, energy, and memory integrals agreeing within
-//! `REL_TOL = 1e-6` relative tolerance. The tolerance exists because
-//! the oracle *decrements* remaining times per event while the indexed
-//! engine schedules *absolute* instants; the two accumulate float
-//! rounding differently (well below 1e-9 per event in practice).
+//! iteration, allocator observation) with clocks, energy, and memory
+//! integrals agreeing within `REL_TOL = 1e-6` relative tolerance. The
+//! tolerance exists because the oracle *decrements* remaining times per
+//! event while the indexed engine schedules *absolute* instants; the
+//! two accumulate float rounding differently (well below 1e-9 per event
+//! in practice).
+//!
+//! Prediction is driven the way the orchestrator drives it: the
+//! harness owns the [`JobMonitor`]s, consumes the engines' emitted
+//! [`SimEvent::MemObserved`] observations, and preempts *both* engines
+//! at the instant a projection converges above the slice.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::mig::{GpuSpec, InstanceId};
+use crate::predictor::{ConvergenceCfg, JobMonitor, PredictionOutcome};
 use crate::util::Rng;
-use crate::workloads::{llm, mix, JobSpec};
+use crate::workloads::{llm, mix, ComputeModel, JobKind, JobSpec};
 
 use super::naive::NaiveGpuSim;
-use super::{GpuSim, SimEvent};
+use super::{EPS, GpuSim, JobId, SimEvent};
 
 /// Documented agreement tolerance between the two engines (relative).
 const REL_TOL: f64 = 1e-6;
@@ -71,6 +79,26 @@ fn assert_events_equiv(x: &SimEvent, y: &SimEvent) {
                 ..
             },
         ) => assert_eq!((ja, ia, ta), (jb, ib, tb), "preempt mismatch"),
+        (
+            SimEvent::MemObserved {
+                job: ja,
+                instance: ia,
+                iter: ta,
+                obs: oa,
+                mem_gb: ma,
+            },
+            SimEvent::MemObserved {
+                job: jb,
+                instance: ib,
+                iter: tb,
+                obs: ob,
+                mem_gb: mb,
+            },
+        ) => {
+            assert_eq!((ja, ia, ta), (jb, ib, tb), "observation mismatch");
+            assert_eq!(oa, ob, "observation payload mismatch");
+            assert_eq!(ma.to_bits(), mb.to_bits(), "observed mem mismatch");
+        }
         (SimEvent::ReconfigDone, SimEvent::ReconfigDone) => {}
         _ => panic!("event kind mismatch: {x:?} vs {y:?}"),
     }
@@ -80,7 +108,8 @@ fn ev_instance(ev: &SimEvent) -> Option<InstanceId> {
     match ev {
         SimEvent::Finished { instance, .. }
         | SimEvent::Oom { instance, .. }
-        | SimEvent::Preempted { instance, .. } => Some(*instance),
+        | SimEvent::Preempted { instance, .. }
+        | SimEvent::MemObserved { instance, .. } => Some(*instance),
         SimEvent::ReconfigDone => None,
     }
 }
@@ -94,7 +123,20 @@ fn ev_spec(ev: &SimEvent) -> Option<&JobSpec> {
         SimEvent::Finished { spec, .. }
         | SimEvent::Oom { spec, .. }
         | SimEvent::Preempted { spec, .. } => Some(spec),
-        SimEvent::ReconfigDone => None,
+        SimEvent::MemObserved { .. } | SimEvent::ReconfigDone => None,
+    }
+}
+
+/// The monitor the orchestrator's ledger would open for this launch
+/// (fresh per launch, LLM-only, prediction-gated), plus the launch
+/// slice's capacity — the preemption threshold.
+fn monitor_for(job: &JobSpec, prediction: bool, cap_gb: f64) -> Option<(JobMonitor, f64)> {
+    match (&job.compute, prediction, job.kind) {
+        (ComputeModel::Iterative(it), true, JobKind::Llm) => Some((
+            JobMonitor::new(it.trace.n_iters, ConvergenceCfg::default()),
+            cap_gb,
+        )),
+        _ => None,
     }
 }
 
@@ -114,9 +156,16 @@ fn lockstep(spec: Arc<GpuSpec>, profile: usize, jobs: &[JobSpec], prediction: bo
     assert!(!insts.is_empty(), "profile {profile} must fit the GPU");
     let mut backlog: Vec<JobSpec> = jobs.to_vec();
     backlog.reverse();
+    // Harness-owned prediction state, one monitor per live launch.
+    let mut mons: HashMap<JobId, (JobMonitor, f64)> = HashMap::new();
     for &inst in &insts {
         let Some(job) = backlog.pop() else { break };
-        assert_eq!(a.launch(job.clone(), inst, 0.0), b.launch(job, inst, 0.0));
+        let cap = a.mgr.mem_gb_of(inst).unwrap();
+        let id = a.launch(job.clone(), inst, 0.0);
+        assert_eq!(id, b.launch(job.clone(), inst, 0.0));
+        if let Some(mc) = monitor_for(&job, prediction, cap) {
+            mons.insert(id, mc);
+        }
     }
 
     let mut rng = Rng::new(seed);
@@ -147,15 +196,51 @@ fn lockstep(spec: Arc<GpuSpec>, profile: usize, jobs: &[JobSpec], prediction: bo
             (Some(x), Some(y)) => {
                 assert_events_equiv(&x, &y);
                 assert_close("event clock", a.now(), b.now());
+                // Drive prediction exactly like the orchestrator: push
+                // the emitted observation into the harness monitor and,
+                // on a projection converging above the slice, preempt
+                // BOTH engines at this very instant. The preemption
+                // events then flow through the kill-relaunch logic
+                // below in place of the observation.
+                let mut preempt_req = None;
+                if let SimEvent::MemObserved { job, iter, obs, .. } = &x {
+                    if let Some((mon, cap)) = mons.get_mut(job) {
+                        if let PredictionOutcome::Converged { peak_physical_gb } = mon.push(*obs)
+                        {
+                            if peak_physical_gb > *cap + EPS {
+                                preempt_req = Some((*job, *iter, peak_physical_gb));
+                            }
+                        }
+                    }
+                }
+                let x = match preempt_req {
+                    Some((j, it_, peak)) => {
+                        mons.remove(&j);
+                        let ka = a.preempt(j, it_, peak);
+                        let kb = b.preempt(j, it_, peak);
+                        assert_events_equiv(&ka, &kb);
+                        ka
+                    }
+                    None => x,
+                };
+                // Killed jobs drop their monitors (stale ids are never
+                // reused, but keep the map tight).
+                if is_kill(&x) {
+                    if let SimEvent::Oom { job, .. } | SimEvent::Preempted { job, .. } = &x {
+                        mons.remove(job);
+                    }
+                }
                 // Backlog drains onto freed instances (a FIFO in
                 // miniature: launches at t > 0, staggered arming).
                 if matches!(x, SimEvent::Finished { .. }) {
                     if let (Some(inst), Some(job)) = (ev_instance(&x), backlog.pop()) {
                         let t = a.now();
-                        assert_eq!(
-                            a.launch(job.clone(), inst, t),
-                            b.launch(job, inst, t)
-                        );
+                        let cap = a.mgr.mem_gb_of(inst).unwrap();
+                        let id = a.launch(job.clone(), inst, t);
+                        assert_eq!(id, b.launch(job.clone(), inst, t));
+                        if let Some(mc) = monitor_for(&job, prediction, cap) {
+                            mons.insert(id, mc);
+                        }
                     }
                 }
                 // Killed jobs occasionally restart in place (the
@@ -164,10 +249,12 @@ fn lockstep(spec: Arc<GpuSpec>, profile: usize, jobs: &[JobSpec], prediction: bo
                 if is_kill(&x) && relaunches < 6 && rng.below(2) == 0 {
                     if let (Some(inst), Some(job)) = (ev_instance(&x), ev_spec(&x)) {
                         let (job, t) = (job.clone(), a.now());
-                        assert_eq!(
-                            a.launch(job.clone(), inst, t),
-                            b.launch(job, inst, t)
-                        );
+                        let cap = a.mgr.mem_gb_of(inst).unwrap();
+                        let id = a.launch(job.clone(), inst, t);
+                        assert_eq!(id, b.launch(job.clone(), inst, t));
+                        if let Some(mc) = monitor_for(&job, prediction, cap) {
+                            mons.insert(id, mc);
+                        }
                         relaunches += 1;
                     }
                 }

@@ -25,10 +25,16 @@
 //!   plan's instances are unavailable until the window's
 //!   [`SimEvent::ReconfigDone`] fires, and the time is tallied in
 //!   [`SimCounters::reconfig_time_s`].
-//! * **OOM / prediction** — iterative jobs carry an allocator trace;
-//!   exceeding the instance's memory raises an OOM event, and (with
-//!   prediction enabled) a converged projection above the instance size
-//!   raises a preemption event instead — the paper's early restart.
+//! * **OOM / observation** — iterative jobs carry an allocator trace;
+//!   exceeding the instance's memory raises an OOM event. Per-iteration
+//!   allocator [`Observation`]s are *emitted* as
+//!   [`SimEvent::MemObserved`] (when the engine is constructed with
+//!   `observe: true`) instead of being consumed by an internal monitor:
+//!   prediction state lives in the orchestrator-owned
+//!   [`BeliefLedger`](crate::estimator::BeliefLedger), which decides
+//!   predictive early restarts and executes them via
+//!   [`GpuSim::preempt`] — the paper's early restart, with the policy
+//!   layer in the loop.
 //!
 //! # Engine design: indexed event calendar
 //!
@@ -73,7 +79,7 @@ use std::collections::{BinaryHeap, HashMap};
 use std::sync::Arc;
 
 use crate::mig::{GpuSpec, InstanceId, PartitionManager};
-use crate::predictor::{ConvergenceCfg, JobMonitor, PredictionOutcome};
+use crate::predictor::Observation;
 use crate::trace::AllocatorTrace;
 use crate::workloads::{ComputeModel, JobKind, JobSpec};
 
@@ -136,7 +142,6 @@ pub(crate) struct Running {
     pub(crate) ops: Vec<Op>,
     /// Index of the op in flight.
     pub(crate) cursor: usize,
-    pub(crate) monitor: Option<JobMonitor>,
     /// Realized allocator trace (iterative jobs only).
     pub(crate) trace: Option<AllocatorTrace>,
     pub(crate) submit_time: f64,
@@ -154,8 +159,9 @@ pub(crate) struct Running {
 
 impl Running {
     /// Build the run state for launching `spec` on an instance with
-    /// `inst_slices` GPCs. `prediction` carries the convergence config
-    /// when predictive early restart is enabled.
+    /// `inst_slices` GPCs. Prediction state lives outside the engines
+    /// (the orchestrator's belief ledger); the run state only carries
+    /// the realized allocator trace the engine replays.
     pub(crate) fn launch(
         spec: JobSpec,
         instance: InstanceId,
@@ -163,20 +169,11 @@ impl Running {
         inst_slices: u8,
         now: f64,
         submit_time: f64,
-        prediction: Option<ConvergenceCfg>,
     ) -> Running {
         let ops = compile_ops(&spec, inst_slices);
-        let (monitor, trace) = match &spec.compute {
-            ComputeModel::Iterative(it) => {
-                let mon = match prediction {
-                    Some(cfg) if spec.kind == JobKind::Llm => {
-                        Some(JobMonitor::new(it.trace.n_iters, cfg))
-                    }
-                    _ => None,
-                };
-                (mon, Some(it.trace.generate(it.trace_seed)))
-            }
-            _ => (None, None),
+        let trace = match &spec.compute {
+            ComputeModel::Iterative(it) => Some(it.trace.generate(it.trace_seed)),
+            _ => None,
         };
         Running {
             spec,
@@ -185,7 +182,6 @@ impl Running {
             inst_slices,
             ops,
             cursor: 0,
-            monitor,
             trace,
             submit_time,
             // Clamp: fleet runs deliver arrivals against the
@@ -347,7 +343,9 @@ pub enum SimEvent {
         iter: usize,
         mem_gb: f64,
     },
-    /// Predictor converged above the instance size; job preempted early.
+    /// Predictor converged above the instance size; job preempted early
+    /// (raised by [`GpuSim::preempt`] on the caller's decision — the
+    /// engine itself never predicts).
     Preempted {
         job: JobId,
         spec: JobSpec,
@@ -355,6 +353,18 @@ pub enum SimEvent {
         submit_time: f64,
         iter: usize,
         predicted_peak_gb: f64,
+    },
+    /// One iteration's allocator observation from a running iterative
+    /// job (emitted only when the engine was built with `observe:
+    /// true`). The job keeps running; the consumer (the orchestrator's
+    /// belief ledger) may answer with [`GpuSim::preempt`] at the same
+    /// instant. `mem_gb` is the iteration's physical footprint.
+    MemObserved {
+        job: JobId,
+        instance: InstanceId,
+        iter: usize,
+        obs: Observation,
+        mem_gb: f64,
     },
     /// A reconfiguration window completed.
     ReconfigDone,
@@ -462,12 +472,19 @@ pub struct GpuSim {
     mem_gb_integral: f64,
     pub counters: SimCounters,
     pub records: Vec<JobRecord>,
-    prediction: bool,
-    conv_cfg: ConvergenceCfg,
+    /// Emit [`SimEvent::MemObserved`] per iteration of iterative jobs.
+    /// Off by default-equivalent callers (no-prediction runs) so their
+    /// event streams are unchanged; the orchestrator enables it when
+    /// its belief ledger runs prediction.
+    observe: bool,
 }
 
 impl GpuSim {
-    pub fn new(spec: Arc<GpuSpec>, prediction: bool) -> Self {
+    /// `observe` controls per-iteration [`SimEvent::MemObserved`]
+    /// emission (historically this flag enabled the in-sim predictor;
+    /// the prediction state now lives behind the caller's belief
+    /// ledger).
+    pub fn new(spec: Arc<GpuSpec>, observe: bool) -> Self {
         let mgr = PartitionManager::new(spec.clone());
         GpuSim {
             spec,
@@ -489,15 +506,14 @@ impl GpuSim {
             mem_gb_integral: 0.0,
             counters: SimCounters::default(),
             records: Vec::new(),
-            prediction,
-            conv_cfg: ConvergenceCfg::default(),
+            observe,
         }
     }
 
     /// Reuse a prebuilt reachability table (avoids re-precomputing in
     /// benches that build many sims).
-    pub fn with_manager(spec: Arc<GpuSpec>, mgr: PartitionManager, prediction: bool) -> Self {
-        let mut s = Self::new(spec, prediction);
+    pub fn with_manager(spec: Arc<GpuSpec>, mgr: PartitionManager, observe: bool) -> Self {
+        let mut s = Self::new(spec, observe);
         s.mgr = mgr;
         s
     }
@@ -539,8 +555,7 @@ impl GpuSim {
             .expect("launch on unknown instance");
         let inst_mem = self.mgr.mem_gb_of(instance).unwrap();
         let n_inst = self.mgr.instance_count();
-        let prediction = self.prediction.then_some(self.conv_cfg);
-        let mut r = Running::launch(spec, instance, inst_mem, c, self.now, submit_time, prediction);
+        let mut r = Running::launch(spec, instance, inst_mem, c, self.now, submit_time);
         if let Some(op) = r.ops.first_mut() {
             arm_op(op, &self.spec, n_inst);
         }
@@ -834,7 +849,11 @@ impl GpuSim {
 
     /// Handle completion of job `id`'s current op; may emit an event.
     fn complete_op(&mut self, id: JobId) -> Option<SimEvent> {
+        // Allocator observation to emit after the job's next op is
+        // armed (the job keeps running; the belief ledger decides).
+        let mut observed: Option<(usize, Observation, f64)> = None;
         let r = self.running.get_mut(&id).unwrap();
+        let instance = r.instance;
         match r.ops.get(r.cursor) {
             Some(Op::Fixed { .. }) | Some(Op::Pcie { .. }) => {
                 // Memory becomes resident once the alloc (cursor 0) ends.
@@ -859,25 +878,13 @@ impl GpuSim {
                 let obs = trace.observation(iter);
                 let inst_mem = r.inst_mem_gb;
                 let oom = mem > inst_mem + EPS;
-                let preempt = match (&mut r.monitor, oom) {
-                    (Some(mon), false) => match mon.push(obs) {
-                        PredictionOutcome::Converged { peak_physical_gb }
-                            if peak_physical_gb > inst_mem + EPS =>
-                        {
-                            Some(peak_physical_gb)
-                        }
-                        _ => None,
-                    },
-                    _ => None,
-                };
                 self.set_mem(id, mem.min(inst_mem));
                 if oom {
                     self.counters.oom_restarts += 1;
                     return Some(self.kill(id, KillKind::Oom { iter, mem_gb: mem }));
                 }
-                if let Some(peak) = preempt {
-                    self.counters.early_restarts += 1;
-                    return Some(self.kill(id, KillKind::Preempt { iter, peak }));
+                if self.observe {
+                    observed = Some((iter, obs, mem));
                 }
             }
             None => {}
@@ -915,7 +922,33 @@ impl GpuSim {
         let new_active = op_active(&r.ops[r.cursor], r.inst_slices);
         self.active_sum += new_active;
         self.schedule_current(id);
-        None
+        observed.map(|(iter, obs, mem_gb)| SimEvent::MemObserved {
+            job: id,
+            instance,
+            iter,
+            obs,
+            mem_gb,
+        })
+    }
+
+    /// Kill a running iterative job on an external predictive-restart
+    /// decision (the paper's early restart, decided by the
+    /// orchestrator's belief ledger in response to
+    /// [`SimEvent::MemObserved`]). No simulated time passes; the
+    /// returned [`SimEvent::Preempted`] is what the policy consumes.
+    pub fn preempt(&mut self, job: JobId, iter: usize, predicted_peak_gb: f64) -> SimEvent {
+        assert!(
+            self.running.contains_key(&job),
+            "preempt of a job that is not running"
+        );
+        self.counters.early_restarts += 1;
+        self.kill(
+            job,
+            KillKind::Preempt {
+                iter,
+                peak: predicted_peak_gb,
+            },
+        )
     }
 
     fn kill(&mut self, id: JobId, kind: KillKind) -> SimEvent {
@@ -953,7 +986,7 @@ impl GpuSim {
         assert!(!self.running_on(instance));
         let c = self.mgr.compute_slices_of(instance).unwrap();
         let inst_mem = self.mgr.mem_gb_of(instance).unwrap();
-        let mut r = Running::launch(spec, instance, inst_mem, c, self.now, submit_time, None);
+        let mut r = Running::launch(spec, instance, inst_mem, c, self.now, submit_time);
         r.ops.clear();
         let id = self.next_id;
         self.next_id += 1;
@@ -1177,21 +1210,38 @@ mod tests {
     }
 
     #[test]
-    fn prediction_preempts_long_before_oom() {
+    fn emitted_observations_drive_external_preemption() {
+        // The engine emits per-iteration observations; the caller (here
+        // a bare monitor standing in for the orchestrator's belief
+        // ledger) converges and preempts long before the real OOM.
+        use crate::predictor::{ConvergenceCfg, JobMonitor, PredictionOutcome};
         use crate::workloads::llm;
         let mut s = GpuSim::new(Arc::new(GpuSpec::a100_40gb()), true);
         let inst = s.mgr.alloc(1).unwrap(); // 10GB
-        s.launch(llm::qwen2_7b().job(7), inst, 0.0);
+        let job = llm::qwen2_7b().job(7);
+        let n_iters = match &job.compute {
+            ComputeModel::Iterative(it) => it.trace.n_iters,
+            _ => unreachable!(),
+        };
+        s.launch(job, inst, 0.0);
+        let mut mon = JobMonitor::new(n_iters, ConvergenceCfg::default());
         let mut preempt = None;
         while let Some(ev) = s.advance() {
             match ev {
-                SimEvent::Preempted {
-                    iter,
-                    predicted_peak_gb,
-                    ..
-                } => {
-                    preempt = Some((iter, predicted_peak_gb));
-                    break;
+                SimEvent::MemObserved { job, iter, obs, .. } => {
+                    if let PredictionOutcome::Converged { peak_physical_gb } = mon.push(obs) {
+                        if peak_physical_gb > 10.0 + EPS {
+                            match s.preempt(job, iter, peak_physical_gb) {
+                                SimEvent::Preempted {
+                                    iter,
+                                    predicted_peak_gb,
+                                    ..
+                                } => preempt = Some((iter, predicted_peak_gb)),
+                                other => panic!("preempt returned {other:?}"),
+                            }
+                            break;
+                        }
+                    }
                 }
                 SimEvent::Oom { iter, .. } => panic!("real OOM at {iter} before prediction"),
                 _ => {}
@@ -1201,6 +1251,25 @@ mod tests {
         assert!(iter <= 15, "preempted at {iter}, expected single digits");
         assert!(peak > 10.0, "peak {peak}");
         assert_eq!(s.counters.early_restarts, 1);
+        // the preempted job is fully unwound: nothing left to advance
+        assert!(s.advance().is_none());
+        assert!(s.energy_j().is_finite());
+    }
+
+    #[test]
+    fn observation_emission_is_opt_in() {
+        use crate::workloads::llm;
+        let mut s = GpuSim::new(Arc::new(GpuSpec::a100_40gb()), false);
+        let p20 = s.spec.profile_index("3g.20gb").unwrap();
+        let inst = s.mgr.alloc(p20).unwrap();
+        s.launch(llm::qwen2_7b().job(7), inst, 0.0);
+        while let Some(ev) = s.advance() {
+            assert!(
+                !matches!(ev, SimEvent::MemObserved { .. }),
+                "observe=false must keep the event stream observation-free"
+            );
+        }
+        assert_eq!(s.records.len(), 1);
     }
 
     #[test]
@@ -1227,7 +1296,7 @@ mod tests {
         let mut s = sim();
         let inst = s.mgr.alloc(0).unwrap(); // 5GB
         let mut job = rodinia::by_name("kmeans").unwrap().job(7); // 6GB true
-        job.est.mem_gb = 4.0; // force a mis-estimate
+        job.est = job.est.with_point(4.0); // force a mis-estimate
         s.launch(job, inst, 0.0);
         let mut oom = false;
         while let Some(ev) = s.advance() {

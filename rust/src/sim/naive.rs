@@ -23,7 +23,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::mig::{GpuSpec, InstanceId, PartitionManager};
-use crate::predictor::{ConvergenceCfg, PredictionOutcome};
+use crate::predictor::Observation;
 use crate::workloads::{ComputeModel, JobSpec};
 
 use super::{
@@ -44,12 +44,13 @@ pub struct NaiveGpuSim {
     mem_gb_integral: f64,
     pub counters: SimCounters,
     pub records: Vec<JobRecord>,
-    prediction: bool,
-    conv_cfg: ConvergenceCfg,
+    /// Emit [`SimEvent::MemObserved`] per iteration (see the indexed
+    /// engine: prediction state lives behind the caller's ledger).
+    observe: bool,
 }
 
 impl NaiveGpuSim {
-    pub fn new(spec: Arc<GpuSpec>, prediction: bool) -> Self {
+    pub fn new(spec: Arc<GpuSpec>, observe: bool) -> Self {
         let mgr = PartitionManager::new(spec.clone());
         NaiveGpuSim {
             spec,
@@ -63,8 +64,7 @@ impl NaiveGpuSim {
             mem_gb_integral: 0.0,
             counters: SimCounters::default(),
             records: Vec::new(),
-            prediction,
-            conv_cfg: ConvergenceCfg::default(),
+            observe,
         }
     }
 
@@ -104,8 +104,7 @@ impl NaiveGpuSim {
             .expect("launch on unknown instance");
         let inst_mem = self.mgr.mem_gb_of(instance).unwrap();
         let n_inst = self.mgr.instance_count();
-        let prediction = self.prediction.then_some(self.conv_cfg);
-        let mut r = Running::launch(spec, instance, inst_mem, c, self.now, submit_time, prediction);
+        let mut r = Running::launch(spec, instance, inst_mem, c, self.now, submit_time);
         if let Some(op) = r.ops.first_mut() {
             arm_op(op, &self.spec, n_inst);
         }
@@ -293,7 +292,11 @@ impl NaiveGpuSim {
 
     /// Handle completion of job `id`'s current op; may emit an event.
     fn complete_op(&mut self, id: JobId) -> Option<SimEvent> {
+        // Allocator observation to emit after the next op is armed (the
+        // job keeps running; the caller's belief ledger decides).
+        let mut observed: Option<(usize, Observation, f64)> = None;
         let r = self.running.get_mut(&id).unwrap();
+        let instance = r.instance;
         match r.ops.get(r.cursor) {
             Some(Op::Fixed { .. }) | Some(Op::Pcie { .. }) => {
                 // Memory becomes resident once the alloc (cursor 0) ends.
@@ -320,19 +323,8 @@ impl NaiveGpuSim {
                     self.counters.oom_restarts += 1;
                     return Some(self.kill(id, KillKind::Oom { iter, mem_gb: mem }));
                 }
-                if let Some(mon) = &mut r.monitor {
-                    if let PredictionOutcome::Converged { peak_physical_gb } = mon.push(obs) {
-                        if peak_physical_gb > r.inst_mem_gb + EPS {
-                            self.counters.early_restarts += 1;
-                            return Some(self.kill(
-                                id,
-                                KillKind::Preempt {
-                                    iter,
-                                    peak: peak_physical_gb,
-                                },
-                            ));
-                        }
-                    }
+                if self.observe {
+                    observed = Some((iter, obs, mem));
                 }
             }
             // Exhausted program (dt=0 path above): finish below.
@@ -364,7 +356,29 @@ impl NaiveGpuSim {
         let n_inst = self.mgr.instance_count();
         let r = self.running.get_mut(&id).unwrap();
         arm_op(&mut r.ops[r.cursor], &self.spec, n_inst);
-        None
+        observed.map(|(iter, obs, mem_gb)| SimEvent::MemObserved {
+            job: id,
+            instance,
+            iter,
+            obs,
+            mem_gb,
+        })
+    }
+
+    /// See [`super::GpuSim::preempt`]; identical contract.
+    pub fn preempt(&mut self, job: JobId, iter: usize, predicted_peak_gb: f64) -> SimEvent {
+        assert!(
+            self.running.contains_key(&job),
+            "preempt of a job that is not running"
+        );
+        self.counters.early_restarts += 1;
+        self.kill(
+            job,
+            KillKind::Preempt {
+                iter,
+                peak: predicted_peak_gb,
+            },
+        )
     }
 
     fn kill(&mut self, id: JobId, kind: KillKind) -> SimEvent {
@@ -401,7 +415,7 @@ impl NaiveGpuSim {
         assert!(!self.running_on(instance));
         let c = self.mgr.compute_slices_of(instance).unwrap();
         let inst_mem = self.mgr.mem_gb_of(instance).unwrap();
-        let mut r = Running::launch(spec, instance, inst_mem, c, self.now, submit_time, None);
+        let mut r = Running::launch(spec, instance, inst_mem, c, self.now, submit_time);
         r.ops.clear();
         let id = self.next_id;
         self.next_id += 1;

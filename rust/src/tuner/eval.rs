@@ -24,6 +24,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::Scheme;
+use crate::estimator::BeliefConfig;
 use crate::metrics::BatchMetrics;
 use crate::mig::GpuSpec;
 use crate::scheduler::{
@@ -161,7 +162,14 @@ pub fn run_candidate(cand: &Candidate, scen: &Scenario) -> RunResult {
             .map(|g| shard_for(cand, &scen.spec, g))
             .collect(),
     );
-    let mut orch = Orchestrator::new(specs, cand.prediction, policy);
+    let mut orch = Orchestrator::with_belief_config(
+        specs,
+        BeliefConfig {
+            prediction: cand.prediction,
+            knobs: cand.belief,
+        },
+        policy,
+    );
     orch.submit_mix(&scen.mix_for(cand));
     orch.run_to_completion();
     orch.fleet_result()

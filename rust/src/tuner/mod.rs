@@ -26,7 +26,7 @@
 //!   [`Generator::Halving`] (successive halving: prune losers on short
 //!   horizons, re-score survivors on full fleets).
 //! * [`report`] — the ranked [`SweepReport`] with schema-stable JSON
-//!   (`migm.policy_search.v1`): CI runs `migm tune --smoke` every
+//!   (`migm.policy_search.v2`): CI runs `migm tune --smoke` every
 //!   build, uploads `BENCH_policy_search.json`, and appends the
 //!   summary row to the perf trajectory.
 //!

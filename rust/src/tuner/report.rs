@@ -1,5 +1,5 @@
 //! The ranked, reproducible sweep report and its schema-stable JSON
-//! form (`migm.policy_search.v1`) — the artifact CI uploads on every
+//! form (`migm.policy_search.v2`) — the artifact CI uploads on every
 //! run (`BENCH_policy_search.json`) and the row format appended to the
 //! perf trajectory (`perf/trajectory.json`).
 //!
@@ -85,9 +85,9 @@ fn outcome_json(o: &ScenarioOutcome) -> Json {
 
 impl SweepReport {
     /// Schema tag of [`Self::to_json`]; bump on any shape change.
-    pub const SCHEMA: &'static str = "migm.policy_search.v1";
+    pub const SCHEMA: &'static str = "migm.policy_search.v2";
     /// Schema tag of [`Self::summary_json`] trajectory rows.
-    pub const SUMMARY_SCHEMA: &'static str = "migm.policy_search.summary.v1";
+    pub const SUMMARY_SCHEMA: &'static str = "migm.policy_search.summary.v2";
 
     /// The winning candidate.
     pub fn best(&self) -> &RankedCandidate {
@@ -305,7 +305,7 @@ mod tests {
         // Pin the top-level keys and the schema tag: CI consumers parse
         // this document — shape changes must bump SCHEMA.
         let doc = tiny_report().to_json();
-        assert_eq!(doc.get("schema").as_str(), Some("migm.policy_search.v1"));
+        assert_eq!(doc.get("schema").as_str(), Some("migm.policy_search.v2"));
         for key in [
             "schema",
             "seed",
@@ -320,6 +320,14 @@ mod tests {
         let ranked = doc.get("ranked").at(0);
         for key in ["candidate", "label", "objective", "is_reference", "scenarios"] {
             assert!(!ranked.get(key).is_null(), "ranked missing '{key}'");
+        }
+        // v2: candidates carry the belief-knob axes
+        let cand = ranked.get("candidate");
+        for key in ["scheme", "a", "b", "belief", "prediction", "arrival_scale"] {
+            assert!(!cand.get(key).is_null(), "candidate missing '{key}'");
+        }
+        for key in ["z", "window", "safety_margin"] {
+            assert!(!cand.get("belief").get(key).is_null(), "belief missing '{key}'");
         }
         let outcome = ranked.get("scenarios").at(0);
         for key in [
@@ -346,7 +354,7 @@ mod tests {
         let s = tiny_report().summary_json();
         assert_eq!(
             s.get("schema").as_str(),
-            Some("migm.policy_search.summary.v1")
+            Some("migm.policy_search.summary.v2")
         );
         assert_eq!(s.get("best_objective").as_f64(), Some(1.0));
         assert!(!s.get("best_candidate").get("scheme").is_null());

@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use crate::config::Scheme;
+use crate::estimator::BeliefKnobs;
 use crate::scheduler::{SchemeAKnobs, SchemeBKnobs};
 use crate::util::{Json, Rng};
 
@@ -20,12 +21,16 @@ use crate::util::{Json, Rng};
 ///
 /// Only the knobs of the selected scheme matter (the other scheme's sit
 /// at their defaults), which the generators exploit to avoid emitting
-/// duplicate candidates that differ only in dead axes.
+/// duplicate candidates that differ only in dead axes. The belief
+/// knobs (z-score / convergence window / safety margin) are likewise
+/// live only when `prediction` is on.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Candidate {
     pub scheme: Scheme,
     pub a: SchemeAKnobs,
     pub b: SchemeBKnobs,
+    /// Belief-ledger parameters (live only with `prediction`).
+    pub belief: BeliefKnobs,
     /// Enable the time-series peak-memory predictor (early restarts).
     pub prediction: bool,
     /// Multiplier on each online scenario's base Poisson rate (ignored
@@ -41,6 +46,7 @@ impl Candidate {
             scheme: Scheme::B,
             a: SchemeAKnobs::default(),
             b: SchemeBKnobs::default(),
+            belief: BeliefKnobs::default(),
             prediction: false,
             arrival_scale: 1.0,
         }
@@ -59,6 +65,12 @@ impl Candidate {
             let mut t = String::new();
             if s.prediction {
                 t.push_str(" +pred");
+                if s.belief != BeliefKnobs::default() {
+                    t.push_str(&format!(
+                        " z={:.2} w={} m={:.2}",
+                        s.belief.z, s.belief.window, s.belief.safety_margin
+                    ));
+                }
             }
             if (s.arrival_scale - 1.0).abs() > 1e-12 {
                 t.push_str(&format!(" x{:.2}", s.arrival_scale));
@@ -82,6 +94,7 @@ impl Candidate {
             ("scheme", Json::str(self.scheme.name())),
             ("a", self.a.to_json()),
             ("b", self.b.to_json()),
+            ("belief", self.belief.to_json()),
             ("prediction", Json::Bool(self.prediction)),
             ("arrival_scale", Json::num(self.arrival_scale)),
         ])
@@ -95,6 +108,7 @@ impl Candidate {
         )?;
         let a = SchemeAKnobs::from_json(doc.get("a"))?;
         let b = SchemeBKnobs::from_json(doc.get("b"))?;
+        let belief = BeliefKnobs::from_json(doc.get("belief"))?;
         let prediction = doc.get("prediction").as_bool().unwrap_or(false);
         let arrival_scale = match doc.get("arrival_scale") {
             Json::Null => 1.0,
@@ -107,6 +121,7 @@ impl Candidate {
             scheme,
             a,
             b,
+            belief,
             prediction,
             arrival_scale,
         })
@@ -115,7 +130,9 @@ impl Candidate {
 
 /// Per-axis value lists the generators draw from. Axes tied to a scheme
 /// (`ladder_skips` for A, `max_fusion_destroys`/`reuse_slacks` for B)
-/// only vary on candidates of that scheme.
+/// only vary on candidates of that scheme; the belief axes
+/// (`belief_zs`/`belief_windows`/`safety_margins`) only vary on
+/// candidates with prediction enabled.
 #[derive(Debug, Clone)]
 pub struct ParamSpace {
     pub schemes: Vec<Scheme>,
@@ -126,6 +143,12 @@ pub struct ParamSpace {
     /// Scheme B: idle-reuse slack fractions (>= 0).
     pub reuse_slacks: Vec<f64>,
     pub predictions: Vec<bool>,
+    /// Belief ledger: prediction confidence-band z-scores (> 0).
+    pub belief_zs: Vec<f64>,
+    /// Belief ledger: convergence-window lengths (>= 1).
+    pub belief_windows: Vec<usize>,
+    /// Belief ledger: restart safety margins (>= 0).
+    pub safety_margins: Vec<f64>,
     /// Arrival-intensity multipliers (> 0) for online scenarios.
     pub arrival_scales: Vec<f64>,
 }
@@ -136,30 +159,38 @@ impl ParamSpace {
     /// the synthetic tiered-fleet scenario (wider fusion, idle-reuse
     /// slack, coarser Scheme-A ladder).
     pub fn smoke() -> Self {
+        let d = BeliefKnobs::default();
         ParamSpace {
             schemes: vec![Scheme::A, Scheme::B],
             ladder_skips: vec![0, 1],
             max_fusion_destroys: vec![2, 4],
             reuse_slacks: vec![0.0, 1.0],
             predictions: vec![false],
+            belief_zs: vec![d.z],
+            belief_windows: vec![d.window],
+            safety_margins: vec![d.safety_margin],
             arrival_scales: vec![1.0],
         }
     }
 
-    /// The full default space for `migm tune` (grid size ~114; the
-    /// arrival-scale axis only differentiates candidates on online
-    /// scenarios — batch scenarios ignore it). Note that scale != 1
-    /// candidates are scored against the nominal-load reference, so
-    /// their scores measure load sensitivity jointly with the knobs;
-    /// the CLI's knob-advantage gate ignores them for exactly that
-    /// reason.
+    /// The full default space for `migm tune` (the arrival-scale axis
+    /// only differentiates candidates on online scenarios — batch
+    /// scenarios ignore it — and the belief axes only bite with
+    /// prediction on). Note that scale != 1 candidates are scored
+    /// against the nominal-load reference, so their scores measure load
+    /// sensitivity jointly with the knobs; the CLI's knob-advantage
+    /// gate ignores them for exactly that reason.
     pub fn full() -> Self {
+        let d = BeliefKnobs::default();
         ParamSpace {
             schemes: vec![Scheme::A, Scheme::B],
             ladder_skips: vec![0, 1, 2],
             max_fusion_destroys: vec![1, 2, 4, 8],
             reuse_slacks: vec![0.0, 0.5, 1.0, 3.0],
             predictions: vec![false, true],
+            belief_zs: vec![1.96, d.z],
+            belief_windows: vec![d.window, 5],
+            safety_margins: vec![0.0, 0.1],
             arrival_scales: vec![0.5, 1.0, 2.0],
         }
     }
@@ -171,6 +202,9 @@ impl ParamSpace {
             ("max_fusion_destroys", self.max_fusion_destroys.is_empty()),
             ("reuse_slacks", self.reuse_slacks.is_empty()),
             ("predictions", self.predictions.is_empty()),
+            ("belief_zs", self.belief_zs.is_empty()),
+            ("belief_windows", self.belief_windows.is_empty()),
+            ("safety_margins", self.safety_margins.is_empty()),
             ("arrival_scales", self.arrival_scales.is_empty()),
         ] {
             if empty {
@@ -183,7 +217,38 @@ impl ParamSpace {
         if self.arrival_scales.iter().any(|&s| s <= 0.0) {
             bail!("arrival_scales must be > 0");
         }
+        if self.belief_zs.iter().any(|&z| z <= 0.0) {
+            bail!("belief_zs must be > 0");
+        }
+        if self.belief_windows.iter().any(|&w| w == 0) {
+            bail!("belief_windows must be >= 1");
+        }
+        if self.safety_margins.iter().any(|&m| m < 0.0) {
+            bail!("safety_margins must be >= 0");
+        }
         Ok(())
+    }
+
+    /// The belief-knob combinations live for a `prediction` setting:
+    /// the full cartesian with prediction on, the single default
+    /// otherwise (dead axes stay canonical).
+    fn belief_choices(&self, prediction: bool) -> Vec<BeliefKnobs> {
+        if !prediction {
+            return vec![BeliefKnobs::default()];
+        }
+        let mut out = Vec::new();
+        for &z in &self.belief_zs {
+            for &window in &self.belief_windows {
+                for &safety_margin in &self.safety_margins {
+                    out.push(BeliefKnobs {
+                        z,
+                        window,
+                        safety_margin,
+                    });
+                }
+            }
+        }
+        out
     }
 
     fn push(map: &mut BTreeMap<String, Candidate>, c: Candidate) {
@@ -197,32 +262,35 @@ impl ParamSpace {
         let mut by_key = BTreeMap::new();
         for &scheme in &self.schemes {
             for &prediction in &self.predictions {
-                for &arrival_scale in &self.arrival_scales {
-                    let base = Candidate {
-                        scheme,
-                        a: SchemeAKnobs::default(),
-                        b: SchemeBKnobs::default(),
-                        prediction,
-                        arrival_scale,
-                    };
-                    match scheme {
-                        Scheme::Baseline => Self::push(&mut by_key, base),
-                        Scheme::A => {
-                            for &ladder_skip in &self.ladder_skips {
-                                let mut c = base.clone();
-                                c.a = SchemeAKnobs { ladder_skip };
-                                Self::push(&mut by_key, c);
-                            }
-                        }
-                        Scheme::B => {
-                            for &max_fusion_destroys in &self.max_fusion_destroys {
-                                for &reuse_slack in &self.reuse_slacks {
+                for &belief in &self.belief_choices(prediction) {
+                    for &arrival_scale in &self.arrival_scales {
+                        let base = Candidate {
+                            scheme,
+                            a: SchemeAKnobs::default(),
+                            b: SchemeBKnobs::default(),
+                            belief,
+                            prediction,
+                            arrival_scale,
+                        };
+                        match scheme {
+                            Scheme::Baseline => Self::push(&mut by_key, base),
+                            Scheme::A => {
+                                for &ladder_skip in &self.ladder_skips {
                                     let mut c = base.clone();
-                                    c.b = SchemeBKnobs {
-                                        max_fusion_destroys,
-                                        reuse_slack,
-                                    };
+                                    c.a = SchemeAKnobs { ladder_skip };
                                     Self::push(&mut by_key, c);
+                                }
+                            }
+                            Scheme::B => {
+                                for &max_fusion_destroys in &self.max_fusion_destroys {
+                                    for &reuse_slack in &self.reuse_slacks {
+                                        let mut c = base.clone();
+                                        c.b = SchemeBKnobs {
+                                            max_fusion_destroys,
+                                            reuse_slack,
+                                        };
+                                        Self::push(&mut by_key, c);
+                                    }
                                 }
                             }
                         }
@@ -251,6 +319,9 @@ impl ParamSpace {
             let max_fusion_destroys = *rng.choice(&self.max_fusion_destroys);
             let reuse_slack = *rng.choice(&self.reuse_slacks);
             let prediction = *rng.choice(&self.predictions);
+            let z = *rng.choice(&self.belief_zs);
+            let window = *rng.choice(&self.belief_windows);
+            let safety_margin = *rng.choice(&self.safety_margins);
             let arrival_scale = *rng.choice(&self.arrival_scales);
             let c = Candidate {
                 scheme,
@@ -264,6 +335,15 @@ impl ParamSpace {
                         reuse_slack,
                     },
                     _ => SchemeBKnobs::default(),
+                },
+                belief: if prediction {
+                    BeliefKnobs {
+                        z,
+                        window,
+                        safety_margin,
+                    }
+                } else {
+                    BeliefKnobs::default()
                 },
                 prediction,
                 arrival_scale,
@@ -286,6 +366,11 @@ mod tests {
             b: SchemeBKnobs {
                 max_fusion_destroys: 4,
                 reuse_slack: 0.5,
+            },
+            belief: BeliefKnobs {
+                z: 1.96,
+                window: 5,
+                safety_margin: 0.1,
             },
             prediction: true,
             arrival_scale: 2.0,
@@ -325,10 +410,43 @@ mod tests {
             max_fusion_destroys: vec![1, 2, 4, 8],
             reuse_slacks: vec![0.0, 1.0],
             predictions: vec![false],
+            belief_zs: vec![1.96, 2.576],
+            belief_windows: vec![3, 5],
+            safety_margins: vec![0.0, 0.2],
             arrival_scales: vec![1.0],
         };
-        // B-only axes don't multiply A candidates
+        // B-only axes don't multiply A candidates, and belief axes are
+        // dead without prediction
         assert_eq!(space.grid().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn belief_axes_multiply_only_with_prediction() {
+        let mut space = ParamSpace {
+            schemes: vec![Scheme::A],
+            ladder_skips: vec![0],
+            max_fusion_destroys: vec![2],
+            reuse_slacks: vec![0.0],
+            predictions: vec![true],
+            belief_zs: vec![1.96, 2.576],
+            belief_windows: vec![3, 5],
+            safety_margins: vec![0.0, 0.2],
+            arrival_scales: vec![1.0],
+        };
+        // prediction on: 2 x 2 x 2 belief combos for the single A point
+        assert_eq!(space.grid().unwrap().len(), 8);
+        // both prediction settings: 8 live + 1 dead-default
+        space.predictions = vec![false, true];
+        assert_eq!(space.grid().unwrap().len(), 9);
+        // invalid belief axes are rejected
+        space.belief_zs = vec![0.0];
+        assert!(space.grid().is_err());
+        space.belief_zs = vec![2.576];
+        space.belief_windows = vec![0];
+        assert!(space.grid().is_err());
+        space.belief_windows = vec![3];
+        space.safety_margins = vec![-0.1];
+        assert!(space.grid().is_err());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! jobs are PCIe-transfer intensive, which caps their MIG speedup).
 
 use crate::estimator::dnnmem::{self, estimate, ModelDef, Optimizer};
-use crate::estimator::{EstimationMethod, MemoryEstimate};
+use crate::estimator::{default_pipeline, EstimateInput};
 use crate::workloads::{ComputeModel, JobKind, JobSpec, PhaseProfile};
 
 /// A DNN training job template.
@@ -26,6 +26,12 @@ pub struct DnnJob {
 impl DnnJob {
     pub fn job(&self) -> JobSpec {
         let e = estimate(&self.model, self.batch, self.opt);
+        let est = default_pipeline().estimate(&EstimateInput::Model {
+            model: &self.model,
+            batch: self.batch,
+            opt: self.opt,
+            demand_gpcs: self.demand_gpcs,
+        });
         let phases = PhaseProfile {
             alloc_s: 0.5,
             h2d_pcie_s: e.weights_gb / 12.0 + 0.2, // weights + first batch
@@ -40,11 +46,7 @@ impl DnnJob {
             kind: JobKind::Dnn,
             demand_gpcs: self.demand_gpcs,
             true_mem_gb: e.total_gb,
-            est: MemoryEstimate {
-                mem_gb: e.total_gb,
-                compute_gpcs: self.demand_gpcs,
-                method: EstimationMethod::ModelSize,
-            },
+            est,
             compute: ComputeModel::Phases(phases),
         }
     }
@@ -136,7 +138,14 @@ mod tests {
         let b = bert_large_seq_train().job();
         assert_eq!(a.size_class(), SizeClass::Small);
         assert_eq!(b.size_class(), SizeClass::Small);
-        assert!(a.est.mem_gb > 2.8 && b.est.mem_gb > 4.0, "{} {}", a.est.mem_gb, b.est.mem_gb);
+        assert!(
+            a.est.point_gb() > 2.8 && b.est.point_gb() > 4.0,
+            "{} {}",
+            a.est.point_gb(),
+            b.est.point_gb()
+        );
+        // the DNNMem band carries the fragmentation-slack uncertainty
+        assert!(a.est.lo_gb() < a.est.point_gb());
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! delays predictor convergence — matching the paper's later prediction
 //! points (31 / 21 vs 6 for the big decoders).
 
-use crate::estimator::{EstimationMethod, MemoryEstimate};
+use crate::estimator::{default_pipeline, EstimateInput};
 use crate::trace::TraceSpec;
 use crate::workloads::{ComputeModel, IterativeProfile, JobKind, JobSpec};
 
@@ -39,13 +39,12 @@ impl LlmWorkload {
             kind: JobKind::Llm,
             demand_gpcs: self.demand_gpcs,
             true_mem_gb: true_peak,
-            // Memory is unknown upfront: the scheduler starts on the
-            // smallest slice (grow-on-demand) and refines via prediction.
-            est: MemoryEstimate {
-                mem_gb: 0.0,
-                compute_gpcs: self.demand_gpcs,
-                method: EstimationMethod::TimeSeries,
-            },
+            // Memory is unknown upfront (the pipeline's time-series
+            // tier): the scheduler starts on the smallest slice
+            // (grow-on-demand) and the belief ledger refines online.
+            est: default_pipeline().estimate(&EstimateInput::Dynamic {
+                demand_gpcs: self.demand_gpcs,
+            }),
             compute: ComputeModel::Iterative(IterativeProfile {
                 alloc_s: 0.6,
                 h2d_pcie_s: self.weights_gb / 12.0,
@@ -183,7 +182,8 @@ mod tests {
         for w in all() {
             let j = w.job(1);
             assert_eq!(j.est.method, crate::estimator::EstimationMethod::TimeSeries);
-            assert_eq!(j.est.mem_gb, 0.0);
+            assert!(j.est.is_unknown(), "dynamic jobs start explicitly unknown");
+            assert_eq!(j.est.point_gb(), 0.0);
             assert!(j.true_mem_gb > 4.0);
         }
     }

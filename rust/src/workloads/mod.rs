@@ -16,7 +16,8 @@ pub mod mix;
 pub mod rodinia;
 pub mod synthetic;
 
-use crate::estimator::MemoryEstimate;
+use crate::estimator::Estimate;
+use crate::mig::GpuSpec;
 use crate::trace::TraceSpec;
 
 /// Workload family (drives the estimation tier).
@@ -27,8 +28,8 @@ pub enum JobKind {
     Llm,
 }
 
-/// A100 size buckets used throughout the evaluation
-/// (small:medium:large:full = 5/10/20/40 GB).
+/// Size buckets used throughout the evaluation. On the A100-40GB
+/// ladder these are small:medium:large:full = 5/10/20/40 GB.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum SizeClass {
     Small,
@@ -38,7 +39,10 @@ pub enum SizeClass {
 }
 
 impl SizeClass {
-    /// Classify a footprint on the A100-40GB bucket boundaries.
+    /// Classify a footprint on the A100-40GB bucket boundaries — the
+    /// paper's evaluation shorthand. For any other GPU model, use
+    /// [`of_mem_on`](Self::of_mem_on): these hardcoded boundaries
+    /// misclassify e.g. an H100-80GB, whose smallest slice is 10 GB.
     pub fn of_mem(mem_gb: f64) -> SizeClass {
         if mem_gb <= 5.0 {
             SizeClass::Small
@@ -49,6 +53,20 @@ impl SizeClass {
         } else {
             SizeClass::Full
         }
+    }
+
+    /// Classify a footprint against `spec`'s own size ladder: the first
+    /// three rungs cap Small/Medium/Large, everything beyond (or off
+    /// the top of the ladder) is Full. On the A100-40GB this reproduces
+    /// [`of_mem`](Self::of_mem) exactly.
+    pub fn of_mem_on(spec: &GpuSpec, mem_gb: f64) -> SizeClass {
+        const CLASSES: [SizeClass; 3] = [SizeClass::Small, SizeClass::Medium, SizeClass::Large];
+        for (i, &cap) in spec.ladder().iter().enumerate().take(3) {
+            if mem_gb <= cap {
+                return CLASSES[i];
+            }
+        }
+        SizeClass::Full
     }
 }
 
@@ -110,14 +128,23 @@ pub struct JobSpec {
     /// Actual peak physical memory (GB). For iterative jobs this is the
     /// trace's realized peak and is filled in by the generator.
     pub true_mem_gb: f64,
-    /// The scheduler's a-priori estimate (see `estimator`).
-    pub est: MemoryEstimate,
+    /// The a-priori estimate the construction-time pipeline produced
+    /// (see [`crate::estimator::pipeline`]). At runtime this seeds the
+    /// job's [`MemoryBelief`](crate::estimator::MemoryBelief); the
+    /// scheduling policies consult the belief, never this field.
+    pub est: Estimate,
     pub compute: ComputeModel,
 }
 
 impl JobSpec {
+    /// A100 evaluation-bucket shorthand (see [`SizeClass::of_mem`]).
     pub fn size_class(&self) -> SizeClass {
-        SizeClass::of_mem(self.est.mem_gb)
+        SizeClass::of_mem(self.est.point_gb())
+    }
+
+    /// Size bucket on a specific GPU's ladder.
+    pub fn size_class_on(&self, spec: &GpuSpec) -> SizeClass {
+        SizeClass::of_mem_on(spec, self.est.point_gb())
     }
 
     /// Baseline (full exclusive GPU) runtime, used for calibration tests.
@@ -148,6 +175,46 @@ mod tests {
         assert_eq!(SizeClass::of_mem(10.0), SizeClass::Medium);
         assert_eq!(SizeClass::of_mem(17.0), SizeClass::Large);
         assert_eq!(SizeClass::of_mem(20.5), SizeClass::Full);
+    }
+
+    #[test]
+    fn ladder_derived_buckets_match_a100_bit_for_bit() {
+        // The derived classifier must agree with the hardcoded A100
+        // shorthand everywhere, boundaries included.
+        let a100 = GpuSpec::a100_40gb();
+        for tenth in 0..=450 {
+            let gb = tenth as f64 * 0.1;
+            assert_eq!(
+                SizeClass::of_mem_on(&a100, gb),
+                SizeClass::of_mem(gb),
+                "{gb}"
+            );
+        }
+        for exact in [5.0, 10.0, 20.0, 40.0, 40.1] {
+            assert_eq!(SizeClass::of_mem_on(&a100, exact), SizeClass::of_mem(exact));
+        }
+    }
+
+    #[test]
+    fn ladder_derived_buckets_follow_other_gpu_models() {
+        // H100-80GB ladder is 10/20/40/80: a 7.5 GB job is Small there,
+        // which the hardcoded A100 boundaries misclassify as Medium.
+        let h100 = GpuSpec::h100_80gb();
+        assert_eq!(SizeClass::of_mem_on(&h100, 7.5), SizeClass::Small);
+        assert_eq!(SizeClass::of_mem(7.5), SizeClass::Medium);
+        assert_eq!(SizeClass::of_mem_on(&h100, 15.0), SizeClass::Medium);
+        assert_eq!(SizeClass::of_mem_on(&h100, 35.0), SizeClass::Large);
+        assert_eq!(SizeClass::of_mem_on(&h100, 60.0), SizeClass::Full);
+        // A30: 6/12/24 — a three-rung ladder tops out into Full.
+        let a30 = GpuSpec::a30_24gb();
+        assert_eq!(SizeClass::of_mem_on(&a30, 5.9), SizeClass::Small);
+        assert_eq!(SizeClass::of_mem_on(&a30, 11.0), SizeClass::Medium);
+        assert_eq!(SizeClass::of_mem_on(&a30, 20.0), SizeClass::Large);
+        assert_eq!(SizeClass::of_mem_on(&a30, 25.0), SizeClass::Full);
+        // single-profile synthetic: everything beyond rung 0 is Full-ward
+        let synth = synthetic::many_instance_spec(8);
+        assert_eq!(SizeClass::of_mem_on(&synth, 0.5), SizeClass::Small);
+        assert_eq!(SizeClass::of_mem_on(&synth, 3.0), SizeClass::Full);
     }
 
     #[test]

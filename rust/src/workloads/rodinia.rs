@@ -9,7 +9,8 @@
 //! Every job is estimated through the compile-time analysis path, as in
 //! the paper.
 
-use crate::estimator::compiler_analysis::{analyze, BufferDecl, KernelResource};
+use crate::estimator::compiler_analysis::{BufferDecl, KernelResource};
+use crate::estimator::{default_pipeline, EstimateInput};
 use crate::workloads::{ComputeModel, JobKind, JobSpec, PhaseProfile};
 
 /// One pool entry: a benchmark+parameter combination.
@@ -45,15 +46,20 @@ impl RodiniaBench {
         }
     }
 
-    /// Build the schedulable job (estimate via compile-time analysis).
+    /// Build the schedulable job (estimated through the pipeline's
+    /// compile-time analysis tier).
     pub fn job(&self, total_gpcs: u8) -> JobSpec {
-        let analysis = analyze(&self.kernel_resource(), total_gpcs);
+        let resource = self.kernel_resource();
+        let est = default_pipeline().estimate(&EstimateInput::Kernel {
+            resource: &resource,
+            total_gpcs,
+        });
         JobSpec {
             name: self.name.to_string(),
             kind: JobKind::Rodinia,
             demand_gpcs: self.demand_gpcs,
             true_mem_gb: self.mem_gb,
-            est: analysis.to_estimate(),
+            est,
             compute: ComputeModel::Phases(self.phases),
         }
     }
@@ -174,13 +180,16 @@ mod tests {
         for b in pool() {
             let j = b.job(7);
             assert!(
-                (j.est.mem_gb - b.mem_gb).abs() < 0.05,
+                (j.est.point_gb() - b.mem_gb).abs() < 0.05,
                 "{}: est {} vs true {}",
                 b.name,
-                j.est.mem_gb,
+                j.est.point_gb(),
                 b.mem_gb
             );
             assert!(j.est.compute_gpcs >= 1 && j.est.compute_gpcs <= 7);
+            // static analysis is exact: degenerate band, generation 0
+            assert_eq!(j.est.lo_gb(), j.est.hi_gb());
+            assert_eq!(j.est.generation, 0);
         }
     }
 

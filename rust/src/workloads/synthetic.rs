@@ -9,7 +9,7 @@
 //! because the reachability cache is keyed by spec *name*, divergent
 //! copies under one name would silently share the wrong table).
 
-use crate::estimator::{EstimationMethod, MemoryEstimate};
+use crate::estimator::{Estimate, EstimationMethod};
 use crate::mig::{GpuSpec, MigProfile};
 use crate::workloads::{ComputeModel, JobKind, JobSpec, PhaseProfile};
 
@@ -85,11 +85,7 @@ pub fn sized_job(name: &str, mem_gb: f64, steps: u32) -> JobSpec {
         kind: JobKind::Rodinia,
         demand_gpcs: gpcs,
         true_mem_gb: mem_gb,
-        est: MemoryEstimate {
-            mem_gb,
-            compute_gpcs: gpcs,
-            method: EstimationMethod::CompilerAnalysis,
-        },
+        est: Estimate::exact(mem_gb, gpcs, EstimationMethod::CompilerAnalysis),
         compute: ComputeModel::Phases(PhaseProfile {
             alloc_s: 0.05,
             h2d_pcie_s: 0.2,
@@ -111,11 +107,7 @@ pub fn fleet_job(steps: u32) -> JobSpec {
         kind: JobKind::Rodinia,
         demand_gpcs: 1,
         true_mem_gb: 0.8,
-        est: MemoryEstimate {
-            mem_gb: 0.8,
-            compute_gpcs: 1,
-            method: EstimationMethod::CompilerAnalysis,
-        },
+        est: Estimate::exact(0.8, 1, EstimationMethod::CompilerAnalysis),
         compute: ComputeModel::Phases(PhaseProfile {
             alloc_s: 0.05,
             h2d_pcie_s: 0.4,
@@ -178,7 +170,7 @@ mod tests {
     #[test]
     fn sized_job_classes_map_to_tiered_profiles() {
         let spec = tiered_spec(12);
-        let prof = |mem| crate::scheduler::target_profile(&spec, &sized_job("j", mem, 1));
+        let prof = |mem| crate::scheduler::target_profile(&spec, &sized_job("j", mem, 1).est);
         assert_eq!(spec.profiles[prof(0.9)].mem_gb, 1.0);
         assert_eq!(spec.profiles[prof(1.8)].mem_gb, 2.0);
         assert_eq!(spec.profiles[prof(3.6)].mem_gb, 4.0);
