@@ -9,16 +9,21 @@
 //! Set `MIGM_BENCH_SMOKE=1` for the CI smoke run (smaller fleet, the
 //! 10k fleet skipped). Set `MIGM_BENCH_JSON=<path>` to also write the
 //! stats as JSON (uploaded as a CI perf artifact next to
-//! `BENCH_policy_search.json`).
+//! `BENCH_policy_search.json`). Set `MIGM_TRAJECTORY=<path>` to append
+//! the heterogeneous head-to-head (`migm.bench.fleet.v1` row) to the
+//! perf trajectory.
 
 use std::sync::Arc;
 
+use migm::fleet::{FleetKnobs, FleetPolicy};
 use migm::scheduler::scheme_a::{SchemeAKnobs, SchemeAPolicy};
 use migm::scheduler::scheme_b::{SchemeBKnobs, SchemeBPolicy};
-use migm::scheduler::{Orchestrator, ShardedPolicy};
+use migm::scheduler::{Orchestrator, RunResult, SchedulingPolicy, ShardedPolicy};
+use migm::tuner::{fleet_bench_row, FleetBenchArm};
 use migm::util::bench::{black_box, Bench, BenchStats};
 use migm::util::{Json, Rng};
 use migm::workloads::synthetic::{fleet_job, many_instance_spec, sized_job, tiered_spec};
+use migm::workloads::{rodinia, JobSpec};
 use migm::GpuSpec;
 
 /// Drain `n_gpus * per_gpu` copies of `job` through a sharded Scheme-B
@@ -68,6 +73,49 @@ fn drain_scheme_a_tiered(spec: &Arc<GpuSpec>, n_gpus: usize, per_gpu: usize) -> 
     orch.fleet_result().metrics.makespan_s
 }
 
+/// A30-safe mixed fleet, cycling A30/A100/H100 in fleet order.
+fn hetero_fleet_specs(n: usize) -> Vec<Arc<GpuSpec>> {
+    (0..n)
+        .map(|i| {
+            Arc::new(match i % 3 {
+                0 => GpuSpec::a30_24gb(),
+                1 => GpuSpec::a100_40gb(),
+                _ => GpuSpec::h100_80gb(),
+            })
+        })
+        .collect()
+}
+
+/// Skewed A30-safe pool: heavy hybridsort jobs (22 GB, 6-GPC demand)
+/// interleaved with light 0.9 GB bfs jobs. The heavy fits the A30's
+/// full 24 GB profile but only 4 of its 6 demanded GPCs — two compute
+/// waves per job — so every heavy the round-robin deal sends there
+/// costs twice the runtime AND the worst joules/job in the fleet; the
+/// cost model's rate-proportional routing sends the A30 far fewer.
+fn skewed_hetero_jobs(n: usize) -> Vec<JobSpec> {
+    let heavy = rodinia::by_name("hybridsort").unwrap().job(7);
+    let light = rodinia::by_name("bfs").unwrap().job(7);
+    (0..n)
+        .map(|i| if i % 2 == 0 { heavy.clone() } else { light.clone() })
+        .collect()
+}
+
+/// Drain the job pool through `policy` on the mixed fleet; returns the
+/// full fleet result so the head-to-head can compare makespan and
+/// joules/job, not just wall time.
+fn drain_hetero<P: SchedulingPolicy>(
+    specs: &[Arc<GpuSpec>],
+    jobs: &[JobSpec],
+    policy: P,
+) -> RunResult {
+    let mut orch = Orchestrator::new(specs.to_vec(), false, policy);
+    for j in jobs {
+        orch.submit_at(j.clone(), 0.0);
+    }
+    orch.run_to_completion();
+    orch.fleet_result()
+}
+
 fn main() {
     let smoke = std::env::var("MIGM_BENCH_SMOKE").is_ok();
     let b = if smoke { Bench::coarse() } else { Bench::new() };
@@ -110,6 +158,93 @@ fn main() {
         all.push(cb.run("orch_fleet_10k_jobs_scheme_b_batch", || {
             black_box(drain_scheme_b(&synth, 640, per, &fjob, None))
         }));
+    }
+
+    // ---- heterogeneous head-to-head: FleetPolicy vs ShardedPolicy --
+    // Mixed A30/A100/H100 fleet, skewed pool. Both arms run identical
+    // Scheme B shards; only the routing layer differs (legacy
+    // round-robin deal vs cost-model placement + work stealing). The
+    // win is asserted, so the CI smoke run enforces it, and recorded
+    // as a `migm.bench.fleet.v1` trajectory row.
+    let hetero_gpus = if smoke { 3 } else { 6 };
+    let hetero_n = if smoke { 120 } else { 1_020 };
+    let hspecs = hetero_fleet_specs(hetero_gpus);
+    let pool = skewed_hetero_jobs(hetero_n);
+    let mut fleet_last: Option<RunResult> = None;
+    let mut sharded_last: Option<RunResult> = None;
+    all.push(b.run("orch_hetero_1k_jobs_fleet_cost_steal", || {
+        let policy =
+            FleetPolicy::scheme_b(&hspecs, FleetKnobs::balanced(), SchemeBKnobs::default());
+        let r = drain_hetero(&hspecs, &pool, policy);
+        let makespan = r.metrics.makespan_s;
+        fleet_last = Some(r);
+        black_box(makespan)
+    }));
+    all.push(b.run("orch_hetero_1k_jobs_sharded_round_robin", || {
+        let policy = ShardedPolicy::new(
+            (0..hetero_gpus)
+                .map(|g| SchemeBPolicy::new_on(hspecs[g].clone(), SchemeBKnobs::default(), g))
+                .collect(),
+        );
+        let r = drain_hetero(&hspecs, &pool, policy);
+        let makespan = r.metrics.makespan_s;
+        sharded_last = Some(r);
+        black_box(makespan)
+    }));
+    let (fr, sr) = (
+        fleet_last.expect("fleet arm ran"),
+        sharded_last.expect("sharded arm ran"),
+    );
+    assert!(
+        fr.metrics.makespan_s < sr.metrics.makespan_s,
+        "fleet makespan {:.1}s must beat sharded {:.1}s",
+        fr.metrics.makespan_s,
+        sr.metrics.makespan_s
+    );
+    assert!(
+        fr.metrics.energy_per_job_j < sr.metrics.energy_per_job_j,
+        "fleet {:.0} J/job must beat sharded {:.0} J/job",
+        fr.metrics.energy_per_job_j,
+        sr.metrics.energy_per_job_j
+    );
+    println!(
+        "hetero head-to-head ({hetero_gpus} GPUs, {hetero_n} jobs): fleet wins \
+         makespan x{:.2}, J/job x{:.2}",
+        sr.metrics.makespan_s / fr.metrics.makespan_s,
+        sr.metrics.energy_per_job_j / fr.metrics.energy_per_job_j
+    );
+    let fleet_row = fleet_bench_row(
+        "orch_hetero_fleet_vs_sharded",
+        hetero_n,
+        FleetBenchArm::from_result(&fr),
+        FleetBenchArm::from_result(&sr),
+    );
+
+    if !smoke {
+        let cb = Bench::coarse();
+        let pool_10k = skewed_hetero_jobs(10_020);
+        let hspecs_10k = hetero_fleet_specs(12);
+        all.push(cb.run("orch_hetero_10k_jobs_fleet_cost_steal", || {
+            let policy =
+                FleetPolicy::scheme_b(&hspecs_10k, FleetKnobs::balanced(), SchemeBKnobs::default());
+            black_box(drain_hetero(&hspecs_10k, &pool_10k, policy).metrics.makespan_s)
+        }));
+    }
+
+    if let Ok(path) = std::env::var("MIGM_TRAJECTORY") {
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) if !t.trim().is_empty() => t,
+            _ => "[]".to_string(),
+        };
+        let rows = match Json::parse(&text) {
+            Ok(Json::Arr(mut rows)) => {
+                rows.push(fleet_row);
+                rows
+            }
+            _ => vec![fleet_row],
+        };
+        std::fs::write(&path, format!("{}\n", Json::Arr(rows))).expect("writing trajectory");
+        println!("appended fleet head-to-head row to {path}");
     }
 
     if let Ok(path) = std::env::var("MIGM_BENCH_JSON") {

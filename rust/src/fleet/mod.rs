@@ -1,0 +1,568 @@
+//! The heterogeneous fleet scheduler: one global arrival queue over a
+//! mixed fleet of GPUs, cost-model placement, and work stealing —
+//! ground-truthed by an exhaustive placement oracle.
+//!
+//! [`ShardedPolicy`](crate::scheduler::ShardedPolicy) — the bench/legacy
+//! path — deals arrivals round-robin to identical per-GPU shards, which
+//! is wrong the moment the fleet mixes A30/A100/H100 parts: the slowest
+//! GPU gets the same share as the fastest and becomes the makespan.
+//! [`FleetPolicy`] replaces the deal with a *routing* layer in front of
+//! the same single-GPU shard policies:
+//!
+//! * [`queue`] — the global queue: per-GPU FIFO backlogs plus
+//!   outstanding counters. A backlogged job has never touched a shard,
+//!   an instance, or a partition plan, so it can move GPUs freely.
+//! * [`placement`] — the cost-model engine scoring every GPU for an
+//!   arrival: compute-normalized queue depth, belief-band slice fit,
+//!   `PartitionPlan` reconfiguration cost from the per-op latency
+//!   model, and per-spec profile energy. Round-robin mode skips the
+//!   scoring and reproduces `ShardedPolicy` bit for bit (the parity
+//!   test below pins it).
+//! * [`steal`] — work stealing between arrival barriers: when a GPU
+//!   goes idle it takes the newest fitting job from the deepest
+//!   backlog. Running (or shard-held) jobs never migrate, and a stolen
+//!   job keeps its `submit_time` and belief id, so queue-time
+//!   accounting is unaffected by the transfer.
+//! * [`oracle`] — branch-and-bound optimal placement on ≤ 4 GPU x
+//!   ≤ 12 job sub-problems (arXiv:2409.06646 style), anchoring the
+//!   fast engine the way `sim::naive` anchors the event engine:
+//!   the property suite proves the engine's static shadow stays
+//!   within [`oracle::DOCUMENTED_GAP`] of the optimum and that
+//!   solutions are bit-reproducible per seed.
+//!
+//! The shard policies underneath are unchanged — each still sees a
+//! per-GPU FIFO world through the same `SchedulingPolicy` callbacks.
+//! The fleet layer keeps at most the *stuck head job* inside a shard
+//! (handover stops as soon as the shard reports pending work), so
+//! everything else stays in the global queue where the steal planner
+//! can reach it.
+
+pub mod oracle;
+pub mod placement;
+pub mod queue;
+pub mod steal;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::mig::{GpuSpec, InstanceId, PartitionPlan};
+use crate::scheduler::scheme_b::SchemeBPolicy;
+use crate::scheduler::{
+    Action, GpuId, JobEvent, PendingJob, PolicyCtx, SchedulingPolicy, SchemeBKnobs,
+};
+use crate::util::Json;
+
+pub use placement::{PlacementMode, PlacementWeights};
+pub use queue::GlobalQueue;
+
+/// Tunable knobs of the fleet layer, serializable so the
+/// [`tuner`](crate::tuner) can sweep them. `Default` is the legacy
+/// configuration — round-robin, no stealing — which reproduces
+/// [`ShardedPolicy`](crate::scheduler::ShardedPolicy) bit for bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetKnobs {
+    pub placement: PlacementMode,
+    /// Migrate queued (never running) jobs from backlogged GPUs to idle
+    /// ones between arrival barriers.
+    pub steal: bool,
+    /// Term weights of the cost-model scoring (ignored by round-robin).
+    pub weights: PlacementWeights,
+}
+
+impl Default for FleetKnobs {
+    fn default() -> Self {
+        FleetKnobs {
+            placement: PlacementMode::RoundRobin,
+            steal: false,
+            weights: PlacementWeights::default(),
+        }
+    }
+}
+
+impl FleetKnobs {
+    /// The full fleet configuration: cost-model placement + stealing.
+    pub fn balanced() -> Self {
+        FleetKnobs {
+            placement: PlacementMode::CostModel,
+            steal: true,
+            weights: PlacementWeights::default(),
+        }
+    }
+
+    /// Compact label fragment for sweep reports ("rr" / "cost+steal").
+    pub fn label(&self) -> String {
+        let mut s = match self.placement {
+            PlacementMode::RoundRobin => "rr".to_string(),
+            PlacementMode::CostModel => "cost".to_string(),
+        };
+        if self.steal {
+            s.push_str("+steal");
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("placement", Json::str(self.placement.as_str())),
+            ("steal", Json::Bool(self.steal)),
+            ("w_queue", Json::num(self.weights.queue)),
+            ("w_fit", Json::num(self.weights.fit)),
+            ("w_reconfig", Json::num(self.weights.reconfig)),
+            ("w_energy", Json::num(self.weights.energy)),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let mut knobs = FleetKnobs::default();
+        match doc.get("placement") {
+            Json::Null => {}
+            v => match v.as_str().and_then(PlacementMode::from_str) {
+                Some(m) => knobs.placement = m,
+                None => bail!("placement must be \"round-robin\" or \"cost-model\", got {v}"),
+            },
+        }
+        match doc.get("steal") {
+            Json::Null => {}
+            v => match v.as_bool() {
+                Some(b) => knobs.steal = b,
+                None => bail!("steal must be a boolean, got {v}"),
+            },
+        }
+        fn weight(doc: &Json, key: &str, slot: &mut f64) -> Result<()> {
+            match doc.get(key) {
+                Json::Null => Ok(()),
+                v => match v.as_f64() {
+                    Some(x) if x >= 0.0 => {
+                        *slot = x;
+                        Ok(())
+                    }
+                    _ => bail!("{key} must be a non-negative number, got {v}"),
+                },
+            }
+        }
+        weight(doc, "w_queue", &mut knobs.weights.queue)?;
+        weight(doc, "w_fit", &mut knobs.weights.fit)?;
+        weight(doc, "w_reconfig", &mut knobs.weights.reconfig)?;
+        weight(doc, "w_energy", &mut knobs.weights.energy)?;
+        Ok(knobs)
+    }
+}
+
+/// A fleet-level scheduling policy: global queue + placement engine +
+/// work stealing in front of per-GPU shard policies.
+pub struct FleetPolicy<P: SchedulingPolicy> {
+    shards: Vec<P>,
+    knobs: FleetKnobs,
+    queue: GlobalQueue,
+    /// Round-robin / tie-break cursor (monotone, like `ShardedPolicy`'s).
+    cursor: usize,
+    steals: u64,
+}
+
+impl<P: SchedulingPolicy> FleetPolicy<P> {
+    /// One shard policy per GPU, in GPU order.
+    pub fn new(shards: Vec<P>, knobs: FleetKnobs) -> Self {
+        assert!(!shards.is_empty(), "fleet policy needs at least one shard");
+        let n = shards.len();
+        FleetPolicy {
+            shards,
+            knobs,
+            queue: GlobalQueue::new(n),
+            cursor: 0,
+            steals: 0,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, gpu: GpuId) -> &P {
+        &self.shards[gpu]
+    }
+
+    pub fn knobs(&self) -> &FleetKnobs {
+        &self.knobs
+    }
+
+    /// Jobs migrated by the steal planner so far.
+    pub fn steals(&self) -> u64 {
+        self.steals
+    }
+
+    /// Fleet-level queue depth (backlog + outstanding) for one GPU.
+    pub fn depth(&self, gpu: GpuId) -> usize {
+        self.queue.depth(gpu)
+    }
+
+    /// Route one arrival: pick a GPU, then either hand it straight to
+    /// the shard (no-steal mode — the legacy deal) or park it in the
+    /// global backlog and drain.
+    fn route(&mut self, ctx: &PolicyCtx, job: PendingJob, acts: &mut Vec<Action>) {
+        let g = placement::choose_gpu(
+            ctx,
+            &self.queue,
+            ctx.belief(job.belief).estimate(),
+            self.knobs.placement,
+            &self.knobs.weights,
+            &mut self.cursor,
+        );
+        if self.knobs.steal {
+            self.queue.push(g, job);
+            self.drain(ctx, g, acts);
+        } else {
+            self.queue.note_handover(g);
+            acts.extend(self.shards[g].on_submit(ctx, job));
+        }
+    }
+
+    /// Hand backlogged jobs to `g`'s shard until it reports pending
+    /// work (i.e. it is sitting on a stuck head job) or the backlog is
+    /// empty. Everything not handed over stays stealable.
+    fn drain(&mut self, ctx: &PolicyCtx, g: GpuId, acts: &mut Vec<Action>) {
+        while !self.shards[g].has_pending_work() {
+            let Some(job) = self.queue.pop_front(g) else {
+                break;
+            };
+            self.queue.note_handover(g);
+            acts.extend(self.shards[g].on_submit(ctx, job));
+        }
+    }
+
+    /// Drain `thief`'s own backlog, then steal from the deepest donor
+    /// while the thief stays free. No-op unless stealing is enabled.
+    fn rebalance(&mut self, ctx: &PolicyCtx, thief: GpuId, acts: &mut Vec<Action>) {
+        if !self.knobs.steal {
+            return;
+        }
+        self.drain(ctx, thief, acts);
+        while !self.shards[thief].has_pending_work() && self.queue.backlog_len(thief) == 0 {
+            let Some(job) = steal::steal_for(ctx, &mut self.queue, thief) else {
+                break;
+            };
+            self.steals += 1;
+            self.queue.push(thief, job);
+            self.drain(ctx, thief, acts);
+        }
+    }
+}
+
+impl FleetPolicy<SchemeBPolicy> {
+    /// The standard fleet: one Scheme-B shard per GPU.
+    pub fn scheme_b(specs: &[Arc<GpuSpec>], knobs: FleetKnobs, b: SchemeBKnobs) -> Self {
+        let shards = specs
+            .iter()
+            .enumerate()
+            .map(|(g, spec)| SchemeBPolicy::new_on(spec.clone(), b, g))
+            .collect();
+        FleetPolicy::new(shards, knobs)
+    }
+}
+
+impl<P: SchedulingPolicy> SchedulingPolicy for FleetPolicy<P> {
+    fn name(&self) -> &'static str {
+        "fleet"
+    }
+
+    fn on_submit(&mut self, ctx: &PolicyCtx, job: PendingJob) -> Vec<Action> {
+        let mut acts = Vec::new();
+        self.route(ctx, job, &mut acts);
+        acts
+    }
+
+    fn on_job_finish(&mut self, ctx: &PolicyCtx, ev: JobEvent) -> Vec<Action> {
+        let g = ev.gpu;
+        self.queue.note_finish(g);
+        let mut acts = self.shards[g].on_job_finish(ctx, ev);
+        self.rebalance(ctx, g, &mut acts);
+        acts
+    }
+
+    fn on_oom(&mut self, ctx: &PolicyCtx, ev: JobEvent, iter: usize, mem_gb: f64) -> Vec<Action> {
+        // The job stays inside its shard (it already holds sim state
+        // there); outstanding is unchanged until it finishes.
+        self.shards[ev.gpu].on_oom(ctx, ev, iter, mem_gb)
+    }
+
+    fn on_early_restart_signal(
+        &mut self,
+        ctx: &PolicyCtx,
+        ev: JobEvent,
+        iter: usize,
+        predicted_peak_gb: f64,
+    ) -> Vec<Action> {
+        self.shards[ev.gpu].on_early_restart_signal(ctx, ev, iter, predicted_peak_gb)
+    }
+
+    fn on_reconfig_done(
+        &mut self,
+        ctx: &PolicyCtx,
+        gpu: GpuId,
+        plan: &PartitionPlan,
+        created: &[InstanceId],
+    ) -> Vec<Action> {
+        let mut acts = self.shards[gpu].on_reconfig_done(ctx, gpu, plan, created);
+        self.rebalance(ctx, gpu, &mut acts);
+        acts
+    }
+
+    fn on_stalled(&mut self, ctx: &PolicyCtx) -> Vec<Action> {
+        let mut acts = Vec::new();
+        if self.knobs.steal {
+            for g in 0..self.shards.len() {
+                self.rebalance(ctx, g, &mut acts);
+            }
+        }
+        if acts.is_empty() {
+            // Shard-order fan-out, exactly like `ShardedPolicy`.
+            for shard in &mut self.shards {
+                acts.extend(shard.on_stalled(ctx));
+            }
+        }
+        acts
+    }
+
+    fn has_pending_work(&self) -> bool {
+        self.queue.total_backlog() > 0 || self.shards.iter().any(|s| s.has_pending_work())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{Orchestrator, RunResult, ShardedPolicy};
+    use crate::workloads::rodinia;
+    use crate::workloads::JobSpec;
+    use std::sync::Arc;
+
+    fn b_shards(specs: &[Arc<GpuSpec>]) -> Vec<SchemeBPolicy> {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(g, s)| SchemeBPolicy::new_on(s.clone(), SchemeBKnobs::default(), g))
+            .collect()
+    }
+
+    /// Interleave `n` long (euler3d, 17 GB) and short (bfs) jobs so a
+    /// round-robin deal sends every long job to GPU 0.
+    fn skewed_jobs(n_pairs: usize) -> Vec<JobSpec> {
+        let long = rodinia::by_name("euler3d").unwrap().job(7);
+        let short = rodinia::by_name("bfs").unwrap().job(7);
+        (0..n_pairs)
+            .flat_map(|_| [long.clone(), short.clone()])
+            .collect()
+    }
+
+    fn run_fleet<P: SchedulingPolicy>(
+        specs: Vec<Arc<GpuSpec>>,
+        policy: P,
+        jobs: &[JobSpec],
+        spacing_s: f64,
+    ) -> (RunResult, Orchestrator<P>) {
+        let mut orch = Orchestrator::new(specs, false, policy);
+        for (i, j) in jobs.iter().enumerate() {
+            orch.submit_at(j.clone(), i as f64 * spacing_s);
+        }
+        orch.run_to_completion();
+        (orch.fleet_result(), orch)
+    }
+
+    #[test]
+    fn parity_with_sharded_policy_is_bit_for_bit() {
+        // Homogeneous fleet, default knobs (round-robin, no stealing):
+        // FleetPolicy must reproduce the legacy ShardedPolicy exactly —
+        // batch and online.
+        let specs = vec![Arc::new(GpuSpec::a100_40gb()); 2];
+        for spacing in [0.0, 0.7] {
+            let jobs = skewed_jobs(6);
+            let (sharded, _) = run_fleet(
+                specs.clone(),
+                ShardedPolicy::new(b_shards(&specs)),
+                &jobs,
+                spacing,
+            );
+            let (fleet, orch) = run_fleet(
+                specs.clone(),
+                FleetPolicy::new(b_shards(&specs), FleetKnobs::default()),
+                &jobs,
+                spacing,
+            );
+            assert_eq!(orch.policy().steals(), 0);
+            assert_eq!(
+                sharded.metrics.makespan_s.to_bits(),
+                fleet.metrics.makespan_s.to_bits(),
+                "spacing {spacing}"
+            );
+            assert_eq!(
+                sharded.metrics.energy_j.to_bits(),
+                fleet.metrics.energy_j.to_bits()
+            );
+            assert_eq!(
+                sharded.latency.p99_turnaround_s.to_bits(),
+                fleet.latency.p99_turnaround_s.to_bits()
+            );
+            assert_eq!(sharded.metrics.reconfig_ops, fleet.metrics.reconfig_ops);
+            assert_eq!(sharded.records.len(), fleet.records.len());
+        }
+    }
+
+    #[test]
+    fn stealing_rescues_a_backlogged_gpu() {
+        // Round-robin deals all 8 long jobs to GPU 0 and all shorts to
+        // GPU 1; stealing must migrate longs to the idle GPU 1 and cut
+        // the makespan.
+        let specs = vec![Arc::new(GpuSpec::a100_40gb()); 2];
+        let jobs = skewed_jobs(8);
+        let rr = FleetKnobs::default();
+        let (baseline, _) = run_fleet(
+            specs.clone(),
+            FleetPolicy::new(b_shards(&specs), rr.clone()),
+            &jobs,
+            0.0,
+        );
+        let stealing = FleetKnobs {
+            steal: true,
+            ..FleetKnobs::default()
+        };
+        let (stolen, orch) = run_fleet(
+            specs.clone(),
+            FleetPolicy::new(b_shards(&specs), stealing),
+            &jobs,
+            0.0,
+        );
+        assert!(orch.policy().steals() > 0, "no steals happened");
+        assert!(
+            stolen.metrics.makespan_s < baseline.metrics.makespan_s,
+            "steal {} vs rr {}",
+            stolen.metrics.makespan_s,
+            baseline.metrics.makespan_s
+        );
+        assert_eq!(stolen.records.len(), jobs.len(), "every job completes");
+    }
+
+    #[test]
+    fn stolen_jobs_keep_queue_time_accounting() {
+        // Online arrivals on a heterogeneous fleet with stealing: every
+        // completion record must keep its original submit time (the
+        // multiset of record submit times equals the arrival times) and
+        // queueing delays stay non-negative.
+        let specs = vec![
+            Arc::new(GpuSpec::a30_24gb()),
+            Arc::new(GpuSpec::h100_80gb()),
+        ];
+        let jobs = skewed_jobs(7);
+        let spacing = 0.9;
+        // Round-robin + stealing: the deal floods the A30 with every
+        // long job, so the H100 must go idle and migrate work.
+        let knobs = FleetKnobs {
+            steal: true,
+            ..FleetKnobs::default()
+        };
+        let (result, orch) = run_fleet(
+            specs.clone(),
+            FleetPolicy::scheme_b(&specs, knobs, SchemeBKnobs::default()),
+            &jobs,
+            spacing,
+        );
+        assert_eq!(result.records.len(), jobs.len());
+        let mut submits: Vec<f64> = result.records.iter().map(|r| r.submit_time).collect();
+        submits.sort_by(f64::total_cmp);
+        let expected: Vec<f64> = (0..jobs.len()).map(|i| i as f64 * spacing).collect();
+        for (got, want) in submits.iter().zip(&expected) {
+            assert_eq!(got.to_bits(), want.to_bits(), "submit time rewritten");
+        }
+        for r in &result.records {
+            assert!(
+                r.start_time >= r.submit_time - 1e-9,
+                "{}: started before submission",
+                r.name
+            );
+        }
+        // the skew guarantees migrations actually happened
+        assert!(orch.policy().steals() > 0);
+    }
+
+    #[test]
+    fn cost_model_with_stealing_beats_round_robin_on_mixed_fleet() {
+        // The acceptance scenario in miniature: skewed mix over
+        // A30 + A100 + H100. The legacy deal makes the A30 the
+        // makespan; the cost model + stealing must beat it.
+        let specs = vec![
+            Arc::new(GpuSpec::a30_24gb()),
+            Arc::new(GpuSpec::a100_40gb()),
+            Arc::new(GpuSpec::h100_80gb()),
+        ];
+        let jobs = skewed_jobs(9);
+        let (rr, _) = run_fleet(
+            specs.clone(),
+            FleetPolicy::scheme_b(&specs, FleetKnobs::default(), SchemeBKnobs::default()),
+            &jobs,
+            0.0,
+        );
+        let (fleet, _) = run_fleet(
+            specs.clone(),
+            FleetPolicy::scheme_b(&specs, FleetKnobs::balanced(), SchemeBKnobs::default()),
+            &jobs,
+            0.0,
+        );
+        assert!(
+            fleet.metrics.makespan_s < rr.metrics.makespan_s,
+            "fleet {} vs sharded-equivalent {}",
+            fleet.metrics.makespan_s,
+            rr.metrics.makespan_s
+        );
+    }
+
+    #[test]
+    fn steal_mode_runs_are_deterministic() {
+        let specs = vec![
+            Arc::new(GpuSpec::a30_24gb()),
+            Arc::new(GpuSpec::h100_80gb()),
+        ];
+        let jobs = skewed_jobs(6);
+        let run = || {
+            run_fleet(
+                specs.clone(),
+                FleetPolicy::scheme_b(&specs, FleetKnobs::balanced(), SchemeBKnobs::default()),
+                &jobs,
+                0.4,
+            )
+        };
+        let (a, oa) = run();
+        let (b, ob) = run();
+        assert_eq!(a.metrics.makespan_s.to_bits(), b.metrics.makespan_s.to_bits());
+        assert_eq!(a.metrics.energy_j.to_bits(), b.metrics.energy_j.to_bits());
+        assert_eq!(a.latency.p99_queue_s.to_bits(), b.latency.p99_queue_s.to_bits());
+        assert_eq!(oa.policy().steals(), ob.policy().steals());
+    }
+
+    #[test]
+    fn knobs_roundtrip_and_reject_garbage() {
+        let knobs = FleetKnobs {
+            placement: PlacementMode::CostModel,
+            steal: true,
+            weights: PlacementWeights {
+                queue: 2.0,
+                fit: 0.5,
+                reconfig: 0.0,
+                energy: 1.5,
+            },
+        };
+        let back = FleetKnobs::from_json(&knobs.to_json()).unwrap();
+        assert_eq!(knobs, back);
+        // missing keys -> legacy defaults
+        let legacy = FleetKnobs::from_json(&Json::obj(vec![])).unwrap();
+        assert_eq!(legacy, FleetKnobs::default());
+        assert!(FleetKnobs::from_json(&Json::obj(vec![(
+            "placement",
+            Json::str("magic")
+        )]))
+        .is_err());
+        assert!(FleetKnobs::from_json(&Json::obj(vec![(
+            "w_queue",
+            Json::num(-1.0)
+        )]))
+        .is_err());
+    }
+}

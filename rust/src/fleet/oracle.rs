@@ -1,0 +1,448 @@
+//! Ground-truth placement: an exhaustive branch-and-bound solver over
+//! small sub-problems, in the style of "Optimal Workload Placement on
+//! Multi-Instance GPUs" (arXiv:2409.06646).
+//!
+//! The oracle works on a deliberately simplified static model — each
+//! job `j` on GPU `g` costs `service_time(j, g) = work_gpc_s /
+//! compute_slices(target profile)` seconds and draws the placement
+//! engine's modeled profile watts — and minimizes the lexicographic
+//! objective **(makespan, energy)**. That is the same cost vocabulary
+//! the live [`placement`](super::placement) engine scores with (queue
+//! term ↔ accumulated load, energy term ↔ profile watts), so the
+//! oracle grounds the fast path the way `sim::naive` grounds the event
+//! engine and `plan_reconfig_exhaustive` grounds the reconfiguration
+//! planner.
+//!
+//! [`assign_greedy`] is the static shadow of the cost-model placement
+//! engine: the same list-scheduling decision rule (earliest modeled
+//! finish, energy tie-break, index tie-break) run over a frozen job
+//! set. The property suite proves it stays within
+//! [`DOCUMENTED_GAP`] of [`solve`]'s optimum on every pinned
+//! sub-problem — an *empirical* bound over the seeded problem
+//! distribution (LPT-style list scheduling has no 2x worst-case
+//! guarantee on unrelated machines, so the suite is the contract).
+//!
+//! Everything here is deterministic: jobs are ordered by descending
+//! max service time with index tie-breaks, GPUs are explored in index
+//! order, and strict-improvement comparisons keep the first optimum
+//! found, so a seed always reproduces bit-identical solutions.
+
+use std::sync::Arc;
+
+use crate::estimator::{Estimate, EstimationMethod};
+use crate::mig::GpuSpec;
+use crate::scheduler::target_profile;
+use crate::util::rng::Rng;
+use crate::workloads::rodinia;
+
+use super::placement::{fits, profile_watts};
+
+/// Sub-problem caps: branch-and-bound is exponential, so the property
+/// suite stays at arXiv:2409.06646's tractable scale.
+pub const MAX_GPUS: usize = 4;
+pub const MAX_JOBS: usize = 12;
+
+/// The documented optimality gap of the fast placement engine:
+/// `assign_greedy(p).makespan_s <= DOCUMENTED_GAP * solve(p).makespan_s`
+/// on every property-suite sub-problem (empirical, over the pinned
+/// seed set — see the module docs).
+pub const DOCUMENTED_GAP: f64 = 2.0;
+
+/// One job in the static placement model.
+#[derive(Debug, Clone)]
+pub struct JobDemand {
+    pub mem_gb: f64,
+    pub gpcs: u8,
+    /// Total work in GPC-seconds (runtime on one GPC).
+    pub work_gpc_s: f64,
+}
+
+/// A static placement sub-problem: assign every job to one GPU.
+#[derive(Debug, Clone)]
+pub struct PlacementProblem {
+    pub specs: Vec<Arc<GpuSpec>>,
+    pub jobs: Vec<JobDemand>,
+}
+
+/// A full assignment with its objective values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    /// `assignment[j]` = GPU index of job `j`.
+    pub assignment: Vec<usize>,
+    pub makespan_s: f64,
+    pub energy_j: f64,
+}
+
+/// Modeled service time of `job` on `spec`, or `None` when the demand
+/// exceeds the largest profile.
+pub fn service_time_s(spec: &GpuSpec, job: &JobDemand) -> Option<f64> {
+    let est = Estimate::exact(job.mem_gb, job.gpcs, EstimationMethod::CompilerAnalysis);
+    if !fits(spec, &est) {
+        return None;
+    }
+    let p = target_profile(spec, &est);
+    Some(job.work_gpc_s / spec.profiles[p].compute_slices.max(1) as f64)
+}
+
+/// Modeled draw (W) of `job`'s target profile on `spec`.
+pub fn service_watts(spec: &GpuSpec, job: &JobDemand) -> Option<f64> {
+    let est = Estimate::exact(job.mem_gb, job.gpcs, EstimationMethod::CompilerAnalysis);
+    if !fits(spec, &est) {
+        return None;
+    }
+    let p = target_profile(spec, &est);
+    Some(profile_watts(spec, &spec.profiles[p]))
+}
+
+/// Score an assignment under the static model. Infeasible placements
+/// evaluate to `(inf, inf)`.
+pub fn evaluate(problem: &PlacementProblem, assignment: &[usize]) -> (f64, f64) {
+    let mut loads = vec![0.0f64; problem.specs.len()];
+    let mut energy = 0.0f64;
+    for (j, &g) in assignment.iter().enumerate() {
+        let job = &problem.jobs[j];
+        let spec = &problem.specs[g];
+        match (service_time_s(spec, job), service_watts(spec, job)) {
+            (Some(t), Some(w)) => {
+                loads[g] += t;
+                energy += w * t;
+            }
+            _ => return (f64::INFINITY, f64::INFINITY),
+        }
+    }
+    let makespan = loads.iter().copied().fold(0.0f64, f64::max);
+    (makespan, energy)
+}
+
+/// Job indices in the deterministic exploration order: descending max
+/// service time over the fleet, index tie-break.
+fn job_order(problem: &PlacementProblem) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..problem.jobs.len()).collect();
+    let max_t: Vec<f64> = problem
+        .jobs
+        .iter()
+        .map(|j| {
+            problem
+                .specs
+                .iter()
+                .filter_map(|s| service_time_s(s, j))
+                .fold(0.0f64, f64::max)
+        })
+        .collect();
+    order.sort_by(|&a, &b| max_t[b].total_cmp(&max_t[a]).then(a.cmp(&b)));
+    order
+}
+
+/// The static shadow of the cost-model placement engine: list-schedule
+/// each job (in [`job_order`]) onto the GPU with the earliest modeled
+/// finish, breaking ties by lower energy draw, then lower index.
+pub fn assign_greedy(problem: &PlacementProblem) -> Placement {
+    let n = problem.specs.len();
+    let mut loads = vec![0.0f64; n];
+    let mut assignment = vec![0usize; problem.jobs.len()];
+    for &j in &job_order(problem) {
+        let job = &problem.jobs[j];
+        let mut best: Option<(f64, f64, usize)> = None;
+        for (g, spec) in problem.specs.iter().enumerate() {
+            let (Some(t), Some(w)) = (service_time_s(spec, job), service_watts(spec, job))
+            else {
+                continue;
+            };
+            let key = (loads[g] + t, w * t, g);
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    key.0
+                        .total_cmp(&b.0)
+                        .then(key.1.total_cmp(&b.1))
+                        .then(key.2.cmp(&b.2))
+                        .is_lt()
+                }
+            };
+            if better {
+                best = Some(key);
+            }
+        }
+        let (t, _, g) = best.expect("every job must fit some GPU");
+        loads[g] += t;
+        assignment[j] = g;
+    }
+    let (makespan_s, energy_j) = evaluate(problem, &assignment);
+    Placement {
+        assignment,
+        makespan_s,
+        energy_j,
+    }
+}
+
+/// Exhaustive branch-and-bound over all `n_gpus^n_jobs` assignments,
+/// minimizing `(makespan, energy)` lexicographically. Panics above the
+/// [`MAX_GPUS`]/[`MAX_JOBS`] caps. Prunes on a makespan lower bound
+/// (current max load, best single-GPU service time of any remaining
+/// job, and remaining-work averaging) and skips identical-spec GPUs at
+/// identical load (pure symmetry). Seeded with [`assign_greedy`], so
+/// the oracle is never worse than the fast path by construction.
+pub fn solve(problem: &PlacementProblem) -> Placement {
+    assert!(
+        problem.specs.len() <= MAX_GPUS && problem.jobs.len() <= MAX_JOBS,
+        "oracle sub-problems are capped at {MAX_GPUS} GPUs x {MAX_JOBS} jobs"
+    );
+    let n = problem.specs.len();
+    let order = job_order(problem);
+    // Per (job, gpu) service/energy tables in exploration order.
+    let t: Vec<Vec<Option<f64>>> = order
+        .iter()
+        .map(|&j| {
+            problem
+                .specs
+                .iter()
+                .map(|s| service_time_s(s, &problem.jobs[j]))
+                .collect()
+        })
+        .collect();
+    let e: Vec<Vec<Option<f64>>> = order
+        .iter()
+        .map(|&j| {
+            let job = &problem.jobs[j];
+            problem
+                .specs
+                .iter()
+                .map(|s| {
+                    service_watts(s, job)
+                        .zip(service_time_s(s, job))
+                        .map(|(w, tt)| w * tt)
+                })
+                .collect()
+        })
+        .collect();
+    // Suffix sums of each job's *cheapest* service time: a lower bound
+    // on the work the remaining jobs add somewhere.
+    let min_t: Vec<f64> = t
+        .iter()
+        .map(|row| {
+            row.iter()
+                .flatten()
+                .copied()
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
+    let mut suffix_min_sum = vec![0.0f64; order.len() + 1];
+    let mut suffix_min_max = vec![0.0f64; order.len() + 1];
+    for k in (0..order.len()).rev() {
+        suffix_min_sum[k] = suffix_min_sum[k + 1] + min_t[k];
+        suffix_min_max[k] = suffix_min_max[k + 1].max(min_t[k]);
+    }
+
+    let mut best = assign_greedy(problem);
+    let mut loads = vec![0.0f64; n];
+    let mut chosen = vec![0usize; order.len()];
+
+    #[allow(clippy::too_many_arguments)]
+    fn dfs(
+        k: usize,
+        order: &[usize],
+        specs: &[Arc<GpuSpec>],
+        t: &[Vec<Option<f64>>],
+        e: &[Vec<Option<f64>>],
+        suffix_min_sum: &[f64],
+        suffix_min_max: &[f64],
+        loads: &mut [f64],
+        energy: f64,
+        chosen: &mut [usize],
+        best: &mut Placement,
+    ) {
+        let cur_max = loads.iter().copied().fold(0.0f64, f64::max);
+        // Lower bounds: the tallest GPU so far, the hardest remaining
+        // job placed optimally, and remaining work averaged over the
+        // fleet.
+        let avg = (loads.iter().sum::<f64>() + suffix_min_sum[k]) / loads.len() as f64;
+        let lb = cur_max.max(suffix_min_max[k]).max(avg);
+        if lb > best.makespan_s + 1e-12 {
+            return;
+        }
+        if k == order.len() {
+            let better = cur_max < best.makespan_s - 1e-12
+                || (cur_max <= best.makespan_s + 1e-12 && energy < best.energy_j - 1e-9);
+            if better {
+                let mut assignment = vec![0usize; order.len()];
+                for (pos, &j) in order.iter().enumerate() {
+                    assignment[j] = chosen[pos];
+                }
+                *best = Placement {
+                    assignment,
+                    makespan_s: cur_max,
+                    energy_j: energy,
+                };
+            }
+            return;
+        }
+        for g in 0..loads.len() {
+            let Some(tt) = t[k][g] else { continue };
+            // Symmetry: identical spec at identical load as an earlier
+            // GPU explores an identical subtree.
+            if (0..g).any(|h| specs[h].name == specs[g].name && loads[h] == loads[g]) {
+                continue;
+            }
+            let ee = e[k][g].expect("energy defined where time is");
+            loads[g] += tt;
+            chosen[k] = g;
+            dfs(
+                k + 1,
+                order,
+                specs,
+                t,
+                e,
+                suffix_min_sum,
+                suffix_min_max,
+                loads,
+                energy + ee,
+                chosen,
+                best,
+            );
+            loads[g] -= tt;
+        }
+    }
+
+    dfs(
+        0,
+        &order,
+        &problem.specs,
+        &t,
+        &e,
+        &suffix_min_sum,
+        &suffix_min_max,
+        &mut loads,
+        0.0,
+        &mut chosen,
+        &mut best,
+    );
+    best
+}
+
+/// Seeded sub-problem generator for the property suite: 2–4 GPUs drawn
+/// from the mixed real-spec catalog, 6–12 jobs drawn from the
+/// A30-feasible slice of the Rodinia pool (≤ 22 GB, so every job fits
+/// every GPU and sub-problems never deadlock on infeasibility).
+pub fn random_problem(seed: u64) -> PlacementProblem {
+    let mut rng = Rng::new(seed);
+    let catalog: Vec<Arc<GpuSpec>> = vec![
+        Arc::new(GpuSpec::a30_24gb()),
+        Arc::new(GpuSpec::a100_40gb()),
+        Arc::new(GpuSpec::a100_80gb()),
+        Arc::new(GpuSpec::h100_80gb()),
+    ];
+    let n_gpus = rng.range(2, MAX_GPUS + 1);
+    let specs = (0..n_gpus)
+        .map(|_| catalog[rng.below(catalog.len())].clone())
+        .collect();
+    let pool: Vec<_> = rodinia::pool()
+        .into_iter()
+        .filter(|b| b.mem_gb <= 22.0)
+        .collect();
+    let n_jobs = rng.range(6, MAX_JOBS + 1);
+    let jobs = (0..n_jobs)
+        .map(|_| {
+            let b = &pool[rng.below(pool.len())];
+            let spec = b.job(7);
+            JobDemand {
+                mem_gb: b.mem_gb,
+                gpcs: b.demand_gpcs,
+                work_gpc_s: spec.baseline_runtime_s(b.demand_gpcs) * b.demand_gpcs as f64,
+            }
+        })
+        .collect();
+    PlacementProblem { specs, jobs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The property suite's seed set. Deliberately pinned: the gap is
+    /// documented *over this distribution* (module docs).
+    const SEEDS: std::ops::Range<u64> = 0..16;
+
+    #[test]
+    fn oracle_never_worse_and_greedy_within_documented_gap() {
+        for seed in SEEDS {
+            let p = random_problem(seed);
+            let opt = solve(&p);
+            let fast = assign_greedy(&p);
+            assert!(
+                opt.makespan_s <= fast.makespan_s + 1e-9,
+                "seed {seed}: oracle {} worse than greedy {}",
+                opt.makespan_s,
+                fast.makespan_s
+            );
+            assert!(
+                fast.makespan_s <= DOCUMENTED_GAP * opt.makespan_s + 1e-9,
+                "seed {seed}: greedy {} exceeds {DOCUMENTED_GAP}x oracle {}",
+                fast.makespan_s,
+                opt.makespan_s
+            );
+            assert!(opt.makespan_s.is_finite() && opt.energy_j.is_finite());
+        }
+    }
+
+    #[test]
+    fn solutions_are_bit_reproducible_per_seed() {
+        for seed in SEEDS.step_by(5) {
+            let (p1, p2) = (random_problem(seed), random_problem(seed));
+            for (a, b) in p1.jobs.iter().zip(&p2.jobs) {
+                assert_eq!(a.mem_gb.to_bits(), b.mem_gb.to_bits());
+                assert_eq!(a.work_gpc_s.to_bits(), b.work_gpc_s.to_bits());
+            }
+            let (s1, s2) = (solve(&p1), solve(&p2));
+            assert_eq!(s1.assignment, s2.assignment);
+            assert_eq!(s1.makespan_s.to_bits(), s2.makespan_s.to_bits());
+            assert_eq!(s1.energy_j.to_bits(), s2.energy_j.to_bits());
+            let (g1, g2) = (assign_greedy(&p1), assign_greedy(&p2));
+            assert_eq!(g1.assignment, g2.assignment);
+            assert_eq!(g1.makespan_s.to_bits(), g2.makespan_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn oracle_beats_worst_single_gpu_packing() {
+        // Sanity: with 2 GPUs the optimum is at most everything-on-one.
+        let p = random_problem(3);
+        let all_on_0 = vec![0usize; p.jobs.len()];
+        let (mk0, _) = evaluate(&p, &all_on_0);
+        let opt = solve(&p);
+        assert!(opt.makespan_s <= mk0 + 1e-9);
+    }
+
+    #[test]
+    fn evaluate_flags_infeasible_assignments() {
+        let p = PlacementProblem {
+            specs: vec![Arc::new(GpuSpec::a30_24gb())],
+            jobs: vec![JobDemand {
+                mem_gb: 30.0,
+                gpcs: 6,
+                work_gpc_s: 10.0,
+            }],
+        };
+        let (mk, en) = evaluate(&p, &[0]);
+        assert!(mk.is_infinite() && en.is_infinite());
+        assert!(service_time_s(&p.specs[0], &p.jobs[0]).is_none());
+    }
+
+    #[test]
+    fn service_time_shrinks_on_wider_profiles() {
+        let job = JobDemand {
+            mem_gb: 17.0,
+            gpcs: 3,
+            work_gpc_s: 12.0,
+        };
+        let a30 = GpuSpec::a30_24gb(); // 17 GB -> whole-GPU 4g.24gb
+        let h100 = GpuSpec::h100_80gb(); // 17 GB -> 2g.20gb slice
+        let t_a30 = service_time_s(&a30, &job).unwrap();
+        let t_h100 = service_time_s(&h100, &job).unwrap();
+        assert!((t_a30 - 3.0).abs() < 1e-9, "{t_a30}");
+        assert!((t_h100 - 6.0).abs() < 1e-9, "{t_h100}");
+        // ...but the A30 whole-GPU slot draws far more power
+        let w_a30 = service_watts(&a30, &job).unwrap();
+        let w_h100 = service_watts(&h100, &job).unwrap();
+        assert!(w_a30 > w_h100, "{w_a30} vs {w_h100}");
+    }
+}

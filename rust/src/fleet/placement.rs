@@ -1,0 +1,253 @@
+//! The cost-model placement engine: score (gpu, profile) targets for
+//! one job and pick the cheapest GPU.
+//!
+//! For a job with belief-band estimate `est`, each GPU is scored as a
+//! weighted sum of four normalized terms (lower is better):
+//!
+//! * **queue** — `(depth + 1) / total_compute`: routed-but-unfinished
+//!   load normalized by the GPU's compute width, so a 4-GPC A30 at
+//!   depth 2 looks busier than a 7-GPC H100 at depth 3.
+//! * **fit** — `profile_mem / demand - 1` for the belief's target
+//!   profile: slack between the tightest feasible slice and the
+//!   belief-band demand (0 for unknown-upfront jobs, which start on the
+//!   smallest slice everywhere).
+//! * **reconfig** — the per-op latency model's cost of making the
+//!   target profile available: just `create_cost_s` when the current
+//!   partition can allocate it, plus two modeled destroys when a
+//!   reconfiguration would have to clear room first.
+//! * **energy** — the target profile's modeled draw (idle power
+//!   apportioned by memory slices + dynamic power by compute slices),
+//!   in hectowatts so it lands on the same O(1) scale as the others.
+//!
+//! GPUs whose largest profile cannot hold a *known* demand are
+//! infeasible (score `+inf`). Ties — exact score equality under
+//! `total_cmp` — break round-robin: the engine scans cyclically from a
+//! moving cursor so equal-cost GPUs (a homogeneous idle fleet) share
+//! arrivals instead of piling onto index 0. With
+//! [`PlacementMode::RoundRobin`] the scoring is skipped entirely and
+//! the cursor alone decides — bit-for-bit the legacy
+//! [`ShardedPolicy`](crate::scheduler::ShardedPolicy) deal.
+
+use crate::estimator::Estimate;
+use crate::mig::{GpuSpec, MigProfile};
+use crate::scheduler::{target_profile, GpuId, PolicyCtx};
+use crate::sim::GpuSim;
+
+use super::queue::GlobalQueue;
+
+/// How the fleet routes an arrival to a GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementMode {
+    /// Deal arrivals cyclically, ignoring load/fit/energy — the legacy
+    /// `ShardedPolicy` behavior, kept as the parity/reference mode.
+    RoundRobin,
+    /// Score every GPU with the cost model above and take the argmin.
+    CostModel,
+}
+
+impl PlacementMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PlacementMode::RoundRobin => "round-robin",
+            PlacementMode::CostModel => "cost-model",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<PlacementMode> {
+        match s {
+            "round-robin" => Some(PlacementMode::RoundRobin),
+            "cost-model" => Some(PlacementMode::CostModel),
+            _ => None,
+        }
+    }
+}
+
+/// Weights of the four scoring terms. All terms are pre-normalized to
+/// the same O(1) scale, so 1.0 everywhere is a sane default.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementWeights {
+    pub queue: f64,
+    pub fit: f64,
+    pub reconfig: f64,
+    pub energy: f64,
+}
+
+impl Default for PlacementWeights {
+    fn default() -> Self {
+        PlacementWeights {
+            queue: 1.0,
+            fit: 1.0,
+            reconfig: 1.0,
+            energy: 1.0,
+        }
+    }
+}
+
+/// Modeled electrical draw (W) of one profile on `spec`: idle power
+/// apportioned by memory-slice share plus dynamic power by
+/// compute-slice share. Shared with the [`oracle`](super::oracle)'s
+/// energy objective so the fast path and the ground truth price
+/// placements identically.
+pub fn profile_watts(spec: &GpuSpec, prof: &MigProfile) -> f64 {
+    let mem_frac = prof.mem_slices as f64 / spec.total_mem_slices as f64;
+    let comp_frac = prof.compute_slices as f64 / spec.total_compute as f64;
+    spec.idle_power_w * mem_frac + (spec.max_power_w - spec.idle_power_w) * comp_frac
+}
+
+/// Whether a belief-band demand can run on `spec` at all: unknown
+/// demands fit anywhere (they start smallest and grow), known demands
+/// must fit the largest profile.
+pub fn fits(spec: &GpuSpec, est: &Estimate) -> bool {
+    if est.is_unknown() {
+        return true;
+    }
+    let largest = crate::scheduler::largest_profile(spec);
+    est.point_gb() <= spec.profiles[largest].mem_gb + 1e-9
+}
+
+/// Score one GPU for a job (lower is better; `+inf` = infeasible).
+/// `depth` is the fleet queue's routed-but-unfinished count for this
+/// GPU.
+pub fn score_on(sim: &GpuSim, depth: usize, est: &Estimate, w: &PlacementWeights) -> f64 {
+    let spec = &sim.spec;
+    if !fits(spec, est) {
+        return f64::INFINITY;
+    }
+    let p = target_profile(spec, est);
+    let prof = &spec.profiles[p];
+    let queue_term = (depth + 1) as f64 / spec.total_compute as f64;
+    let fit_term = if est.is_unknown() {
+        0.0
+    } else {
+        prof.mem_gb / est.point_gb().max(1e-9) - 1.0
+    };
+    let reconfig_term = if sim.mgr.can_alloc(p) {
+        spec.create_cost_s(p)
+    } else {
+        spec.create_cost_s(p) + 2.0 * spec.destroy_cost_s(p)
+    };
+    let energy_term = profile_watts(spec, prof) / 100.0;
+    w.queue * queue_term + w.fit * fit_term + w.reconfig * reconfig_term + w.energy * energy_term
+}
+
+/// Route one arrival: returns the chosen GPU and advances `cursor`.
+///
+/// Round-robin mode reproduces `ShardedPolicy` exactly (`cursor % n`,
+/// then increment). Cost-model mode takes the score argmin, breaking
+/// exact ties cyclically from `cursor` and parking the cursor just past
+/// the winner — deterministic, and balanced when everything is equal.
+pub fn choose_gpu(
+    ctx: &PolicyCtx,
+    queue: &GlobalQueue,
+    est: &Estimate,
+    mode: PlacementMode,
+    w: &PlacementWeights,
+    cursor: &mut usize,
+) -> GpuId {
+    let n = ctx.n_gpus();
+    debug_assert!(n > 0);
+    if mode == PlacementMode::RoundRobin {
+        let g = *cursor % n;
+        *cursor += 1;
+        return g;
+    }
+    let scores: Vec<f64> = (0..n)
+        .map(|g| score_on(ctx.gpu(g), queue.depth(g), est, w))
+        .collect();
+    let best = scores
+        .iter()
+        .copied()
+        .min_by(f64::total_cmp)
+        .expect("non-empty fleet");
+    let start = *cursor % n;
+    let g = (0..n)
+        .map(|off| (start + off) % n)
+        .find(|&g| scores[g].total_cmp(&best).is_eq())
+        .expect("argmin exists");
+    *cursor = g + 1;
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::EstimationMethod;
+    use std::sync::Arc;
+
+    fn sim(spec: GpuSpec) -> GpuSim {
+        GpuSim::new(Arc::new(spec), false)
+    }
+
+    fn exact(mem_gb: f64, gpcs: u8) -> Estimate {
+        Estimate::exact(mem_gb, gpcs, EstimationMethod::CompilerAnalysis)
+    }
+
+    #[test]
+    fn known_demand_over_largest_profile_is_infeasible() {
+        let a30 = sim(GpuSpec::a30_24gb());
+        let too_big = exact(25.0, 6);
+        assert!(!fits(&a30.spec, &too_big));
+        assert_eq!(
+            score_on(&a30, 0, &too_big, &PlacementWeights::default()),
+            f64::INFINITY
+        );
+        assert!(fits(&a30.spec, &exact(22.0, 6)));
+        assert!(fits(&a30.spec, &Estimate::unknown_upfront(1)));
+    }
+
+    #[test]
+    fn queue_term_normalizes_by_compute_width() {
+        let w = PlacementWeights {
+            queue: 1.0,
+            fit: 0.0,
+            reconfig: 0.0,
+            energy: 0.0,
+        };
+        let a30 = sim(GpuSpec::a30_24gb());
+        let h100 = sim(GpuSpec::h100_80gb());
+        let est = exact(2.0, 1);
+        // equal depth: the 4-GPC A30 looks busier than the 7-GPC H100
+        assert!(score_on(&a30, 2, &est, &w) > score_on(&h100, 2, &est, &w));
+        // and an idle A30 still beats a deeply backlogged H100
+        assert!(score_on(&a30, 0, &est, &w) < score_on(&h100, 6, &est, &w));
+    }
+
+    #[test]
+    fn fit_term_prefers_tighter_slices_across_specs() {
+        let w = PlacementWeights {
+            queue: 0.0,
+            fit: 1.0,
+            reconfig: 0.0,
+            energy: 0.0,
+        };
+        // 17 GB: whole-GPU 24 GB slice on A30 vs a 20 GB slice on A100
+        let a30 = sim(GpuSpec::a30_24gb());
+        let a100 = sim(GpuSpec::a100_40gb());
+        let est = exact(17.0, 3);
+        assert!(score_on(&a100, 0, &est, &w) < score_on(&a30, 0, &est, &w));
+    }
+
+    #[test]
+    fn energy_term_uses_the_profile_power_model() {
+        let spec = GpuSpec::a100_40gb();
+        let full = &spec.profiles[crate::scheduler::largest_profile(&spec)];
+        let watts = profile_watts(&spec, full);
+        // a full-GPU profile draws close to max power (7/7 compute,
+        // 8/8 memory slices)
+        assert!((watts - spec.max_power_w).abs() < 1e-9, "{watts}");
+        let small = &spec.profiles[0];
+        assert!(profile_watts(&spec, small) < watts / 3.0);
+    }
+
+    #[test]
+    fn unknown_jobs_have_zero_fit_term_everywhere() {
+        let w = PlacementWeights {
+            queue: 0.0,
+            fit: 1.0,
+            reconfig: 0.0,
+            energy: 0.0,
+        };
+        let a30 = sim(GpuSpec::a30_24gb());
+        assert_eq!(score_on(&a30, 0, &Estimate::unknown_upfront(1), &w), 0.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! The fleet-level global arrival queue.
+//!
+//! [`GlobalQueue`] is the bookkeeping half of [`FleetPolicy`]
+//! (../fleet/struct.FleetPolicy.html): one FIFO backlog per GPU plus an
+//! *outstanding* counter of jobs already handed to that GPU's shard
+//! policy but not yet finished. The split is what makes work stealing
+//! safe: jobs in a backlog have never been seen by a shard (no
+//! instance, no launch, no partition plan references them), so moving
+//! one to another GPU's backlog is a pure queue operation — the job's
+//! `submit_time` and belief id travel untouched, which is exactly the
+//! invariant the queue-time accounting property test pins.
+//!
+//! Queue *depth* — the load signal the placement engine scores — is
+//! `backlog + outstanding`: everything routed to the GPU that has not
+//! yet completed, whether the shard is still sitting on it or it is
+//! running.
+
+use crate::scheduler::{GpuId, PendingJob};
+use std::collections::VecDeque;
+
+/// Per-GPU backlogs + outstanding counters for a fleet of `n` GPUs.
+#[derive(Debug, Default)]
+pub struct GlobalQueue {
+    backlog: Vec<VecDeque<PendingJob>>,
+    outstanding: Vec<usize>,
+}
+
+impl GlobalQueue {
+    pub fn new(n_gpus: usize) -> Self {
+        GlobalQueue {
+            backlog: (0..n_gpus).map(|_| VecDeque::new()).collect(),
+            outstanding: vec![0; n_gpus],
+        }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.backlog.len()
+    }
+
+    /// Route a job to `g`'s backlog (it has not reached the shard yet).
+    pub fn push(&mut self, g: GpuId, job: PendingJob) {
+        self.backlog[g].push_back(job);
+    }
+
+    /// Next job to hand to `g`'s shard, FIFO order.
+    pub fn pop_front(&mut self, g: GpuId) -> Option<PendingJob> {
+        self.backlog[g].pop_front()
+    }
+
+    /// Jobs still queued at fleet level for `g` (stealable).
+    pub fn backlog_len(&self, g: GpuId) -> usize {
+        self.backlog[g].len()
+    }
+
+    /// Jobs handed to `g`'s shard and not yet finished.
+    pub fn outstanding(&self, g: GpuId) -> usize {
+        self.outstanding[g]
+    }
+
+    /// The placement engine's load signal: everything routed to `g`
+    /// that has not completed.
+    pub fn depth(&self, g: GpuId) -> usize {
+        self.backlog[g].len() + self.outstanding[g]
+    }
+
+    /// Total fleet-level backlog (jobs no shard has seen yet).
+    pub fn total_backlog(&self) -> usize {
+        self.backlog.iter().map(|q| q.len()).sum()
+    }
+
+    /// A job crossed the barrier into `g`'s shard.
+    pub fn note_handover(&mut self, g: GpuId) {
+        self.outstanding[g] += 1;
+    }
+
+    /// A job finished on `g`. Saturating: restart duplicates re-finish
+    /// on the same belief without a second handover.
+    pub fn note_finish(&mut self, g: GpuId) {
+        self.outstanding[g] = self.outstanding[g].saturating_sub(1);
+    }
+
+    /// Remove the job at `idx` (from the *front*) of `g`'s backlog —
+    /// the steal planner picks victims scanning from the tail so the
+    /// oldest queued work keeps its position on the donor.
+    pub fn remove_at(&mut self, g: GpuId, idx: usize) -> Option<PendingJob> {
+        self.backlog[g].remove(idx)
+    }
+
+    /// Immutable scan access for the steal planner's fit checks.
+    pub fn peek(&self, g: GpuId, idx: usize) -> Option<&PendingJob> {
+        self.backlog[g].get(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::BeliefId;
+    use crate::workloads::synthetic::sized_job;
+
+    fn job(name: &str, belief: BeliefId, submit: f64) -> PendingJob {
+        PendingJob {
+            spec: sized_job(name, 1.0, 3),
+            submit_time: submit,
+            belief,
+        }
+    }
+
+    #[test]
+    fn depth_counts_backlog_plus_outstanding() {
+        let mut q = GlobalQueue::new(2);
+        q.push(0, job("a", 0, 0.0));
+        q.push(0, job("b", 1, 1.0));
+        q.note_handover(1);
+        assert_eq!(q.depth(0), 2);
+        assert_eq!(q.depth(1), 1);
+        assert_eq!(q.total_backlog(), 2);
+        let a = q.pop_front(0).unwrap();
+        assert_eq!(a.spec.name, "a");
+        q.note_handover(0);
+        assert_eq!(q.depth(0), 2, "handover moves, not drops, the job");
+        q.note_finish(0);
+        assert_eq!(q.depth(0), 1);
+    }
+
+    #[test]
+    fn note_finish_saturates() {
+        let mut q = GlobalQueue::new(1);
+        q.note_finish(0);
+        assert_eq!(q.outstanding(0), 0);
+    }
+
+    #[test]
+    fn remove_at_preserves_fifo_order_of_the_rest() {
+        let mut q = GlobalQueue::new(1);
+        for (i, n) in ["a", "b", "c"].iter().enumerate() {
+            q.push(0, job(n, i, i as f64));
+        }
+        let stolen = q.remove_at(0, 2).unwrap();
+        assert_eq!(stolen.spec.name, "c");
+        assert_eq!(stolen.submit_time, 2.0, "submit time travels untouched");
+        assert_eq!(q.pop_front(0).unwrap().spec.name, "a");
+        assert_eq!(q.pop_front(0).unwrap().spec.name, "b");
+        assert!(q.pop_front(0).is_none());
+    }
+}

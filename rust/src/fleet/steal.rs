@@ -1,0 +1,142 @@
+//! Work stealing between arrival barriers.
+//!
+//! Stealing operates **only** on the fleet-level backlogs in
+//! [`GlobalQueue`](super::queue::GlobalQueue): a job there has never
+//! touched a shard policy, an instance, or a partition plan, so moving
+//! it is a pure queue transfer. Running (or even shard-queued) jobs are
+//! never migrated — the simulator has state for them.
+//!
+//! The planner fires when a GPU goes idle (its shard reports no pending
+//! work and its own backlog is empty) at an event barrier — a job
+//! finish, a reconfiguration completion, or a stall. Victim selection
+//! is deterministic:
+//!
+//! * **donor** — the GPU with the deepest backlog (ties to the lowest
+//!   index), because relieving the longest queue shortens the fleet
+//!   makespan the most;
+//! * **victim job** — scanning the donor's backlog from the *tail*
+//!   (newest first), the first job whose belief-band demand fits the
+//!   thief's largest profile. Tail-first keeps the donor's oldest work
+//!   in place: it has waited longest and is next to be served locally,
+//!   so stealing it would trade one queue's head-of-line delay for
+//!   another's.
+//!
+//! The stolen job keeps its `submit_time` and belief id — queue-time
+//! accounting is anchored to arrival, not to the transfer (property
+//! tested in [`super::tests`]).
+
+use crate::scheduler::{GpuId, PendingJob, PolicyCtx};
+
+use super::placement::fits;
+use super::queue::GlobalQueue;
+
+/// Pick and remove one stealable job for an idle `thief`, or `None` if
+/// no donor has a fitting backlogged job. Deterministic for a given
+/// queue state.
+pub fn steal_for(ctx: &PolicyCtx, queue: &mut GlobalQueue, thief: GpuId) -> Option<PendingJob> {
+    let n = queue.n_gpus();
+    let donor = (0..n)
+        .filter(|&g| g != thief && queue.backlog_len(g) > 0)
+        .max_by_key(|&g| (queue.backlog_len(g), n - g))?;
+    let spec = ctx.spec(thief);
+    let len = queue.backlog_len(donor);
+    for idx in (0..len).rev() {
+        let job = queue.peek(donor, idx).expect("idx in bounds");
+        if fits(spec, ctx.belief(job.belief).estimate()) {
+            return queue.remove_at(donor, idx);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::{BeliefConfig, BeliefLedger, Estimate, EstimationMethod};
+    use crate::mig::GpuSpec;
+    use crate::sim::GpuSim;
+    use crate::workloads::synthetic::sized_job;
+    use std::sync::Arc;
+
+    /// Build a 2-GPU world (A30 thief, A100 donor) with real beliefs so
+    /// the planner's fit checks go through the ledger.
+    fn world() -> (Vec<GpuSim>, BeliefLedger, GlobalQueue) {
+        let gpus = vec![
+            GpuSim::new(Arc::new(GpuSpec::a30_24gb()), false),
+            GpuSim::new(Arc::new(GpuSpec::a100_40gb()), false),
+        ];
+        let beliefs = BeliefLedger::new(BeliefConfig::new(false));
+        let queue = GlobalQueue::new(2);
+        (gpus, beliefs, queue)
+    }
+
+    fn enqueue(
+        queue: &mut GlobalQueue,
+        beliefs: &mut BeliefLedger,
+        g: usize,
+        name: &str,
+        mem_gb: f64,
+        submit: f64,
+    ) {
+        let gpcs = (mem_gb.ceil() as u8).max(1);
+        let belief = beliefs.register(
+            Estimate::exact(mem_gb, gpcs, EstimationMethod::CompilerAnalysis),
+            mem_gb,
+        );
+        queue.push(
+            g,
+            PendingJob {
+                spec: sized_job(name, mem_gb, 3),
+                submit_time: submit,
+                belief,
+            },
+        );
+    }
+
+    #[test]
+    fn steals_newest_fitting_job_from_deepest_backlog() {
+        let (gpus, mut beliefs, mut queue) = world();
+        enqueue(&mut queue, &mut beliefs, 1, "old", 2.0, 0.0);
+        enqueue(&mut queue, &mut beliefs, 1, "mid", 2.0, 1.0);
+        enqueue(&mut queue, &mut beliefs, 1, "new", 2.0, 2.0);
+        let ctx = PolicyCtx {
+            now: 3.0,
+            gpus: &gpus,
+            beliefs: &beliefs,
+        };
+        let got = steal_for(&ctx, &mut queue, 0).expect("stealable");
+        assert_eq!(got.spec.name, "new", "tail-first victim selection");
+        assert_eq!(got.submit_time, 2.0, "submit time rides along");
+        assert_eq!(queue.backlog_len(1), 2);
+    }
+
+    #[test]
+    fn skips_jobs_too_big_for_the_thief() {
+        let (gpus, mut beliefs, mut queue) = world();
+        // 30 GB fits the A100 donor but not the 24 GB A30 thief
+        enqueue(&mut queue, &mut beliefs, 1, "fits", 2.0, 0.0);
+        enqueue(&mut queue, &mut beliefs, 1, "huge", 30.0, 1.0);
+        let ctx = PolicyCtx {
+            now: 2.0,
+            gpus: &gpus,
+            beliefs: &beliefs,
+        };
+        let got = steal_for(&ctx, &mut queue, 0).expect("the 2 GB job");
+        assert_eq!(got.spec.name, "fits");
+        assert_eq!(queue.backlog_len(1), 1, "the huge job stays put");
+        assert!(steal_for(&ctx, &mut queue, 0).is_none());
+    }
+
+    #[test]
+    fn no_donor_no_steal() {
+        let (gpus, mut beliefs, mut queue) = world();
+        enqueue(&mut queue, &mut beliefs, 0, "own", 2.0, 0.0);
+        let ctx = PolicyCtx {
+            now: 1.0,
+            gpus: &gpus,
+            beliefs: &beliefs,
+        };
+        // thief's own backlog is not a donor
+        assert!(steal_for(&ctx, &mut queue, 0).is_none());
+    }
+}

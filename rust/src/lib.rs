@@ -54,8 +54,19 @@
 //!   Scheme knobs are first-class tunables
 //!   ([`scheduler::SchemeAKnobs`] / [`scheduler::SchemeBKnobs`]), and
 //!   [`scheduler::ShardedPolicy`] lifts any single-GPU policy to a
-//!   multi-GPU fleet. The orchestrator owns the per-job belief ledger;
-//!   policies place/fuse/restart against `ctx.belief(id)` only.
+//!   multi-GPU fleet (round-robin deal — the bench/legacy path). The
+//!   orchestrator owns the per-job belief ledger; policies
+//!   place/fuse/restart against `ctx.belief(id)` only.
+//! * [`fleet`] — the heterogeneous fleet scheduler:
+//!   [`fleet::FleetPolicy`] routes a single global arrival queue over
+//!   mixed A30/A100/H100(+synthetic) fleets with a cost-model
+//!   placement engine (compute-normalized queue depth, belief-band
+//!   slice fit, reconfiguration latency, per-spec profile energy) and
+//!   steals queued — never running — jobs from backlogged GPUs to
+//!   idle ones between arrival barriers. Ground-truthed by
+//!   [`fleet::oracle`], a branch-and-bound optimal-placement solver on
+//!   small sub-problems (arXiv:2409.06646 style) with a documented
+//!   optimality gap, the way [`sim::naive`] grounds the event engine.
 //! * [`tuner`] — policy-search sweeps (`migm tune`): a typed
 //!   [`tuner::ParamSpace`] over the scheduler knobs (Scheme A ladder,
 //!   Scheme B fusion/reuse thresholds, predictor, belief z-score /
@@ -76,6 +87,7 @@
 
 pub mod config;
 pub mod estimator;
+pub mod fleet;
 pub mod metrics;
 pub mod mig;
 pub mod predictor;

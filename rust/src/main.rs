@@ -114,7 +114,10 @@ USAGE:
 Mixes: hm1-4, ht1-3, ml1-3, flan-t5-train, flan-t5, qwen2, llama3,
        preliminary-a30.
 
-tune: policy-search sweep over scheduler knobs on simulated fleets.
+tune: policy-search sweep over scheduler + fleet-routing knobs on
+      simulated fleets (incl. a mixed A30/A100/H100 heterogeneous
+      scenario; knob axes cover placement engine, work stealing, and
+      cost-model weights alongside the scheme knobs).
       Writes a schema-stable report (default BENCH_policy_search.json),
       optionally appends a summary row to a trajectory file, and (for
       grid runs) fails unless some candidate beats the default Scheme B
@@ -284,6 +287,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     };
     let mut scenarios = vec![
         Scenario::synthetic_fleet(n_gpus, seed),
+        Scenario::hetero_fleet(seed),
         Scenario::paper("ht2", seed).expect("known mix"),
     ];
     if !smoke {

@@ -6,9 +6,10 @@
 use std::sync::Arc;
 
 use crate::config::{Scheme, DEFAULT_SEED};
+use crate::fleet::{FleetKnobs, FleetPolicy};
 use crate::metrics::{fx, BatchMetrics, NormalizedMetrics, Table};
 use crate::mig::{enumerate_states, GpuSpec, PartitionState, Placement, ReachabilityTable};
-use crate::scheduler::{self, run_mix};
+use crate::scheduler::{self, run_mix, Orchestrator, SchemeBKnobs};
 use crate::workloads::mix::{self, LLM_MIXES, ML_MIXES, RODINIA_MIXES};
 use crate::workloads::{llm, rodinia, ComputeModel};
 
@@ -407,6 +408,13 @@ pub struct OnlineRow {
     /// Predicted-vs-actual peak-memory accuracy (from the run's belief
     /// ledger; zero-valued for rows without prediction/dynamic jobs).
     pub prediction: crate::estimator::PredictionAccuracy,
+    /// Per-GPU `(spec name, memory utilization)` in fleet order.
+    /// Single-GPU rows carry exactly one entry (equal to
+    /// `metrics.mem_utilization`).
+    pub per_spec_util: Vec<(String, f64)>,
+    /// Jobs the fleet router migrated off a backlogged shard (always 0
+    /// for single-GPU rows and non-stealing policies).
+    pub steals: u64,
 }
 
 /// Rendered error cell: "-" until some prediction converged.
@@ -427,9 +435,17 @@ fn render_online(rows: &[OnlineRow]) -> Table {
         "reconf (n/s)",
         "queue p50/p99 (s)",
         "turnaround p50/p99 (s)",
+        "per-spec util",
+        "steals",
         "pred-err",
     ]);
     for r in rows {
+        let util = r
+            .per_spec_util
+            .iter()
+            .map(|(name, u)| format!("{name} {:.0}%", u * 100.0))
+            .collect::<Vec<_>>()
+            .join(", ");
         t.row(vec![
             r.policy.to_string(),
             format!("{:.1}", r.metrics.makespan_s),
@@ -444,18 +460,26 @@ fn render_online(rows: &[OnlineRow]) -> Table {
                 "{:.2} / {:.2}",
                 r.latency.p50_turnaround_s, r.latency.p99_turnaround_s
             ),
+            util,
+            r.steals.to_string(),
             pred_err_cell(&r.prediction),
         ]);
     }
     t
 }
 
-/// Run the three policies over the same Poisson-arrival stream — Ht2
-/// plus one dynamic (Qwen2) job so the predicted-vs-actual column is
-/// fed end to end — at `rate_jps` jobs/second through the
-/// orchestrator. The MIG schemes run with prediction enabled (the
-/// grow-on-demand path: 5 GB → OOM → 10 GB → predictive restart →
-/// 20 GB); the baseline's full GPU never restarts.
+/// Run four policies over the same Poisson-arrival stream — Ht2 plus
+/// one dynamic (Qwen2) job so the predicted-vs-actual column is fed
+/// end to end — at `rate_jps` jobs/second through the orchestrator.
+/// The MIG schemes run with prediction enabled (the grow-on-demand
+/// path: 5 GB → OOM → 10 GB → predictive restart → 20 GB); the
+/// baseline's full GPU never restarts. The fourth row routes the same
+/// stream across a mixed A30/A100/H100 fleet through
+/// [`FleetPolicy`] with cost-model placement and work stealing
+/// ([`FleetKnobs::balanced`]) over per-GPU Scheme B shards — the
+/// per-spec utilization and steal columns come from it. Cost-model
+/// placement is load-bearing, not a tuning choice: Ht2 carries a
+/// 25 GB Full-class job that must never be dealt to the 24 GB A30.
 pub fn online_arrivals(seed: u64, rate_jps: f64) -> (Vec<OnlineRow>, Table) {
     let spec = Arc::new(GpuSpec::a100_40gb());
     let mut m = mix::ht2(seed);
@@ -470,11 +494,43 @@ pub fn online_arrivals(seed: u64, rate_jps: f64) -> (Vec<OnlineRow>, Table) {
         let r = run_mix(spec.clone(), &m, scheme, pred);
         rows.push(OnlineRow {
             policy,
+            per_spec_util: vec![(spec.name.clone(), r.metrics.mem_utilization)],
+            steals: 0,
             metrics: r.metrics,
             latency: r.latency,
             prediction: r.prediction,
         });
     }
+    let fleet_specs = vec![
+        Arc::new(GpuSpec::a30_24gb()),
+        spec.clone(),
+        Arc::new(GpuSpec::h100_80gb()),
+    ];
+    let policy = FleetPolicy::scheme_b(
+        &fleet_specs,
+        FleetKnobs::balanced(),
+        SchemeBKnobs::default(),
+    );
+    let mut orch = Orchestrator::new(fleet_specs.clone(), true, policy);
+    orch.submit_mix(&m);
+    orch.run_to_completion();
+    let r = orch.fleet_result();
+    let per_spec_util = fleet_specs
+        .iter()
+        .enumerate()
+        .map(|(g, s)| {
+            let denom = (r.metrics.makespan_s * s.total_mem_gb).max(1e-12);
+            (s.name.clone(), orch.gpu(g).mem_gb_integral() / denom)
+        })
+        .collect();
+    rows.push(OnlineRow {
+        policy: "fleet-B",
+        per_spec_util,
+        steals: orch.policy().steals(),
+        metrics: r.metrics,
+        latency: r.latency,
+        prediction: r.prediction,
+    });
     let t = render_online(&rows);
     (rows, t)
 }
@@ -577,11 +633,13 @@ mod tests {
     #[test]
     fn online_report_covers_all_policies_with_latency() {
         let (rows, t) = online_arrivals(DEFAULT_SEED, 0.25);
-        assert_eq!(rows.len(), 3);
-        assert_eq!(t.rows.len(), 3);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(t.rows.len(), 4);
         // the online report surfaces reconfiguration cost too
         assert!(t.header.contains(&"reconf (n/s)".to_string()));
         assert!(t.header.contains(&"pred-err".to_string()));
+        assert!(t.header.contains(&"per-spec util".to_string()));
+        assert!(t.header.contains(&"steals".to_string()));
         assert_eq!(rows[0].metrics.reconfig_time_s, 0.0, "baseline is zero-cost");
         assert!(rows[2].metrics.reconfig_time_s > 0.0, "scheme-B pays for windows");
         for r in &rows {
@@ -589,9 +647,24 @@ mod tests {
             assert!(r.latency.p99_turnaround_s >= r.latency.p50_turnaround_s);
             assert!(r.latency.p99_queue_s >= r.latency.p50_queue_s);
         }
+        // Single-GPU rows carry one utilization share and never steal;
+        // the fleet row breaks utilization out per spec in fleet order.
+        for r in &rows[..3] {
+            assert_eq!(r.per_spec_util.len(), 1);
+            assert_eq!(r.per_spec_util[0].0, "A100-40GB");
+            assert_eq!(r.steals, 0);
+        }
+        let fleet = &rows[3];
+        assert_eq!(fleet.policy, "fleet-B");
+        let names: Vec<&str> = fleet.per_spec_util.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["A30-24GB", "A100-40GB", "H100-80GB"]);
+        for (name, util) in &fleet.per_spec_util {
+            assert!((0.0..=1.0).contains(util), "{name}: util {util}");
+        }
         // The dynamic job never converges a prediction on the baseline's
-        // full GPU (nothing to outgrow); the MIG schemes preempt it off
-        // the grow-on-demand slice and report the ledger's error.
+        // full GPU (nothing to outgrow); the MIG schemes — sharded or
+        // fleet-routed — preempt it off the grow-on-demand slice and
+        // report the ledger's error.
         assert_eq!(rows[0].prediction.n_predicted, 0);
         for r in &rows[1..] {
             assert!(
@@ -605,6 +678,12 @@ mod tests {
                 r.policy,
                 r.prediction.mean_abs_pct_err
             );
+        }
+        // Only the single-GPU scheme rows pin the early restart: on the
+        // fleet the cost model may start the dynamic job on a GPU whose
+        // post-OOM slice already covers the projected peak, making the
+        // predictive restart legitimately unnecessary.
+        for r in &rows[1..3] {
             assert!(r.metrics.early_restarts >= 1, "{}", r.policy);
         }
     }
@@ -691,16 +770,26 @@ mod tests {
                 n_predicted: 2,
                 mean_abs_pct_err: 0.032,
             },
+            per_spec_util: vec![("A30-24GB".into(), 0.25), ("H100-80GB".into(), 0.5)],
+            steals: 3,
         };
         let without = OnlineRow {
             policy: "baseline",
             prediction: PredictionAccuracy::default(),
+            per_spec_util: vec![("A100-40GB".into(), 0.4)],
+            steals: 0,
             ..with_pred.clone()
         };
         let t = render_online(&[without, with_pred]);
         assert_eq!(*t.header.last().unwrap(), "pred-err");
         assert_eq!(t.rows[0].last().unwrap(), "-");
         assert_eq!(t.rows[1].last().unwrap(), "3.2%");
+        // ...and the fleet columns, rendered one cell per spec.
+        let n = t.header.len();
+        assert_eq!(t.rows[0][n - 3], "A100-40GB 40%");
+        assert_eq!(t.rows[0][n - 2], "0");
+        assert_eq!(t.rows[1][n - 3], "A30-24GB 25%, H100-80GB 50%");
+        assert_eq!(t.rows[1][n - 2], "3");
     }
 
     #[test]

@@ -16,6 +16,17 @@
 //! Round-robin is deliberate: it is deterministic, stateless with
 //! respect to the inner policies, and — with the identical-GPU fleets
 //! the benches and the tuner drive — load-balanced by construction.
+//!
+//! **This is the bench/legacy path.** On *heterogeneous* fleets the
+//! blind deal hands the slowest GPU the same share as the fastest, so
+//! mixed A30/A100/H100 runs route through
+//! [`FleetPolicy`](crate::fleet::FleetPolicy) instead: a global
+//! arrival queue with cost-model placement and work stealing whose
+//! default (round-robin, no stealing) configuration reproduces
+//! `ShardedPolicy` bit for bit — pinned by the parity test in
+//! [`crate::fleet`]. `ShardedPolicy` stays as the head-to-head
+//! baseline in `benches/orchestrator_fleet.rs` and as the minimal
+//! reference implementation of fleet routing.
 
 use super::policy::{Action, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
 use super::PendingJob;

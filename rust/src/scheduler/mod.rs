@@ -42,8 +42,16 @@
 //! paper bit for bit, swept by the [`tuner`](crate::tuner). The
 //! [`fleet`] module lifts any single-GPU policy to a multi-GPU fleet
 //! ([`fleet::ShardedPolicy`]: round-robin arrivals, per-GPU event
-//! routing), and [`Orchestrator::fleet_result`] aggregates a fleet run
-//! into one scored result.
+//! routing — the bench/legacy path), and
+//! [`Orchestrator::fleet_result`] aggregates a fleet run into one
+//! scored result. Heterogeneous fleets route through the crate-level
+//! [`fleet`](crate::fleet) subsystem instead:
+//! [`FleetPolicy`](crate::fleet::FleetPolicy) puts a single global
+//! arrival queue, a cost-model placement engine, and work stealing in
+//! front of the same per-GPU shard policies (its default round-robin
+//! no-steal mode reproduces `ShardedPolicy` bit for bit), with an
+//! exhaustive placement oracle ([`fleet::oracle`](crate::fleet::oracle))
+//! pinning the engine's optimality gap.
 
 pub mod baseline;
 pub mod fleet;
@@ -252,6 +260,11 @@ mod tests {
             ("scheme_a.rs", include_str!("scheme_a.rs")),
             ("scheme_b.rs", include_str!("scheme_b.rs")),
             ("fleet.rs", include_str!("fleet.rs")),
+            ("fleet/mod.rs", include_str!("../fleet/mod.rs")),
+            ("fleet/queue.rs", include_str!("../fleet/queue.rs")),
+            ("fleet/placement.rs", include_str!("../fleet/placement.rs")),
+            ("fleet/steal.rs", include_str!("../fleet/steal.rs")),
+            ("fleet/oracle.rs", include_str!("../fleet/oracle.rs")),
         ];
         for (name, src) in sources {
             for (i, line) in src.lines().enumerate() {

@@ -25,13 +25,15 @@ use std::sync::{Arc, Mutex};
 
 use crate::config::Scheme;
 use crate::estimator::BeliefConfig;
+use crate::fleet::FleetPolicy;
 use crate::metrics::BatchMetrics;
 use crate::mig::GpuSpec;
 use crate::scheduler::{
     baseline::BaselinePolicy, scheme_a::SchemeAPolicy, scheme_b::SchemeBPolicy, Orchestrator,
-    RunResult, SchedulingPolicy, ShardedPolicy,
+    RunResult, SchedulingPolicy,
 };
 use crate::workloads::mix::{self, Mix};
+use crate::workloads::rodinia;
 use crate::workloads::synthetic::{sized_job, tiered_spec};
 
 use super::space::Candidate;
@@ -47,10 +49,11 @@ pub const COMPONENT_CAP: f64 = 10.0;
 #[derive(Debug, Clone)]
 pub struct Scenario {
     pub name: String,
-    /// Per-GPU model (the fleet is homogeneous).
-    pub spec: Arc<GpuSpec>,
-    pub n_gpus: usize,
-    /// The job stream (round-robin sharded across the fleet).
+    /// Per-GPU models, in GPU order (one entry per fleet slot; mixed
+    /// entries make the fleet heterogeneous).
+    pub specs: Vec<Arc<GpuSpec>>,
+    /// The job stream (routed across the fleet by the candidate's
+    /// fleet knobs).
     pub mix: Mix,
     /// Poisson arrival rate (jobs/s) at `arrival_scale = 1.0`; `None`
     /// runs the paper's batch setting (everything at t=0).
@@ -59,13 +62,28 @@ pub struct Scenario {
 }
 
 impl Scenario {
+    pub fn n_gpus(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Display label: the distinct spec names, in fleet order, joined
+    /// with `+` ("A30-24GB+A100-40GB+H100-80GB").
+    pub fn gpu_label(&self) -> String {
+        let mut names: Vec<&str> = Vec::new();
+        for s in &self.specs {
+            if !names.contains(&s.name.as_str()) {
+                names.push(&s.name);
+            }
+        }
+        names.join("+")
+    }
+
     /// A paper mix on a single A100 (batch submission).
     pub fn paper(mix_name: &str, seed: u64) -> Option<Scenario> {
         let m = mix::by_name(mix_name, seed)?;
         Some(Scenario {
             name: format!("paper-{}", m.name),
-            spec: Arc::new(GpuSpec::a100_40gb()),
-            n_gpus: 1,
+            specs: vec![Arc::new(GpuSpec::a100_40gb())],
             mix: m,
             base_rate_jps: None,
             seed,
@@ -99,9 +117,32 @@ impl Scenario {
         }
         Scenario {
             name: format!("synthetic-tier12-x{n_gpus}"),
-            spec: Arc::new(tiered_spec(12)),
-            n_gpus,
+            specs: vec![Arc::new(tiered_spec(12)); n_gpus],
             mix: Mix::batch("synthetic-tier-fleet", jobs),
+            base_rate_jps: None,
+            seed,
+        }
+    }
+
+    /// A mixed A30/A100/H100 fleet under a skewed, A30-safe mix:
+    /// alternating half-GPU (euler3d, 17 GB) and tiny (bfs) Rodinia
+    /// jobs. A blind round-robin deal paces this on the A30, so the
+    /// fleet placement/steal axes are live on exactly this scenario —
+    /// the heterogeneous counterpart of the tiered-fleet fusion win.
+    pub fn hetero_fleet(seed: u64) -> Scenario {
+        let long = rodinia::by_name("euler3d").unwrap().job(7);
+        let short = rodinia::by_name("bfs").unwrap().job(7);
+        let jobs = (0..10)
+            .flat_map(|_| [long.clone(), short.clone()])
+            .collect();
+        Scenario {
+            name: "hetero-a30-a100-h100".into(),
+            specs: vec![
+                Arc::new(GpuSpec::a30_24gb()),
+                Arc::new(GpuSpec::a100_40gb()),
+                Arc::new(GpuSpec::h100_80gb()),
+            ],
+            mix: Mix::batch("hetero-skew", jobs),
             base_rate_jps: None,
             seed,
         }
@@ -153,17 +194,21 @@ fn shard_for(cand: &Candidate, spec: &Arc<GpuSpec>, gpu: usize) -> Box<dyn Sched
 }
 
 /// Run one candidate over one scenario through the real orchestrator
-/// (sharded fleet policy, arrival queue, transactional reconfiguration
-/// windows) and return the fleet-level result.
+/// (fleet routing per the candidate's [`FleetKnobs`](crate::fleet::FleetKnobs),
+/// arrival queue, transactional reconfiguration windows) and return the
+/// fleet-level result. Default fleet knobs reproduce the legacy
+/// round-robin `ShardedPolicy` deal bit for bit, so pre-v3 scores are
+/// unchanged.
 pub fn run_candidate(cand: &Candidate, scen: &Scenario) -> RunResult {
-    let specs = vec![scen.spec.clone(); scen.n_gpus];
-    let policy = ShardedPolicy::new(
-        (0..scen.n_gpus)
-            .map(|g| shard_for(cand, &scen.spec, g))
-            .collect(),
-    );
+    let shards: Vec<Box<dyn SchedulingPolicy>> = scen
+        .specs
+        .iter()
+        .enumerate()
+        .map(|(g, spec)| shard_for(cand, spec, g))
+        .collect();
+    let policy = FleetPolicy::new(shards, cand.fleet.clone());
     let mut orch = Orchestrator::with_belief_config(
-        specs,
+        scen.specs.clone(),
         BeliefConfig {
             prediction: cand.prediction,
             knobs: cand.belief,
@@ -352,6 +397,22 @@ mod tests {
         let refs = reference_stats(&scens);
         let mut cand = Candidate::reference();
         cand.b.max_fusion_destroys = 4;
+        let r = evaluate_candidate(&cand, &scens, &refs);
+        assert!(r.objective > 1.0, "objective {}", r.objective);
+    }
+
+    #[test]
+    fn fleet_knobs_beat_reference_on_the_hetero_fleet() {
+        // The heterogeneous counterpart of the wider-fusion win: the
+        // legacy round-robin deal paces the skewed mix on the A30, so
+        // cost-model placement + stealing must score above the
+        // reference.
+        let scens = vec![Scenario::hetero_fleet(5)];
+        assert_eq!(scens[0].gpu_label(), "A30-24GB+A100-40GB+H100-80GB");
+        assert_eq!(scens[0].n_gpus(), 3);
+        let refs = reference_stats(&scens);
+        let mut cand = Candidate::reference();
+        cand.fleet = crate::fleet::FleetKnobs::balanced();
         let r = evaluate_candidate(&cand, &scens, &refs);
         assert!(r.objective > 1.0, "objective {}", r.objective);
     }

@@ -11,24 +11,32 @@
 //! * [`space`] — the typed [`ParamSpace`] over scheduler knobs
 //!   ([`SchemeAKnobs`](crate::scheduler::SchemeAKnobs) class-ladder
 //!   coarsening, [`SchemeBKnobs`](crate::scheduler::SchemeBKnobs)
-//!   fusion width + idle-reuse slack, the predictor switch, arrival
+//!   fusion width + idle-reuse slack, the predictor switch, the
+//!   fleet-routing knobs ([`FleetKnobs`](crate::fleet::FleetKnobs):
+//!   placement engine, work stealing, cost-model weights), arrival
 //!   intensity) and the deterministic candidate generators (grid,
 //!   seeded random).
 //! * [`eval`] — [`Scenario`] fleets (paper mixes on the A100, tiered
-//!   synthetic multi-GPU fleets, batch or Poisson arrivals) and the
+//!   synthetic multi-GPU fleets, the mixed A30/A100/H100
+//!   heterogeneous fleet, batch or Poisson arrivals) and the
 //!   thread-parallel evaluator. Every candidate runs through the real
-//!   [`Orchestrator`](crate::scheduler::Orchestrator) — sharded fleet
-//!   policy, arrival queue, transactional reconfiguration windows —
-//!   not a raw `GpuSim`, and is scored on throughput, energy, and p99
-//!   turnaround normalized to the default-knob Scheme B reference.
+//!   [`Orchestrator`](crate::scheduler::Orchestrator) — a
+//!   [`FleetPolicy`](crate::fleet::FleetPolicy) routing layer over
+//!   per-GPU shards, arrival queue, transactional reconfiguration
+//!   windows — not a raw `GpuSim`, and is scored on throughput,
+//!   energy, and p99 turnaround normalized to the default-knob
+//!   Scheme B reference (whose fleet knobs are the legacy round-robin
+//!   deal, so pre-v3 scores carry over unchanged).
 //! * [`search`] — the sweep drivers: full [`Generator::Grid`] /
 //!   [`Generator::Random`] evaluation, and
 //!   [`Generator::Halving`] (successive halving: prune losers on short
 //!   horizons, re-score survivors on full fleets).
 //! * [`report`] — the ranked [`SweepReport`] with schema-stable JSON
-//!   (`migm.policy_search.v2`): CI runs `migm tune --smoke` every
-//!   build, uploads `BENCH_policy_search.json`, and appends the
-//!   summary row to the perf trajectory.
+//!   (`migm.policy_search.v3`; v3 added the fleet axes): CI runs
+//!   `migm tune --smoke` every build, uploads
+//!   `BENCH_policy_search.json`, and appends the summary row — plus a
+//!   [`fleet_bench_row`] from the heterogeneous bench — to the perf
+//!   trajectory.
 //!
 //! Determinism is load-bearing: same seed + space + scenarios ⇒
 //! byte-identical reports for any worker-thread count, so trajectory
@@ -40,6 +48,9 @@ pub mod search;
 pub mod space;
 
 pub use eval::{evaluate_all, reference_stats, run_candidate, CandidateResult, Scenario};
-pub use report::{RankedCandidate, SweepReport, TrajectoryPoint};
+pub use report::{
+    fleet_bench_row, FleetBenchArm, RankedCandidate, SweepReport, TrajectoryPoint,
+    FLEET_BENCH_SCHEMA,
+};
 pub use search::{successive_halving, sweep, Generator, SweepConfig};
 pub use space::{Candidate, ParamSpace};

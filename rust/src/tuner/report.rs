@@ -1,13 +1,16 @@
 //! The ranked, reproducible sweep report and its schema-stable JSON
-//! form (`migm.policy_search.v2`) — the artifact CI uploads on every
-//! run (`BENCH_policy_search.json`) and the row format appended to the
-//! perf trajectory (`perf/trajectory.json`).
+//! form (`migm.policy_search.v3`; v3 added the fleet-routing axes) —
+//! the artifact CI uploads on every run (`BENCH_policy_search.json`)
+//! and the row formats appended to the perf trajectory
+//! (`perf/trajectory.json`): the sweep [`SweepReport::summary_json`]
+//! row and the heterogeneous-bench [`fleet_bench_row`].
 //!
 //! The JSON is deliberately free of timestamps, host names, and thread
 //! counts: two runs of the same sweep must be byte-identical, which is
 //! what makes the perf trajectory diffable across CI runs.
 
 use crate::metrics::Table;
+use crate::scheduler::RunResult;
 use crate::util::Json;
 
 use super::eval::{ScenarioOutcome, ScenarioRef};
@@ -85,9 +88,10 @@ fn outcome_json(o: &ScenarioOutcome) -> Json {
 
 impl SweepReport {
     /// Schema tag of [`Self::to_json`]; bump on any shape change.
-    pub const SCHEMA: &'static str = "migm.policy_search.v2";
+    /// v3: candidates carry the fleet-routing knob axes.
+    pub const SCHEMA: &'static str = "migm.policy_search.v3";
     /// Schema tag of [`Self::summary_json`] trajectory rows.
-    pub const SUMMARY_SCHEMA: &'static str = "migm.policy_search.summary.v2";
+    pub const SUMMARY_SCHEMA: &'static str = "migm.policy_search.summary.v3";
 
     /// The winning candidate.
     pub fn best(&self) -> &RankedCandidate {
@@ -238,6 +242,65 @@ impl SweepReport {
     }
 }
 
+/// Schema tag of [`fleet_bench_row`]; bump on any shape change.
+pub const FLEET_BENCH_SCHEMA: &str = "migm.bench.fleet.v1";
+
+/// One head-to-head arm of the heterogeneous fleet bench.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetBenchArm {
+    pub makespan_s: f64,
+    pub throughput_jps: f64,
+    pub energy_per_job_j: f64,
+    pub p99_turnaround_s: f64,
+}
+
+impl FleetBenchArm {
+    pub fn from_result(r: &RunResult) -> Self {
+        FleetBenchArm {
+            makespan_s: r.metrics.makespan_s,
+            throughput_jps: r.metrics.throughput_jps,
+            energy_per_job_j: r.metrics.energy_per_job_j,
+            p99_turnaround_s: r.latency.p99_turnaround_s,
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("makespan_s", Json::num(self.makespan_s)),
+            ("throughput_jps", Json::num(self.throughput_jps)),
+            ("energy_per_job_j", Json::num(self.energy_per_job_j)),
+            ("p99_turnaround_s", Json::num(self.p99_turnaround_s)),
+        ])
+    }
+}
+
+/// One perf-trajectory row for `benches/orchestrator_fleet.rs`: the
+/// `FleetPolicy`-vs-`ShardedPolicy` head-to-head numbers on the
+/// heterogeneous fleet, schema-tagged like the sweep summary rows so
+/// `perf/trajectory.json` stays a flat array of self-describing rows.
+pub fn fleet_bench_row(
+    bench: &str,
+    n_jobs: usize,
+    fleet: FleetBenchArm,
+    sharded: FleetBenchArm,
+) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str(FLEET_BENCH_SCHEMA)),
+        ("bench", Json::str(bench)),
+        ("n_jobs", Json::num(n_jobs as f64)),
+        ("fleet", fleet.to_json()),
+        ("sharded", sharded.to_json()),
+        (
+            "makespan_speedup",
+            Json::num(sharded.makespan_s / fleet.makespan_s),
+        ),
+        (
+            "energy_per_job_ratio",
+            Json::num(sharded.energy_per_job_j / fleet.energy_per_job_j),
+        ),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -305,7 +368,7 @@ mod tests {
         // Pin the top-level keys and the schema tag: CI consumers parse
         // this document — shape changes must bump SCHEMA.
         let doc = tiny_report().to_json();
-        assert_eq!(doc.get("schema").as_str(), Some("migm.policy_search.v2"));
+        assert_eq!(doc.get("schema").as_str(), Some("migm.policy_search.v3"));
         for key in [
             "schema",
             "seed",
@@ -321,13 +384,31 @@ mod tests {
         for key in ["candidate", "label", "objective", "is_reference", "scenarios"] {
             assert!(!ranked.get(key).is_null(), "ranked missing '{key}'");
         }
-        // v2: candidates carry the belief-knob axes
+        // v2: candidates carry the belief-knob axes; v3 added fleet
         let cand = ranked.get("candidate");
-        for key in ["scheme", "a", "b", "belief", "prediction", "arrival_scale"] {
+        for key in [
+            "scheme",
+            "a",
+            "b",
+            "belief",
+            "fleet",
+            "prediction",
+            "arrival_scale",
+        ] {
             assert!(!cand.get(key).is_null(), "candidate missing '{key}'");
         }
         for key in ["z", "window", "safety_margin"] {
             assert!(!cand.get("belief").get(key).is_null(), "belief missing '{key}'");
+        }
+        for key in [
+            "placement",
+            "steal",
+            "w_queue",
+            "w_fit",
+            "w_reconfig",
+            "w_energy",
+        ] {
+            assert!(!cand.get("fleet").get(key).is_null(), "fleet missing '{key}'");
         }
         let outcome = ranked.get("scenarios").at(0);
         for key in [
@@ -354,7 +435,7 @@ mod tests {
         let s = tiny_report().summary_json();
         assert_eq!(
             s.get("schema").as_str(),
-            Some("migm.policy_search.summary.v2")
+            Some("migm.policy_search.summary.v3")
         );
         assert_eq!(s.get("best_objective").as_f64(), Some(1.0));
         assert!(!s.get("best_candidate").get("scheme").is_null());
@@ -365,5 +446,50 @@ mod tests {
         let out = tiny_report().render();
         assert!(out.contains("[default]"));
         assert!(out.contains("does not beat"));
+    }
+
+    #[test]
+    fn fleet_bench_row_is_pinned_and_tagged() {
+        let fleet = FleetBenchArm {
+            makespan_s: 10.0,
+            throughput_jps: 2.0,
+            energy_per_job_j: 40.0,
+            p99_turnaround_s: 8.0,
+        };
+        let sharded = FleetBenchArm {
+            makespan_s: 15.0,
+            throughput_jps: 4.0 / 3.0,
+            energy_per_job_j: 50.0,
+            p99_turnaround_s: 14.0,
+        };
+        let row = fleet_bench_row("orchestrator_fleet/hetero-1k", 1000, fleet, sharded);
+        assert_eq!(row.get("schema").as_str(), Some(FLEET_BENCH_SCHEMA));
+        for key in [
+            "schema",
+            "bench",
+            "n_jobs",
+            "fleet",
+            "sharded",
+            "makespan_speedup",
+            "energy_per_job_ratio",
+        ] {
+            assert!(!row.get(key).is_null(), "row missing '{key}'");
+        }
+        for arm in ["fleet", "sharded"] {
+            for key in [
+                "makespan_s",
+                "throughput_jps",
+                "energy_per_job_j",
+                "p99_turnaround_s",
+            ] {
+                assert!(!row.get(arm).get(key).is_null(), "{arm} missing '{key}'");
+            }
+        }
+        assert_eq!(row.get("makespan_speedup").as_f64(), Some(1.5));
+        assert_eq!(row.get("energy_per_job_ratio").as_f64(), Some(1.25));
+        // rows round-trip through the parser (the trajectory file is
+        // parsed, appended to, and re-serialized by CI)
+        let s = row.to_string();
+        assert_eq!(Json::parse(&s).unwrap(), row);
     }
 }

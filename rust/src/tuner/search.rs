@@ -228,8 +228,8 @@ pub fn sweep(cfg: &SweepConfig) -> Result<SweepReport> {
         .zip(&refs)
         .map(|(s, r)| ScenarioInfo {
             name: s.name.clone(),
-            gpu: s.spec.name.clone(),
-            n_gpus: s.n_gpus,
+            gpu: s.gpu_label(),
+            n_gpus: s.n_gpus(),
             n_jobs: s.mix.jobs.len(),
             online: s.base_rate_jps.is_some(),
             reference: *r,

@@ -14,6 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::Scheme;
 use crate::estimator::BeliefKnobs;
+use crate::fleet::{FleetKnobs, PlacementMode, PlacementWeights};
 use crate::scheduler::{SchemeAKnobs, SchemeBKnobs};
 use crate::util::{Json, Rng};
 
@@ -31,6 +32,9 @@ pub struct Candidate {
     pub b: SchemeBKnobs,
     /// Belief-ledger parameters (live only with `prediction`).
     pub belief: BeliefKnobs,
+    /// Fleet-routing knobs (placement mode, stealing, cost-model term
+    /// weights — the weights are live only in cost-model mode).
+    pub fleet: FleetKnobs,
     /// Enable the time-series peak-memory predictor (early restarts).
     pub prediction: bool,
     /// Multiplier on each online scenario's base Poisson rate (ignored
@@ -47,6 +51,7 @@ impl Candidate {
             a: SchemeAKnobs::default(),
             b: SchemeBKnobs::default(),
             belief: BeliefKnobs::default(),
+            fleet: FleetKnobs::default(),
             prediction: false,
             arrival_scale: 1.0,
         }
@@ -72,6 +77,9 @@ impl Candidate {
                     ));
                 }
             }
+            if s.fleet != FleetKnobs::default() {
+                t.push_str(&format!(" fleet={}", s.fleet.label()));
+            }
             if (s.arrival_scale - 1.0).abs() > 1e-12 {
                 t.push_str(&format!(" x{:.2}", s.arrival_scale));
             }
@@ -95,6 +103,7 @@ impl Candidate {
             ("a", self.a.to_json()),
             ("b", self.b.to_json()),
             ("belief", self.belief.to_json()),
+            ("fleet", self.fleet.to_json()),
             ("prediction", Json::Bool(self.prediction)),
             ("arrival_scale", Json::num(self.arrival_scale)),
         ])
@@ -109,6 +118,9 @@ impl Candidate {
         let a = SchemeAKnobs::from_json(doc.get("a"))?;
         let b = SchemeBKnobs::from_json(doc.get("b"))?;
         let belief = BeliefKnobs::from_json(doc.get("belief"))?;
+        // Missing -> legacy defaults, so pre-v3 candidate documents
+        // still parse (and mean exactly what they used to).
+        let fleet = FleetKnobs::from_json(doc.get("fleet"))?;
         let prediction = doc.get("prediction").as_bool().unwrap_or(false);
         let arrival_scale = match doc.get("arrival_scale") {
             Json::Null => 1.0,
@@ -122,6 +134,7 @@ impl Candidate {
             a,
             b,
             belief,
+            fleet,
             prediction,
             arrival_scale,
         })
@@ -149,6 +162,13 @@ pub struct ParamSpace {
     pub belief_windows: Vec<usize>,
     /// Belief ledger: restart safety margins (>= 0).
     pub safety_margins: Vec<f64>,
+    /// Fleet routing: placement engines to try.
+    pub fleet_placements: Vec<PlacementMode>,
+    /// Fleet routing: work-stealing on/off.
+    pub fleet_steals: Vec<bool>,
+    /// Fleet routing: cost-model energy-term weights (>= 0; live only
+    /// in cost-model mode — the other three weights stay at 1.0).
+    pub fleet_energy_weights: Vec<f64>,
     /// Arrival-intensity multipliers (> 0) for online scenarios.
     pub arrival_scales: Vec<f64>,
 }
@@ -169,6 +189,9 @@ impl ParamSpace {
             belief_zs: vec![d.z],
             belief_windows: vec![d.window],
             safety_margins: vec![d.safety_margin],
+            fleet_placements: vec![PlacementMode::RoundRobin, PlacementMode::CostModel],
+            fleet_steals: vec![false, true],
+            fleet_energy_weights: vec![1.0],
             arrival_scales: vec![1.0],
         }
     }
@@ -191,6 +214,9 @@ impl ParamSpace {
             belief_zs: vec![1.96, d.z],
             belief_windows: vec![d.window, 5],
             safety_margins: vec![0.0, 0.1],
+            fleet_placements: vec![PlacementMode::RoundRobin, PlacementMode::CostModel],
+            fleet_steals: vec![false, true],
+            fleet_energy_weights: vec![0.0, 1.0],
             arrival_scales: vec![0.5, 1.0, 2.0],
         }
     }
@@ -205,6 +231,9 @@ impl ParamSpace {
             ("belief_zs", self.belief_zs.is_empty()),
             ("belief_windows", self.belief_windows.is_empty()),
             ("safety_margins", self.safety_margins.is_empty()),
+            ("fleet_placements", self.fleet_placements.is_empty()),
+            ("fleet_steals", self.fleet_steals.is_empty()),
+            ("fleet_energy_weights", self.fleet_energy_weights.is_empty()),
             ("arrival_scales", self.arrival_scales.is_empty()),
         ] {
             if empty {
@@ -225,6 +254,9 @@ impl ParamSpace {
         }
         if self.safety_margins.iter().any(|&m| m < 0.0) {
             bail!("safety_margins must be >= 0");
+        }
+        if self.fleet_energy_weights.iter().any(|&w| w < 0.0) {
+            bail!("fleet_energy_weights must be >= 0");
         }
         Ok(())
     }
@@ -251,48 +283,88 @@ impl ParamSpace {
         out
     }
 
+    /// The fleet-knob combinations: the steal axis is always live; the
+    /// energy-weight axis only bites in cost-model mode (round-robin
+    /// never reads the weights, so they stay at the canonical default).
+    fn fleet_choices(&self) -> Vec<FleetKnobs> {
+        let mut out = Vec::new();
+        for &placement in &self.fleet_placements {
+            for &steal in &self.fleet_steals {
+                match placement {
+                    PlacementMode::RoundRobin => out.push(FleetKnobs {
+                        placement,
+                        steal,
+                        weights: PlacementWeights::default(),
+                    }),
+                    PlacementMode::CostModel => {
+                        for &energy in &self.fleet_energy_weights {
+                            out.push(FleetKnobs {
+                                placement,
+                                steal,
+                                weights: PlacementWeights {
+                                    energy,
+                                    ..PlacementWeights::default()
+                                },
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
     fn push(map: &mut BTreeMap<String, Candidate>, c: Candidate) {
         map.entry(c.key()).or_insert(c);
+    }
+
+    /// Expand `base` across the selected scheme's own knob axes.
+    fn push_scheme_knobs(&self, by_key: &mut BTreeMap<String, Candidate>, base: Candidate) {
+        match base.scheme {
+            Scheme::Baseline => Self::push(by_key, base),
+            Scheme::A => {
+                for &ladder_skip in &self.ladder_skips {
+                    let mut c = base.clone();
+                    c.a = SchemeAKnobs { ladder_skip };
+                    Self::push(by_key, c);
+                }
+            }
+            Scheme::B => {
+                for &max_fusion_destroys in &self.max_fusion_destroys {
+                    for &reuse_slack in &self.reuse_slacks {
+                        let mut c = base.clone();
+                        c.b = SchemeBKnobs {
+                            max_fusion_destroys,
+                            reuse_slack,
+                        };
+                        Self::push(by_key, c);
+                    }
+                }
+            }
+        }
     }
 
     /// Exhaustive cartesian product over the live axes, canonicalized
     /// (deduplicated, key-sorted).
     pub fn grid(&self) -> Result<Vec<Candidate>> {
         self.validate()?;
+        let fleets = self.fleet_choices();
         let mut by_key = BTreeMap::new();
         for &scheme in &self.schemes {
             for &prediction in &self.predictions {
                 for &belief in &self.belief_choices(prediction) {
-                    for &arrival_scale in &self.arrival_scales {
-                        let base = Candidate {
-                            scheme,
-                            a: SchemeAKnobs::default(),
-                            b: SchemeBKnobs::default(),
-                            belief,
-                            prediction,
-                            arrival_scale,
-                        };
-                        match scheme {
-                            Scheme::Baseline => Self::push(&mut by_key, base),
-                            Scheme::A => {
-                                for &ladder_skip in &self.ladder_skips {
-                                    let mut c = base.clone();
-                                    c.a = SchemeAKnobs { ladder_skip };
-                                    Self::push(&mut by_key, c);
-                                }
-                            }
-                            Scheme::B => {
-                                for &max_fusion_destroys in &self.max_fusion_destroys {
-                                    for &reuse_slack in &self.reuse_slacks {
-                                        let mut c = base.clone();
-                                        c.b = SchemeBKnobs {
-                                            max_fusion_destroys,
-                                            reuse_slack,
-                                        };
-                                        Self::push(&mut by_key, c);
-                                    }
-                                }
-                            }
+                    for fleet in &fleets {
+                        for &arrival_scale in &self.arrival_scales {
+                            let base = Candidate {
+                                scheme,
+                                a: SchemeAKnobs::default(),
+                                b: SchemeBKnobs::default(),
+                                belief,
+                                fleet: fleet.clone(),
+                                prediction,
+                                arrival_scale,
+                            };
+                            self.push_scheme_knobs(&mut by_key, base);
                         }
                     }
                 }
@@ -322,6 +394,9 @@ impl ParamSpace {
             let z = *rng.choice(&self.belief_zs);
             let window = *rng.choice(&self.belief_windows);
             let safety_margin = *rng.choice(&self.safety_margins);
+            let placement = *rng.choice(&self.fleet_placements);
+            let steal = *rng.choice(&self.fleet_steals);
+            let energy = *rng.choice(&self.fleet_energy_weights);
             let arrival_scale = *rng.choice(&self.arrival_scales);
             let c = Candidate {
                 scheme,
@@ -344,6 +419,17 @@ impl ParamSpace {
                     }
                 } else {
                     BeliefKnobs::default()
+                },
+                fleet: FleetKnobs {
+                    placement,
+                    steal,
+                    weights: match placement {
+                        PlacementMode::CostModel => PlacementWeights {
+                            energy,
+                            ..PlacementWeights::default()
+                        },
+                        PlacementMode::RoundRobin => PlacementWeights::default(),
+                    },
                 },
                 prediction,
                 arrival_scale,
@@ -372,6 +458,7 @@ mod tests {
                 window: 5,
                 safety_margin: 0.1,
             },
+            fleet: FleetKnobs::balanced(),
             prediction: true,
             arrival_scale: 2.0,
         };
@@ -389,8 +476,9 @@ mod tests {
     fn grid_is_deduped_and_key_sorted() {
         let space = ParamSpace::smoke();
         let g = space.grid().unwrap();
-        // A x 2 skips + B x (2 fusion x 2 slack) = 6
-        assert_eq!(g.len(), 6);
+        // (A x 2 skips + B x (2 fusion x 2 slack)) = 6 scheme points,
+        // times (rr + cost-model) x (steal off/on) = 4 fleet combos
+        assert_eq!(g.len(), 24);
         let keys: Vec<String> = g.iter().map(Candidate::key).collect();
         let mut sorted = keys.clone();
         sorted.sort();
@@ -413,10 +501,14 @@ mod tests {
             belief_zs: vec![1.96, 2.576],
             belief_windows: vec![3, 5],
             safety_margins: vec![0.0, 0.2],
+            fleet_placements: vec![PlacementMode::RoundRobin],
+            fleet_steals: vec![false],
+            fleet_energy_weights: vec![0.5, 1.0],
             arrival_scales: vec![1.0],
         };
-        // B-only axes don't multiply A candidates, and belief axes are
-        // dead without prediction
+        // B-only axes don't multiply A candidates, belief axes are
+        // dead without prediction, and the cost-model weight axis is
+        // dead in round-robin mode
         assert_eq!(space.grid().unwrap().len(), 1);
     }
 
@@ -431,6 +523,9 @@ mod tests {
             belief_zs: vec![1.96, 2.576],
             belief_windows: vec![3, 5],
             safety_margins: vec![0.0, 0.2],
+            fleet_placements: vec![PlacementMode::RoundRobin],
+            fleet_steals: vec![false],
+            fleet_energy_weights: vec![1.0],
             arrival_scales: vec![1.0],
         };
         // prediction on: 2 x 2 x 2 belief combos for the single A point
@@ -446,6 +541,9 @@ mod tests {
         assert!(space.grid().is_err());
         space.belief_windows = vec![3];
         space.safety_margins = vec![-0.1];
+        assert!(space.grid().is_err());
+        space.safety_margins = vec![0.0];
+        space.fleet_energy_weights = vec![-1.0];
         assert!(space.grid().is_err());
     }
 
@@ -467,9 +565,9 @@ mod tests {
     #[test]
     fn random_saturates_small_spaces() {
         let space = ParamSpace::smoke();
-        // ask for more candidates than the 6-point space holds
+        // ask for more candidates than the 24-point space holds
         let all = space.random(50, 3).unwrap();
-        assert_eq!(all.len(), 6);
+        assert_eq!(all.len(), 24);
     }
 
     #[test]

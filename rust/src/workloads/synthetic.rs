@@ -98,6 +98,57 @@ pub fn sized_job(name: &str, mem_gb: f64, steps: u32) -> JobSpec {
     }
 }
 
+/// Hopper/Blackwell-generation MIG geometry: 8 memory slices, 7 GPCs,
+/// the A100's five-profile shape with per-slice memory scaled to
+/// `total_mem_gb`. Placements mirror the A100 layout, so the
+/// reachability precompute stays at the familiar 2^8 = 256 subset
+/// states — far under the 63-slice mask limit `GpuSpec::custom`
+/// enforces.
+fn hopper_class_spec(name: &str, total_mem_gb: f64) -> GpuSpec {
+    let slice = total_mem_gb / 8.0;
+    let prof = |compute: u8, mem: u8, gb: f64, placements: Vec<u8>| MigProfile {
+        name: format!("{compute}g.{gb:.0}gb"),
+        compute_slices: compute,
+        mem_slices: mem,
+        mem_gb: gb,
+        placements,
+    };
+    GpuSpec::custom(
+        name,
+        8,
+        7,
+        total_mem_gb,
+        vec![
+            prof(1, 1, slice, (0..=6).collect()),
+            prof(2, 2, slice * 2.0, vec![0, 2, 4]),
+            prof(3, 4, slice * 4.0, vec![0, 4]),
+            prof(4, 4, slice * 4.0, vec![0]),
+            prof(7, 8, total_mem_gb, vec![0]),
+        ],
+    )
+}
+
+/// A synthetic H200-class `GpuSpec`: ~141 GB HBM3e on the Hopper MIG
+/// geometry, SXM power envelope (idle 80 W, max 700 W — the gpuSpecs
+/// exemplar's H100-SXM/H200 class).
+pub fn h200_141gb() -> GpuSpec {
+    let mut spec = hopper_class_spec("SYNTH-H200-141GB", 141.0);
+    spec.idle_power_w = 80.0;
+    spec.max_power_w = 700.0;
+    spec.pcie_gbps = 25.0;
+    spec
+}
+
+/// A synthetic B200-class `GpuSpec`: ~192 GB on the same geometry with
+/// a Blackwell-class power envelope (idle 90 W, max 1000 W).
+pub fn b200_192gb() -> GpuSpec {
+    let mut spec = hopper_class_spec("SYNTH-B200-192GB", 192.0);
+    spec.idle_power_w = 90.0;
+    spec.max_power_w = 1000.0;
+    spec.pcie_gbps = 32.0;
+    spec
+}
+
 /// A cheap synthetic job with a long op program (kernel steps with
 /// per-step minibatch transfers) so engine time dominates setup in
 /// benches that drain thousands of these.
@@ -165,6 +216,73 @@ mod tests {
             }
         }
         assert_eq!(done, 3, "no job may OOM: estimates are exact");
+    }
+
+    #[test]
+    fn hopper_blackwell_specs_stay_under_the_mask_limit() {
+        for spec in [h200_141gb(), b200_192gb()] {
+            assert!(
+                spec.total_mem_slices < 64,
+                "{}: u64 reachability masks cap at 63 slices",
+                spec.name
+            );
+            assert_eq!(spec.total_mem_slices, 8, "Hopper-class geometry");
+            assert_eq!(spec.total_compute, 7);
+        }
+        assert_eq!(h200_141gb().ladder(), &[17.625, 35.25, 70.5, 141.0]);
+        assert_eq!(b200_192gb().ladder(), &[24.0, 48.0, 96.0, 192.0]);
+        let h200 = h200_141gb();
+        assert_eq!(h200.idle_power_w, 80.0);
+        assert_eq!(h200.max_power_w, 700.0);
+        let b200 = b200_192gb();
+        assert_eq!(b200.max_power_w, 1000.0);
+        assert!(b200.total_mem_gb > h200.total_mem_gb);
+    }
+
+    #[test]
+    fn h200_reachability_hosts_seven_small_instances() {
+        // Exercises the reachability precompute on the synthetic spec:
+        // seven 1g instances must coexist and run to completion.
+        let spec = Arc::new(h200_141gb());
+        let mut s = GpuSim::new(spec, false);
+        let job = fleet_job(3);
+        for _ in 0..7 {
+            let i = s.mgr.alloc(0).unwrap();
+            s.launch(job.clone(), i, 0.0);
+        }
+        assert!(s.mgr.alloc(0).is_err(), "8th 1g instance must not fit");
+        let mut n = 0;
+        while let Some(ev) = s.advance() {
+            if matches!(ev, crate::sim::SimEvent::Finished { .. }) {
+                n += 1;
+            }
+        }
+        assert_eq!(n, 7);
+    }
+
+    #[test]
+    fn b200_hosts_memory_tiers_beyond_the_h100() {
+        // A 100 GB demand overflows every H100 profile (80 GB max) and
+        // needs the B200's full 192 GB profile; an 80 GB demand fits
+        // inside its 96 GB half-GPU slice.
+        let b200 = b200_192gb();
+        let p100 = crate::scheduler::target_profile(
+            &b200,
+            &Estimate::exact(100.0, 7, EstimationMethod::CompilerAnalysis),
+        );
+        assert_eq!(b200.profiles[p100].mem_gb, 192.0);
+        let p80 = crate::scheduler::target_profile(
+            &b200,
+            &Estimate::exact(80.0, 3, EstimationMethod::CompilerAnalysis),
+        );
+        assert_eq!(b200.profiles[p80].mem_gb, 96.0);
+        // and the H200 slices one 30 GB job onto a 35.25 GB 2g profile
+        let h200 = h200_141gb();
+        let p30 = crate::scheduler::target_profile(
+            &h200,
+            &Estimate::exact(30.0, 2, EstimationMethod::CompilerAnalysis),
+        );
+        assert_eq!(h200.profiles[p30].mem_gb, 35.25);
     }
 
     #[test]
