@@ -1,0 +1,145 @@
+//! Serving-path benches: the continuous-batching engine driving 1k /
+//! 10k requests over the compressed synthetic 24h diurnal trace, with
+//! the autoscaler-vs-static head-to-head *asserted* on both axes —
+//! sustained RPS at the p99 SLO AND J/request. A scheduler or engine
+//! change that erases either win fails the bench, not just a chart.
+//!
+//! Set `MIGM_BENCH_SMOKE=1` for the CI smoke run (the 10k trace is
+//! skipped). Set `MIGM_BENCH_JSON=<path>` to write the stats as JSON
+//! (uploaded as a CI perf artifact). Set `MIGM_TRAJECTORY=<path>` to
+//! append the head-to-head (`migm.bench.serving.v1` row) to the perf
+//! trajectory.
+
+use migm::serving::{run, serving_bench_row, ServeConfig, ServeReport};
+use migm::util::bench::{black_box, Bench, BenchStats};
+use migm::util::Json;
+
+const SEED: u64 = 7;
+
+/// Assert the autoscaled arm beats the static arm on both headline
+/// axes; returns the win factors for the log line.
+fn assert_head_to_head(label: &str, auto: &ServeReport, fixed: &ServeReport) -> (f64, f64) {
+    assert_eq!(auto.completed, auto.n_requests, "{label}: auto arm drained");
+    assert_eq!(fixed.completed, fixed.n_requests, "{label}: static arm drained");
+    assert!(
+        auto.sustained_rps > fixed.sustained_rps,
+        "{label}: autoscaled {:.2} RPS@SLO must beat static {:.2}",
+        auto.sustained_rps,
+        fixed.sustained_rps
+    );
+    assert!(
+        auto.j_per_request < fixed.j_per_request,
+        "{label}: autoscaled {:.1} J/req must beat static {:.1}",
+        auto.j_per_request,
+        fixed.j_per_request
+    );
+    (
+        auto.sustained_rps / fixed.sustained_rps,
+        fixed.j_per_request / auto.j_per_request,
+    )
+}
+
+fn main() {
+    let smoke = std::env::var("MIGM_BENCH_SMOKE").is_ok();
+    let b = if smoke { Bench::coarse() } else { Bench::new() };
+    let mut all: Vec<BenchStats> = Vec::new();
+
+    // ---- 1k requests over one compressed day -----------------------
+    // Autoscaled: starts on one eco replica, rides the diurnal wave
+    // (promote -> add -> add, then drain/demote in the trough).
+    // Static: two fast replicas, mean-adequate but peak-inadequate —
+    // the provisioning the autoscaler has to beat on BOTH axes.
+    let n_1k = 1_000;
+    let mut auto_last: Option<ServeReport> = None;
+    let mut static_last: Option<ServeReport> = None;
+    all.push(b.run("serve_1k_diurnal_autoscaled", || {
+        let r = run(&ServeConfig::diurnal(n_1k, SEED));
+        let rps = r.sustained_rps;
+        auto_last = Some(r);
+        black_box(rps)
+    }));
+    all.push(b.run("serve_1k_diurnal_static_2_fast", || {
+        let r = run(&ServeConfig::diurnal(n_1k, SEED).static_fast(2));
+        let rps = r.sustained_rps;
+        static_last = Some(r);
+        black_box(rps)
+    }));
+    let auto = auto_last.expect("auto arm ran");
+    let fixed = static_last.expect("static arm ran");
+    assert!(
+        auto.scale_ups >= 1 && auto.scale_downs >= 1,
+        "autoscaler must move both ways over a full day: {}/{} up/down",
+        auto.scale_ups,
+        auto.scale_downs
+    );
+    let (rps_x, j_x) = assert_head_to_head("1k", &auto, &fixed);
+    println!(
+        "serve 1k head-to-head: autoscaled wins RPS@SLO x{rps_x:.2}, J/request x{j_x:.2} \
+         (margin {:+.0}ms vs {:+.0}ms)",
+        auto.slo_margin_ms, fixed.slo_margin_ms
+    );
+    let serving_row = serving_bench_row("serve_1k_head_to_head", n_1k, &auto, &fixed);
+
+    // ---- 10k requests (full runs only) -----------------------------
+    if !smoke {
+        let cb = Bench::coarse();
+        let n_10k = 10_000;
+        let mut auto10: Option<ServeReport> = None;
+        let mut static10: Option<ServeReport> = None;
+        all.push(cb.run("serve_10k_diurnal_autoscaled", || {
+            let r = run(&ServeConfig::diurnal(n_10k, SEED));
+            let rps = r.sustained_rps;
+            auto10 = Some(r);
+            black_box(rps)
+        }));
+        all.push(cb.run("serve_10k_diurnal_static_2_fast", || {
+            let r = run(&ServeConfig::diurnal(n_10k, SEED).static_fast(2));
+            let rps = r.sustained_rps;
+            static10 = Some(r);
+            black_box(rps)
+        }));
+        let a10 = auto10.expect("10k auto arm ran");
+        let s10 = static10.expect("10k static arm ran");
+        let (rps_x, j_x) = assert_head_to_head("10k", &a10, &s10);
+        println!("serve 10k head-to-head: RPS@SLO x{rps_x:.2}, J/request x{j_x:.2}");
+    }
+
+    if let Ok(path) = std::env::var("MIGM_TRAJECTORY") {
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) if !t.trim().is_empty() => t,
+            _ => "[]".to_string(),
+        };
+        let rows = match Json::parse(&text) {
+            Ok(Json::Arr(mut rows)) => {
+                rows.push(serving_row);
+                rows
+            }
+            _ => vec![serving_row],
+        };
+        std::fs::write(&path, format!("{}\n", Json::Arr(rows))).expect("writing trajectory");
+        println!("appended serving head-to-head row to {path}");
+    }
+
+    if let Ok(path) = std::env::var("MIGM_BENCH_JSON") {
+        let results: Vec<Json> = all
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(s.name.clone())),
+                    ("n", Json::num(s.n as f64)),
+                    ("median_ns", Json::num(s.median_ns)),
+                    ("mean_ns", Json::num(s.mean_ns)),
+                    ("p95_ns", Json::num(s.p95_ns)),
+                    ("min_ns", Json::num(s.min_ns)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("schema", Json::str("migm.bench.serving_suite.v1")),
+            ("smoke", Json::Bool(smoke)),
+            ("results", Json::Arr(results)),
+        ]);
+        std::fs::write(&path, format!("{doc}\n")).expect("writing bench JSON");
+        println!("wrote {path}");
+    }
+}

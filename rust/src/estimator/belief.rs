@@ -642,4 +642,65 @@ mod tests {
         assert_eq!(acc.n_predicted, 2);
         assert!((acc.mean_abs_pct_err - 0.075).abs() < 1e-12, "{}", acc.mean_abs_pct_err);
     }
+
+    #[test]
+    fn external_observations_never_escape_the_upper_bound() {
+        // Property (KV admission soundness): after any interleaving of
+        // observe_external and apply_external_fit, the belief's upper
+        // bound covers every observation ever fed — an admission gate
+        // checking `upper_bound_gb() <= budget` can never have let a
+        // larger reality through.
+        let mut rng = crate::util::Rng::new(1234);
+        for _ in 0..20 {
+            let mut lg = ledger(false);
+            let id = lg.register(Estimate::unknown_upfront(1), 0.0);
+            let mut peak = 0.0f64;
+            for step in 0..60 {
+                let gb = rng.range_f64(0.5, 24.0);
+                peak = peak.max(gb);
+                lg.observe_external(id, Observation { req_mem_gb: gb, reuse_ratio: 1.0 }, gb);
+                if step % 7 == 6 {
+                    let (m, r) = lg.get(id).external_series().unwrap();
+                    let fit = crate::predictor::host::fit_one(m, r, 96.0, Z_99);
+                    let demand = lg.apply_external_fit(id, &fit);
+                    // the returned demand IS the refined demand
+                    assert_eq!(demand, lg.get(id).demand_gb());
+                }
+                let b = lg.get(id);
+                assert_eq!(b.observed_peak_gb(), peak);
+                assert!(
+                    b.upper_bound_gb() >= peak,
+                    "bound {} < observed peak {peak}",
+                    b.upper_bound_gb()
+                );
+            }
+            let (m, r) = lg.get(id).external_series().unwrap();
+            assert_eq!(m.len(), 60);
+            assert_eq!(r.len(), 60);
+        }
+    }
+
+    #[test]
+    fn external_fit_band_clamps_above_observed_peak() {
+        // A fit whose projection sits *below* an already-observed peak
+        // must not shrink the band under reality: refine_band clamps
+        // the top edge to the observed peak.
+        let mut lg = ledger(false);
+        let id = lg.register(Estimate::unknown_upfront(1), 0.0);
+        // one early spike, then a flat low series the fit will track
+        lg.observe_external(id, Observation { req_mem_gb: 18.0, reuse_ratio: 1.0 }, 18.0);
+        for _ in 0..31 {
+            lg.observe_external(id, Observation { req_mem_gb: 2.0, reuse_ratio: 1.0 }, 2.0);
+        }
+        let (m, r) = lg.get(id).external_series().unwrap();
+        let fit = crate::predictor::host::fit_one(m, r, 48.0, Z_99);
+        let demand = lg.apply_external_fit(id, &fit);
+        let b = lg.get(id);
+        assert!(demand < 18.0, "flat series projects low: {demand}");
+        assert_eq!(b.observed_peak_gb(), 18.0);
+        assert!(b.upper_bound_gb() >= 18.0, "band top {}", b.upper_bound_gb());
+        // inverted-reuse bookkeeping: reuse 1.0 stores inv_reuse 1.0
+        let (_, inv) = b.external_series().unwrap();
+        assert!(inv.iter().all(|&x| (x - 1.0).abs() < 1e-12));
+    }
 }

@@ -80,6 +80,16 @@
 //! * [`server`] — JSON-lines LLM serving front-end; replica placement
 //!   and request-latency accounting route through the scheduling
 //!   [`scheduler::Orchestrator`].
+//! * [`serving`] — online LLM serving over MIG fleets (`migm serve`):
+//!   diurnal/bursty traffic generation and trace replay
+//!   ([`serving::traffic`]), per-replica continuous batching with
+//!   belief-band KV admission ([`serving::batcher`]), p50/p99 SLO
+//!   tracking ([`serving::slo`]), and an SLO-driven autoscaler that
+//!   scales replica count *and* MIG profile both ways through
+//!   transactional `PartitionPlan`s ([`serving::autoscaler`]) —
+//!   trough scale-down is where the energy savings come from. The
+//!   deterministic engine in [`serving`] reports sustained RPS at the
+//!   p99 SLO and J/request, byte-identical per seed.
 //! * [`metrics`] / [`report`] — evaluation metrics (incl. p50/p99
 //!   queueing + turnaround percentiles) and paper-figure harnesses.
 //! * [`config`] — JSON configuration for GPUs, mixes, schemes, and
@@ -97,6 +107,7 @@ pub mod runtime;
 pub mod scheduler;
 #[cfg(feature = "pjrt")]
 pub mod server;
+pub mod serving;
 pub mod sim;
 pub mod trace;
 pub mod tuner;

@@ -7,7 +7,8 @@
 //! migm tune [--smoke] [--generator grid|random|halving] [--n 32] [--gpus 4]
 //!           [--seed N] [--threads N] [--out FILE] [--trajectory FILE]
 //! migm mig <list-configs|reachability> [--gpu a100]
-//! migm serve [--port 7700] [--replicas 2] [--variant decode_s128]
+//! migm serve --smoke [--requests N] [--seed N] [--slo-ms N] [--static N] [--json]
+//! migm serve [--port 7700] [--replicas 2] [--variant decode_s128]   (pjrt builds)
 //! migm client [--port 7700] --prompt 3,17,9 [--max-new 16]
 //! ```
 
@@ -84,9 +85,15 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "tune" => cmd_tune(&args),
         "mig" => cmd_mig(&args),
         #[cfg(feature = "pjrt")]
-        "serve" => cmd_serve(&args),
+        "serve" => {
+            if args.has("smoke") || args.has("sim") || args.has("requests") {
+                cmd_serve_sim(&args)
+            } else {
+                cmd_serve(&args)
+            }
+        }
         #[cfg(not(feature = "pjrt"))]
-        "serve" => bail!("this build lacks the 'pjrt' feature (PJRT runtime + serving)"),
+        "serve" => cmd_serve_sim(&args),
         "client" => cmd_client(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -108,7 +115,8 @@ USAGE:
   migm tune [--smoke] [--generator grid|random|halving] [--n 32] [--gpus 4]
             [--seed N] [--threads N] [--out FILE] [--trajectory FILE]
   migm mig <list-configs|reachability> [--gpu a100]
-  migm serve [--port 7700] [--replicas 2] [--variant decode_s128]
+  migm serve --smoke [--requests N] [--seed N] [--slo-ms N] [--static N] [--json]
+  migm serve [--port 7700] [--replicas 2] [--variant decode_s128]   (pjrt builds)
   migm client [--port 7700] --prompt 3,17,9 [--max-new 16]
 
 Mixes: hm1-4, ht1-3, ml1-3, flan-t5-train, flan-t5, qwen2, llama3,
@@ -121,7 +129,15 @@ tune: policy-search sweep over scheduler + fleet-routing knobs on
       Writes a schema-stable report (default BENCH_policy_search.json),
       optionally appends a summary row to a trajectory file, and (for
       grid runs) fails unless some candidate beats the default Scheme B
-      knobs on at least one scenario."
+      knobs on at least one scenario.
+
+serve (simulated): continuous-batching LLM serving over a MIG fleet
+      with SLO-driven autoscaling, driven by a deterministic engine
+      over a compressed synthetic 24h diurnal trace. Reports sustained
+      RPS at the p99 SLO, scale events, and J/request; byte-identical
+      per seed. --static N provisions N fixed fast replicas with no
+      autoscaler (the head-to-head baseline). In pjrt builds, `serve`
+      without --smoke/--requests starts the live TCP front-end instead."
     );
 }
 
@@ -386,6 +402,43 @@ fn cmd_mig(args: &Args) -> Result<()> {
             println!("{}", report::reachability_example(&spec).1.render());
         }
         _ => bail!("usage: migm mig <list-configs|reachability>"),
+    }
+    Ok(())
+}
+
+/// `migm serve --smoke` / `--requests N` — the simulated serving
+/// engine: diurnal traffic, continuous batching, SLO tracking, and
+/// the autoscaler resizing replicas and MIG profiles. Available in
+/// every build (no PJRT needed).
+fn cmd_serve_sim(args: &Args) -> Result<()> {
+    use migm::serving::{run, ServeConfig, SloTargets};
+    let seed = args
+        .get("seed")
+        .map(|s| s.parse::<u64>())
+        .transpose()?
+        .unwrap_or(DEFAULT_SEED);
+    let smoke = args.has("smoke");
+    let n = args
+        .get("requests")
+        .map(|s| s.parse::<usize>())
+        .transpose()?
+        .unwrap_or(if smoke { 240 } else { 1000 });
+    let mut cfg = if smoke && !args.has("requests") {
+        ServeConfig::smoke(seed)
+    } else {
+        ServeConfig::diurnal(n, seed)
+    };
+    if let Some(ms) = args.get("slo-ms") {
+        let p99: f64 = ms.parse()?;
+        cfg.slo = SloTargets::new((p99 / 4.0).max(1.0), p99);
+    }
+    if let Some(k) = args.get("static") {
+        cfg = cfg.static_fast(k.parse()?);
+    }
+    let r = run(&cfg);
+    println!("{}", r.render());
+    if args.has("json") {
+        println!("{}", r.to_json());
     }
     Ok(())
 }

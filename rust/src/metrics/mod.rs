@@ -114,6 +114,59 @@ impl LatencyStats {
     }
 }
 
+/// Fixed-capacity rolling sample window: the last `cap` values pushed,
+/// with nearest-rank percentiles over just that window. The serving
+/// subsystem's SLO tracker feeds recent turnarounds through one so the
+/// autoscaler reacts to *current* tail latency, not the whole run.
+#[derive(Debug, Clone)]
+pub struct RollingWindow {
+    cap: usize,
+    buf: std::collections::VecDeque<f64>,
+}
+
+impl RollingWindow {
+    pub fn new(cap: usize) -> RollingWindow {
+        assert!(cap > 0, "window capacity must be positive");
+        RollingWindow {
+            cap,
+            buf: std::collections::VecDeque::with_capacity(cap),
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Nearest-rank percentile over the window; `None` when empty (so
+    /// callers can't mistake "no samples yet" for "zero latency").
+    pub fn percentile(&self, q: f64) -> Option<f64> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let samples: Vec<f64> = self.buf.iter().copied().collect();
+        Some(percentile(&samples, q))
+    }
+
+    pub fn p50(&self) -> Option<f64> {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> Option<f64> {
+        self.percentile(99.0)
+    }
+}
+
 /// Simple fixed-width table renderer for the report harnesses.
 pub struct Table {
     pub header: Vec<String>,
@@ -240,6 +293,22 @@ mod tests {
         let l = LatencyStats::from_samples(&xs, &xs);
         assert_eq!(l.p50_queue_s, 2.0);
         assert!(l.mean_turnaround_s.is_nan());
+    }
+
+    #[test]
+    fn rolling_window_evicts_oldest_and_tracks_percentiles() {
+        let mut w = RollingWindow::new(3);
+        assert!(w.is_empty());
+        assert_eq!(w.p99(), None);
+        w.push(10.0);
+        w.push(20.0);
+        w.push(30.0);
+        assert_eq!(w.p50(), Some(20.0));
+        assert_eq!(w.p99(), Some(30.0));
+        w.push(40.0); // evicts 10.0
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.p50(), Some(30.0));
+        assert_eq!(w.p99(), Some(40.0));
     }
 
     #[test]

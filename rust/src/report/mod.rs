@@ -396,6 +396,31 @@ pub fn preliminary_a30(seed: u64) -> (PreliminaryResult, Table) {
     (res, t)
 }
 
+/// Serving columns for the online report: the `migm serve` engine's
+/// headline numbers. `None` on the batch/online policy rows.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServingCells {
+    /// Requests completed within the p99 SLO, per second of trace.
+    pub sustained_rps: f64,
+    /// p99 headroom vs the SLO target, ms (negative = blown).
+    pub slo_margin_ms: f64,
+    pub scale_ups: usize,
+    pub scale_downs: usize,
+    pub j_per_request: f64,
+}
+
+impl ServingCells {
+    pub fn from_report(r: &crate::serving::ServeReport) -> ServingCells {
+        ServingCells {
+            sustained_rps: r.sustained_rps,
+            slo_margin_ms: r.slo_margin_ms,
+            scale_ups: r.scale_ups,
+            scale_downs: r.scale_downs,
+            j_per_request: r.j_per_request,
+        }
+    }
+}
+
 /// E11 — online arrivals: one row per policy over a Poisson arrival
 /// stream, reporting throughput/energy plus the per-arrival latency
 /// percentiles the batch experiments cannot express, and the belief
@@ -415,6 +440,8 @@ pub struct OnlineRow {
     /// Jobs the fleet router migrated off a backlogged shard (always 0
     /// for single-GPU rows and non-stealing policies).
     pub steals: u64,
+    /// Serving-subsystem columns (the `serving-auto` row only).
+    pub serving: Option<ServingCells>,
 }
 
 /// Rendered error cell: "-" until some prediction converged.
@@ -438,6 +465,10 @@ fn render_online(rows: &[OnlineRow]) -> Table {
         "per-spec util",
         "steals",
         "pred-err",
+        "rps@slo",
+        "slo-margin (ms)",
+        "scale up/down",
+        "J/req",
     ]);
     for r in rows {
         let util = r
@@ -463,6 +494,14 @@ fn render_online(rows: &[OnlineRow]) -> Table {
             util,
             r.steals.to_string(),
             pred_err_cell(&r.prediction),
+            r.serving
+                .map_or("-".into(), |s| format!("{:.2}", s.sustained_rps)),
+            r.serving
+                .map_or("-".into(), |s| format!("{:+.0}", s.slo_margin_ms)),
+            r.serving
+                .map_or("-".into(), |s| format!("{}/{}", s.scale_ups, s.scale_downs)),
+            r.serving
+                .map_or("-".into(), |s| format!("{:.1}", s.j_per_request)),
         ]);
     }
     t
@@ -499,6 +538,7 @@ pub fn online_arrivals(seed: u64, rate_jps: f64) -> (Vec<OnlineRow>, Table) {
             metrics: r.metrics,
             latency: r.latency,
             prediction: r.prediction,
+            serving: None,
         });
     }
     let fleet_specs = vec![
@@ -530,6 +570,21 @@ pub fn online_arrivals(seed: u64, rate_jps: f64) -> (Vec<OnlineRow>, Table) {
         metrics: r.metrics,
         latency: r.latency,
         prediction: r.prediction,
+        serving: None,
+    });
+    // The fifth row is a different animal: the serving engine's
+    // autoscaled smoke run (diurnal traffic, continuous batching,
+    // SLO-driven scaling) projected onto the same table, with the
+    // serving-only columns filled in.
+    let sr = crate::serving::run(&crate::serving::ServeConfig::smoke(seed));
+    rows.push(OnlineRow {
+        policy: "serving-auto",
+        per_spec_util: vec![(sr.gpu.clone(), sr.mem_utilization)],
+        steals: 0,
+        metrics: sr.as_batch_metrics(),
+        latency: sr.latency,
+        prediction: crate::estimator::PredictionAccuracy::default(),
+        serving: Some(ServingCells::from_report(&sr)),
     });
     let t = render_online(&rows);
     (rows, t)
@@ -633,17 +688,20 @@ mod tests {
     #[test]
     fn online_report_covers_all_policies_with_latency() {
         let (rows, t) = online_arrivals(DEFAULT_SEED, 0.25);
-        assert_eq!(rows.len(), 4);
-        assert_eq!(t.rows.len(), 4);
+        assert_eq!(rows.len(), 5);
+        assert_eq!(t.rows.len(), 5);
         // the online report surfaces reconfiguration cost too
         assert!(t.header.contains(&"reconf (n/s)".to_string()));
         assert!(t.header.contains(&"pred-err".to_string()));
         assert!(t.header.contains(&"per-spec util".to_string()));
         assert!(t.header.contains(&"steals".to_string()));
+        assert!(t.header.contains(&"rps@slo".to_string()));
         assert_eq!(rows[0].metrics.reconfig_time_s, 0.0, "baseline is zero-cost");
         assert!(rows[2].metrics.reconfig_time_s > 0.0, "scheme-B pays for windows");
-        for r in &rows {
+        for r in &rows[..4] {
             assert_eq!(r.metrics.n_jobs, 19); // Ht2 + one dynamic job
+        }
+        for r in &rows {
             assert!(r.latency.p99_turnaround_s >= r.latency.p50_turnaround_s);
             assert!(r.latency.p99_queue_s >= r.latency.p50_queue_s);
         }
@@ -661,12 +719,21 @@ mod tests {
         for (name, util) in &fleet.per_spec_util {
             assert!((0.0..=1.0).contains(util), "{name}: util {util}");
         }
+        // The serving row rides along with its own columns: a real
+        // autoscaled smoke run over the compressed diurnal day.
+        let serve = &rows[4];
+        assert_eq!(serve.policy, "serving-auto");
+        assert_eq!(serve.metrics.n_jobs, 240);
+        let cells = serve.serving.expect("serving row carries its cells");
+        assert!(cells.sustained_rps > 0.0);
+        assert!(cells.j_per_request > 0.0);
+        assert!(rows[..4].iter().all(|r| r.serving.is_none()));
         // The dynamic job never converges a prediction on the baseline's
         // full GPU (nothing to outgrow); the MIG schemes — sharded or
         // fleet-routed — preempt it off the grow-on-demand slice and
         // report the ledger's error.
         assert_eq!(rows[0].prediction.n_predicted, 0);
-        for r in &rows[1..] {
+        for r in &rows[1..4] {
             assert!(
                 r.prediction.n_predicted >= 1,
                 "{}: prediction should converge for the dynamic job",
@@ -772,24 +839,40 @@ mod tests {
             },
             per_spec_util: vec![("A30-24GB".into(), 0.25), ("H100-80GB".into(), 0.5)],
             steals: 3,
+            serving: Some(ServingCells {
+                sustained_rps: 4.25,
+                slo_margin_ms: 250.0,
+                scale_ups: 3,
+                scale_downs: 2,
+                j_per_request: 87.5,
+            }),
         };
         let without = OnlineRow {
             policy: "baseline",
             prediction: PredictionAccuracy::default(),
             per_spec_util: vec![("A100-40GB".into(), 0.4)],
             steals: 0,
+            serving: None,
             ..with_pred.clone()
         };
         let t = render_online(&[without, with_pred]);
-        assert_eq!(*t.header.last().unwrap(), "pred-err");
-        assert_eq!(t.rows[0].last().unwrap(), "-");
-        assert_eq!(t.rows[1].last().unwrap(), "3.2%");
-        // ...and the fleet columns, rendered one cell per spec.
         let n = t.header.len();
-        assert_eq!(t.rows[0][n - 3], "A100-40GB 40%");
-        assert_eq!(t.rows[0][n - 2], "0");
-        assert_eq!(t.rows[1][n - 3], "A30-24GB 25%, H100-80GB 50%");
-        assert_eq!(t.rows[1][n - 2], "3");
+        // tail of the header: prediction error, then the four serving
+        // columns the serve subsystem fills in.
+        assert_eq!(
+            &t.header[n - 5..],
+            ["pred-err", "rps@slo", "slo-margin (ms)", "scale up/down", "J/req"]
+        );
+        assert_eq!(t.rows[0][n - 5], "-");
+        assert_eq!(t.rows[1][n - 5], "3.2%");
+        // serving cells render pinned: "-" everywhere without a report
+        assert_eq!(&t.rows[0][n - 4..], ["-", "-", "-", "-"]);
+        assert_eq!(&t.rows[1][n - 4..], ["4.25", "+250", "3/2", "87.5"]);
+        // ...and the fleet columns, rendered one cell per spec.
+        assert_eq!(t.rows[0][n - 7], "A100-40GB 40%");
+        assert_eq!(t.rows[0][n - 6], "0");
+        assert_eq!(t.rows[1][n - 7], "A30-24GB 25%, H100-80GB 50%");
+        assert_eq!(t.rows[1][n - 6], "3");
     }
 
     #[test]

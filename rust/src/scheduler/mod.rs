@@ -16,8 +16,16 @@
 //!   refined by emitted allocator observations, OOMs, and converged
 //!   predictions — policies read `ctx.belief(id)`, never `job.est`);
 //!   applies policy actions (`begin` → window → `commit` for plans);
-//!   also carries the serving front-end's placement and submission
-//!   accounting.
+//!   also carries the serving front-ends' placement and submission
+//!   accounting: [`Orchestrator::reserve_instances`] /
+//!   [`Orchestrator::release_instances`] /
+//!   [`Orchestrator::swap_instance`] are the transactional replica
+//!   seams the PJRT [`server`](crate::server) and the simulated
+//!   [`serving`](crate::serving) autoscaler drive (scale-out,
+//!   drain-and-release, eco↔fast MIG profile swaps), and the
+//!   external-job ledger (`submit_external` / `start_external` /
+//!   `complete_external`) gives both the same per-request latency
+//!   accounting as the simulated online scenarios.
 //!
 //! The paper's schemes are policy implementations:
 //!

@@ -581,6 +581,48 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
         Ok(self.gpus[gpu].mgr.apply_plan(&plan)?)
     }
 
+    /// Release previously reserved instances — the serving
+    /// autoscaler's trough scale-down path. One transactional
+    /// multi-destroy [`PartitionPlan`], the inverse of
+    /// [`Orchestrator::reserve_instances`]. Runs outside simulated
+    /// time, like the reserve path.
+    pub fn release_instances(
+        &mut self,
+        gpu: GpuId,
+        ids: &[InstanceId],
+    ) -> Result<(), MigError> {
+        if ids.is_empty() {
+            return Ok(());
+        }
+        let plan = PartitionPlan::destroy_only(ids.iter().copied());
+        self.gpus[gpu].mgr.apply_plan(&plan)?;
+        Ok(())
+    }
+
+    /// Replace one reserved instance with a fresh one sized for
+    /// (`mem_gb`, `compute_gpcs`) — the serving autoscaler's MIG
+    /// profile shift (e.g. demote a replica from `2g.20gb` to
+    /// `1g.10gb` in a traffic trough). Destroy and create ride in a
+    /// **single** [`PartitionPlan`], so the swap is all-or-nothing: if
+    /// the target profile can't be placed once `old` is gone, the plan
+    /// fails validation and `old` survives untouched.
+    pub fn swap_instance(
+        &mut self,
+        gpu: GpuId,
+        old: InstanceId,
+        mem_gb: f64,
+        compute_gpcs: u8,
+    ) -> Result<InstanceId, MigError> {
+        let prof = self.gpus[gpu]
+            .spec
+            .tightest_profile(mem_gb, compute_gpcs)
+            .ok_or_else(|| MigError::NoPlacement(format!("{mem_gb:.1}GB")))?;
+        let mut plan = PartitionPlan::destroy_only([old]);
+        plan.push_create(prof);
+        let created = self.gpus[gpu].mgr.apply_plan(&plan)?;
+        Ok(created[0])
+    }
+
     /// Record an external (wall-clock) job submission; returns a token.
     pub fn submit_external(&mut self, name: impl Into<String>, submit_s: f64) -> u64 {
         let token = self.external_next;
@@ -852,5 +894,34 @@ mod tests {
         }
         // a fourth 10GB replica no longer fits next to three
         assert!(orch.reserve_instances(0, 8.0, 1, 2).is_err());
+    }
+
+    #[test]
+    fn release_instances_frees_reserved_slices() {
+        let spec = a100();
+        let mut orch = Orchestrator::single(spec.clone(), false, SchemeBPolicy::new(spec));
+        let ids = orch.reserve_instances(0, 8.0, 1, 3).unwrap();
+        orch.release_instances(0, &ids[1..]).unwrap();
+        for id in &ids[1..] {
+            assert_eq!(orch.gpu(0).mgr.mem_gb_of(*id), None);
+        }
+        // the freed slices are reusable again
+        let again = orch.reserve_instances(0, 8.0, 1, 2).unwrap();
+        assert_eq!(again.len(), 2);
+        orch.release_instances(0, &[]).unwrap(); // no-op is fine
+    }
+
+    #[test]
+    fn swap_instance_is_transactional() {
+        let spec = a100();
+        let mut orch = Orchestrator::single(spec.clone(), false, SchemeBPolicy::new(spec));
+        let ids = orch.reserve_instances(0, 8.0, 1, 1).unwrap();
+        // Demote the replica to the tightest 4GB-capable profile.
+        let small = orch.swap_instance(0, ids[0], 4.0, 1).unwrap();
+        assert_eq!(orch.gpu(0).mgr.mem_gb_of(ids[0]), None);
+        assert_eq!(orch.gpu(0).mgr.mem_gb_of(small), Some(5.0)); // 1g.5gb
+        // An impossible target leaves the current instance untouched.
+        assert!(orch.swap_instance(0, small, 500.0, 1).is_err());
+        assert_eq!(orch.gpu(0).mgr.mem_gb_of(small), Some(5.0));
     }
 }

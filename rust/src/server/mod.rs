@@ -27,6 +27,15 @@
 //! -> {"op":"stats"}
 //! <- {"ok":true,"requests":9,"tokens":144,...}
 //! ```
+//!
+//! The *simulated* counterpart of this front-end lives in
+//! [`serving`](crate::serving): same orchestrator seams
+//! (`reserve_instances` / `release_instances` / `swap_instance`, the
+//! external-job ledger, belief-band KV tracking), but driven by a
+//! deterministic discrete-event engine with diurnal traffic, p50/p99
+//! SLO tracking, and an autoscaler that resizes the replica fleet and
+//! its MIG profiles. `migm serve --smoke` runs that engine; this
+//! module is the live TCP path.
 
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};

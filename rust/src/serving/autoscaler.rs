@@ -1,0 +1,272 @@
+//! SLO-driven autoscaling policy. Pure decision logic over a
+//! [`LoadSnapshot`] — the engine executes the returned action via the
+//! orchestrator's transactional `PartitionPlan` paths
+//! (`reserve_instances` / `release_instances` / `swap_instance`).
+//!
+//! The ladder has two rungs in each direction:
+//!
+//! * scale **up** under SLO pressure — first promote an eco replica
+//!   to the fast MIG profile (cheap: one transactional swap), then
+//!   add replicas up to `max_replicas`;
+//! * scale **down** in troughs — first drain and release surplus
+//!   replicas down to `min_replicas`, then demote the last idle
+//!   replica to the eco profile, cutting standby draw to save energy
+//!   until load returns.
+
+/// Tunable thresholds. All SLO fractions are against the p99 target.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscalerKnobs {
+    /// Seconds between policy evaluations.
+    pub interval_s: f64,
+    /// Minimum seconds between consecutive scale actions.
+    pub cooldown_s: f64,
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Scale up when the recent-window p99 exceeds this fraction of
+    /// the SLO.
+    pub up_p99_frac: f64,
+    /// Scale down only when the recent-window p99 sits below this
+    /// fraction of the SLO.
+    pub down_p99_frac: f64,
+    /// Scale up when queue depth exceeds this multiple of the fleet's
+    /// total batch slots.
+    pub queue_high_factor: f64,
+    /// Scale up when the oldest queued request has already waited
+    /// this fraction of the SLO (early-warning signal — fires before
+    /// any completion shows up slow in the window).
+    pub wait_frac: f64,
+}
+
+impl Default for AutoscalerKnobs {
+    fn default() -> AutoscalerKnobs {
+        AutoscalerKnobs {
+            interval_s: 10.0,
+            cooldown_s: 25.0,
+            min_replicas: 1,
+            max_replicas: 3,
+            up_p99_frac: 0.8,
+            down_p99_frac: 0.25,
+            queue_high_factor: 2.0,
+            wait_frac: 0.35,
+        }
+    }
+}
+
+impl AutoscalerKnobs {
+    /// Knobs rescaled for short compressed traces (smoke runs): same
+    /// thresholds, faster evaluation cadence.
+    pub fn fast(interval_s: f64, cooldown_s: f64) -> AutoscalerKnobs {
+        AutoscalerKnobs {
+            interval_s,
+            cooldown_s,
+            ..AutoscalerKnobs::default()
+        }
+    }
+}
+
+/// What the engine shows the policy at each evaluation tick.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadSnapshot {
+    pub t_s: f64,
+    pub queue_depth: usize,
+    /// Seconds the oldest queued request has waited (0 if none).
+    pub oldest_wait_s: f64,
+    /// Requests currently in some replica's batch.
+    pub in_flight: usize,
+    /// Live, non-draining replicas.
+    pub replicas: usize,
+    /// Total batch slots across those replicas.
+    pub total_slots: usize,
+    /// Recent-window p99 turnaround (None before any completion).
+    pub window_p99_s: Option<f64>,
+    /// Any live replica currently on the eco profile.
+    pub has_eco: bool,
+    /// Exactly one live replica, fast profile, fully idle.
+    pub sole_fast_idle: bool,
+}
+
+/// The policy's verdict; the engine maps it onto `PartitionPlan`s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    Hold,
+    AddReplica,
+    RemoveReplica,
+    /// Swap an eco replica to the fast MIG profile.
+    PromoteProfile,
+    /// Swap the last idle fast replica down to the eco profile.
+    DemoteProfile,
+}
+
+impl ScaleAction {
+    pub fn is_up(self) -> bool {
+        matches!(self, ScaleAction::AddReplica | ScaleAction::PromoteProfile)
+    }
+
+    pub fn is_down(self) -> bool {
+        matches!(self, ScaleAction::RemoveReplica | ScaleAction::DemoteProfile)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ScaleAction::Hold => "hold",
+            ScaleAction::AddReplica => "add-replica",
+            ScaleAction::RemoveReplica => "remove-replica",
+            ScaleAction::PromoteProfile => "promote-profile",
+            ScaleAction::DemoteProfile => "demote-profile",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    pub knobs: AutoscalerKnobs,
+    last_action_s: f64,
+}
+
+impl Autoscaler {
+    pub fn new(knobs: AutoscalerKnobs) -> Autoscaler {
+        assert!(knobs.min_replicas >= 1 && knobs.max_replicas >= knobs.min_replicas);
+        Autoscaler {
+            knobs,
+            last_action_s: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Evaluate one tick. Non-`Hold` verdicts arm the cooldown.
+    pub fn decide(&mut self, slo_p99_s: f64, s: &LoadSnapshot) -> ScaleAction {
+        let k = self.knobs;
+        if s.t_s - self.last_action_s < k.cooldown_s {
+            return ScaleAction::Hold;
+        }
+        let overloaded = s
+            .window_p99_s
+            .is_some_and(|p| p > k.up_p99_frac * slo_p99_s)
+            || s.oldest_wait_s > k.wait_frac * slo_p99_s
+            || s.queue_depth as f64 > k.queue_high_factor * s.total_slots.max(1) as f64;
+        if overloaded {
+            let action = if s.has_eco {
+                ScaleAction::PromoteProfile
+            } else if s.replicas < k.max_replicas {
+                ScaleAction::AddReplica
+            } else {
+                ScaleAction::Hold
+            };
+            if action != ScaleAction::Hold {
+                self.last_action_s = s.t_s;
+            }
+            return action;
+        }
+        let quiet = s.queue_depth == 0
+            && s.window_p99_s
+                .is_some_and(|p| p < k.down_p99_frac * slo_p99_s)
+            && 2 * s.in_flight < s.total_slots.max(1);
+        if quiet {
+            if s.replicas > k.min_replicas {
+                self.last_action_s = s.t_s;
+                return ScaleAction::RemoveReplica;
+            }
+            if s.sole_fast_idle {
+                self.last_action_s = s.t_s;
+                return ScaleAction::DemoteProfile;
+            }
+        }
+        ScaleAction::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(t: f64) -> LoadSnapshot {
+        LoadSnapshot {
+            t_s: t,
+            queue_depth: 0,
+            oldest_wait_s: 0.0,
+            in_flight: 0,
+            replicas: 1,
+            total_slots: 12,
+            window_p99_s: None,
+            has_eco: false,
+            sole_fast_idle: false,
+        }
+    }
+
+    const SLO: f64 = 15.0;
+
+    #[test]
+    fn overload_promotes_eco_before_adding() {
+        let mut a = Autoscaler::new(AutoscalerKnobs::default());
+        let mut s = snap(100.0);
+        s.queue_depth = 100; // >> 2x slots
+        s.has_eco = true;
+        assert_eq!(a.decide(SLO, &s), ScaleAction::PromoteProfile);
+        // cooldown holds the next tick
+        s.t_s += 10.0;
+        assert_eq!(a.decide(SLO, &s), ScaleAction::Hold);
+        // past cooldown, no eco left -> add a replica
+        s.t_s += 30.0;
+        s.has_eco = false;
+        assert_eq!(a.decide(SLO, &s), ScaleAction::AddReplica);
+        // at max replicas there is nothing left to do
+        s.t_s += 40.0;
+        s.replicas = 3;
+        assert_eq!(a.decide(SLO, &s), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn window_tail_and_oldest_wait_both_trigger_up() {
+        let mut a = Autoscaler::new(AutoscalerKnobs::default());
+        let mut s = snap(50.0);
+        s.replicas = 2;
+        s.window_p99_s = Some(0.9 * SLO);
+        assert!(a.decide(SLO, &s).is_up());
+        let mut a2 = Autoscaler::new(AutoscalerKnobs::default());
+        let mut s2 = snap(50.0);
+        s2.replicas = 2;
+        s2.queue_depth = 1;
+        s2.oldest_wait_s = 0.5 * SLO;
+        assert!(a2.decide(SLO, &s2).is_up());
+    }
+
+    #[test]
+    fn quiet_trough_removes_then_demotes() {
+        let mut a = Autoscaler::new(AutoscalerKnobs::default());
+        let mut s = snap(200.0);
+        s.replicas = 2;
+        s.window_p99_s = Some(0.1 * SLO);
+        assert_eq!(a.decide(SLO, &s), ScaleAction::RemoveReplica);
+        s.t_s += 30.0;
+        s.replicas = 1;
+        s.sole_fast_idle = true;
+        assert_eq!(a.decide(SLO, &s), ScaleAction::DemoteProfile);
+        // an eco sole replica has nowhere down to go
+        s.t_s += 30.0;
+        s.sole_fast_idle = false;
+        assert_eq!(a.decide(SLO, &s), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn busy_fleet_never_scales_down() {
+        let mut a = Autoscaler::new(AutoscalerKnobs::default());
+        let mut s = snap(200.0);
+        s.replicas = 3;
+        s.window_p99_s = Some(0.1 * SLO);
+        s.in_flight = 10; // more than half the slots busy
+        assert_eq!(a.decide(SLO, &s), ScaleAction::Hold);
+        // queued work also blocks scale-down
+        s.in_flight = 0;
+        s.queue_depth = 1;
+        assert_eq!(a.decide(SLO, &s), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn no_completions_yet_means_no_scale_down() {
+        // window_p99 is None at t=0: the policy must not tear down
+        // replicas before the first completion lands.
+        let mut a = Autoscaler::new(AutoscalerKnobs::default());
+        let mut s = snap(100.0);
+        s.replicas = 3;
+        assert_eq!(a.decide(SLO, &s), ScaleAction::Hold);
+    }
+}

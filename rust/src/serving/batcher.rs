@@ -1,0 +1,327 @@
+//! Continuous batching on decode: requests join and leave a replica's
+//! in-flight batch at iteration boundaries. KV-cache accounting is
+//! kept in **integer tokens** (so an eviction restores the ledger
+//! bit-for-bit — no float residue), and admission is double-gated:
+//!
+//! 1. capacity — the new request's full reservation (prompt + decode
+//!    tokens) must fit the replica's KV budget next to what's already
+//!    reserved;
+//! 2. confidence — while the batch is non-empty, the replica's
+//!    [`MemoryBelief`](crate::estimator::MemoryBelief) hi-band must
+//!    sit under the memory budget. The band is refined from the
+//!    observation series via `apply_external_fit`, so a *projected*
+//!    over-budget trend pauses admission before reality catches up —
+//!    the gate respects confidence bands, not point estimates. An
+//!    idle batch admits unconditionally (reality is weights-only), so
+//!    a stale high band can never deadlock an empty replica.
+
+use crate::estimator::{BeliefId, BeliefLedger};
+use crate::predictor::Observation;
+use crate::serving::traffic::Request;
+
+/// One occupied batch slot: a request mid-flight.
+#[derive(Debug, Clone)]
+pub struct SlotState {
+    /// Orchestrator external-ledger token (latency accounting).
+    pub token: u64,
+    pub req_id: u64,
+    pub arrival_s: f64,
+    /// Admission time (start of service).
+    pub start_s: f64,
+    pub prompt_left: u32,
+    pub decode_done: u32,
+    pub decode_target: u32,
+    /// KV tokens materialized so far.
+    pub used_tokens: u64,
+    /// KV tokens reserved at admission (prompt + decode).
+    pub reserved_tokens: u64,
+}
+
+/// Per-replica continuous batcher.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    /// The replica's KV belief in the orchestrator's ledger.
+    pub belief: BeliefId,
+    slots: Vec<Option<SlotState>>,
+    reserved_tokens: u64,
+    used_tokens: u64,
+    budget_tokens: u64,
+    weights_gb: f64,
+    mem_budget_gb: f64,
+    kv_gb_per_token: f64,
+}
+
+impl Batcher {
+    pub fn new(
+        belief: BeliefId,
+        n_slots: usize,
+        mem_budget_gb: f64,
+        weights_gb: f64,
+        kv_gb_per_token: f64,
+    ) -> Batcher {
+        assert!(n_slots > 0 && kv_gb_per_token > 0.0);
+        let budget_tokens =
+            ((mem_budget_gb - weights_gb).max(0.0) / kv_gb_per_token).floor() as u64;
+        Batcher {
+            belief,
+            slots: vec![None; n_slots],
+            reserved_tokens: 0,
+            used_tokens: 0,
+            budget_tokens,
+            weights_gb,
+            mem_budget_gb,
+            kv_gb_per_token,
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn busy_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
+
+    pub fn reserved_tokens(&self) -> u64 {
+        self.reserved_tokens
+    }
+
+    pub fn used_tokens(&self) -> u64 {
+        self.used_tokens
+    }
+
+    pub fn budget_tokens(&self) -> u64 {
+        self.budget_tokens
+    }
+
+    /// Physical footprint right now: weights + materialized KV.
+    pub fn used_gb(&self) -> f64 {
+        self.weights_gb + self.used_tokens as f64 * self.kv_gb_per_token
+    }
+
+    /// The double admission gate (see module docs).
+    pub fn can_admit(&self, ledger: &BeliefLedger, req: &Request) -> bool {
+        self.slots.iter().any(|s| s.is_none())
+            && self.reserved_tokens + req.total_tokens() <= self.budget_tokens
+            && (self.is_idle()
+                || ledger.get(self.belief).upper_bound_gb() <= self.mem_budget_gb + 1e-9)
+    }
+
+    /// Admit `req` into a free slot if both gates pass. Returns true
+    /// on admission.
+    pub fn admit(&mut self, ledger: &BeliefLedger, req: &Request, token: u64, now_s: f64) -> bool {
+        if !self.can_admit(ledger, req) {
+            return false;
+        }
+        let slot = self
+            .slots
+            .iter_mut()
+            .find(|s| s.is_none())
+            .expect("can_admit checked a free slot");
+        *slot = Some(SlotState {
+            token,
+            req_id: req.id,
+            arrival_s: req.arrival_s,
+            start_s: now_s,
+            prompt_left: req.prompt_tokens,
+            decode_done: 0,
+            decode_target: req.decode_tokens,
+            used_tokens: 0,
+            reserved_tokens: req.total_tokens(),
+        });
+        self.reserved_tokens += req.total_tokens();
+        true
+    }
+
+    /// One batch iteration: every occupied slot absorbs a prefill
+    /// chunk or decodes one token; finished requests are evicted and
+    /// returned (their KV reservation restored exactly — integer
+    /// tokens, so `reserve + use − evict` is lossless).
+    pub fn step(&mut self, prefill_chunk: u32) -> Vec<SlotState> {
+        let mut done = Vec::new();
+        for slot in &mut self.slots {
+            let Some(s) = slot else { continue };
+            if s.prompt_left > 0 {
+                let absorbed = s.prompt_left.min(prefill_chunk);
+                s.prompt_left -= absorbed;
+                s.used_tokens += absorbed as u64;
+                self.used_tokens += absorbed as u64;
+            } else {
+                s.decode_done += 1;
+                s.used_tokens += 1;
+                self.used_tokens += 1;
+                if s.decode_done >= s.decode_target {
+                    let finished = slot.take().expect("slot occupied");
+                    self.used_tokens -= finished.used_tokens;
+                    self.reserved_tokens -= finished.reserved_tokens;
+                    done.push(finished);
+                }
+            }
+        }
+        done
+    }
+
+    /// Push the current physical footprint into the replica's belief
+    /// (the same `observe_external` path the PJRT server uses for KV
+    /// tracking).
+    pub fn observe(&self, ledger: &mut BeliefLedger) {
+        let used = self.used_gb();
+        ledger.observe_external(
+            self.belief,
+            Observation {
+                req_mem_gb: used,
+                reuse_ratio: 1.0,
+            },
+            used,
+        );
+    }
+
+    /// Retarget the KV budget after a MIG profile swap. Only legal on
+    /// an idle batch — a swap drains the replica first.
+    pub fn rebudget(&mut self, mem_budget_gb: f64) {
+        assert!(self.is_idle(), "rebudget requires a drained batch");
+        self.mem_budget_gb = mem_budget_gb;
+        self.budget_tokens =
+            ((mem_budget_gb - self.weights_gb).max(0.0) / self.kv_gb_per_token).floor() as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::{BeliefConfig, Estimate};
+    use crate::predictor::host::fit_one;
+    use crate::predictor::Z_99;
+    use crate::util::Rng;
+
+    fn req(id: u64, prompt: u32, decode: u32) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            prompt_tokens: prompt,
+            decode_tokens: decode,
+        }
+    }
+
+    fn ledger_with_belief() -> (BeliefLedger, BeliefId) {
+        let mut ledger = BeliefLedger::new(BeliefConfig::new(false));
+        let id = ledger.register(Estimate::unknown_upfront(1), 0.0);
+        (ledger, id)
+    }
+
+    #[test]
+    fn admission_respects_slot_and_token_capacity() {
+        let (ledger, id) = ledger_with_belief();
+        // budget: (1.0 - 0.0) / 0.001 = 1000 tokens, 2 slots
+        let mut b = Batcher::new(id, 2, 1.0, 0.0, 0.001);
+        assert_eq!(b.budget_tokens(), 1000);
+        assert!(b.admit(&ledger, &req(0, 300, 100), 0, 0.0));
+        assert!(b.admit(&ledger, &req(1, 300, 100), 1, 0.0));
+        // no free slot left
+        assert!(!b.admit(&ledger, &req(2, 10, 10), 2, 0.0));
+        let mut one = Batcher::new(id, 8, 1.0, 0.0, 0.001);
+        assert!(one.admit(&ledger, &req(0, 600, 300), 0, 0.0));
+        // 900 reserved; 200 more would blow the 1000-token budget
+        assert!(!one.admit(&ledger, &req(1, 100, 100), 1, 0.0));
+        assert!(one.admit(&ledger, &req(2, 50, 50), 2, 0.0));
+    }
+
+    #[test]
+    fn hi_band_over_budget_pauses_admission_until_idle() {
+        let (mut ledger, id) = ledger_with_belief();
+        let mut b = Batcher::new(id, 4, 10.0, 1.0, 0.001);
+        assert!(b.admit(&ledger, &req(0, 64, 64), 0, 0.0));
+        // Feed a steep growth series and fit it: the projected band
+        // top lands far above the 10 GB budget.
+        for i in 0..32 {
+            ledger.observe_external(
+                id,
+                Observation {
+                    req_mem_gb: 1.0 + 0.4 * i as f64,
+                    reuse_ratio: 1.0,
+                },
+                1.0 + 0.4 * i as f64,
+            );
+        }
+        let (m, r) = ledger.get(id).external_series().unwrap();
+        let stats = fit_one(m, r, 64.0, Z_99);
+        ledger.apply_external_fit(id, &stats);
+        assert!(ledger.get(id).upper_bound_gb() > 10.0);
+        // Non-empty batch + over-budget band: the gate holds even
+        // though slots and tokens are available.
+        assert!(!b.can_admit(&ledger, &req(1, 8, 8)));
+        // Drain the batch: an idle replica admits again (weights-only
+        // reality), so the stale band cannot deadlock it.
+        while !b.is_idle() {
+            b.step(64);
+        }
+        assert!(b.can_admit(&ledger, &req(1, 8, 8)));
+    }
+
+    #[test]
+    fn eviction_restores_token_accounting_exactly() {
+        // Property: any admit/step interleaving ends with zeroed
+        // counters once all requests finish — integer-token
+        // accounting, so the check is equality, not tolerance.
+        let (mut ledger, id) = ledger_with_belief();
+        let mut b = Batcher::new(id, 6, 4.0, 1.0, 0.0005);
+        let mut rng = Rng::new(42);
+        let mut next_id = 0u64;
+        let mut admitted = 0usize;
+        let mut completed = 0usize;
+        for _ in 0..400 {
+            if rng.f64() < 0.4 {
+                let r = req(next_id, 16 + rng.below(64) as u32, 4 + rng.below(24) as u32);
+                if b.admit(&ledger, &r, next_id, 0.0) {
+                    admitted += 1;
+                }
+                next_id += 1;
+            }
+            completed += b.step(32).len();
+            b.observe(&mut ledger);
+            assert!(b.reserved_tokens() <= b.budget_tokens());
+            assert!(b.used_tokens() <= b.reserved_tokens());
+        }
+        while !b.is_idle() {
+            completed += b.step(32).len();
+        }
+        assert!(admitted > 10, "exercised {admitted} admissions");
+        assert_eq!(completed, admitted);
+        assert_eq!(b.reserved_tokens(), 0);
+        assert_eq!(b.used_tokens(), 0);
+        // The observation path reported every peak to the ledger.
+        assert!(ledger.get(id).observed_peak_gb() > 1.0);
+    }
+
+    #[test]
+    fn prefill_then_decode_counts_iterations() {
+        let (ledger, id) = ledger_with_belief();
+        let mut b = Batcher::new(id, 1, 10.0, 0.0, 0.001);
+        assert!(b.admit(&ledger, &req(0, 100, 3), 7, 1.5));
+        // prompt 100 at chunk 64 -> 2 prefill iterations, then 3 decode
+        let mut iters = 0;
+        while !b.is_idle() {
+            let done = b.step(64);
+            iters += 1;
+            if let Some(s) = done.first() {
+                assert_eq!(s.token, 7);
+                assert_eq!(s.used_tokens, 103);
+                assert_eq!(s.start_s, 1.5);
+            }
+        }
+        assert_eq!(iters, 5);
+    }
+
+    #[test]
+    fn rebudget_rescales_token_budget() {
+        let (_, id) = ledger_with_belief();
+        let mut b = Batcher::new(id, 2, 3.0, 1.0, 0.001);
+        assert_eq!(b.budget_tokens(), 2000);
+        b.rebudget(13.0);
+        assert_eq!(b.budget_tokens(), 12000);
+    }
+}

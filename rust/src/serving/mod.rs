@@ -1,0 +1,938 @@
+//! Online LLM serving over MIG fleets: continuous batching, SLO
+//! tracking, and SLO-driven autoscaling, layered on the existing
+//! [`Orchestrator`] seams the PJRT [`server`](crate::server) already
+//! uses — `reserve_instances` / `release_instances` /
+//! [`swap_instance`](Orchestrator::swap_instance) for transactional
+//! replica placement, the external-job ledger for per-request latency
+//! accounting, and the [`BeliefLedger`](crate::estimator::BeliefLedger)
+//! (`observe_external` + `apply_external_fit`) for confidence-band KV
+//! admission.
+//!
+//! The engine is a deterministic discrete-event loop: arrivals come
+//! from [`traffic`] (diurnal non-homogeneous Poisson or trace
+//! replay), each replica's [`batcher`] advances one batch iteration
+//! at a time, [`slo`] scores completions against p50/p99 targets, and
+//! the [`autoscaler`] watches SLO headroom and queue depth to scale
+//! replica count and MIG profile both ways — including trough
+//! scale-down to save energy. Everything is seeded: the same
+//! [`ServeConfig`] yields a byte-identical [`ServeReport`] on every
+//! run, regardless of thread count (the engine is single-threaded by
+//! construction).
+//!
+//! The headline metric is **sustained RPS at the p99 SLO** — requests
+//! completed within target per second of trace — alongside
+//! **J/request**, where the elastic fleet earns its keep in troughs.
+
+pub mod autoscaler;
+pub mod batcher;
+pub mod slo;
+pub mod traffic;
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::estimator::Estimate;
+use crate::metrics::{BatchMetrics, LatencyStats};
+use crate::mig::InstanceId;
+use crate::predictor::host::fit_one;
+use crate::predictor::Z_99;
+use crate::scheduler::scheme_b::SchemeBPolicy;
+use crate::scheduler::Orchestrator;
+use crate::util::Json;
+use crate::GpuSpec;
+
+pub use autoscaler::{Autoscaler, AutoscalerKnobs, LoadSnapshot, ScaleAction};
+pub use batcher::Batcher;
+pub use slo::{SloTargets, SloTracker};
+pub use traffic::{Request, TrafficConfig};
+
+/// The serving engine drives a Scheme-B orchestrator purely through
+/// its server hooks (same seam as the PJRT server).
+type ServeOrchestrator = Orchestrator<SchemeBPolicy>;
+
+/// Static shape of the model being served. Iteration latency follows
+/// the repo's wave model: an instance with fewer GPCs than
+/// `demand_gpcs` runs `ceil(demand / gpcs)` compute waves per step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    pub weights_gb: f64,
+    /// KV cache per token, MB.
+    pub kv_mb_per_token: f64,
+    /// Decode-iteration latency at full (`demand_gpcs`) compute, s.
+    pub step_s_full: f64,
+    pub demand_gpcs: u8,
+    /// Prompt tokens absorbed per prefill iteration.
+    pub prefill_chunk: u32,
+}
+
+impl ModelProfile {
+    /// The 7B chat model the LLM batch experiments already use.
+    pub fn qwen2_7b() -> ModelProfile {
+        ModelProfile {
+            name: "qwen2-7b",
+            weights_gb: 7.0,
+            kv_mb_per_token: 0.8,
+            step_s_full: 0.03,
+            demand_gpcs: 2,
+            prefill_chunk: 64,
+        }
+    }
+
+    pub fn kv_gb_per_token(&self) -> f64 {
+        self.kv_mb_per_token / 1024.0
+    }
+
+    /// Iteration latency on an instance with `slices` GPCs.
+    pub fn step_s(&self, slices: u8) -> f64 {
+        self.step_s_full * self.demand_gpcs.div_ceil(slices.max(1)) as f64
+    }
+}
+
+/// Full description of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub label: &'static str,
+    pub gpu: GpuSpec,
+    pub model: ModelProfile,
+    pub slo: SloTargets,
+    pub traffic: TrafficConfig,
+    pub seed: u64,
+    pub initial_replicas: usize,
+    /// Start replicas on the fast profile (vs eco)?
+    pub initial_fast: bool,
+    pub slots_per_replica: usize,
+    /// Memory request that resolves to the eco MIG profile
+    /// (`1g.10gb` on the A100-80GB).
+    pub eco_mem_req_gb: f64,
+    /// Memory request that resolves to the fast profile (`2g.20gb`).
+    pub fast_mem_req_gb: f64,
+    /// `None` = static provisioning (no scaling).
+    pub autoscaler: Option<AutoscalerKnobs>,
+}
+
+impl ServeConfig {
+    /// Autoscaled run over the compressed synthetic 24h day
+    /// ([`TrafficConfig::compressed_day`]), starting from one eco
+    /// replica. Autoscaler cadence scales with the day length so
+    /// short smoke traces still see many evaluation ticks.
+    pub fn diurnal(n_requests: usize, seed: u64) -> ServeConfig {
+        let traffic = TrafficConfig::compressed_day(n_requests);
+        let period_s = match &traffic {
+            TrafficConfig::Diurnal { profile, .. } => profile.period_s,
+            TrafficConfig::Replay { .. } => unreachable!("compressed_day is diurnal"),
+        };
+        let knobs = AutoscalerKnobs::fast((period_s / 40.0).max(2.0), (period_s / 16.0).max(5.0));
+        ServeConfig {
+            label: "serve-auto",
+            gpu: GpuSpec::a100_80gb(),
+            model: ModelProfile::qwen2_7b(),
+            slo: SloTargets::default_chat(),
+            traffic,
+            seed,
+            initial_replicas: 1,
+            initial_fast: false,
+            slots_per_replica: 12,
+            eco_mem_req_gb: 8.5,
+            fast_mem_req_gb: 12.0,
+            autoscaler: Some(knobs),
+        }
+    }
+
+    /// The `migm serve --smoke` configuration: one compressed day of
+    /// 240 requests.
+    pub fn smoke(seed: u64) -> ServeConfig {
+        let mut cfg = ServeConfig::diurnal(240, seed);
+        cfg.label = "serve-smoke";
+        cfg
+    }
+
+    /// Turn this run into the static-provisioning arm: `replicas`
+    /// fast replicas, no autoscaler. The head-to-head baseline.
+    pub fn static_fast(mut self, replicas: usize) -> ServeConfig {
+        self.label = "serve-static";
+        self.autoscaler = None;
+        self.initial_replicas = replicas;
+        self.initial_fast = true;
+        self
+    }
+}
+
+/// One scale action the engine executed (recorded at initiation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleEvent {
+    pub t_s: f64,
+    pub action: ScaleAction,
+    /// Live replicas right after the action was initiated.
+    pub replicas_after: usize,
+}
+
+/// Final report of one serving run. [`ServeReport::to_json`] is
+/// byte-stable per seed — the determinism test compares full JSON
+/// strings.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub label: String,
+    pub gpu: String,
+    pub seed: u64,
+    pub slo: SloTargets,
+    pub n_requests: usize,
+    pub completed: usize,
+    /// Requests that met the p99 SLO.
+    pub within_slo: usize,
+    /// Time of the last completion (s).
+    pub duration_s: f64,
+    /// Requests-within-SLO per second — the headline metric.
+    pub sustained_rps: f64,
+    pub latency: LatencyStats,
+    /// p99 headroom vs the SLO target, ms (negative = blown).
+    pub slo_margin_ms: f64,
+    pub energy_j: f64,
+    pub j_per_request: f64,
+    /// Time-averaged utilized GPCs (slice-seconds / duration).
+    pub mean_busy_gpcs: f64,
+    /// Time-averaged (weights + KV) footprint over total GPU memory.
+    pub mem_utilization: f64,
+    /// Fits whose projected demand exceeded the replica's memory —
+    /// admission was paused by the confidence band.
+    pub kv_alerts: u64,
+    pub scale_ups: usize,
+    pub scale_downs: usize,
+    pub promotions: usize,
+    pub demotions: usize,
+    pub replicas_min: usize,
+    pub replicas_max: usize,
+    /// Simulated seconds spent provisioning/swapping replicas.
+    pub reconfig_time_s: f64,
+    pub events: Vec<ScaleEvent>,
+}
+
+impl ServeReport {
+    /// Byte-stable JSON document (`migm.serve.report.v1`).
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("t_s", Json::num(e.t_s)),
+                    ("action", Json::str(e.action.label())),
+                    ("replicas_after", Json::num(e.replicas_after as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str("migm.serve.report.v1")),
+            ("label", Json::str(self.label.clone())),
+            ("gpu", Json::str(self.gpu.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("slo_p50_ms", Json::num(self.slo.p50_ms)),
+            ("slo_p99_ms", Json::num(self.slo.p99_ms)),
+            ("n_requests", Json::num(self.n_requests as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("within_slo", Json::num(self.within_slo as f64)),
+            ("duration_s", Json::num(self.duration_s)),
+            ("sustained_rps", Json::num(self.sustained_rps)),
+            ("p50_turnaround_s", Json::num(self.latency.p50_turnaround_s)),
+            ("p99_turnaround_s", Json::num(self.latency.p99_turnaround_s)),
+            ("p99_queue_s", Json::num(self.latency.p99_queue_s)),
+            ("slo_margin_ms", Json::num(self.slo_margin_ms)),
+            ("energy_j", Json::num(self.energy_j)),
+            ("j_per_request", Json::num(self.j_per_request)),
+            ("mean_busy_gpcs", Json::num(self.mean_busy_gpcs)),
+            ("mem_utilization", Json::num(self.mem_utilization)),
+            ("kv_alerts", Json::num(self.kv_alerts as f64)),
+            ("scale_ups", Json::num(self.scale_ups as f64)),
+            ("scale_downs", Json::num(self.scale_downs as f64)),
+            ("promotions", Json::num(self.promotions as f64)),
+            ("demotions", Json::num(self.demotions as f64)),
+            ("replicas_min", Json::num(self.replicas_min as f64)),
+            ("replicas_max", Json::num(self.replicas_max as f64)),
+            ("reconfig_time_s", Json::num(self.reconfig_time_s)),
+            ("events", Json::Arr(events)),
+        ])
+    }
+
+    /// Human-readable summary table.
+    pub fn render(&self) -> String {
+        let mut t = crate::metrics::Table::new(&["metric", "value"]);
+        let mut kv = |k: &str, v: String| t.row(vec![k.to_string(), v]);
+        kv("run", self.label.clone());
+        kv("gpu / seed", format!("{} / {}", self.gpu, self.seed));
+        kv(
+            "requests (completed/total)",
+            format!("{}/{}", self.completed, self.n_requests),
+        );
+        kv("duration (s)", format!("{:.1}", self.duration_s));
+        kv(
+            "sustained RPS @ p99 SLO",
+            format!(
+                "{:.2} ({} within {:.0}ms)",
+                self.sustained_rps, self.within_slo, self.slo.p99_ms
+            ),
+        );
+        kv(
+            "turnaround p50/p99 (s)",
+            format!(
+                "{:.2}/{:.2}",
+                self.latency.p50_turnaround_s, self.latency.p99_turnaround_s
+            ),
+        );
+        kv("p99-vs-SLO margin (ms)", format!("{:+.0}", self.slo_margin_ms));
+        kv(
+            "energy (J) / per request",
+            format!("{:.0} / {:.1}", self.energy_j, self.j_per_request),
+        );
+        kv(
+            "scale events (up/down)",
+            format!(
+                "{}/{} (promote {}, demote {})",
+                self.scale_ups, self.scale_downs, self.promotions, self.demotions
+            ),
+        );
+        kv(
+            "replicas (min..max)",
+            format!("{}..{}", self.replicas_min, self.replicas_max),
+        );
+        kv("kv-band admission alerts", format!("{}", self.kv_alerts));
+        t.render()
+    }
+
+    /// Project onto the batch-metrics shape the online report renders.
+    pub fn as_batch_metrics(&self) -> BatchMetrics {
+        BatchMetrics {
+            n_jobs: self.completed,
+            makespan_s: self.duration_s,
+            throughput_jps: self.completed as f64 / self.duration_s.max(1e-9),
+            energy_j: self.energy_j,
+            energy_per_job_j: self.j_per_request,
+            mem_utilization: self.mem_utilization,
+            avg_turnaround_s: self.latency.mean_turnaround_s,
+            reconfig_ops: self.scale_ups + self.scale_downs,
+            reconfig_windows: self.events.len(),
+            reconfig_time_s: self.reconfig_time_s,
+            oom_restarts: 0,
+            early_restarts: 0,
+        }
+    }
+}
+
+/// Fraction of a provisioned-but-idle replica's compute draw (weights
+/// resident, memory refresh): the energy cost of standing capacity,
+/// which trough scale-down eliminates.
+const STANDBY_FRAC: f64 = 0.35;
+/// Refit the KV belief every this many batch iterations.
+const FIT_EVERY: u64 = 16;
+/// Fit over the most recent observations only.
+const FIT_WINDOW: usize = 96;
+
+struct Replica {
+    instance: InstanceId,
+    slices: u8,
+    mem_gb: f64,
+    batcher: Batcher,
+    /// Provisioning (weight load / swap) completes at this time.
+    ready_at: f64,
+    next_tick: Option<f64>,
+    draining: bool,
+    /// Pending profile swap: `Some(true)` promote, `Some(false)` demote.
+    swap_target: Option<bool>,
+    iters: u64,
+}
+
+impl Replica {
+    fn accepts_work(&self, t: f64) -> bool {
+        !self.draining && self.swap_target.is_none() && self.ready_at <= t
+    }
+}
+
+struct Engine<'a> {
+    cfg: &'a ServeConfig,
+    orch: ServeOrchestrator,
+    requests: Vec<Request>,
+    next_req: usize,
+    /// (request index, external-ledger token), FIFO.
+    queue: VecDeque<(usize, u64)>,
+    replicas: Vec<Replica>,
+    slo: SloTracker,
+    scaler: Option<Autoscaler>,
+    next_scale_t: f64,
+    t: f64,
+    last_energy_t: f64,
+    energy_j: f64,
+    gpc_integral: f64,
+    mem_integral: f64,
+    kv_alerts: u64,
+    events: Vec<ScaleEvent>,
+    replicas_min: usize,
+    replicas_max: usize,
+    reconfig_time_s: f64,
+}
+
+/// Run one serving simulation to completion.
+pub fn run(cfg: &ServeConfig) -> ServeReport {
+    let spec = Arc::new(cfg.gpu.clone());
+    let orch = Orchestrator::single(spec.clone(), false, SchemeBPolicy::new(spec));
+    let requests = cfg.traffic.generate(cfg.seed);
+    let next_scale_t = cfg
+        .autoscaler
+        .as_ref()
+        .map_or(f64::INFINITY, |k| k.interval_s);
+    let mut eng = Engine {
+        cfg,
+        orch,
+        requests,
+        next_req: 0,
+        queue: VecDeque::new(),
+        replicas: Vec::new(),
+        slo: SloTracker::new(cfg.slo),
+        scaler: cfg.autoscaler.map(Autoscaler::new),
+        next_scale_t,
+        t: 0.0,
+        last_energy_t: 0.0,
+        energy_j: 0.0,
+        gpc_integral: 0.0,
+        mem_integral: 0.0,
+        kv_alerts: 0,
+        events: Vec::new(),
+        replicas_min: cfg.initial_replicas,
+        replicas_max: cfg.initial_replicas,
+        reconfig_time_s: 0.0,
+    };
+    for _ in 0..cfg.initial_replicas {
+        let r = eng
+            .spawn_replica(cfg.initial_fast, 0.0)
+            .expect("initial replicas must place");
+        eng.replicas.push(r);
+    }
+    eng.run_loop();
+    eng.report()
+}
+
+impl Engine<'_> {
+    /// Reserve a MIG instance + register a fresh KV belief; `ready_at`
+    /// models profile creation plus weight load over PCIe.
+    fn spawn_replica(&mut self, fast: bool, now: f64) -> Result<Replica, crate::mig::MigError> {
+        let model = &self.cfg.model;
+        let mem_req = if fast {
+            self.cfg.fast_mem_req_gb
+        } else {
+            self.cfg.eco_mem_req_gb
+        };
+        let ids = self
+            .orch
+            .reserve_instances(0, mem_req, model.demand_gpcs, 1)?;
+        let instance = ids[0];
+        let mgr = &self.orch.gpu(0).mgr;
+        let mem_gb = mgr.mem_gb_of(instance).expect("fresh instance");
+        let slices = mgr.compute_slices_of(instance).expect("fresh instance");
+        let belief = self
+            .orch
+            .beliefs_mut()
+            .register(Estimate::unknown_upfront(model.demand_gpcs), 0.0);
+        let provision_s = if now > 0.0 {
+            self.cfg.gpu.reconfig_create_s + model.weights_gb / self.cfg.gpu.pcie_gbps
+        } else {
+            0.0 // initial fleet is pre-warmed
+        };
+        self.reconfig_time_s += provision_s;
+        Ok(Replica {
+            instance,
+            slices,
+            mem_gb,
+            batcher: Batcher::new(
+                belief,
+                self.cfg.slots_per_replica,
+                mem_gb,
+                model.weights_gb,
+                model.kv_gb_per_token(),
+            ),
+            ready_at: now + provision_s,
+            next_tick: None,
+            draining: false,
+            swap_target: None,
+            iters: 0,
+        })
+    }
+
+    /// Execute deferred transitions that need a drained batch:
+    /// release draining replicas, perform pending profile swaps.
+    fn settle_transitions(&mut self) {
+        let t = self.t;
+        let mut i = 0;
+        while i < self.replicas.len() {
+            if self.replicas[i].draining && self.replicas[i].batcher.is_idle() {
+                let inst = self.replicas[i].instance;
+                self.orch
+                    .release_instances(0, &[inst])
+                    .expect("draining replica owns its instance");
+                self.replicas.remove(i);
+                continue;
+            }
+            if self.replicas[i].swap_target.is_some() && self.replicas[i].batcher.is_idle() {
+                let fast = self.replicas[i].swap_target.take().expect("checked");
+                let mem_req = if fast {
+                    self.cfg.fast_mem_req_gb
+                } else {
+                    self.cfg.eco_mem_req_gb
+                };
+                let old = self.replicas[i].instance;
+                match self
+                    .orch
+                    .swap_instance(0, old, mem_req, self.cfg.model.demand_gpcs)
+                {
+                    Ok(new_inst) => {
+                        let mgr = &self.orch.gpu(0).mgr;
+                        let mem_gb = mgr.mem_gb_of(new_inst).expect("swapped instance");
+                        let slices = mgr.compute_slices_of(new_inst).expect("swapped instance");
+                        let r = &mut self.replicas[i];
+                        r.instance = new_inst;
+                        r.mem_gb = mem_gb;
+                        r.slices = slices;
+                        r.batcher.rebudget(mem_gb);
+                        let swap_s = self.cfg.gpu.reconfig_destroy_s
+                            + self.cfg.gpu.reconfig_create_s
+                            + self.cfg.model.weights_gb / self.cfg.gpu.pcie_gbps;
+                        r.ready_at = t + swap_s;
+                        self.reconfig_time_s += swap_s;
+                    }
+                    Err(_) => {
+                        // Swap target unplaceable (fragmentation):
+                        // keep serving on the current profile.
+                    }
+                }
+            }
+            i += 1;
+        }
+        self.replicas_min = self.replicas_min.min(self.replicas.len());
+        self.replicas_max = self.replicas_max.max(self.replicas.len());
+    }
+
+    fn advance_energy(&mut self, to: f64) {
+        let dt = to - self.last_energy_t;
+        self.last_energy_t = to;
+        if dt <= 0.0 {
+            return;
+        }
+        let spec = &self.cfg.gpu;
+        let per_gpc = (spec.max_power_w - spec.idle_power_w) / spec.total_compute as f64;
+        let mut gpcs = 0.0;
+        let mut busy_gpcs = 0.0;
+        let mut mem = 0.0;
+        for r in &self.replicas {
+            let busy = r.batcher.busy_slots() as f64 / r.batcher.n_slots() as f64;
+            gpcs += r.slices as f64 * busy.max(STANDBY_FRAC);
+            busy_gpcs += r.slices as f64 * busy;
+            mem += r.batcher.used_gb();
+        }
+        self.energy_j += (spec.idle_power_w + per_gpc * gpcs) * dt;
+        self.gpc_integral += busy_gpcs * dt;
+        self.mem_integral += mem * dt;
+    }
+
+    fn run_iteration(&mut self, i: usize) {
+        let t = self.t;
+        self.replicas[i].iters += 1;
+        let finished = self.replicas[i].batcher.step(self.cfg.model.prefill_chunk);
+        for s in &finished {
+            self.orch.complete_external(s.token, t);
+            self.slo.record(s.start_s - s.arrival_s, t - s.arrival_s);
+        }
+        self.replicas[i].batcher.observe(self.orch.beliefs_mut());
+        if self.replicas[i].iters % FIT_EVERY == 0 {
+            let belief = self.replicas[i].batcher.belief;
+            let (m, r) = {
+                let (m, r) = self
+                    .orch
+                    .beliefs()
+                    .get(belief)
+                    .external_series()
+                    .expect("observed every iteration");
+                let lo = m.len().saturating_sub(FIT_WINDOW);
+                (m[lo..].to_vec(), r[lo..].to_vec())
+            };
+            let stats = fit_one(&m, &r, m.len() as f64 * 1.5, Z_99);
+            let demand = self.orch.beliefs_mut().apply_external_fit(belief, &stats);
+            if demand > self.replicas[i].mem_gb {
+                self.kv_alerts += 1;
+            }
+        }
+        self.replicas[i].next_tick = if self.replicas[i].batcher.is_idle() {
+            None
+        } else {
+            Some(t + self.cfg.model.step_s(self.replicas[i].slices))
+        };
+    }
+
+    /// Admit queued requests into replicas, least-loaded first.
+    fn feed(&mut self) {
+        let t = self.t;
+        while let Some(&(ri, token)) = self.queue.front() {
+            let mut order: Vec<usize> = (0..self.replicas.len())
+                .filter(|&i| {
+                    let r = &self.replicas[i];
+                    r.accepts_work(t) && r.batcher.busy_slots() < r.batcher.n_slots()
+                })
+                .collect();
+            order.sort_by_key(|&i| (self.replicas[i].batcher.busy_slots(), i));
+            let mut placed = false;
+            for &i in &order {
+                let admitted = self.replicas[i].batcher.admit(
+                    self.orch.beliefs(),
+                    &self.requests[ri],
+                    token,
+                    t,
+                );
+                if admitted {
+                    self.orch.start_external(token, t);
+                    let step = self.cfg.model.step_s(self.replicas[i].slices);
+                    let r = &mut self.replicas[i];
+                    if r.next_tick.is_none() {
+                        r.next_tick = Some(t + step);
+                    }
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                break;
+            }
+            self.queue.pop_front();
+        }
+    }
+
+    fn snapshot(&self) -> LoadSnapshot {
+        let live: Vec<&Replica> = self.replicas.iter().filter(|r| !r.draining).collect();
+        let in_flight: usize = self.replicas.iter().map(|r| r.batcher.busy_slots()).sum();
+        let has_eco = live
+            .iter()
+            .any(|r| r.swap_target.is_none() && r.slices < self.cfg.model.demand_gpcs);
+        let sole_fast_idle = live.len() == 1
+            && live[0].swap_target.is_none()
+            && live[0].slices >= self.cfg.model.demand_gpcs
+            && live[0].batcher.is_idle();
+        let oldest_wait_s = self
+            .queue
+            .front()
+            .map_or(0.0, |&(ri, _)| self.t - self.requests[ri].arrival_s);
+        LoadSnapshot {
+            t_s: self.t,
+            queue_depth: self.queue.len(),
+            oldest_wait_s,
+            in_flight,
+            replicas: live.len(),
+            total_slots: live.iter().map(|r| r.batcher.n_slots()).sum(),
+            window_p99_s: self.slo.window_p99_s(),
+            has_eco,
+            sole_fast_idle,
+        }
+    }
+
+    fn apply_action(&mut self, action: ScaleAction) {
+        let t = self.t;
+        match action {
+            ScaleAction::Hold => return,
+            ScaleAction::AddReplica => match self.spawn_replica(true, t) {
+                Ok(r) => self.replicas.push(r),
+                Err(_) => return, // no slice available: nothing changed
+            },
+            ScaleAction::RemoveReplica => {
+                // Drain the least-loaded removable replica.
+                let victim = (0..self.replicas.len())
+                    .filter(|&i| {
+                        !self.replicas[i].draining && self.replicas[i].swap_target.is_none()
+                    })
+                    .min_by_key(|&i| (self.replicas[i].batcher.busy_slots(), usize::MAX - i));
+                match victim {
+                    Some(i) => self.replicas[i].draining = true,
+                    None => return,
+                }
+            }
+            ScaleAction::PromoteProfile => {
+                let target = (0..self.replicas.len())
+                    .filter(|&i| {
+                        let r = &self.replicas[i];
+                        !r.draining
+                            && r.swap_target.is_none()
+                            && r.slices < self.cfg.model.demand_gpcs
+                    })
+                    .min_by_key(|&i| (self.replicas[i].batcher.busy_slots(), i));
+                match target {
+                    Some(i) => self.replicas[i].swap_target = Some(true),
+                    None => return,
+                }
+            }
+            ScaleAction::DemoteProfile => {
+                let target = (0..self.replicas.len()).find(|&i| {
+                    let r = &self.replicas[i];
+                    !r.draining
+                        && r.swap_target.is_none()
+                        && r.slices >= self.cfg.model.demand_gpcs
+                        && r.batcher.is_idle()
+                });
+                match target {
+                    Some(i) => self.replicas[i].swap_target = Some(false),
+                    None => return,
+                }
+            }
+        }
+        let live = self.replicas.iter().filter(|r| !r.draining).count();
+        self.events.push(ScaleEvent {
+            t_s: t,
+            action,
+            replicas_after: live,
+        });
+        self.replicas_min = self.replicas_min.min(self.replicas.len());
+        self.replicas_max = self.replicas_max.max(self.replicas.len());
+    }
+
+    fn run_loop(&mut self) {
+        loop {
+            self.settle_transitions();
+            let drained = self.next_req >= self.requests.len()
+                && self.queue.is_empty()
+                && self.replicas.iter().all(|r| r.batcher.is_idle());
+            if drained {
+                break;
+            }
+            let mut tn = f64::INFINITY;
+            if let Some(r) = self.requests.get(self.next_req) {
+                tn = tn.min(r.arrival_s);
+            }
+            for r in &self.replicas {
+                if let Some(x) = r.next_tick {
+                    tn = tn.min(x);
+                }
+                if r.ready_at > self.t {
+                    tn = tn.min(r.ready_at);
+                }
+            }
+            if self.scaler.is_some() {
+                tn = tn.min(self.next_scale_t);
+            }
+            assert!(tn.is_finite(), "serving engine stalled at t={}", self.t);
+            self.advance_energy(tn);
+            self.t = tn;
+            while self
+                .requests
+                .get(self.next_req)
+                .is_some_and(|r| r.arrival_s <= self.t)
+            {
+                let r = &self.requests[self.next_req];
+                let token = self.orch.submit_external(self.cfg.model.name, r.arrival_s);
+                self.queue.push_back((self.next_req, token));
+                self.next_req += 1;
+            }
+            for i in 0..self.replicas.len() {
+                if self.replicas[i].next_tick.is_some_and(|x| x <= self.t) {
+                    self.run_iteration(i);
+                }
+            }
+            self.settle_transitions();
+            self.feed();
+            if self.next_scale_t <= self.t {
+                if let Some(sc) = self.scaler.as_mut() {
+                    let snap = self.snapshot();
+                    let slo_s = self.cfg.slo.p99_s();
+                    let action = sc.decide(slo_s, &snap);
+                    self.next_scale_t += sc.knobs.interval_s;
+                    self.apply_action(action);
+                }
+            }
+        }
+    }
+
+    fn report(&self) -> ServeReport {
+        let cfg = self.cfg;
+        let duration_s = self.t.max(1e-9);
+        let completed = self.slo.completed();
+        let within_slo = self.slo.within_slo();
+        let latency = self.slo.attained();
+        let count = |a: ScaleAction| self.events.iter().filter(|e| e.action == a).count();
+        let promotions = count(ScaleAction::PromoteProfile);
+        let demotions = count(ScaleAction::DemoteProfile);
+        ServeReport {
+            label: cfg.label.to_string(),
+            gpu: cfg.gpu.name.clone(),
+            seed: cfg.seed,
+            slo: cfg.slo,
+            n_requests: self.requests.len(),
+            completed,
+            within_slo,
+            duration_s,
+            sustained_rps: within_slo as f64 / duration_s,
+            latency,
+            slo_margin_ms: self.slo.margin_ms(),
+            energy_j: self.energy_j,
+            j_per_request: self.energy_j / completed.max(1) as f64,
+            mean_busy_gpcs: self.gpc_integral / duration_s,
+            mem_utilization: self.mem_integral / (cfg.gpu.total_mem_gb * duration_s),
+            kv_alerts: self.kv_alerts,
+            scale_ups: count(ScaleAction::AddReplica) + promotions,
+            scale_downs: count(ScaleAction::RemoveReplica) + demotions,
+            promotions,
+            demotions,
+            replicas_min: self.replicas_min,
+            replicas_max: self.replicas_max,
+            reconfig_time_s: self.reconfig_time_s,
+            events: self.events.clone(),
+        }
+    }
+}
+
+/// Schema tag of the serving head-to-head trajectory row.
+pub const SERVING_BENCH_SCHEMA: &str = "migm.bench.serving.v1";
+
+fn arm_json(r: &ServeReport) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(r.label.clone())),
+        ("sustained_rps", Json::num(r.sustained_rps)),
+        ("within_slo", Json::num(r.within_slo as f64)),
+        ("p99_turnaround_s", Json::num(r.latency.p99_turnaround_s)),
+        ("slo_margin_ms", Json::num(r.slo_margin_ms)),
+        ("energy_j", Json::num(r.energy_j)),
+        ("j_per_request", Json::num(r.j_per_request)),
+        ("scale_ups", Json::num(r.scale_ups as f64)),
+        ("scale_downs", Json::num(r.scale_downs as f64)),
+    ])
+}
+
+/// The autoscaler-vs-static head-to-head as a perf-trajectory row.
+/// Both ratios are static ÷ autoscaled where lower-is-better
+/// (J/request) and autoscaled ÷ static where higher-is-better (RPS at
+/// SLO), so **> 1.0 always means the autoscaler wins**.
+pub fn serving_bench_row(
+    bench: &str,
+    n_requests: usize,
+    auto: &ServeReport,
+    fixed: &ServeReport,
+) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str(SERVING_BENCH_SCHEMA)),
+        ("bench", Json::str(bench)),
+        ("n_requests", Json::num(n_requests as f64)),
+        ("autoscaled", arm_json(auto)),
+        ("static", arm_json(fixed)),
+        (
+            "rps_at_slo_ratio",
+            Json::num(auto.sustained_rps / fixed.sustained_rps.max(1e-12)),
+        ),
+        (
+            "j_per_request_ratio",
+            Json::num(fixed.j_per_request / auto.j_per_request.max(1e-12)),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wave_model_step_latency() {
+        let m = ModelProfile::qwen2_7b();
+        assert_eq!(m.step_s(2), 0.03); // full speed
+        assert_eq!(m.step_s(1), 0.06); // eco: two waves
+        assert_eq!(m.step_s(7), 0.03); // extra GPCs don't help one model
+    }
+
+    #[test]
+    fn smoke_run_completes_every_request_within_the_day() {
+        let r = run(&ServeConfig::smoke(7));
+        assert_eq!(r.n_requests, 240);
+        assert_eq!(r.completed, 240);
+        assert!(r.within_slo > 0 && r.within_slo <= r.completed);
+        assert!(r.sustained_rps > 0.0);
+        assert!(r.duration_s > 0.0 && r.energy_j > 0.0);
+        assert!(r.latency.p99_turnaround_s > 0.0);
+        assert!(r.mem_utilization > 0.0 && r.mem_utilization < 1.0);
+        // the external ledger saw every request
+        assert!(r.j_per_request > 0.0);
+    }
+
+    #[test]
+    fn serve_reports_are_byte_identical_per_seed() {
+        let a = run(&ServeConfig::smoke(7)).to_json().to_string();
+        let b = run(&ServeConfig::smoke(7)).to_json().to_string();
+        let c = run(&ServeConfig::smoke(8)).to_json().to_string();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.contains("\"schema\":\"migm.serve.report.v1\""));
+    }
+
+    /// The acceptance pin: over a burst-then-sparse-tail trace the
+    /// autoscaler must change replica count AND MIG profile at least
+    /// once in each direction.
+    #[test]
+    fn autoscaler_scales_both_directions_including_profiles() {
+        let mut arrivals: Vec<f64> = (0..80).map(|i| i as f64 * 0.05).collect();
+        arrivals.extend((0..140).map(|i| 40.0 + i as f64 * 6.0));
+        let mut cfg = ServeConfig::diurnal(220, 5);
+        cfg.traffic = TrafficConfig::Replay { arrivals };
+        cfg.autoscaler = Some(AutoscalerKnobs::fast(2.0, 5.0));
+        let r = run(&cfg);
+        assert_eq!(r.completed, 220);
+        assert!(
+            r.promotions >= 1,
+            "burst must promote the eco replica: {r:?}"
+        );
+        assert!(
+            r.scale_ups > r.promotions,
+            "burst must also add replicas: {r:?}"
+        );
+        assert!(
+            r.scale_downs > r.demotions,
+            "sparse tail must remove replicas: {r:?}"
+        );
+        assert!(
+            r.demotions >= 1,
+            "idle tail must demote the last replica: {r:?}"
+        );
+        assert!(r.replicas_max > r.replicas_min);
+        // events carry the same story, in time order
+        assert!(r.events.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+    }
+
+    #[test]
+    fn static_arm_never_scales() {
+        let mut cfg = ServeConfig::diurnal(120, 3).static_fast(2);
+        cfg.label = "serve-static";
+        let r = run(&cfg);
+        assert_eq!(r.completed, 120);
+        assert_eq!(r.scale_ups + r.scale_downs, 0);
+        assert_eq!(r.replicas_min, 2);
+        assert_eq!(r.replicas_max, 2);
+        assert!(r.events.is_empty());
+    }
+
+    #[test]
+    fn serving_bench_row_pins_fields() {
+        let auto = run(&ServeConfig::smoke(7));
+        let fixed = run(&ServeConfig::diurnal(240, 7).static_fast(1));
+        let row = serving_bench_row("serve_head_to_head", 240, &auto, &fixed);
+        let text = row.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("schema").as_str().unwrap(),
+            "migm.bench.serving.v1"
+        );
+        assert_eq!(parsed.get("n_requests").as_f64().unwrap(), 240.0);
+        for arm in ["autoscaled", "static"] {
+            let a = parsed.get(arm);
+            for key in [
+                "sustained_rps",
+                "within_slo",
+                "p99_turnaround_s",
+                "slo_margin_ms",
+                "energy_j",
+                "j_per_request",
+                "scale_ups",
+                "scale_downs",
+            ] {
+                assert!(a.get(key).as_f64().is_some(), "{arm}.{key}");
+            }
+        }
+        assert!(parsed.get("rps_at_slo_ratio").as_f64().unwrap() > 0.0);
+        assert!(parsed.get("j_per_request_ratio").as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Per-request SLO tracking: every completion is scored against
+//! configured p50/p99 latency targets, kept both as a full-run sample
+//! (for the final report's attained percentiles) and as a rolling
+//! window of recent turnarounds (what the autoscaler reacts to — it
+//! must see *current* tail latency, not the whole day's average).
+
+use crate::metrics::{LatencyStats, RollingWindow};
+
+/// Latency targets, milliseconds end-to-end (arrival → last token).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTargets {
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl SloTargets {
+    pub fn new(p50_ms: f64, p99_ms: f64) -> SloTargets {
+        assert!(p50_ms > 0.0 && p99_ms >= p50_ms);
+        SloTargets { p50_ms, p99_ms }
+    }
+
+    /// The default serving target: 4s median, 15s tail. Generous in
+    /// absolute terms — requests decode up to ~110 tokens at 30-60ms
+    /// per iteration — so violations measure queueing/overload, not
+    /// raw service time.
+    pub fn default_chat() -> SloTargets {
+        SloTargets::new(4_000.0, 15_000.0)
+    }
+
+    pub fn p99_s(&self) -> f64 {
+        self.p99_ms / 1_000.0
+    }
+}
+
+/// Completion-side tracker. `within_slo` counts requests whose
+/// turnaround met the p99 target — the numerator of "sustained RPS at
+/// the SLO", the subsystem's headline metric.
+#[derive(Debug, Clone)]
+pub struct SloTracker {
+    pub targets: SloTargets,
+    window: RollingWindow,
+    queue_s: Vec<f64>,
+    turnaround_s: Vec<f64>,
+    within_slo: usize,
+}
+
+/// Window size for the autoscaler's recent-tail estimate.
+const WINDOW_CAP: usize = 128;
+
+impl SloTracker {
+    pub fn new(targets: SloTargets) -> SloTracker {
+        SloTracker {
+            targets,
+            window: RollingWindow::new(WINDOW_CAP),
+            queue_s: Vec::new(),
+            turnaround_s: Vec::new(),
+            within_slo: 0,
+        }
+    }
+
+    /// Record one completion (both in seconds).
+    pub fn record(&mut self, queue_s: f64, turnaround_s: f64) {
+        self.window.push(turnaround_s);
+        self.queue_s.push(queue_s);
+        self.turnaround_s.push(turnaround_s);
+        if turnaround_s * 1_000.0 <= self.targets.p99_ms {
+            self.within_slo += 1;
+        }
+    }
+
+    /// Recent-window p99 turnaround (s); `None` before any completion.
+    pub fn window_p99_s(&self) -> Option<f64> {
+        self.window.p99()
+    }
+
+    pub fn completed(&self) -> usize {
+        self.turnaround_s.len()
+    }
+
+    pub fn within_slo(&self) -> usize {
+        self.within_slo
+    }
+
+    /// Full-run attained latency distribution.
+    pub fn attained(&self) -> LatencyStats {
+        LatencyStats::from_samples(&self.queue_s, &self.turnaround_s)
+    }
+
+    /// Headroom against the p99 target, ms: positive means the SLO
+    /// was met with room to spare, negative means it was blown.
+    pub fn margin_ms(&self) -> f64 {
+        self.targets.p99_ms - self.attained().p99_turnaround_s * 1_000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_within_slo_against_p99_target() {
+        let mut t = SloTracker::new(SloTargets::new(1_000.0, 2_000.0));
+        t.record(0.0, 1.0); // 1000ms <= 2000ms
+        t.record(0.5, 2.0); // exactly on target counts
+        t.record(3.0, 4.0); // blown
+        assert_eq!(t.completed(), 3);
+        assert_eq!(t.within_slo(), 2);
+    }
+
+    #[test]
+    fn margin_is_signed_headroom() {
+        let mut t = SloTracker::new(SloTargets::new(1_000.0, 2_000.0));
+        t.record(0.0, 0.5);
+        assert!((t.margin_ms() - 1_500.0).abs() < 1e-9);
+        t.record(0.0, 3.0);
+        assert!((t.margin_ms() + 1_000.0).abs() < 1e-9); // p99 = 3s -> -1000ms
+    }
+
+    #[test]
+    fn window_tracks_recent_not_total() {
+        let mut t = SloTracker::new(SloTargets::default_chat());
+        assert_eq!(t.window_p99_s(), None);
+        // Fill the window with slow samples, then push enough fast
+        // ones to evict them all: the window p99 must recover even
+        // though the full-run p99 stays slow.
+        for _ in 0..WINDOW_CAP {
+            t.record(0.0, 60.0);
+        }
+        for _ in 0..WINDOW_CAP {
+            t.record(0.0, 0.1);
+        }
+        assert_eq!(t.window_p99_s(), Some(0.1));
+        assert!(t.attained().p99_turnaround_s > 1.0);
+    }
+}

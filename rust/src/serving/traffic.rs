@@ -1,0 +1,156 @@
+//! Request generation for the serving subsystem: time-varying
+//! (diurnal / bursty) request streams built on `workloads::mix`'s
+//! arrival machinery — non-homogeneous Poisson via thinning — plus
+//! replay of explicit arrival traces (e.g. parsed from JSON with
+//! [`ArrivalProcess::trace_from_json`]). Arrival times and request
+//! shapes are drawn from independent seeded streams, so the same seed
+//! always yields the same workload bit-for-bit.
+
+use crate::util::Rng;
+use crate::workloads::mix::{ArrivalProcess, RateProfile};
+
+/// One inference request: when it arrives and its token shape. The
+/// prompt is absorbed in prefill chunks; every decoded token is one
+/// batch iteration and one KV-cache slot-token.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub prompt_tokens: u32,
+    pub decode_tokens: u32,
+}
+
+impl Request {
+    /// KV-cache footprint at completion, in tokens.
+    pub fn total_tokens(&self) -> u64 {
+        self.prompt_tokens as u64 + self.decode_tokens as u64
+    }
+}
+
+/// How a serving run's request stream is produced.
+#[derive(Debug, Clone)]
+pub enum TrafficConfig {
+    /// `n_requests` arrivals over a diurnal / bursty [`RateProfile`]
+    /// (non-homogeneous Poisson, sampled by thinning).
+    Diurnal {
+        n_requests: usize,
+        profile: RateProfile,
+    },
+    /// Replay explicit arrival times (sorted seconds); request shapes
+    /// are still drawn from the seeded shape stream.
+    Replay { arrivals: Vec<f64> },
+}
+
+/// Prompt-length range (tokens), uniform: `32..=224`.
+const PROMPT_LO: usize = 32;
+const PROMPT_SPAN: usize = 193;
+/// Decode-length range (tokens), uniform: `16..=112`.
+const DECODE_LO: usize = 16;
+const DECODE_SPAN: usize = 97;
+
+impl TrafficConfig {
+    /// The canonical synthetic 24h day, time-compressed so that
+    /// `n_requests` span exactly one period: night trough at 0.5
+    /// req/s, midday peak at 20 req/s (sinusoid, mean 10.25 req/s),
+    /// and an evening flash-crowd burst at 1.3x. The *shape* is a
+    /// full day; the wall-clock is scaled so runs of any size
+    /// exercise a whole trough-peak-trough cycle.
+    pub fn compressed_day(n_requests: usize) -> TrafficConfig {
+        let profile = RateProfile::diurnal(0.5, 20.0, n_requests as f64 / 10.25);
+        let period = profile.period_s;
+        TrafficConfig::Diurnal {
+            n_requests,
+            profile: profile.with_burst(0.62 * period, 0.06 * period, 1.3),
+        }
+    }
+
+    /// Number of requests this config will generate.
+    pub fn n_requests(&self) -> usize {
+        match self {
+            TrafficConfig::Diurnal { n_requests, .. } => *n_requests,
+            TrafficConfig::Replay { arrivals } => arrivals.len(),
+        }
+    }
+
+    /// Materialize the request stream. Deterministic per seed: the
+    /// arrival process and the shape stream use decorrelated
+    /// sub-seeds of `seed`.
+    pub fn generate(&self, seed: u64) -> Vec<Request> {
+        let arrivals = match self {
+            TrafficConfig::Diurnal {
+                n_requests,
+                profile,
+            } => ArrivalProcess::NonHomogeneous(profile.clone()).sample(*n_requests, seed),
+            TrafficConfig::Replay { arrivals } => {
+                assert!(
+                    arrivals.windows(2).all(|w| w[0] <= w[1]),
+                    "replay arrivals must be sorted"
+                );
+                arrivals.clone()
+            }
+        };
+        let mut shapes = Rng::new(seed ^ 0x5eed_7a11_ca11_ab1e);
+        arrivals
+            .into_iter()
+            .enumerate()
+            .map(|(i, arrival_s)| Request {
+                id: i as u64,
+                arrival_s,
+                prompt_tokens: (PROMPT_LO + shapes.below(PROMPT_SPAN)) as u32,
+                decode_tokens: (DECODE_LO + shapes.below(DECODE_SPAN)) as u32,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_seed_deterministic() {
+        let cfg = TrafficConfig::compressed_day(300);
+        let a = cfg.generate(9);
+        let b = cfg.generate(9);
+        let c = cfg.generate(10);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 300);
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    }
+
+    #[test]
+    fn shapes_stay_in_range() {
+        for r in TrafficConfig::compressed_day(200).generate(3) {
+            assert!((32..=224).contains(&r.prompt_tokens), "{r:?}");
+            assert!((16..=112).contains(&r.decode_tokens), "{r:?}");
+            assert_eq!(r.total_tokens(), (r.prompt_tokens + r.decode_tokens) as u64);
+        }
+    }
+
+    #[test]
+    fn replay_preserves_arrival_times() {
+        let cfg = TrafficConfig::Replay {
+            arrivals: vec![0.0, 1.0, 5.0],
+        };
+        let reqs = cfg.generate(1);
+        assert_eq!(cfg.n_requests(), 3);
+        assert_eq!(
+            reqs.iter().map(|r| r.arrival_s).collect::<Vec<_>>(),
+            vec![0.0, 1.0, 5.0]
+        );
+        // ids are assigned in arrival order
+        assert_eq!(reqs[2].id, 2);
+    }
+
+    #[test]
+    fn compressed_day_spans_one_period() {
+        let cfg = TrafficConfig::compressed_day(500);
+        let TrafficConfig::Diurnal { profile, .. } = &cfg else {
+            panic!("compressed_day is diurnal");
+        };
+        // mean of the sinusoid x period == n_requests by construction
+        assert!((profile.mean_rps() * profile.period_s - 500.0).abs() < 1e-6);
+        assert_eq!(profile.bursts.len(), 1);
+    }
+}

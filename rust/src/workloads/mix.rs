@@ -5,10 +5,158 @@
 //! different benchmarks and parameter combinations ... and randomizing
 //! the order of the mix").
 
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 use crate::workloads::llm;
 use crate::workloads::rodinia::{self, RodiniaBench};
 use crate::workloads::{dnn, JobSpec, SizeClass};
+
+/// A multiplicative rate spike layered on a [`RateProfile`]: between
+/// `start_s` and `start_s + dur_s` the instantaneous rate is scaled by
+/// `mult` (flash-crowd / retry-storm shapes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Burst {
+    pub start_s: f64,
+    pub dur_s: f64,
+    pub mult: f64,
+}
+
+/// Time-varying arrival intensity λ(t): a diurnal sinusoid between
+/// `base_rps` (trough) and `peak_rps` (midday) with period `period_s`,
+/// optionally overlaid with [`Burst`]s. `t = 0` is the trough, so a
+/// trace started at t=0 ramps up, peaks at `period_s / 2`, and ramps
+/// back down — one synthetic "day" per period.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RateProfile {
+    pub base_rps: f64,
+    pub peak_rps: f64,
+    pub period_s: f64,
+    pub bursts: Vec<Burst>,
+}
+
+impl RateProfile {
+    /// Plain diurnal sinusoid, no bursts.
+    pub fn diurnal(base_rps: f64, peak_rps: f64, period_s: f64) -> RateProfile {
+        assert!(base_rps > 0.0 && peak_rps >= base_rps && period_s > 0.0);
+        RateProfile {
+            base_rps,
+            peak_rps,
+            period_s,
+            bursts: Vec::new(),
+        }
+    }
+
+    /// Overlay a burst window.
+    pub fn with_burst(mut self, start_s: f64, dur_s: f64, mult: f64) -> RateProfile {
+        assert!(mult >= 1.0 && dur_s > 0.0);
+        self.bursts.push(Burst {
+            start_s,
+            dur_s,
+            mult,
+        });
+        self
+    }
+
+    /// Instantaneous rate λ(t), periodic in `period_s`, bursts applied
+    /// on absolute (non-wrapped) time.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let phase = std::f64::consts::TAU * t / self.period_s;
+        let diurnal = self.base_rps + (self.peak_rps - self.base_rps) * 0.5 * (1.0 - phase.cos());
+        diurnal * self.burst_mult(t)
+    }
+
+    fn burst_mult(&self, t: f64) -> f64 {
+        self.bursts
+            .iter()
+            .filter(|b| t >= b.start_s && t < b.start_s + b.dur_s)
+            .map(|b| b.mult)
+            .fold(1.0, f64::max)
+    }
+
+    /// Upper envelope of λ(t) — the thinning algorithm's majorant.
+    pub fn max_rate(&self) -> f64 {
+        let worst_burst = self.bursts.iter().map(|b| b.mult).fold(1.0, f64::max);
+        self.peak_rps * worst_burst
+    }
+
+    /// Mean of the diurnal component over one full period (bursts
+    /// excluded): the sinusoid averages to the midpoint.
+    pub fn mean_rps(&self) -> f64 {
+        0.5 * (self.base_rps + self.peak_rps)
+    }
+}
+
+/// How a mix's (or the serving subsystem's) arrival times are drawn.
+/// All variants are deterministic per seed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson at a fixed rate (the original generator).
+    Poisson { rate_jps: f64 },
+    /// Non-homogeneous Poisson over a [`RateProfile`], sampled by
+    /// Lewis-Shedler thinning: candidate points at the majorant rate
+    /// `max_rate()`, each kept with probability `rate_at(t) / max`.
+    NonHomogeneous(RateProfile),
+    /// Replay an explicit trace (sorted, absolute seconds).
+    Trace(Vec<f64>),
+}
+
+impl ArrivalProcess {
+    /// Draw the first `n` arrival times. `Trace` must hold at least
+    /// `n` entries; the stochastic variants generate exactly `n`.
+    pub fn sample(&self, n: usize, seed: u64) -> Vec<f64> {
+        match self {
+            ArrivalProcess::Poisson { rate_jps } => {
+                let mut rng = Rng::new(seed);
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exp(*rate_jps);
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::NonHomogeneous(profile) => {
+                let lambda_max = profile.max_rate();
+                assert!(lambda_max > 0.0, "rate profile must be positive");
+                let mut rng = Rng::new(seed);
+                let mut t = 0.0;
+                let mut out = Vec::with_capacity(n);
+                while out.len() < n {
+                    t += rng.exp(lambda_max);
+                    if rng.f64() < profile.rate_at(t) / lambda_max {
+                        out.push(t);
+                    }
+                }
+                out
+            }
+            ArrivalProcess::Trace(times) => {
+                assert!(times.len() >= n, "trace holds {} < {n} arrivals", times.len());
+                times[..n].to_vec()
+            }
+        }
+    }
+
+    /// Parse a replay trace from JSON: either a bare sorted array of
+    /// seconds (`[0.0, 1.5, ...]`) or an object with an `arrivals_s`
+    /// field holding one.
+    pub fn trace_from_json(text: &str) -> Result<ArrivalProcess, String> {
+        let doc = Json::parse(text).map_err(|e| format!("trace JSON: {e:?}"))?;
+        let arr = match doc.as_arr() {
+            Some(a) => a,
+            None => doc
+                .get("arrivals_s")
+                .as_arr()
+                .ok_or("trace JSON must be an array or {\"arrivals_s\": [...]}".to_string())?,
+        };
+        let times: Vec<f64> = arr
+            .iter()
+            .map(|v| v.as_f64().ok_or("non-numeric arrival".to_string()))
+            .collect::<Result<_, _>>()?;
+        if !times.windows(2).all(|w| w[0] <= w[1]) {
+            return Err("arrival trace must be sorted".into());
+        }
+        Ok(ArrivalProcess::Trace(times))
+    }
+}
 
 /// A named mix: ordered batch of jobs plus (optionally) per-job arrival
 /// times. An empty `arrivals` vector means batch submission (all jobs
@@ -58,6 +206,14 @@ impl Mix {
             })
             .collect();
         self
+    }
+
+    /// Overlay arrivals drawn from any [`ArrivalProcess`] — the
+    /// generalization of [`Mix::with_poisson_arrivals`] that the
+    /// serving subsystem's diurnal traces use.
+    pub fn with_arrivals(self, process: &ArrivalProcess, seed: u64) -> Mix {
+        let times = process.sample(self.jobs.len(), seed);
+        self.with_arrival_trace(times)
     }
 
     /// Overlay an explicit arrival trace (must be non-decreasing and one
@@ -331,6 +487,67 @@ mod tests {
         let m = hm1().with_arrival_trace(times.clone());
         assert_eq!(m.arrivals, times);
         assert_eq!(m.arrival_of(4), 1.0);
+    }
+
+    #[test]
+    fn nonhomogeneous_arrivals_pin_sequence_per_seed() {
+        let p = ArrivalProcess::NonHomogeneous(
+            RateProfile::diurnal(0.5, 8.0, 200.0).with_burst(60.0, 10.0, 1.5),
+        );
+        let a = p.sample(400, 11);
+        let b = p.sample(400, 11);
+        let c = p.sample(400, 12);
+        // Byte-for-byte per seed (bit-compared, not approx).
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert_ne!(a, c);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(a.len(), 400);
+    }
+
+    #[test]
+    fn thinning_tracks_the_rate_profile() {
+        let profile = RateProfile::diurnal(0.2, 10.0, 100.0);
+        let times = ArrivalProcess::NonHomogeneous(profile.clone()).sample(600, 3);
+        // Count arrivals in a trough window vs a peak window of the
+        // first period: the peak must see far more.
+        let count = |lo: f64, hi: f64| times.iter().filter(|&&t| t >= lo && t < hi).count();
+        let trough = count(0.0, 15.0) + count(85.0, 100.0);
+        let peak = count(35.0, 65.0);
+        assert!(
+            peak > 3 * trough.max(1),
+            "peak {peak} vs trough {trough} arrivals"
+        );
+        // Sanity on the envelope used by thinning.
+        assert!(profile.max_rate() >= profile.rate_at(50.0));
+    }
+
+    #[test]
+    fn mix_with_arrivals_matches_sampled_trace() {
+        let p = ArrivalProcess::Poisson { rate_jps: 0.5 };
+        let m = ht2(3).with_arrivals(&p, 9);
+        let legacy = ht2(3).with_poisson_arrivals(0.5, 9);
+        assert_eq!(m.arrivals, legacy.arrivals);
+    }
+
+    #[test]
+    fn trace_replay_parses_both_json_shapes() {
+        let bare = ArrivalProcess::trace_from_json("[0.0, 1.5, 2.0]").unwrap();
+        let wrapped =
+            ArrivalProcess::trace_from_json("{\"arrivals_s\": [0.0, 1.5, 2.0]}").unwrap();
+        assert_eq!(bare, wrapped);
+        assert_eq!(bare.sample(2, 0), vec![0.0, 1.5]);
+        assert!(ArrivalProcess::trace_from_json("[2.0, 1.0]").is_err());
+        assert!(ArrivalProcess::trace_from_json("{\"x\": 1}").is_err());
+        assert!(ArrivalProcess::trace_from_json("not json").is_err());
+    }
+
+    #[test]
+    fn burst_raises_rate_only_inside_window() {
+        let p = RateProfile::diurnal(1.0, 1.0, 100.0).with_burst(10.0, 5.0, 3.0);
+        assert_eq!(p.rate_at(9.9), 1.0);
+        assert_eq!(p.rate_at(12.0), 3.0);
+        assert_eq!(p.rate_at(15.0), 1.0);
+        assert_eq!(p.max_rate(), 3.0);
     }
 
     #[test]
