@@ -10,11 +10,8 @@
 //! as a CI perf artifact next to `BENCH_policy_search.json`).
 
 use migm::estimator::compiler_analysis::analyze;
-use migm::estimator::{
-    default_pipeline, BeliefConfig, BeliefLedger, EstimateInput,
-};
-use migm::util::bench::{black_box, Bench, BenchStats};
-use migm::util::Json;
+use migm::estimator::{default_pipeline, BeliefConfig, BeliefLedger, EstimateInput};
+use migm::util::bench::{black_box, write_bench_json_env, Bench, BenchStats};
 use migm::workloads::{dnn, llm, rodinia, ComputeModel};
 
 fn main() {
@@ -75,26 +72,5 @@ fn main() {
         black_box(lg.get(id).observed_peak_gb())
     }));
 
-    if let Ok(path) = std::env::var("MIGM_BENCH_JSON") {
-        let results: Vec<Json> = all
-            .iter()
-            .map(|s| {
-                Json::obj(vec![
-                    ("name", Json::str(s.name.clone())),
-                    ("n", Json::num(s.n as f64)),
-                    ("median_ns", Json::num(s.median_ns)),
-                    ("mean_ns", Json::num(s.mean_ns)),
-                    ("p95_ns", Json::num(s.p95_ns)),
-                    ("min_ns", Json::num(s.min_ns)),
-                ])
-            })
-            .collect();
-        let doc = Json::obj(vec![
-            ("schema", Json::str("migm.bench.estimator.v1")),
-            ("smoke", Json::Bool(smoke)),
-            ("results", Json::Arr(results)),
-        ]);
-        std::fs::write(&path, format!("{doc}\n")).expect("writing bench JSON");
-        println!("wrote {path}");
-    }
+    write_bench_json_env("migm.bench.estimator.v1", smoke, &all);
 }

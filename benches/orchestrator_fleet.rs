@@ -10,8 +10,9 @@
 //! 10k fleet skipped). Set `MIGM_BENCH_JSON=<path>` to also write the
 //! stats as JSON (uploaded as a CI perf artifact next to
 //! `BENCH_policy_search.json`). Set `MIGM_TRAJECTORY=<path>` to append
-//! the heterogeneous head-to-head (`migm.bench.fleet.v1` row) to the
-//! perf trajectory.
+//! the heterogeneous head-to-head (`migm.bench.fleet.v1` row) and the
+//! warm-start-vs-cold halving head-to-head (`migm.bench.warmstart.v1`
+//! row) to the perf trajectory.
 
 use std::sync::Arc;
 
@@ -19,9 +20,14 @@ use migm::fleet::{FleetKnobs, FleetPolicy};
 use migm::scheduler::scheme_a::{SchemeAKnobs, SchemeAPolicy};
 use migm::scheduler::scheme_b::{SchemeBKnobs, SchemeBPolicy};
 use migm::scheduler::{Orchestrator, RunResult, SchedulingPolicy, ShardedPolicy};
-use migm::tuner::{fleet_bench_row, FleetBenchArm};
-use migm::util::bench::{black_box, Bench, BenchStats};
-use migm::util::{Json, Rng};
+use migm::tuner::{
+    fleet_bench_row, sweep_with_stats, warmstart_bench_row, EvalStats, FleetBenchArm, Generator,
+    ParamSpace, Scenario, SweepConfig, WarmMode, WarmstartArm,
+};
+use migm::util::bench::{
+    append_trajectory_rows_env, black_box, write_bench_json_env, Bench, BenchStats,
+};
+use migm::util::Rng;
 use migm::workloads::synthetic::{fleet_job, many_instance_spec, sized_job, tiered_spec};
 use migm::workloads::{rodinia, JobSpec};
 use migm::GpuSpec;
@@ -231,42 +237,86 @@ fn main() {
         }));
     }
 
-    if let Ok(path) = std::env::var("MIGM_TRAJECTORY") {
-        let text = match std::fs::read_to_string(&path) {
-            Ok(t) if !t.trim().is_empty() => t,
-            _ => "[]".to_string(),
-        };
-        let rows = match Json::parse(&text) {
-            Ok(Json::Arr(mut rows)) => {
-                rows.push(fleet_row);
-                rows
-            }
-            _ => vec![fleet_row],
-        };
-        std::fs::write(&path, format!("{}\n", Json::Arr(rows))).expect("writing trajectory");
-        println!("appended fleet head-to-head row to {path}");
-    }
+    // ---- warm-start halving vs cold re-simulation ------------------
+    // Same sweep twice: warm resumes each survivor's checkpoint at the
+    // previous horizon; cold replays the identical horizon schedule
+    // from t=0 every round. Reports are byte-identical by contract
+    // (re-checked here); the win is that survivors stop re-simulating
+    // — asserted on the deterministic from-zero counters AND on wall
+    // time — and recorded as a `migm.bench.warmstart.v1` row.
+    let ws_cfg = SweepConfig {
+        space: ParamSpace::smoke(),
+        scenarios: vec![Scenario::synthetic_fleet(2, 5)],
+        generator: Generator::Halving {
+            n: 0,
+            eta: 2,
+            finalists: 2,
+            short_frac: 0.25,
+        },
+        seed: 5,
+        threads: 2,
+    };
+    let n_candidates = ws_cfg.space.grid().expect("smoke grid").len() + 1;
+    let cb = Bench::coarse();
+    let mut warm_last: Option<(String, EvalStats)> = None;
+    let mut cold_last: Option<(String, EvalStats)> = None;
+    let warm_bench = cb.run("tune_halving_warm_resume", || {
+        let (report, stats) = sweep_with_stats(&ws_cfg, WarmMode::Warm).expect("warm sweep");
+        warm_last = Some((report.to_json().to_string(), stats));
+        black_box(stats.from_zero)
+    });
+    let cold_bench = cb.run("tune_halving_cold_resimulate", || {
+        let (report, stats) = sweep_with_stats(&ws_cfg, WarmMode::Cold).expect("cold sweep");
+        cold_last = Some((report.to_json().to_string(), stats));
+        black_box(stats.from_zero)
+    });
+    let (warm_json, warm_stats) = warm_last.expect("warm arm ran");
+    let (cold_json, cold_stats) = cold_last.expect("cold arm ran");
+    let identical = warm_json == cold_json;
+    assert!(identical, "warm-start changed the sweep report bytes");
+    assert!(
+        warm_stats.resumed + warm_stats.reused > 0,
+        "warm sweep never reused a checkpoint: {warm_stats:?}"
+    );
+    assert!(
+        warm_stats.from_zero < cold_stats.from_zero,
+        "warm {warm_stats:?} must simulate fewer runs from t=0 than cold {cold_stats:?}"
+    );
+    assert!(
+        warm_bench.median_ns < cold_bench.median_ns,
+        "warm-start must be faster: warm {:.1}ms vs cold {:.1}ms",
+        warm_bench.median_ns / 1e6,
+        cold_bench.median_ns / 1e6
+    );
+    println!(
+        "warm-start head-to-head ({n_candidates} candidates): x{:.2} wall, from-zero {} -> {} \
+         (resumed {}, reused {})",
+        cold_bench.median_ns / warm_bench.median_ns,
+        cold_stats.from_zero,
+        warm_stats.from_zero,
+        warm_stats.resumed,
+        warm_stats.reused
+    );
+    let warmstart_row = warmstart_bench_row(
+        "tune_halving_warm_vs_cold",
+        n_candidates,
+        WarmstartArm {
+            elapsed_ns: warm_bench.median_ns,
+            from_zero: warm_stats.from_zero,
+            resumed: warm_stats.resumed,
+            reused: warm_stats.reused,
+        },
+        WarmstartArm {
+            elapsed_ns: cold_bench.median_ns,
+            from_zero: cold_stats.from_zero,
+            resumed: cold_stats.resumed,
+            reused: cold_stats.reused,
+        },
+        identical,
+    );
+    all.push(warm_bench);
+    all.push(cold_bench);
 
-    if let Ok(path) = std::env::var("MIGM_BENCH_JSON") {
-        let results: Vec<Json> = all
-            .iter()
-            .map(|s| {
-                Json::obj(vec![
-                    ("name", Json::str(s.name.clone())),
-                    ("n", Json::num(s.n as f64)),
-                    ("median_ns", Json::num(s.median_ns)),
-                    ("mean_ns", Json::num(s.mean_ns)),
-                    ("p95_ns", Json::num(s.p95_ns)),
-                    ("min_ns", Json::num(s.min_ns)),
-                ])
-            })
-            .collect();
-        let doc = Json::obj(vec![
-            ("schema", Json::str("migm.bench.orchestrator_fleet.v1")),
-            ("smoke", Json::Bool(smoke)),
-            ("results", Json::Arr(results)),
-        ]);
-        std::fs::write(&path, format!("{doc}\n")).expect("writing bench JSON");
-        println!("wrote {path}");
-    }
+    append_trajectory_rows_env(&[fleet_row, warmstart_row]);
+    write_bench_json_env("migm.bench.orchestrator_fleet.v1", smoke, &all);
 }

@@ -11,8 +11,9 @@
 //! trajectory.
 
 use migm::serving::{run, serving_bench_row, ServeConfig, ServeReport};
-use migm::util::bench::{black_box, Bench, BenchStats};
-use migm::util::Json;
+use migm::util::bench::{
+    append_trajectory_rows_env, black_box, write_bench_json_env, Bench, BenchStats,
+};
 
 const SEED: u64 = 7;
 
@@ -104,42 +105,6 @@ fn main() {
         println!("serve 10k head-to-head: RPS@SLO x{rps_x:.2}, J/request x{j_x:.2}");
     }
 
-    if let Ok(path) = std::env::var("MIGM_TRAJECTORY") {
-        let text = match std::fs::read_to_string(&path) {
-            Ok(t) if !t.trim().is_empty() => t,
-            _ => "[]".to_string(),
-        };
-        let rows = match Json::parse(&text) {
-            Ok(Json::Arr(mut rows)) => {
-                rows.push(serving_row);
-                rows
-            }
-            _ => vec![serving_row],
-        };
-        std::fs::write(&path, format!("{}\n", Json::Arr(rows))).expect("writing trajectory");
-        println!("appended serving head-to-head row to {path}");
-    }
-
-    if let Ok(path) = std::env::var("MIGM_BENCH_JSON") {
-        let results: Vec<Json> = all
-            .iter()
-            .map(|s| {
-                Json::obj(vec![
-                    ("name", Json::str(s.name.clone())),
-                    ("n", Json::num(s.n as f64)),
-                    ("median_ns", Json::num(s.median_ns)),
-                    ("mean_ns", Json::num(s.mean_ns)),
-                    ("p95_ns", Json::num(s.p95_ns)),
-                    ("min_ns", Json::num(s.min_ns)),
-                ])
-            })
-            .collect();
-        let doc = Json::obj(vec![
-            ("schema", Json::str("migm.bench.serving_suite.v1")),
-            ("smoke", Json::Bool(smoke)),
-            ("results", Json::Arr(results)),
-        ]);
-        std::fs::write(&path, format!("{doc}\n")).expect("writing bench JSON");
-        println!("wrote {path}");
-    }
+    append_trajectory_rows_env(&[serving_row]);
+    write_bench_json_env("migm.bench.serving_suite.v1", smoke, &all);
 }

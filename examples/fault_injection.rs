@@ -1,0 +1,81 @@
+//! Fault injection on a heterogeneous fleet: kill the A100 mid-run,
+//! bring it back, and watch the recovery machinery — the scripted
+//! [`FaultPlan`] drives the orchestrator's kill/restore seams, the
+//! dead shard's queued jobs are re-queued through the fleet-steal
+//! path, running jobs restart per the paper's recovery scheme, and
+//! every submitted job still completes exactly once.
+//!
+//! Prints the recovery timeline, the re-queue/steal counters, the
+//! final fleet metrics, and the `migm.bench.fault.v1` recovery row.
+//!
+//! Run: `cargo run --release --example fault_injection`
+
+use std::sync::Arc;
+
+use migm::fleet::{FleetKnobs, FleetPolicy};
+use migm::mig::GpuSpec;
+use migm::scheduler::{fault_recovery_row, run_with_faults, FaultPlan, Orchestrator, SchemeBKnobs};
+use migm::workloads::rodinia;
+
+fn main() {
+    // A30 (gpu 0) + A100 (gpu 1) + H100 (gpu 2) — the mixed fleet from
+    // the fleet-scheduler bench. GPU 1 is the one we kill.
+    let specs = vec![
+        Arc::new(GpuSpec::a30_24gb()),
+        Arc::new(GpuSpec::a100_40gb()),
+        Arc::new(GpuSpec::h100_80gb()),
+    ];
+    let names = ["A30", "A100", "H100"];
+    let policy = FleetPolicy::scheme_b(&specs, FleetKnobs::balanced(), SchemeBKnobs::default());
+    let mut orch = Orchestrator::new(specs, true, policy);
+
+    // Staggered long/short pairs so the A100 holds both queued and
+    // running work when the fault lands.
+    let long = rodinia::by_name("euler3d").unwrap().job(7);
+    let short = rodinia::by_name("bfs").unwrap().job(7);
+    let n_pairs = 10;
+    for i in 0..n_pairs {
+        orch.submit_at(long.clone(), i as f64 * 0.8);
+        orch.submit_at(short.clone(), i as f64 * 0.8 + 0.4);
+    }
+
+    let (kill_at, restore_at) = (6.0, 30.0);
+    let plan = FaultPlan::kill_restore(1, kill_at, restore_at);
+    let report = run_with_faults(&mut orch, &plan);
+
+    println!("recovery timeline:");
+    for row in &report.timeline {
+        println!(
+            "  t={:6.1}s  {:7}  gpu {} ({})  running jobs lost: {}",
+            row.at_s,
+            row.kind.as_str(),
+            row.gpu,
+            names[row.gpu],
+            row.lost_running
+        );
+    }
+
+    let steals = orch.policy().steals();
+    let m = &report.result.metrics;
+    println!(
+        "re-queued {} running jobs; fleet stole {} jobs across shards",
+        report.requeued_jobs, steals
+    );
+    println!(
+        "completed {}/{} jobs: makespan {:.1}s, {:.0}J, p99 turnaround {:.1}s",
+        report.result.records.len(),
+        n_pairs * 2,
+        m.makespan_s,
+        m.energy_j,
+        report.result.latency.p99_turnaround_s
+    );
+    assert_eq!(
+        report.result.records.len(),
+        n_pairs * 2,
+        "every job completes exactly once"
+    );
+    assert!(!orch.is_down(1), "the A100 is back in service");
+
+    let row = fault_recovery_row("fault_injection_example", &report, steals);
+    println!("{row}");
+}

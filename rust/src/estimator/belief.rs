@@ -216,6 +216,74 @@ impl MemoryBelief {
             hi_gb: hi,
         });
     }
+
+    /// Bit-exact snapshot form (checkpoint layer): the refined estimate,
+    /// observed/predicted peaks, the live Algorithm-1 monitor if any,
+    /// and the external KV series.
+    pub fn to_snap_json(&self) -> Json {
+        use crate::util::snap::{f64_to_json, f64s_to_json};
+        Json::obj(vec![
+            ("est", self.est.to_snap_json()),
+            ("true_peak_gb", f64_to_json(self.true_peak_gb)),
+            ("observed_peak_gb", f64_to_json(self.observed_peak_gb)),
+            (
+                "predicted_peak_gb",
+                match self.predicted_peak_gb {
+                    Some(p) => f64_to_json(p),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "monitor",
+                match &self.monitor {
+                    Some(m) => m.to_snap_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "external",
+                match &self.external {
+                    Some((m, r)) => Json::obj(vec![
+                        ("req_mem", f64s_to_json(m)),
+                        ("inv_reuse", f64s_to_json(r)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Inverse of [`Self::to_snap_json`].
+    pub fn from_snap_json(j: &Json) -> Result<MemoryBelief> {
+        use crate::util::snap::{f64_from_json, f64s_from_json};
+        let predicted_peak_gb = if j.get("predicted_peak_gb").is_null() {
+            None
+        } else {
+            Some(f64_from_json(j.get("predicted_peak_gb"))?)
+        };
+        let monitor = if j.get("monitor").is_null() {
+            None
+        } else {
+            Some(JobMonitor::from_snap_json(j.get("monitor"))?)
+        };
+        let external = if j.get("external").is_null() {
+            None
+        } else {
+            let e = j.get("external");
+            Some((
+                f64s_from_json(e.get("req_mem"))?,
+                f64s_from_json(e.get("inv_reuse"))?,
+            ))
+        };
+        Ok(MemoryBelief {
+            est: Estimate::from_snap_json(j.get("est"))?,
+            true_peak_gb: f64_from_json(j.get("true_peak_gb"))?,
+            observed_peak_gb: f64_from_json(j.get("observed_peak_gb"))?,
+            predicted_peak_gb,
+            monitor,
+            external,
+        })
+    }
 }
 
 /// Aggregate predicted-vs-actual accuracy over a ledger (the `migm
@@ -395,7 +463,35 @@ impl BeliefLedger {
         }
         acc
     }
+
+    /// Checkpoint the ledger: every belief, in registration order. The
+    /// configuration (`BeliefConfig` + convergence policy) is
+    /// *structural* — a restoring orchestrator is constructed with the
+    /// same config and only the per-job state travels in the snapshot.
+    pub fn snapshot(&self) -> BeliefSnapshot {
+        BeliefSnapshot(Json::Arr(
+            self.beliefs.iter().map(|b| b.to_snap_json()).collect(),
+        ))
+    }
+
+    /// Overwrite the ledger's beliefs from a snapshot.
+    pub fn restore(&mut self, snap: &BeliefSnapshot) -> Result<()> {
+        let arr = match &snap.0 {
+            Json::Arr(v) => v,
+            other => bail!("belief snapshot must be an array, got {other}"),
+        };
+        self.beliefs = arr
+            .iter()
+            .map(MemoryBelief::from_snap_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
 }
+
+/// Serialized [`BeliefLedger`] state (beliefs only; see
+/// [`BeliefLedger::snapshot`]).
+#[derive(Debug, Clone)]
+pub struct BeliefSnapshot(pub Json);
 
 #[cfg(test)]
 mod tests {
@@ -702,5 +798,44 @@ mod tests {
         // inverted-reuse bookkeeping: reuse 1.0 stores inv_reuse 1.0
         let (_, inv) = b.external_series().unwrap();
         assert!(inv.iter().all(|&x| (x - 1.0).abs() < 1e-12));
+    }
+
+    /// Checkpoint property: a ledger restored from serialized text
+    /// re-serializes byte-identically AND continues producing
+    /// bit-identical convergence decisions — mid-fit monitor state and
+    /// all.
+    #[test]
+    fn ledger_snapshot_restores_mid_fit_state_bit_for_bit() {
+        let job = llm::qwen2_7b().job(3);
+        let ComputeModel::Iterative(it) = &job.compute else {
+            unreachable!()
+        };
+        let trace = it.trace.generate(it.trace_seed);
+        let mut lg = ledger(true);
+        let id = lg.register(job.est, job.true_mem_gb);
+        lg.on_launch(id, &job);
+        // take the snapshot mid-series, before convergence has latched
+        let cut = 4;
+        for i in 0..cut {
+            lg.observe(id, trace.observation(i), trace.phys_gb[i]);
+        }
+        let text = lg.snapshot().0.to_string();
+        let mut fork = ledger(true);
+        fork.restore(&BeliefSnapshot(Json::parse(&text).unwrap()))
+            .unwrap();
+        assert_eq!(fork.snapshot().0.to_string(), text);
+        for i in cut..trace.len() {
+            let a = lg.observe(id, trace.observation(i), trace.phys_gb[i]);
+            let b = fork.observe(id, trace.observation(i), trace.phys_gb[i]);
+            match (a, b) {
+                (Some(x), Some(y)) => assert_eq!(x.to_bits(), y.to_bits(), "iter {i}"),
+                (None, None) => {}
+                (x, y) => panic!("iter {i}: {x:?} vs {y:?}"),
+            }
+        }
+        assert_eq!(
+            lg.get(id).predicted_peak_gb().map(f64::to_bits),
+            fork.get(id).predicted_peak_gb().map(f64::to_bits)
+        );
     }
 }

@@ -44,7 +44,8 @@ pub mod pipeline;
 pub mod workspace;
 
 pub use belief::{
-    BeliefConfig, BeliefId, BeliefKnobs, BeliefLedger, MemoryBelief, PredictionAccuracy,
+    BeliefConfig, BeliefId, BeliefKnobs, BeliefLedger, BeliefSnapshot, MemoryBelief,
+    PredictionAccuracy,
 };
 pub use compiler_analysis::{fold_warps, KernelResource, WorkloadAnalysis};
 pub use dnnmem::{DnnEstimate, Layer, ModelDef, Optimizer};
@@ -205,6 +206,74 @@ impl Estimate {
             method: self.method,
         }
     }
+
+    /// Bit-exact snapshot form (checkpoint layer; see `util::snap`).
+    pub fn to_snap_json(&self) -> crate::util::Json {
+        use crate::util::snap::f64_to_json;
+        use crate::util::Json;
+        let demand = match self.demand {
+            MemoryDemand::Unknown => Json::Null,
+            MemoryDemand::Band {
+                lo_gb,
+                point_gb,
+                hi_gb,
+            } => Json::obj(vec![
+                ("lo_gb", f64_to_json(lo_gb)),
+                ("point_gb", f64_to_json(point_gb)),
+                ("hi_gb", f64_to_json(hi_gb)),
+            ]),
+        };
+        Json::obj(vec![
+            ("demand", demand),
+            ("compute_gpcs", Json::num(self.compute_gpcs as f64)),
+            ("method", Json::str(self.method.snap_tag())),
+            ("generation", Json::num(self.generation as f64)),
+        ])
+    }
+
+    /// Inverse of [`Self::to_snap_json`].
+    pub fn from_snap_json(j: &crate::util::Json) -> anyhow::Result<Estimate> {
+        use crate::util::snap::{f64_from_json, usize_from_json};
+        let d = j.get("demand");
+        let demand = if d.is_null() {
+            MemoryDemand::Unknown
+        } else {
+            MemoryDemand::Band {
+                lo_gb: f64_from_json(d.get("lo_gb"))?,
+                point_gb: f64_from_json(d.get("point_gb"))?,
+                hi_gb: f64_from_json(d.get("hi_gb"))?,
+            }
+        };
+        Ok(Estimate {
+            demand,
+            compute_gpcs: usize_from_json(j.get("compute_gpcs"))? as u8,
+            method: EstimationMethod::from_snap_tag(
+                j.get("method").as_str().unwrap_or_default(),
+            )?,
+            generation: usize_from_json(j.get("generation"))? as u32,
+        })
+    }
+}
+
+impl EstimationMethod {
+    /// Stable snapshot tag.
+    pub fn snap_tag(&self) -> &'static str {
+        match self {
+            EstimationMethod::CompilerAnalysis => "compiler-analysis",
+            EstimationMethod::ModelSize => "model-size",
+            EstimationMethod::TimeSeries => "time-series",
+        }
+    }
+
+    /// Inverse of [`Self::snap_tag`].
+    pub fn from_snap_tag(tag: &str) -> anyhow::Result<EstimationMethod> {
+        match tag {
+            "compiler-analysis" => Ok(EstimationMethod::CompilerAnalysis),
+            "model-size" => Ok(EstimationMethod::ModelSize),
+            "time-series" => Ok(EstimationMethod::TimeSeries),
+            other => anyhow::bail!("unknown estimation-method tag {other:?}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -252,5 +321,25 @@ mod tests {
         assert_eq!(l.mem_gb, 6.0);
         assert_eq!(l.compute_gpcs, 2);
         assert_eq!(l.method, EstimationMethod::CompilerAnalysis);
+    }
+
+    #[test]
+    fn estimate_snap_roundtrips_through_text() {
+        use crate::util::Json;
+        let cases = [
+            Estimate::unknown_upfront(3),
+            Estimate::exact(6.25, 2, EstimationMethod::CompilerAnalysis),
+            Estimate::banded(4.0, 8.125, 16.5, 7, EstimationMethod::ModelSize)
+                .refined(MemoryDemand::Band {
+                    lo_gb: 5.0,
+                    point_gb: 9.0,
+                    hi_gb: 12.0,
+                }),
+        ];
+        for e in cases {
+            let text = e.to_snap_json().to_string();
+            let back = Estimate::from_snap_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, e);
+        }
     }
 }

@@ -158,6 +158,8 @@ pub struct FleetPolicy<P: SchedulingPolicy> {
     /// Round-robin / tie-break cursor (monotone, like `ShardedPolicy`'s).
     cursor: usize,
     steals: u64,
+    /// Faulted GPUs (placement skips them; see `on_gpu_fault`).
+    down: Vec<bool>,
 }
 
 impl<P: SchedulingPolicy> FleetPolicy<P> {
@@ -171,6 +173,7 @@ impl<P: SchedulingPolicy> FleetPolicy<P> {
             queue: GlobalQueue::new(n),
             cursor: 0,
             steals: 0,
+            down: vec![false; n],
         }
     }
 
@@ -207,6 +210,7 @@ impl<P: SchedulingPolicy> FleetPolicy<P> {
             self.knobs.placement,
             &self.knobs.weights,
             &mut self.cursor,
+            &self.down,
         );
         if self.knobs.steal {
             self.queue.push(g, job);
@@ -233,7 +237,7 @@ impl<P: SchedulingPolicy> FleetPolicy<P> {
     /// Drain `thief`'s own backlog, then steal from the deepest donor
     /// while the thief stays free. No-op unless stealing is enabled.
     fn rebalance(&mut self, ctx: &PolicyCtx, thief: GpuId, acts: &mut Vec<Action>) {
-        if !self.knobs.steal {
+        if !self.knobs.steal || self.down[thief] {
             return;
         }
         self.drain(ctx, thief, acts);
@@ -315,9 +319,12 @@ impl<P: SchedulingPolicy> SchedulingPolicy for FleetPolicy<P> {
             }
         }
         if acts.is_empty() {
-            // Shard-order fan-out, exactly like `ShardedPolicy`.
-            for shard in &mut self.shards {
-                acts.extend(shard.on_stalled(ctx));
+            // Shard-order fan-out, exactly like `ShardedPolicy` (a
+            // faulted GPU's shard was drained and never restarts).
+            for (g, shard) in self.shards.iter_mut().enumerate() {
+                if !self.down[g] {
+                    acts.extend(shard.on_stalled(ctx));
+                }
             }
         }
         acts
@@ -325,6 +332,96 @@ impl<P: SchedulingPolicy> SchedulingPolicy for FleetPolicy<P> {
 
     fn has_pending_work(&self) -> bool {
         self.queue.total_backlog() > 0 || self.shards.iter().any(|s| s.has_pending_work())
+    }
+
+    fn snapshot_state(&self) -> Json {
+        Json::obj(vec![
+            (
+                "shards",
+                Json::Arr(self.shards.iter().map(|p| p.snapshot_state()).collect()),
+            ),
+            ("queue", self.queue.to_snap_json()),
+            ("cursor", Json::num(self.cursor as f64)),
+            ("steals", crate::util::snap::u64_to_json(self.steals)),
+            (
+                "down",
+                Json::Arr(self.down.iter().map(|&d| Json::Bool(d)).collect()),
+            ),
+        ])
+    }
+
+    fn restore_state(&mut self, snap: &Json) -> Result<()> {
+        use anyhow::Context;
+        let shards = snap
+            .get("shards")
+            .as_arr()
+            .context("fleet snapshot missing shards")?;
+        anyhow::ensure!(
+            shards.len() == self.shards.len(),
+            "fleet snapshot has {} shards, policy has {}",
+            shards.len(),
+            self.shards.len()
+        );
+        for (p, s) in self.shards.iter_mut().zip(shards) {
+            p.restore_state(s)?;
+        }
+        self.queue.restore_snap_json(snap.get("queue"))?;
+        self.cursor = crate::util::snap::usize_from_json(snap.get("cursor"))?;
+        self.steals = crate::util::snap::u64_from_json(snap.get("steals"))?;
+        let down = snap.get("down").as_arr().context("fleet snapshot missing down")?;
+        anyhow::ensure!(down.len() == self.down.len(), "fleet snapshot down-mask size mismatch");
+        self.down = down
+            .iter()
+            .map(|v| match v {
+                Json::Bool(b) => Ok(*b),
+                v => anyhow::bail!("down mask entry must be a bool, got {v}"),
+            })
+            .collect::<Result<_>>()?;
+        Ok(())
+    }
+
+    fn on_gpu_fault(&mut self, ctx: &PolicyCtx, gpu: GpuId, lost: Vec<PendingJob>) -> Vec<Action> {
+        self.down[gpu] = true;
+        // The dead shard's queued jobs and the dead GPU's fleet backlog
+        // both need new homes. Shard-held jobs (and the lost running
+        // ones) each crossed a handover barrier — release them from the
+        // outstanding counter before re-routing.
+        let shard_jobs = self.shards[gpu].drain_pending();
+        let mut backlog = Vec::new();
+        while let Some(j) = self.queue.pop_front(gpu) {
+            backlog.push(j);
+        }
+        for _ in 0..lost.len() + shard_jobs.len() {
+            self.queue.note_finish(gpu);
+        }
+        let mut acts = Vec::new();
+        for job in lost.into_iter().chain(shard_jobs).chain(backlog) {
+            self.route(ctx, job, &mut acts);
+        }
+        acts
+    }
+
+    fn on_gpu_restore(&mut self, ctx: &PolicyCtx, gpu: GpuId) -> Vec<Action> {
+        self.down[gpu] = false;
+        // In steal mode the revived GPU immediately pulls work back;
+        // under round-robin it simply rejoins the deal.
+        let mut acts = Vec::new();
+        self.rebalance(ctx, gpu, &mut acts);
+        acts
+    }
+
+    fn drain_pending(&mut self) -> Vec<PendingJob> {
+        let mut out: Vec<PendingJob> = self
+            .shards
+            .iter_mut()
+            .flat_map(|p| p.drain_pending())
+            .collect();
+        for g in 0..self.queue.n_gpus() {
+            while let Some(j) = self.queue.pop_front(g) {
+                out.push(j);
+            }
+        }
+        out
     }
 }
 

@@ -136,6 +136,11 @@ pub fn score_on(sim: &GpuSim, depth: usize, est: &Estimate, w: &PlacementWeights
 /// then increment). Cost-model mode takes the score argmin, breaking
 /// exact ties cyclically from `cursor` and parking the cursor just past
 /// the winner — deterministic, and balanced when everything is equal.
+///
+/// `down[g]` marks a faulted GPU: round-robin skips it, the cost model
+/// scores it infeasible. With no GPU down the legacy instruction
+/// sequence runs untouched, preserving bit-for-bit parity with
+/// [`ShardedPolicy`](crate::scheduler::ShardedPolicy).
 pub fn choose_gpu(
     ctx: &PolicyCtx,
     queue: &GlobalQueue,
@@ -143,16 +148,34 @@ pub fn choose_gpu(
     mode: PlacementMode,
     w: &PlacementWeights,
     cursor: &mut usize,
+    down: &[bool],
 ) -> GpuId {
     let n = ctx.n_gpus();
     debug_assert!(n > 0);
+    let any_down = down.iter().any(|&d| d);
+    assert!(!any_down || down.iter().filter(|&&d| !d).count() > 0, "whole fleet is down");
     if mode == PlacementMode::RoundRobin {
-        let g = *cursor % n;
-        *cursor += 1;
-        return g;
+        if !any_down {
+            let g = *cursor % n;
+            *cursor += 1;
+            return g;
+        }
+        loop {
+            let g = *cursor % n;
+            *cursor += 1;
+            if !down[g] {
+                return g;
+            }
+        }
     }
     let scores: Vec<f64> = (0..n)
-        .map(|g| score_on(ctx.gpu(g), queue.depth(g), est, w))
+        .map(|g| {
+            if down[g] {
+                f64::INFINITY
+            } else {
+                score_on(ctx.gpu(g), queue.depth(g), est, w)
+            }
+        })
         .collect();
     let best = scores
         .iter()
@@ -162,7 +185,10 @@ pub fn choose_gpu(
     let start = *cursor % n;
     let g = (0..n)
         .map(|off| (start + off) % n)
-        .find(|&g| scores[g].total_cmp(&best).is_eq())
+        // `!down` guards the all-infeasible corner where a down GPU
+        // would tie the (infinite) argmin; with no GPU down it is
+        // vacuously true and the legacy scan is unchanged.
+        .find(|&g| !down[g] && scores[g].total_cmp(&best).is_eq())
         .expect("argmin exists");
     *cursor = g + 1;
     g

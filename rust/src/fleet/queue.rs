@@ -90,6 +90,62 @@ impl GlobalQueue {
     pub fn peek(&self, g: GpuId, idx: usize) -> Option<&PendingJob> {
         self.backlog[g].get(idx)
     }
+
+    /// Serialize for a checkpoint: backlogs in GPU/FIFO order plus the
+    /// outstanding counters.
+    pub fn to_snap_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            (
+                "backlog",
+                Json::Arr(
+                    self.backlog
+                        .iter()
+                        .map(|q| Json::Arr(q.iter().map(|j| j.to_snap_json()).collect()))
+                        .collect(),
+                ),
+            ),
+            (
+                "outstanding",
+                Json::Arr(self.outstanding.iter().map(|&n| Json::num(n as f64)).collect()),
+            ),
+        ])
+    }
+
+    /// Rebuild from [`to_snap_json`](Self::to_snap_json) output. The
+    /// GPU count must match the queue being restored into.
+    pub fn restore_snap_json(&mut self, snap: &crate::util::Json) -> anyhow::Result<()> {
+        use anyhow::Context;
+        let backlog = snap
+            .get("backlog")
+            .as_arr()
+            .context("queue snapshot missing backlog")?;
+        let outstanding = snap
+            .get("outstanding")
+            .as_arr()
+            .context("queue snapshot missing outstanding")?;
+        anyhow::ensure!(
+            backlog.len() == self.backlog.len() && outstanding.len() == self.outstanding.len(),
+            "queue snapshot is for {} GPUs, queue has {}",
+            backlog.len(),
+            self.backlog.len()
+        );
+        self.backlog = backlog
+            .iter()
+            .map(|q| {
+                q.as_arr()
+                    .context("queue snapshot: backlog entry must be an array")?
+                    .iter()
+                    .map(PendingJob::from_snap_json)
+                    .collect()
+            })
+            .collect::<anyhow::Result<_>>()?;
+        self.outstanding = outstanding
+            .iter()
+            .map(crate::util::snap::usize_from_json)
+            .collect::<anyhow::Result<_>>()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -42,6 +42,10 @@
 //!   virtual-time fair queueing for shared PCIe bandwidth + incremental
 //!   power/memory accumulators); the original scan-and-decrement loop
 //!   survives as the differential-testing oracle in [`sim::naive`].
+//!   Both engines checkpoint mid-run ([`sim::GpuSimSnapshot`]):
+//!   `sim::resume_difftest` holds snapshot-and-resume byte-identical
+//!   to the uninterrupted run, including mid-reconfiguration and
+//!   mid-OOM snapshot instants.
 //! * [`scheduler`] — the policy/orchestrator split:
 //!   [`scheduler::SchedulingPolicy`] (the event-handler trait the
 //!   paper's schemes implement — `BaselinePolicy`, `SchemeAPolicy`,
@@ -56,7 +60,14 @@
 //!   [`scheduler::ShardedPolicy`] lifts any single-GPU policy to a
 //!   multi-GPU fleet (round-robin deal — the bench/legacy path). The
 //!   orchestrator owns the per-job belief ledger; policies
-//!   place/fuse/restart against `ctx.belief(id)` only.
+//!   place/fuse/restart against `ctx.belief(id)` only. The whole
+//!   stack checkpoints into one
+//!   [`scheduler::OrchestratorCheckpoint`] (sims, partitions, beliefs,
+//!   policy state, pending queue) and restores bit-exactly, which
+//!   powers warm-started tuning and the scripted kill/restore fault
+//!   scenarios of [`scheduler::FaultPlan`] /
+//!   [`scheduler::run_with_faults`] (dead-shard re-queue through the
+//!   fleet-steal seams, paper-scheme job restarts).
 //! * [`fleet`] — the heterogeneous fleet scheduler:
 //!   [`fleet::FleetPolicy`] routes a single global arrival queue over
 //!   mixed A30/A100/H100(+synthetic) fleets with a cost-model
@@ -76,6 +87,10 @@
 //!   orchestrator on paper mixes and synthetic multi-GPU fleets,
 //!   emitting a deterministic, schema-stable
 //!   [`tuner::SweepReport`] (the CI perf-trajectory artifact).
+//!   Successive halving is warm-started on the checkpoint layer:
+//!   survivors resume from their truncated-horizon snapshots instead
+//!   of re-simulating from t=0, with warm and cold reports
+//!   byte-identical by contract.
 //! * [`runtime`] — PJRT-CPU loading/execution of the AOT artifacts.
 //! * [`server`] — JSON-lines LLM serving front-end; replica placement
 //!   and request-latency accounting route through the scheduling

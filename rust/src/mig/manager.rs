@@ -655,6 +655,157 @@ impl PartitionManager {
     pub fn current_fcr(&self) -> u32 {
         self.table.fcr(&self.state).unwrap_or(0)
     }
+
+    // ------------------------------------------------ checkpoint layer
+
+    /// Serialize the live layout — partition state, instance table,
+    /// id counter, and any **open transaction** (its `begin` snapshot
+    /// and resolved creates) — into a plain JSON snapshot. The spec and
+    /// reachability table are structural (rebuilt from the spec on
+    /// restore) and are not serialized.
+    pub fn snapshot(&self) -> PartitionSnapshot {
+        use crate::util::Json;
+        let txn = match &self.txn {
+            None => Json::Null,
+            Some(t) => Json::obj(vec![
+                ("resolved_creates", placements_to_json(&t.resolved_creates)),
+                ("snap_state", placements_to_json(t.snap_state.placements())),
+                ("snap_instances", instances_to_json(&t.snap_instances)),
+                ("snap_next_id", Json::num(t.snap_next_id as f64)),
+            ]),
+        };
+        PartitionSnapshot(Json::obj(vec![
+            ("state", placements_to_json(self.state.placements())),
+            ("instances", instances_to_json(&self.instances)),
+            ("next_id", Json::num(self.next_id as f64)),
+            ("txn", txn),
+        ]))
+    }
+
+    /// Inverse of [`Self::snapshot`]: overwrite the live layout with the
+    /// snapshot's. The spec/table are kept — a snapshot only restores
+    /// onto a manager built for the same GPU.
+    pub fn restore(&mut self, snap: &PartitionSnapshot) -> anyhow::Result<()> {
+        let j = &snap.0;
+        let state = PartitionState::from_placements(placements_from_json(j.get("state"))?);
+        anyhow::ensure!(
+            self.table.is_valid(&state),
+            "snapshot partition state is not valid for this GPU spec"
+        );
+        let instances = instances_from_json(j.get("instances"))?;
+        let next_id = instance_id_from_json(j.get("next_id"))?;
+        let txn = if j.get("txn").is_null() {
+            None
+        } else {
+            let t = j.get("txn");
+            Some(PlanTxn {
+                resolved_creates: placements_from_json(t.get("resolved_creates"))?,
+                snap_state: PartitionState::from_placements(placements_from_json(
+                    t.get("snap_state"),
+                )?),
+                snap_instances: instances_from_json(t.get("snap_instances"))?,
+                snap_next_id: instance_id_from_json(t.get("snap_next_id"))?,
+            })
+        };
+        self.state = state;
+        self.instances = instances;
+        self.next_id = next_id;
+        self.txn = txn;
+        Ok(())
+    }
+
+    /// Hard-reset the layout to empty — the fault-injection model of a
+    /// GPU reboot, which wipes the MIG configuration (instances and any
+    /// open reconfiguration transaction are simply gone). The spec and
+    /// reachability table survive; the id counter keeps advancing so
+    /// post-reboot instances never reuse a pre-reboot id.
+    pub fn wipe(&mut self) {
+        self.state = PartitionState::empty();
+        self.instances.clear();
+        self.txn = None;
+    }
+}
+
+/// Serde-free JSON snapshot of a [`PartitionManager`]'s layout,
+/// produced by [`PartitionManager::snapshot`]. Carried inside
+/// [`GpuSimSnapshot`](crate::sim::GpuSimSnapshot) /
+/// `OrchestratorCheckpoint`.
+#[derive(Debug, Clone)]
+pub struct PartitionSnapshot(pub crate::util::Json);
+
+fn placement_to_json(p: Placement) -> crate::util::Json {
+    use crate::util::Json;
+    Json::Arr(vec![Json::num(p.profile as f64), Json::num(p.start as f64)])
+}
+
+fn placement_from_json(j: &crate::util::Json) -> anyhow::Result<Placement> {
+    use crate::util::snap::usize_from_json;
+    let profile = usize_from_json(j.at(0))?;
+    let start = usize_from_json(j.at(1))?;
+    anyhow::ensure!(profile <= u8::MAX as usize && start <= u8::MAX as usize);
+    Ok(Placement {
+        profile: profile as u8,
+        start: start as u8,
+    })
+}
+
+fn placements_to_json(ps: &[Placement]) -> crate::util::Json {
+    crate::util::Json::Arr(ps.iter().map(|&p| placement_to_json(p)).collect())
+}
+
+fn placements_from_json(j: &crate::util::Json) -> anyhow::Result<Vec<Placement>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected placement array"))?
+        .iter()
+        .map(placement_from_json)
+        .collect()
+}
+
+fn instance_id_from_json(j: &crate::util::Json) -> anyhow::Result<InstanceId> {
+    let n = crate::util::snap::usize_from_json(j)?;
+    anyhow::ensure!(n <= InstanceId::MAX as usize, "instance id out of range");
+    Ok(n as InstanceId)
+}
+
+/// `[[id, profile, start], ...]` sorted by id (deterministic bytes).
+fn instances_to_json(m: &HashMap<InstanceId, Placement>) -> crate::util::Json {
+    use crate::util::Json;
+    let mut rows: Vec<(InstanceId, Placement)> = m.iter().map(|(&k, &v)| (k, v)).collect();
+    rows.sort_by_key(|(id, _)| *id);
+    Json::Arr(
+        rows.into_iter()
+            .map(|(id, p)| {
+                Json::Arr(vec![
+                    Json::num(id as f64),
+                    Json::num(p.profile as f64),
+                    Json::num(p.start as f64),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn instances_from_json(j: &crate::util::Json) -> anyhow::Result<HashMap<InstanceId, Placement>> {
+    use crate::util::snap::usize_from_json;
+    let rows = j
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected instance array"))?;
+    let mut out = HashMap::with_capacity(rows.len());
+    for row in rows {
+        let id = instance_id_from_json(row.at(0))?;
+        let profile = usize_from_json(row.at(1))?;
+        let start = usize_from_json(row.at(2))?;
+        anyhow::ensure!(profile <= u8::MAX as usize && start <= u8::MAX as usize);
+        let prev = out.insert(
+            id,
+            Placement {
+                profile: profile as u8,
+                start: start as u8,
+            },
+        );
+        anyhow::ensure!(prev.is_none(), "duplicate instance id {id} in snapshot");
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -946,6 +1097,45 @@ mod tests {
         let created = m.apply_plan(&plan).unwrap();
         assert_eq!(m.profile_of(created[0]), Some(1));
         assert!(m.table().is_valid(m.state()));
+    }
+
+    #[test]
+    fn snapshot_roundtrips_mid_transaction_through_text() {
+        use crate::util::Json;
+        // Open a real fusion transaction so the snapshot carries
+        // resolved creates + the begin snapshot, then round-trip it
+        // through JSON text into a *fresh* manager and finish the
+        // transaction there — byte-identical snapshots, identical
+        // committed layout.
+        let mut m = mgr();
+        let ids: Vec<_> = (0..7).map(|_| m.alloc(0).unwrap()).collect();
+        let plan = m.plan_reconfig(1, &ids).unwrap();
+        m.begin(&plan).unwrap();
+        assert!(m.in_txn());
+
+        let snap = m.snapshot();
+        let text = snap.0.to_string();
+        let mut back = mgr();
+        back.restore(&PartitionSnapshot(Json::parse(&text).unwrap()))
+            .unwrap();
+        assert_eq!(back.snapshot().0.to_string(), text, "re-snapshot drifted");
+        assert!(back.in_txn());
+
+        let a = m.commit().unwrap();
+        let b = back.commit().unwrap();
+        assert_eq!(a, b, "restored txn committed different instance ids");
+        assert_eq!(m.state(), back.state());
+        assert_eq!(m.snapshot().0.to_string(), back.snapshot().0.to_string());
+
+        // wipe(): the fault model's GPU reboot — layout gone, ids keep
+        // advancing, spec/table intact.
+        let next_before = back.snapshot().0.get("next_id").as_u64().unwrap();
+        back.wipe();
+        assert!(back.state().is_empty());
+        assert_eq!(back.instance_count(), 0);
+        assert!(!back.in_txn());
+        let id = back.alloc(0).unwrap();
+        assert!(id as u64 >= next_before, "post-wipe id reused a dead id");
     }
 
     #[test]

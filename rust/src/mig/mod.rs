@@ -46,7 +46,7 @@ pub mod reachability;
 pub mod state;
 
 pub use alloc_policy::{churn_experiment, ChurnResult, PlacementPolicy, PolicyManager};
-pub use manager::{InstanceId, MigError, PartitionManager};
+pub use manager::{InstanceId, MigError, PartitionManager, PartitionSnapshot};
 pub use plan::{PartitionPlan, PlanError, PlanOp};
 pub use profile::{GpuSpec, MigProfile};
 pub use reachability::ReachabilityTable;

@@ -121,6 +121,62 @@ impl JobMonitor {
         PredictionOutcome::Pending
     }
 
+    /// Bit-exact snapshot form (checkpoint layer). The full fit state
+    /// is serialized — series, prediction history, convergence latch,
+    /// and the convergence policy itself — so a restored monitor's next
+    /// `push` produces bit-identical outcomes.
+    pub fn to_snap_json(&self) -> crate::util::Json {
+        use crate::util::snap::{f64_to_json, f64s_to_json};
+        use crate::util::Json;
+        Json::obj(vec![
+            (
+                "cfg",
+                Json::obj(vec![
+                    ("min_obs", Json::num(self.cfg.min_obs as f64)),
+                    ("window", Json::num(self.cfg.window as f64)),
+                    ("rel_tol", f64_to_json(self.cfg.rel_tol)),
+                    ("z", f64_to_json(self.cfg.z)),
+                ]),
+            ),
+            ("horizon", f64_to_json(self.horizon)),
+            ("req_mem", f64s_to_json(&self.req_mem)),
+            ("inv_reuse", f64s_to_json(&self.inv_reuse)),
+            ("predictions", f64s_to_json(&self.predictions)),
+            (
+                "converged",
+                match self.converged {
+                    Some(p) => f64_to_json(p),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Inverse of [`Self::to_snap_json`].
+    pub fn from_snap_json(j: &crate::util::Json) -> anyhow::Result<JobMonitor> {
+        use crate::util::snap::{f64_from_json, f64s_from_json, usize_from_json};
+        let c = j.get("cfg");
+        let cfg = ConvergenceCfg {
+            min_obs: usize_from_json(c.get("min_obs"))?,
+            window: usize_from_json(c.get("window"))?,
+            rel_tol: f64_from_json(c.get("rel_tol"))?,
+            z: f64_from_json(c.get("z"))?,
+        };
+        let converged = if j.get("converged").is_null() {
+            None
+        } else {
+            Some(f64_from_json(j.get("converged"))?)
+        };
+        Ok(JobMonitor {
+            cfg,
+            horizon: f64_from_json(j.get("horizon"))?,
+            req_mem: f64s_from_json(j.get("req_mem"))?,
+            inv_reuse: f64s_from_json(j.get("inv_reuse"))?,
+            predictions: f64s_from_json(j.get("predictions"))?,
+            converged,
+        })
+    }
+
     /// Accept an externally-computed peak (e.g. from the PJRT engine) for
     /// this monitor's convergence bookkeeping.
     pub fn push_external_prediction(&mut self, peak_gb: f64) -> PredictionOutcome {

@@ -134,6 +134,48 @@ impl SchedulingPolicy for BaselinePolicy {
     fn has_pending_work(&self) -> bool {
         !self.queue.is_empty()
     }
+
+    fn snapshot_state(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            (
+                "queue",
+                Json::Arr(self.queue.iter().map(|j| j.to_snap_json()).collect()),
+            ),
+            (
+                "inst",
+                match self.inst {
+                    Some(i) => Json::num(i as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    fn restore_state(&mut self, snap: &crate::util::Json) -> anyhow::Result<()> {
+        self.queue = snap
+            .get("queue")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("baseline snapshot missing queue"))?
+            .iter()
+            .map(PendingJob::from_snap_json)
+            .collect::<anyhow::Result<_>>()?;
+        self.inst = if snap.get("inst").is_null() {
+            None
+        } else {
+            let i = crate::util::snap::usize_from_json(snap.get("inst"))?;
+            anyhow::ensure!(i <= InstanceId::MAX as usize);
+            Some(i as InstanceId)
+        };
+        Ok(())
+    }
+
+    fn drain_pending(&mut self) -> Vec<PendingJob> {
+        // Fault path: the full-GPU instance died with the partition
+        // layout; forget it so the next stall re-claims the GPU.
+        self.inst = None;
+        self.queue.drain(..).collect()
+    }
 }
 
 /// Run the mix sequentially on the full GPU (batch or online, depending

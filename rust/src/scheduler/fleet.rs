@@ -108,6 +108,39 @@ impl<P: SchedulingPolicy> SchedulingPolicy for ShardedPolicy<P> {
     fn has_pending_work(&self) -> bool {
         self.inner.iter().any(|p| p.has_pending_work())
     }
+
+    fn snapshot_state(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            ("next", Json::num(self.next as f64)),
+            (
+                "shards",
+                Json::Arr(self.inner.iter().map(|p| p.snapshot_state()).collect()),
+            ),
+        ])
+    }
+
+    fn restore_state(&mut self, snap: &crate::util::Json) -> anyhow::Result<()> {
+        self.next = crate::util::snap::usize_from_json(snap.get("next"))?;
+        let shards = snap
+            .get("shards")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("sharded snapshot missing shards"))?;
+        anyhow::ensure!(
+            shards.len() == self.inner.len(),
+            "sharded snapshot has {} shards, policy has {}",
+            shards.len(),
+            self.inner.len()
+        );
+        for (p, s) in self.inner.iter_mut().zip(shards) {
+            p.restore_state(s)?;
+        }
+        Ok(())
+    }
+
+    fn drain_pending(&mut self) -> Vec<PendingJob> {
+        self.inner.iter_mut().flat_map(|p| p.drain_pending()).collect()
+    }
 }
 
 #[cfg(test)]

@@ -60,8 +60,28 @@
 //! no-steal mode reproduces `ShardedPolicy` bit for bit), with an
 //! exhaustive placement oracle ([`fleet::oracle`](crate::fleet::oracle))
 //! pinning the engine's optimality gap.
+//!
+//! # Checkpointing and fault injection
+//!
+//! The orchestrator snapshots its entire state — every
+//! [`GpuSim`]'s mid-run state, the partition layouts and open
+//! reconfiguration transactions, the belief ledger, the policy's own
+//! serialized state ([`SchedulingPolicy::snapshot_state`]), the
+//! pending arrival queue, and the external-job ledger — into one
+//! [`OrchestratorCheckpoint`] ([`Orchestrator::snapshot`] /
+//! [`Orchestrator::restore`]), and a resumed run is byte-identical to
+//! an uninterrupted one (`sim::resume_difftest` is the contract; the
+//! [`tuner`](crate::tuner)'s successive halving warm-starts on it).
+//! The same seams power scripted fault scenarios: [`fault`] drives
+//! [`Orchestrator::fault_kill_gpu`] / `fault_restore_gpu` from a
+//! [`FaultPlan`] (kill GPU *i* at *t*, restore at *t'*) — the dead
+//! shard's queued jobs re-route through the fleet-steal seams, lost
+//! running jobs restart per the paper's OOM-recovery scheme, and
+//! [`run_with_faults`] reports the recovery timeline plus final fleet
+//! metrics (`migm.bench.fault.v1`).
 
 pub mod baseline;
+pub mod fault;
 pub mod fleet;
 #[cfg(test)]
 pub mod legacy;
@@ -82,8 +102,11 @@ use crate::sim::{GpuSim, JobRecord, SimCounters};
 use crate::workloads::mix::Mix;
 use crate::workloads::JobSpec;
 
+pub use fault::{
+    fault_recovery_row, run_with_faults, FaultEvent, FaultKind, FaultPlan, FaultReport,
+};
 pub use fleet::ShardedPolicy;
-pub use orchestrator::Orchestrator;
+pub use orchestrator::{Orchestrator, OrchestratorCheckpoint};
 pub use policy::{Action, GpuId, JobEvent, PolicyCtx, SchedulingPolicy};
 pub use scheme_a::SchemeAKnobs;
 pub use scheme_b::SchemeBKnobs;
@@ -112,6 +135,33 @@ pub struct PendingJob {
     pub spec: JobSpec,
     pub submit_time: f64,
     pub belief: BeliefId,
+}
+
+impl PendingJob {
+    /// Bit-exact snapshot form (checkpoint layer). Lives here — not in
+    /// a policy module — so policy code stays free of anything the
+    /// belief-ledger discipline test could mistake for an estimate
+    /// access; policies call `job.to_snap_json()` and never open the
+    /// spec themselves.
+    pub fn to_snap_json(&self) -> crate::util::Json {
+        use crate::util::snap::f64_to_json;
+        use crate::util::Json;
+        Json::obj(vec![
+            ("spec", self.spec.to_snap_json()),
+            ("submit_time", f64_to_json(self.submit_time)),
+            ("belief", Json::num(self.belief as f64)),
+        ])
+    }
+
+    /// Inverse of [`Self::to_snap_json`].
+    pub fn from_snap_json(j: &crate::util::Json) -> anyhow::Result<PendingJob> {
+        use crate::util::snap::{f64_from_json, usize_from_json};
+        Ok(PendingJob {
+            spec: JobSpec::from_snap_json(j.get("spec"))?,
+            submit_time: f64_from_json(j.get("submit_time"))?,
+            belief: usize_from_json(j.get("belief"))?,
+        })
+    }
 }
 
 /// Pick the target profile for a memory requirement: tightest fit,

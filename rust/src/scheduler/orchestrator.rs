@@ -24,10 +24,11 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::estimator::{BeliefConfig, BeliefId, BeliefLedger};
+use crate::estimator::{BeliefConfig, BeliefId, BeliefLedger, BeliefSnapshot};
 use crate::metrics::{BatchMetrics, LatencyStats};
-use crate::mig::{GpuSpec, InstanceId, MigError, PartitionPlan};
-use crate::sim::{GpuSim, JobId, JobRecord, SimCounters, SimEvent};
+use crate::mig::{GpuSpec, InstanceId, MigError, PartitionPlan, PlanOp};
+use crate::sim::{GpuSim, GpuSimSnapshot, JobId, JobRecord, SimCounters, SimEvent};
+use crate::util::Json;
 use crate::workloads::mix::Mix;
 use crate::workloads::JobSpec;
 
@@ -77,6 +78,10 @@ pub struct Orchestrator<P: SchedulingPolicy> {
     /// applied (`mgr.begin`), creates pending until the window's
     /// `ReconfigDone` commits them.
     in_flight: Vec<Option<PartitionPlan>>,
+    /// Faulted GPUs (see [`fault_kill_gpu`](Self::fault_kill_gpu)): a
+    /// down GPU is empty, draws no power, and accepts no actions until
+    /// restored.
+    down: Vec<bool>,
     // -- external (wall-clock) submission ledger, for the server --
     external_open: HashMap<u64, ExternalJob>,
     external_next: u64,
@@ -107,6 +112,7 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
             next_arrival: 0,
             n_jobs: 0,
             in_flight: vec![None; n],
+            down: vec![false; n],
             external_open: HashMap::new(),
             external_next: 0,
             external_records: Vec::new(),
@@ -176,6 +182,90 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
         // panic the sort; `submit_at` already clamps negatives.
         self.arrivals.sort_by(|a, b| a.0.total_cmp(&b.0));
         while self.step() {}
+    }
+
+    /// Drive the world until every clock reaches simulated time `t` (or
+    /// the run drains first). Returns `true` while work remains —
+    /// undelivered arrivals, queued jobs, or running work — so the
+    /// caller can [`snapshot`](Self::snapshot) and resume later.
+    ///
+    /// Calling `run_until(t1)`, then `run_until(t2 > t1)`, then
+    /// [`run_to_completion`](Self::run_to_completion) replays the exact
+    /// event (and floating-point integration) sequence of the same
+    /// horizon schedule on a fresh orchestrator — the warm-start
+    /// tuner's byte-identity contract.
+    pub fn run_until(&mut self, t: f64) -> bool {
+        // Idempotent (stable sort of an already-sorted vec) so repeated
+        // partial runs and run_to_completion compose.
+        self.arrivals.sort_by(|a, b| a.0.total_cmp(&b.0));
+        loop {
+            self.deliver_due_arrivals();
+            if let Some(g) = self.busy_gpu() {
+                let g_now = self.gpus[g].now();
+                if g_now >= t {
+                    return true;
+                }
+                let mut horizon = self.next_arrival_time();
+                for (i, other) in self.gpus.iter().enumerate() {
+                    if i == g || !(other.n_running() > 0 || other.is_reconfiguring()) {
+                        continue;
+                    }
+                    if other.now() > g_now + EPS {
+                        horizon = Some(match horizon {
+                            Some(h) => h.min(other.now()),
+                            None => other.now(),
+                        });
+                    }
+                }
+                let horizon = Some(horizon.map_or(t, |h| h.min(t)));
+                if let Some(ev) = self.gpus[g].advance_with_horizon(horizon) {
+                    self.dispatch(g, ev);
+                }
+                continue;
+            }
+            if self.policy.has_pending_work() {
+                let acts = self.call_policy(|p, ctx| p.on_stalled(ctx));
+                if !acts.is_empty() {
+                    self.apply(acts);
+                    continue;
+                }
+            }
+            match self.next_arrival_time() {
+                Some(a) if a <= t => {
+                    self.idle_fleet_until(a);
+                    continue;
+                }
+                Some(_) => {
+                    self.idle_fleet_until(t);
+                    return true;
+                }
+                None => {
+                    if self.policy.has_pending_work() {
+                        panic!(
+                            "policy '{}' stalled with pending work, no actions, and no arrivals",
+                            self.policy.name()
+                        );
+                    }
+                    // Drained before the horizon: leave the clocks at
+                    // the natural makespan (no phantom idle burn), so
+                    // the partial result *is* the final result.
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Run exactly `n` scheduling steps (event-boundary granularity —
+    /// the resume difftest's snapshot instants, where no power
+    /// integration interval is split). Returns `false` once drained.
+    pub(crate) fn run_steps(&mut self, n: usize) -> bool {
+        self.arrivals.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for _ in 0..n {
+            if !self.step() {
+                return false;
+            }
+        }
+        true
     }
 
     /// Convenience: submit `mix`, run to completion, and finalize the
@@ -292,9 +382,7 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
             }
         }
         if let Some(t) = self.next_arrival_time() {
-            for g in &mut self.gpus {
-                g.idle_until(t);
-            }
+            self.idle_fleet_until(t);
             return true;
         }
         if self.policy.has_pending_work() {
@@ -304,6 +392,19 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
             );
         }
         false
+    }
+
+    /// Skip the whole fleet forward to `t`: live GPUs charge idle
+    /// power, down GPUs advance their clock for free (a killed GPU
+    /// draws nothing).
+    fn idle_fleet_until(&mut self, t: f64) {
+        for (i, g) in self.gpus.iter_mut().enumerate() {
+            if self.down[i] {
+                g.power_on_at(t);
+            } else {
+                g.idle_until(t);
+            }
+        }
     }
 
     fn busy_gpu(&self) -> Option<GpuId> {
@@ -499,6 +600,7 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
         for a in actions {
             match a {
                 Action::Launch { gpu, job, instance } => {
+                    assert!(!self.down[gpu], "policy launched on down GPU {gpu}");
                     self.sync_if_idle(gpu);
                     // Fresh monitor for this launch (dynamic jobs with
                     // prediction), then map the sim job to its belief.
@@ -517,6 +619,7 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
                     );
                 }
                 Action::Reconfig { gpu, plan, instant } => {
+                    assert!(!self.down[gpu], "policy reconfigured down GPU {gpu}");
                     self.sync_if_idle(gpu);
                     // An empty plan has no window to wait for; apply it
                     // synchronously whatever the requested mode.
@@ -553,6 +656,316 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
                 }
             }
         }
+    }
+
+    // ---------------------------------------------------- fault hooks
+
+    /// Whether GPU `g` is currently faulted.
+    pub fn is_down(&self, g: GpuId) -> bool {
+        self.down[g]
+    }
+
+    /// Kill GPU `g` at the current instant: every running job is lost
+    /// (the paper's recovery scheme restarts them from scratch — their
+    /// beliefs keep the evidence gathered so far), the partition layout
+    /// and any open reconfiguration window are wiped, and the policy's
+    /// [`on_gpu_fault`](SchedulingPolicy::on_gpu_fault) seam re-routes
+    /// the dead GPU's work. Returns the number of running jobs lost.
+    pub fn fault_kill_gpu(&mut self, g: GpuId) -> usize {
+        assert!(!self.down[g], "GPU {g} is already down");
+        assert!(
+            self.down.iter().enumerate().any(|(i, &d)| i != g && !d),
+            "cannot kill the last live GPU"
+        );
+        // Unwind the simulator first (ascending-JobId order for
+        // determinism), then the partition layout and any open window.
+        let evacuated = self.gpus[g].fault_evacuate();
+        self.in_flight[g] = None;
+        self.gpus[g].mgr.wipe();
+        let lost: Vec<PendingJob> = evacuated
+            .into_iter()
+            .map(|(job, spec, submit_time)| {
+                let info = self.active[g]
+                    .remove(&job)
+                    .expect("evacuated job must be active");
+                PendingJob {
+                    spec,
+                    submit_time,
+                    belief: info.belief,
+                }
+            })
+            .collect();
+        assert!(self.active[g].is_empty(), "active ledger out of sync with sim");
+        self.down[g] = true;
+        let n_lost = lost.len();
+        let acts = self.call_policy(|p, ctx| p.on_gpu_fault(ctx, g, lost));
+        self.apply(acts);
+        n_lost
+    }
+
+    /// Bring a killed GPU back at the current instant: its clock jumps
+    /// forward without charging energy (it was powered off), and the
+    /// policy's [`on_gpu_restore`](SchedulingPolicy::on_gpu_restore)
+    /// seam lets the fleet rebalance onto it.
+    pub fn fault_restore_gpu(&mut self, g: GpuId) {
+        assert!(self.down[g], "GPU {g} is not down");
+        self.down[g] = false;
+        let now = self.now();
+        self.gpus[g].power_on_at(now);
+        let acts = self.call_policy(|p, ctx| p.on_gpu_restore(ctx, g));
+        self.apply(acts);
+    }
+
+    // ------------------------------------------------ partial results
+
+    /// A fleet result over a *truncated* horizon: throughput counts only
+    /// completed jobs over `horizon_s`, energy/memory integrals and
+    /// counters are the accumulated totals, and latency percentiles
+    /// pool the completed records. The warm-start tuner scores pruning
+    /// rounds with this against full-run references.
+    pub fn fleet_result_partial(&self, horizon_s: f64) -> RunResult {
+        let horizon = horizon_s.max(1e-9);
+        let mut records: Vec<JobRecord> = Vec::new();
+        let mut counters = SimCounters::default();
+        let (mut energy, mut mem_integral, mut total_mem) = (0.0, 0.0, 0.0);
+        for g in &self.gpus {
+            records.extend(g.records.iter().cloned());
+            counters.reconfig_ops += g.counters.reconfig_ops;
+            counters.reconfig_windows += g.counters.reconfig_windows;
+            counters.reconfig_time_s += g.counters.reconfig_time_s;
+            counters.oom_restarts += g.counters.oom_restarts;
+            counters.early_restarts += g.counters.early_restarts;
+            energy += g.energy_j();
+            mem_integral += g.mem_gb_integral();
+            total_mem += g.spec.total_mem_gb;
+        }
+        let n_done = records.len();
+        let turnaround: f64 = records
+            .iter()
+            .map(|r| r.finish_time - r.submit_time)
+            .sum::<f64>()
+            / n_done.max(1) as f64;
+        let queue_s: Vec<f64> = records.iter().map(|r| r.start_time - r.submit_time).collect();
+        let turn_s: Vec<f64> = records.iter().map(|r| r.finish_time - r.submit_time).collect();
+        let metrics = BatchMetrics {
+            n_jobs: n_done,
+            makespan_s: horizon,
+            throughput_jps: n_done as f64 / horizon,
+            energy_j: energy,
+            energy_per_job_j: energy / n_done.max(1) as f64,
+            mem_utilization: mem_integral / (horizon * total_mem.max(1e-12)),
+            avg_turnaround_s: turnaround,
+            reconfig_ops: counters.reconfig_ops,
+            reconfig_windows: counters.reconfig_windows,
+            reconfig_time_s: counters.reconfig_time_s,
+            oom_restarts: counters.oom_restarts,
+            early_restarts: counters.early_restarts,
+        };
+        RunResult {
+            metrics,
+            records,
+            counters,
+            latency: LatencyStats::from_samples(&queue_s, &turn_s),
+            prediction: self.beliefs.accuracy(),
+        }
+    }
+
+    // ------------------------------------------------ snapshot/resume
+
+    /// Capture the complete simulation state — every GPU simulator (with
+    /// its partition manager), the belief ledger, the policy, the
+    /// arrival stream, and the orchestration ledgers — as one plain-JSON
+    /// [`OrchestratorCheckpoint`]. Taken at a scheduling-step boundary,
+    /// [`restore`](Self::restore) + continuation replays the
+    /// uninterrupted run bit for bit (pinned by `sim::resume_difftest`).
+    pub fn snapshot(&self) -> OrchestratorCheckpoint {
+        use crate::util::snap;
+        let active = Json::Arr(
+            self.active
+                .iter()
+                .map(|m| {
+                    let mut rows: Vec<(&JobId, &ActiveJob)> = m.iter().collect();
+                    rows.sort_by_key(|(id, _)| **id);
+                    Json::Arr(
+                        rows.into_iter()
+                            .map(|(id, a)| {
+                                Json::Arr(vec![
+                                    Json::num(*id as f64),
+                                    Json::num(a.belief as f64),
+                                    snap::f64_to_json(a.inst_mem_gb),
+                                ])
+                            })
+                            .collect(),
+                    )
+                })
+                .collect(),
+        );
+        let arrivals = Json::Arr(
+            self.arrivals
+                .iter()
+                .map(|(t, belief, spec)| {
+                    Json::Arr(vec![
+                        snap::f64_to_json(*t),
+                        Json::num(*belief as f64),
+                        spec.to_snap_json(),
+                    ])
+                })
+                .collect(),
+        );
+        let in_flight = Json::Arr(
+            self.in_flight
+                .iter()
+                .map(|p| match p {
+                    Some(plan) => plan_to_json(plan),
+                    None => Json::Null,
+                })
+                .collect(),
+        );
+        let mut open: Vec<(&u64, &ExternalJob)> = self.external_open.iter().collect();
+        open.sort_by_key(|(tok, _)| **tok);
+        let external = Json::obj(vec![
+            (
+                "open",
+                Json::Arr(
+                    open.into_iter()
+                        .map(|(tok, j)| {
+                            Json::Arr(vec![
+                                snap::u64_to_json(*tok),
+                                Json::str(j.name.clone()),
+                                snap::f64_to_json(j.submit_s),
+                                match j.start_s {
+                                    Some(s) => snap::f64_to_json(s),
+                                    None => Json::Null,
+                                },
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("next", snap::u64_to_json(self.external_next)),
+            ("records", crate::sim::records_to_json(&self.external_records)),
+        ]);
+        OrchestratorCheckpoint(Json::obj(vec![
+            ("sims", Json::Arr(self.gpus.iter().map(|g| g.snapshot().0).collect())),
+            ("beliefs", self.beliefs.snapshot().0),
+            ("policy", self.policy.snapshot_state()),
+            ("active", active),
+            ("arrivals", arrivals),
+            ("next_arrival", Json::num(self.next_arrival as f64)),
+            ("n_jobs", Json::num(self.n_jobs as f64)),
+            ("in_flight", in_flight),
+            (
+                "down",
+                Json::Arr(self.down.iter().map(|&d| Json::Bool(d)).collect()),
+            ),
+            ("external", external),
+        ]))
+    }
+
+    /// Overwrite this orchestrator's state from a checkpoint. The
+    /// receiver must be *structurally* identical to the snapshotted one
+    /// — same GPU specs in the same order, same policy shape (shard
+    /// count / scheme / knobs), same belief configuration — and is
+    /// typically a freshly-constructed orchestrator with **no**
+    /// submissions (the checkpoint carries the full arrival stream).
+    pub fn restore(&mut self, ckpt: &OrchestratorCheckpoint) -> anyhow::Result<()> {
+        use anyhow::Context;
+        use crate::util::snap;
+        let doc = &ckpt.0;
+        let sims = doc.get("sims").as_arr().context("checkpoint missing sims")?;
+        anyhow::ensure!(
+            sims.len() == self.gpus.len(),
+            "checkpoint has {} GPUs, orchestrator has {}",
+            sims.len(),
+            self.gpus.len()
+        );
+        for (g, s) in self.gpus.iter_mut().zip(sims) {
+            g.restore(&GpuSimSnapshot(s.clone()))?;
+        }
+        self.beliefs
+            .restore(&BeliefSnapshot(doc.get("beliefs").clone()))?;
+        self.policy.restore_state(doc.get("policy"))?;
+        let active = doc.get("active").as_arr().context("checkpoint missing active")?;
+        anyhow::ensure!(active.len() == self.gpus.len(), "active ledger GPU count mismatch");
+        self.active = active
+            .iter()
+            .map(|per_gpu| {
+                per_gpu
+                    .as_arr()
+                    .context("active entry must be an array")?
+                    .iter()
+                    .map(|row| {
+                        let job = snap::usize_from_json(row.at(0))?;
+                        let belief = snap::usize_from_json(row.at(1))?;
+                        let inst_mem_gb = snap::f64_from_json(row.at(2))?;
+                        Ok((job, ActiveJob { belief, inst_mem_gb }))
+                    })
+                    .collect::<anyhow::Result<HashMap<_, _>>>()
+            })
+            .collect::<anyhow::Result<_>>()?;
+        self.arrivals = doc
+            .get("arrivals")
+            .as_arr()
+            .context("checkpoint missing arrivals")?
+            .iter()
+            .map(|row| {
+                let t = snap::f64_from_json(row.at(0))?;
+                let belief = snap::usize_from_json(row.at(1))?;
+                let spec = JobSpec::from_snap_json(row.at(2))?;
+                Ok((t, belief, spec))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        self.next_arrival = snap::usize_from_json(doc.get("next_arrival"))?;
+        anyhow::ensure!(
+            self.next_arrival <= self.arrivals.len(),
+            "arrival cursor past the end of the stream"
+        );
+        self.n_jobs = snap::usize_from_json(doc.get("n_jobs"))?;
+        let in_flight = doc
+            .get("in_flight")
+            .as_arr()
+            .context("checkpoint missing in_flight")?;
+        anyhow::ensure!(in_flight.len() == self.gpus.len(), "in_flight GPU count mismatch");
+        self.in_flight = in_flight
+            .iter()
+            .map(|p| match p {
+                Json::Null => Ok(None),
+                v => plan_from_json(v).map(Some),
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let down = doc.get("down").as_arr().context("checkpoint missing down")?;
+        anyhow::ensure!(down.len() == self.gpus.len(), "down mask GPU count mismatch");
+        self.down = down
+            .iter()
+            .map(|v| match v {
+                Json::Bool(b) => Ok(*b),
+                v => anyhow::bail!("down mask entry must be a bool, got {v}"),
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let external = doc.get("external");
+        self.external_open = external
+            .get("open")
+            .as_arr()
+            .context("checkpoint missing external.open")?
+            .iter()
+            .map(|row| {
+                let token = snap::u64_from_json(row.at(0))?;
+                let name = row
+                    .at(1)
+                    .as_str()
+                    .context("external job name must be a string")?
+                    .to_string();
+                let submit_s = snap::f64_from_json(row.at(2))?;
+                let start_s = match row.at(3) {
+                    Json::Null => None,
+                    v => Some(snap::f64_from_json(v)?),
+                };
+                Ok((token, ExternalJob { name, submit_s, start_s }))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        self.external_next = snap::u64_from_json(external.get("next"))?;
+        self.external_records = crate::sim::records_from_json(external.get("records"))?;
+        Ok(())
     }
 
     // ---------------------------------------------------- server hooks
@@ -683,6 +1096,83 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
             .collect();
         LatencyStats::from_samples(&queue, &turn)
     }
+}
+
+/// A complete, serializable snapshot of an [`Orchestrator`]: every
+/// layer's snapshot (simulators with partition managers, belief ledger,
+/// policy, arrival stream, orchestration ledgers) composed into one
+/// plain-JSON document. Produced by [`Orchestrator::snapshot`],
+/// consumed by [`Orchestrator::restore`]; round-trips through text via
+/// [`to_json_string`](Self::to_json_string) /
+/// [`from_json_str`](Self::from_json_str).
+#[derive(Debug, Clone)]
+pub struct OrchestratorCheckpoint(pub Json);
+
+impl OrchestratorCheckpoint {
+    /// Serialize to a JSON string (for files / wire transfer).
+    pub fn to_json_string(&self) -> String {
+        self.0.to_string()
+    }
+
+    /// Parse a checkpoint back from its textual form.
+    pub fn from_json_str(s: &str) -> anyhow::Result<Self> {
+        Ok(OrchestratorCheckpoint(Json::parse(s)?))
+    }
+}
+
+fn plan_to_json(plan: &PartitionPlan) -> Json {
+    Json::Arr(
+        plan.ops()
+            .iter()
+            .map(|op| match op {
+                PlanOp::Destroy(id) => {
+                    Json::Arr(vec![Json::str("destroy"), Json::num(*id as f64)])
+                }
+                PlanOp::Create { profile, start } => Json::Arr(vec![
+                    Json::str("create"),
+                    Json::num(*profile as f64),
+                    match start {
+                        Some(s) => Json::num(*s as f64),
+                        None => Json::Null,
+                    },
+                ]),
+            })
+            .collect(),
+    )
+}
+
+fn plan_from_json(j: &Json) -> anyhow::Result<PartitionPlan> {
+    use anyhow::Context;
+    use crate::util::snap;
+    let ops = j
+        .as_arr()
+        .context("partition plan must be an array of ops")?
+        .iter()
+        .map(|op| {
+            let tag = op.at(0).as_str().context("plan op missing tag")?;
+            match tag {
+                "destroy" => {
+                    let id = snap::usize_from_json(op.at(1))?;
+                    anyhow::ensure!(id <= InstanceId::MAX as usize, "instance id out of range");
+                    Ok(PlanOp::Destroy(id as InstanceId))
+                }
+                "create" => {
+                    let profile = snap::usize_from_json(op.at(1))?;
+                    let start = match op.at(2) {
+                        Json::Null => None,
+                        v => {
+                            let s = snap::usize_from_json(v)?;
+                            anyhow::ensure!(s <= u8::MAX as usize, "start slice out of range");
+                            Some(s as u8)
+                        }
+                    };
+                    Ok(PlanOp::Create { profile, start })
+                }
+                other => anyhow::bail!("unknown plan op tag {other:?}"),
+            }
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(PartitionPlan::from_ops(ops))
 }
 
 #[cfg(test)]

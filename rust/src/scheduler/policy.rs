@@ -214,6 +214,69 @@ pub trait SchedulingPolicy {
 
     /// Whether the policy still holds jobs it has not yet launched.
     fn has_pending_work(&self) -> bool;
+
+    // ---------------------------------------------- checkpoint layer
+
+    /// Serialize the policy's internal state (queues, staging,
+    /// instance bookkeeping) as plain JSON for an
+    /// `OrchestratorCheckpoint`. Stateless policies keep the default
+    /// `Null`. Pending jobs serialize via
+    /// [`PendingJob::to_snap_json`](super::PendingJob::to_snap_json);
+    /// restore is only valid onto a policy built with the same knobs
+    /// (knob state is structural, not serialized).
+    fn snapshot_state(&self) -> crate::util::Json {
+        crate::util::Json::Null
+    }
+
+    /// Inverse of [`snapshot_state`](Self::snapshot_state): overwrite
+    /// this (freshly-built, same-knobs) policy's internal state. The
+    /// default accepts only the default `Null` snapshot.
+    fn restore_state(&mut self, snap: &crate::util::Json) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            snap.is_null(),
+            "policy {} does not implement state restore",
+            self.name()
+        );
+        Ok(())
+    }
+
+    // --------------------------------------------------- fault layer
+
+    /// GPU `gpu` died: its partition layout is gone and `lost` holds
+    /// the jobs that were running there (original submit times and
+    /// beliefs preserved — the paper's recovery scheme restarts them
+    /// like an OOM restart, re-deciding placement against current
+    /// beliefs). The default re-submits each lost job through
+    /// [`on_submit`](Self::on_submit); fleet-aware policies override to
+    /// also re-route their per-GPU backlog. The orchestrator has
+    /// already called [`drain_pending`](Self::drain_pending) seams on
+    /// fleet policies where applicable; `ctx` still exposes the dead
+    /// GPU's (wiped) state.
+    fn on_gpu_fault(&mut self, ctx: &PolicyCtx, gpu: GpuId, lost: Vec<PendingJob>) -> Vec<Action> {
+        let _ = gpu;
+        let mut out = Vec::new();
+        for job in lost {
+            out.extend(self.on_submit(ctx, job));
+        }
+        out
+    }
+
+    /// GPU `gpu` came back (empty, freshly wiped). Policies may
+    /// rebalance queued work onto it; the default does nothing (the
+    /// next submit/stall naturally reaches it).
+    fn on_gpu_restore(&mut self, _ctx: &PolicyCtx, _gpu: GpuId) -> Vec<Action> {
+        Vec::new()
+    }
+
+    /// Surrender every queued (not-yet-launched) job, clearing any
+    /// instance bookkeeping and reconfiguration-wait state tied to the
+    /// wiped partition layout. Fault path only: after a GPU dies
+    /// mid-plan its `ReconfigDone` never fires, so policies must also
+    /// reset any "waiting for window" latches here. The default
+    /// (stateless or externally-queued policies) returns nothing.
+    fn drain_pending(&mut self) -> Vec<PendingJob> {
+        Vec::new()
+    }
 }
 
 /// Boxed policies are policies, so heterogeneous fleets (and the
@@ -263,5 +326,25 @@ impl<P: SchedulingPolicy + ?Sized> SchedulingPolicy for Box<P> {
 
     fn has_pending_work(&self) -> bool {
         (**self).has_pending_work()
+    }
+
+    fn snapshot_state(&self) -> crate::util::Json {
+        (**self).snapshot_state()
+    }
+
+    fn restore_state(&mut self, snap: &crate::util::Json) -> anyhow::Result<()> {
+        (**self).restore_state(snap)
+    }
+
+    fn on_gpu_fault(&mut self, ctx: &PolicyCtx, gpu: GpuId, lost: Vec<PendingJob>) -> Vec<Action> {
+        (**self).on_gpu_fault(ctx, gpu, lost)
+    }
+
+    fn on_gpu_restore(&mut self, ctx: &PolicyCtx, gpu: GpuId) -> Vec<Action> {
+        (**self).on_gpu_restore(ctx, gpu)
+    }
+
+    fn drain_pending(&mut self) -> Vec<PendingJob> {
+        (**self).drain_pending()
     }
 }

@@ -285,6 +285,92 @@ impl SchedulingPolicy for SchemeAPolicy {
             || self.local.iter().any(|q| !q.is_empty())
             || self.groups.values().any(|q| !q.is_empty())
     }
+
+    fn snapshot_state(&self) -> Json {
+        let jobs =
+            |q: &VecDeque<PendingJob>| Json::Arr(q.iter().map(|j| j.to_snap_json()).collect());
+        Json::obj(vec![
+            (
+                "groups",
+                Json::Arr(
+                    self.groups
+                        .iter()
+                        .map(|(&class, q)| Json::Arr(vec![Json::num(class as f64), jobs(q)]))
+                        .collect(),
+                ),
+            ),
+            ("staged", jobs(&self.staged)),
+            ("reconfiguring", Json::Bool(self.reconfiguring)),
+            (
+                "instances",
+                Json::Arr(self.instances.iter().map(|&i| Json::num(i as f64)).collect()),
+            ),
+            ("local", Json::Arr(self.local.iter().map(jobs).collect())),
+        ])
+    }
+
+    fn restore_state(&mut self, snap: &Json) -> Result<()> {
+        use anyhow::Context;
+        let jobs = |v: &Json| -> Result<VecDeque<PendingJob>> {
+            v.as_arr()
+                .context("scheme-A snapshot: expected a job array")?
+                .iter()
+                .map(PendingJob::from_snap_json)
+                .collect()
+        };
+        self.groups = snap
+            .get("groups")
+            .as_arr()
+            .context("scheme-A snapshot missing groups")?
+            .iter()
+            .map(|pair| {
+                let class = crate::util::snap::usize_from_json(pair.at(0))?;
+                Ok((class, jobs(pair.at(1))?))
+            })
+            .collect::<Result<_>>()?;
+        self.staged = jobs(snap.get("staged"))?;
+        self.reconfiguring = match snap.get("reconfiguring") {
+            Json::Bool(b) => *b,
+            v => bail!("scheme-A snapshot: reconfiguring must be a bool, got {v}"),
+        };
+        self.instances = snap
+            .get("instances")
+            .as_arr()
+            .context("scheme-A snapshot missing instances")?
+            .iter()
+            .map(|v| {
+                let i = crate::util::snap::usize_from_json(v)?;
+                anyhow::ensure!(i <= InstanceId::MAX as usize, "instance id out of range");
+                Ok(i as InstanceId)
+            })
+            .collect::<Result<_>>()?;
+        self.local = snap
+            .get("local")
+            .as_arr()
+            .context("scheme-A snapshot missing local")?
+            .iter()
+            .map(jobs)
+            .collect::<Result<_>>()?;
+        Ok(())
+    }
+
+    fn drain_pending(&mut self) -> Vec<PendingJob> {
+        // Fault path: the class layout died with the partition; collect
+        // every queued job (class order, then staged wave, then static
+        // slot queues) and reset to the pre-first-class state.
+        let mut out = Vec::new();
+        for (_, q) in std::mem::take(&mut self.groups) {
+            out.extend(q);
+        }
+        out.extend(std::mem::take(&mut self.staged));
+        for q in &mut self.local {
+            out.extend(q.drain(..));
+        }
+        self.reconfiguring = false;
+        self.instances.clear();
+        self.local.clear();
+        out
+    }
 }
 
 /// Run Scheme A over the mix (batch or online).

@@ -286,6 +286,61 @@ impl SchedulingPolicy for SchemeBPolicy {
     fn has_pending_work(&self) -> bool {
         !self.queue.is_empty() || self.pending_launch.is_some()
     }
+
+    fn snapshot_state(&self) -> Json {
+        Json::obj(vec![
+            ("queue", Json::Arr(self.queue.iter().map(|j| j.to_snap_json()).collect())),
+            (
+                "idle",
+                Json::Arr(self.idle.iter().map(|&i| Json::num(i as f64)).collect()),
+            ),
+            (
+                "pending_launch",
+                match &self.pending_launch {
+                    Some(pj) => pj.to_snap_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    fn restore_state(&mut self, snap: &Json) -> Result<()> {
+        use anyhow::Context;
+        self.queue = snap
+            .get("queue")
+            .as_arr()
+            .context("scheme-B snapshot missing queue")?
+            .iter()
+            .map(PendingJob::from_snap_json)
+            .collect::<Result<_>>()?;
+        self.idle = snap
+            .get("idle")
+            .as_arr()
+            .context("scheme-B snapshot missing idle")?
+            .iter()
+            .map(|v| {
+                let i = crate::util::snap::usize_from_json(v)?;
+                anyhow::ensure!(i <= InstanceId::MAX as usize, "idle instance id out of range");
+                Ok(i as InstanceId)
+            })
+            .collect::<Result<_>>()?;
+        self.pending_launch = match snap.get("pending_launch") {
+            Json::Null => None,
+            v => Some(PendingJob::from_snap_json(v)?),
+        };
+        Ok(())
+    }
+
+    fn drain_pending(&mut self) -> Vec<PendingJob> {
+        // Fault path: every instance (idle or mid-creation) died with the
+        // partition layout; forget them all and hand back the jobs.
+        self.idle.clear();
+        let mut out: Vec<PendingJob> = self.queue.drain(..).collect();
+        if let Some(pj) = self.pending_launch.take() {
+            out.push(pj);
+        }
+        out
+    }
 }
 
 /// Run Scheme B over the mix (batch or online).

@@ -73,6 +73,26 @@
 //! event-sequence equivalence and makespan/energy agreement within a
 //! documented tolerance (1e-6 relative) on random mixes, horizons, and
 //! reconfig interleavings.
+//!
+//! # Checkpointing
+//!
+//! Both engines serialize their complete mid-run state —
+//! partition layout + open reconfiguration window, per-job phase
+//! progress (including virtual-service positions of in-flight
+//! transfers), calendars, accumulators, counters, records — into a
+//! [`GpuSimSnapshot`] / [`naive::NaiveSimSnapshot`] (plain
+//! [`Json`](crate::util::Json), no extra dependencies) and rebuild
+//! bit-exactly via [`GpuSim::restore`]. Iterative jobs snapshot their
+//! [`TraceSpec`](crate::trace::TraceSpec) + seed and regenerate the
+//! allocator trace on restore, so snapshots stay small. The
+//! correctness bar is `sim::resume_difftest`: run to a random horizon,
+//! snapshot, restore into a fresh engine, run to completion, and
+//! require event sequence, metrics, and observation stream to be
+//! byte-identical to the uninterrupted run — including snapshots taken
+//! inside reconfiguration windows and just before OOMs. The layer
+//! composes upward into
+//! [`OrchestratorCheckpoint`](crate::scheduler::OrchestratorCheckpoint)
+//! (warm-started tuning, fault injection).
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BinaryHeap, HashMap};
@@ -87,6 +107,9 @@ pub mod naive;
 
 #[cfg(test)]
 mod difftest;
+
+#[cfg(test)]
+mod resume_difftest;
 
 /// Simulator-local job handle.
 pub type JobId = usize;
@@ -392,6 +415,198 @@ pub(crate) fn bw_fraction(spec: &JobSpec) -> f64 {
     }
 }
 
+// ------------------------------------------------- checkpoint codecs
+//
+// Bit-exact JSON snapshot forms for the run state shared by both
+// engines. Floats go through `util::snap` (text round-trips preserve
+// every bit, including -0.0 and specials); realized allocator traces
+// are never serialized — an iterative job's `Running` carries its
+// `TraceSpec` + seed inside the `JobSpec`, and restore regenerates the
+// identical trace exactly like [`Running::launch`] does.
+
+pub(crate) fn op_to_json(op: &Op) -> crate::util::Json {
+    use crate::util::snap::f64_to_json;
+    use crate::util::Json;
+    match op {
+        Op::Fixed {
+            rem,
+            util,
+            gpcs_busy,
+            inflate,
+        } => Json::obj(vec![
+            ("k", Json::str("fixed")),
+            ("rem", f64_to_json(*rem)),
+            ("util", f64_to_json(*util)),
+            ("gpcs_busy", f64_to_json(*gpcs_busy)),
+            (
+                "inflate",
+                Json::str(match inflate {
+                    Inflate::None => "none",
+                    Inflate::Alloc => "alloc",
+                    Inflate::Free => "free",
+                }),
+            ),
+        ]),
+        Op::Pcie { fixed_rem, bw_rem } => Json::obj(vec![
+            ("k", Json::str("pcie")),
+            ("fixed_rem", f64_to_json(*fixed_rem)),
+            ("bw_rem", f64_to_json(*bw_rem)),
+        ]),
+        Op::IterKernel {
+            rem,
+            iter,
+            gpcs_busy,
+        } => Json::obj(vec![
+            ("k", Json::str("iter")),
+            ("rem", f64_to_json(*rem)),
+            ("iter", Json::num(*iter as f64)),
+            ("gpcs_busy", f64_to_json(*gpcs_busy)),
+        ]),
+    }
+}
+
+pub(crate) fn op_from_json(j: &crate::util::Json) -> anyhow::Result<Op> {
+    use crate::util::snap::{f64_from_json, usize_from_json};
+    match j.get("k").as_str() {
+        Some("fixed") => Ok(Op::Fixed {
+            rem: f64_from_json(j.get("rem"))?,
+            util: f64_from_json(j.get("util"))?,
+            gpcs_busy: f64_from_json(j.get("gpcs_busy"))?,
+            inflate: match j.get("inflate").as_str() {
+                Some("none") => Inflate::None,
+                Some("alloc") => Inflate::Alloc,
+                Some("free") => Inflate::Free,
+                other => anyhow::bail!("unknown inflate tag {other:?}"),
+            },
+        }),
+        Some("pcie") => Ok(Op::Pcie {
+            fixed_rem: f64_from_json(j.get("fixed_rem"))?,
+            bw_rem: f64_from_json(j.get("bw_rem"))?,
+        }),
+        Some("iter") => Ok(Op::IterKernel {
+            rem: f64_from_json(j.get("rem"))?,
+            iter: usize_from_json(j.get("iter"))?,
+            gpcs_busy: f64_from_json(j.get("gpcs_busy"))?,
+        }),
+        other => anyhow::bail!("unknown op tag {other:?}"),
+    }
+}
+
+pub(crate) fn running_to_json(r: &Running) -> crate::util::Json {
+    use crate::util::snap::{f64_to_json, u64_to_json};
+    use crate::util::Json;
+    Json::obj(vec![
+        ("spec", r.spec.to_snap_json()),
+        ("instance", Json::num(r.instance as f64)),
+        ("inst_mem_gb", f64_to_json(r.inst_mem_gb)),
+        ("inst_slices", Json::num(r.inst_slices as f64)),
+        ("ops", Json::Arr(r.ops.iter().map(op_to_json).collect())),
+        ("cursor", Json::num(r.cursor as f64)),
+        ("submit_time", f64_to_json(r.submit_time)),
+        ("start_time", f64_to_json(r.start_time)),
+        ("cur_mem_gb", f64_to_json(r.cur_mem_gb)),
+        ("token", u64_to_json(r.token)),
+        ("in_bw", Json::Bool(r.in_bw)),
+    ])
+}
+
+pub(crate) fn running_from_json(j: &crate::util::Json) -> anyhow::Result<Running> {
+    use crate::util::snap::{f64_from_json, u64_from_json, usize_from_json};
+    let spec = JobSpec::from_snap_json(j.get("spec"))?;
+    // Regenerate the realized trace exactly like `Running::launch`:
+    // deterministic per (TraceSpec, seed), so the restored engine
+    // replays bit-identical iterations.
+    let trace = match &spec.compute {
+        ComputeModel::Iterative(it) => Some(it.trace.generate(it.trace_seed)),
+        _ => None,
+    };
+    let ops = j
+        .get("ops")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected op array"))?
+        .iter()
+        .map(op_from_json)
+        .collect::<anyhow::Result<Vec<Op>>>()?;
+    let instance = usize_from_json(j.get("instance"))?;
+    anyhow::ensure!(instance <= InstanceId::MAX as usize);
+    let inst_slices = usize_from_json(j.get("inst_slices"))?;
+    anyhow::ensure!(inst_slices <= u8::MAX as usize);
+    Ok(Running {
+        spec,
+        instance: instance as InstanceId,
+        inst_mem_gb: f64_from_json(j.get("inst_mem_gb"))?,
+        inst_slices: inst_slices as u8,
+        ops,
+        cursor: usize_from_json(j.get("cursor"))?,
+        trace,
+        submit_time: f64_from_json(j.get("submit_time"))?,
+        start_time: f64_from_json(j.get("start_time"))?,
+        cur_mem_gb: f64_from_json(j.get("cur_mem_gb"))?,
+        token: u64_from_json(j.get("token"))?,
+        in_bw: j.get("in_bw").as_bool().unwrap_or(false),
+    })
+}
+
+pub(crate) fn record_to_json(r: &JobRecord) -> crate::util::Json {
+    use crate::util::snap::f64_to_json;
+    use crate::util::Json;
+    Json::obj(vec![
+        ("name", Json::str(&r.name)),
+        ("submit_time", f64_to_json(r.submit_time)),
+        ("start_time", f64_to_json(r.start_time)),
+        ("finish_time", f64_to_json(r.finish_time)),
+    ])
+}
+
+pub(crate) fn record_from_json(j: &crate::util::Json) -> anyhow::Result<JobRecord> {
+    use crate::util::snap::f64_from_json;
+    Ok(JobRecord {
+        name: j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("record missing name"))?
+            .to_string(),
+        submit_time: f64_from_json(j.get("submit_time"))?,
+        start_time: f64_from_json(j.get("start_time"))?,
+        finish_time: f64_from_json(j.get("finish_time"))?,
+    })
+}
+
+pub(crate) fn records_to_json(rs: &[JobRecord]) -> crate::util::Json {
+    crate::util::Json::Arr(rs.iter().map(record_to_json).collect())
+}
+
+pub(crate) fn records_from_json(j: &crate::util::Json) -> anyhow::Result<Vec<JobRecord>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected record array"))?
+        .iter()
+        .map(record_from_json)
+        .collect()
+}
+
+pub(crate) fn counters_to_json(c: &SimCounters) -> crate::util::Json {
+    use crate::util::snap::f64_to_json;
+    use crate::util::Json;
+    Json::obj(vec![
+        ("reconfig_ops", Json::num(c.reconfig_ops as f64)),
+        ("reconfig_windows", Json::num(c.reconfig_windows as f64)),
+        ("reconfig_time_s", f64_to_json(c.reconfig_time_s)),
+        ("oom_restarts", Json::num(c.oom_restarts as f64)),
+        ("early_restarts", Json::num(c.early_restarts as f64)),
+    ])
+}
+
+pub(crate) fn counters_from_json(j: &crate::util::Json) -> anyhow::Result<SimCounters> {
+    use crate::util::snap::{f64_from_json, usize_from_json};
+    Ok(SimCounters {
+        reconfig_ops: usize_from_json(j.get("reconfig_ops"))?,
+        reconfig_windows: usize_from_json(j.get("reconfig_windows"))?,
+        reconfig_time_s: f64_from_json(j.get("reconfig_time_s"))?,
+        oom_restarts: usize_from_json(j.get("oom_restarts"))?,
+        early_restarts: usize_from_json(j.get("early_restarts"))?,
+    })
+}
+
 /// Calendar entry: an absolute due instant (real seconds on the
 /// real-time calendar, virtual service on the virtual one) with a
 /// deterministic `(instant, JobId)` total order. `token` invalidates
@@ -424,6 +639,58 @@ impl Ord for CalKey {
             .then(self.job.cmp(&other.job))
             .then(self.token.cmp(&other.token))
     }
+}
+
+/// Serde-free JSON snapshot of a [`GpuSim`], produced by
+/// [`GpuSim::snapshot`]. One per GPU inside an
+/// `OrchestratorCheckpoint`.
+#[derive(Debug, Clone)]
+pub struct GpuSimSnapshot(pub crate::util::Json);
+
+/// Serialize a calendar's **live** entries (token matches the owning
+/// job's) in ascending key order: `[[t, job, token], ...]`. Stale
+/// lazily-invalidated entries are dropped — they are semantically
+/// absent, and filtering makes snapshot bytes independent of discard
+/// timing.
+fn cal_to_json(
+    heap: &BinaryHeap<Reverse<CalKey>>,
+    running: &HashMap<JobId, Running>,
+) -> crate::util::Json {
+    use crate::util::snap::{f64_to_json, u64_to_json};
+    use crate::util::Json;
+    let mut live: Vec<CalKey> = heap
+        .iter()
+        .map(|Reverse(k)| *k)
+        .filter(|k| running.get(&k.job).is_some_and(|r| r.token == k.token))
+        .collect();
+    live.sort();
+    Json::Arr(
+        live.into_iter()
+            .map(|k| {
+                Json::Arr(vec![
+                    f64_to_json(k.t),
+                    Json::num(k.job as f64),
+                    u64_to_json(k.token),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn cal_from_json(j: &crate::util::Json) -> anyhow::Result<BinaryHeap<Reverse<CalKey>>> {
+    use crate::util::snap::{f64_from_json, u64_from_json, usize_from_json};
+    let mut heap = BinaryHeap::new();
+    for row in j
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected calendar array"))?
+    {
+        heap.push(Reverse(CalKey {
+            t: f64_from_json(row.at(0))?,
+            job: usize_from_json(row.at(1))?,
+            token: u64_from_json(row.at(2))?,
+        }));
+    }
+    Ok(heap)
 }
 
 /// Pop stale entries off the top of a calendar; return the first live
@@ -973,6 +1240,143 @@ impl GpuSim {
         }
     }
 
+    // ---------------------------------------------- checkpoint layer
+
+    /// Serialize the complete engine state — clock, running jobs, both
+    /// event calendars, fair-queueing state, accumulators, counters,
+    /// records, and the partition manager — into a plain JSON snapshot.
+    /// Deterministic bytes: jobs sort by `JobId`, calendar entries by
+    /// their `(t, job, token)` key, and stale (lazily-invalidated)
+    /// calendar entries are filtered out, so
+    /// `restore(snapshot(x))` re-snapshots byte-identically. The spec,
+    /// reachability table, `observe` flag, and scratch buffers are
+    /// structural and not serialized.
+    pub fn snapshot(&self) -> GpuSimSnapshot {
+        use crate::util::snap::{f64_to_json, u64_to_json};
+        use crate::util::Json;
+        let mut ids: Vec<JobId> = self.running.keys().copied().collect();
+        ids.sort_unstable();
+        let running = Json::Arr(
+            ids.iter()
+                .map(|id| {
+                    Json::Arr(vec![
+                        Json::num(*id as f64),
+                        running_to_json(&self.running[id]),
+                    ])
+                })
+                .collect(),
+        );
+        GpuSimSnapshot(Json::obj(vec![
+            ("now", f64_to_json(self.now)),
+            ("running", running),
+            ("cal", cal_to_json(&self.cal, &self.running)),
+            ("vcal", cal_to_json(&self.vcal, &self.running)),
+            ("v_now", f64_to_json(self.v_now)),
+            ("n_bw", Json::num(self.n_bw as f64)),
+            ("active_sum", f64_to_json(self.active_sum)),
+            ("mem_sum", f64_to_json(self.mem_sum)),
+            ("token_counter", u64_to_json(self.token_counter)),
+            (
+                "reconfig_due",
+                match self.reconfig_due {
+                    Some(t) => f64_to_json(t),
+                    None => Json::Null,
+                },
+            ),
+            ("next_id", Json::num(self.next_id as f64)),
+            ("energy_j", f64_to_json(self.energy_j)),
+            ("mem_gb_integral", f64_to_json(self.mem_gb_integral)),
+            ("counters", counters_to_json(&self.counters)),
+            ("records", records_to_json(&self.records)),
+            ("mgr", self.mgr.snapshot().0),
+        ]))
+    }
+
+    /// Inverse of [`Self::snapshot`]: overwrite the engine state with
+    /// the snapshot's. The sim must have been built for the same
+    /// [`GpuSpec`]; continuation from the restored state is bit-exact
+    /// (asserted end-to-end by `sim::resume_difftest`).
+    pub fn restore(&mut self, snap: &GpuSimSnapshot) -> anyhow::Result<()> {
+        use crate::util::snap::{f64_from_json, u64_from_json, usize_from_json};
+        let j = &snap.0;
+        self.mgr
+            .restore(&crate::mig::PartitionSnapshot(j.get("mgr").clone()))?;
+        let mut running = HashMap::new();
+        let mut by_instance = HashMap::new();
+        for row in j
+            .get("running")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("expected running array"))?
+        {
+            let id: JobId = usize_from_json(row.at(0))?;
+            let r = running_from_json(row.at(1))?;
+            by_instance.insert(r.instance, id);
+            let prev = running.insert(id, r);
+            anyhow::ensure!(prev.is_none(), "duplicate job id {id} in snapshot");
+        }
+        self.cal = cal_from_json(j.get("cal"))?;
+        self.vcal = cal_from_json(j.get("vcal"))?;
+        self.running = running;
+        self.by_instance = by_instance;
+        self.now = f64_from_json(j.get("now"))?;
+        self.v_now = f64_from_json(j.get("v_now"))?;
+        self.n_bw = usize_from_json(j.get("n_bw"))?;
+        self.active_sum = f64_from_json(j.get("active_sum"))?;
+        self.mem_sum = f64_from_json(j.get("mem_sum"))?;
+        self.token_counter = u64_from_json(j.get("token_counter"))?;
+        self.reconfig_due = if j.get("reconfig_due").is_null() {
+            None
+        } else {
+            Some(f64_from_json(j.get("reconfig_due"))?)
+        };
+        self.next_id = usize_from_json(j.get("next_id"))?;
+        self.energy_j = f64_from_json(j.get("energy_j"))?;
+        self.mem_gb_integral = f64_from_json(j.get("mem_gb_integral"))?;
+        self.counters = counters_from_json(j.get("counters"))?;
+        self.records = records_from_json(j.get("records"))?;
+        self.due_scratch.clear();
+        Ok(())
+    }
+
+    // --------------------------------------------------- fault layer
+
+    /// Fault-injection: the GPU dies right now. Every running job is
+    /// unwound (ascending `JobId` order — deterministic) and returned
+    /// as `(id, spec, original_submit_time)` for the orchestrator to
+    /// re-queue; both calendars and any open reconfiguration window are
+    /// dropped. Energy/memory integrals and completion records survive
+    /// (work already done happened). `remove` squashes the activity
+    /// accumulators to exactly zero when the last job leaves, so a
+    /// later restart resumes from a clean engine.
+    pub fn fault_evacuate(&mut self) -> Vec<(JobId, JobSpec, f64)> {
+        let mut ids: Vec<JobId> = self.running.keys().copied().collect();
+        ids.sort_unstable();
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            let r = self.remove(id);
+            out.push((id, r.spec, r.submit_time));
+        }
+        self.cal.clear();
+        self.vcal.clear();
+        self.due_scratch.clear();
+        self.reconfig_due = None;
+        out
+    }
+
+    /// Advance a dead (evacuated, powered-off) GPU's clock to `t`
+    /// **without** accruing energy — a down GPU draws nothing, unlike
+    /// [`idle_until`](Self::idle_until)'s idle-power floor. Used by the
+    /// orchestrator while the GPU is down and at the restore instant.
+    pub fn power_on_at(&mut self, t: f64) {
+        assert!(
+            self.running.is_empty() && self.reconfig_due.is_none(),
+            "power_on_at on a busy sim"
+        );
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
     /// Test hook: inject a job whose op program is already exhausted
     /// (the dt=∞ regression class — unreachable via `launch`, which
     /// always compiles a non-empty program).
@@ -1432,6 +1836,92 @@ mod tests {
             assert!(s.now() >= last - 1e-12);
             last = s.now();
         }
+    }
+
+    #[test]
+    fn snapshot_mid_run_resumes_bit_identically() {
+        use crate::workloads::llm;
+        // Mixed load: a PCIe-contending pair plus an iterative job, cut
+        // mid-flight (inside bandwidth sharing), snapshotted through
+        // JSON text into a fresh sim, then both runs finish — clocks,
+        // energy, records, and re-snapshots must agree to the bit.
+        let build = || {
+            let mut s = GpuSim::new(Arc::new(GpuSpec::a100_40gb()), true);
+            let a = s.mgr.alloc(0).unwrap();
+            let b = s.mgr.alloc(0).unwrap();
+            let c = s.mgr.alloc(1).unwrap();
+            s.launch(rodinia::by_name("nw").unwrap().job(7), a, 0.0);
+            s.launch(rodinia::by_name("nw").unwrap().job(7), b, 0.0);
+            s.launch(llm::qwen2_7b().job(7), c, 0.0);
+            s
+        };
+        let mut full = build();
+        let mut cut = build();
+        // burn a few events on both, identically
+        for _ in 0..5 {
+            full.advance();
+            cut.advance();
+        }
+        let snap = cut.snapshot();
+        let text = snap.0.to_string();
+        let mut resumed = GpuSim::new(Arc::new(GpuSpec::a100_40gb()), true);
+        resumed
+            .restore(&GpuSimSnapshot(
+                crate::util::Json::parse(&text).unwrap(),
+            ))
+            .unwrap();
+        assert_eq!(
+            resumed.snapshot().0.to_string(),
+            text,
+            "restore() then snapshot() drifted"
+        );
+        loop {
+            let a = full.advance_with_horizon(None);
+            let b = resumed.advance_with_horizon(None);
+            assert_eq!(a.is_some(), b.is_some(), "event streams diverged");
+            assert_eq!(full.now().to_bits(), resumed.now().to_bits());
+            if a.is_none() {
+                break;
+            }
+        }
+        assert_eq!(full.energy_j().to_bits(), resumed.energy_j().to_bits());
+        assert_eq!(full.records.len(), resumed.records.len());
+        assert_eq!(
+            full.snapshot().0.to_string(),
+            resumed.snapshot().0.to_string()
+        );
+    }
+
+    #[test]
+    fn fault_evacuate_unwinds_everything_and_power_on_skips_energy() {
+        let mut s = sim();
+        let a = s.mgr.alloc(0).unwrap();
+        let b = s.mgr.alloc(0).unwrap();
+        s.launch(rodinia::by_name("nw").unwrap().job(7), a, 0.0);
+        s.launch(rodinia::by_name("gaussian").unwrap().job(7), b, 0.5);
+        for _ in 0..3 {
+            s.advance_with_horizon(Some(1.0));
+        }
+        let lost = s.fault_evacuate();
+        assert_eq!(lost.len(), 2);
+        assert_eq!(lost[0].0, 0, "evacuation is JobId-ordered");
+        assert_eq!(lost[1].0, 1);
+        assert!((lost[1].2 - 0.5).abs() < 1e-12, "submit time preserved");
+        assert_eq!(s.n_running(), 0);
+        assert!(!s.is_reconfiguring());
+        assert!(s.advance().is_none(), "nothing left to simulate");
+        // dead clock advance: time moves, energy does not
+        let e = s.energy_j();
+        let t = s.now();
+        s.power_on_at(t + 10.0);
+        assert!((s.now() - (t + 10.0)).abs() < 1e-12);
+        assert_eq!(s.energy_j().to_bits(), e.to_bits());
+        // the engine is reusable after the reboot
+        s.mgr.wipe();
+        let i = s.mgr.alloc(0).unwrap();
+        s.launch(rodinia::by_name("gaussian").unwrap().job(7), i, s.now());
+        while s.advance().is_some() {}
+        assert_eq!(s.records.len(), 1);
     }
 
     #[test]

@@ -404,6 +404,83 @@ impl NaiveGpuSim {
         }
     }
 
+    // ---------------------------------------------- checkpoint layer
+
+    /// Serialize the oracle's complete state into a plain JSON
+    /// snapshot (see [`super::GpuSim::snapshot`]). The naive engine's
+    /// decremented `rem` values are serialized as-is — they *are* the
+    /// progress state here; `token`/`in_bw` are unused by this engine
+    /// and round-trip as their launch defaults.
+    pub fn snapshot(&self) -> NaiveSimSnapshot {
+        use crate::util::snap::f64_to_json;
+        use crate::util::Json;
+        let running = Json::Arr(
+            self.run_order
+                .iter()
+                .map(|id| {
+                    Json::Arr(vec![
+                        Json::num(*id as f64),
+                        super::running_to_json(&self.running[id]),
+                    ])
+                })
+                .collect(),
+        );
+        NaiveSimSnapshot(Json::obj(vec![
+            ("now", f64_to_json(self.now)),
+            ("running", running),
+            (
+                "reconfig_rem",
+                match self.reconfig_rem {
+                    Some(t) => f64_to_json(t),
+                    None => Json::Null,
+                },
+            ),
+            ("next_id", Json::num(self.next_id as f64)),
+            ("energy_j", f64_to_json(self.energy_j)),
+            ("mem_gb_integral", f64_to_json(self.mem_gb_integral)),
+            ("counters", super::counters_to_json(&self.counters)),
+            ("records", super::records_to_json(&self.records)),
+            ("mgr", self.mgr.snapshot().0),
+        ]))
+    }
+
+    /// Inverse of [`Self::snapshot`]; continuation is bit-exact. The
+    /// `running` array preserves `run_order` (the oracle's
+    /// deterministic processing order), which restore reconstructs.
+    pub fn restore(&mut self, snap: &NaiveSimSnapshot) -> anyhow::Result<()> {
+        use crate::util::snap::{f64_from_json, usize_from_json};
+        let j = &snap.0;
+        self.mgr
+            .restore(&crate::mig::PartitionSnapshot(j.get("mgr").clone()))?;
+        let mut running = HashMap::new();
+        let mut run_order = Vec::new();
+        for row in j
+            .get("running")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("expected running array"))?
+        {
+            let id: JobId = usize_from_json(row.at(0))?;
+            let r = super::running_from_json(row.at(1))?;
+            run_order.push(id);
+            let prev = running.insert(id, r);
+            anyhow::ensure!(prev.is_none(), "duplicate job id {id} in snapshot");
+        }
+        self.running = running;
+        self.run_order = run_order;
+        self.now = f64_from_json(j.get("now"))?;
+        self.reconfig_rem = if j.get("reconfig_rem").is_null() {
+            None
+        } else {
+            Some(f64_from_json(j.get("reconfig_rem"))?)
+        };
+        self.next_id = usize_from_json(j.get("next_id"))?;
+        self.energy_j = f64_from_json(j.get("energy_j"))?;
+        self.mem_gb_integral = f64_from_json(j.get("mem_gb_integral"))?;
+        self.counters = super::counters_from_json(j.get("counters"))?;
+        self.records = super::records_from_json(j.get("records"))?;
+        Ok(())
+    }
+
     /// Test hook mirroring [`super::GpuSim::inject_empty_job_for_test`].
     #[cfg(test)]
     pub(crate) fn inject_empty_job_for_test(
@@ -424,6 +501,11 @@ impl NaiveGpuSim {
         id
     }
 }
+
+/// Serde-free JSON snapshot of a [`NaiveGpuSim`], produced by
+/// [`NaiveGpuSim::snapshot`].
+#[derive(Debug, Clone)]
+pub struct NaiveSimSnapshot(pub crate::util::Json);
 
 #[cfg(test)]
 mod tests {
@@ -459,6 +541,42 @@ mod tests {
         assert!(s.advance().is_none());
         assert!(s.energy_j().is_finite());
         assert_eq!(s.records.len(), 1);
+    }
+
+    #[test]
+    fn oracle_snapshot_mid_run_resumes_bit_identically() {
+        use crate::workloads::llm;
+        let build = || {
+            let mut s = NaiveGpuSim::new(Arc::new(GpuSpec::a100_40gb()), true);
+            let a = s.mgr.alloc(0).unwrap();
+            let b = s.mgr.alloc(1).unwrap();
+            s.launch(rodinia::by_name("nw").unwrap().job(7), a, 0.0);
+            s.launch(llm::qwen2_7b().job(7), b, 0.0);
+            s
+        };
+        let mut full = build();
+        let mut cut = build();
+        for _ in 0..4 {
+            full.advance();
+            cut.advance();
+        }
+        let text = cut.snapshot().0.to_string();
+        let mut resumed = NaiveGpuSim::new(Arc::new(GpuSpec::a100_40gb()), true);
+        resumed
+            .restore(&NaiveSimSnapshot(crate::util::Json::parse(&text).unwrap()))
+            .unwrap();
+        assert_eq!(resumed.snapshot().0.to_string(), text);
+        loop {
+            let x = full.advance();
+            let y = resumed.advance();
+            assert_eq!(x.is_some(), y.is_some());
+            assert_eq!(full.now().to_bits(), resumed.now().to_bits());
+            if x.is_none() {
+                break;
+            }
+        }
+        assert_eq!(full.energy_j().to_bits(), resumed.energy_j().to_bits());
+        assert_eq!(full.records.len(), resumed.records.len());
     }
 
     #[test]

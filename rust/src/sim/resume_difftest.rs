@@ -1,0 +1,270 @@
+//! The resume difftest: checkpoint/restore must be **invisible**.
+//!
+//! Contract: run a scenario to an arbitrary step boundary, serialize
+//! the whole orchestrator through
+//! [`OrchestratorCheckpoint::to_json_string`], rebuild a *fresh*
+//! orchestrator (which never saw a submission), restore, and run to
+//! completion — the final metrics, records, counters, latency
+//! percentiles, and belief/observation state must be byte-identical to
+//! the uninterrupted run.
+//!
+//! The check works by induction on the step sequence. At every probed
+//! instant we first assert `snapshot(restore(s)) == s` textually — the
+//! restored orchestrator is in the *same* state, so every subsequent
+//! event (calendar pops, OOM restarts, reconfig completions, belief
+//! observations) replays identically — and then assert the final
+//! fingerprint, which folds in the terminal snapshot plus the bit
+//! patterns of the derived report. Snapshot instants are step
+//! boundaries (see `Orchestrator::run_steps`): no power-integration
+//! interval is ever split, so not even floating-point summation order
+//! changes.
+//!
+//! Coverage: a probe run locates every mid-reconfiguration instant (an
+//! open reconfig window is in flight at the boundary) and every
+//! mid-OOM instant (the boundary right after an OOM restart, with the
+//! grown job back in policy state); the sweep pins a spread of both,
+//! plus endpoints and seeded-random fill, across specs × seeds ×
+//! policies (baseline, Scheme A, Scheme B, and the heterogeneous
+//! fleet).
+
+use std::sync::Arc;
+
+use crate::fleet::{FleetKnobs, FleetPolicy};
+use crate::mig::GpuSpec;
+use crate::scheduler::baseline::BaselinePolicy;
+use crate::scheduler::scheme_a::SchemeAPolicy;
+use crate::scheduler::scheme_b::SchemeBPolicy;
+use crate::scheduler::{Orchestrator, OrchestratorCheckpoint, SchedulingPolicy, SchemeBKnobs};
+use crate::util::Rng;
+use crate::workloads::{dnn, mix, rodinia};
+
+/// Terminal fingerprint: the full state snapshot (records, counters,
+/// energy, clocks, beliefs, policy state) plus the bit patterns of the
+/// derived report — "byte-identical" means this string is equal.
+fn final_state<P: SchedulingPolicy>(orch: &Orchestrator<P>) -> String {
+    let r = orch.fleet_result();
+    format!(
+        "{}|makespan={:016x}|energy={:016x}|tput={:016x}|p99q={:016x}|p99t={:016x}|n={}",
+        orch.snapshot().to_json_string(),
+        r.metrics.makespan_s.to_bits(),
+        r.metrics.energy_j.to_bits(),
+        r.metrics.throughput_jps.to_bits(),
+        r.latency.p99_queue_s.to_bits(),
+        r.latency.p99_turnaround_s.to_bits(),
+        r.records.len(),
+    )
+}
+
+/// First / middle / last of a sorted instant list (dedup happens at the
+/// call site).
+fn spread(xs: &[usize]) -> Vec<usize> {
+    match xs.len() {
+        0 => Vec::new(),
+        1 => vec![xs[0]],
+        n => vec![xs[0], xs[n / 2], xs[n - 1]],
+    }
+}
+
+/// Run the full snapshot → serialize → fresh-restore → resume sweep
+/// for one scenario. `build` constructs the orchestrator structurally
+/// (no submissions), `seed_jobs` loads the workload.
+fn check_scenario<P, B, S>(
+    name: &str,
+    build: B,
+    seed_jobs: S,
+    rng_seed: u64,
+    expect_reconfig: bool,
+    expect_oom: bool,
+) where
+    P: SchedulingPolicy,
+    B: Fn() -> Orchestrator<P>,
+    S: Fn(&mut Orchestrator<P>),
+{
+    // Reference: one uninterrupted run.
+    let mut reference = build();
+    seed_jobs(&mut reference);
+    reference.run_to_completion();
+    let want = final_state(&reference);
+
+    // Probe: count step boundaries and locate the interesting instants.
+    let mut probe = build();
+    seed_jobs(&mut probe);
+    let mut total = 0usize;
+    let mut reconfig_steps = Vec::new();
+    let mut oom_steps = Vec::new();
+    let mut oom_seen = 0usize;
+    while probe.run_steps(1) {
+        total += 1;
+        if (0..probe.n_gpus()).any(|g| probe.gpu(g).is_reconfiguring()) {
+            reconfig_steps.push(total);
+        }
+        let ooms: usize = (0..probe.n_gpus())
+            .map(|g| probe.gpu(g).counters.oom_restarts)
+            .sum();
+        if ooms > oom_seen {
+            oom_steps.push(total);
+            oom_seen = ooms;
+        }
+    }
+    assert!(total > 2, "{name}: degenerate scenario ({total} steps)");
+    assert_eq!(
+        final_state(&probe),
+        want,
+        "{name}: single-stepping diverged from run_to_completion"
+    );
+    if expect_reconfig {
+        assert!(
+            !reconfig_steps.is_empty(),
+            "{name}: no mid-reconfig instant to cover"
+        );
+    }
+    if expect_oom {
+        assert!(!oom_steps.is_empty(), "{name}: no mid-OOM instant to cover");
+    }
+
+    // Snapshot instants: endpoints, a spread of each hazard flavor,
+    // seeded-random fill.
+    let mut instants = vec![1, total / 2, total];
+    instants.extend(spread(&reconfig_steps));
+    instants.extend(spread(&oom_steps));
+    let mut rng = Rng::new(rng_seed);
+    while instants.len() < 16 {
+        instants.push(rng.range(1, total + 1));
+    }
+    instants.sort_unstable();
+    instants.dedup();
+
+    for &k in &instants {
+        let mut source = build();
+        seed_jobs(&mut source);
+        source.run_steps(k);
+        let ckpt_str = source.snapshot().to_json_string();
+        // Round-trip through text: the checkpoint must be
+        // self-contained (no shared structure with the source run).
+        let ckpt = OrchestratorCheckpoint::from_json_str(&ckpt_str)
+            .unwrap_or_else(|e| panic!("{name}: checkpoint at step {k} unparseable: {e}"));
+        let mut resumed = build(); // fresh — never saw a submission
+        resumed
+            .restore(&ckpt)
+            .unwrap_or_else(|e| panic!("{name}: restore at step {k} failed: {e}"));
+        assert_eq!(
+            resumed.snapshot().to_json_string(),
+            ckpt_str,
+            "{name}: snapshot(restore(s)) != s at step {k}"
+        );
+        resumed.run_to_completion();
+        assert_eq!(
+            final_state(&resumed),
+            want,
+            "{name}: resume at step {k} diverged from the uninterrupted run"
+        );
+    }
+}
+
+#[test]
+fn baseline_on_a30_resumes_bit_identically() {
+    let spec = Arc::new(GpuSpec::a30_24gb());
+    let m = mix::preliminary_a30(7);
+    check_scenario(
+        "baseline/a30/preliminary",
+        {
+            let spec = spec.clone();
+            move || Orchestrator::single(spec.clone(), false, BaselinePolicy::new())
+        },
+        move |orch| orch.submit_mix(&m),
+        0xB45E,
+        false,
+        false,
+    );
+}
+
+#[test]
+fn scheme_a_mid_reconfig_resumes_bit_identically() {
+    let spec = Arc::new(GpuSpec::a100_40gb());
+    let m = mix::ht1(7);
+    check_scenario(
+        "scheme_a/a100/ht1",
+        {
+            let spec = spec.clone();
+            move || Orchestrator::single(spec.clone(), false, SchemeAPolicy::new(spec.clone()))
+        },
+        move |orch| orch.submit_mix(&m),
+        0xA11A,
+        true,
+        false,
+    );
+}
+
+#[test]
+fn scheme_b_mid_oom_resumes_bit_identically_across_seeds() {
+    for seed in [7u64, 11] {
+        let spec = Arc::new(GpuSpec::a100_40gb());
+        let m = mix::ml1(seed);
+        check_scenario(
+            &format!("scheme_b/a100/ml1/seed{seed}"),
+            {
+                let spec = spec.clone();
+                move || Orchestrator::single(spec.clone(), false, SchemeBPolicy::new(spec.clone()))
+            },
+            move |orch| orch.submit_mix(&m),
+            0xB000 + seed,
+            false,
+            true,
+        );
+    }
+}
+
+#[test]
+fn scheme_b_with_prediction_resumes_bit_identically() {
+    // Prediction on: per-iteration MemObserved events feed the belief
+    // ledger, so this pins the observation stream across the resume.
+    let spec = Arc::new(GpuSpec::a100_40gb());
+    let m = mix::ml2(7);
+    check_scenario(
+        "scheme_b+pred/a100/ml2",
+        {
+            let spec = spec.clone();
+            move || Orchestrator::single(spec.clone(), true, SchemeBPolicy::new(spec.clone()))
+        },
+        move |orch| orch.submit_mix(&m),
+        0xBBED,
+        false,
+        false,
+    );
+}
+
+#[test]
+fn hetero_fleet_with_staggered_arrivals_resumes_bit_identically() {
+    let specs = vec![
+        Arc::new(GpuSpec::a30_24gb()),
+        Arc::new(GpuSpec::a100_40gb()),
+        Arc::new(GpuSpec::h100_80gb()),
+    ];
+    let long = rodinia::by_name("euler3d").unwrap().job(7);
+    let short = rodinia::by_name("bfs").unwrap().job(7);
+    let dyn_job = dnn::bert_small_train().job();
+    let jobs: Vec<_> = (0..5)
+        .flat_map(|_| [long.clone(), short.clone(), dyn_job.clone()])
+        .collect();
+    check_scenario(
+        "fleet/hetero/staggered",
+        {
+            let specs = specs.clone();
+            move || {
+                Orchestrator::new(
+                    specs.clone(),
+                    true,
+                    FleetPolicy::scheme_b(&specs, FleetKnobs::balanced(), SchemeBKnobs::default()),
+                )
+            }
+        },
+        move |orch| {
+            for (i, j) in jobs.iter().enumerate() {
+                orch.submit_at(j.clone(), i as f64 * 0.6);
+            }
+        },
+        0xF1EE,
+        false,
+        false,
+    );
+}

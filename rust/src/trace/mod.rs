@@ -90,6 +90,39 @@ impl TraceSpec {
     pub fn mean_peak_gb(&self) -> f64 {
         self.mean_phys_gb(self.n_iters.saturating_sub(1))
     }
+
+    /// Bit-exact snapshot form. Traces themselves are never serialized:
+    /// a checkpointed job stores its `TraceSpec` + seed and regenerates
+    /// the identical [`AllocatorTrace`] on restore ([`Self::generate`]
+    /// is deterministic per seed).
+    pub fn to_snap_json(&self) -> crate::util::Json {
+        use crate::util::snap::f64_to_json;
+        crate::util::Json::obj(vec![
+            ("base_gb", f64_to_json(self.base_gb)),
+            ("growth_gb_per_iter", f64_to_json(self.growth_gb_per_iter)),
+            ("noise_sigma_gb", f64_to_json(self.noise_sigma_gb)),
+            ("inv_reuse_base", f64_to_json(self.inv_reuse_base)),
+            ("inv_reuse_growth", f64_to_json(self.inv_reuse_growth)),
+            ("inv_reuse_noise", f64_to_json(self.inv_reuse_noise)),
+            ("n_iters", crate::util::Json::num(self.n_iters as f64)),
+            ("context_gb", f64_to_json(self.context_gb)),
+        ])
+    }
+
+    /// Inverse of [`Self::to_snap_json`].
+    pub fn from_snap_json(j: &crate::util::Json) -> anyhow::Result<TraceSpec> {
+        use crate::util::snap::{f64_from_json, usize_from_json};
+        Ok(TraceSpec {
+            base_gb: f64_from_json(j.get("base_gb"))?,
+            growth_gb_per_iter: f64_from_json(j.get("growth_gb_per_iter"))?,
+            noise_sigma_gb: f64_from_json(j.get("noise_sigma_gb"))?,
+            inv_reuse_base: f64_from_json(j.get("inv_reuse_base"))?,
+            inv_reuse_growth: f64_from_json(j.get("inv_reuse_growth"))?,
+            inv_reuse_noise: f64_from_json(j.get("inv_reuse_noise"))?,
+            n_iters: usize_from_json(j.get("n_iters"))?,
+            context_gb: f64_from_json(j.get("context_gb"))?,
+        })
+    }
 }
 
 impl AllocatorTrace {
@@ -191,5 +224,17 @@ mod tests {
         };
         assert_eq!(s.generate(4).oom_iter(5.0), None);
         assert_eq!(s.mean_oom_iter(5.0), None);
+    }
+
+    #[test]
+    fn snap_roundtrip_regenerates_identical_traces() {
+        use crate::util::Json;
+        let s = qwen2ish();
+        let text = s.to_snap_json().to_string();
+        let back = TraceSpec::from_snap_json(&Json::parse(&text).unwrap()).unwrap();
+        let (a, b) = (s.generate(9), back.generate(9));
+        assert_eq!(a.phys_gb, b.phys_gb);
+        assert_eq!(a.req_gb, b.req_gb);
+        assert_eq!(a.reuse_ratio, b.reuse_ratio);
     }
 }

@@ -30,7 +30,7 @@ use crate::metrics::BatchMetrics;
 use crate::mig::GpuSpec;
 use crate::scheduler::{
     baseline::BaselinePolicy, scheme_a::SchemeAPolicy, scheme_b::SchemeBPolicy, Orchestrator,
-    RunResult, SchedulingPolicy,
+    OrchestratorCheckpoint, RunResult, SchedulingPolicy,
 };
 use crate::workloads::mix::{self, Mix};
 use crate::workloads::rodinia;
@@ -193,6 +193,30 @@ fn shard_for(cand: &Candidate, spec: &Arc<GpuSpec>, gpu: usize) -> Box<dyn Sched
     }
 }
 
+/// Build the orchestrator for one candidate × scenario *structurally*
+/// — specs, per-GPU shard policies, belief config, no submissions.
+/// This is both the cold-start shape and the shape a
+/// [`ScenarioProgress`] checkpoint restores into.
+fn orchestrator_for(
+    cand: &Candidate,
+    scen: &Scenario,
+) -> Orchestrator<FleetPolicy<Box<dyn SchedulingPolicy>>> {
+    let shards: Vec<Box<dyn SchedulingPolicy>> = scen
+        .specs
+        .iter()
+        .enumerate()
+        .map(|(g, spec)| shard_for(cand, spec, g))
+        .collect();
+    Orchestrator::with_belief_config(
+        scen.specs.clone(),
+        BeliefConfig {
+            prediction: cand.prediction,
+            knobs: cand.belief,
+        },
+        FleetPolicy::new(shards, cand.fleet.clone()),
+    )
+}
+
 /// Run one candidate over one scenario through the real orchestrator
 /// (fleet routing per the candidate's [`FleetKnobs`](crate::fleet::FleetKnobs),
 /// arrival queue, transactional reconfiguration windows) and return the
@@ -200,21 +224,7 @@ fn shard_for(cand: &Candidate, spec: &Arc<GpuSpec>, gpu: usize) -> Box<dyn Sched
 /// round-robin `ShardedPolicy` deal bit for bit, so pre-v3 scores are
 /// unchanged.
 pub fn run_candidate(cand: &Candidate, scen: &Scenario) -> RunResult {
-    let shards: Vec<Box<dyn SchedulingPolicy>> = scen
-        .specs
-        .iter()
-        .enumerate()
-        .map(|(g, spec)| shard_for(cand, spec, g))
-        .collect();
-    let policy = FleetPolicy::new(shards, cand.fleet.clone());
-    let mut orch = Orchestrator::with_belief_config(
-        scen.specs.clone(),
-        BeliefConfig {
-            prediction: cand.prediction,
-            knobs: cand.belief,
-        },
-        policy,
-    );
+    let mut orch = orchestrator_for(cand, scen);
     orch.submit_mix(&scen.mix_for(cand));
     orch.run_to_completion();
     orch.fleet_result()
@@ -374,6 +384,256 @@ pub fn evaluate_all(
         .collect()
 }
 
+/// Whether the halving evaluator resumes checkpoints or re-simulates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WarmMode {
+    /// Resume each candidate's checkpoint from the previous horizon.
+    Warm,
+    /// Rebuild from t=0 every round, replaying the warm path's full
+    /// `run_until` horizon schedule so both modes split every
+    /// power-integration interval at identical instants — which is
+    /// what makes the two reports byte-identical.
+    Cold,
+}
+
+/// Simulation-reuse counters accumulated over a sweep.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EvalStats {
+    /// Orchestrators built and simulated from t=0.
+    pub from_zero: usize,
+    /// Checkpoints resumed instead of re-simulated from t=0.
+    pub resumed: usize,
+    /// Drained runs whose stored final result was reused outright
+    /// (the requested horizon already covered the whole run).
+    pub reused: usize,
+}
+
+impl EvalStats {
+    pub fn merge(&mut self, o: EvalStats) {
+        self.from_zero += o.from_zero;
+        self.resumed += o.resumed;
+        self.reused += o.reused;
+    }
+}
+
+/// One candidate × scenario's saved evaluation state across halving
+/// rounds.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioProgress {
+    /// Live run state at the last horizon (`None` before the first
+    /// round and after the run drains).
+    pub checkpoint: Option<OrchestratorCheckpoint>,
+    /// Final result, set once the run drained at or before a horizon.
+    /// Later (longer) horizons reuse it instead of re-simulating — the
+    /// horizon ≥ makespan guard: a partial run that drained *is* the
+    /// full run.
+    pub result: Option<RunResult>,
+    /// The `run_until` schedule executed so far; cold mode replays it
+    /// from t=0 so warm and cold cross identical integration
+    /// boundaries.
+    pub horizons: Vec<f64>,
+}
+
+/// Per-candidate progress, index-aligned with the sweep's scenarios.
+#[derive(Debug, Clone)]
+pub struct CandidateProgress {
+    pub per_scenario: Vec<ScenarioProgress>,
+}
+
+impl CandidateProgress {
+    /// Progress for a candidate that has not been simulated yet.
+    pub fn fresh(n_scenarios: usize) -> Self {
+        CandidateProgress {
+            per_scenario: vec![ScenarioProgress::default(); n_scenarios],
+        }
+    }
+}
+
+#[derive(Default)]
+struct StatCounters {
+    from_zero: AtomicUsize,
+    resumed: AtomicUsize,
+    reused: AtomicUsize,
+}
+
+/// Advance one candidate × scenario to `horizon` (`None` = run to
+/// completion), updating `sp` in place. Warm mode resumes `sp`'s
+/// checkpoint; cold mode rebuilds from t=0 and replays `sp.horizons`.
+/// Either way the returned result is bitwise identical — resuming is
+/// `restore(snapshot(x)) == x` plus the same `run_until` boundaries.
+fn advance_scenario(
+    cand: &Candidate,
+    scen: &Scenario,
+    sp: &mut ScenarioProgress,
+    horizon: Option<f64>,
+    mode: WarmMode,
+    counters: &StatCounters,
+) -> RunResult {
+    if mode == WarmMode::Warm {
+        if let Some(r) = &sp.result {
+            // The run already drained on an earlier (shorter) horizon:
+            // its result is final — never score it by re-simulating.
+            counters.reused.fetch_add(1, Ordering::Relaxed);
+            if let Some(h) = horizon {
+                sp.horizons.push(h);
+            }
+            return r.clone();
+        }
+    }
+    let mut orch = orchestrator_for(cand, scen);
+    let mut live = true;
+    match (mode, sp.checkpoint.as_ref()) {
+        (WarmMode::Warm, Some(ckpt)) => {
+            orch.restore(ckpt).expect("own checkpoint restores");
+            counters.resumed.fetch_add(1, Ordering::Relaxed);
+        }
+        _ => {
+            orch.submit_mix(&scen.mix_for(cand));
+            counters.from_zero.fetch_add(1, Ordering::Relaxed);
+            if mode == WarmMode::Cold {
+                for &h in &sp.horizons {
+                    if !orch.run_until(h) {
+                        live = false;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    match horizon {
+        Some(h) => {
+            if live {
+                live = orch.run_until(h);
+            }
+            sp.horizons.push(h);
+            if live {
+                sp.checkpoint = Some(orch.snapshot());
+                orch.fleet_result_partial(h)
+            } else {
+                sp.checkpoint = None;
+                let r = orch.fleet_result();
+                sp.result = Some(r.clone());
+                r
+            }
+        }
+        None => {
+            orch.run_to_completion();
+            sp.checkpoint = None;
+            let r = orch.fleet_result();
+            sp.result = Some(r.clone());
+            r
+        }
+    }
+}
+
+/// Advance one candidate over every scenario (fixed order) and score
+/// the partial (or final) results against the *full-run* reference
+/// stats — every round normalizes against the same fixed yardstick.
+fn advance_candidate(
+    cand: &Candidate,
+    scens: &[Scenario],
+    refs: &[ScenarioRef],
+    prog: &mut CandidateProgress,
+    horizons: Option<&[f64]>,
+    mode: WarmMode,
+    counters: &StatCounters,
+) -> CandidateResult {
+    let mut outcomes = Vec::with_capacity(scens.len());
+    let mut sum = 0.0;
+    for (j, (scen, reference)) in scens.iter().zip(refs).enumerate() {
+        let r = advance_scenario(
+            cand,
+            scen,
+            &mut prog.per_scenario[j],
+            horizons.map(|h| h[j]),
+            mode,
+            counters,
+        );
+        let score = score_vs(&r, reference);
+        sum += score;
+        outcomes.push(ScenarioOutcome {
+            scenario: scen.name.clone(),
+            score,
+            metrics: r.metrics,
+            p99_turnaround_s: r.latency.p99_turnaround_s,
+        });
+    }
+    CandidateResult {
+        candidate: cand.clone(),
+        objective: sum / scens.len().max(1) as f64,
+        outcomes,
+    }
+}
+
+type Advanced = (CandidateResult, CandidateProgress);
+
+/// The warm-start evaluator: advance every candidate to the
+/// per-scenario `horizons` (or to completion when `None`), fanning out
+/// over `threads` workers exactly like [`evaluate_all`]. Consumes the
+/// candidates' progress and returns it updated (index-aligned), plus
+/// this call's [`EvalStats`]. Bitwise deterministic for any thread
+/// count — each candidate's advance is self-contained and lands in its
+/// own slot.
+pub fn advance_all(
+    cands: &[Candidate],
+    scens: &[Scenario],
+    refs: &[ScenarioRef],
+    progress: Vec<CandidateProgress>,
+    horizons: Option<&[f64]>,
+    mode: WarmMode,
+    threads: usize,
+) -> (Vec<CandidateResult>, Vec<CandidateProgress>, EvalStats) {
+    assert_eq!(
+        cands.len(),
+        progress.len(),
+        "progress must align with candidates"
+    );
+    if let Some(hs) = horizons {
+        assert_eq!(hs.len(), scens.len(), "horizons must align with scenarios");
+    }
+    let threads = threads.clamp(1, cands.len().max(1));
+    let inputs: Vec<Mutex<Option<CandidateProgress>>> =
+        progress.into_iter().map(|p| Mutex::new(Some(p))).collect();
+    let slots: Vec<Mutex<Option<Advanced>>> = cands.iter().map(|_| Mutex::new(None)).collect();
+    let counters = StatCounters::default();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cands.len() {
+                    break;
+                }
+                let mut prog = inputs[i].lock().unwrap().take().expect("progress taken once");
+                let r = advance_candidate(
+                    &cands[i],
+                    scens,
+                    refs,
+                    &mut prog,
+                    horizons,
+                    mode,
+                    &counters,
+                );
+                *slots[i].lock().unwrap() = Some((r, prog));
+            });
+        }
+    });
+    let stats = EvalStats {
+        from_zero: counters.from_zero.load(Ordering::Relaxed),
+        resumed: counters.resumed.load(Ordering::Relaxed),
+        reused: counters.reused.load(Ordering::Relaxed),
+    };
+    let (results, progress) = slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("no worker panicked")
+                .expect("every slot advanced")
+        })
+        .unzip();
+    (results, progress, stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -455,6 +715,121 @@ mod tests {
         assert_eq!(ratio(3.0, 0.0), COMPONENT_CAP);
         assert_eq!(ratio(30.0, 1.0), COMPONENT_CAP);
         assert!((ratio(3.0, 2.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drained_progress_is_reused_not_resimulated() {
+        // The horizon ≥ makespan guard: once a truncated-horizon run
+        // drains, its stored final result is final — later rounds (and
+        // the full-horizon finale) must reuse it, never re-simulate and
+        // never double-score a *partial* snapshot of a finished run.
+        let scens = vec![Scenario::synthetic_fleet(1, 5)];
+        let refs = reference_stats(&scens);
+        let cands = vec![Candidate::reference()];
+        let fresh = vec![CandidateProgress::fresh(scens.len())];
+
+        let (r1, prog, s1) = advance_all(
+            &cands,
+            &scens,
+            &refs,
+            fresh,
+            Some(&[1e6]),
+            WarmMode::Warm,
+            1,
+        );
+        assert_eq!(
+            s1,
+            EvalStats {
+                from_zero: 1,
+                resumed: 0,
+                reused: 0
+            }
+        );
+        let sp = &prog[0].per_scenario[0];
+        assert!(sp.result.is_some(), "run drained inside the huge horizon");
+        assert!(sp.checkpoint.is_none(), "drained runs carry no checkpoint");
+        // Drained at a truncated horizon means the partial result IS the
+        // final result — the reference scores exactly 1.0.
+        assert_eq!(r1[0].objective.to_bits(), 1.0f64.to_bits());
+
+        let (r2, prog, s2) = advance_all(
+            &cands,
+            &scens,
+            &refs,
+            prog,
+            Some(&[2e6]),
+            WarmMode::Warm,
+            1,
+        );
+        assert_eq!(
+            s2,
+            EvalStats {
+                from_zero: 0,
+                resumed: 0,
+                reused: 1
+            },
+            "longer horizon over a drained run must reuse, not re-simulate"
+        );
+        assert_eq!(r1[0].objective.to_bits(), r2[0].objective.to_bits());
+
+        let (r3, _prog, s3) = advance_all(&cands, &scens, &refs, prog, None, WarmMode::Warm, 1);
+        assert_eq!(s3.reused, 1, "the full-horizon finale reuses too");
+        assert_eq!(s3.from_zero, 0);
+        assert_eq!(r1[0].objective.to_bits(), r3[0].objective.to_bits());
+    }
+
+    #[test]
+    fn warm_advance_is_thread_count_invariant_and_checkpoints_roundtrip() {
+        // Property: snapshot → JSON → restore round-trips bit-identically
+        // and the evaluator's outputs (results, checkpoints, stats) are
+        // invariant to the worker thread count.
+        let scens = vec![Scenario::synthetic_fleet(1, 5), Scenario::hetero_fleet(5)];
+        let (refs, ref_result) = reference_results(&scens);
+        let horizons: Vec<f64> = ref_result
+            .outcomes
+            .iter()
+            .map(|o| o.metrics.makespan_s * 0.5)
+            .collect();
+        let mut cands = super::super::space::ParamSpace::smoke().grid().unwrap();
+        cands.truncate(4);
+
+        let run = |threads: usize| {
+            let fresh: Vec<CandidateProgress> = cands
+                .iter()
+                .map(|_| CandidateProgress::fresh(scens.len()))
+                .collect();
+            advance_all(
+                &cands,
+                &scens,
+                &refs,
+                fresh,
+                Some(&horizons),
+                WarmMode::Warm,
+                threads,
+            )
+        };
+        let (res1, prog1, stats1) = run(1);
+        let (res4, prog4, stats4) = run(4);
+        assert_eq!(stats1, stats4);
+        let mut any_live = false;
+        for i in 0..cands.len() {
+            assert_eq!(res1[i].objective.to_bits(), res4[i].objective.to_bits());
+            for (a, b) in prog1[i].per_scenario.iter().zip(&prog4[i].per_scenario) {
+                match (&a.checkpoint, &b.checkpoint) {
+                    (Some(ca), Some(cb)) => {
+                        any_live = true;
+                        let sa = ca.to_json_string();
+                        assert_eq!(sa, cb.to_json_string());
+                        // JSON round-trip is bit-exact.
+                        let back = OrchestratorCheckpoint::from_json_str(&sa).unwrap();
+                        assert_eq!(back.to_json_string(), sa);
+                    }
+                    (None, None) => {}
+                    _ => panic!("checkpoint liveness differed across thread counts"),
+                }
+            }
+        }
+        assert!(any_live, "half-makespan horizon must leave live runs");
     }
 
     #[test]

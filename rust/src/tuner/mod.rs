@@ -30,7 +30,15 @@
 //! * [`search`] — the sweep drivers: full [`Generator::Grid`] /
 //!   [`Generator::Random`] evaluation, and
 //!   [`Generator::Halving`] (successive halving: prune losers on short
-//!   horizons, re-score survivors on full fleets).
+//!   horizons, re-score survivors on full fleets). Halving is
+//!   *warm-started* on the orchestrator checkpoint layer
+//!   ([`OrchestratorCheckpoint`](crate::scheduler::OrchestratorCheckpoint)):
+//!   each round resumes every candidate's snapshot at the previous
+//!   horizon instead of re-simulating from t=0, survivors whose run
+//!   already drained are reused outright (never re-scored on a partial
+//!   snapshot), and [`sweep_with_stats`] exposes the [`WarmMode`]
+//!   switch + [`EvalStats`] reuse counters — warm and cold reports are
+//!   byte-identical by contract.
 //! * [`report`] — the ranked [`SweepReport`] with schema-stable JSON
 //!   (`migm.policy_search.v3`; v3 added the fleet axes): CI runs
 //!   `migm tune --smoke` every build, uploads
@@ -47,10 +55,13 @@ pub mod report;
 pub mod search;
 pub mod space;
 
-pub use eval::{evaluate_all, reference_stats, run_candidate, CandidateResult, Scenario};
-pub use report::{
-    fleet_bench_row, FleetBenchArm, RankedCandidate, SweepReport, TrajectoryPoint,
-    FLEET_BENCH_SCHEMA,
+pub use eval::{
+    advance_all, evaluate_all, reference_results, reference_stats, run_candidate,
+    CandidateProgress, CandidateResult, EvalStats, Scenario, ScenarioRef, WarmMode,
 };
-pub use search::{successive_halving, sweep, Generator, SweepConfig};
+pub use report::{
+    fleet_bench_row, warmstart_bench_row, FleetBenchArm, RankedCandidate, SweepReport,
+    TrajectoryPoint, WarmstartArm, FLEET_BENCH_SCHEMA, WARMSTART_BENCH_SCHEMA,
+};
+pub use search::{successive_halving, sweep, sweep_with_stats, Generator, SweepConfig};
 pub use space::{Candidate, ParamSpace};

@@ -301,6 +301,60 @@ pub fn fleet_bench_row(
     ])
 }
 
+/// Schema tag of [`warmstart_bench_row`]; bump on any shape change.
+pub const WARMSTART_BENCH_SCHEMA: &str = "migm.bench.warmstart.v1";
+
+/// One arm of the warm-start-vs-cold halving bench: wall time plus the
+/// [`EvalStats`](super::EvalStats) reuse counters.
+#[derive(Debug, Clone, Copy)]
+pub struct WarmstartArm {
+    pub elapsed_ns: f64,
+    /// Orchestrators built and simulated from t=0.
+    pub from_zero: usize,
+    /// Checkpoints resumed instead of re-simulated.
+    pub resumed: usize,
+    /// Drained runs whose stored final result was reused outright.
+    pub reused: usize,
+}
+
+impl WarmstartArm {
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("elapsed_ns", Json::num(self.elapsed_ns)),
+            ("from_zero", Json::num(self.from_zero as f64)),
+            ("resumed", Json::num(self.resumed as f64)),
+            ("reused", Json::num(self.reused as f64)),
+        ])
+    }
+}
+
+/// One perf-trajectory row for the warm-start-vs-cold halving
+/// head-to-head in `benches/orchestrator_fleet.rs`. The two sweeps
+/// produce byte-identical reports by contract (`report_bytes_identical`
+/// records the bench re-checking it); the arms differ only in how much
+/// simulation they spent getting there.
+pub fn warmstart_bench_row(
+    bench: &str,
+    n_candidates: usize,
+    warm: WarmstartArm,
+    cold: WarmstartArm,
+    report_bytes_identical: bool,
+) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str(WARMSTART_BENCH_SCHEMA)),
+        ("bench", Json::str(bench)),
+        ("n_candidates", Json::num(n_candidates as f64)),
+        ("warm", warm.to_json()),
+        ("cold", cold.to_json()),
+        (
+            "from_zero_ratio",
+            Json::num(cold.from_zero as f64 / warm.from_zero.max(1) as f64),
+        ),
+        ("speedup", Json::num(cold.elapsed_ns / warm.elapsed_ns)),
+        ("report_bytes_identical", Json::Bool(report_bytes_identical)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -489,6 +543,46 @@ mod tests {
         assert_eq!(row.get("energy_per_job_ratio").as_f64(), Some(1.25));
         // rows round-trip through the parser (the trajectory file is
         // parsed, appended to, and re-serialized by CI)
+        let s = row.to_string();
+        assert_eq!(Json::parse(&s).unwrap(), row);
+    }
+
+    #[test]
+    fn warmstart_bench_row_is_pinned_and_tagged() {
+        let warm = WarmstartArm {
+            elapsed_ns: 2.0e9,
+            from_zero: 8,
+            resumed: 12,
+            reused: 2,
+        };
+        let cold = WarmstartArm {
+            elapsed_ns: 5.0e9,
+            from_zero: 22,
+            resumed: 0,
+            reused: 0,
+        };
+        let row = warmstart_bench_row("tune_halving_warm_vs_cold", 8, warm, cold, true);
+        assert_eq!(row.get("schema").as_str(), Some(WARMSTART_BENCH_SCHEMA));
+        for key in [
+            "schema",
+            "bench",
+            "n_candidates",
+            "warm",
+            "cold",
+            "from_zero_ratio",
+            "speedup",
+            "report_bytes_identical",
+        ] {
+            assert!(!row.get(key).is_null(), "row missing '{key}'");
+        }
+        for arm in ["warm", "cold"] {
+            for key in ["elapsed_ns", "from_zero", "resumed", "reused"] {
+                assert!(!row.get(arm).get(key).is_null(), "{arm} missing '{key}'");
+            }
+        }
+        assert_eq!(row.get("from_zero_ratio").as_f64(), Some(2.75));
+        assert_eq!(row.get("speedup").as_f64(), Some(2.5));
+        assert_eq!(row.get("report_bytes_identical").as_bool(), Some(true));
         let s = row.to_string();
         assert_eq!(Json::parse(&s).unwrap(), row);
     }

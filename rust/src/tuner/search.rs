@@ -7,10 +7,25 @@
 //! round and ranked by `(objective desc, key asc)` with `total_cmp`, so
 //! the ranking — and successive halving's survivor sets — are invariant
 //! to candidate enumeration order.
+//!
+//! Successive halving is *warm-started*: each prune round advances
+//! every candidate's checkpointed orchestrator to the round's time
+//! horizon (`frac ×` the reference makespan per scenario) instead of
+//! re-simulating from t=0, and survivors resume into the full-horizon
+//! finale. [`sweep_with_stats`] exposes the [`WarmMode`] switch plus
+//! the reuse counters; [`WarmMode::Cold`] replays the identical horizon
+//! schedule from scratch, so warm and cold reports are byte-identical —
+//! pinned by a test and benchmarked head-to-head in
+//! `benches/orchestrator_fleet.rs`.
+
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use super::eval::{evaluate_all, reference_results, CandidateResult, Scenario};
+use super::eval::{
+    advance_all, reference_results, CandidateProgress, CandidateResult, EvalStats, Scenario,
+    ScenarioRef, WarmMode,
+};
 use super::report::{RankedCandidate, ScenarioInfo, SweepReport, TrajectoryPoint};
 use super::space::{Candidate, ParamSpace};
 
@@ -97,13 +112,103 @@ pub(crate) fn rank(results: &mut [CandidateResult]) {
     results.sort_by_cached_key(|r| (std::cmp::Reverse(F64Ord(r.objective)), r.candidate.key()));
 }
 
-/// Successive halving's prune phase: repeatedly score the pool on
-/// shortened scenarios and keep the top `1/eta`, growing the horizon
-/// each round, until at most `finalists` remain. Returns the survivor
-/// set (canonically ordered) and appends one [`TrajectoryPoint`] per
-/// round. Invariant to the enumeration order of `cands`.
-pub fn successive_halving(
+/// Everything a halving run needs besides the candidate pool — bundled
+/// so the round driver stays well under the argument-count lint.
+struct HalvingParams<'a> {
+    scens: &'a [Scenario],
+    /// Full-run reference stats: every round scores against the same
+    /// fixed yardstick.
+    refs: &'a [ScenarioRef],
+    /// The reference run's makespan per scenario; round horizons are
+    /// `frac ×` these.
+    ref_makespans: &'a [f64],
+    eta: usize,
+    finalists: usize,
+    short_frac: f64,
+    threads: usize,
+    mode: WarmMode,
+}
+
+/// Successive halving's prune phase: each round advances the pool to a
+/// time horizon (`frac ×` the reference makespan, growing by `eta` per
+/// round), scores the partial runs, and keeps the top `1/eta` — warm
+/// mode resumes each survivor's checkpoint instead of re-simulating
+/// from t=0. Returns the survivor set (canonically ordered) with their
+/// progress index-aligned, and appends one [`TrajectoryPoint`] per
+/// round. Invariant to the enumeration order of `cands` and to
+/// `threads`; byte-identical across [`WarmMode`]s.
+fn halving_rounds(
     mut cands: Vec<Candidate>,
+    p: &HalvingParams<'_>,
+    trajectory: &mut Vec<TrajectoryPoint>,
+    stats: &mut EvalStats,
+) -> (Vec<Candidate>, Vec<CandidateProgress>) {
+    let eta = p.eta.max(2);
+    let finalists = p.finalists.max(1);
+    sort_canonical(&mut cands);
+    // Progress is keyed by candidate identity so pruning, dedup, and
+    // re-sorting can never misalign a checkpoint with its candidate.
+    let mut prog_map: BTreeMap<String, CandidateProgress> = BTreeMap::new();
+    let take_progress = |c: &Candidate, map: &mut BTreeMap<String, CandidateProgress>| {
+        map.remove(&c.key())
+            .unwrap_or_else(|| CandidateProgress::fresh(p.scens.len()))
+    };
+    let mut frac = p.short_frac.clamp(0.01, 1.0);
+    let mut round = 0usize;
+    while cands.len() > finalists {
+        let keep = finalists.max(cands.len().div_ceil(eta));
+        if keep >= cands.len() {
+            break;
+        }
+        let horizons: Vec<f64> = p.ref_makespans.iter().map(|m| frac * m.max(1e-9)).collect();
+        let progress: Vec<CandidateProgress> = cands
+            .iter()
+            .map(|c| take_progress(c, &mut prog_map))
+            .collect();
+        let (results, progress, round_stats) = advance_all(
+            &cands,
+            p.scens,
+            p.refs,
+            progress,
+            Some(&horizons),
+            p.mode,
+            p.threads,
+        );
+        stats.merge(round_stats);
+        let mut paired: Vec<(CandidateResult, CandidateProgress)> =
+            results.into_iter().zip(progress).collect();
+        paired.sort_by_cached_key(|(r, _)| {
+            (std::cmp::Reverse(F64Ord(r.objective)), r.candidate.key())
+        });
+        trajectory.push(TrajectoryPoint {
+            round,
+            horizon_frac: frac,
+            n_candidates: paired.len(),
+            best_objective: paired[0].0.objective,
+            best_label: paired[0].0.candidate.label(),
+        });
+        paired.truncate(keep);
+        cands = Vec::with_capacity(paired.len());
+        for (r, pr) in paired {
+            prog_map.insert(r.candidate.key(), pr);
+            cands.push(r.candidate);
+        }
+        sort_canonical(&mut cands);
+        frac = (frac * eta as f64).min(1.0);
+        round += 1;
+    }
+    let progress = cands
+        .iter()
+        .map(|c| take_progress(c, &mut prog_map))
+        .collect();
+    (cands, progress)
+}
+
+/// Successive halving over `cands`, warm-started (see
+/// [`halving_rounds`]): runs the reference once for normalization and
+/// returns just the survivor set.
+pub fn successive_halving(
+    cands: Vec<Candidate>,
     scens: &[Scenario],
     eta: usize,
     finalists: usize,
@@ -111,53 +216,31 @@ pub fn successive_halving(
     threads: usize,
     trajectory: &mut Vec<TrajectoryPoint>,
 ) -> Vec<Candidate> {
-    let eta = eta.max(2);
-    let finalists = finalists.max(1);
-    sort_canonical(&mut cands);
-    let ref_key = Candidate::reference().key();
-    let mut frac = short_frac.clamp(0.01, 1.0);
-    let mut round = 0usize;
-    while cands.len() > finalists {
-        let keep = finalists.max(cands.len().div_ceil(eta));
-        if keep >= cands.len() {
-            break;
-        }
-        let short: Vec<Scenario> = scens.iter().map(|s| s.truncated(frac)).collect();
-        // The reference run doubles as normalization stats and (when the
-        // pool contains the reference) its scored result — never
-        // simulate the same candidate twice.
-        let (short_refs, ref_result) = reference_results(&short);
-        let pool: Vec<Candidate> = cands.iter().filter(|c| c.key() != ref_key).cloned().collect();
-        let mut results = evaluate_all(&pool, &short, &short_refs, threads);
-        if pool.len() != cands.len() {
-            results.push(ref_result);
-        }
-        rank(&mut results);
-        trajectory.push(TrajectoryPoint {
-            round,
-            horizon_frac: frac,
-            n_candidates: results.len(),
-            best_objective: results[0].objective,
-            best_label: results[0].candidate.label(),
-        });
-        cands = results
-            .into_iter()
-            .take(keep)
-            .map(|r| r.candidate)
-            .collect();
-        sort_canonical(&mut cands);
-        frac = (frac * eta as f64).min(1.0);
-        round += 1;
-    }
-    cands
+    let (refs, ref_result) = reference_results(scens);
+    let ref_makespans: Vec<f64> = ref_result
+        .outcomes
+        .iter()
+        .map(|o| o.metrics.makespan_s)
+        .collect();
+    let p = HalvingParams {
+        scens,
+        refs: &refs,
+        ref_makespans: &ref_makespans,
+        eta,
+        finalists,
+        short_frac,
+        threads,
+        mode: WarmMode::Warm,
+    };
+    let mut stats = EvalStats::default();
+    halving_rounds(cands, &p, trajectory, &mut stats).0
 }
 
-/// Run a sweep end to end: generate candidates, (optionally) prune by
-/// successive halving, score the survivors on the full scenarios, and
-/// assemble the report. The reference candidate is always part of the
-/// final scoring round, so the report's ranking provably contains the
-/// default-knob Scheme B to beat.
-pub fn sweep(cfg: &SweepConfig) -> Result<SweepReport> {
+/// [`sweep`], but with the warm/cold switch exposed and the
+/// simulation-reuse counters returned alongside the report. The report
+/// is byte-identical across modes (and thread counts); only the
+/// [`EvalStats`] — how much simulation it took — differ.
+pub fn sweep_with_stats(cfg: &SweepConfig, mode: WarmMode) -> Result<(SweepReport, EvalStats)> {
     if cfg.scenarios.is_empty() {
         bail!("sweep needs at least one scenario");
     }
@@ -170,33 +253,62 @@ pub fn sweep(cfg: &SweepConfig) -> Result<SweepReport> {
     sort_canonical(&mut cands);
 
     let (refs, ref_result) = reference_results(&cfg.scenarios);
+    let ref_key = reference.key();
+    let mut stats = EvalStats::default();
     let mut trajectory = Vec::new();
-    let mut survivors = match cfg.generator {
+    let (pool, progress): (Vec<Candidate>, Vec<CandidateProgress>) = match cfg.generator {
         Generator::Halving {
             eta,
             finalists,
             short_frac,
             ..
-        } => successive_halving(
-            cands,
-            &cfg.scenarios,
-            eta,
-            finalists,
-            short_frac,
-            cfg.threads,
-            &mut trajectory,
-        ),
-        _ => cands,
+        } => {
+            let ref_makespans: Vec<f64> = ref_result
+                .outcomes
+                .iter()
+                .map(|o| o.metrics.makespan_s)
+                .collect();
+            let p = HalvingParams {
+                scens: &cfg.scenarios,
+                refs: &refs,
+                ref_makespans: &ref_makespans,
+                eta,
+                finalists,
+                short_frac,
+                threads: cfg.threads,
+                mode,
+            };
+            halving_rounds(cands, &p, &mut trajectory, &mut stats)
+        }
+        _ => {
+            let progress = cands
+                .iter()
+                .map(|_| CandidateProgress::fresh(cfg.scenarios.len()))
+                .collect();
+            (cands, progress)
+        }
     };
     // Halving may have pruned the reference on a short horizon; the
     // final full-horizon ranking must still contain it — its scored
     // result was already built alongside the normalization stats, so
-    // evaluate only the non-reference survivors.
-    let ref_key = reference.key();
-    survivors.retain(|c| c.key() != ref_key);
-    sort_canonical(&mut survivors);
+    // advance only the non-reference survivors (each resuming its
+    // checkpoint in warm mode rather than re-simulating from t=0).
+    let (pool, progress): (Vec<Candidate>, Vec<CandidateProgress>) = pool
+        .into_iter()
+        .zip(progress)
+        .filter(|(c, _)| c.key() != ref_key)
+        .unzip();
 
-    let mut results = evaluate_all(&survivors, &cfg.scenarios, &refs, cfg.threads);
+    let (mut results, _progress, final_stats) = advance_all(
+        &pool,
+        &cfg.scenarios,
+        &refs,
+        progress,
+        None,
+        mode,
+        cfg.threads,
+    );
+    stats.merge(final_stats);
     results.push(ref_result);
     rank(&mut results);
     trajectory.push(TrajectoryPoint {
@@ -235,7 +347,7 @@ pub fn sweep(cfg: &SweepConfig) -> Result<SweepReport> {
             reference: *r,
         })
         .collect();
-    Ok(SweepReport {
+    let report = SweepReport {
         schema: SweepReport::SCHEMA,
         seed: cfg.seed,
         generator: cfg.generator.name(),
@@ -243,7 +355,17 @@ pub fn sweep(cfg: &SweepConfig) -> Result<SweepReport> {
         trajectory,
         ranked,
         best_beats_reference_on,
-    })
+    };
+    Ok((report, stats))
+}
+
+/// Run a sweep end to end: generate candidates, (optionally) prune by
+/// warm-started successive halving, score the survivors on the full
+/// scenarios, and assemble the report. The reference candidate is
+/// always part of the final scoring round, so the report's ranking
+/// provably contains the default-knob Scheme B to beat.
+pub fn sweep(cfg: &SweepConfig) -> Result<SweepReport> {
+    Ok(sweep_with_stats(cfg, WarmMode::Warm)?.0)
 }
 
 #[cfg(test)]
@@ -350,6 +472,65 @@ mod tests {
         for (a, b) in t1.iter().zip(&t2) {
             assert_eq!(a.best_objective.to_bits(), b.best_objective.to_bits());
         }
+    }
+
+    #[test]
+    fn warm_and_cold_halving_reports_are_byte_identical() {
+        // The warm-start acceptance pin: resuming checkpoints changes
+        // how much simulation a sweep costs, not one byte of its
+        // report. Cold mode replays the identical horizon schedule from
+        // t=0, so any divergence is a checkpoint bug.
+        let cfg = SweepConfig {
+            generator: Generator::Halving {
+                n: 0,
+                eta: 2,
+                finalists: 2,
+                short_frac: 0.4,
+            },
+            ..smoke_cfg(2)
+        };
+        let (warm_report, warm) = sweep_with_stats(&cfg, WarmMode::Warm).unwrap();
+        let (cold_report, cold) = sweep_with_stats(&cfg, WarmMode::Cold).unwrap();
+        assert_eq!(
+            warm_report.to_json().to_string(),
+            cold_report.to_json().to_string(),
+            "warm-start changed the report"
+        );
+        assert!(
+            warm.resumed + warm.reused > 0,
+            "warm sweep never reused a checkpoint: {warm:?}"
+        );
+        assert!(
+            warm.from_zero < cold.from_zero,
+            "warm {warm:?} should build fewer runs than cold {cold:?}"
+        );
+        assert_eq!(cold.resumed, 0, "cold mode must never resume");
+        assert_eq!(cold.reused, 0, "cold mode must never reuse");
+    }
+
+    #[test]
+    fn full_horizon_prune_rounds_never_rescore_finished_runs() {
+        // Regression (the halving double-score bug): when the round
+        // horizon already covers a candidate's whole run, later rounds
+        // must reuse the stored final result instead of re-simulating
+        // — and must score the *final* result, not a partial snapshot.
+        let cfg = SweepConfig {
+            generator: Generator::Halving {
+                n: 0,
+                eta: 2,
+                finalists: 2,
+                short_frac: 1.0,
+            },
+            ..smoke_cfg(2)
+        };
+        let (report, stats) = sweep_with_stats(&cfg, WarmMode::Warm).unwrap();
+        assert!(
+            stats.reused > 0,
+            "full-length horizons must hit the drained-run reuse guard: {stats:?}"
+        );
+        // the reference still anchors the ranking at exactly 1.0
+        let r = report.ranked.iter().find(|c| c.is_reference).unwrap();
+        assert_eq!(r.objective, 1.0);
     }
 
     #[test]

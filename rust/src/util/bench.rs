@@ -5,8 +5,16 @@
 //! ```text
 //! bench <name> ... median 12.3us  mean 12.5us  p95 13.0us  (n=200)
 //! ```
+//!
+//! Also the one home of the `MIGM_BENCH_JSON` / `MIGM_TRAJECTORY`
+//! artifact emitters the `benches/*.rs` binaries share
+//! ([`write_bench_json_env`] / [`append_trajectory_rows_env`]), plus
+//! [`validate_trajectory_row`], the schema gate every trajectory row
+//! kind passes before it is appended.
 
 use std::time::{Duration, Instant};
+
+use super::Json;
 
 /// Prevent the optimizer from deleting a computed value.
 #[inline]
@@ -107,6 +115,179 @@ impl Bench {
     }
 }
 
+/// The per-run stats document every bench writes under
+/// `MIGM_BENCH_JSON` (`{schema, smoke, results: [...]}`).
+pub fn bench_json_doc(schema: &str, smoke: bool, stats: &[BenchStats]) -> Json {
+    let results: Vec<Json> = stats
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("name", Json::str(s.name.clone())),
+                ("n", Json::num(s.n as f64)),
+                ("median_ns", Json::num(s.median_ns)),
+                ("mean_ns", Json::num(s.mean_ns)),
+                ("p95_ns", Json::num(s.p95_ns)),
+                ("min_ns", Json::num(s.min_ns)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::str(schema)),
+        ("smoke", Json::Bool(smoke)),
+        ("results", Json::Arr(results)),
+    ])
+}
+
+/// If `MIGM_BENCH_JSON=<path>` is set, write the stats document there
+/// (the CI perf artifact) — the shared tail of every bench binary.
+pub fn write_bench_json_env(schema: &str, smoke: bool, stats: &[BenchStats]) {
+    if let Ok(path) = std::env::var("MIGM_BENCH_JSON") {
+        let doc = bench_json_doc(schema, smoke, stats);
+        std::fs::write(&path, format!("{doc}\n")).expect("writing bench JSON");
+        println!("wrote {path}");
+    }
+}
+
+/// If `MIGM_TRAJECTORY=<path>` is set, append `rows` to the flat JSON
+/// array there (missing/empty/corrupt file ⇒ start fresh), preserving
+/// the trailing newline. Every row must pass
+/// [`validate_trajectory_row`] — a bench cannot append a row shape the
+/// trajectory consumers don't know.
+pub fn append_trajectory_rows_env(rows: &[Json]) {
+    let Ok(path) = std::env::var("MIGM_TRAJECTORY") else {
+        return;
+    };
+    for row in rows {
+        if let Err(e) = validate_trajectory_row(row) {
+            panic!("refusing to append malformed trajectory row: {e}");
+        }
+    }
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) if !t.trim().is_empty() => t,
+        _ => "[]".to_string(),
+    };
+    let all = match Json::parse(&text) {
+        Ok(Json::Arr(mut existing)) => {
+            existing.extend(rows.iter().cloned());
+            existing
+        }
+        _ => rows.to_vec(),
+    };
+    std::fs::write(&path, format!("{}\n", Json::Arr(all))).expect("writing trajectory");
+    println!("appended {} trajectory row(s) to {path}", rows.len());
+}
+
+fn require_keys(row: &Json, ctx: &str, keys: &[&str]) -> Result<(), String> {
+    for k in keys {
+        if row.get(k).is_null() {
+            return Err(format!("{ctx} missing key '{k}'"));
+        }
+    }
+    Ok(())
+}
+
+/// Structural validation of one perf-trajectory row, dispatched on its
+/// `schema` tag. Covers every bench-emitted row kind; the sweep summary
+/// rows (`migm.policy_search.summary.*`) are emitted by `migm tune`
+/// itself and pass through untouched.
+pub fn validate_trajectory_row(row: &Json) -> Result<(), String> {
+    let schema = row
+        .get("schema")
+        .as_str()
+        .ok_or_else(|| "row has no schema tag".to_string())?;
+    match schema {
+        "migm.bench.fleet.v1" => {
+            require_keys(
+                row,
+                schema,
+                &[
+                    "bench",
+                    "n_jobs",
+                    "fleet",
+                    "sharded",
+                    "makespan_speedup",
+                    "energy_per_job_ratio",
+                ],
+            )?;
+            for arm in ["fleet", "sharded"] {
+                require_keys(
+                    row.get(arm),
+                    &format!("{schema}.{arm}"),
+                    &[
+                        "makespan_s",
+                        "throughput_jps",
+                        "energy_per_job_j",
+                        "p99_turnaround_s",
+                    ],
+                )?;
+            }
+            Ok(())
+        }
+        "migm.bench.serving.v1" => {
+            require_keys(
+                row,
+                schema,
+                &[
+                    "bench",
+                    "n_requests",
+                    "autoscaled",
+                    "static",
+                    "rps_at_slo_ratio",
+                    "j_per_request_ratio",
+                ],
+            )?;
+            for arm in ["autoscaled", "static"] {
+                require_keys(
+                    row.get(arm),
+                    &format!("{schema}.{arm}"),
+                    &[
+                        "label",
+                        "sustained_rps",
+                        "within_slo",
+                        "p99_turnaround_s",
+                        "slo_margin_ms",
+                        "energy_j",
+                        "j_per_request",
+                        "scale_ups",
+                        "scale_downs",
+                    ],
+                )?;
+            }
+            Ok(())
+        }
+        "migm.bench.warmstart.v1" => {
+            require_keys(
+                row,
+                schema,
+                &[
+                    "bench",
+                    "n_candidates",
+                    "warm",
+                    "cold",
+                    "from_zero_ratio",
+                    "speedup",
+                    "report_bytes_identical",
+                ],
+            )?;
+            for arm in ["warm", "cold"] {
+                require_keys(
+                    row.get(arm),
+                    &format!("{schema}.{arm}"),
+                    &["elapsed_ns", "from_zero", "resumed", "reused"],
+                )?;
+            }
+            if row.get("report_bytes_identical").as_bool() != Some(true) {
+                return Err(format!(
+                    "{schema}: report_bytes_identical must be true — the warm path may \
+                     not change sweep results"
+                ));
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown trajectory row schema '{other}'")),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +311,78 @@ mod tests {
         assert_eq!(fmt_ns(5_000.0), "5.00us");
         assert_eq!(fmt_ns(5_000_000.0), "5.00ms");
         assert_eq!(fmt_ns(5e9), "5.000s");
+    }
+
+    #[test]
+    fn bench_json_doc_shape_is_pinned() {
+        let stats = vec![BenchStats {
+            name: "x".into(),
+            n: 3,
+            mean_ns: 2.0,
+            median_ns: 2.0,
+            p95_ns: 3.0,
+            min_ns: 1.0,
+        }];
+        let doc = bench_json_doc("migm.bench.test_suite.v1", true, &stats);
+        assert_eq!(doc.get("schema").as_str(), Some("migm.bench.test_suite.v1"));
+        assert_eq!(doc.get("smoke").as_bool(), Some(true));
+        let r = doc.get("results").at(0);
+        for key in ["name", "n", "median_ns", "mean_ns", "p95_ns", "min_ns"] {
+            assert!(!r.get(key).is_null(), "result missing '{key}'");
+        }
+        assert_eq!(Json::parse(&doc.to_string()).unwrap(), doc);
+    }
+
+    /// Every trajectory row kind, built from the REAL builders, must
+    /// pass the validator — so a builder shape change and the
+    /// validator can't drift apart silently.
+    #[test]
+    fn validator_accepts_every_real_row_kind() {
+        use crate::serving::{run, serving_bench_row, ServeConfig};
+        use crate::tuner::{fleet_bench_row, warmstart_bench_row, FleetBenchArm, WarmstartArm};
+
+        let arm = FleetBenchArm {
+            makespan_s: 10.0,
+            throughput_jps: 2.0,
+            energy_per_job_j: 40.0,
+            p99_turnaround_s: 8.0,
+        };
+        let fleet = fleet_bench_row("orch_hetero_fleet_vs_sharded", 120, arm, arm);
+        validate_trajectory_row(&fleet).expect("fleet row must validate");
+
+        let r = run(&ServeConfig::smoke(7));
+        let serving = serving_bench_row("serve_smoke", r.n_requests, &r, &r);
+        validate_trajectory_row(&serving).expect("serving row must validate");
+
+        let warm = WarmstartArm {
+            elapsed_ns: 1.0e9,
+            from_zero: 8,
+            resumed: 12,
+            reused: 1,
+        };
+        let cold = WarmstartArm {
+            elapsed_ns: 2.5e9,
+            from_zero: 21,
+            resumed: 0,
+            reused: 0,
+        };
+        let ws = warmstart_bench_row("tune_halving_warm_vs_cold", 8, warm, cold, true);
+        validate_trajectory_row(&ws).expect("warmstart row must validate");
+        // but a warm row claiming the reports diverged is rejected
+        let bad = warmstart_bench_row("tune_halving_warm_vs_cold", 8, warm, cold, false);
+        assert!(validate_trajectory_row(&bad).is_err());
+    }
+
+    #[test]
+    fn validator_rejects_unknown_and_truncated_rows() {
+        assert!(validate_trajectory_row(&Json::Null).is_err());
+        let unknown = Json::obj(vec![("schema", Json::str("migm.bench.mystery.v9"))]);
+        assert!(validate_trajectory_row(&unknown).is_err());
+        let truncated = Json::obj(vec![
+            ("schema", Json::str("migm.bench.fleet.v1")),
+            ("bench", Json::str("x")),
+        ]);
+        let err = validate_trajectory_row(&truncated).unwrap_err();
+        assert!(err.contains("missing key"), "{err}");
     }
 }

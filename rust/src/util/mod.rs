@@ -1,10 +1,12 @@
 //! Small in-tree substrates the offline build cannot pull from crates.io:
-//! a deterministic PRNG ([`rng`]), a JSON codec ([`json`]), and a
-//! criterion-style micro-bench harness ([`bench`]).
+//! a deterministic PRNG ([`rng`]), a JSON codec ([`json`]), a
+//! criterion-style micro-bench harness ([`bench`]), and the bit-exact
+//! scalar codecs checkpoint snapshots are built from ([`snap`]).
 
 pub mod bench;
 pub mod json;
 pub mod rng;
+pub mod snap;
 
 pub use json::Json;
 pub use rng::Rng;

@@ -1,0 +1,142 @@
+//! Bit-exact scalar codecs for checkpoint snapshots.
+//!
+//! Snapshot JSON must round-trip every scalar *bit-identically*:
+//! `restore(parse(to_string(snapshot(x))))` has to reproduce the exact
+//! simulator state, and the resume difftest compares serialized
+//! checkpoints byte-for-byte. [`Json`]'s `Display` is tuned for report
+//! output — it prints integral floats through an `i64` shortcut (which
+//! destroys the sign of `-0.0`) and has no representation at all for
+//! NaN or the infinities. Finite non-special floats are safe: Rust's
+//! `{}` float formatting is shortest-round-trip, so `to_string` →
+//! `str::parse::<f64>` returns the same bits, and the integral
+//! shortcut is exact for |n| < 2^53. The helpers here keep the common
+//! case a plain `Json::Num` and spell the special cases as tagged
+//! strings; `u64` counters always travel as decimal strings because
+//! they can exceed the f64-exact integer range.
+
+use anyhow::{bail, Context, Result};
+
+use super::Json;
+
+/// Encode an `f64` so it round-trips bit-exactly through JSON text.
+pub fn f64_to_json(v: f64) -> Json {
+    if v.is_nan() {
+        Json::str("NaN")
+    } else if v == f64::INFINITY {
+        Json::str("inf")
+    } else if v == f64::NEG_INFINITY {
+        Json::str("-inf")
+    } else if v == 0.0 && v.is_sign_negative() {
+        Json::str("-0")
+    } else {
+        Json::Num(v)
+    }
+}
+
+/// Decode an `f64` written by [`f64_to_json`].
+pub fn f64_from_json(j: &Json) -> Result<f64> {
+    match j {
+        Json::Num(n) => Ok(*n),
+        Json::Str(s) => match s.as_str() {
+            "NaN" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            "-0" => Ok(-0.0),
+            other => bail!("bad f64 snapshot literal {other:?}"),
+        },
+        other => bail!("expected f64 snapshot value, got {other}"),
+    }
+}
+
+/// Encode a `u64` counter losslessly (always a decimal string:
+/// `Json::Num` is an `f64` and would silently round above 2^53).
+pub fn u64_to_json(v: u64) -> Json {
+    Json::str(v.to_string())
+}
+
+/// Decode a `u64` written by [`u64_to_json`].
+pub fn u64_from_json(j: &Json) -> Result<u64> {
+    match j {
+        Json::Str(s) => s.parse::<u64>().with_context(|| format!("bad u64 snapshot {s:?}")),
+        other => bail!("expected u64 snapshot string, got {other}"),
+    }
+}
+
+/// Encode a slice of `f64`s element-wise via [`f64_to_json`].
+pub fn f64s_to_json(vs: &[f64]) -> Json {
+    Json::Arr(vs.iter().map(|&v| f64_to_json(v)).collect())
+}
+
+/// Decode an array written by [`f64s_to_json`].
+pub fn f64s_from_json(j: &Json) -> Result<Vec<f64>> {
+    j.as_arr()
+        .context("expected f64 snapshot array")?
+        .iter()
+        .map(f64_from_json)
+        .collect()
+}
+
+/// Typed `usize` accessor for snapshot fields (`Json::Num`-backed;
+/// snapshot indices stay far below the f64-exact range).
+pub fn usize_from_json(j: &Json) -> Result<usize> {
+    match j {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Ok(*n as usize),
+        other => bail!("expected usize snapshot value, got {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(v: f64) -> f64 {
+        // Through *text*, exactly like a checkpoint file.
+        let s = f64_to_json(v).to_string();
+        f64_from_json(&Json::parse(&s).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn f64_text_roundtrip_is_bit_exact() {
+        for v in [
+            0.0,
+            -0.0,
+            1.0,
+            -1.5,
+            1e-300,
+            -1e300,
+            std::f64::consts::PI,
+            f64::MIN_POSITIVE,
+            f64::EPSILON,
+            123456789.123456789,
+            2.0_f64.powi(60),
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+        ] {
+            assert_eq!(roundtrip(v).to_bits(), v.to_bits(), "{v} must round-trip");
+        }
+        assert!(roundtrip(f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn u64_text_roundtrip_is_exact_above_2_53() {
+        for v in [0u64, 1, u64::MAX, (1u64 << 53) + 1, u64::MAX - 1] {
+            let s = u64_to_json(v).to_string();
+            assert_eq!(u64_from_json(&Json::parse(&s).unwrap()).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn f64s_roundtrip_and_reject_garbage() {
+        let vs = vec![1.0, -0.0, f64::NAN, 2.5];
+        let s = f64s_to_json(&vs).to_string();
+        let back = f64s_from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back.len(), 4);
+        assert_eq!(back[0].to_bits(), 1.0f64.to_bits());
+        assert_eq!(back[1].to_bits(), (-0.0f64).to_bits());
+        assert!(back[2].is_nan());
+        assert!(f64_from_json(&Json::Bool(true)).is_err());
+        assert!(u64_from_json(&Json::num(3.0)).is_err());
+        assert!(usize_from_json(&Json::num(1.5)).is_err());
+        assert_eq!(usize_from_json(&Json::num(7.0)).unwrap(), 7);
+    }
+}

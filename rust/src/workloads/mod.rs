@@ -161,6 +161,95 @@ impl JobSpec {
             }
         }
     }
+
+    /// Bit-exact snapshot form. Checkpoints serialize the *full* spec
+    /// (not a name lookup) so a restored orchestrator is self-contained;
+    /// iterative jobs carry `TraceSpec` + seed, never a realized trace —
+    /// restore regenerates it exactly as launch did.
+    pub fn to_snap_json(&self) -> crate::util::Json {
+        use crate::util::snap::{f64_to_json, u64_to_json};
+        use crate::util::Json;
+        let kind = match self.kind {
+            JobKind::Rodinia => "rodinia",
+            JobKind::Dnn => "dnn",
+            JobKind::Llm => "llm",
+        };
+        let compute = match &self.compute {
+            ComputeModel::Phases(p) => Json::obj(vec![
+                ("model", Json::str("phases")),
+                ("alloc_s", f64_to_json(p.alloc_s)),
+                ("h2d_pcie_s", f64_to_json(p.h2d_pcie_s)),
+                ("steps", Json::num(p.steps as f64)),
+                ("step_s", f64_to_json(p.step_s)),
+                ("step_pcie_s", f64_to_json(p.step_pcie_s)),
+                ("d2h_pcie_s", f64_to_json(p.d2h_pcie_s)),
+                ("free_s", f64_to_json(p.free_s)),
+            ]),
+            ComputeModel::Iterative(it) => Json::obj(vec![
+                ("model", Json::str("iterative")),
+                ("alloc_s", f64_to_json(it.alloc_s)),
+                ("h2d_pcie_s", f64_to_json(it.h2d_pcie_s)),
+                ("iter_step_s", f64_to_json(it.iter_step_s)),
+                ("d2h_pcie_s", f64_to_json(it.d2h_pcie_s)),
+                ("free_s", f64_to_json(it.free_s)),
+                ("trace", it.trace.to_snap_json()),
+                ("trace_seed", u64_to_json(it.trace_seed)),
+            ]),
+        };
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("kind", Json::str(kind)),
+            ("demand_gpcs", Json::num(self.demand_gpcs as f64)),
+            ("true_mem_gb", f64_to_json(self.true_mem_gb)),
+            ("est", self.est.to_snap_json()),
+            ("compute", compute),
+        ])
+    }
+
+    /// Inverse of [`Self::to_snap_json`].
+    pub fn from_snap_json(j: &crate::util::Json) -> anyhow::Result<JobSpec> {
+        use crate::util::snap::{f64_from_json, u64_from_json, usize_from_json};
+        let kind = match j.get("kind").as_str() {
+            Some("rodinia") => JobKind::Rodinia,
+            Some("dnn") => JobKind::Dnn,
+            Some("llm") => JobKind::Llm,
+            other => anyhow::bail!("unknown job-kind tag {other:?}"),
+        };
+        let c = j.get("compute");
+        let compute = match c.get("model").as_str() {
+            Some("phases") => ComputeModel::Phases(PhaseProfile {
+                alloc_s: f64_from_json(c.get("alloc_s"))?,
+                h2d_pcie_s: f64_from_json(c.get("h2d_pcie_s"))?,
+                steps: usize_from_json(c.get("steps"))? as u32,
+                step_s: f64_from_json(c.get("step_s"))?,
+                step_pcie_s: f64_from_json(c.get("step_pcie_s"))?,
+                d2h_pcie_s: f64_from_json(c.get("d2h_pcie_s"))?,
+                free_s: f64_from_json(c.get("free_s"))?,
+            }),
+            Some("iterative") => ComputeModel::Iterative(IterativeProfile {
+                alloc_s: f64_from_json(c.get("alloc_s"))?,
+                h2d_pcie_s: f64_from_json(c.get("h2d_pcie_s"))?,
+                iter_step_s: f64_from_json(c.get("iter_step_s"))?,
+                d2h_pcie_s: f64_from_json(c.get("d2h_pcie_s"))?,
+                free_s: f64_from_json(c.get("free_s"))?,
+                trace: TraceSpec::from_snap_json(c.get("trace"))?,
+                trace_seed: u64_from_json(c.get("trace_seed"))?,
+            }),
+            other => anyhow::bail!("unknown compute-model tag {other:?}"),
+        };
+        Ok(JobSpec {
+            name: j
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("job snapshot missing name"))?
+                .to_string(),
+            kind,
+            demand_gpcs: usize_from_json(j.get("demand_gpcs"))? as u8,
+            true_mem_gb: f64_from_json(j.get("true_mem_gb"))?,
+            est: crate::estimator::Estimate::from_snap_json(j.get("est"))?,
+            compute,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -233,5 +322,37 @@ mod tests {
         let fast = p.ideal_runtime_s(2, 7);
         assert!((fast - (0.6 + 4.0 * 0.5)).abs() < 1e-9);
         assert!((slow - (0.6 + 4.0 * 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn job_spec_snap_roundtrips_for_every_compute_model() {
+        use crate::util::Json;
+        for job in [
+            rodinia::by_name("gaussian").unwrap().job(7),
+            dnn::vgg16_train().job(),
+            llm::qwen2_7b().job(3),
+        ] {
+            let text = job.to_snap_json().to_string();
+            let back = JobSpec::from_snap_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.name, job.name);
+            assert_eq!(back.kind, job.kind);
+            assert_eq!(back.demand_gpcs, job.demand_gpcs);
+            assert_eq!(back.true_mem_gb.to_bits(), job.true_mem_gb.to_bits());
+            assert_eq!(back.est, job.est);
+            // compute models agree bit-for-bit through the runtime model
+            assert_eq!(
+                back.baseline_runtime_s(7).to_bits(),
+                job.baseline_runtime_s(7).to_bits()
+            );
+            if let (ComputeModel::Iterative(a), ComputeModel::Iterative(b)) =
+                (&job.compute, &back.compute)
+            {
+                assert_eq!(a.trace_seed, b.trace_seed);
+                assert_eq!(
+                    a.trace.generate(a.trace_seed).phys_gb,
+                    b.trace.generate(b.trace_seed).phys_gb
+                );
+            }
+        }
     }
 }
