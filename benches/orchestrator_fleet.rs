@@ -6,13 +6,21 @@
 //! the load the policy-search sweeps put on the engine, so it bounds
 //! `migm tune` throughput too.
 //!
+//! The advancement head-to-head drives the same fleet through the
+//! sequential event loop and through
+//! [`Orchestrator::run_to_completion_parallel`] — at full scale one
+//! *million* jobs across 1000 GPUs, the tentpole scale target — and
+//! asserts the parallel win (full runs only; at smoke scale thread
+//! spawn overhead can dominate).
+//!
 //! Set `MIGM_BENCH_SMOKE=1` for the CI smoke run (smaller fleet, the
 //! 10k fleet skipped). Set `MIGM_BENCH_JSON=<path>` to also write the
 //! stats as JSON (uploaded as a CI perf artifact next to
 //! `BENCH_policy_search.json`). Set `MIGM_TRAJECTORY=<path>` to append
-//! the heterogeneous head-to-head (`migm.bench.fleet.v1` row) and the
+//! the heterogeneous head-to-head (`migm.bench.fleet.v1` row), the
 //! warm-start-vs-cold halving head-to-head (`migm.bench.warmstart.v1`
-//! row) to the perf trajectory.
+//! row), and the sequential-vs-parallel advancement head-to-head
+//! (`migm.bench.speedup.v1` row) to the perf trajectory.
 
 use std::sync::Arc;
 
@@ -25,7 +33,8 @@ use migm::tuner::{
     ParamSpace, Scenario, SweepConfig, WarmMode, WarmstartArm,
 };
 use migm::util::bench::{
-    append_trajectory_rows_env, black_box, write_bench_json_env, Bench, BenchStats,
+    append_trajectory_rows_env, black_box, speedup_bench_row, write_bench_json_env, Bench,
+    BenchStats,
 };
 use migm::util::Rng;
 use migm::workloads::synthetic::{fleet_job, many_instance_spec, sized_job, tiered_spec};
@@ -237,6 +246,73 @@ fn main() {
         }));
     }
 
+    // ---- parallel fleet advancement: 1M jobs / 1000 GPUs -----------
+    // The tentpole scale target: a 1000-GPU fleet draining one million
+    // jobs through the real orchestrator, sequential event loop vs the
+    // round-based parallel advancement. Per event the sequential loop
+    // pays an O(n_gpus) busy-scan; the parallel loop pays it once per
+    // round of up to n_gpus events and advances the independent
+    // `GpuSim`s on a scoped thread pool. Each arm runs once (the full
+    // scale is minutes of wall time — a `Bench` loop would double it);
+    // the win is asserted in the full run and recorded as a
+    // `migm.bench.speedup.v1` row in both modes.
+    let (adv_gpus, adv_per) = if smoke { (32, 32) } else { (1000, 1000) };
+    let adv_jobs = adv_gpus * adv_per;
+    let adv_job = fleet_job(5);
+    let threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+    let time_drain = |parallel: Option<usize>| -> (f64, usize) {
+        let policy = ShardedPolicy::new(
+            (0..adv_gpus)
+                .map(|g| SchemeBPolicy::new_on(synth.clone(), SchemeBKnobs::default(), g))
+                .collect(),
+        );
+        let mut orch = Orchestrator::new(vec![synth.clone(); adv_gpus], false, policy);
+        for _ in 0..adv_jobs {
+            orch.submit_at(adv_job.clone(), 0.0);
+        }
+        let t0 = std::time::Instant::now();
+        match parallel {
+            Some(th) => orch.run_to_completion_parallel(th),
+            None => orch.run_to_completion(),
+        }
+        let ns = t0.elapsed().as_nanos() as f64;
+        (ns, black_box(orch.fleet_result().records.len()))
+    };
+    let (seq_ns, seq_done) = time_drain(None);
+    let (par_ns, par_done) = time_drain(Some(threads));
+    assert_eq!(seq_done, adv_jobs, "sequential arm must drain every job");
+    assert_eq!(par_done, adv_jobs, "parallel arm must drain every job");
+    let adv_speedup = seq_ns / par_ns;
+    println!(
+        "advancement head-to-head ({adv_jobs} jobs / {adv_gpus} GPUs, {threads} threads): \
+         sequential {:.2}s vs parallel {:.2}s -> x{adv_speedup:.2}",
+        seq_ns / 1e9,
+        par_ns / 1e9,
+    );
+    if !smoke {
+        assert!(
+            adv_speedup > 1.5,
+            "parallel advancement below the 1.5x floor at full scale: x{adv_speedup:.2}"
+        );
+    }
+    let advance_row = speedup_bench_row(
+        "orch_1m_sequential_vs_parallel_advance",
+        adv_jobs,
+        adv_gpus,
+        ("sequential-step", seq_ns),
+        ("parallel-rounds", par_ns),
+    );
+    let single = |name: &str, ns: f64| BenchStats {
+        name: name.into(),
+        n: 1,
+        mean_ns: ns,
+        median_ns: ns,
+        p95_ns: ns,
+        min_ns: ns,
+    };
+    all.push(single("orch_fleet_advance_sequential_1shot", seq_ns));
+    all.push(single("orch_fleet_advance_parallel_1shot", par_ns));
+
     // ---- warm-start halving vs cold re-simulation ------------------
     // Same sweep twice: warm resumes each survivor's checkpoint at the
     // previous horizon; cold replays the identical horizon schedule
@@ -317,6 +393,6 @@ fn main() {
     all.push(warm_bench);
     all.push(cold_bench);
 
-    append_trajectory_rows_env(&[fleet_row, warmstart_row]);
+    append_trajectory_rows_env(&[fleet_row, warmstart_row, advance_row]);
     write_bench_json_env("migm.bench.orchestrator_fleet.v1", smoke, &all);
 }

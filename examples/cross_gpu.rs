@@ -47,7 +47,7 @@ fn main() {
         let nb = b.metrics.normalized_vs(&base.metrics);
         t.row(vec![
             spec.name.clone(),
-            format!("{}", table.full_configs().len()),
+            format!("{}", table.full_config_count()),
             format!("{} jobs ({})", m.jobs.len(), m.name),
             fx(na.throughput),
             fx(na.energy),

@@ -1,5 +1,5 @@
-//! End-to-end serving driver (DESIGN.md E12): the full three-layer
-//! stack on a real workload.
+//! End-to-end serving driver: the full three-layer stack on a real
+//! workload.
 //!
 //! Loads the AOT decode artifact (L1 Pallas kernels inside an L2 JAX
 //! graph, compiled to HLO), partitions the A100 model into MIG replica

@@ -32,8 +32,8 @@ use crate::util::Json;
 use crate::workloads::mix::{self, Mix};
 
 /// Canonical experiment seed: heterogeneous-mix shuffles are
-/// seed-sensitive (see EXPERIMENTS.md); this seed reproduces the paper's
-/// scheme ordering on every published mix.
+/// seed-sensitive (see [`crate::report::seed_sweep`]); this seed
+/// reproduces the paper's scheme ordering on every published mix.
 pub const DEFAULT_SEED: u64 = 5;
 
 /// Scheduling policy selector.
@@ -48,6 +48,7 @@ pub enum Scheme {
 }
 
 impl Scheme {
+    /// Parse a CLI/config scheme name (case-insensitive aliases).
     pub fn parse(s: &str) -> Result<Scheme> {
         match s.to_ascii_lowercase().as_str() {
             "baseline" | "base" => Ok(Scheme::Baseline),
@@ -57,6 +58,7 @@ impl Scheme {
         }
     }
 
+    /// Stable display/serialization name.
     pub fn name(&self) -> &'static str {
         match self {
             Scheme::Baseline => "baseline",
@@ -73,9 +75,15 @@ pub enum ArrivalSpec {
     Batch,
     /// Poisson process: exponential inter-arrival gaps at `rate_jps`
     /// jobs/second, seeded from the experiment seed.
-    Poisson { rate_jps: f64 },
+    Poisson {
+        /// Mean arrival rate, jobs/s.
+        rate_jps: f64,
+    },
     /// Explicit arrival trace, one timestamp per job, sorted.
-    Trace { times: Vec<f64> },
+    Trace {
+        /// Sorted arrival times, s.
+        times: Vec<f64>,
+    },
 }
 
 impl ArrivalSpec {
@@ -125,17 +133,23 @@ impl ArrivalSpec {
 /// A fully-resolved experiment.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
+    /// GPU model to simulate.
     pub gpu: GpuSpec,
+    /// Name of the job mix (resolved via [`mix::by_name`]).
     pub mix_name: String,
+    /// Scheduling scheme to run.
     pub scheme: Scheme,
     /// Enable the time-series predictor (early restarts).
     pub prediction: bool,
+    /// Experiment seed (mix shuffle + arrivals).
     pub seed: u64,
     /// Submission scenario (batch unless configured otherwise).
     pub arrivals: ArrivalSpec,
 }
 
 impl ExperimentConfig {
+    /// Resolve an experiment from CLI-style arguments, validating the
+    /// GPU and mix names eagerly.
     pub fn new(gpu: &str, mix_name: &str, scheme: Scheme, prediction: bool, seed: u64) -> Result<Self> {
         let gpu = GpuSpec::by_name(gpu).with_context(|| format!("unknown gpu '{gpu}'"))?;
         // Validate the mix name eagerly.
@@ -222,6 +236,7 @@ impl ExperimentConfig {
         Ok(cfg.with_arrivals(arrivals))
     }
 
+    /// Read and parse a JSON config file.
     pub fn from_file(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {}", path.display()))?;

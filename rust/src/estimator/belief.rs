@@ -74,6 +74,7 @@ impl BeliefKnobs {
         }
     }
 
+    /// Serialize for candidate/checkpoint JSON.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("z", Json::num(self.z)),
@@ -82,6 +83,7 @@ impl BeliefKnobs {
         ])
     }
 
+    /// Parse knobs from candidate/checkpoint JSON (missing keys ⇒ defaults).
     pub fn from_json(doc: &Json) -> Result<Self> {
         let mut k = BeliefKnobs::default();
         match doc.get("z") {
@@ -115,11 +117,14 @@ impl BeliefKnobs {
 /// no-prediction arms).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BeliefConfig {
+    /// Run time-series predictors on iterative jobs.
     pub prediction: bool,
+    /// The convergence/restart knobs.
     pub knobs: BeliefKnobs,
 }
 
 impl BeliefConfig {
+    /// Config with default knobs and the given predictor switch.
     pub fn new(prediction: bool) -> BeliefConfig {
         BeliefConfig {
             prediction,
@@ -165,14 +170,17 @@ impl MemoryBelief {
         self.est.point_gb()
     }
 
+    /// The job's compute demand in GPC units.
     pub fn compute_gpcs(&self) -> u8 {
         self.est.compute_gpcs
     }
 
+    /// True while the memory requirement is unknown upfront.
     pub fn is_unknown(&self) -> bool {
         self.est.is_unknown()
     }
 
+    /// Refinement generation of the current estimate.
     pub fn generation(&self) -> u32 {
         self.est.generation
     }
@@ -182,6 +190,7 @@ impl MemoryBelief {
         self.est.hi_gb().max(self.observed_peak_gb)
     }
 
+    /// Highest footprint observed at runtime so far, GB.
     pub fn observed_peak_gb(&self) -> f64 {
         self.observed_peak_gb
     }
@@ -306,6 +315,7 @@ pub struct BeliefLedger {
 }
 
 impl BeliefLedger {
+    /// Empty ledger under `cfg`.
     pub fn new(cfg: BeliefConfig) -> BeliefLedger {
         BeliefLedger {
             cfg,
@@ -314,14 +324,17 @@ impl BeliefLedger {
         }
     }
 
+    /// The ledger's configuration.
     pub fn config(&self) -> &BeliefConfig {
         &self.cfg
     }
 
+    /// Number of opened beliefs (one per submitted job).
     pub fn len(&self) -> usize {
         self.beliefs.len()
     }
 
+    /// True when no beliefs have been opened.
     pub fn is_empty(&self) -> bool {
         self.beliefs.is_empty()
     }
@@ -333,6 +346,7 @@ impl BeliefLedger {
         self.beliefs.len() - 1
     }
 
+    /// The belief for job `id`.
     pub fn get(&self, id: BeliefId) -> &MemoryBelief {
         &self.beliefs[id]
     }

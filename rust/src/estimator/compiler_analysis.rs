@@ -18,8 +18,11 @@ pub const WARPS_PER_SM: u32 = 64;
 /// One device buffer the kernel allocates.
 #[derive(Debug, Clone)]
 pub struct BufferDecl {
+    /// Buffer name (diagnostics only).
     pub name: String,
+    /// Element count.
     pub elems: u64,
+    /// Bytes per element.
     pub elem_bytes: u32,
     /// Allocation multiplicity (double buffering, per-stream copies...).
     pub copies: u32,
@@ -28,9 +31,13 @@ pub struct BufferDecl {
 /// Kernel resource descriptor — the compiler pass's output.
 #[derive(Debug, Clone)]
 pub struct KernelResource {
+    /// Kernel name (diagnostics only).
     pub name: String,
+    /// Device buffers the kernel allocates.
     pub buffers: Vec<BufferDecl>,
+    /// Launch block size.
     pub threads_per_block: u32,
+    /// Launch grid size.
     pub blocks: u64,
     /// Fixed runtime overhead (CUDA context etc.), GB.
     pub context_gb: f64,
@@ -39,6 +46,7 @@ pub struct KernelResource {
 /// Analysis result for one workload.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct WorkloadAnalysis {
+    /// Estimated peak device memory, GB.
     pub mem_gb: f64,
     /// Raw warp demand of the launch.
     pub warps: u64,

@@ -13,22 +13,54 @@
 pub enum Layer {
     /// 2-D convolution producing `[out_ch, out_h, out_w]`.
     Conv2d {
+        /// Input channels.
         in_ch: u64,
+        /// Output channels.
         out_ch: u64,
+        /// Square kernel size.
         k: u64,
+        /// Output height.
         out_h: u64,
+        /// Output width.
         out_w: u64,
     },
     /// Fully connected.
-    Linear { d_in: u64, d_out: u64 },
+    Linear {
+        /// Input features.
+        d_in: u64,
+        /// Output features.
+        d_out: u64,
+    },
     /// Pooling / activation-only (no weights), output `[ch, h, w]`.
-    Pool { ch: u64, out_h: u64, out_w: u64 },
+    Pool {
+        /// Channels.
+        ch: u64,
+        /// Output height.
+        out_h: u64,
+        /// Output width.
+        out_w: u64,
+    },
     /// Token embedding.
-    Embedding { vocab: u64, dim: u64 },
+    Embedding {
+        /// Vocabulary size.
+        vocab: u64,
+        /// Embedding dimension.
+        dim: u64,
+    },
     /// Transformer encoder block over `[seq, dim]` (BERT-style).
-    TransformerBlock { seq: u64, dim: u64, ffn: u64 },
+    TransformerBlock {
+        /// Sequence length.
+        seq: u64,
+        /// Model dimension.
+        dim: u64,
+        /// Feed-forward hidden dimension.
+        ffn: u64,
+    },
     /// Normalization over `dim` features.
-    Norm { dim: u64 },
+    Norm {
+        /// Feature dimension.
+        dim: u64,
+    },
 }
 
 /// Optimizer state multiplier per weight.
@@ -55,19 +87,28 @@ impl Optimizer {
 /// A model definition: named layer list.
 #[derive(Debug, Clone)]
 pub struct ModelDef {
+    /// Model name (reporting only).
     pub name: String,
+    /// The layer graph, in forward order.
     pub layers: Vec<Layer>,
 }
 
 /// DNNMem-style breakdown (all GB).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DnnEstimate {
+    /// Model weights.
     pub weights_gb: f64,
+    /// Gradient buffers (one per weight in training).
     pub gradients_gb: f64,
+    /// Optimizer state (momentum/moment buffers).
     pub optimizer_gb: f64,
+    /// Forward tape kept for backward.
     pub activations_gb: f64,
+    /// cuDNN im2col / cuBLAS workspace.
     pub workspace_gb: f64,
+    /// CUDA context overhead.
     pub context_gb: f64,
+    /// Sum of all components with the fragmentation factor applied.
     pub total_gb: f64,
 }
 

@@ -74,6 +74,7 @@ pub struct MemoryEstimate {
     pub mem_gb: f64,
     /// Compute demand in GPC units (soft constraint).
     pub compute_gpcs: u8,
+    /// Which tier produced the estimate.
     pub method: EstimationMethod,
 }
 
@@ -89,8 +90,11 @@ pub enum MemoryDemand {
     /// the estimator's uncertainty for consumers that want it
     /// (tuner state, reports, future RL partitioners).
     Band {
+        /// Lower edge of the band, GB.
         lo_gb: f64,
+        /// Placement-driving point value (the legacy `mem_gb`), GB.
         point_gb: f64,
+        /// Upper edge of the band, GB.
         hi_gb: f64,
     },
 }
@@ -100,9 +104,11 @@ pub enum MemoryDemand {
 /// refined at runtime through [`belief::MemoryBelief`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Estimate {
+    /// The memory requirement with its uncertainty band.
     pub demand: MemoryDemand,
     /// Compute demand in GPC units (soft constraint).
     pub compute_gpcs: u8,
+    /// Which tier produced the estimate.
     pub method: EstimationMethod,
     /// Refinement generation: 0 for the a-priori estimate, incremented
     /// by every runtime refinement (OOM bump, converged prediction,
@@ -146,6 +152,7 @@ impl Estimate {
         }
     }
 
+    /// True for the unknown-upfront (time-series) state.
     pub fn is_unknown(&self) -> bool {
         matches!(self.demand, MemoryDemand::Unknown)
     }

@@ -24,25 +24,36 @@ pub enum EstimateInput<'a> {
     /// A compiled scientific kernel (Rodinia): the compiler pass's
     /// resource descriptor plus the GPU's GPC count for warp folding.
     Kernel {
+        /// The compiler pass's resource descriptor.
         resource: &'a KernelResource,
+        /// The target GPU's GPC count (for warp folding).
         total_gpcs: u8,
     },
     /// A DNN training/inference job: layer graph + batch + optimizer.
     Model {
+        /// The layer graph.
         model: &'a ModelDef,
+        /// Batch size.
         batch: u64,
+        /// Optimizer (drives per-weight state).
         opt: Optimizer,
+        /// Compute demand in GPC units.
         demand_gpcs: u8,
     },
     /// A dynamically-growing workload (LLM): nothing is knowable
     /// upfront beyond the compute demand.
-    Dynamic { demand_gpcs: u8 },
+    Dynamic {
+        /// Compute demand in GPC units.
+        demand_gpcs: u8,
+    },
 }
 
 /// One estimation tier. `estimate` returns `None` for inputs the tier
 /// does not understand, letting the pipeline fall through.
 pub trait Estimator: Send + Sync {
+    /// Stable tier name (reports and provenance).
     fn name(&self) -> &'static str;
+    /// The tier's estimate, or `None` if the input kind is not its job.
     fn estimate(&self, input: &EstimateInput) -> Option<Estimate>;
 }
 
@@ -126,6 +137,7 @@ pub struct EstimationPipeline {
 }
 
 impl EstimationPipeline {
+    /// A pipeline from an explicit tier order.
     pub fn new(tiers: Vec<Box<dyn Estimator>>) -> EstimationPipeline {
         EstimationPipeline { tiers }
     }

@@ -12,11 +12,14 @@ use crate::estimator::dnnmem::{Layer, ModelDef};
 /// One workspace pool parsed from `CUBLAS_WORKSPACE_CONFIG`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WorkspacePool {
+    /// Pool buffer size, KiB.
     pub size_kib: u64,
+    /// Number of buffers in the pool.
     pub count: u64,
 }
 
 impl WorkspacePool {
+    /// Total pool footprint in bytes.
     pub fn bytes(&self) -> u64 {
         self.size_kib * 1024 * self.count
     }

@@ -62,6 +62,7 @@ pub use queue::GlobalQueue;
 /// [`ShardedPolicy`](crate::scheduler::ShardedPolicy) bit for bit.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FleetKnobs {
+    /// Which placement engine routes arrivals across GPUs.
     pub placement: PlacementMode,
     /// Migrate queued (never running) jobs from backlogged GPUs to idle
     /// ones between arrival barriers.
@@ -102,6 +103,7 @@ impl FleetKnobs {
         s
     }
 
+    /// Canonical JSON form (sweep candidate axis).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("placement", Json::str(self.placement.as_str())),
@@ -113,6 +115,8 @@ impl FleetKnobs {
         ])
     }
 
+    /// Inverse of [`Self::to_json`]; missing keys take the legacy
+    /// defaults.
     pub fn from_json(doc: &Json) -> Result<Self> {
         let mut knobs = FleetKnobs::default();
         match doc.get("placement") {
@@ -177,14 +181,17 @@ impl<P: SchedulingPolicy> FleetPolicy<P> {
         }
     }
 
+    /// Number of per-GPU shard policies.
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
 
+    /// One GPU's shard policy.
     pub fn shard(&self, gpu: GpuId) -> &P {
         &self.shards[gpu]
     }
 
+    /// The fleet knobs this policy runs with.
     pub fn knobs(&self) -> &FleetKnobs {
         &self.knobs
     }

@@ -40,6 +40,7 @@ use super::placement::{fits, profile_watts};
 /// Sub-problem caps: branch-and-bound is exponential, so the property
 /// suite stays at arXiv:2409.06646's tractable scale.
 pub const MAX_GPUS: usize = 4;
+/// Largest job count `solve` accepts.
 pub const MAX_JOBS: usize = 12;
 
 /// The documented optimality gap of the fast placement engine:
@@ -51,7 +52,9 @@ pub const DOCUMENTED_GAP: f64 = 2.0;
 /// One job in the static placement model.
 #[derive(Debug, Clone)]
 pub struct JobDemand {
+    /// Peak memory footprint, GB.
     pub mem_gb: f64,
+    /// Compute demand, GPC units.
     pub gpcs: u8,
     /// Total work in GPC-seconds (runtime on one GPC).
     pub work_gpc_s: f64,
@@ -60,7 +63,9 @@ pub struct JobDemand {
 /// A static placement sub-problem: assign every job to one GPU.
 #[derive(Debug, Clone)]
 pub struct PlacementProblem {
+    /// Per-GPU models, in fleet order.
     pub specs: Vec<Arc<GpuSpec>>,
+    /// The jobs to assign.
     pub jobs: Vec<JobDemand>,
 }
 
@@ -69,7 +74,9 @@ pub struct PlacementProblem {
 pub struct Placement {
     /// `assignment[j]` = GPU index of job `j`.
     pub assignment: Vec<usize>,
+    /// Modeled fleet makespan, s.
     pub makespan_s: f64,
+    /// Modeled total energy, J.
     pub energy_j: f64,
 }
 

@@ -46,6 +46,7 @@ pub enum PlacementMode {
 }
 
 impl PlacementMode {
+    /// Stable serialized name.
     pub fn as_str(&self) -> &'static str {
         match self {
             PlacementMode::RoundRobin => "round-robin",
@@ -53,6 +54,7 @@ impl PlacementMode {
         }
     }
 
+    /// Inverse of [`Self::as_str`].
     pub fn from_str(s: &str) -> Option<PlacementMode> {
         match s {
             "round-robin" => Some(PlacementMode::RoundRobin),
@@ -66,9 +68,13 @@ impl PlacementMode {
 /// the same O(1) scale, so 1.0 everywhere is a sane default.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlacementWeights {
+    /// Weight of the queue-depth (load) term.
     pub queue: f64,
+    /// Weight of the slice-fit (fragmentation) term.
     pub fit: f64,
+    /// Weight of the would-need-reconfiguration term.
     pub reconfig: f64,
+    /// Weight of the marginal-energy term.
     pub energy: f64,
 }
 

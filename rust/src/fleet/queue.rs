@@ -26,6 +26,7 @@ pub struct GlobalQueue {
 }
 
 impl GlobalQueue {
+    /// Empty queue for a fleet of `n_gpus`.
     pub fn new(n_gpus: usize) -> Self {
         GlobalQueue {
             backlog: (0..n_gpus).map(|_| VecDeque::new()).collect(),
@@ -33,6 +34,7 @@ impl GlobalQueue {
         }
     }
 
+    /// Fleet size this queue tracks.
     pub fn n_gpus(&self) -> usize {
         self.backlog.len()
     }

@@ -15,7 +15,13 @@
 //!   discrete-event GPU simulator, PJRT runtime, serving loop. Python is
 //!   never on the request path.
 //!
-//! Module map (see `DESIGN.md` for the full inventory):
+//! The architecture book — dataflow diagrams, the determinism contract
+//! (including thread-count invariance of parallel fleet advancement),
+//! the checkpoint model, and the scaling story behind the slab job
+//! store and analytic reachability — lives in `docs/ARCHITECTURE.md`.
+//!
+//! Module map (one line each; `docs/ARCHITECTURE.md` has the table
+//! with responsibilities and oracle pairings):
 //!
 //! * [`mig`] — MIG geometry, partition-state FSM, future-configuration
 //!   reachability, the max-reachability allocator (paper Alg. 2/3), and
@@ -109,6 +115,8 @@
 //!   queueing + turnaround percentiles) and paper-figure harnesses.
 //! * [`config`] — JSON configuration for GPUs, mixes, schemes, and
 //!   arrival scenarios.
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod estimator;

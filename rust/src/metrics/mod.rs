@@ -5,6 +5,7 @@
 /// Metrics of one batch run.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BatchMetrics {
+    /// Jobs completed in the run.
     pub n_jobs: usize,
     /// Batch makespan (s).
     pub makespan_s: f64,
@@ -12,6 +13,7 @@ pub struct BatchMetrics {
     pub throughput_jps: f64,
     /// Total energy (J).
     pub energy_j: f64,
+    /// Energy divided by completed jobs (J).
     pub energy_per_job_j: f64,
     /// Time-averaged fraction of GPU memory covered by running jobs'
     /// actual footprints.
@@ -48,9 +50,13 @@ impl BatchMetrics {
 /// Improvement factors relative to the baseline (1.0 = parity).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NormalizedMetrics {
+    /// Throughput gain over baseline.
     pub throughput: f64,
+    /// Energy gain (baseline ÷ this run; >1 means less energy used).
     pub energy: f64,
+    /// Memory-utilization gain over baseline.
     pub mem_utilization: f64,
+    /// Turnaround gain (baseline ÷ this run; >1 means faster).
     pub turnaround: f64,
 }
 
@@ -82,11 +88,17 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
 /// turnaround. All in seconds.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct LatencyStats {
+    /// Mean queueing delay (submit → final launch).
     pub mean_queue_s: f64,
+    /// Median queueing delay.
     pub p50_queue_s: f64,
+    /// 99th-percentile queueing delay.
     pub p99_queue_s: f64,
+    /// Mean turnaround (submit → completion).
     pub mean_turnaround_s: f64,
+    /// Median turnaround.
     pub p50_turnaround_s: f64,
+    /// 99th-percentile turnaround.
     pub p99_turnaround_s: f64,
 }
 
@@ -125,6 +137,7 @@ pub struct RollingWindow {
 }
 
 impl RollingWindow {
+    /// A window keeping the last `cap` pushed values (cap > 0).
     pub fn new(cap: usize) -> RollingWindow {
         assert!(cap > 0, "window capacity must be positive");
         RollingWindow {
@@ -133,6 +146,7 @@ impl RollingWindow {
         }
     }
 
+    /// Push a value, evicting the oldest when full.
     pub fn push(&mut self, v: f64) {
         if self.buf.len() == self.cap {
             self.buf.pop_front();
@@ -140,10 +154,12 @@ impl RollingWindow {
         self.buf.push_back(v);
     }
 
+    /// Number of values currently held (≤ cap).
     pub fn len(&self) -> usize {
         self.buf.len()
     }
 
+    /// True before the first push.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
@@ -158,10 +174,12 @@ impl RollingWindow {
         Some(percentile(&samples, q))
     }
 
+    /// Median over the window; `None` when empty.
     pub fn p50(&self) -> Option<f64> {
         self.percentile(50.0)
     }
 
+    /// 99th percentile over the window; `None` when empty.
     pub fn p99(&self) -> Option<f64> {
         self.percentile(99.0)
     }
@@ -169,11 +187,14 @@ impl RollingWindow {
 
 /// Simple fixed-width table renderer for the report harnesses.
 pub struct Table {
+    /// Column headers.
     pub header: Vec<String>,
+    /// Data rows; each must match the header width.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Table {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -181,11 +202,13 @@ impl Table {
         }
     }
 
+    /// Append a row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len());
         self.rows.push(cells);
     }
 
+    /// Render as fixed-width text.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();

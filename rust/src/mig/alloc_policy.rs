@@ -44,6 +44,8 @@ pub struct PolicyManager {
 }
 
 impl PolicyManager {
+    /// Empty-state manager using `policy` to pick placements (`seed`
+    /// drives the `Random` policy only).
     pub fn new(spec: Arc<GpuSpec>, policy: PlacementPolicy, seed: u64) -> Self {
         let table = ReachabilityTable::shared(&spec);
         PolicyManager {
@@ -57,11 +59,13 @@ impl PolicyManager {
         }
     }
 
+    /// Current partition state.
     pub fn state(&self) -> &PartitionState {
         &self.state
     }
 
-    pub fn current_fcr(&self) -> u32 {
+    /// Full-completion reachability score of the current state.
+    pub fn current_fcr(&self) -> u64 {
         self.table.fcr(&self.state).unwrap_or(0)
     }
 
@@ -79,10 +83,12 @@ impl PolicyManager {
             .collect()
     }
 
+    /// True if some legal placement exists for `profile`.
     pub fn can_alloc(&self, profile: usize) -> bool {
         !self.candidates(profile).is_empty()
     }
 
+    /// Allocate an instance of `profile` at the policy's chosen placement.
     pub fn alloc(&mut self, profile: usize) -> Result<InstanceId, MigError> {
         let cands = self.candidates(profile);
         if cands.is_empty() {
@@ -95,7 +101,7 @@ impl PolicyManager {
             PlacementPolicy::LastFit => *cands.last().unwrap(),
             PlacementPolicy::Random => *self.rng.choice(&cands),
             PlacementPolicy::MaxReachability => {
-                let mut scored: Vec<(Placement, u32)> = cands
+                let mut scored: Vec<(Placement, u64)> = cands
                     .into_iter()
                     .map(|p| (p, self.table.fcr(&self.state.with(p)).unwrap()))
                     .collect();
@@ -110,6 +116,7 @@ impl PolicyManager {
         Ok(id)
     }
 
+    /// Destroy the live instance `id`, returning its slices to the pool.
     pub fn free(&mut self, id: InstanceId) -> Result<(), MigError> {
         let p = self
             .instances
@@ -125,13 +132,18 @@ impl PolicyManager {
 /// rejected under each policy (premature fragmentation = rejections).
 #[derive(Debug, Clone, Copy)]
 pub struct ChurnResult {
+    /// The placement policy under test.
     pub policy: PlacementPolicy,
+    /// Large-profile allocation attempts made during churn.
     pub large_attempts: usize,
+    /// Large-profile attempts rejected for lack of a legal placement.
     pub large_rejections: usize,
+    /// Mean full-completion reachability over the run's states.
     pub mean_fcr: f64,
 }
 
 impl ChurnResult {
+    /// Fraction of large-profile attempts rejected.
     pub fn rejection_rate(&self) -> f64 {
         self.large_rejections as f64 / self.large_attempts.max(1) as f64
     }
@@ -225,7 +237,7 @@ mod tests {
     fn max_reachability_beats_random_on_rejections() {
         // Quantifying the paper's flexibility claim: reachability-guided
         // placement rejects fewer large requests than *random* placement
-        // under identical churn. (Ablation finding, EXPERIMENTS.md §Abl:
+        // under identical churn. (Ablation finding, benches/ablation_allocator.rs:
         // plain bottom-packing first-fit rejects even fewer here — the
         // fcr metric hedges over ALL future configurations rather than
         // optimizing large-slice survival specifically.)

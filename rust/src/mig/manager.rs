@@ -38,8 +38,10 @@ pub type InstanceId = u32;
 /// Errors from the partition manager.
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum MigError {
+    /// No legal placement exists for the named profile right now.
     #[error("no legal placement for profile {0} in the current state")]
     NoPlacement(String),
+    /// The instance id is not live (never allocated, or already freed).
     #[error("unknown instance id {0}")]
     UnknownInstance(InstanceId),
     /// A plan failed validation or execution (see [`PlanError`]).
@@ -71,12 +73,13 @@ pub struct PartitionManager {
 }
 
 impl PartitionManager {
+    /// Empty-state manager; fetches the spec's cached reachability table.
     pub fn new(spec: Arc<GpuSpec>) -> Self {
         let table = ReachabilityTable::shared(&spec);
         Self::with_table(spec, table)
     }
 
-    /// Share the (expensive) reachability table across managers.
+    /// Share the reachability table across managers (one per GPU model).
     pub fn with_table(spec: Arc<GpuSpec>, table: Arc<ReachabilityTable>) -> Self {
         PartitionManager {
             spec,
@@ -110,41 +113,49 @@ impl PartitionManager {
         (m, ids)
     }
 
+    /// The GPU model this manager partitions.
     pub fn spec(&self) -> &GpuSpec {
         &self.spec
     }
 
+    /// The reachability table scoring this spec's states.
     pub fn table(&self) -> &ReachabilityTable {
         &self.table
     }
 
+    /// Current partition state (canonical placement set).
     pub fn state(&self) -> &PartitionState {
         &self.state
     }
 
+    /// Number of live instances.
     pub fn instance_count(&self) -> usize {
         self.instances.len()
     }
 
+    /// The live instance's placement, if `id` is live.
     pub fn placement_of(&self, id: InstanceId) -> Option<Placement> {
         self.instances.get(&id).copied()
     }
 
+    /// The live instance's profile index into `spec.profiles`.
     pub fn profile_of(&self, id: InstanceId) -> Option<usize> {
         self.instances.get(&id).map(|p| p.profile as usize)
     }
 
+    /// The live instance's usable memory, GB.
     pub fn mem_gb_of(&self, id: InstanceId) -> Option<f64> {
         self.profile_of(id).map(|p| self.spec.profiles[p].mem_gb)
     }
 
+    /// The live instance's compute-slice (GPC) count.
     pub fn compute_slices_of(&self, id: InstanceId) -> Option<u8> {
         self.profile_of(id)
             .map(|p| self.spec.profiles[p].compute_slices)
     }
 
     /// All successor placements for `profile` with their fcr scores.
-    pub fn placement_candidates(&self, profile: usize) -> Vec<(Placement, u32)> {
+    pub fn placement_candidates(&self, profile: usize) -> Vec<(Placement, u64)> {
         let prof = &self.spec.profiles[profile];
         let mut out = Vec::new();
         for &s in &prof.placements {
@@ -173,7 +184,7 @@ impl PartitionManager {
     /// never drift between the micro-op and transactional paths.
     fn argmax_placement(&self, state: &PartitionState, profile: usize) -> Option<Placement> {
         let prof = &self.spec.profiles[profile];
-        let mut best: Option<(Placement, u32)> = None;
+        let mut best: Option<(Placement, u64)> = None;
         for &s in &prof.placements {
             let p = Placement {
                 profile: profile as u8,
@@ -390,6 +401,24 @@ impl PartitionManager {
     /// and apply `plan` atomically. Used by paths that reconfigure
     /// outside simulated time (e.g. the serving front-end's replica
     /// reservation).
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use migm::mig::{GpuSpec, PartitionManager, PartitionPlan};
+    ///
+    /// let spec = Arc::new(GpuSpec::a100_40gb());
+    /// let mut mgr = PartitionManager::new(spec.clone());
+    /// let p2g = spec.profile_index("2g.10gb").unwrap();
+    ///
+    /// // Create two 2g.10gb instances in one transaction...
+    /// let ids = mgr.apply_plan(&PartitionPlan::create_n(p2g, 2)).unwrap();
+    /// assert_eq!(ids.len(), 2);
+    ///
+    /// // ...then free one. All-or-nothing: an invalid plan leaves the
+    /// // manager untouched.
+    /// mgr.apply_plan(&PartitionPlan::destroy_only([ids[0]])).unwrap();
+    /// assert!(mgr.apply_plan(&PartitionPlan::destroy_only([ids[0]])).is_err());
+    /// ```
     pub fn apply_plan(&mut self, plan: &PartitionPlan) -> Result<Vec<InstanceId>, PlanError> {
         self.begin(plan)?;
         self.commit()
@@ -425,8 +454,8 @@ impl PartitionManager {
         use std::cmp::Reverse;
         use std::collections::BinaryHeap;
 
-        // Resolve and dedup the candidate set. The u64 slice mask caps
-        // live instances at 64, so a u128 subset mask always fits.
+        // Resolve and dedup the candidate set. The u128 slice mask caps
+        // live instances at 127, so a u128 subset mask always fits.
         let mut cand: Vec<(InstanceId, Placement, f64)> = Vec::new();
         for &id in destroyable {
             if cand.iter().any(|(c, _, _)| *c == id) {
@@ -652,7 +681,7 @@ impl PartitionManager {
     }
 
     /// fcr of the current state.
-    pub fn current_fcr(&self) -> u32 {
+    pub fn current_fcr(&self) -> u64 {
         self.table.fcr(&self.state).unwrap_or(0)
     }
 
@@ -1041,8 +1070,8 @@ mod tests {
     /// 16-candidate truncation could ever see. The 2-slice profile
     /// places only at slice 15, so fusing it requires destroying the
     /// instances on slices 15 *and* 16 and the search stays shallow
-    /// (the ~2^17-state reachability precompute is inherent to having
-    /// 17 live instances, but the Dijkstra itself stops at depth 2).
+    /// (the Dijkstra stops at depth 2; the analytic reachability table
+    /// makes the 17-slice fcr queries free).
     fn wide_spec() -> GpuSpec {
         GpuSpec::custom(
             "WIDE-17",

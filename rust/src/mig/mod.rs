@@ -10,11 +10,16 @@
 //!   to the uniform legacy `reconfig_op_s`.
 //! * [`state`] — placements, canonical partition states, enumeration of
 //!   valid and fully-configured states (reproduces Figure 3's 19
-//!   configs). Slice masks are `u64`, so synthetic specs up to 63
+//!   configs). Slice masks are `u128`, so synthetic specs up to 127
 //!   memory slices are representable.
-//! * [`reachability`] — precomputed future-configuration reachability:
-//!   the state graph the allocator scores against and the planner
-//!   searches over.
+//! * [`reachability`] — future-configuration reachability. The
+//!   production [`ReachabilityTable`] is *analytic*: on compute-free
+//!   specs (every NVIDIA part, every synthetic what-if) it answers
+//!   `fcr` from a per-interval maximal-packing table without
+//!   enumerating the state space, so 100+-slice specs plan in
+//!   microseconds. The legacy exhaustive enumeration survives as
+//!   [`reachability::ExhaustiveReachability`], the property-test
+//!   oracle and compute-binding fallback.
 //! * [`plan`] — [`PartitionPlan`]: an ordered list of typed
 //!   `Destroy`/`Create` ops with multi-create support, plus the
 //!   [`PlanError`] taxonomy.
@@ -49,5 +54,5 @@ pub use alloc_policy::{churn_experiment, ChurnResult, PlacementPolicy, PolicyMan
 pub use manager::{InstanceId, MigError, PartitionManager, PartitionSnapshot};
 pub use plan::{PartitionPlan, PlanError, PlanOp};
 pub use profile::{GpuSpec, MigProfile};
-pub use reachability::ReachabilityTable;
+pub use reachability::{ExhaustiveReachability, ReachabilityTable};
 pub use state::{enumerate_states, PartitionState, Placement};

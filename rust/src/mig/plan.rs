@@ -170,6 +170,7 @@ impl PartitionPlan {
         self.ops.len()
     }
 
+    /// True when the plan performs no operations.
     pub fn is_empty(&self) -> bool {
         self.ops.is_empty()
     }
@@ -190,10 +191,12 @@ impl PartitionPlan {
         })
     }
 
+    /// Number of destroy operations.
     pub fn n_destroys(&self) -> usize {
         self.destroys().count()
     }
 
+    /// Number of create operations.
     pub fn n_creates(&self) -> usize {
         self.creates().count()
     }

@@ -26,6 +26,7 @@ pub struct MigProfile {
 /// Static description of one MIG-capable GPU model.
 #[derive(Debug, Clone)]
 pub struct GpuSpec {
+    /// Model name (e.g. "A100-40GB"); keys the shared reachability cache.
     pub name: String,
     /// Memory slices on the placement axis (8 on A100; slice 7 is not
     /// addressable by 1g profiles).
@@ -213,8 +214,8 @@ impl GpuSpec {
         profiles: Vec<MigProfile>,
     ) -> Self {
         assert!(
-            total_mem_slices < 64,
-            "placement masks are u64: at most 63 memory slices"
+            total_mem_slices < 128,
+            "placement masks are u128: at most 127 memory slices"
         );
         let mut spec = GpuSpec {
             name: name.into(),

@@ -1,10 +1,41 @@
-//! Future-configuration reachability (paper §4.2, Algorithm 2).
+//! Future-configuration reachability (paper §4.2, Algorithm 2) —
+//! analytic form.
 //!
 //! `fcr(s)` = number of fully-configured states reachable from `s` by
-//! further allocations = number of maximal states whose placement set is a
-//! superset of `s`'s. Precomputed once per GPU spec by enumerating the
-//! (small, finite) state space and, for each maximal state, crediting all
-//! subsets of its placement set.
+//! further allocations = number of maximal states whose placement set
+//! is a superset of `s`'s. The original implementation (kept as
+//! [`ExhaustiveReachability`], the property-test oracle) enumerated the
+//! whole state space and credited all `2^k` subsets of every maximal
+//! config — fine for the 8-slice NVIDIA parts, hopeless past ~20
+//! slices, and the reason synthetic what-if specs were capped.
+//!
+//! [`ReachabilityTable`] now computes `fcr` without enumerating
+//! anything, from one observation: on a *compute-free* spec (one where
+//! no geometric tiling can exceed the compute budget — true of every
+//! NVIDIA placement table and of the synthetic what-if specs), the
+//! compute constraint never binds, so
+//!
+//! 1. a state is **valid** iff it is geometrically placeable (legal
+//!    starts, in bounds, non-overlapping) — no table lookup needed;
+//! 2. a state is **maximal** iff no profile fits in any free gap; and
+//! 3. maximal completions of different free runs are independent, so
+//!    `fcr(s) = Π over maximal free runs [a,b) of T[a][b]`, where
+//!    `T[a][b]` counts the maximal packings of slice interval `[a,b)`.
+//!
+//! `T` satisfies a first-placement recurrence — pick the leftmost
+//! placement `(p, x)`, require that the skipped gap `[a, x)` admits no
+//! placement (else the packing is not maximal), recurse on the suffix —
+//! and is precomputed once per spec in O(M² · placements) time and
+//! O(M²) space, so 100+-slice specs build in microseconds and every
+//! `fcr` query is O(#free runs). Counts use saturating `u128`
+//! arithmetic internally and saturate to `u64` at the API (the policy
+//! layer only compares magnitudes; saturation can only merge ties at
+//! astronomically large counts).
+//!
+//! Specs where compute *does* bind (max geometric tiling compute >
+//! budget) fall back to the exhaustive oracle internally — such specs
+//! are small by construction, since compute-binding placement tables
+//! are an NVIDIA non-goal the synthetic generators also avoid.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -12,19 +43,35 @@ use std::sync::Arc;
 use super::profile::GpuSpec;
 use super::state::{enumerate_states, PartitionState, Placement};
 
-/// Precomputed reachability table for one GPU spec.
+/// One profile's geometry, copied out of the spec so validity and
+/// `fcr` queries never re-touch `GpuSpec`.
+#[derive(Debug, Clone)]
+struct ProfileGeom {
+    mem_slices: u8,
+    compute_slices: u8,
+    /// Bitmask of allowed start slices.
+    starts: u128,
+}
+
+/// Reachability oracle for one GPU spec: analytic on compute-free
+/// specs (see the module docs), exhaustive fallback otherwise.
 #[derive(Debug, Clone)]
 pub struct ReachabilityTable {
-    fcr: HashMap<PartitionState, u32>,
-    full_configs: Vec<PartitionState>,
-    n_states: usize,
+    n_mem: usize,
+    total_compute: u8,
+    profiles: Vec<ProfileGeom>,
+    /// `tile[a * (n_mem + 1) + b]` = number of maximal packings of
+    /// slice interval `[a, b)`. Populated only on compute-free specs.
+    tile: Vec<u128>,
+    /// Exhaustive fallback for compute-binding specs (`None` on the
+    /// analytic path).
+    exhaustive: Option<ExhaustiveReachability>,
 }
 
 impl ReachabilityTable {
     /// Process-wide cache: the table depends only on the GPU model, and
-    /// every simulator instance needs one — precomputing per `GpuSim`
-    /// dominated the figure harnesses (EXPERIMENTS.md §Perf: ~276us per
-    /// precompute vs ~65ns per cache hit).
+    /// every simulator instance needs one — building per `GpuSim`
+    /// dominated the figure harnesses before it was shared.
     pub fn shared(spec: &GpuSpec) -> Arc<ReachabilityTable> {
         use std::collections::hash_map::Entry;
         use std::sync::{Mutex, OnceLock};
@@ -37,11 +84,206 @@ impl ReachabilityTable {
         }
     }
 
-    /// Paper Algorithm 2: enumerate all valid partition states and count,
-    /// for each, the reachable fully-configured states.
+    /// Build the reachability oracle for `spec`. Despite the legacy
+    /// name this no longer enumerates the state space: compute-free
+    /// specs (all NVIDIA parts, all synthetic what-ifs) get the O(M²)
+    /// maximal-packing table; only compute-binding specs fall back to
+    /// the exhaustive enumeration.
+    pub fn precompute(spec: &GpuSpec) -> Self {
+        let n_mem = spec.total_mem_slices as usize;
+        let profiles: Vec<ProfileGeom> = spec
+            .profiles
+            .iter()
+            .map(|p| ProfileGeom {
+                mem_slices: p.mem_slices,
+                compute_slices: p.compute_slices,
+                starts: p.placements.iter().fold(0u128, |m, &s| m | (1u128 << s)),
+            })
+            .collect();
+        let mut table = ReachabilityTable {
+            n_mem,
+            total_compute: spec.total_compute,
+            profiles,
+            tile: Vec::new(),
+            exhaustive: None,
+        };
+        if table.max_tiling_compute() <= spec.total_compute as u64 {
+            table.build_tile_table();
+        } else {
+            table.exhaustive = Some(ExhaustiveReachability::precompute(spec));
+        }
+        table
+    }
+
+    /// All placements `(profile, start, len)` in the spec, flattened.
+    fn placements(&self) -> impl Iterator<Item = (usize, usize, usize)> + '_ {
+        self.profiles.iter().enumerate().flat_map(move |(pi, p)| {
+            (0..self.n_mem).filter_map(move |s| {
+                let fits = p.starts & (1u128 << s) != 0
+                    && s + p.mem_slices as usize <= self.n_mem;
+                fits.then_some((pi, s, p.mem_slices as usize))
+            })
+        })
+    }
+
+    /// Maximum total compute over geometric tilings of the whole slice
+    /// axis (max-weight interval packing, O(M · placements) DP). If it
+    /// fits the budget, the compute constraint can never bind: any
+    /// non-overlapping state extends to some tiling, whose compute
+    /// bounds the state's.
+    fn max_tiling_compute(&self) -> u64 {
+        let mut mc = vec![0u64; self.n_mem + 1];
+        for a in (0..self.n_mem).rev() {
+            mc[a] = mc[a + 1];
+            for (pi, s, len) in self.placements() {
+                if s == a {
+                    mc[a] = mc[a].max(self.profiles[pi].compute_slices as u64 + mc[a + len]);
+                }
+            }
+        }
+        mc[0]
+    }
+
+    /// Fill `tile[a][b]` = number of maximal packings of `[a, b)` via
+    /// the first-placement recurrence. `lim[a]` = earliest end of any
+    /// placement starting at or after `a`; a skipped gap `[a, x)` is
+    /// allowed in a maximal packing iff `x < lim[a]` (nothing fits in
+    /// it), and the empty packing of `[a, b)` is maximal iff
+    /// `b < lim[a]`.
+    fn build_tile_table(&mut self) {
+        let m = self.n_mem;
+        let w = m + 1;
+        let mut lim = vec![usize::MAX; m + 1];
+        for a in (0..m).rev() {
+            lim[a] = lim[a + 1];
+            for (_, s, len) in self.placements() {
+                if s == a {
+                    lim[a] = lim[a].min(s + len);
+                }
+            }
+        }
+        let mut tile = vec![0u128; w * w];
+        for a in 0..=m {
+            tile[a * w + a] = 1;
+        }
+        for a in (0..m).rev() {
+            for b in (a + 1)..=m {
+                let mut n: u128 = if b < lim[a] { 1 } else { 0 };
+                for (_, x, len) in self.placements() {
+                    if x >= a && x + len <= b && x < lim[a] {
+                        n = n.saturating_add(tile[(x + len) * w + b]);
+                    }
+                }
+                tile[a * w + b] = n;
+            }
+        }
+        self.tile = tile;
+    }
+
+    /// Geometric validity: every placement legal, in bounds, pairwise
+    /// non-overlapping, and the compute budget respected. On a
+    /// compute-free spec this is exactly "extendable to a full
+    /// configuration" (the paper's validity), with no enumeration.
+    fn is_valid_geometric(&self, s: &PartitionState) -> bool {
+        let mut mask = 0u128;
+        let mut compute = 0u32;
+        for p in s.placements() {
+            let Some(geom) = self.profiles.get(p.profile as usize) else {
+                return false;
+            };
+            let start = p.start as usize;
+            if geom.starts & (1u128 << p.start) == 0
+                || start + geom.mem_slices as usize > self.n_mem
+            {
+                return false;
+            }
+            let pm = ((1u128 << geom.mem_slices) - 1) << start;
+            if mask & pm != 0 {
+                return false;
+            }
+            mask |= pm;
+            compute += geom.compute_slices as u32;
+        }
+        compute <= self.total_compute as u32
+    }
+
+    /// fcr(s); `None` means `s` is not a valid state (not extendable to
+    /// any full configuration). Saturates at `u64::MAX` on synthetic
+    /// specs whose maximal-config counts exceed 64 bits.
+    pub fn fcr(&self, s: &PartitionState) -> Option<u64> {
+        if let Some(ex) = &self.exhaustive {
+            return ex.fcr(s);
+        }
+        if !self.is_valid_geometric(s) {
+            return None;
+        }
+        let w = self.n_mem + 1;
+        let mut occupied = 0u128;
+        for p in s.placements() {
+            let geom = &self.profiles[p.profile as usize];
+            occupied |= ((1u128 << geom.mem_slices) - 1) << p.start;
+        }
+        let mut fcr: u128 = 1;
+        let mut a = 0usize;
+        while a < self.n_mem {
+            if occupied & (1u128 << a) != 0 {
+                a += 1;
+                continue;
+            }
+            let mut b = a;
+            while b < self.n_mem && occupied & (1u128 << b) == 0 {
+                b += 1;
+            }
+            fcr = fcr.saturating_mul(self.tile[a * w + b]);
+            a = b;
+        }
+        Some(u64::try_from(fcr).unwrap_or(u64::MAX))
+    }
+
+    /// Whether `s` extends to some full configuration.
+    pub fn is_valid(&self, s: &PartitionState) -> bool {
+        match &self.exhaustive {
+            Some(ex) => ex.is_valid(s),
+            None => self.is_valid_geometric(s),
+        }
+    }
+
+    /// Number of fully-configured (maximal) states — `fcr` of the
+    /// empty state. Replaces the old `full_configs().len()`: the
+    /// analytic table counts maximal states without materializing
+    /// them (there are ~10^27 on a 100-slice what-if spec).
+    pub fn full_config_count(&self) -> u64 {
+        self.fcr(&PartitionState::empty()).unwrap_or(0)
+    }
+
+    /// Whether this spec took the analytic (compute-free) path. The
+    /// NVIDIA parts and the synthetic what-ifs all do; exposed so
+    /// tests can pin it.
+    pub fn is_analytic(&self) -> bool {
+        self.exhaustive.is_none()
+    }
+}
+
+/// The original paper-Algorithm-2 implementation: enumerate every
+/// valid partition state, credit all `2^k` subsets of each maximal
+/// config. Exponential in slice count — usable only on small specs —
+/// and kept exactly for that reason: it is the ground truth the
+/// analytic [`ReachabilityTable`] is property-tested against, and the
+/// fallback for compute-binding specs where the factorization's
+/// premise fails.
+#[derive(Debug, Clone)]
+pub struct ExhaustiveReachability {
+    fcr: HashMap<PartitionState, u64>,
+    full_configs: Vec<PartitionState>,
+    n_states: usize,
+}
+
+impl ExhaustiveReachability {
+    /// Enumerate all valid partition states and count, for each, the
+    /// reachable fully-configured states.
     pub fn precompute(spec: &GpuSpec) -> Self {
         let (all, full) = enumerate_states(spec);
-        let mut fcr: HashMap<PartitionState, u32> = HashMap::with_capacity(all.len());
+        let mut fcr: HashMap<PartitionState, u64> = HashMap::with_capacity(all.len());
         for f in &full {
             // Credit every subset of this maximal state's placements.
             let ps: Vec<Placement> = f.placements().to_vec();
@@ -55,27 +297,29 @@ impl ReachabilityTable {
                 *fcr.entry(PartitionState::from_placements(subset)).or_insert(0) += 1;
             }
         }
-        ReachabilityTable {
+        ExhaustiveReachability {
             fcr,
             full_configs: full,
             n_states: all.len(),
         }
     }
 
-    /// fcr(s); `None` means `s` is not a valid state (not extendable to
-    /// any full configuration).
-    pub fn fcr(&self, s: &PartitionState) -> Option<u32> {
+    /// fcr(s); `None` means `s` is not a valid state.
+    pub fn fcr(&self, s: &PartitionState) -> Option<u64> {
         self.fcr.get(s).copied()
     }
 
+    /// Whether `s` extends to some full configuration.
     pub fn is_valid(&self, s: &PartitionState) -> bool {
         self.fcr.contains_key(s)
     }
 
+    /// Every fully-configured state, materialized.
     pub fn full_configs(&self) -> &[PartitionState] {
         &self.full_configs
     }
 
+    /// Size of the enumerated state space.
     pub fn n_states(&self) -> usize {
         self.n_states
     }
@@ -89,14 +333,17 @@ mod tests {
     fn empty_state_reaches_all_full_configs() {
         let spec = GpuSpec::a100_40gb();
         let t = ReachabilityTable::precompute(&spec);
+        assert!(t.is_analytic(), "A100 must take the analytic path");
         assert_eq!(t.fcr(&PartitionState::empty()), Some(19));
+        assert_eq!(t.full_config_count(), 19);
     }
 
     #[test]
     fn full_configs_have_fcr_one() {
         let spec = GpuSpec::a100_40gb();
         let t = ReachabilityTable::precompute(&spec);
-        for f in t.full_configs().to_vec() {
+        let ex = ExhaustiveReachability::precompute(&spec);
+        for f in ex.full_configs().to_vec() {
             assert_eq!(t.fcr(&f), Some(1), "{}", f.render(&spec));
         }
     }
@@ -143,6 +390,119 @@ mod tests {
     fn a30_empty_reaches_five() {
         let spec = GpuSpec::a30_24gb();
         let t = ReachabilityTable::precompute(&spec);
+        assert!(t.is_analytic());
         assert_eq!(t.fcr(&PartitionState::empty()), Some(5));
+    }
+
+    /// Ground-truth property test: the analytic table agrees with the
+    /// exhaustive oracle on every enumerated state — and on
+    /// never-enumerated invalid states — across every small spec in
+    /// the fleet (real NVIDIA parts and synthetic generators alike).
+    #[test]
+    fn analytic_matches_exhaustive_oracle_on_small_specs() {
+        use crate::workloads::synthetic;
+        let specs = vec![
+            GpuSpec::a100_40gb(),
+            GpuSpec::a100_80gb(),
+            GpuSpec::a30_24gb(),
+            GpuSpec::h100_80gb(),
+            synthetic::h200_141gb(),
+            synthetic::b200_192gb(),
+            synthetic::tiered_spec(8),
+            synthetic::many_instance_spec(12),
+        ];
+        for spec in specs {
+            let t = ReachabilityTable::precompute(&spec);
+            let ex = ExhaustiveReachability::precompute(&spec);
+            let (all, _) = enumerate_states(&spec);
+            for s in &all {
+                assert_eq!(
+                    t.fcr(s),
+                    ex.fcr(s),
+                    "{}: fcr mismatch at {}",
+                    spec.name,
+                    s.render(&spec)
+                );
+                assert!(t.is_valid(s), "{}: {} must be valid", spec.name, s.render(&spec));
+            }
+            // Invalid states answer None on both: illegal start and
+            // overlapping pair (profile 0 always exists).
+            let bad_start = PartitionState::from_placements(vec![Placement {
+                profile: 0,
+                start: spec.total_mem_slices,
+            }]);
+            assert_eq!(t.fcr(&bad_start), None);
+            assert_eq!(ex.fcr(&bad_start), None);
+            let overlap = PartitionState::from_placements(vec![
+                Placement { profile: 0, start: 0 },
+                Placement { profile: 0, start: 0 },
+            ]);
+            assert_eq!(t.fcr(&overlap), None);
+            assert_eq!(ex.fcr(&overlap), None);
+        }
+    }
+
+    /// The headline unlock: a 100-instance synthetic spec builds its
+    /// table and answers fcr queries without any 2^k enumeration. The
+    /// old path would have credited 2^100 subsets of the all-1g
+    /// maximal config before ever answering.
+    #[test]
+    fn hundred_instance_spec_builds_and_queries_instantly() {
+        use crate::workloads::synthetic;
+        let spec = synthetic::many_instance_spec(100);
+        let t = ReachabilityTable::precompute(&spec);
+        assert!(t.is_analytic());
+        // Single 1-slice profile with every start legal: exactly one
+        // maximal config (all slices filled) regardless of width.
+        assert_eq!(t.full_config_count(), 1);
+        let s = PartitionState::from_placements(vec![Placement { profile: 0, start: 57 }]);
+        assert_eq!(t.fcr(&s), Some(1));
+        assert!(t.is_valid(&s));
+        assert_eq!(
+            t.fcr(&PartitionState::from_placements(vec![Placement {
+                profile: 0,
+                start: 100,
+            }])),
+            None
+        );
+    }
+
+    /// Saturation, not overflow: a wide spec with a 1-slice and a
+    /// 2-slice profile has Fibonacci-many maximal packings (every
+    /// slice covered; F(101) ≈ 5.7e20 > u64::MAX), so fcr saturates
+    /// instead of wrapping, and monotonicity under allocation is
+    /// preserved where counts are representable.
+    #[test]
+    fn wide_two_profile_spec_counts_saturate() {
+        use super::super::profile::MigProfile;
+        let m = 100u8;
+        let profiles = vec![
+            MigProfile {
+                name: "1s".into(),
+                compute_slices: 1,
+                mem_slices: 1,
+                mem_gb: 1.0,
+                placements: (0..m).collect(),
+            },
+            MigProfile {
+                name: "2s".into(),
+                compute_slices: 2,
+                mem_slices: 2,
+                mem_gb: 2.0,
+                placements: (0..m - 1).collect(),
+            },
+        ];
+        let spec = GpuSpec::custom("fib-100", m, u8::MAX, 100.0, profiles);
+        let t = ReachabilityTable::precompute(&spec);
+        assert!(t.is_analytic());
+        // F(101) > u64::MAX: the count saturates.
+        assert_eq!(t.fcr(&PartitionState::empty()), Some(u64::MAX));
+        // A state occupying all but 3 trailing slices leaves F(4) = 3
+        // maximal completions — exact small counts still come out.
+        let mut ps = Vec::new();
+        for s in 0..(m - 3) {
+            ps.push(Placement { profile: 0, start: s });
+        }
+        assert_eq!(t.fcr(&PartitionState::from_placements(ps)), Some(3));
     }
 }

@@ -22,11 +22,12 @@ pub struct Placement {
 }
 
 impl Placement {
-    /// Occupied memory slices as a bitmask (u64: synthetic specs may
-    /// define up to 63 memory slices; the NVIDIA parts use 4–8).
-    pub fn mask(&self, spec: &GpuSpec) -> u64 {
+    /// Occupied memory slices as a bitmask (u128: synthetic specs may
+    /// define up to 127 memory slices — wide enough for the
+    /// 100+-instance what-if specs; the NVIDIA parts use 4–8).
+    pub fn mask(&self, spec: &GpuSpec) -> u128 {
         let m = spec.profiles[self.profile as usize].mem_slices;
-        ((1u64 << m) - 1) << self.start
+        ((1u128 << m) - 1) << self.start
     }
 }
 
@@ -37,29 +38,34 @@ pub struct PartitionState {
 }
 
 impl PartitionState {
+    /// The fully-unpartitioned state (no instances).
     pub fn empty() -> Self {
         Self::default()
     }
 
+    /// Canonicalize an arbitrary placement list (sorts it).
     pub fn from_placements(mut placements: Vec<Placement>) -> Self {
         placements.sort();
         PartitionState { placements }
     }
 
+    /// The placements, in canonical (sorted) order.
     pub fn placements(&self) -> &[Placement] {
         &self.placements
     }
 
+    /// Number of placed instances.
     pub fn len(&self) -> usize {
         self.placements.len()
     }
 
+    /// True when no instances are placed.
     pub fn is_empty(&self) -> bool {
         self.placements.is_empty()
     }
 
     /// Bitmask of occupied memory slices.
-    pub fn mask(&self, spec: &GpuSpec) -> u64 {
+    pub fn mask(&self, spec: &GpuSpec) -> u128 {
         self.placements.iter().fold(0, |m, p| m | p.mask(spec))
     }
 

@@ -59,10 +59,12 @@ pub fn fit_one(req_mem: &[f64], inv_reuse: &[f64], horizon: f64, z: f64) -> FitS
 /// Batched host engine.
 #[derive(Debug, Default, Clone)]
 pub struct HostFit {
+    /// Confidence-band z-score (paper default 2.576 = 99%).
     pub z: f64,
 }
 
 impl HostFit {
+    /// Engine with the paper's 99% confidence band.
     pub fn new() -> Self {
         HostFit { z: Z_99 }
     }

@@ -45,11 +45,17 @@ pub struct Observation {
 /// kernel emits (`python/compile/kernels/linreg.py`).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FitStats {
+    /// Intercept of the requested-memory linear fit, GB.
     pub a_mem: f64,
+    /// Slope of the requested-memory fit, GB per iteration.
     pub b_mem: f64,
+    /// Residual standard deviation of the requested-memory fit.
     pub sigma_mem: f64,
+    /// Intercept of the inverse-reuse linear fit.
     pub a_inv_reuse: f64,
+    /// Slope of the inverse-reuse fit, per iteration.
     pub b_inv_reuse: f64,
+    /// Residual standard deviation of the inverse-reuse fit.
     pub sigma_inv_reuse: f64,
     /// z-CI upper bound on requested memory at the horizon (GB).
     pub mem_pred_gb: f64,
@@ -68,5 +74,6 @@ pub trait FitEngine {
         horizon: &[f64],
     ) -> Vec<FitStats>;
 
+    /// Stable engine name (reports and difftests).
     fn name(&self) -> &'static str;
 }

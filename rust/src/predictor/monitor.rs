@@ -42,7 +42,10 @@ pub enum PredictionOutcome {
     /// Not enough data / not stable yet.
     Pending,
     /// Projection converged to a stable peak (GB).
-    Converged { peak_physical_gb: f64 },
+    Converged {
+        /// The stable projected peak physical memory, GB.
+        peak_physical_gb: f64,
+    },
 }
 
 /// Online Alg. 1 state for one job.
@@ -58,6 +61,7 @@ pub struct JobMonitor {
 }
 
 impl JobMonitor {
+    /// Fresh monitor projecting to `horizon_iters` total iterations.
     pub fn new(horizon_iters: usize, cfg: ConvergenceCfg) -> Self {
         JobMonitor {
             cfg,
@@ -69,14 +73,17 @@ impl JobMonitor {
         }
     }
 
+    /// Number of observations recorded so far.
     pub fn observations(&self) -> usize {
         self.req_mem.len()
     }
 
+    /// The recorded (requested-memory, inverse-reuse) series.
     pub fn series(&self) -> (&[f64], &[f64]) {
         (&self.req_mem, &self.inv_reuse)
     }
 
+    /// The projection horizon, iterations.
     pub fn horizon(&self) -> f64 {
         self.horizon
     }

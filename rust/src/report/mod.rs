@@ -1,7 +1,8 @@
 //! Paper-figure harnesses: each function regenerates one table or
 //! figure from the paper's evaluation (§1, §4, §5, Appendix A) and
 //! returns both the raw numbers (for tests/benches) and a rendered
-//! table (for the CLI and examples). Experiment ids follow DESIGN.md §4.
+//! table (for the CLI and examples). Experiment ids follow the paper's
+//! figure/table numbering.
 
 use std::sync::Arc;
 
@@ -27,7 +28,7 @@ pub fn fig3_configs(spec: &GpuSpec) -> (Vec<String>, Table) {
 
 /// E3 — §4.2 worked example: reachability of each 1g placement from the
 /// empty GPU.
-pub fn reachability_example(spec: &GpuSpec) -> (Vec<(u8, u32)>, Table) {
+pub fn reachability_example(spec: &GpuSpec) -> (Vec<(u8, u64)>, Table) {
     let table = ReachabilityTable::precompute(spec);
     let small = 0usize;
     let mut rows = Vec::new();
@@ -51,10 +52,15 @@ pub fn reachability_example(spec: &GpuSpec) -> (Vec<(u8, u32)>, Table) {
 /// One row of a Figure-4 style comparison.
 #[derive(Debug, Clone)]
 pub struct Fig4Row {
+    /// Workload mix name.
     pub mix: String,
+    /// Scheduling scheme label.
     pub scheme: &'static str,
+    /// Whether the run used time-series prediction.
     pub prediction: bool,
+    /// Gains normalized to the sequential baseline.
     pub norm: NormalizedMetrics,
+    /// The run's absolute metrics.
     pub metrics: BatchMetrics,
 }
 
@@ -169,16 +175,25 @@ pub fn fig4_llm(seed: u64) -> (Vec<Fig4Row>, Table) {
 /// vs actual peak at 10% of iterations.
 #[derive(Debug, Clone)]
 pub struct OomCaseRow {
+    /// Dynamic workload name.
     pub workload: String,
+    /// Start-slice memory capacity, GB.
     pub cap_gb: f64,
+    /// Iteration where OOM strikes on the start slice (None = fits).
     pub oom_iter: Option<usize>,
+    /// Iteration where the predictor converges (None = never).
     pub predict_iter: Option<usize>,
+    /// Converged peak projection, GB.
     pub predicted_peak_gb: f64,
+    /// Peak projection using only the first 10% of iterations, GB.
     pub peak_at_10pct_gb: f64,
+    /// Realized peak, GB.
     pub actual_peak_gb: f64,
+    /// |projection at 10% − actual| / actual.
     pub err_at_10pct: f64,
 }
 
+/// Run the OOM-prediction case study (E7/E8) and render its table.
 pub fn oom_case_study(seed: u64) -> (Vec<OomCaseRow>, Table) {
     use crate::predictor::{ConvergenceCfg, JobMonitor, PredictionOutcome};
     let spec = GpuSpec::a100_40gb();
@@ -301,11 +316,15 @@ pub fn table3_myocyte() -> ([(String, f64, f64); 5], Table) {
 /// vs 7 concurrent 1g slices (PCIe contention), plus the batch-21
 /// throughput factor the paper reports (~1.92x vs the 7x ceiling).
 pub struct Table4Result {
+    /// NW runtime alone on the full GPU, s.
     pub solo_runtime_s: f64,
+    /// NW runtime with 7 concurrent copies on 1g slices, s.
     pub contended_runtime_s: f64,
+    /// Batch-21 Scheme-A throughput over the baseline.
     pub batch21_throughput_x: f64,
 }
 
+/// Run the Table-4 NW PCIe-contention experiment and render its table.
 pub fn table4_nw() -> (Table4Result, Table) {
     use crate::sim::{GpuSim, SimEvent};
     let spec = Arc::new(GpuSpec::a100_40gb());
@@ -348,12 +367,17 @@ pub fn table4_nw() -> (Table4Result, Table) {
 /// E1 — §1 preliminary experiment on the A30: the same 14-job batch with
 /// tightest-fit slices vs next-largest slices.
 pub struct PreliminaryResult {
+    /// Metrics with tightest-fit slice assignment.
     pub tight: BatchMetrics,
+    /// Metrics with next-largest slice assignment.
     pub loose: BatchMetrics,
+    /// Tight ÷ loose throughput.
     pub throughput_gain: f64,
+    /// Loose ÷ tight energy (>1 means tight saves energy).
     pub energy_gain: f64,
 }
 
+/// Run the §1 A30 preliminary experiment and render its table.
 pub fn preliminary_a30(seed: u64) -> (PreliminaryResult, Table) {
     let spec = Arc::new(GpuSpec::a30_24gb());
     let m = mix::preliminary_a30(seed);
@@ -404,12 +428,16 @@ pub struct ServingCells {
     pub sustained_rps: f64,
     /// p99 headroom vs the SLO target, ms (negative = blown).
     pub slo_margin_ms: f64,
+    /// Autoscaler scale-up decisions over the trace.
     pub scale_ups: usize,
+    /// Autoscaler scale-down decisions over the trace.
     pub scale_downs: usize,
+    /// Energy per completed request, J.
     pub j_per_request: f64,
 }
 
 impl ServingCells {
+    /// Extract the headline cells from a full serve report.
     pub fn from_report(r: &crate::serving::ServeReport) -> ServingCells {
         ServingCells {
             sustained_rps: r.sustained_rps,
@@ -427,8 +455,11 @@ impl ServingCells {
 /// ledger's predicted-vs-actual peak-memory error.
 #[derive(Debug, Clone)]
 pub struct OnlineRow {
+    /// Policy label.
     pub policy: &'static str,
+    /// The run's absolute metrics.
     pub metrics: BatchMetrics,
+    /// Per-arrival queueing/turnaround percentiles.
     pub latency: crate::metrics::LatencyStats,
     /// Predicted-vs-actual peak-memory accuracy (from the run's belief
     /// ledger; zero-valued for rows without prediction/dynamic jobs).
@@ -590,9 +621,9 @@ pub fn online_arrivals(seed: u64, rate_jps: f64) -> (Vec<OnlineRow>, Table) {
     (rows, t)
 }
 
-/// Seed-sensitivity sweep over the heterogeneous mixes (EXPERIMENTS.md
-/// §E4): A-vs-B throughput at each seed. The Ht1 ordering is
-/// draw-dependent; Ht2/Ht3's grouping advantage is structural.
+/// Seed-sensitivity sweep over the heterogeneous mixes: A-vs-B
+/// throughput at each seed. The Ht1 ordering is draw-dependent;
+/// Ht2/Ht3's grouping advantage is structural.
 pub fn seed_sweep(seeds: &[u64]) -> Table {
     let spec = Arc::new(GpuSpec::a100_40gb());
     let mut t = Table::new(&["seed", "Ht1 A/B", "Ht2 A/B", "Ht3 A/B"]);

@@ -13,37 +13,55 @@ use crate::util::Json;
 /// One decode-step variant's manifest entry.
 #[derive(Debug, Clone)]
 pub struct DecodeManifest {
+    /// Variant name (manifest key).
     pub name: String,
+    /// Path to the HLO-text artifact.
     pub file: PathBuf,
     /// Flattened parameter order: (name, shape).
     pub params: Vec<(String, Vec<usize>)>,
     /// [L, R, H, S, Dh]
     pub kv_shape: Vec<usize>,
+    /// Batch rows per step.
     pub batch: usize,
+    /// Transformer layers.
     pub layers: usize,
+    /// Attention heads.
     pub heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// Model (residual-stream) dimension.
     pub d_model: usize,
+    /// Feed-forward hidden dimension.
     pub d_ff: usize,
+    /// Maximum sequence length the KV cache holds.
     pub max_seq: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Full KV-cache footprint, bytes.
     pub kv_cache_bytes: u64,
+    /// Total parameter footprint, bytes.
     pub param_bytes: u64,
 }
 
 /// One predictor variant's manifest entry.
 #[derive(Debug, Clone)]
 pub struct PredictorManifest {
+    /// Variant name (manifest key).
     pub name: String,
+    /// Path to the HLO-text artifact.
     pub file: PathBuf,
+    /// Fit lanes per call.
     pub batch: usize,
+    /// Series capacity per lane.
     pub window: usize,
 }
 
 /// The whole manifest.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
+    /// Decode-step variants by name.
     pub decode: BTreeMap<String, DecodeManifest>,
+    /// Predictor variants by name.
     pub predictor: BTreeMap<String, PredictorManifest>,
 }
 

@@ -30,6 +30,7 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// A runtime backed by the PJRT CPU client.
     pub fn cpu() -> Result<Self> {
         Ok(Runtime {
             client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
@@ -37,6 +38,7 @@ impl Runtime {
         })
     }
 
+    /// The PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -76,9 +78,13 @@ fn ones_param(shape: &[usize]) -> Result<xla::Literal> {
 
 /// Output of one decode step.
 pub struct DecodeStepOut {
+    /// Greedy-argmax token per batch row.
     pub next_tokens: Vec<i32>,
+    /// Flattened final-layer logits.
     pub logits: Vec<f32>,
+    /// Updated key cache.
     pub k_cache: xla::Literal,
+    /// Updated value cache.
     pub v_cache: xla::Literal,
 }
 
@@ -90,6 +96,7 @@ pub struct DecodeStepOut {
 /// `python/compile/model.py::decode_step`.
 pub struct DecodeEngine {
     exe: Arc<xla::PjRtLoadedExecutable>,
+    /// The variant's manifest (shapes, batch, file).
     pub manifest: DecodeManifest,
     params: Vec<xla::Literal>,
     /// Device-resident copies of `params`, uploaded lazily.
@@ -173,10 +180,12 @@ impl DecodeEngine {
 /// The AOT Pallas predictor as a [`FitEngine`].
 pub struct PjrtPredictor {
     exe: Arc<xla::PjRtLoadedExecutable>,
+    /// The kernel's manifest (lanes, series capacity, file).
     pub manifest: PredictorManifest,
 }
 
 impl PjrtPredictor {
+    /// Load and compile the predictor artifact named by `m`.
     pub fn new(rt: &mut Runtime, m: &PredictorManifest) -> Result<Self> {
         Ok(PjrtPredictor {
             exe: rt.load(&m.name, &m.file)?,
@@ -364,7 +373,7 @@ mod tests {
 impl DecodeEngine {
     /// Upload the parameters to the PJRT device once and cache them.
     /// Subsequent [`Self::step_resident`] calls skip the ~7MB per-step
-    /// parameter upload of the literal path (EXPERIMENTS.md §Perf).
+    /// parameter upload of the literal path (see `benches/decode_step.rs`).
     fn ensure_resident(&self) -> Result<()> {
         let mut slot = self.param_bufs.borrow_mut();
         if slot.is_none() {

@@ -23,6 +23,7 @@ pub struct BaselinePolicy {
 }
 
 impl BaselinePolicy {
+    /// A single-GPU baseline (drives GPU 0).
     pub fn new() -> Self {
         Self::new_on(0)
     }

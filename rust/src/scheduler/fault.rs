@@ -41,6 +41,7 @@ pub enum FaultKind {
 }
 
 impl FaultKind {
+    /// Stable label used in timelines and trajectory rows.
     pub fn as_str(&self) -> &'static str {
         match self {
             FaultKind::Kill => "kill",
@@ -52,9 +53,11 @@ impl FaultKind {
 /// One scripted fault.
 #[derive(Debug, Clone, Copy)]
 pub struct FaultEvent {
+    /// The GPU the fault strikes.
     pub gpu: GpuId,
     /// Simulated-time instant the fault fires at.
     pub at_s: f64,
+    /// Kill or restore.
     pub kind: FaultKind,
 }
 
@@ -62,10 +65,12 @@ pub struct FaultEvent {
 /// ties fire in plan order).
 #[derive(Debug, Clone, Default)]
 pub struct FaultPlan {
+    /// The scripted faults, in authoring order.
     pub events: Vec<FaultEvent>,
 }
 
 impl FaultPlan {
+    /// A plan from an explicit event list.
     pub fn new(events: Vec<FaultEvent>) -> Self {
         FaultPlan { events }
     }
@@ -97,8 +102,11 @@ impl FaultPlan {
 /// One fired fault in the recovery timeline.
 #[derive(Debug, Clone, Copy)]
 pub struct FaultTimelineRow {
+    /// When the fault fired, simulated seconds.
     pub at_s: f64,
+    /// The struck GPU.
     pub gpu: GpuId,
+    /// Kill or restore.
     pub kind: FaultKind,
     /// Running jobs lost at this instant (kills only).
     pub lost_running: usize,
@@ -335,6 +343,8 @@ mod tests {
         let report = run_with_faults(&mut orch, &FaultPlan::kill_restore(1, 4.0, 20.0));
         let row = fault_recovery_row("fault_smoke", &report, orch.policy().steals());
         assert_eq!(row.get("schema").as_str(), Some("migm.bench.fault.v1"));
+        // the real builder output must clear the trajectory gate
+        crate::util::bench::validate_trajectory_row(&row).expect("fault row must validate");
         for key in [
             "bench",
             "timeline",

@@ -47,10 +47,12 @@ impl<P: SchedulingPolicy> ShardedPolicy<P> {
         ShardedPolicy { inner, next: 0 }
     }
 
+    /// Number of per-GPU shards.
     pub fn n_shards(&self) -> usize {
         self.inner.len()
     }
 
+    /// The shard driving GPU `gpu`.
     pub fn shard(&self, gpu: GpuId) -> &P {
         &self.inner[gpu]
     }

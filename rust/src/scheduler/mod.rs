@@ -114,8 +114,11 @@ pub use scheme_b::SchemeBKnobs;
 /// Result of one run (batch or online).
 #[derive(Debug, Clone)]
 pub struct RunResult {
+    /// Throughput/energy/utilization summary of the run.
     pub metrics: BatchMetrics,
+    /// Per-job completion records.
     pub records: Vec<JobRecord>,
+    /// Fleet-summed reconfiguration and restart counters.
     pub counters: SimCounters,
     /// Per-arrival queueing/turnaround percentiles (meaningful for
     /// online runs; degenerate-but-correct for batch runs).
@@ -132,8 +135,11 @@ pub struct RunResult {
 /// memory knowledge up (`ctx.belief(job.belief)`).
 #[derive(Debug, Clone)]
 pub struct PendingJob {
+    /// What to run.
     pub spec: JobSpec,
+    /// Original submission time (turnaround anchor across requeues).
     pub submit_time: f64,
+    /// The job's memory-belief handle in the orchestrator's ledger.
     pub belief: BeliefId,
 }
 

@@ -20,9 +20,19 @@
 //! clocks tie, their next events may be handed to the policy slightly
 //! out of global order (bounded by one simulator event; irrelevant to
 //! the shipped single-GPU policies).
+//!
+//! Large fleets can advance in parallel:
+//! [`run_to_completion_parallel`](Orchestrator::run_to_completion_parallel)
+//! fans the independent per-GPU sims out over a scoped thread pool
+//! between arrival barriers and merges their events on a unique
+//! `(time, GPU id)` key, so runs stay deterministic and thread-count
+//! invariant (see its docs for the interleaving caveat). Sequential
+//! [`run_to_completion`](Orchestrator::run_to_completion) remains the
+//! reference mode that difftests and golden outputs gate on.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::estimator::{BeliefConfig, BeliefId, BeliefLedger, BeliefSnapshot};
 use crate::metrics::{BatchMetrics, LatencyStats};
@@ -61,6 +71,21 @@ struct ActiveJob {
 }
 
 /// The event loop that drives policies over one or more simulated GPUs.
+///
+/// ```
+/// use std::sync::Arc;
+/// use migm::mig::GpuSpec;
+/// use migm::scheduler::baseline::BaselinePolicy;
+/// use migm::scheduler::Orchestrator;
+/// use migm::workloads::mix;
+///
+/// // Run the paper's Hm1 batch mix (50 jobs) under the sequential
+/// // baseline on one A100-40GB and read the finalized result.
+/// let spec = Arc::new(GpuSpec::a100_40gb());
+/// let result = Orchestrator::single(spec, false, BaselinePolicy::new()).run_mix(&mix::hm1());
+/// assert_eq!(result.records.len(), 50);
+/// assert!(result.metrics.makespan_s > 0.0);
+/// ```
 pub struct Orchestrator<P: SchedulingPolicy> {
     gpus: Vec<GpuSim>,
     policy: P,
@@ -143,14 +168,17 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
             .fold(0.0, f64::max)
     }
 
+    /// Fleet size.
     pub fn n_gpus(&self) -> usize {
         self.gpus.len()
     }
 
+    /// Read-only view of GPU `g`'s simulator.
     pub fn gpu(&self, g: GpuId) -> &GpuSim {
         &self.gpus[g]
     }
 
+    /// The driving policy.
     pub fn policy(&self) -> &P {
         &self.policy
     }
@@ -182,6 +210,75 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
         // panic the sort; `submit_at` already clamps negatives.
         self.arrivals.sort_by(|a, b| a.0.total_cmp(&b.0));
         while self.step() {}
+    }
+
+    /// Drive the world to completion like
+    /// [`run_to_completion`](Self::run_to_completion), advancing busy
+    /// GPUs in parallel over `threads` worker threads.
+    ///
+    /// Each round: (1) deliver due arrivals (sequential — the policy
+    /// and belief ledger are single-threaded state), (2) advance
+    /// *every* busy GPU by at most one event, clipped to the next
+    /// undelivered arrival, fanning the independent [`GpuSim`]s out
+    /// across a scoped thread pool (the tuner evaluator's pool shape),
+    /// (3) hand the harvested events to the policy sorted by
+    /// `(event time, GPU id)`. Each sim performs exactly the same
+    /// single bounded `advance_with_horizon` call no matter which
+    /// worker runs it, and the merge is a pure sort on a unique key,
+    /// so the run is **deterministic and thread-count invariant**:
+    /// `threads = 1` and `threads = 8` produce byte-identical
+    /// checkpoints (pinned by the
+    /// `parallel_advance_is_thread_count_invariant` test).
+    ///
+    /// The event *interleaving* intentionally differs from the
+    /// sequential leapfrog: a round advances all busy GPUs before the
+    /// policy reacts to any of them, so cross-GPU reactions lag by up
+    /// to one event per GPU (the sequential mode already admits a
+    /// one-event skew on clock ties). Sequential runs are untouched —
+    /// difftests and golden outputs gate on
+    /// [`run_to_completion`](Self::run_to_completion).
+    pub fn run_to_completion_parallel(&mut self, threads: usize) {
+        self.arrivals.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let threads = threads.max(1);
+        loop {
+            self.deliver_due_arrivals();
+            let any_busy = self
+                .gpus
+                .iter()
+                .any(|g| g.n_running() > 0 || g.is_reconfiguring());
+            if !any_busy {
+                // Quiescent fleet: same restart/idle/drain ladder as
+                // the sequential `step`.
+                if self.policy.has_pending_work() {
+                    let acts = self.call_policy(|p, ctx| p.on_stalled(ctx));
+                    if !acts.is_empty() {
+                        self.apply(acts);
+                        continue;
+                    }
+                }
+                if let Some(t) = self.next_arrival_time() {
+                    self.idle_fleet_until(t);
+                    continue;
+                }
+                if self.policy.has_pending_work() {
+                    panic!(
+                        "policy '{}' stalled with pending work, no actions, and no arrivals",
+                        self.policy.name()
+                    );
+                }
+                return;
+            }
+            // Arrivals stay causal exactly as in the sequential mode:
+            // every busy GPU clips at the next undelivered arrival, and
+            // `deliver_due_arrivals` gates on the least-advanced busy
+            // clock at the top of the next round.
+            let horizon = self.next_arrival_time();
+            let mut evs = advance_busy(&mut self.gpus, horizon, threads);
+            evs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            for (_, g, ev) in evs {
+                self.dispatch(g, ev);
+            }
+        }
     }
 
     /// Drive the world until every clock reaches simulated time `t` (or
@@ -1098,6 +1195,55 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
     }
 }
 
+/// Advance every busy GPU by at most one event, clipped to `horizon`,
+/// fanning the sims out over `threads` scoped workers (the
+/// `tuner::eval::evaluate_all` pool shape: an atomic cursor over
+/// index-aligned slots). Returns `(event time, gpu, event)` triples in
+/// slot order; callers sort by `(time, gpu)` before dispatching. The
+/// sims share no state and each performs one fixed call, so the output
+/// is independent of worker count and OS scheduling.
+fn advance_busy(
+    gpus: &mut [GpuSim],
+    horizon: Option<f64>,
+    threads: usize,
+) -> Vec<(f64, GpuId, SimEvent)> {
+    let mut tasks: Vec<(GpuId, &mut GpuSim)> = gpus
+        .iter_mut()
+        .enumerate()
+        .filter(|(_, g)| g.n_running() > 0 || g.is_reconfiguring())
+        .collect();
+    let n = tasks.len();
+    if threads == 1 || n <= 1 {
+        return tasks
+            .into_iter()
+            .filter_map(|(i, g)| g.advance_with_horizon(horizon).map(|ev| (g.now(), i, ev)))
+            .collect();
+    }
+    let slots: Vec<Mutex<Option<(f64, GpuId, SimEvent)>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let queue: Vec<Mutex<Option<(GpuId, &mut GpuSim)>>> =
+        tasks.drain(..).map(|t| Mutex::new(Some(t))).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(n) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let (g, sim) = queue[i].lock().unwrap().take().expect("task taken once");
+                if let Some(ev) = sim.advance_with_horizon(horizon) {
+                    *slots[i].lock().unwrap() = Some((sim.now(), g, ev));
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .filter_map(|s| s.into_inner().unwrap())
+        .collect()
+}
+
 /// A complete, serializable snapshot of an [`Orchestrator`]: every
 /// layer's snapshot (simulators with partition managers, belief ledger,
 /// policy, arrival stream, orchestration ledgers) composed into one
@@ -1105,6 +1251,33 @@ impl<P: SchedulingPolicy> Orchestrator<P> {
 /// consumed by [`Orchestrator::restore`]; round-trips through text via
 /// [`to_json_string`](Self::to_json_string) /
 /// [`from_json_str`](Self::from_json_str).
+///
+/// A restored run replays the uninterrupted one bit for bit:
+///
+/// ```
+/// use std::sync::Arc;
+/// use migm::mig::GpuSpec;
+/// use migm::scheduler::baseline::BaselinePolicy;
+/// use migm::scheduler::{Orchestrator, OrchestratorCheckpoint};
+/// use migm::workloads::mix;
+///
+/// let spec = Arc::new(GpuSpec::a100_40gb());
+/// let mut orch = Orchestrator::single(spec.clone(), false, BaselinePolicy::new());
+/// orch.submit_mix(&mix::hm1());
+/// orch.run_until(5.0);
+///
+/// // Snapshot mid-run, round-trip through text, restore into a
+/// // structurally-identical fresh orchestrator (no submissions: the
+/// // checkpoint carries the full arrival stream).
+/// let text = orch.snapshot().to_json_string();
+/// let ckpt = OrchestratorCheckpoint::from_json_str(&text).unwrap();
+/// let mut resumed = Orchestrator::single(spec, false, BaselinePolicy::new());
+/// resumed.restore(&ckpt).unwrap();
+///
+/// orch.run_to_completion();
+/// resumed.run_to_completion();
+/// assert_eq!(orch.now(), resumed.now());
+/// ```
 #[derive(Debug, Clone)]
 pub struct OrchestratorCheckpoint(pub Json);
 
@@ -1224,98 +1397,106 @@ mod tests {
         );
     }
 
+    use std::collections::VecDeque;
+
+    /// Minimal fleet policy: round-robin jobs across GPUs, one
+    /// full-GPU instance each, sequential per GPU. Shared by the
+    /// multi-GPU and parallel-advance tests.
+    struct RoundRobin {
+        queues: Vec<VecDeque<PendingJob>>,
+        inst: Vec<Option<InstanceId>>,
+        next: usize,
+    }
+
+    impl RoundRobin {
+        fn new(n_gpus: usize) -> Self {
+            RoundRobin {
+                queues: (0..n_gpus).map(|_| VecDeque::new()).collect(),
+                inst: vec![None; n_gpus],
+                next: 0,
+            }
+        }
+    }
+
+    impl SchedulingPolicy for RoundRobin {
+        fn name(&self) -> &'static str {
+            "round-robin"
+        }
+        fn on_submit(&mut self, _ctx: &PolicyCtx, job: PendingJob) -> Vec<Action> {
+            let g = self.next % self.queues.len();
+            self.next += 1;
+            self.queues[g].push_back(job);
+            Vec::new()
+        }
+        fn on_job_finish(&mut self, _ctx: &PolicyCtx, ev: JobEvent) -> Vec<Action> {
+            match self.queues[ev.gpu].pop_front() {
+                Some(job) => vec![Action::Launch {
+                    gpu: ev.gpu,
+                    job,
+                    instance: ev.instance,
+                }],
+                None => Vec::new(),
+            }
+        }
+        fn on_oom(&mut self, _ctx: &PolicyCtx, ev: JobEvent, _i: usize, _m: f64) -> Vec<Action> {
+            panic!("{} OOM on a full GPU", ev.job.name);
+        }
+        fn on_early_restart_signal(
+            &mut self,
+            _ctx: &PolicyCtx,
+            _ev: JobEvent,
+            _i: usize,
+            _p: f64,
+        ) -> Vec<Action> {
+            Vec::new()
+        }
+        fn on_reconfig_done(
+            &mut self,
+            _ctx: &PolicyCtx,
+            gpu: usize,
+            _plan: &PartitionPlan,
+            created: &[InstanceId],
+        ) -> Vec<Action> {
+            self.inst[gpu] = Some(created[0]);
+            match self.queues[gpu].pop_front() {
+                Some(job) => vec![Action::Launch {
+                    gpu,
+                    job,
+                    instance: created[0],
+                }],
+                None => Vec::new(),
+            }
+        }
+        fn on_stalled(&mut self, ctx: &PolicyCtx) -> Vec<Action> {
+            let mut acts = Vec::new();
+            for g in 0..ctx.n_gpus() {
+                if self.queues[g].is_empty() {
+                    continue;
+                }
+                match self.inst[g] {
+                    None => acts.push(Action::Reconfig {
+                        gpu: g,
+                        plan: PartitionPlan::create_one(ctx.spec(g).profiles.len() - 1),
+                        instant: true,
+                    }),
+                    Some(inst) => {
+                        let job = self.queues[g].pop_front().unwrap();
+                        acts.push(Action::Launch { gpu: g, job, instance: inst });
+                    }
+                }
+            }
+            acts
+        }
+        fn has_pending_work(&self) -> bool {
+            self.queues.iter().any(|q| !q.is_empty())
+        }
+    }
+
     #[test]
     fn multi_gpu_fleet_runs_independent_batches() {
-        use std::collections::VecDeque;
-
-        /// Minimal fleet policy: round-robin jobs across GPUs, one
-        /// full-GPU instance each, sequential per GPU.
-        struct RoundRobin {
-            queues: Vec<VecDeque<PendingJob>>,
-            inst: Vec<Option<InstanceId>>,
-            next: usize,
-        }
-        impl SchedulingPolicy for RoundRobin {
-            fn name(&self) -> &'static str {
-                "round-robin"
-            }
-            fn on_submit(&mut self, _ctx: &PolicyCtx, job: PendingJob) -> Vec<Action> {
-                let g = self.next % self.queues.len();
-                self.next += 1;
-                self.queues[g].push_back(job);
-                Vec::new()
-            }
-            fn on_job_finish(&mut self, _ctx: &PolicyCtx, ev: JobEvent) -> Vec<Action> {
-                match self.queues[ev.gpu].pop_front() {
-                    Some(job) => vec![Action::Launch {
-                        gpu: ev.gpu,
-                        job,
-                        instance: ev.instance,
-                    }],
-                    None => Vec::new(),
-                }
-            }
-            fn on_oom(&mut self, _ctx: &PolicyCtx, ev: JobEvent, _i: usize, _m: f64) -> Vec<Action> {
-                panic!("{} OOM on a full GPU", ev.job.name);
-            }
-            fn on_early_restart_signal(
-                &mut self,
-                _ctx: &PolicyCtx,
-                _ev: JobEvent,
-                _i: usize,
-                _p: f64,
-            ) -> Vec<Action> {
-                Vec::new()
-            }
-            fn on_reconfig_done(
-                &mut self,
-                _ctx: &PolicyCtx,
-                gpu: usize,
-                _plan: &PartitionPlan,
-                created: &[InstanceId],
-            ) -> Vec<Action> {
-                self.inst[gpu] = Some(created[0]);
-                match self.queues[gpu].pop_front() {
-                    Some(job) => vec![Action::Launch {
-                        gpu,
-                        job,
-                        instance: created[0],
-                    }],
-                    None => Vec::new(),
-                }
-            }
-            fn on_stalled(&mut self, ctx: &PolicyCtx) -> Vec<Action> {
-                let mut acts = Vec::new();
-                for g in 0..ctx.n_gpus() {
-                    if self.queues[g].is_empty() {
-                        continue;
-                    }
-                    match self.inst[g] {
-                        None => acts.push(Action::Reconfig {
-                            gpu: g,
-                            plan: PartitionPlan::create_one(ctx.spec(g).profiles.len() - 1),
-                            instant: true,
-                        }),
-                        Some(inst) => {
-                            let job = self.queues[g].pop_front().unwrap();
-                            acts.push(Action::Launch { gpu: g, job, instance: inst });
-                        }
-                    }
-                }
-                acts
-            }
-            fn has_pending_work(&self) -> bool {
-                self.queues.iter().any(|q| !q.is_empty())
-            }
-        }
-
         let spec = a100();
-        let policy = RoundRobin {
-            queues: vec![VecDeque::new(), VecDeque::new()],
-            inst: vec![None, None],
-            next: 0,
-        };
-        let mut orch = Orchestrator::new(vec![spec.clone(), spec], false, policy);
+        let mut orch =
+            Orchestrator::new(vec![spec.clone(), spec], false, RoundRobin::new(2));
         for _ in 0..10 {
             orch.submit_at(rodinia::by_name("gaussian").unwrap().job(7), 0.0);
         }
@@ -1329,6 +1510,67 @@ mod tests {
         for r in &results {
             assert!(r.metrics.makespan_s < 10.0 * solo);
         }
+    }
+
+    /// A 4-GPU fleet with staggered arrivals, driven by the parallel
+    /// advancement loop — exercising arrival gating, idle skips, and
+    /// the per-round fan-out/merge.
+    fn parallel_fleet(threads: usize) -> Orchestrator<RoundRobin> {
+        let spec = a100();
+        let mut orch =
+            Orchestrator::new(vec![spec.clone(); 4], false, RoundRobin::new(4));
+        for i in 0..24 {
+            orch.submit_at(rodinia::by_name("gaussian").unwrap().job(7), i as f64 * 1.5);
+        }
+        orch.run_to_completion_parallel(threads);
+        orch
+    }
+
+    #[test]
+    fn parallel_advance_is_thread_count_invariant() {
+        // The determinism contract: the round structure (horizons,
+        // advance calls, merge order) is fixed before any worker runs,
+        // so 1 worker and 8 workers must agree on every bit of fleet
+        // state — compared here through the full JSON checkpoint.
+        let one = parallel_fleet(1);
+        let eight = parallel_fleet(8);
+        let r = one.fleet_result();
+        assert_eq!(r.records.len(), 24, "all jobs must complete");
+        assert_eq!(
+            one.snapshot().to_json_string(),
+            eight.snapshot().to_json_string(),
+            "parallel advancement must be thread-count invariant"
+        );
+    }
+
+    #[test]
+    fn parallel_advance_matches_sequential_outcomes() {
+        // The interleaving contract is weaker than byte-identity with
+        // the sequential engine (rounds batch events), but the *work*
+        // must agree: same jobs complete, every launch respects its
+        // arrival, and the makespans land together (both schedules run
+        // the same 6 jobs per GPU back to back).
+        let par = parallel_fleet(4).fleet_result();
+        let spec = a100();
+        let mut seq =
+            Orchestrator::new(vec![spec.clone(); 4], false, RoundRobin::new(4));
+        for i in 0..24 {
+            seq.submit_at(rodinia::by_name("gaussian").unwrap().job(7), i as f64 * 1.5);
+        }
+        seq.run_to_completion();
+        let seq = seq.fleet_result();
+        assert_eq!(par.records.len(), seq.records.len());
+        for rec in &par.records {
+            assert!(rec.start_time >= rec.submit_time - 1e-9);
+            assert!(rec.finish_time > rec.start_time);
+        }
+        let drift = (par.metrics.makespan_s - seq.metrics.makespan_s).abs();
+        assert!(
+            drift <= 1.0,
+            "parallel makespan {} vs sequential {}",
+            par.metrics.makespan_s,
+            seq.metrics.makespan_s
+        );
     }
 
     #[test]

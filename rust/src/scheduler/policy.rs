@@ -91,18 +91,22 @@ pub struct PolicyCtx<'a> {
 }
 
 impl<'a> PolicyCtx<'a> {
+    /// Fleet size.
     pub fn n_gpus(&self) -> usize {
         self.gpus.len()
     }
 
+    /// Read-only view of GPU `id`'s simulator.
     pub fn gpu(&self, id: GpuId) -> &GpuSim {
         &self.gpus[id]
     }
 
+    /// GPU `id`'s model spec.
     pub fn spec(&self, id: GpuId) -> &GpuSpec {
         &self.gpus[id].spec
     }
 
+    /// GPU `id`'s partition manager (read-only; mutate via Actions).
     pub fn mgr(&self, id: GpuId) -> &PartitionManager {
         &self.gpus[id].mgr
     }
@@ -120,8 +124,11 @@ impl<'a> PolicyCtx<'a> {
 pub enum Action {
     /// Launch `job` on an already-allocated, idle `instance`.
     Launch {
+        /// Target GPU.
         gpu: GpuId,
+        /// The queued job to start.
         job: PendingJob,
+        /// The idle instance to run it on.
         instance: InstanceId,
     },
     /// Execute `plan` as one transactional reconfiguration: validate,
@@ -136,8 +143,11 @@ pub enum Action {
     /// sequential baseline's one-time full-GPU claim, mirroring its
     /// legacy behavior of never paying reconfiguration latency.
     Reconfig {
+        /// Target GPU.
         gpu: GpuId,
+        /// The destroy/create plan to execute.
         plan: PartitionPlan,
+        /// Apply synchronously with zero modeled cost (baseline only).
         instant: bool,
     },
 }
@@ -145,8 +155,11 @@ pub enum Action {
 /// Payload of a per-job simulator event.
 #[derive(Debug, Clone)]
 pub struct JobEvent {
+    /// GPU the event fired on.
     pub gpu: GpuId,
+    /// The job's spec (for requeueing on kills).
     pub job: JobSpec,
+    /// Instance the job occupied.
     pub instance: InstanceId,
     /// The job's original submission time (for requeueing: restarts keep
     /// their arrival anchor so online latency accounting stays honest).
@@ -175,6 +188,69 @@ pub struct JobEvent {
 ///   due, yet [`has_pending_work`](Self::has_pending_work) is true.
 ///   Returning no actions there is fatal (the orchestrator panics
 ///   rather than spin).
+///
+/// A minimal (do-nothing) implementation, driven by an
+/// [`Orchestrator`](super::Orchestrator):
+///
+/// ```
+/// use std::sync::Arc;
+/// use migm::mig::{GpuSpec, InstanceId, PartitionPlan};
+/// use migm::scheduler::{
+///     Action, GpuId, JobEvent, Orchestrator, PendingJob, PolicyCtx, SchedulingPolicy,
+/// };
+///
+/// /// Ignores every event and never holds work.
+/// struct NoopPolicy;
+///
+/// impl SchedulingPolicy for NoopPolicy {
+///     fn name(&self) -> &'static str {
+///         "noop"
+///     }
+///     fn on_submit(&mut self, _: &PolicyCtx, _: PendingJob) -> Vec<Action> {
+///         Vec::new()
+///     }
+///     fn on_job_finish(&mut self, _: &PolicyCtx, _: JobEvent) -> Vec<Action> {
+///         Vec::new()
+///     }
+///     fn on_oom(&mut self, _: &PolicyCtx, _: JobEvent, _: usize, _: f64) -> Vec<Action> {
+///         Vec::new()
+///     }
+///     fn on_early_restart_signal(
+///         &mut self,
+///         _: &PolicyCtx,
+///         _: JobEvent,
+///         _: usize,
+///         _: f64,
+///     ) -> Vec<Action> {
+///         Vec::new()
+///     }
+///     fn on_reconfig_done(
+///         &mut self,
+///         _: &PolicyCtx,
+///         _: GpuId,
+///         _: &PartitionPlan,
+///         _: &[InstanceId],
+///     ) -> Vec<Action> {
+///         Vec::new()
+///     }
+///     fn on_stalled(&mut self, _: &PolicyCtx) -> Vec<Action> {
+///         Vec::new()
+///     }
+///     fn has_pending_work(&self) -> bool {
+///         false
+///     }
+/// }
+///
+/// // With nothing submitted the world is already drained.
+/// let mut orch = Orchestrator::single(Arc::new(GpuSpec::a100_40gb()), false, NoopPolicy);
+/// orch.run_to_completion();
+/// assert_eq!(orch.now(), 0.0);
+/// ```
+///
+/// Real policies ([`BaselinePolicy`](super::baseline::BaselinePolicy),
+/// [`SchemeAPolicy`](super::scheme_a::SchemeAPolicy),
+/// [`SchemeBPolicy`](super::scheme_b::SchemeBPolicy)) queue jobs in
+/// `on_submit` and answer with [`Action::Launch`] / [`Action::Reconfig`].
 pub trait SchedulingPolicy {
     /// Short display name ("baseline", "scheme-A", ...).
     fn name(&self) -> &'static str;

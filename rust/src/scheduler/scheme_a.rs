@@ -45,10 +45,12 @@ pub struct SchemeAKnobs {
 }
 
 impl SchemeAKnobs {
+    /// Serialize for candidate/checkpoint JSON.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![("ladder_skip", Json::num(self.ladder_skip as f64))])
     }
 
+    /// Parse knobs from candidate/checkpoint JSON (missing keys ⇒ defaults).
     pub fn from_json(doc: &Json) -> Result<Self> {
         let ladder_skip = match doc.get("ladder_skip") {
             Json::Null => 0,
@@ -103,10 +105,12 @@ pub struct SchemeAPolicy {
 }
 
 impl SchemeAPolicy {
+    /// Single-GPU Scheme A with the paper's default knobs.
     pub fn new(spec: Arc<GpuSpec>) -> Self {
         Self::new_on(spec, SchemeAKnobs::default(), 0)
     }
 
+    /// Single-GPU Scheme A with explicit knobs.
     pub fn with_knobs(spec: Arc<GpuSpec>, knobs: SchemeAKnobs) -> Self {
         Self::new_on(spec, knobs, 0)
     }

@@ -56,6 +56,7 @@ impl Default for SchemeBKnobs {
 }
 
 impl SchemeBKnobs {
+    /// Serialize for candidate/checkpoint JSON.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("max_fusion_destroys", Json::num(self.max_fusion_destroys as f64)),
@@ -63,6 +64,7 @@ impl SchemeBKnobs {
         ])
     }
 
+    /// Parse knobs from candidate/checkpoint JSON (missing keys ⇒ defaults).
     pub fn from_json(doc: &Json) -> Result<Self> {
         let mut knobs = SchemeBKnobs::default();
         match doc.get("max_fusion_destroys") {
@@ -97,10 +99,12 @@ pub struct SchemeBPolicy {
 }
 
 impl SchemeBPolicy {
+    /// Single-GPU Scheme B with the paper's default knobs.
     pub fn new(spec: Arc<GpuSpec>) -> Self {
         Self::new_on(spec, SchemeBKnobs::default(), 0)
     }
 
+    /// Single-GPU Scheme B with explicit knobs.
     pub fn with_knobs(spec: Arc<GpuSpec>, knobs: SchemeBKnobs) -> Self {
         Self::new_on(spec, knobs, 0)
     }
@@ -389,8 +393,8 @@ mod tests {
     fn scheme_a_beats_scheme_b_on_heterogeneous_mixes() {
         // Paper §5.1: "scheme A consistently performs better for
         // heterogeneous batches". Ht1's ordering is shuffle-sensitive
-        // (see EXPERIMENTS.md seed sweep); Ht2/Ht3's grouping advantage
-        // is structural, so assert there at the canonical seed.
+        // (see report::seed_sweep); Ht2/Ht3's grouping advantage is
+        // structural, so assert there at the canonical seed.
         for m in [mix::ht2(crate::config::DEFAULT_SEED), mix::ht3(crate::config::DEFAULT_SEED)] {
             let a = crate::scheduler::scheme_a::run(a100(), &m, false);
             let b = run(a100(), &m, false);

@@ -64,38 +64,51 @@ type ServerOrchestrator = Orchestrator<SchemeBPolicy>;
 /// A generation request.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Maximum tokens to generate.
     pub max_new: usize,
 }
 
 /// A finished generation.
 #[derive(Debug, Clone)]
 pub struct GenResponse {
+    /// Generated token ids.
     pub tokens: Vec<i32>,
+    /// Replica that served the request.
     pub replica: usize,
+    /// End-to-end latency, ms.
     pub latency_ms: f64,
 }
 
 /// Aggregate serving statistics.
 #[derive(Debug, Clone, Default)]
 pub struct ServingStats {
+    /// Requests completed.
     pub requests: u64,
+    /// Tokens generated across all replicas.
     pub tokens_generated: u64,
+    /// Batched decode steps executed.
     pub decode_steps: u64,
+    /// Engine-thread wall time, s.
     pub elapsed_s: f64,
+    /// Admissions paused by the KV confidence band.
     pub kv_alerts: u64,
     /// Per-replica generated-token counts.
     pub per_replica_tokens: Vec<u64>,
     /// Request queueing-delay percentiles (ms), from the orchestrator's
     /// external-job ledger.
     pub p50_queue_ms: f64,
+    /// p99 queueing delay, ms.
     pub p99_queue_ms: f64,
     /// End-to-end request latency percentiles (ms).
     pub p50_latency_ms: f64,
+    /// p99 end-to-end latency, ms.
     pub p99_latency_ms: f64,
 }
 
 impl ServingStats {
+    /// Aggregate decode throughput, tokens/s.
     pub fn tokens_per_s(&self) -> f64 {
         self.tokens_generated as f64 / self.elapsed_s.max(1e-9)
     }
@@ -110,12 +123,15 @@ enum Cmd {
 /// Configuration of a serving system.
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
+    /// Directory holding `manifest.json` and the AOT artifacts.
     pub artifacts_dir: PathBuf,
     /// Decode variant to host (e.g. "decode_s128").
     pub variant: String,
     /// Replica count; each replica gets a tightest MIG slice.
     pub replicas: usize,
+    /// GPU model replicas are carved from.
     pub gpu: GpuSpec,
+    /// Seed for the deterministic random parameters.
     pub seed: u64,
 }
 
@@ -164,6 +180,7 @@ struct Replica {
 pub struct ServingSystem {
     tx: Sender<Cmd>,
     join: Option<std::thread::JoinHandle<()>>,
+    /// Human-readable placements ("1g.5gb@slice0") in replica order.
     pub replica_slices: Vec<String>,
 }
 
@@ -230,6 +247,7 @@ impl ServingSystem {
             .map_err(|e| anyhow::anyhow!(e))
     }
 
+    /// Snapshot the aggregate serving statistics.
     pub fn stats(&self) -> Result<ServingStats> {
         let (tx, rx) = channel();
         self.tx
@@ -238,6 +256,7 @@ impl ServingSystem {
         Ok(rx.recv()?)
     }
 
+    /// Stop the engine thread and join it.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Cmd::Shutdown);
         if let Some(j) = self.join.take() {

@@ -20,7 +20,9 @@ pub struct AutoscalerKnobs {
     pub interval_s: f64,
     /// Minimum seconds between consecutive scale actions.
     pub cooldown_s: f64,
+    /// Floor on live replicas.
     pub min_replicas: usize,
+    /// Ceiling on live replicas.
     pub max_replicas: usize,
     /// Scale up when the recent-window p99 exceeds this fraction of
     /// the SLO.
@@ -67,7 +69,9 @@ impl AutoscalerKnobs {
 /// What the engine shows the policy at each evaluation tick.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LoadSnapshot {
+    /// Evaluation-tick time, s.
     pub t_s: f64,
+    /// Requests waiting for a slot.
     pub queue_depth: usize,
     /// Seconds the oldest queued request has waited (0 if none).
     pub oldest_wait_s: f64,
@@ -88,8 +92,11 @@ pub struct LoadSnapshot {
 /// The policy's verdict; the engine maps it onto `PartitionPlan`s.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScaleAction {
+    /// No change this tick.
     Hold,
+    /// Provision one more replica.
     AddReplica,
+    /// Drain and release one replica.
     RemoveReplica,
     /// Swap an eco replica to the fast MIG profile.
     PromoteProfile,
@@ -98,14 +105,17 @@ pub enum ScaleAction {
 }
 
 impl ScaleAction {
+    /// True for capacity-adding actions.
     pub fn is_up(self) -> bool {
         matches!(self, ScaleAction::AddReplica | ScaleAction::PromoteProfile)
     }
 
+    /// True for capacity-shedding actions.
     pub fn is_down(self) -> bool {
         matches!(self, ScaleAction::RemoveReplica | ScaleAction::DemoteProfile)
     }
 
+    /// Stable name for reports and events.
     pub fn label(self) -> &'static str {
         match self {
             ScaleAction::Hold => "hold",
@@ -117,13 +127,16 @@ impl ScaleAction {
     }
 }
 
+/// The threshold policy plus its cooldown latch.
 #[derive(Debug, Clone)]
 pub struct Autoscaler {
+    /// The thresholds this policy evaluates.
     pub knobs: AutoscalerKnobs,
     last_action_s: f64,
 }
 
 impl Autoscaler {
+    /// Policy with the given knobs, no action taken yet.
     pub fn new(knobs: AutoscalerKnobs) -> Autoscaler {
         assert!(knobs.min_replicas >= 1 && knobs.max_replicas >= knobs.min_replicas);
         Autoscaler {

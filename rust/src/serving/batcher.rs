@@ -24,12 +24,17 @@ use crate::serving::traffic::Request;
 pub struct SlotState {
     /// Orchestrator external-ledger token (latency accounting).
     pub token: u64,
+    /// The request occupying this slot.
     pub req_id: u64,
+    /// Request arrival time, s.
     pub arrival_s: f64,
     /// Admission time (start of service).
     pub start_s: f64,
+    /// Prompt tokens not yet prefilled.
     pub prompt_left: u32,
+    /// Decode tokens emitted so far.
     pub decode_done: u32,
+    /// Decode tokens the request asked for.
     pub decode_target: u32,
     /// KV tokens materialized so far.
     pub used_tokens: u64,
@@ -52,6 +57,8 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Batcher with `n_slots` slots and a KV budget derived from the
+    /// replica's memory minus resident weights.
     pub fn new(
         belief: BeliefId,
         n_slots: usize,
@@ -74,26 +81,32 @@ impl Batcher {
         }
     }
 
+    /// Total batch slots.
     pub fn n_slots(&self) -> usize {
         self.slots.len()
     }
 
+    /// Occupied batch slots.
     pub fn busy_slots(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
+    /// True when no slot is occupied.
     pub fn is_idle(&self) -> bool {
         self.slots.iter().all(|s| s.is_none())
     }
 
+    /// KV tokens reserved at admission across all slots.
     pub fn reserved_tokens(&self) -> u64 {
         self.reserved_tokens
     }
 
+    /// KV tokens materialized across all slots.
     pub fn used_tokens(&self) -> u64 {
         self.used_tokens
     }
 
+    /// KV-token capacity after resident weights.
     pub fn budget_tokens(&self) -> u64 {
         self.budget_tokens
     }

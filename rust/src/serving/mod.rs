@@ -55,12 +55,15 @@ type ServeOrchestrator = Orchestrator<SchemeBPolicy>;
 /// `demand_gpcs` runs `ceil(demand / gpcs)` compute waves per step.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ModelProfile {
+    /// Model name.
     pub name: &'static str,
+    /// Weights resident per replica, GB.
     pub weights_gb: f64,
     /// KV cache per token, MB.
     pub kv_mb_per_token: f64,
     /// Decode-iteration latency at full (`demand_gpcs`) compute, s.
     pub step_s_full: f64,
+    /// Compute demand in GPC units.
     pub demand_gpcs: u8,
     /// Prompt tokens absorbed per prefill iteration.
     pub prefill_chunk: u32,
@@ -79,6 +82,7 @@ impl ModelProfile {
         }
     }
 
+    /// KV cache per token, GB.
     pub fn kv_gb_per_token(&self) -> f64 {
         self.kv_mb_per_token / 1024.0
     }
@@ -92,15 +96,23 @@ impl ModelProfile {
 /// Full description of one serving run.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// Run label (report key).
     pub label: &'static str,
+    /// GPU model replicas are carved from.
     pub gpu: GpuSpec,
+    /// The model being served.
     pub model: ModelProfile,
+    /// Latency targets the run is scored against.
     pub slo: SloTargets,
+    /// Arrival process and request-shape generator.
     pub traffic: TrafficConfig,
+    /// Seed for traffic draws.
     pub seed: u64,
+    /// Replicas provisioned at t=0.
     pub initial_replicas: usize,
     /// Start replicas on the fast profile (vs eco)?
     pub initial_fast: bool,
+    /// Concurrent request slots per replica batcher.
     pub slots_per_replica: usize,
     /// Memory request that resolves to the eco MIG profile
     /// (`1g.10gb` on the A100-80GB).
@@ -161,7 +173,9 @@ impl ServeConfig {
 /// One scale action the engine executed (recorded at initiation).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScaleEvent {
+    /// Simulated time the action was initiated, s.
     pub t_s: f64,
+    /// What the autoscaler did.
     pub action: ScaleAction,
     /// Live replicas right after the action was initiated.
     pub replicas_after: usize,
@@ -172,11 +186,17 @@ pub struct ScaleEvent {
 /// strings.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// Run label.
     pub label: String,
+    /// GPU-model name.
     pub gpu: String,
+    /// Traffic seed.
     pub seed: u64,
+    /// The latency targets scored against.
     pub slo: SloTargets,
+    /// Requests offered.
     pub n_requests: usize,
+    /// Requests completed.
     pub completed: usize,
     /// Requests that met the p99 SLO.
     pub within_slo: usize,
@@ -184,10 +204,13 @@ pub struct ServeReport {
     pub duration_s: f64,
     /// Requests-within-SLO per second — the headline metric.
     pub sustained_rps: f64,
+    /// Per-request latency percentiles.
     pub latency: LatencyStats,
     /// p99 headroom vs the SLO target, ms (negative = blown).
     pub slo_margin_ms: f64,
+    /// Total energy over the run, J.
     pub energy_j: f64,
+    /// Energy per completed request, J.
     pub j_per_request: f64,
     /// Time-averaged utilized GPCs (slice-seconds / duration).
     pub mean_busy_gpcs: f64,
@@ -196,14 +219,21 @@ pub struct ServeReport {
     /// Fits whose projected demand exceeded the replica's memory —
     /// admission was paused by the confidence band.
     pub kv_alerts: u64,
+    /// Replica additions executed.
     pub scale_ups: usize,
+    /// Replica removals executed.
     pub scale_downs: usize,
+    /// Eco→fast profile swaps executed.
     pub promotions: usize,
+    /// Fast→eco profile swaps executed.
     pub demotions: usize,
+    /// Fewest live replicas seen.
     pub replicas_min: usize,
+    /// Most live replicas seen.
     pub replicas_max: usize,
     /// Simulated seconds spent provisioning/swapping replicas.
     pub reconfig_time_s: f64,
+    /// Every scale action, in initiation order.
     pub events: Vec<ScaleEvent>,
 }
 

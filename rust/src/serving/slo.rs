@@ -9,11 +9,14 @@ use crate::metrics::{LatencyStats, RollingWindow};
 /// Latency targets, milliseconds end-to-end (arrival → last token).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SloTargets {
+    /// Median turnaround target, ms.
     pub p50_ms: f64,
+    /// Tail (p99) turnaround target, ms.
     pub p99_ms: f64,
 }
 
 impl SloTargets {
+    /// Targets in milliseconds; p99 must be ≥ p50.
     pub fn new(p50_ms: f64, p99_ms: f64) -> SloTargets {
         assert!(p50_ms > 0.0 && p99_ms >= p50_ms);
         SloTargets { p50_ms, p99_ms }
@@ -27,6 +30,7 @@ impl SloTargets {
         SloTargets::new(4_000.0, 15_000.0)
     }
 
+    /// The p99 target in seconds.
     pub fn p99_s(&self) -> f64 {
         self.p99_ms / 1_000.0
     }
@@ -37,6 +41,7 @@ impl SloTargets {
 /// the SLO", the subsystem's headline metric.
 #[derive(Debug, Clone)]
 pub struct SloTracker {
+    /// The targets completions are scored against.
     pub targets: SloTargets,
     window: RollingWindow,
     queue_s: Vec<f64>,
@@ -48,6 +53,7 @@ pub struct SloTracker {
 const WINDOW_CAP: usize = 128;
 
 impl SloTracker {
+    /// Empty tracker for the given targets.
     pub fn new(targets: SloTargets) -> SloTracker {
         SloTracker {
             targets,
@@ -73,10 +79,12 @@ impl SloTracker {
         self.window.p99()
     }
 
+    /// Completions recorded over the full run.
     pub fn completed(&self) -> usize {
         self.turnaround_s.len()
     }
 
+    /// Completions that met the p99 target.
     pub fn within_slo(&self) -> usize {
         self.within_slo
     }

@@ -14,9 +14,13 @@ use crate::workloads::mix::{ArrivalProcess, RateProfile};
 /// batch iteration and one KV-cache slot-token.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
+    /// Request id, dense from 0 in arrival order.
     pub id: u64,
+    /// Arrival time, s.
     pub arrival_s: f64,
+    /// Prompt length, tokens.
     pub prompt_tokens: u32,
+    /// Requested completion length, tokens.
     pub decode_tokens: u32,
 }
 
@@ -33,12 +37,17 @@ pub enum TrafficConfig {
     /// `n_requests` arrivals over a diurnal / bursty [`RateProfile`]
     /// (non-homogeneous Poisson, sampled by thinning).
     Diurnal {
+        /// Total arrivals to draw.
         n_requests: usize,
+        /// The λ(t) shape arrivals are thinned against.
         profile: RateProfile,
     },
     /// Replay explicit arrival times (sorted seconds); request shapes
     /// are still drawn from the seeded shape stream.
-    Replay { arrivals: Vec<f64> },
+    Replay {
+        /// Sorted absolute arrival times, s.
+        arrivals: Vec<f64>,
+    },
 }
 
 /// Prompt-length range (tokens), uniform: `32..=224`.

@@ -368,6 +368,71 @@ fn property_sweep_mixed_pool_on_larger_slices() {
 }
 
 #[test]
+fn oom_relaunch_storm_churns_slots_identically() {
+    // Heavy churn: a too-big static job (kmeans, 6GB true) OOMs the
+    // moment its alloc lands on a 5GB slice and is relaunched in place,
+    // 30 times per instance, before a fitting job finally runs to
+    // completion. That is hundreds of insert/remove cycles through the
+    // engines' job storage — every kill leaves stale calendar entries
+    // behind and every relaunch reuses a freed slab slot — the storm
+    // that used to stress the `HashMap` path and now pins the
+    // generation-tag contract end-to-end, with both engines in
+    // lockstep throughout.
+    let spec = Arc::new(GpuSpec::a100_40gb());
+    let mut a = GpuSim::new(spec.clone(), false);
+    let mut b = NaiveGpuSim::new(spec, false);
+    let mut insts = Vec::new();
+    while let Ok(i) = a.mgr.alloc(0) {
+        assert_eq!(b.mgr.alloc(0).unwrap(), i);
+        insts.push(i);
+    }
+    let bad = crate::workloads::rodinia::by_name("kmeans").unwrap().job(7);
+    let good = crate::workloads::rodinia::by_name("gaussian").unwrap().job(7);
+    let mut remaining: HashMap<InstanceId, usize> = insts.iter().map(|&i| (i, 30)).collect();
+    for &i in &insts {
+        let id = a.launch(bad.clone(), i, 0.0);
+        assert_eq!(id, b.launch(bad.clone(), i, 0.0));
+    }
+    let mut finished = 0usize;
+    loop {
+        let (ea, eb) = (a.advance(), b.advance());
+        match (ea, eb) {
+            (None, None) => break,
+            (Some(x), Some(y)) => {
+                assert_events_equiv(&x, &y);
+                assert_close("storm clock", a.now(), b.now());
+                match &x {
+                    SimEvent::Oom { instance, .. } => {
+                        let t = a.now();
+                        let left = remaining.get_mut(instance).unwrap();
+                        let next = if *left > 0 {
+                            *left -= 1;
+                            bad.clone()
+                        } else {
+                            good.clone()
+                        };
+                        let id = a.launch(next.clone(), *instance, t);
+                        assert_eq!(id, b.launch(next, *instance, t));
+                    }
+                    SimEvent::Finished { .. } => finished += 1,
+                    _ => {}
+                }
+            }
+            (x, y) => panic!("storm presence diverged: indexed {x:?} vs oracle {y:?}"),
+        }
+    }
+    // Every instance OOMed 31 times (initial launch + 30 relaunches)
+    // then completed its fitting job exactly once.
+    assert_eq!(finished, insts.len());
+    assert_eq!(a.counters.oom_restarts, insts.len() * 31);
+    assert_eq!(a.counters.oom_restarts, b.counters.oom_restarts);
+    assert_eq!(a.records.len(), insts.len());
+    assert_eq!(a.records.len(), b.records.len());
+    assert_close("storm makespan", a.now(), b.now());
+    assert_close("storm energy", a.energy_j(), b.energy_j());
+}
+
+#[test]
 fn simultaneous_completions_identical_across_engines() {
     // Exact ties: identical jobs, identical launch instant. Both
     // engines must fire the co-due completions in ascending JobId

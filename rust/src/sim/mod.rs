@@ -1,6 +1,6 @@
 //! Discrete-event GPU simulator.
 //!
-//! Substitutes the paper's A100/A30 testbed (see DESIGN.md §2). Jobs run
+//! Substitutes the paper's A100/A30 testbed. Jobs run
 //! on MIG instances managed by [`crate::mig::PartitionManager`] and move
 //! through explicit phases (alloc → h2d → kernel waves / iterations →
 //! d2h → free). The simulator models the contention effects the paper
@@ -65,8 +65,19 @@
 //! updates, versus the oracle's four O(n) scans and a `Vec` clone.
 //! Simultaneous completions are deterministic: co-due entries fire in
 //! ascending `JobId` order (the oracle's launch-order rule), and the
-//! engine never iterates a `HashMap` to produce a float sum, so results
+//! engine never iterates a hash map to produce a float sum, so results
 //! are bit-stable across processes.
+//!
+//! Job state lives in a [`slab::Slab`] — dense slot storage with a
+//! freelist and generation-tagged [`slab::Handle`]s — rather than a
+//! `HashMap<JobId, Running>`: every calendar pop resolves its job with
+//! one bounds check and one generation compare instead of a hash +
+//! probe, which is the difference that shows at fleet-of-fleets scale
+//! (millions of events per run; see `benches/des_engine.rs`). Calendar
+//! keys carry the handle for O(1) resolution *and* the public `JobId`
+//! for the deterministic tie-break; `JobId`s stay monotone and are
+//! never reused, so nothing observable depends on slot assignment and
+//! snapshot bytes are unchanged by the migration.
 //!
 //! The oracle ([`naive::NaiveGpuSim`]) implements identical semantics
 //! with the original per-event scans; `sim::difftest` proves
@@ -104,6 +115,9 @@ use crate::trace::AllocatorTrace;
 use crate::workloads::{ComputeModel, JobKind, JobSpec};
 
 pub mod naive;
+pub mod slab;
+
+use slab::{Handle, Slab};
 
 #[cfg(test)]
 mod difftest;
@@ -324,11 +338,14 @@ pub(crate) fn op_active(op: &Op, inst_slices: u8) -> f64 {
 /// Per-job completion record (for turnaround / reporting).
 #[derive(Debug, Clone)]
 pub struct JobRecord {
+    /// Workload name from the launched `JobSpec`.
     pub name: String,
+    /// When the job entered the system (orchestrator submit or launch).
     pub submit_time: f64,
     /// When the final (successful) launch started; `start_time -
     /// submit_time` is the job's queueing delay.
     pub start_time: f64,
+    /// When the job completed; `finish_time - submit_time` is turnaround.
     pub finish_time: f64,
 }
 
@@ -343,7 +360,9 @@ pub struct SimCounters {
     /// the wall-clock cost of fusion/fission the throughput and energy
     /// tables must account for.
     pub reconfig_time_s: f64,
+    /// Jobs killed by out-of-memory and relaunched from scratch.
     pub oom_restarts: usize,
+    /// Jobs restarted early on a predicted-OOM signal (prediction runs).
     pub early_restarts: usize,
 }
 
@@ -352,29 +371,45 @@ pub struct SimCounters {
 pub enum SimEvent {
     /// Job ran to completion; its instance is still allocated (idle).
     Finished {
+        /// The finished job's engine-local id.
         job: JobId,
+        /// The finished job's spec.
         spec: JobSpec,
+        /// The instance it ran on (now idle).
         instance: InstanceId,
+        /// The job's original submission time.
         submit_time: f64,
     },
     /// Iterative job exceeded its instance memory at `iter`.
     Oom {
+        /// The killed job's engine-local id.
         job: JobId,
+        /// The killed job's spec (for relaunch).
         spec: JobSpec,
+        /// The instance it overflowed (now idle).
         instance: InstanceId,
+        /// The job's original submission time (turnaround anchor).
         submit_time: f64,
+        /// Iteration at which memory overflowed.
         iter: usize,
+        /// Footprint at the overflow, GB.
         mem_gb: f64,
     },
     /// Predictor converged above the instance size; job preempted early
     /// (raised by [`GpuSim::preempt`] on the caller's decision — the
     /// engine itself never predicts).
     Preempted {
+        /// The preempted job's engine-local id.
         job: JobId,
+        /// The preempted job's spec (for relaunch on a bigger slice).
         spec: JobSpec,
+        /// The instance it vacated (now idle).
         instance: InstanceId,
+        /// The job's original submission time (turnaround anchor).
         submit_time: f64,
+        /// Iteration at which the preemption landed.
         iter: usize,
+        /// The converged peak projection that triggered the preempt, GB.
         predicted_peak_gb: f64,
     },
     /// One iteration's allocator observation from a running iterative
@@ -383,10 +418,15 @@ pub enum SimEvent {
     /// belief ledger) may answer with [`GpuSim::preempt`] at the same
     /// instant. `mem_gb` is the iteration's physical footprint.
     MemObserved {
+        /// The observed (still-running) job's engine-local id.
         job: JobId,
+        /// The instance it occupies.
         instance: InstanceId,
+        /// Iteration index of the observation.
         iter: usize,
+        /// The allocator counters fed to the predictor.
         obs: Observation,
+        /// The iteration's physical footprint, GB.
         mem_gb: f64,
     },
     /// A reconfiguration window completed.
@@ -610,12 +650,15 @@ pub(crate) fn counters_from_json(j: &crate::util::Json) -> anyhow::Result<SimCou
 /// Calendar entry: an absolute due instant (real seconds on the
 /// real-time calendar, virtual service on the virtual one) with a
 /// deterministic `(instant, JobId)` total order. `token` invalidates
-/// stale entries lazily.
+/// stale entries lazily; `h` is the job's slab handle — resolution
+/// only, excluded from the order (and from snapshots: slot assignment
+/// is not deterministic, `JobId` is).
 #[derive(Debug, Clone, Copy)]
 struct CalKey {
     t: f64,
     job: JobId,
     token: u64,
+    h: Handle,
 }
 
 impl PartialEq for CalKey {
@@ -654,14 +697,14 @@ pub struct GpuSimSnapshot(pub crate::util::Json);
 /// timing.
 fn cal_to_json(
     heap: &BinaryHeap<Reverse<CalKey>>,
-    running: &HashMap<JobId, Running>,
+    running: &Slab<(JobId, Running)>,
 ) -> crate::util::Json {
     use crate::util::snap::{f64_to_json, u64_to_json};
     use crate::util::Json;
     let mut live: Vec<CalKey> = heap
         .iter()
         .map(|Reverse(k)| *k)
-        .filter(|k| running.get(&k.job).is_some_and(|r| r.token == k.token))
+        .filter(|k| running.get(k.h).is_some_and(|(_, r)| r.token == k.token))
         .collect();
     live.sort();
     Json::Arr(
@@ -677,17 +720,28 @@ fn cal_to_json(
     )
 }
 
-fn cal_from_json(j: &crate::util::Json) -> anyhow::Result<BinaryHeap<Reverse<CalKey>>> {
+/// Inverse of [`cal_to_json`]. Handles are not serialized (slot
+/// assignment is run-local); `handles` maps each restored job back to
+/// its fresh slab slot, and every live calendar entry must resolve.
+fn cal_from_json(
+    j: &crate::util::Json,
+    handles: &HashMap<JobId, Handle>,
+) -> anyhow::Result<BinaryHeap<Reverse<CalKey>>> {
     use crate::util::snap::{f64_from_json, u64_from_json, usize_from_json};
     let mut heap = BinaryHeap::new();
     for row in j
         .as_arr()
         .ok_or_else(|| anyhow::anyhow!("expected calendar array"))?
     {
+        let job: JobId = usize_from_json(row.at(1))?;
+        let h = *handles
+            .get(&job)
+            .ok_or_else(|| anyhow::anyhow!("calendar entry for unknown job {job}"))?;
         heap.push(Reverse(CalKey {
             t: f64_from_json(row.at(0))?,
-            job: usize_from_json(row.at(1))?,
+            job,
             token: u64_from_json(row.at(2))?,
+            h,
         }));
     }
     Ok(heap)
@@ -697,10 +751,12 @@ fn cal_from_json(j: &crate::util::Json) -> anyhow::Result<BinaryHeap<Reverse<Cal
 /// key without removing it.
 fn peek_valid(
     heap: &mut BinaryHeap<Reverse<CalKey>>,
-    running: &HashMap<JobId, Running>,
+    running: &Slab<(JobId, Running)>,
 ) -> Option<CalKey> {
     while let Some(Reverse(k)) = heap.peek() {
-        let live = running.get(&k.job).is_some_and(|r| r.token == k.token);
+        // Generation tag catches freed-and-reused slots; the token
+        // catches a live job's superseded entries.
+        let live = running.get(k.h).is_some_and(|(_, r)| r.token == k.token);
         if live {
             return Some(*k);
         }
@@ -711,12 +767,17 @@ fn peek_valid(
 
 /// The simulated GPU (indexed event-calendar engine; see module docs).
 pub struct GpuSim {
+    /// The simulated GPU's geometry/power model.
     pub spec: Arc<GpuSpec>,
+    /// MIG partition state (allocate/free/reconfigure instances here).
     pub mgr: PartitionManager,
     now: f64,
-    running: HashMap<JobId, Running>,
-    /// Occupancy index: instance -> job (O(1) `running_on`).
-    by_instance: HashMap<InstanceId, JobId>,
+    /// Job storage: dense slots, freelist reuse, generation-tagged
+    /// handles. The public `JobId` rides alongside each entry; slot
+    /// assignment itself is unobservable (see the module docs).
+    running: Slab<(JobId, Running)>,
+    /// Occupancy index: instance -> job handle (O(1) `running_on`).
+    by_instance: HashMap<InstanceId, Handle>,
     /// Real-time calendar: non-shared phase completions.
     cal: BinaryHeap<Reverse<CalKey>>,
     /// Virtual-service calendar: processor-shared PCIe bw completions.
@@ -737,7 +798,9 @@ pub struct GpuSim {
     next_id: JobId,
     energy_j: f64,
     mem_gb_integral: f64,
+    /// Reconfiguration/restart counters the metrics layer consumes.
     pub counters: SimCounters,
+    /// Completion records of every finished job.
     pub records: Vec<JobRecord>,
     /// Emit [`SimEvent::MemObserved`] per iteration of iterative jobs.
     /// Off by default-equivalent callers (no-prediction runs) so their
@@ -757,7 +820,7 @@ impl GpuSim {
             spec,
             mgr,
             now: 0.0,
-            running: HashMap::new(),
+            running: Slab::new(),
             by_instance: HashMap::new(),
             cal: BinaryHeap::new(),
             vcal: BinaryHeap::new(),
@@ -785,26 +848,32 @@ impl GpuSim {
         s
     }
 
+    /// Current simulated time, seconds.
     pub fn now(&self) -> f64 {
         self.now
     }
 
+    /// Energy integrated by the power model so far, joules.
     pub fn energy_j(&self) -> f64 {
         self.energy_j
     }
 
+    /// Time-integral of resident job memory (GB·s), for utilization.
     pub fn mem_gb_integral(&self) -> f64 {
         self.mem_gb_integral
     }
 
+    /// Number of jobs currently running.
     pub fn n_running(&self) -> usize {
         self.running.len()
     }
 
+    /// True if a job occupies `instance`.
     pub fn running_on(&self, instance: InstanceId) -> bool {
         self.by_instance.contains_key(&instance)
     }
 
+    /// True while a reconfiguration window is open.
     pub fn is_reconfiguring(&self) -> bool {
         self.reconfig_due.is_some()
     }
@@ -829,9 +898,9 @@ impl GpuSim {
         let id = self.next_id;
         self.next_id += 1;
         self.active_sum += r.ops.first().map(|o| op_active(o, c)).unwrap_or(0.0);
-        self.by_instance.insert(instance, id);
-        self.running.insert(id, r);
-        self.schedule_current(id);
+        let h = self.running.insert((id, r));
+        self.by_instance.insert(instance, h);
+        self.schedule_current(id, h);
         id
     }
 
@@ -876,14 +945,24 @@ impl GpuSim {
         self.spec.idle_power_w + per_gpc * self.active_sum.max(0.0)
     }
 
+    /// Resolve a public `JobId` to its live slab handle. Linear scan:
+    /// the live set is bounded by the instance count, and this runs
+    /// only on external entry points (`preempt`), never per event.
+    fn handle_of(&self, id: JobId) -> Option<Handle> {
+        self.running
+            .iter()
+            .find(|(_, (j, _))| *j == id)
+            .map(|(h, _)| h)
+    }
+
     /// (Re)schedule job `id`'s current phase on the appropriate
     /// calendar, invalidating any previous entry via a fresh token.
-    fn schedule_current(&mut self, id: JobId) {
+    fn schedule_current(&mut self, id: JobId, h: Handle) {
         self.token_counter += 1;
         let token = self.token_counter;
         let now = self.now;
         let v_now = self.v_now;
-        let r = self.running.get_mut(&id).unwrap();
+        let (_, r) = self.running.get_mut(h).unwrap();
         r.token = token;
         r.in_bw = false;
         let (t, shared) = match r.ops.get(r.cursor) {
@@ -905,7 +984,12 @@ impl GpuSim {
                 }
             }
         };
-        let key = CalKey { t, job: id, token };
+        let key = CalKey {
+            t,
+            job: id,
+            token,
+            h,
+        };
         if shared {
             self.n_bw += 1;
             self.vcal.push(Reverse(key));
@@ -985,8 +1069,8 @@ impl GpuSim {
             }
             // 4. fire one due job transition (smallest JobId among the
             // co-due set — the oracle's launch-order rule)
-            if let Some(id) = self.pop_due_job() {
-                if let Some(ev) = self.fire(id) {
+            if let Some((id, h)) = self.pop_due_job() {
+                if let Some(ev) = self.fire(id, h) {
                     return Some(ev);
                 }
             }
@@ -997,7 +1081,7 @@ impl GpuSim {
     /// return the smallest `JobId`, pushing the rest back. Uses the
     /// reusable scratch buffer: this runs once per event, and the
     /// common case is a single due entry.
-    fn pop_due_job(&mut self) -> Option<JobId> {
+    fn pop_due_job(&mut self) -> Option<(JobId, Handle)> {
         let mut due = std::mem::take(&mut self.due_scratch);
         due.clear();
         while let Some(k) = peek_valid(&mut self.cal, &self.running) {
@@ -1034,7 +1118,7 @@ impl GpuSim {
                     self.cal.push(Reverse(other));
                 }
             }
-            key.job
+            (key.job, key.h)
         });
         self.due_scratch = due;
         job
@@ -1043,8 +1127,8 @@ impl GpuSim {
     /// Handle the firing of job `id`'s calendar entry: finish the
     /// current phase, either transitioning within the op (PCIe
     /// latency → bandwidth) or completing it.
-    fn fire(&mut self, id: JobId) -> Option<SimEvent> {
-        let r = self.running.get_mut(&id).expect("fired a stale entry");
+    fn fire(&mut self, id: JobId, h: Handle) -> Option<SimEvent> {
+        let (_, r) = self.running.get_mut(h).expect("fired a stale entry");
         match r.ops.get_mut(r.cursor) {
             Some(Op::Fixed { rem, .. }) | Some(Op::IterKernel { rem, .. }) => *rem = 0.0,
             Some(Op::Pcie { fixed_rem, bw_rem }) => {
@@ -1057,7 +1141,7 @@ impl GpuSim {
                     if *bw_rem > EPS {
                         // Latency part done: join the processor-shared
                         // pool (internal, not scheduler-visible).
-                        self.schedule_current(id);
+                        self.schedule_current(id, h);
                         return None;
                     }
                     *bw_rem = 0.0;
@@ -1065,7 +1149,7 @@ impl GpuSim {
             }
             None => {}
         }
-        self.complete_op(id)
+        self.complete_op(id, h)
     }
 
     /// Fast-forward an idle GPU to `t` (online mode: nothing to do until
@@ -1085,15 +1169,17 @@ impl GpuSim {
     }
 
     /// Update a job's resident memory, keeping the accumulator in sync.
-    fn set_mem(&mut self, id: JobId, mem_gb: f64) {
-        let r = self.running.get_mut(&id).unwrap();
+    fn set_mem(&mut self, h: Handle, mem_gb: f64) {
+        let (_, r) = self.running.get_mut(h).unwrap();
         self.mem_sum += mem_gb - r.cur_mem_gb;
         r.cur_mem_gb = mem_gb;
     }
 
     /// Remove a job, unwinding every accumulator it contributes to.
-    fn remove(&mut self, id: JobId) -> Running {
-        let r = self.running.remove(&id).unwrap();
+    /// The slab bumps the slot's generation, so every calendar entry
+    /// still pointing at it goes stale without a sweep.
+    fn remove(&mut self, h: Handle) -> Running {
+        let (_, r) = self.running.remove(h).unwrap();
         self.by_instance.remove(&r.instance);
         self.mem_sum -= r.cur_mem_gb;
         self.active_sum -= r
@@ -1115,11 +1201,11 @@ impl GpuSim {
     }
 
     /// Handle completion of job `id`'s current op; may emit an event.
-    fn complete_op(&mut self, id: JobId) -> Option<SimEvent> {
+    fn complete_op(&mut self, id: JobId, h: Handle) -> Option<SimEvent> {
         // Allocator observation to emit after the job's next op is
         // armed (the job keeps running; the belief ledger decides).
         let mut observed: Option<(usize, Observation, f64)> = None;
-        let r = self.running.get_mut(&id).unwrap();
+        let (_, r) = self.running.get_mut(h).unwrap();
         let instance = r.instance;
         match r.ops.get(r.cursor) {
             Some(Op::Fixed { .. }) | Some(Op::Pcie { .. }) => {
@@ -1128,12 +1214,12 @@ impl GpuSim {
                     if let ComputeModel::Phases(_) = r.spec.compute {
                         let mem = r.spec.true_mem_gb;
                         let over = mem > r.inst_mem_gb + EPS;
-                        self.set_mem(id, mem);
+                        self.set_mem(h, mem);
                         // Mis-estimated static job: OOM as soon as the
                         // allocation exceeds the slice.
                         if over {
                             self.counters.oom_restarts += 1;
-                            return Some(self.kill(id, KillKind::Oom { iter: 0, mem_gb: mem }));
+                            return Some(self.kill(id, h, KillKind::Oom { iter: 0, mem_gb: mem }));
                         }
                     }
                 }
@@ -1145,10 +1231,10 @@ impl GpuSim {
                 let obs = trace.observation(iter);
                 let inst_mem = r.inst_mem_gb;
                 let oom = mem > inst_mem + EPS;
-                self.set_mem(id, mem.min(inst_mem));
+                self.set_mem(h, mem.min(inst_mem));
                 if oom {
                     self.counters.oom_restarts += 1;
-                    return Some(self.kill(id, KillKind::Oom { iter, mem_gb: mem }));
+                    return Some(self.kill(id, h, KillKind::Oom { iter, mem_gb: mem }));
                 }
                 if self.observe {
                     observed = Some((iter, obs, mem));
@@ -1160,7 +1246,7 @@ impl GpuSim {
         // otherwise arm the next op under the *live* instance layout
         // (Table-3 overheads are taken at op start, not at launch).
         let n_inst = self.mgr.instance_count();
-        let r = self.running.get_mut(&id).unwrap();
+        let (_, r) = self.running.get_mut(h).unwrap();
         let old_active = r
             .ops
             .get(r.cursor)
@@ -1171,7 +1257,7 @@ impl GpuSim {
             r.cursor += 1;
         }
         if r.cursor >= r.ops.len() {
-            let r = self.remove(id);
+            let r = self.remove(h);
             self.records.push(JobRecord {
                 name: r.spec.name.clone(),
                 submit_time: r.submit_time,
@@ -1188,7 +1274,7 @@ impl GpuSim {
         arm_op(&mut r.ops[r.cursor], &self.spec, n_inst);
         let new_active = op_active(&r.ops[r.cursor], r.inst_slices);
         self.active_sum += new_active;
-        self.schedule_current(id);
+        self.schedule_current(id, h);
         observed.map(|(iter, obs, mem_gb)| SimEvent::MemObserved {
             job: id,
             instance,
@@ -1204,13 +1290,13 @@ impl GpuSim {
     /// [`SimEvent::MemObserved`]). No simulated time passes; the
     /// returned [`SimEvent::Preempted`] is what the policy consumes.
     pub fn preempt(&mut self, job: JobId, iter: usize, predicted_peak_gb: f64) -> SimEvent {
-        assert!(
-            self.running.contains_key(&job),
-            "preempt of a job that is not running"
-        );
+        let h = self
+            .handle_of(job)
+            .expect("preempt of a job that is not running");
         self.counters.early_restarts += 1;
         self.kill(
             job,
+            h,
             KillKind::Preempt {
                 iter,
                 peak: predicted_peak_gb,
@@ -1218,8 +1304,8 @@ impl GpuSim {
         )
     }
 
-    fn kill(&mut self, id: JobId, kind: KillKind) -> SimEvent {
-        let r = self.remove(id);
+    fn kill(&mut self, id: JobId, h: Handle, kind: KillKind) -> SimEvent {
+        let r = self.remove(h);
         match kind {
             KillKind::Oom { iter, mem_gb } => SimEvent::Oom {
                 job: id,
@@ -1254,16 +1340,12 @@ impl GpuSim {
     pub fn snapshot(&self) -> GpuSimSnapshot {
         use crate::util::snap::{f64_to_json, u64_to_json};
         use crate::util::Json;
-        let mut ids: Vec<JobId> = self.running.keys().copied().collect();
-        ids.sort_unstable();
+        let mut jobs: Vec<(JobId, &Running)> =
+            self.running.iter().map(|(_, (id, r))| (*id, r)).collect();
+        jobs.sort_unstable_by_key(|&(id, _)| id);
         let running = Json::Arr(
-            ids.iter()
-                .map(|id| {
-                    Json::Arr(vec![
-                        Json::num(*id as f64),
-                        running_to_json(&self.running[id]),
-                    ])
-                })
+            jobs.iter()
+                .map(|(id, r)| Json::Arr(vec![Json::num(*id as f64), running_to_json(r)]))
                 .collect(),
         );
         GpuSimSnapshot(Json::obj(vec![
@@ -1301,8 +1383,11 @@ impl GpuSim {
         let j = &snap.0;
         self.mgr
             .restore(&crate::mig::PartitionSnapshot(j.get("mgr").clone()))?;
-        let mut running = HashMap::new();
+        let mut running: Slab<(JobId, Running)> = Slab::new();
         let mut by_instance = HashMap::new();
+        // JobId -> fresh slab handle, to rehydrate calendar keys (slot
+        // assignment is run-local and never serialized).
+        let mut handles: HashMap<JobId, Handle> = HashMap::new();
         for row in j
             .get("running")
             .as_arr()
@@ -1310,12 +1395,14 @@ impl GpuSim {
         {
             let id: JobId = usize_from_json(row.at(0))?;
             let r = running_from_json(row.at(1))?;
-            by_instance.insert(r.instance, id);
-            let prev = running.insert(id, r);
+            let instance = r.instance;
+            let h = running.insert((id, r));
+            by_instance.insert(instance, h);
+            let prev = handles.insert(id, h);
             anyhow::ensure!(prev.is_none(), "duplicate job id {id} in snapshot");
         }
-        self.cal = cal_from_json(j.get("cal"))?;
-        self.vcal = cal_from_json(j.get("vcal"))?;
+        self.cal = cal_from_json(j.get("cal"), &handles)?;
+        self.vcal = cal_from_json(j.get("vcal"), &handles)?;
         self.running = running;
         self.by_instance = by_instance;
         self.now = f64_from_json(j.get("now"))?;
@@ -1349,11 +1436,12 @@ impl GpuSim {
     /// accumulators to exactly zero when the last job leaves, so a
     /// later restart resumes from a clean engine.
     pub fn fault_evacuate(&mut self) -> Vec<(JobId, JobSpec, f64)> {
-        let mut ids: Vec<JobId> = self.running.keys().copied().collect();
-        ids.sort_unstable();
+        let mut ids: Vec<(JobId, Handle)> =
+            self.running.iter().map(|(h, (id, _))| (*id, h)).collect();
+        ids.sort_unstable_by_key(|&(id, _)| id);
         let mut out = Vec::with_capacity(ids.len());
-        for id in ids {
-            let r = self.remove(id);
+        for (id, h) in ids {
+            let r = self.remove(h);
             out.push((id, r.spec, r.submit_time));
         }
         self.cal.clear();
@@ -1394,9 +1482,9 @@ impl GpuSim {
         r.ops.clear();
         let id = self.next_id;
         self.next_id += 1;
-        self.by_instance.insert(instance, id);
-        self.running.insert(id, r);
-        self.schedule_current(id);
+        let h = self.running.insert((id, r));
+        self.by_instance.insert(instance, h);
+        self.schedule_current(id, h);
         id
     }
 }

@@ -19,30 +19,37 @@
 //! Used by tests and by `benches/des_engine.rs` (the ≥5x fleet-bench
 //! comparison); not wired into any scheduler path.
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::mig::{GpuSpec, InstanceId, PartitionManager};
 use crate::predictor::Observation;
 use crate::workloads::{ComputeModel, JobSpec};
 
+use super::slab::{Handle, Slab};
 use super::{
     arm_op, op_active, EPS, JobId, JobRecord, KillKind, Op, Running, SimCounters, SimEvent,
 };
 
 /// The simulated GPU, original scan-and-decrement engine (oracle).
 pub struct NaiveGpuSim {
+    /// The simulated GPU's geometry/power model.
     pub spec: Arc<GpuSpec>,
+    /// MIG partition state (allocate/free/reconfigure instances here).
     pub mgr: PartitionManager,
     now: f64,
-    running: HashMap<JobId, Running>,
-    /// Deterministic processing order.
-    run_order: Vec<JobId>,
+    /// Job storage (same slab as the indexed engine; every scan below
+    /// walks `run_order`, so iteration — and float summation — order
+    /// is launch order, deterministic across processes).
+    running: Slab<Running>,
+    /// Deterministic processing order (launch order).
+    run_order: Vec<(JobId, Handle)>,
     reconfig_rem: Option<f64>,
     next_id: JobId,
     energy_j: f64,
     mem_gb_integral: f64,
+    /// Reconfiguration/restart counters the metrics layer consumes.
     pub counters: SimCounters,
+    /// Completion records of every finished job.
     pub records: Vec<JobRecord>,
     /// Emit [`SimEvent::MemObserved`] per iteration (see the indexed
     /// engine: prediction state lives behind the caller's ledger).
@@ -50,13 +57,16 @@ pub struct NaiveGpuSim {
 }
 
 impl NaiveGpuSim {
+    /// Fresh engine on `spec`; `observe` enables per-iteration
+    /// `MemObserved` emission (must match the indexed engine's flag in
+    /// difftests).
     pub fn new(spec: Arc<GpuSpec>, observe: bool) -> Self {
         let mgr = PartitionManager::new(spec.clone());
         NaiveGpuSim {
             spec,
             mgr,
             now: 0.0,
-            running: HashMap::new(),
+            running: Slab::new(),
             run_order: Vec::new(),
             reconfig_rem: None,
             next_id: 0,
@@ -68,26 +78,32 @@ impl NaiveGpuSim {
         }
     }
 
+    /// Current simulated time, seconds.
     pub fn now(&self) -> f64 {
         self.now
     }
 
+    /// Energy integrated by the power model so far, joules.
     pub fn energy_j(&self) -> f64 {
         self.energy_j
     }
 
+    /// Time-integral of resident job memory (GB·s), for utilization.
     pub fn mem_gb_integral(&self) -> f64 {
         self.mem_gb_integral
     }
 
+    /// Number of jobs currently running.
     pub fn n_running(&self) -> usize {
         self.running.len()
     }
 
+    /// True if a job occupies `instance` (O(n) scan — this is the oracle).
     pub fn running_on(&self, instance: InstanceId) -> bool {
-        self.running.values().any(|r| r.instance == instance)
+        self.running.iter().any(|(_, r)| r.instance == instance)
     }
 
+    /// True while a reconfiguration window is open.
     pub fn is_reconfiguring(&self) -> bool {
         self.reconfig_rem.is_some()
     }
@@ -110,8 +126,8 @@ impl NaiveGpuSim {
         }
         let id = self.next_id;
         self.next_id += 1;
-        self.running.insert(id, r);
-        self.run_order.push(id);
+        let h = self.running.insert(r);
+        self.run_order.push((id, h));
         id
     }
 
@@ -141,7 +157,8 @@ impl NaiveGpuSim {
         let per_gpc =
             (self.spec.max_power_w - self.spec.idle_power_w) / self.spec.total_compute as f64;
         let mut active = 0.0;
-        for r in self.running.values() {
+        for &(_, h) in &self.run_order {
+            let r = self.running.get(h).unwrap();
             if let Some(op) = r.ops.get(r.cursor) {
                 active += op_active(op, r.inst_slices);
             }
@@ -151,8 +168,8 @@ impl NaiveGpuSim {
 
     fn n_bw_transfers(&self) -> usize {
         self.running
-            .values()
-            .filter(|r| {
+            .iter()
+            .filter(|(_, r)| {
                 matches!(
                     r.ops.get(r.cursor),
                     Some(Op::Pcie { fixed_rem, bw_rem }) if *fixed_rem <= EPS && *bw_rem > EPS
@@ -194,7 +211,7 @@ impl NaiveGpuSim {
             // `power * ∞` into energy (the NaN-poisoning regression).
             let n_bw = self.n_bw_transfers();
             let mut dt = f64::INFINITY;
-            for r in self.running.values() {
+            for (_, r) in self.running.iter() {
                 match r.ops.get(r.cursor) {
                     Some(op) => dt = dt.min(Self::op_eta(op, n_bw)),
                     None => dt = 0.0,
@@ -219,13 +236,17 @@ impl NaiveGpuSim {
             // 2. integrate power + memory over [now, now+dt)
             if dt > 0.0 {
                 self.energy_j += self.power_w() * dt;
-                let mem_now: f64 = self.running.values().map(|r| r.cur_mem_gb).sum();
+                let mem_now: f64 = self
+                    .run_order
+                    .iter()
+                    .map(|&(_, h)| self.running.get(h).unwrap().cur_mem_gb)
+                    .sum();
                 self.mem_gb_integral += mem_now * dt;
                 self.now += dt;
             }
 
             // 3. apply progress
-            for r in self.running.values_mut() {
+            for (_, r) in self.running.iter_mut() {
                 if let Some(op) = r.ops.get_mut(r.cursor) {
                     match op {
                         Op::Fixed { rem, .. } | Op::IterKernel { rem, .. } => *rem -= dt,
@@ -248,10 +269,10 @@ impl NaiveGpuSim {
             }
 
             // 4. fire at most one job transition (deterministic order)
-            let order: Vec<JobId> = self.run_order.clone();
+            let order: Vec<(JobId, Handle)> = self.run_order.clone();
             let mut fired = None;
-            for id in order {
-                let Some(r) = self.running.get(&id) else {
+            for (id, h) in order {
+                let Some(r) = self.running.get(h) else {
                     continue;
                 };
                 let done = match r.ops.get(r.cursor) {
@@ -262,7 +283,7 @@ impl NaiveGpuSim {
                 if !done {
                     continue;
                 }
-                fired = self.complete_op(id);
+                fired = self.complete_op(id, h);
                 if fired.is_some() {
                     break;
                 }
@@ -291,11 +312,11 @@ impl NaiveGpuSim {
     }
 
     /// Handle completion of job `id`'s current op; may emit an event.
-    fn complete_op(&mut self, id: JobId) -> Option<SimEvent> {
+    fn complete_op(&mut self, id: JobId, h: Handle) -> Option<SimEvent> {
         // Allocator observation to emit after the next op is armed (the
         // job keeps running; the caller's belief ledger decides).
         let mut observed: Option<(usize, Observation, f64)> = None;
-        let r = self.running.get_mut(&id).unwrap();
+        let r = self.running.get_mut(h).unwrap();
         let instance = r.instance;
         match r.ops.get(r.cursor) {
             Some(Op::Fixed { .. }) | Some(Op::Pcie { .. }) => {
@@ -308,7 +329,7 @@ impl NaiveGpuSim {
                         if r.spec.true_mem_gb > r.inst_mem_gb + EPS {
                             let mem = r.spec.true_mem_gb;
                             self.counters.oom_restarts += 1;
-                            return Some(self.kill(id, KillKind::Oom { iter: 0, mem_gb: mem }));
+                            return Some(self.kill(id, h, KillKind::Oom { iter: 0, mem_gb: mem }));
                         }
                     }
                 }
@@ -321,7 +342,7 @@ impl NaiveGpuSim {
                 r.cur_mem_gb = mem.min(r.inst_mem_gb);
                 if mem > r.inst_mem_gb + EPS {
                     self.counters.oom_restarts += 1;
-                    return Some(self.kill(id, KillKind::Oom { iter, mem_gb: mem }));
+                    return Some(self.kill(id, h, KillKind::Oom { iter, mem_gb: mem }));
                 }
                 if self.observe {
                     observed = Some((iter, obs, mem));
@@ -331,13 +352,13 @@ impl NaiveGpuSim {
             None => {}
         }
         // Advance the cursor; finish the job if the program is done.
-        let r = self.running.get_mut(&id).unwrap();
+        let r = self.running.get_mut(h).unwrap();
         if r.cursor < r.ops.len() {
             r.cursor += 1;
         }
         if r.cursor >= r.ops.len() {
-            let r = self.running.remove(&id).unwrap();
-            self.run_order.retain(|&j| j != id);
+            let r = self.running.remove(h).unwrap();
+            self.run_order.retain(|&(j, _)| j != id);
             self.records.push(JobRecord {
                 name: r.spec.name.clone(),
                 submit_time: r.submit_time,
@@ -354,7 +375,7 @@ impl NaiveGpuSim {
         // Arm the next op under the *live* instance layout (Table-3
         // overheads are taken at op start, not at launch).
         let n_inst = self.mgr.instance_count();
-        let r = self.running.get_mut(&id).unwrap();
+        let r = self.running.get_mut(h).unwrap();
         arm_op(&mut r.ops[r.cursor], &self.spec, n_inst);
         observed.map(|(iter, obs, mem_gb)| SimEvent::MemObserved {
             job: id,
@@ -367,13 +388,16 @@ impl NaiveGpuSim {
 
     /// See [`super::GpuSim::preempt`]; identical contract.
     pub fn preempt(&mut self, job: JobId, iter: usize, predicted_peak_gb: f64) -> SimEvent {
-        assert!(
-            self.running.contains_key(&job),
-            "preempt of a job that is not running"
-        );
+        let h = self
+            .run_order
+            .iter()
+            .find(|&&(j, _)| j == job)
+            .map(|&(_, h)| h)
+            .expect("preempt of a job that is not running");
         self.counters.early_restarts += 1;
         self.kill(
             job,
+            h,
             KillKind::Preempt {
                 iter,
                 peak: predicted_peak_gb,
@@ -381,9 +405,9 @@ impl NaiveGpuSim {
         )
     }
 
-    fn kill(&mut self, id: JobId, kind: KillKind) -> SimEvent {
-        let r = self.running.remove(&id).unwrap();
-        self.run_order.retain(|&j| j != id);
+    fn kill(&mut self, id: JobId, h: Handle, kind: KillKind) -> SimEvent {
+        let r = self.running.remove(h).unwrap();
+        self.run_order.retain(|&(j, _)| j != id);
         match kind {
             KillKind::Oom { iter, mem_gb } => SimEvent::Oom {
                 job: id,
@@ -417,10 +441,10 @@ impl NaiveGpuSim {
         let running = Json::Arr(
             self.run_order
                 .iter()
-                .map(|id| {
+                .map(|&(id, h)| {
                     Json::Arr(vec![
-                        Json::num(*id as f64),
-                        super::running_to_json(&self.running[id]),
+                        Json::num(id as f64),
+                        super::running_to_json(self.running.get(h).unwrap()),
                     ])
                 })
                 .collect(),
@@ -452,8 +476,8 @@ impl NaiveGpuSim {
         let j = &snap.0;
         self.mgr
             .restore(&crate::mig::PartitionSnapshot(j.get("mgr").clone()))?;
-        let mut running = HashMap::new();
-        let mut run_order = Vec::new();
+        let mut running: Slab<Running> = Slab::new();
+        let mut run_order: Vec<(JobId, Handle)> = Vec::new();
         for row in j
             .get("running")
             .as_arr()
@@ -461,9 +485,12 @@ impl NaiveGpuSim {
         {
             let id: JobId = usize_from_json(row.at(0))?;
             let r = super::running_from_json(row.at(1))?;
-            run_order.push(id);
-            let prev = running.insert(id, r);
-            anyhow::ensure!(prev.is_none(), "duplicate job id {id} in snapshot");
+            anyhow::ensure!(
+                !run_order.iter().any(|&(j, _)| j == id),
+                "duplicate job id {id} in snapshot"
+            );
+            let h = running.insert(r);
+            run_order.push((id, h));
         }
         self.running = running;
         self.run_order = run_order;
@@ -496,8 +523,8 @@ impl NaiveGpuSim {
         r.ops.clear();
         let id = self.next_id;
         self.next_id += 1;
-        self.running.insert(id, r);
-        self.run_order.push(id);
+        let h = self.running.insert(r);
+        self.run_order.push((id, h));
         id
     }
 }

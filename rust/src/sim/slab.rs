@@ -1,0 +1,287 @@
+//! Slab + freelist job storage for the DES engines.
+//!
+//! Both simulator engines keep per-job state that is created at launch,
+//! mutated on every calendar event, and dropped at completion. A
+//! `HashMap<JobId, _>` puts a hash + probe on every event pop; at
+//! fleet-of-fleets scale (millions of events per run) that hash is the
+//! single hottest instruction sequence in the engine. [`Slab`] replaces
+//! it with a dense `Vec` indexed by slot: O(1) insert (pop the
+//! freelist), O(1) remove (push the freelist), O(1) lookup (one bounds
+//! check + one generation compare).
+//!
+//! # Generation-tagged handles
+//!
+//! Slots are reused, so a bare index would alias: a calendar entry
+//! scheduled for job A must not fire against job B after A completes
+//! and B lands in A's slot. Every slot carries a generation counter
+//! bumped on each `remove`; a [`Handle`] is `(slot, generation)` and
+//! [`Slab::get`] returns `None` whenever the generations disagree. That
+//! is exactly the lazy-invalidation contract the engines' event
+//! calendars rely on: stale heap entries are detected on pop, never
+//! eagerly swept. (The engines additionally carry a per-schedule
+//! `token` so *live* jobs can invalidate their own superseded entries;
+//! the generation tag covers the free-and-reuse case.)
+//!
+//! # Determinism
+//!
+//! Slot assignment depends on the interleaving of inserts and removes
+//! (LIFO freelist), so nothing observable may depend on it. The
+//! engines observe jobs only through [`crate::sim::JobId`]s — monotone,
+//! never reused — and every iteration that feeds an ordered output
+//! ([`Slab::iter`] into snapshots, evacuation sweeps) is sorted by
+//! `JobId` at the call site. The property tests below pin the
+//! no-aliasing guarantee; `sim::difftest` pins that the migration off
+//! `HashMap` changed no observable byte.
+
+/// A generation-tagged reference to one occupied (or since-freed) slot.
+///
+/// Obtained from [`Slab::insert`]; stays valid until the matching
+/// [`Slab::remove`], after which every lookup through it returns
+/// `None` — even if the slot has been reused by a newer value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Handle {
+    slot: u32,
+    gen: u32,
+}
+
+impl Handle {
+    /// A handle that no slab ever issues (slot `u32::MAX`), for
+    /// initializing fields that are always overwritten before use.
+    pub const DANGLING: Handle = Handle {
+        slot: u32::MAX,
+        gen: u32::MAX,
+    };
+
+    /// The raw slot index (diagnostics only — never stable across
+    /// snapshot/restore; see the module docs on determinism).
+    pub fn slot(&self) -> u32 {
+        self.slot
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Entry<T> {
+    gen: u32,
+    val: Option<T>,
+}
+
+/// Dense slot storage with a LIFO freelist and generation tags.
+///
+/// See the module docs for why the engines use this instead of a
+/// `HashMap` and what the generation tag guarantees.
+#[derive(Debug, Clone)]
+pub struct Slab<T> {
+    slots: Vec<Entry<T>>,
+    free: Vec<u32>,
+    len: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Slab<T> {
+    /// An empty slab (no allocation until the first insert).
+    pub fn new() -> Self {
+        Slab {
+            slots: Vec::new(),
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Number of live values.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether no value is live.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Insert a value, reusing the most recently freed slot if any.
+    pub fn insert(&mut self, val: T) -> Handle {
+        self.len += 1;
+        if let Some(slot) = self.free.pop() {
+            let e = &mut self.slots[slot as usize];
+            debug_assert!(e.val.is_none(), "freelist pointed at a live slot");
+            e.val = Some(val);
+            Handle { slot, gen: e.gen }
+        } else {
+            let slot = u32::try_from(self.slots.len()).expect("slab capacity");
+            self.slots.push(Entry { gen: 0, val: Some(val) });
+            Handle { slot, gen: 0 }
+        }
+    }
+
+    /// Look up a live value; `None` if the handle is stale (freed, or
+    /// freed and the slot since reused) or from another slab.
+    #[inline]
+    pub fn get(&self, h: Handle) -> Option<&T> {
+        match self.slots.get(h.slot as usize) {
+            Some(e) if e.gen == h.gen => e.val.as_ref(),
+            _ => None,
+        }
+    }
+
+    /// Mutable [`Slab::get`].
+    #[inline]
+    pub fn get_mut(&mut self, h: Handle) -> Option<&mut T> {
+        match self.slots.get_mut(h.slot as usize) {
+            Some(e) if e.gen == h.gen => e.val.as_mut(),
+            _ => None,
+        }
+    }
+
+    /// Remove and return the value behind `h`, bumping the slot's
+    /// generation so every outstanding copy of `h` goes stale. `None`
+    /// if `h` was already stale (double-remove is a no-op).
+    pub fn remove(&mut self, h: Handle) -> Option<T> {
+        let e = self.slots.get_mut(h.slot as usize)?;
+        if e.gen != h.gen {
+            return None;
+        }
+        let val = e.val.take()?;
+        e.gen = e.gen.wrapping_add(1);
+        self.free.push(h.slot);
+        self.len -= 1;
+        Some(val)
+    }
+
+    /// Iterate live entries in slot order. Slot order is **not**
+    /// deterministic across runs that interleave inserts and removes
+    /// differently — callers feeding ordered outputs must sort by a
+    /// stable key (the engines sort by `JobId`).
+    pub fn iter(&self) -> impl Iterator<Item = (Handle, &T)> {
+        self.slots.iter().enumerate().filter_map(|(i, e)| {
+            e.val.as_ref().map(|v| {
+                (
+                    Handle {
+                        slot: i as u32,
+                        gen: e.gen,
+                    },
+                    v,
+                )
+            })
+        })
+    }
+
+    /// Mutable [`Slab::iter`] (same slot-order caveat).
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (Handle, &mut T)> {
+        self.slots.iter_mut().enumerate().filter_map(|(i, e)| {
+            let gen = e.gen;
+            e.val.as_mut().map(move |v| {
+                (
+                    Handle {
+                        slot: i as u32,
+                        gen,
+                    },
+                    v,
+                )
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s: Slab<&'static str> = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a), Some(&"a"));
+        assert_eq!(s.get(b), Some(&"b"));
+        assert_eq!(s.remove(a), Some("a"));
+        assert_eq!(s.get(a), None);
+        assert_eq!(s.remove(a), None, "double remove is a no-op");
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn freed_slot_is_reused_but_stale_handle_never_aliases() {
+        let mut s: Slab<u64> = Slab::new();
+        let a = s.insert(1);
+        assert_eq!(s.remove(a), Some(1));
+        let b = s.insert(2);
+        // LIFO freelist: same slot, new generation.
+        assert_eq!(b.slot(), a.slot());
+        assert_ne!(a, b);
+        assert_eq!(s.get(a), None, "stale handle must not see the new tenant");
+        assert_eq!(s.get(b), Some(&2));
+    }
+
+    #[test]
+    fn dangling_handle_resolves_to_none() {
+        let mut s: Slab<u8> = Slab::new();
+        assert_eq!(s.get(Handle::DANGLING), None);
+        s.insert(7);
+        assert_eq!(s.get(Handle::DANGLING), None);
+        assert_eq!(s.remove(Handle::DANGLING), None);
+    }
+
+    /// Property test for the generation tags: under a random storm of
+    /// inserts and removes (the OOM-relaunch churn pattern), a handle
+    /// that was removed NEVER resolves again — not to its old value,
+    /// not to any slot-reusing successor — while every live handle
+    /// resolves to exactly the value it was inserted with.
+    #[test]
+    fn churn_never_aliases_across_reuse() {
+        let mut rng = Rng::new(0xD1CE);
+        let mut slab: Slab<u64> = Slab::new();
+        let mut live: Vec<(Handle, u64)> = Vec::new();
+        let mut dead: Vec<Handle> = Vec::new();
+        let mut next_val = 0u64;
+        for _ in 0..10_000 {
+            let remove = !live.is_empty() && rng.bool(0.45);
+            if remove {
+                let i = rng.below(live.len());
+                let (h, v) = live.swap_remove(i);
+                assert_eq!(slab.remove(h), Some(v));
+                dead.push(h);
+            } else {
+                next_val += 1;
+                let h = slab.insert(next_val);
+                live.push((h, next_val));
+            }
+            // Invariants after every step.
+            assert_eq!(slab.len(), live.len());
+            for &(h, v) in &live {
+                assert_eq!(slab.get(h), Some(&v), "live handle must resolve");
+            }
+            for &h in dead.iter().rev().take(64) {
+                assert_eq!(slab.get(h), None, "dead handle resolved after reuse");
+            }
+        }
+        // Full sweep at the end: every dead handle stays dead forever.
+        for h in dead {
+            assert_eq!(slab.get(h), None);
+        }
+        // And iteration sees exactly the live set.
+        let mut seen: Vec<u64> = slab.iter().map(|(_, v)| *v).collect();
+        let mut want: Vec<u64> = live.iter().map(|&(_, v)| v).collect();
+        seen.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn iter_mut_edits_live_entries_only() {
+        let mut s: Slab<u64> = Slab::new();
+        let a = s.insert(1);
+        let b = s.insert(2);
+        s.remove(a);
+        for (_, v) in s.iter_mut() {
+            *v += 10;
+        }
+        assert_eq!(s.get(b), Some(&12));
+        assert_eq!(s.len(), 1);
+    }
+}

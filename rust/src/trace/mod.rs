@@ -126,10 +126,12 @@ impl TraceSpec {
 }
 
 impl AllocatorTrace {
+    /// Number of recorded iterations.
     pub fn len(&self) -> usize {
         self.phys_gb.len()
     }
 
+    /// True when the trace holds no iterations.
     pub fn is_empty(&self) -> bool {
         self.phys_gb.is_empty()
     }

@@ -40,7 +40,9 @@ use super::space::Candidate;
 
 /// Scoring weights (must sum to 1).
 pub const W_THROUGHPUT: f64 = 0.5;
+/// Energy component weight.
 pub const W_ENERGY: f64 = 0.25;
+/// Tail-latency (p99) component weight.
 pub const W_P99: f64 = 0.25;
 /// Cap on any single normalized component.
 pub const COMPONENT_CAP: f64 = 10.0;
@@ -48,6 +50,7 @@ pub const COMPONENT_CAP: f64 = 10.0;
 /// One fleet workload a sweep scores candidates on.
 #[derive(Debug, Clone)]
 pub struct Scenario {
+    /// Scenario name (sweep report key).
     pub name: String,
     /// Per-GPU models, in GPU order (one entry per fleet slot; mixed
     /// entries make the fleet heterogeneous).
@@ -58,10 +61,12 @@ pub struct Scenario {
     /// Poisson arrival rate (jobs/s) at `arrival_scale = 1.0`; `None`
     /// runs the paper's batch setting (everything at t=0).
     pub base_rate_jps: Option<f64>,
+    /// Seed for mix shuffling and arrival draws.
     pub seed: u64,
 }
 
 impl Scenario {
+    /// Fleet size (number of per-GPU models).
     pub fn n_gpus(&self) -> usize {
         self.specs.len()
     }
@@ -233,12 +238,16 @@ pub fn run_candidate(cand: &Candidate, scen: &Scenario) -> RunResult {
 /// The reference numbers a scenario's scores normalize against.
 #[derive(Debug, Clone, Copy)]
 pub struct ScenarioRef {
+    /// Reference throughput, jobs/s.
     pub throughput_jps: f64,
+    /// Reference total energy, J.
     pub energy_j: f64,
+    /// Reference p99 turnaround, s.
     pub p99_turnaround_s: f64,
 }
 
 impl ScenarioRef {
+    /// Extract the normalization stats from a reference run.
     pub fn from_result(r: &RunResult) -> Self {
         ScenarioRef {
             throughput_jps: r.metrics.throughput_jps,
@@ -286,18 +295,24 @@ pub fn reference_stats(scens: &[Scenario]) -> Vec<ScenarioRef> {
 /// One candidate's outcome on one scenario.
 #[derive(Debug, Clone)]
 pub struct ScenarioOutcome {
+    /// Scenario name.
     pub scenario: String,
+    /// Weighted normalized score (reference = 1.0).
     pub score: f64,
+    /// The run's absolute metrics.
     pub metrics: BatchMetrics,
+    /// p99 turnaround, s.
     pub p99_turnaround_s: f64,
 }
 
 /// One candidate's aggregate over all scenarios.
 #[derive(Debug, Clone)]
 pub struct CandidateResult {
+    /// The knob setting that was scored.
     pub candidate: Candidate,
     /// Mean per-scenario score; the reference scores exactly 1.0.
     pub objective: f64,
+    /// Per-scenario breakdown.
     pub outcomes: Vec<ScenarioOutcome>,
 }
 
@@ -409,6 +424,7 @@ pub struct EvalStats {
 }
 
 impl EvalStats {
+    /// Accumulate another sweep's counters into this one.
     pub fn merge(&mut self, o: EvalStats) {
         self.from_zero += o.from_zero;
         self.resumed += o.resumed;
@@ -437,6 +453,7 @@ pub struct ScenarioProgress {
 /// Per-candidate progress, index-aligned with the sweep's scenarios.
 #[derive(Debug, Clone)]
 pub struct CandidateProgress {
+    /// One saved state per sweep scenario, index-aligned.
     pub per_scenario: Vec<ScenarioProgress>,
 }
 

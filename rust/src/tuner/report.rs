@@ -19,11 +19,17 @@ use super::space::Candidate;
 /// One scenario's identity and reference numbers.
 #[derive(Debug, Clone)]
 pub struct ScenarioInfo {
+    /// Scenario name.
     pub name: String,
+    /// GPU-model label (e.g. "A30-24GB+A100-40GB").
     pub gpu: String,
+    /// Fleet size.
     pub n_gpus: usize,
+    /// Jobs in the scenario's mix.
     pub n_jobs: usize,
+    /// True when arrivals are open-loop (Poisson), not batch.
     pub online: bool,
+    /// The normalization reference numbers.
     pub reference: ScenarioRef,
 }
 
@@ -31,30 +37,43 @@ pub struct ScenarioInfo {
 /// round, plus the final full-horizon ranking).
 #[derive(Debug, Clone)]
 pub struct TrajectoryPoint {
+    /// Halving-round index (0-based; last point is the full ranking).
     pub round: usize,
+    /// Fraction of the full horizon simulated this round.
     pub horizon_frac: f64,
+    /// Candidates still alive this round.
     pub n_candidates: usize,
+    /// Best objective seen this round.
     pub best_objective: f64,
+    /// Label of the round's best candidate.
     pub best_label: String,
 }
 
 /// A fully-scored candidate in rank order.
 #[derive(Debug, Clone)]
 pub struct RankedCandidate {
+    /// The knob setting.
     pub candidate: Candidate,
+    /// Mean per-scenario score.
     pub objective: f64,
     /// Whether this is the default-knob Scheme B reference point.
     pub is_reference: bool,
+    /// Per-scenario breakdown.
     pub outcomes: Vec<ScenarioOutcome>,
 }
 
 /// The result of one sweep: ranking, reference numbers, trajectory.
 #[derive(Debug, Clone)]
 pub struct SweepReport {
+    /// Schema tag (`migm.policy_search.v3`).
     pub schema: &'static str,
+    /// Sweep seed.
     pub seed: u64,
+    /// Candidate-generator label (grid / halving / random).
     pub generator: String,
+    /// Scenario identities and reference numbers.
     pub scenarios: Vec<ScenarioInfo>,
+    /// In-sweep per-round perf trajectory.
     pub trajectory: Vec<TrajectoryPoint>,
     /// Best first; always contains the reference candidate.
     pub ranked: Vec<RankedCandidate>,
@@ -248,13 +267,18 @@ pub const FLEET_BENCH_SCHEMA: &str = "migm.bench.fleet.v1";
 /// One head-to-head arm of the heterogeneous fleet bench.
 #[derive(Debug, Clone, Copy)]
 pub struct FleetBenchArm {
+    /// End-to-end makespan, s.
     pub makespan_s: f64,
+    /// Completed jobs per second.
     pub throughput_jps: f64,
+    /// Energy per completed job, J.
     pub energy_per_job_j: f64,
+    /// p99 turnaround, s.
     pub p99_turnaround_s: f64,
 }
 
 impl FleetBenchArm {
+    /// Extract the bench cells from a run result.
     pub fn from_result(r: &RunResult) -> Self {
         FleetBenchArm {
             makespan_s: r.metrics.makespan_s,
@@ -308,6 +332,7 @@ pub const WARMSTART_BENCH_SCHEMA: &str = "migm.bench.warmstart.v1";
 /// [`EvalStats`](super::EvalStats) reuse counters.
 #[derive(Debug, Clone, Copy)]
 pub struct WarmstartArm {
+    /// Sweep wall time, nanoseconds.
     pub elapsed_ns: f64,
     /// Orchestrators built and simulated from t=0.
     pub from_zero: usize,

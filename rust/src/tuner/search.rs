@@ -35,16 +35,23 @@ pub enum Generator {
     /// Every grid point, fully evaluated.
     Grid,
     /// `n` seeded-random draws, fully evaluated.
-    Random { n: usize },
+    Random {
+        /// Number of distinct candidates to draw.
+        n: usize,
+    },
     /// Successive halving: start from `n` random draws (or the full
     /// grid when `n == 0`), prune by `eta` on horizons that start at
     /// `short_frac` of each scenario and grow by `eta` each round,
     /// down to at most `finalists` survivors re-scored on the full
     /// scenarios.
     Halving {
+        /// Initial random draws (0 = the full grid).
         n: usize,
+        /// Pruning factor per round (keep top 1/eta).
         eta: usize,
+        /// Max survivors re-scored on the full scenarios.
         finalists: usize,
+        /// First round's horizon as a fraction of each scenario.
         short_frac: f64,
     },
 }
@@ -67,8 +74,11 @@ impl Generator {
 
 /// A full sweep specification.
 pub struct SweepConfig {
+    /// The knob space candidates are drawn from.
     pub space: ParamSpace,
+    /// The fleet workloads every candidate is scored on.
     pub scenarios: Vec<Scenario>,
+    /// How candidates are drawn and pruned.
     pub generator: Generator,
     /// Seed for the random generator (and recorded in the report).
     pub seed: u64,

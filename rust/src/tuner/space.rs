@@ -27,8 +27,11 @@ use crate::util::{Json, Rng};
 /// live only when `prediction` is on.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Candidate {
+    /// Which scheduling scheme to run.
     pub scheme: Scheme,
+    /// Scheme A's knobs (defaults when another scheme is selected).
     pub a: SchemeAKnobs,
+    /// Scheme B's knobs (defaults when another scheme is selected).
     pub b: SchemeBKnobs,
     /// Belief-ledger parameters (live only with `prediction`).
     pub belief: BeliefKnobs,
@@ -97,6 +100,7 @@ impl Candidate {
         }
     }
 
+    /// Canonical JSON form (BTreeMap-backed, so key-stable).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("scheme", Json::str(self.scheme.name())),
@@ -109,6 +113,7 @@ impl Candidate {
         ])
     }
 
+    /// Inverse of [`Self::to_json`]; missing axes take legacy defaults.
     pub fn from_json(doc: &Json) -> Result<Self> {
         let scheme = Scheme::parse(
             doc.get("scheme")
@@ -146,8 +151,29 @@ impl Candidate {
 /// only vary on candidates of that scheme; the belief axes
 /// (`belief_zs`/`belief_windows`/`safety_margins`) only vary on
 /// candidates with prediction enabled.
+///
+/// ```
+/// use migm::tuner::ParamSpace;
+///
+/// // Enumeration is canonical: deduplicated by candidate key and
+/// // returned in key order, so repeated calls agree exactly.
+/// let space = ParamSpace::smoke();
+/// let grid = space.grid().unwrap();
+/// assert!(!grid.is_empty());
+/// let keys: Vec<String> = grid.iter().map(|c| c.key()).collect();
+/// let mut sorted = keys.clone();
+/// sorted.sort();
+/// sorted.dedup();
+/// assert_eq!(keys, sorted);
+///
+/// // Seeded-random draws come from the same space, deterministically.
+/// let a = space.random(4, 42).unwrap();
+/// let b = space.random(4, 42).unwrap();
+/// assert_eq!(a, b);
+/// ```
 #[derive(Debug, Clone)]
 pub struct ParamSpace {
+    /// Schemes to enumerate.
     pub schemes: Vec<Scheme>,
     /// Scheme A: how many low ladder rungs to merge upward.
     pub ladder_skips: Vec<usize>,
@@ -155,6 +181,7 @@ pub struct ParamSpace {
     pub max_fusion_destroys: Vec<usize>,
     /// Scheme B: idle-reuse slack fractions (>= 0).
     pub reuse_slacks: Vec<f64>,
+    /// Predictor on/off settings to enumerate.
     pub predictions: Vec<bool>,
     /// Belief ledger: prediction confidence-band z-scores (> 0).
     pub belief_zs: Vec<f64>,

@@ -42,11 +42,17 @@ impl Default for Bench {
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Benchmark name as printed/serialized.
     pub name: String,
+    /// Number of measured iterations.
     pub n: u64,
+    /// Mean wall-clock time per iteration, nanoseconds.
     pub mean_ns: f64,
+    /// Median per-iteration time, nanoseconds.
     pub median_ns: f64,
+    /// 95th-percentile per-iteration time, nanoseconds.
     pub p95_ns: f64,
+    /// Fastest observed iteration, nanoseconds.
     pub min_ns: f64,
 }
 
@@ -63,6 +69,7 @@ fn fmt_ns(ns: f64) -> String {
 }
 
 impl Bench {
+    /// Default settings (200ms warmup, 800ms measurement window).
     pub fn new() -> Self {
         Self::default()
     }
@@ -177,6 +184,68 @@ pub fn append_trajectory_rows_env(rows: &[Json]) {
     println!("appended {} trajectory row(s) to {path}", rows.len());
 }
 
+/// Schema tag of [`speedup_bench_row`]; bump on any shape change.
+pub const SPEEDUP_ROW_SCHEMA: &str = "migm.bench.speedup.v1";
+
+/// Build the generic A-vs-B timing row (`migm.bench.speedup.v1`): one
+/// baseline arm, one contender arm, and their wall-clock ratio. Used by
+/// `benches/des_engine.rs` (naive vs indexed engine) and
+/// `benches/orchestrator_fleet.rs` (sequential vs parallel
+/// advancement); `n_jobs`/`n_gpus` record the scenario scale.
+pub fn speedup_bench_row(
+    bench: &str,
+    n_jobs: usize,
+    n_gpus: usize,
+    baseline: (&str, f64),
+    contender: (&str, f64),
+) -> Json {
+    let arm = |(label, elapsed_ns): (&str, f64)| {
+        Json::obj(vec![
+            ("label", Json::str(label)),
+            ("elapsed_ns", Json::num(elapsed_ns)),
+        ])
+    };
+    Json::obj(vec![
+        ("schema", Json::str(SPEEDUP_ROW_SCHEMA)),
+        ("bench", Json::str(bench)),
+        ("n_jobs", Json::num(n_jobs as f64)),
+        ("n_gpus", Json::num(n_gpus as f64)),
+        ("speedup", Json::num(baseline.1 / contender.1.max(1.0))),
+        ("baseline", arm(baseline)),
+        ("contender", arm(contender)),
+    ])
+}
+
+/// Schema tag of [`reachability_bench_row`]; bump on any shape change.
+pub const REACHABILITY_ROW_SCHEMA: &str = "migm.bench.reachability.v1";
+
+/// Build the reachability-scaling row (`migm.bench.reachability.v1`):
+/// how long one spec's table takes to precompute and answer an `fcr`
+/// query, with the spec's width and whether the analytic (non-
+/// enumerating) path handled it. `full_configs` saturates at
+/// `u64::MAX`, so it crosses JSON as a string via
+/// [`snap::u64_to_json`](crate::util::snap::u64_to_json).
+pub fn reachability_bench_row(
+    bench: &str,
+    spec: &str,
+    n_mem_slices: usize,
+    analytic: bool,
+    full_configs: u64,
+    precompute_ns: f64,
+    fcr_query_ns: f64,
+) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str(REACHABILITY_ROW_SCHEMA)),
+        ("bench", Json::str(bench)),
+        ("spec", Json::str(spec)),
+        ("n_mem_slices", Json::num(n_mem_slices as f64)),
+        ("analytic", Json::Bool(analytic)),
+        ("full_configs", crate::util::snap::u64_to_json(full_configs)),
+        ("precompute_ns", Json::num(precompute_ns)),
+        ("fcr_query_ns", Json::num(fcr_query_ns)),
+    ])
+}
+
 fn require_keys(row: &Json, ctx: &str, keys: &[&str]) -> Result<(), String> {
     for k in keys {
         if row.get(k).is_null() {
@@ -284,6 +353,48 @@ pub fn validate_trajectory_row(row: &Json) -> Result<(), String> {
             }
             Ok(())
         }
+        "migm.bench.fault.v1" => require_keys(
+            row,
+            schema,
+            &[
+                "bench",
+                "timeline",
+                "requeued_jobs",
+                "steals",
+                "n_completed",
+                "makespan_s",
+                "energy_j",
+                "p99_turnaround_s",
+            ],
+        ),
+        "migm.bench.speedup.v1" => {
+            require_keys(
+                row,
+                schema,
+                &["bench", "n_jobs", "n_gpus", "speedup", "baseline", "contender"],
+            )?;
+            for arm in ["baseline", "contender"] {
+                require_keys(
+                    row.get(arm),
+                    &format!("{schema}.{arm}"),
+                    &["label", "elapsed_ns"],
+                )?;
+            }
+            Ok(())
+        }
+        "migm.bench.reachability.v1" => require_keys(
+            row,
+            schema,
+            &[
+                "bench",
+                "spec",
+                "n_mem_slices",
+                "analytic",
+                "full_configs",
+                "precompute_ns",
+                "fcr_query_ns",
+            ],
+        ),
         other => Err(format!("unknown trajectory row schema '{other}'")),
     }
 }
@@ -371,6 +482,30 @@ mod tests {
         // but a warm row claiming the reports diverged is rejected
         let bad = warmstart_bench_row("tune_halving_warm_vs_cold", 8, warm, cold, false);
         assert!(validate_trajectory_row(&bad).is_err());
+
+        let sp = speedup_bench_row(
+            "des_naive_vs_indexed",
+            100_000,
+            1,
+            ("naive", 9.0e9),
+            ("indexed", 3.0e9),
+        );
+        validate_trajectory_row(&sp).expect("speedup row must validate");
+        assert!((sp.get("speedup").as_f64().unwrap() - 3.0).abs() < 1e-12);
+
+        let reach = reachability_bench_row(
+            "reachability_100_slices",
+            "SYNTH-100x1g",
+            100,
+            true,
+            1,
+            40_000.0,
+            90.0,
+        );
+        validate_trajectory_row(&reach).expect("reachability row must validate");
+
+        // the fault row built by the real builder is validated in
+        // scheduler::fault's tests (it needs a full fault run).
     }
 
     #[test]

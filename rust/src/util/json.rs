@@ -11,22 +11,32 @@ use std::fmt;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number; all numbers are f64 here.
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object; `BTreeMap` keeps serialization key order stable.
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure: byte offset plus a short message.
 #[derive(Debug, thiserror::Error, PartialEq)]
 #[error("json parse error at byte {pos}: {msg}")]
 pub struct JsonError {
+    /// Byte offset into the input where parsing failed.
     pub pos: usize,
+    /// What the parser expected or saw.
     pub msg: String,
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             b: s.as_bytes(),
@@ -43,6 +53,7 @@ impl Json {
 
     // -- typed accessors ---------------------------------------------------
 
+    /// The number value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -50,10 +61,12 @@ impl Json {
         }
     }
 
+    /// The number value truncated to u64, if this is a non-negative `Num`.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().filter(|n| *n >= 0.0).map(|n| n as u64)
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -61,6 +74,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -68,6 +82,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -75,6 +90,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -94,20 +110,24 @@ impl Json {
         self.as_arr().and_then(|v| v.get(i)).unwrap_or(&NULL)
     }
 
+    /// True for `Null` — the miss value returned by `get`/`at`.
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
 
     // -- builders ----------------------------------------------------------
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Build a number value.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }

@@ -21,6 +21,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed the generator; state is expanded from `seed` via splitmix64.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         Rng {
@@ -34,6 +35,7 @@ impl Rng {
         }
     }
 
+    /// Next raw 64-bit output (xoshiro256++ step).
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[0]
@@ -71,6 +73,7 @@ impl Rng {
         lo + self.below(hi - lo)
     }
 
+    /// Bernoulli draw: true with probability `p_true`.
     pub fn bool(&mut self, p_true: f64) -> bool {
         self.f64() < p_true
     }

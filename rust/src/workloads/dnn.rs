@@ -11,9 +11,13 @@ use crate::workloads::{ComputeModel, JobKind, JobSpec, PhaseProfile};
 /// A DNN training job template.
 #[derive(Debug, Clone)]
 pub struct DnnJob {
+    /// Layer-by-layer model definition (DNNMem input).
     pub model: ModelDef,
+    /// Minibatch size.
     pub batch: u64,
+    /// Optimizer (drives optimizer-state memory).
     pub opt: Optimizer,
+    /// Compute demand in GPC units.
     pub demand_gpcs: u8,
     /// Training steps simulated per job.
     pub steps: u32,
@@ -24,6 +28,7 @@ pub struct DnnJob {
 }
 
 impl DnnJob {
+    /// Build the schedulable job (estimated through the DNNMem tier).
     pub fn job(&self) -> JobSpec {
         let e = estimate(&self.model, self.batch, self.opt);
         let est = default_pipeline().estimate(&EstimateInput::Model {

@@ -22,10 +22,15 @@ use crate::workloads::{ComputeModel, IterativeProfile, JobKind, JobSpec};
 /// A named LLM workload template.
 #[derive(Debug, Clone)]
 pub struct LlmWorkload {
+    /// Workload name (Table-2 key).
     pub name: &'static str,
+    /// Compute demand in GPC units.
     pub demand_gpcs: u8,
+    /// One iteration's kernel time with enough GPCs, s.
     pub iter_step_s: f64,
+    /// Model weights transferred at launch, GB.
     pub weights_gb: f64,
+    /// Allocator-trace generator (mean model matches the paper).
     pub trace: TraceSpec,
 }
 

@@ -15,8 +15,11 @@ use crate::workloads::{dnn, JobSpec, SizeClass};
 /// `mult` (flash-crowd / retry-storm shapes).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Burst {
+    /// Burst window start, s.
     pub start_s: f64,
+    /// Burst window duration, s.
     pub dur_s: f64,
+    /// Multiplicative rate factor inside the window (≥1).
     pub mult: f64,
 }
 
@@ -27,9 +30,13 @@ pub struct Burst {
 /// back down — one synthetic "day" per period.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RateProfile {
+    /// Trough rate, requests/s.
     pub base_rps: f64,
+    /// Midday peak rate, requests/s.
     pub peak_rps: f64,
+    /// Diurnal period, s.
     pub period_s: f64,
+    /// Overlaid burst windows.
     pub bursts: Vec<Burst>,
 }
 
@@ -90,7 +97,10 @@ impl RateProfile {
 #[derive(Debug, Clone, PartialEq)]
 pub enum ArrivalProcess {
     /// Homogeneous Poisson at a fixed rate (the original generator).
-    Poisson { rate_jps: f64 },
+    Poisson {
+        /// Mean arrival rate, jobs/s.
+        rate_jps: f64,
+    },
     /// Non-homogeneous Poisson over a [`RateProfile`], sampled by
     /// Lewis-Shedler thinning: candidate points at the majorant rate
     /// `max_rate()`, each kept with probability `rate_at(t) / max`.
@@ -165,7 +175,9 @@ impl ArrivalProcess {
 /// driven by [`crate::scheduler::Orchestrator`].
 #[derive(Debug, Clone)]
 pub struct Mix {
+    /// Mix name (report row label).
     pub name: &'static str,
+    /// Ordered job batch.
     pub jobs: Vec<JobSpec>,
     /// Per-job arrival times (s), same length as `jobs`, or empty for
     /// batch submission.

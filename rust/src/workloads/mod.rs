@@ -23,8 +23,11 @@ use crate::trace::TraceSpec;
 /// Workload family (drives the estimation tier).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobKind {
+    /// Rodinia benchmark — compile-time kernel analysis.
     Rodinia,
+    /// DNN training — DNNMem-style model estimation.
     Dnn,
+    /// Dynamic LLM — unknown upfront, time-series prediction.
     Llm,
 }
 
@@ -32,9 +35,13 @@ pub enum JobKind {
 /// ladder these are small:medium:large:full = 5/10/20/40 GB.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum SizeClass {
+    /// Fits the smallest slice (≤5 GB on A100-40GB).
     Small,
+    /// Fits the second rung (≤10 GB on A100-40GB).
     Medium,
+    /// Fits the third rung (≤20 GB on A100-40GB).
     Large,
+    /// Needs the whole GPU.
     Full,
 }
 
@@ -76,13 +83,19 @@ impl SizeClass {
 /// `steps_time = ceil(demand/c) * step_s` per step wave (warp model).
 #[derive(Debug, Clone, Copy)]
 pub struct PhaseProfile {
+    /// Device allocation time, s.
     pub alloc_s: f64,
+    /// Host-to-device transfer at exclusive PCIe, s.
     pub h2d_pcie_s: f64,
+    /// Number of compute steps.
     pub steps: u32,
+    /// One step's kernel time with enough GPCs, s.
     pub step_s: f64,
     /// Per-step transfer (minibatch loading); 0 for one-shot kernels.
     pub step_pcie_s: f64,
+    /// Device-to-host transfer at exclusive PCIe, s.
     pub d2h_pcie_s: f64,
+    /// Device free time, s.
     pub free_s: f64,
 }
 
@@ -101,27 +114,37 @@ impl PhaseProfile {
 /// Iterative workload whose memory follows an allocator trace (LLMs).
 #[derive(Debug, Clone)]
 pub struct IterativeProfile {
+    /// Device allocation time, s.
     pub alloc_s: f64,
+    /// Host-to-device transfer at exclusive PCIe, s.
     pub h2d_pcie_s: f64,
     /// One iteration's kernel time with enough GPCs.
     pub iter_step_s: f64,
+    /// Device-to-host transfer at exclusive PCIe, s.
     pub d2h_pcie_s: f64,
+    /// Device free time, s.
     pub free_s: f64,
+    /// Allocator-trace generator driving per-iteration memory.
     pub trace: TraceSpec,
+    /// Seed individualizing this job's trace noise.
     pub trace_seed: u64,
 }
 
 /// How the job consumes the GPU.
 #[derive(Debug, Clone)]
 pub enum ComputeModel {
+    /// Static phase sequence (alloc → h2d → steps → d2h → free).
     Phases(PhaseProfile),
+    /// Trace-driven iterative loop with per-iteration memory.
     Iterative(IterativeProfile),
 }
 
 /// One schedulable job.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
+    /// Job name (unique within a mix).
     pub name: String,
+    /// Workload family.
     pub kind: JobKind,
     /// Compute demand in GPC units.
     pub demand_gpcs: u8,
@@ -133,6 +156,7 @@ pub struct JobSpec {
     /// job's [`MemoryBelief`](crate::estimator::MemoryBelief); the
     /// scheduling policies consult the belief, never this field.
     pub est: Estimate,
+    /// How the job consumes the GPU (phases or iterative).
     pub compute: ComputeModel,
 }
 

@@ -16,11 +16,13 @@ use crate::workloads::{ComputeModel, JobKind, JobSpec, PhaseProfile};
 /// One pool entry: a benchmark+parameter combination.
 #[derive(Debug, Clone)]
 pub struct RodiniaBench {
+    /// Benchmark name (pool key).
     pub name: &'static str,
     /// Device footprint (GB) the kernel-resource descriptor encodes.
     pub mem_gb: f64,
     /// Compute demand (GPC units) encoded via launch geometry.
     pub demand_gpcs: u8,
+    /// Calibrated phase timings (paper Tables 3–4).
     pub phases: PhaseProfile,
 }
 

@@ -14,8 +14,10 @@ use crate::mig::{GpuSpec, MigProfile};
 use crate::workloads::{ComputeModel, JobKind, JobSpec, PhaseProfile};
 
 /// A MIG model with `slices` independent 1-GPC/1-GB instances, so one
-/// sim can hold `slices` concurrent jobs. Keep `slices` modest (~16):
-/// the reachability precompute enumerates 2^`slices` subset states.
+/// sim can hold `slices` concurrent jobs. Any width up to the 127-slice
+/// u128 mask limit works: the analytic reachability table plans
+/// 100+-instance specs in microseconds without enumerating subset
+/// states (the pre-analytic implementation capped this at ~16).
 pub fn many_instance_spec(slices: u8) -> GpuSpec {
     GpuSpec::custom(
         &format!("SYNTH-{slices}x1g"),
@@ -33,15 +35,16 @@ pub fn many_instance_spec(slices: u8) -> GpuSpec {
 }
 
 /// A tiered MIG model for policy-search scenarios: `slices` memory
-/// slices (a multiple of 4, at most 16 — reachability enumerates
-/// 2^`slices` subset states) carrying 1-, 2- and 4-slice profiles, so
-/// fusion/fission and class-ladder knobs actually matter — unlike
+/// slices (a multiple of 4, up to the 124 the u128 placement masks
+/// allow) carrying 1-, 2- and 4-slice profiles, so fusion/fission and
+/// class-ladder knobs actually matter — unlike
 /// [`many_instance_spec`], whose single profile leaves schedulers
-/// nothing to decide.
+/// nothing to decide. The analytic reachability table handles the wide
+/// variants without subset enumeration.
 pub fn tiered_spec(slices: u8) -> GpuSpec {
     assert!(
-        slices >= 4 && slices % 4 == 0 && slices <= 16,
-        "tiered spec needs 4 <= slices <= 16, a multiple of 4"
+        slices >= 4 && slices % 4 == 0 && slices <= 124,
+        "tiered spec needs 4 <= slices <= 124, a multiple of 4"
     );
     GpuSpec::custom(
         &format!("SYNTH-TIER-{slices}"),
@@ -100,10 +103,9 @@ pub fn sized_job(name: &str, mem_gb: f64, steps: u32) -> JobSpec {
 
 /// Hopper/Blackwell-generation MIG geometry: 8 memory slices, 7 GPCs,
 /// the A100's five-profile shape with per-slice memory scaled to
-/// `total_mem_gb`. Placements mirror the A100 layout, so the
-/// reachability precompute stays at the familiar 2^8 = 256 subset
-/// states — far under the 63-slice mask limit `GpuSpec::custom`
-/// enforces.
+/// `total_mem_gb`. Placements mirror the A100 layout, so reachability
+/// has the familiar 19 fully-configured states — far under the
+/// 127-slice u128 mask limit `GpuSpec::custom` enforces.
 fn hopper_class_spec(name: &str, total_mem_gb: f64) -> GpuSpec {
     let slice = total_mem_gb / 8.0;
     let prof = |compute: u8, mem: u8, gb: f64, placements: Vec<u8>| MigProfile {
@@ -222,8 +224,8 @@ mod tests {
     fn hopper_blackwell_specs_stay_under_the_mask_limit() {
         for spec in [h200_141gb(), b200_192gb()] {
             assert!(
-                spec.total_mem_slices < 64,
-                "{}: u64 reachability masks cap at 63 slices",
+                spec.total_mem_slices < 128,
+                "{}: u128 placement masks cap at 127 slices",
                 spec.name
             );
             assert_eq!(spec.total_mem_slices, 8, "Hopper-class geometry");
