@@ -1,0 +1,153 @@
+//! Power-governor benches: the heterogeneous A30/A100/H100 batch run
+//! three ways — uncapped, under a rack power cap, and capped with
+//! price-aware deferral — with the governor's contract *asserted*,
+//! not just charted: exactly zero cap-violation seconds on every
+//! governed arm, bounded throughput loss under the cap, and a strict
+//! $/job win for the price-aware arm over both price-blind arms.
+//!
+//! Set `MIGM_BENCH_SMOKE=1` for the CI smoke run (the second-seed
+//! sweep is skipped). Set `MIGM_BENCH_JSON=<path>` to write the stats
+//! as JSON (uploaded as a CI perf artifact). Set
+//! `MIGM_TRAJECTORY=<path>` to append the three-arm head-to-head
+//! (`migm.bench.power.v1` row) to the perf trajectory.
+
+use migm::mig::GpuSpec;
+use migm::report::{power_cap, PowerArm};
+use migm::util::bench::{
+    append_trajectory_rows_env, black_box, power_bench_row, write_bench_json_env, Bench,
+    BenchStats, PowerBenchArm,
+};
+
+const SEED: u64 = 7;
+
+/// Throughput the capped arm may lose to the governor before the
+/// bench fails: makespan at most this multiple of the uncapped run.
+const MAX_CAPPED_SLOWDOWN: f64 = 3.0;
+
+fn bench_arm(a: &PowerArm) -> PowerBenchArm<'_> {
+    PowerBenchArm {
+        label: a.label,
+        makespan_s: a.metrics.makespan_s,
+        throughput_jps: a.metrics.throughput_jps,
+        energy_per_job_j: a.metrics.energy_per_job_j,
+        usd_per_job: a.usd_per_job,
+        violation_s: a.violation_s,
+        deferrals: a.deferrals,
+        price_deferrals: a.price_deferrals,
+        parked_gpu_s: a.parked_gpu_s,
+    }
+}
+
+/// Assert the governor's contract on a three-arm run. Returns
+/// (uncapped, capped, price-aware) in that order.
+fn assert_contract(label: &str, arms: &[PowerArm]) -> (usize, usize, usize) {
+    assert_eq!(arms.len(), 3, "{label}: expected three arms");
+    let unc = 0;
+    let cap = 1;
+    let aware = 2;
+    assert_eq!(arms[unc].label, "uncapped");
+    assert_eq!(arms[cap].label, "capped");
+    assert_eq!(arms[aware].label, "capped+price-aware");
+    let n = arms[unc].metrics.n_jobs;
+    for a in arms {
+        assert_eq!(
+            a.metrics.n_jobs, n,
+            "{label}: every arm must complete the full mix ({} vs {n} on {})",
+            a.metrics.n_jobs, a.label
+        );
+    }
+    // The cap holds by construction: the governor defers admissions
+    // instead of ever reserving past the cap, so the audited
+    // violation integral is exactly zero — not merely small.
+    for a in &arms[1..] {
+        assert!(
+            a.violation_s == 0.0,
+            "{label}: governed arm '{}' must report exactly 0 cap-violation s, got {}",
+            a.label,
+            a.violation_s
+        );
+        assert!(a.deferrals > 0, "{label}: '{}' never hit the cap", a.label);
+    }
+    let slowdown = arms[cap].metrics.makespan_s / arms[unc].metrics.makespan_s;
+    assert!(
+        (1.0 - 1e-9..=MAX_CAPPED_SLOWDOWN).contains(&slowdown),
+        "{label}: capped makespan x{slowdown:.2} outside [1, {MAX_CAPPED_SLOWDOWN}]"
+    );
+    assert!(
+        arms[aware].price_deferrals > 0,
+        "{label}: price-aware arm never used the price signal"
+    );
+    assert!(
+        arms[aware].usd_per_job < arms[cap].usd_per_job
+            && arms[aware].usd_per_job < arms[unc].usd_per_job,
+        "{label}: price-aware ${:.4}/job must beat capped ${:.4} and uncapped ${:.4}",
+        arms[aware].usd_per_job,
+        arms[cap].usd_per_job,
+        arms[unc].usd_per_job
+    );
+    (unc, cap, aware)
+}
+
+/// The rack cap `report::power_cap` applies — recomputed here so the
+/// trajectory row records the actual budget, not a magic number.
+fn rack_cap_w() -> f64 {
+    let specs = [GpuSpec::a30_24gb(), GpuSpec::a100_40gb(), GpuSpec::h100_80gb()];
+    let idle: f64 = specs.iter().map(|s| s.idle_power_w).sum();
+    let range: f64 = specs.iter().map(|s| s.max_power_w - s.idle_power_w).sum();
+    idle + 0.55 * range
+}
+
+fn main() {
+    let smoke = std::env::var("MIGM_BENCH_SMOKE").is_ok();
+    let b = if smoke { Bench::coarse() } else { Bench::new() };
+    let mut all: Vec<BenchStats> = Vec::new();
+
+    // ---- three arms at the headline seed ---------------------------
+    let mut arms_last: Option<Vec<PowerArm>> = None;
+    all.push(b.run("power_cap_three_arms_ht2", || {
+        let (arms, _table) = power_cap(SEED);
+        let peak = arms.iter().map(|a| a.peak_reserved_w).fold(0.0, f64::max);
+        arms_last = Some(arms);
+        black_box(peak)
+    }));
+    let arms = arms_last.expect("three-arm run produced arms");
+    let (unc, cap, aware) = assert_contract("ht2", &arms);
+    println!(
+        "power cap head-to-head: capped keeps x{:.2} throughput at 0 violation-s; \
+         price-aware ${:.4}/job vs price-blind ${:.4} (x{:.2} cheaper)",
+        arms[cap].metrics.throughput_jps / arms[unc].metrics.throughput_jps,
+        arms[aware].usd_per_job,
+        arms[cap].usd_per_job,
+        arms[cap].usd_per_job / arms[aware].usd_per_job
+    );
+    let power_row = power_bench_row(
+        "power_cap_three_arms_ht2",
+        arms[unc].metrics.n_jobs,
+        rack_cap_w(),
+        bench_arm(&arms[unc]),
+        bench_arm(&arms[cap]),
+        bench_arm(&arms[aware]),
+    );
+
+    // ---- second seed (full runs only): the contract is structural,
+    // not a lucky draw --------------------------------------------
+    if !smoke {
+        let cb = Bench::coarse();
+        let mut arms2: Option<Vec<PowerArm>> = None;
+        all.push(cb.run("power_cap_three_arms_ht2_seed11", || {
+            let (arms, _table) = power_cap(11);
+            let peak = arms.iter().map(|a| a.peak_reserved_w).fold(0.0, f64::max);
+            arms2 = Some(arms);
+            black_box(peak)
+        }));
+        let arms2 = arms2.expect("second-seed run produced arms");
+        assert_contract("ht2/seed11", &arms2);
+        println!(
+            "power cap seed 11: price-aware ${:.4}/job vs price-blind ${:.4}",
+            arms2[2].usd_per_job, arms2[1].usd_per_job
+        );
+    }
+
+    append_trajectory_rows_env(&[power_row]);
+    write_bench_json_env("migm.bench.power_suite.v1", smoke, &all);
+}

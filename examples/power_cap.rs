@@ -1,0 +1,97 @@
+//! A rack power budget over the A30/A100/H100 fleet: the
+//! [`PowerGovernor`] holds a hard [`FleetPowerCap`] by deferring
+//! admissions (never by letting the reserved draw breach), fissions
+//! repeat offenders down to narrower profiles, parks drained GPUs at
+//! 0 W, and — given a diurnal electricity price — shifts deferrable
+//! work into the cheap window.
+//!
+//! Prints the E12 capped-vs-uncapped-vs-price-aware table, then a
+//! direct governed run with its deferral timeline and the governor's
+//! final counters. The cap-violation integral is asserted to be
+//! exactly zero — the governor's contract, not a tuning outcome.
+//!
+//! Run: `cargo run --release --example power_cap`
+
+use std::sync::Arc;
+
+use migm::fleet::{FleetKnobs, FleetPolicy};
+use migm::mig::GpuSpec;
+use migm::power::{FleetPowerCap, PowerGovernor, PriceSignal};
+use migm::report;
+use migm::scheduler::{Orchestrator, SchemeBKnobs};
+use migm::workloads::mix;
+
+const SEED: u64 = 7;
+
+fn main() {
+    // ---- E12: the three-arm comparison over a shared price trace ---
+    let (arms, table) = report::power_cap(SEED);
+    println!("capped vs uncapped vs price-aware (Ht2, shared price trace):");
+    println!("{}", table.render());
+    for a in &arms[1..] {
+        assert!(a.violation_s == 0.0, "{}: cap must hold exactly", a.label);
+    }
+
+    // ---- a direct governed run, with the deferral timeline ---------
+    // Rack budget: every idle floor plus ~55% of the combined dynamic
+    // range — one GPU fits easily, the fleet flat-out does not.
+    let specs = vec![
+        Arc::new(GpuSpec::a30_24gb()),
+        Arc::new(GpuSpec::a100_40gb()),
+        Arc::new(GpuSpec::h100_80gb()),
+    ];
+    let idle: f64 = specs.iter().map(|s| s.idle_power_w).sum();
+    let range: f64 = specs.iter().map(|s| s.max_power_w - s.idle_power_w).sum();
+    let cap_w = idle + 0.55 * range;
+
+    // Diurnal tariff: $0.08/kWh in the trough, $0.42/kWh at the peak,
+    // one "day" compressed to 600 s so the batch spans several cycles.
+    let sig = PriceSignal::diurnal(0.08, 0.42, 600.0);
+    let cap = FleetPowerCap::new(cap_w).with_price_deferral(0.15);
+    let gov = PowerGovernor::new(cap).with_price(sig.clone());
+
+    let policy = FleetPolicy::scheme_b(&specs, FleetKnobs::balanced(), SchemeBKnobs::default());
+    let mut orch = Orchestrator::new(specs, false, policy);
+    orch.set_power_governor(Some(gov));
+    orch.set_price_signal(Some(sig));
+    orch.submit_mix(&mix::ht2(SEED));
+    orch.run_to_completion();
+
+    let r = orch.fleet_result();
+    let cost = orch.fleet_cost_usd();
+    let g = orch.power_governor().expect("governor installed");
+
+    println!(
+        "governed run under {cap_w:.0} W rack cap (diurnal $0.08..$0.42/kWh):\n\
+         completed {} jobs in {:.1}s — {:.0} J/job, ${:.4}/job",
+        r.metrics.n_jobs,
+        r.metrics.makespan_s,
+        r.metrics.energy_per_job_j,
+        cost / r.metrics.n_jobs.max(1) as f64
+    );
+    println!(
+        "governor: {} cap deferrals, {} price deferrals, {} fissions, \
+         {:.0} gpu-s parked; peak reserved {:.0} W, violations {:.1}s",
+        g.deferrals(),
+        g.price_deferrals(),
+        g.fissions(),
+        g.parked_gpu_s(),
+        g.peak_reserved_w(),
+        g.violation_s()
+    );
+    assert!(g.violation_s() == 0.0, "cap must hold exactly");
+    assert!(g.peak_reserved_w() <= cap_w + 1e-9, "reserved draw stays under the cap");
+
+    let tl = g.timeline();
+    let shown = tl.len().min(12);
+    println!("deferral timeline (first {shown} of {}):", tl.len());
+    for ev in &tl[..shown] {
+        println!(
+            "  t={:7.1}s  {:5}  {}  (release t={:.1}s)",
+            ev.t,
+            ev.kind.as_str(),
+            ev.job,
+            ev.release_t
+        );
+    }
+}

@@ -8,7 +8,8 @@
 //!   "prediction": true,
 //!   "seed": 42,
 //!   "arrivals": {"kind": "poisson", "rate": 0.5},
-//!   "reconfig": {"create_s": 0.2, "destroy_s": 0.05, "per_mem_slice_s": 0.01}
+//!   "reconfig": {"create_s": 0.2, "destroy_s": 0.05, "per_mem_slice_s": 0.01},
+//!   "power": "slice-proportional"
 //! }
 //! ```
 //!
@@ -22,6 +23,12 @@
 //! (seconds per `nvidia-smi mig` create/destroy plus an optional
 //! per-memory-slice term) used to price `PartitionPlan` windows;
 //! absent fields keep the model's uniform default.
+//!
+//! `power` selects the per-instance power-attribution model (see
+//! [`crate::power::PowerModel`]): `"legacy"` (the default bit-exact
+//! linear curve), `"slice-proportional"`, `"measured"`, or a
+//! calibration object `{"model": "measured", "chassis_w": ...,
+//! "profiles": [...]}`.
 
 use std::path::Path;
 
@@ -215,6 +222,17 @@ impl ExperimentConfig {
             }
             other => bail!("'reconfig' must be an object, got {other}"),
         }
+        // Optional power-model knob: a shorthand string (`"legacy"` /
+        // `"slice-proportional"` / `"measured"`) or a calibration
+        // object — see [`PowerModel::from_json`]. Absent keeps the
+        // bit-exact legacy linear curve.
+        match doc.get("power") {
+            Json::Null => {}
+            v => {
+                cfg.gpu.power = crate::power::PowerModel::from_json(v, &cfg.gpu)
+                    .context("invalid 'power' config")?;
+            }
+        }
         // Validate a trace here so a bad config file is a clean error,
         // not a panic inside build_mix's invariant asserts.
         if let ArrivalSpec::Trace { times } = &arrivals {
@@ -352,6 +370,30 @@ mod tests {
             r#"{"mix": "hm2", "reconfig": 1}"#,
             r#"{"mix": "hm2", "reconfig": {"create_s": -0.1}}"#,
             r#"{"mix": "hm2", "reconfig": {"destroy_s": "fast"}}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_json(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn power_knob_selects_the_model() {
+        use crate::power::PowerModel;
+        // absent -> the bit-exact legacy curve
+        let doc = Json::parse(r#"{"mix": "hm2"}"#).unwrap();
+        let c = ExperimentConfig::from_json(&doc).unwrap();
+        assert!(matches!(c.gpu.power, PowerModel::Legacy));
+        // shorthand strings
+        let doc = Json::parse(r#"{"mix": "hm2", "power": "slice-proportional"}"#).unwrap();
+        let c = ExperimentConfig::from_json(&doc).unwrap();
+        assert!(matches!(c.gpu.power, PowerModel::SliceProportional));
+        let doc = Json::parse(r#"{"mix": "hm2", "power": "measured"}"#).unwrap();
+        let c = ExperimentConfig::from_json(&doc).unwrap();
+        assert!(matches!(c.gpu.power, PowerModel::Measured(_)));
+
+        for bad in [
+            r#"{"mix": "hm2", "power": "quadratic"}"#,
+            r#"{"mix": "hm2", "power": 3}"#,
         ] {
             let doc = Json::parse(bad).unwrap();
             assert!(ExperimentConfig::from_json(&doc).is_err(), "{bad}");

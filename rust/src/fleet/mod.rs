@@ -112,6 +112,7 @@ impl FleetKnobs {
             ("w_fit", Json::num(self.weights.fit)),
             ("w_reconfig", Json::num(self.weights.reconfig)),
             ("w_energy", Json::num(self.weights.energy)),
+            ("w_cap", Json::num(self.weights.cap)),
         ])
     }
 
@@ -149,6 +150,7 @@ impl FleetKnobs {
         weight(doc, "w_fit", &mut knobs.weights.fit)?;
         weight(doc, "w_reconfig", &mut knobs.weights.reconfig)?;
         weight(doc, "w_energy", &mut knobs.weights.energy)?;
+        weight(doc, "w_cap", &mut knobs.weights.cap)?;
         Ok(knobs)
     }
 }
@@ -651,6 +653,7 @@ mod tests {
                 fit: 0.5,
                 reconfig: 0.0,
                 energy: 1.5,
+                cap: 0.75,
             },
         };
         let back = FleetKnobs::from_json(&knobs.to_json()).unwrap();

@@ -64,8 +64,10 @@ impl PlacementMode {
     }
 }
 
-/// Weights of the four scoring terms. All terms are pre-normalized to
-/// the same O(1) scale, so 1.0 everywhere is a sane default.
+/// Weights of the scoring terms. All terms are pre-normalized to the
+/// same O(1) scale, so 1.0 everywhere is a sane default — except
+/// `cap`, which defaults to 0.0 (off) so ungoverned fleets score
+/// byte-identically to pre-power-subsystem builds.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlacementWeights {
     /// Weight of the queue-depth (load) term.
@@ -76,6 +78,13 @@ pub struct PlacementWeights {
     pub reconfig: f64,
     /// Weight of the marginal-energy term.
     pub energy: f64,
+    /// Weight of the power-cap headroom term: the GPU's projected
+    /// reserved draw after this launch as a fraction of its max power.
+    /// Steers placement away from GPUs whose reservation is already
+    /// near the board limit, so a fleet governor (see
+    /// [`crate::power::PowerGovernor`]) has to defer less. 0.0 = off
+    /// (the default; the term is then not computed at all).
+    pub cap: f64,
 }
 
 impl Default for PlacementWeights {
@@ -85,6 +94,7 @@ impl Default for PlacementWeights {
             fit: 1.0,
             reconfig: 1.0,
             energy: 1.0,
+            cap: 0.0,
         }
     }
 }
@@ -133,7 +143,20 @@ pub fn score_on(sim: &GpuSim, depth: usize, est: &Estimate, w: &PlacementWeights
         spec.create_cost_s(p) + 2.0 * spec.destroy_cost_s(p)
     };
     let energy_term = profile_watts(spec, prof) / 100.0;
-    w.queue * queue_term + w.fit * fit_term + w.reconfig * reconfig_term + w.energy * energy_term
+    // Guarded so the zero-weight default adds no float ops: the legacy
+    // score expression stays bit-identical when the term is off.
+    let cap_term = if w.cap > 0.0 {
+        let comp_frac = prof.compute_slices as f64 / spec.total_compute as f64;
+        (sim.power_reservation_w() + (spec.max_power_w - spec.idle_power_w) * comp_frac)
+            / spec.max_power_w
+    } else {
+        0.0
+    };
+    w.queue * queue_term
+        + w.fit * fit_term
+        + w.reconfig * reconfig_term
+        + w.energy * energy_term
+        + w.cap * cap_term
 }
 
 /// Route one arrival: returns the chosen GPU and advances `cursor`.
@@ -234,6 +257,7 @@ mod tests {
             fit: 0.0,
             reconfig: 0.0,
             energy: 0.0,
+            cap: 0.0,
         };
         let a30 = sim(GpuSpec::a30_24gb());
         let h100 = sim(GpuSpec::h100_80gb());
@@ -251,6 +275,7 @@ mod tests {
             fit: 1.0,
             reconfig: 0.0,
             energy: 0.0,
+            cap: 0.0,
         };
         // 17 GB: whole-GPU 24 GB slice on A30 vs a 20 GB slice on A100
         let a30 = sim(GpuSpec::a30_24gb());
@@ -272,12 +297,43 @@ mod tests {
     }
 
     #[test]
+    fn cap_term_steers_away_from_power_loaded_gpus() {
+        // Two identical A100s, one already running a full-width job:
+        // with the cap term on, the loaded GPU scores strictly worse;
+        // with the default zero weight the scores tie exactly.
+        use crate::workloads::rodinia;
+        let w_cap = PlacementWeights {
+            queue: 0.0,
+            fit: 0.0,
+            reconfig: 0.0,
+            energy: 0.0,
+            cap: 1.0,
+        };
+        let idle = sim(GpuSpec::a100_40gb());
+        let mut busy = sim(GpuSpec::a100_40gb());
+        let prof = busy.spec.profile_index("7g.40gb").unwrap();
+        let inst = busy.mgr.alloc(prof).unwrap();
+        busy.launch(rodinia::by_name("nw").unwrap().job(7), inst, 0.0);
+        let est = exact(2.0, 1);
+        assert!(score_on(&busy, 0, &est, &w_cap) > score_on(&idle, 0, &est, &w_cap));
+        let w_off = PlacementWeights {
+            cap: 0.0,
+            ..w_cap.clone()
+        };
+        assert_eq!(
+            score_on(&busy, 0, &est, &w_off).to_bits(),
+            score_on(&idle, 0, &est, &w_off).to_bits()
+        );
+    }
+
+    #[test]
     fn unknown_jobs_have_zero_fit_term_everywhere() {
         let w = PlacementWeights {
             queue: 0.0,
             fit: 1.0,
             reconfig: 0.0,
             energy: 0.0,
+            cap: 0.0,
         };
         let a30 = sim(GpuSpec::a30_24gb());
         assert_eq!(score_on(&a30, 0, &Estimate::unknown_upfront(1), &w), 0.0);

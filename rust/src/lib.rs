@@ -84,6 +84,15 @@
 //!   [`fleet::oracle`], a branch-and-bound optimal-placement solver on
 //!   small sub-problems (arXiv:2409.06646 style) with a documented
 //!   optimality gap, the way [`sim::naive`] grounds the event engine.
+//! * [`power`] — the power subsystem: pluggable per-instance draw
+//!   attribution ([`power::PowerModel`] — bit-identical `Legacy`
+//!   default, MISO-style `SliceProportional`, measured per-profile
+//!   calibration tables), the fleet power-cap governor
+//!   ([`power::PowerGovernor`]: reservation-based admission with
+//!   cap-violation seconds 0 by construction, deferral, demand
+//!   fission, drained-GPU parking), and deterministic electricity
+//!   price signals ([`power::PriceSignal`]) with exact per-run
+//!   $ = ∫ price·power dt integrals and cheap-hour deferral windows.
 //! * [`tuner`] — policy-search sweeps (`migm tune`): a typed
 //!   [`tuner::ParamSpace`] over the scheduler knobs (Scheme A ladder,
 //!   Scheme B fusion/reuse thresholds, predictor, belief z-score /
@@ -123,6 +132,7 @@ pub mod estimator;
 pub mod fleet;
 pub mod metrics;
 pub mod mig;
+pub mod power;
 pub mod predictor;
 pub mod report;
 #[cfg(feature = "pjrt")]

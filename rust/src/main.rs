@@ -3,7 +3,7 @@
 //! ```text
 //! migm run --mix ht2 --scheme a [--prediction] [--gpu a100] [--seed N]
 //! migm run --config experiment.json
-//! migm report <all|fig3|reach|prelim|fig4-rodinia|fig4-ml|fig4-llm|oom|online|seeds|table3|table4>
+//! migm report <all|fig3|reach|prelim|fig4-rodinia|fig4-ml|fig4-llm|oom|online|seeds|table3|table4|power>
 //! migm tune [--smoke] [--generator grid|random|halving] [--n 32] [--gpus 4]
 //!           [--seed N] [--threads N] [--out FILE] [--trajectory FILE]
 //! migm mig <list-configs|reachability> [--gpu a100]
@@ -111,7 +111,7 @@ USAGE:
   migm run --mix <name> [--scheme baseline|a|b] [--prediction]
            [--gpu a100|a30|a100-80gb|h100] [--seed N] [--compare]
   migm run --config <file.json>
-  migm report <all|fig3|reach|prelim|fig4-rodinia|fig4-ml|fig4-llm|oom|online|seeds|table3|table4>
+  migm report <all|fig3|reach|prelim|fig4-rodinia|fig4-ml|fig4-llm|oom|online|seeds|table3|table4|power>
   migm tune [--smoke] [--generator grid|random|halving] [--n 32] [--gpus 4]
             [--seed N] [--threads N] [--out FILE] [--trajectory FILE]
   migm mig <list-configs|reachability> [--gpu a100]
@@ -130,6 +130,11 @@ tune: policy-search sweep over scheduler + fleet-routing knobs on
       optionally appends a summary row to a trajectory file, and (for
       grid runs) fails unless some candidate beats the default Scheme B
       knobs on at least one scenario.
+
+report power: the same heterogeneous batch run uncapped, under a rack
+      power cap (fleet governor: deferral, fission, parking; zero
+      cap-violation seconds by construction), and capped+price-aware —
+      comparing throughput, J/job, $/job over a shared price trace.
 
 serve (simulated): continuous-batching LLM serving over a MIG fleet
       with SLO-driven autoscaling, driven by a deterministic engine
@@ -243,6 +248,7 @@ fn cmd_report(args: &Args) -> Result<()> {
         "seeds" => report::seed_sweep(&[1, 2, 3, 4, 5, 6]).render(),
         "table3" => report::table3_myocyte().1.render(),
         "table4" => report::table4_nw().1.render(),
+        "power" => report::power_cap(seed).1.render(),
         other => bail!("unknown report '{other}'"),
     };
     println!("{out}");

@@ -154,6 +154,20 @@ impl PartitionManager {
             .map(|p| self.spec.profiles[p].compute_slices)
     }
 
+    /// All live instances as `(id, profile index)`, sorted by id. The
+    /// stable order fixes float-summation order in the power models'
+    /// per-instance attribution, keeping integrated energy bit-equal
+    /// across engines and runs.
+    pub fn live_instances(&self) -> Vec<(InstanceId, usize)> {
+        let mut out: Vec<(InstanceId, usize)> = self
+            .instances
+            .iter()
+            .map(|(&id, p)| (id, p.profile as usize))
+            .collect();
+        out.sort_unstable_by_key(|&(id, _)| id);
+        out
+    }
+
     /// All successor placements for `profile` with their fcr scores.
     pub fn placement_candidates(&self, profile: usize) -> Vec<(Placement, u64)> {
         let prof = &self.spec.profiles[profile];

@@ -7,6 +7,7 @@
 //! A100-40GB table reproduces exactly the 19 fully-configured states of
 //! the paper's Figure 3 (asserted in `mig::tests`).
 
+use crate::power::PowerModel;
 
 /// One MIG instance profile (e.g. `1g.5gb`).
 #[derive(Debug, Clone)]
@@ -43,6 +44,12 @@ pub struct GpuSpec {
     pub idle_power_w: f64,
     /// Board power at full utilization (W).
     pub max_power_w: f64,
+    /// How instance activity converts to electrical draw. The default,
+    /// [`PowerModel::Legacy`], reproduces the original whole-GPU linear
+    /// curve bit for bit; the other variants attribute draw per
+    /// instance (see [`crate::power::model`]). Loadable via the
+    /// `"power"` config knob.
+    pub power: PowerModel,
     /// Latency of one `create`/`destroy` instance operation (s) — the
     /// legacy *uniform* reconfiguration cost. Kept as the default the
     /// per-op model below falls back to, so the modeled plan cost of a
@@ -127,6 +134,7 @@ impl GpuSpec {
             reconfig_per_mem_slice_s: 0.0,
             alloc_overhead_per_instance: 0.5,
             free_overhead_per_instance_s: 0.004,
+            power: PowerModel::Legacy,
             size_ladder: Vec::new(),
         };
         spec.rebuild_ladder();
@@ -172,6 +180,7 @@ impl GpuSpec {
             reconfig_per_mem_slice_s: 0.0,
             alloc_overhead_per_instance: 0.5,
             free_overhead_per_instance_s: 0.004,
+            power: PowerModel::Legacy,
             size_ladder: Vec::new(),
         };
         spec.rebuild_ladder();
@@ -232,10 +241,18 @@ impl GpuSpec {
             reconfig_per_mem_slice_s: 0.0,
             alloc_overhead_per_instance: 0.5,
             free_overhead_per_instance_s: 0.004,
+            power: PowerModel::Legacy,
             size_ladder: Vec::new(),
         };
         spec.rebuild_ladder();
         spec
+    }
+
+    /// Builder: swap the power model (the named constructors all ship
+    /// [`PowerModel::Legacy`]).
+    pub fn with_power_model(mut self, model: PowerModel) -> Self {
+        self.power = model;
+        self
     }
 
     /// Modeled latency of creating one instance of `profile` (s).

@@ -1,0 +1,399 @@
+//! Fleet power-cap governor.
+//!
+//! A [`FleetPowerCap`] bounds the *reserved* draw of the whole fleet:
+//! the sum over powered GPUs of each engine's worst-case reservation
+//! ([`crate::sim::GpuSim::power_reservation_w`] — every busy instance
+//! saturated to its full compute width). The orchestrator consults the
+//! [`PowerGovernor`] before every launch and admits only if the
+//! post-launch reservation stays at or below the admit limit
+//! (`cap_w · (1 − headroom_frac)`). Because actual draw never exceeds
+//! the reservation (monotonicity of every [`crate::power::PowerModel`]
+//! variant, property-tested in `power::model`), and the reservation is
+//! constant between launch events, the integrated cap-violation time
+//! reads **0 by construction** — [`PowerGovernor::violation_s`] is an
+//! audit of that invariant, not an enforcement mechanism.
+//!
+//! Denied launches are deferred, not dropped: they re-enter the policy
+//! via `on_submit` when capacity drains. Repeatedly-deferred multi-GPC
+//! jobs are *fissioned* — their GPC demand halved — so they fit lower-
+//! power profiles (throughput under the cap at the price of per-job
+//! latency). With a [`PriceSignal`] attached and a defer threshold
+//! set, the governor also shifts deferrable batch work into cheap-hour
+//! windows ([`PowerGovernor::price_release`]).
+
+use std::collections::HashMap;
+
+use crate::power::price::PriceSignal;
+
+/// Tolerance on admit-limit comparisons (float sums of per-GPU
+/// reservations).
+pub const CAP_EPS: f64 = 1e-9;
+
+/// Fleet-level power-cap configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetPowerCap {
+    /// The hard rack cap, W. Reserved draw never exceeds it.
+    pub cap_w: f64,
+    /// Admission headroom: launches are admitted only up to
+    /// `cap_w · (1 − headroom_frac)`, leaving slack for model error
+    /// against real hardware. In `[0, 1)`.
+    pub headroom_frac: f64,
+    /// Halve the GPC demand of repeatedly cap-deferred jobs so they
+    /// fit lower-power profiles.
+    pub fission: bool,
+    /// Park (0 W instead of idle floor) GPUs with nothing running
+    /// during fleet-wide idle waits.
+    pub park_drained: bool,
+    /// Defer launches while the price is above this $/kWh threshold
+    /// (requires a [`PriceSignal`]; `None` disables price deferral).
+    pub defer_above_price: Option<f64>,
+}
+
+impl FleetPowerCap {
+    /// A cap at `cap_w` watts with the default 5% admission headroom,
+    /// fission and parking enabled, and no price deferral.
+    pub fn new(cap_w: f64) -> FleetPowerCap {
+        assert!(cap_w > 0.0, "power cap must be positive");
+        FleetPowerCap {
+            cap_w,
+            headroom_frac: 0.05,
+            fission: true,
+            park_drained: true,
+            defer_above_price: None,
+        }
+    }
+
+    /// Builder: set the admission headroom fraction (in `[0, 1)`).
+    pub fn with_headroom(mut self, frac: f64) -> FleetPowerCap {
+        assert!((0.0..1.0).contains(&frac), "headroom must be in [0, 1)");
+        self.headroom_frac = frac;
+        self
+    }
+
+    /// Builder: enable/disable demand fission under the cap.
+    pub fn with_fission(mut self, on: bool) -> FleetPowerCap {
+        self.fission = on;
+        self
+    }
+
+    /// Builder: enable/disable parking of drained GPUs.
+    pub fn with_parking(mut self, on: bool) -> FleetPowerCap {
+        self.park_drained = on;
+        self
+    }
+
+    /// Builder: defer launches while the price exceeds `usd_per_kwh`.
+    pub fn with_price_deferral(mut self, usd_per_kwh: f64) -> FleetPowerCap {
+        assert!(usd_per_kwh >= 0.0);
+        self.defer_above_price = Some(usd_per_kwh);
+        self
+    }
+
+    /// The admission limit: `cap_w · (1 − headroom_frac)`, W.
+    pub fn admit_limit_w(&self) -> f64 {
+        self.cap_w * (1.0 - self.headroom_frac)
+    }
+}
+
+/// Why a launch was deferred.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeferKind {
+    /// Admitting would have pushed reserved draw past the admit limit.
+    Cap,
+    /// The electricity price was above the defer threshold.
+    Price,
+}
+
+impl DeferKind {
+    /// Stable label for reports and timelines.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DeferKind::Cap => "cap",
+            DeferKind::Price => "price",
+        }
+    }
+}
+
+/// One deferral, for the report/example timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeferEvent {
+    /// Simulated time of the denied launch.
+    pub t: f64,
+    /// Cap or price deferral.
+    pub kind: DeferKind,
+    /// The deferred job's name.
+    pub job: String,
+    /// When the orchestrator will re-submit it.
+    pub release_t: f64,
+}
+
+/// The fleet power-cap governor: admission arithmetic plus the audit
+/// and bookkeeping counters the reports read. Owned by the
+/// orchestrator; pure bookkeeping, never touches sim state itself.
+#[derive(Debug, Clone)]
+pub struct PowerGovernor {
+    cap: FleetPowerCap,
+    price: Option<PriceSignal>,
+    /// Cap-deferral count per belief id (keyed lookups only, so
+    /// iteration order can never leak into behavior).
+    defer_counts: HashMap<usize, u32>,
+    deferrals: u64,
+    price_deferrals: u64,
+    fissions: u64,
+    violation_s: f64,
+    last_audit_t: f64,
+    peak_reserved_w: f64,
+    parked_gpu_s: f64,
+    timeline: Vec<DeferEvent>,
+}
+
+impl PowerGovernor {
+    /// A governor enforcing `cap`, with no price signal attached.
+    pub fn new(cap: FleetPowerCap) -> PowerGovernor {
+        PowerGovernor {
+            cap,
+            price: None,
+            defer_counts: HashMap::new(),
+            deferrals: 0,
+            price_deferrals: 0,
+            fissions: 0,
+            violation_s: 0.0,
+            last_audit_t: 0.0,
+            peak_reserved_w: 0.0,
+            parked_gpu_s: 0.0,
+            timeline: Vec::new(),
+        }
+    }
+
+    /// Builder: attach a price signal (enables price deferral if the
+    /// cap sets `defer_above_price`, and $/job accounting either way).
+    pub fn with_price(mut self, sig: PriceSignal) -> PowerGovernor {
+        self.price = Some(sig);
+        self
+    }
+
+    /// The cap configuration.
+    pub fn cap(&self) -> &FleetPowerCap {
+        &self.cap
+    }
+
+    /// The attached price signal, if any.
+    pub fn price(&self) -> Option<&PriceSignal> {
+        self.price.as_ref()
+    }
+
+    /// Would admitting a launch that raises fleet reserved draw to
+    /// `projected_w` breach the admit limit?
+    pub fn would_breach(&self, projected_w: f64) -> bool {
+        projected_w > self.cap.admit_limit_w() + CAP_EPS
+    }
+
+    /// If price deferral is configured and the price at `now` is above
+    /// the threshold, the release time of the next cheap window.
+    /// `None` means launch now (no signal, below threshold, or never
+    /// cheap enough to be worth an unbounded wait).
+    pub fn price_release(&self, now: f64) -> Option<f64> {
+        let threshold = self.cap.defer_above_price?;
+        let sig = self.price.as_ref()?;
+        if sig.price_at(now) <= threshold {
+            return None;
+        }
+        match sig.next_cheap_after(now, threshold) {
+            Some(t) if t > now => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Audit the interval `[last_audit, now)` at the (constant between
+    /// events) reserved draw `reserved_w`, accumulating any time spent
+    /// above the cap. By construction this accumulates nothing; the
+    /// counter exists so tests and benches can assert exactly that.
+    pub fn audit(&mut self, now: f64, reserved_w: f64) {
+        if now > self.last_audit_t {
+            if reserved_w > self.cap.cap_w + CAP_EPS {
+                self.violation_s += now - self.last_audit_t;
+            }
+            self.last_audit_t = now;
+        }
+        if reserved_w > self.peak_reserved_w {
+            self.peak_reserved_w = reserved_w;
+        }
+    }
+
+    /// Record a deferral (cap or price) for the timeline and counters.
+    /// Cap deferrals also bump the job's belief-keyed count, which
+    /// drives fission.
+    pub fn note_defer(
+        &mut self,
+        t: f64,
+        kind: DeferKind,
+        belief: usize,
+        job: &str,
+        release_t: f64,
+    ) {
+        match kind {
+            DeferKind::Cap => {
+                self.deferrals += 1;
+                *self.defer_counts.entry(belief).or_insert(0) += 1;
+            }
+            DeferKind::Price => self.price_deferrals += 1,
+        }
+        self.timeline.push(DeferEvent {
+            t,
+            kind,
+            job: job.to_string(),
+            release_t,
+        });
+    }
+
+    /// How many times this belief's job has been cap-deferred.
+    pub fn defer_count(&self, belief: usize) -> u32 {
+        self.defer_counts.get(&belief).copied().unwrap_or(0)
+    }
+
+    /// Should this job's GPC demand be halved before re-submission?
+    /// True once a multi-GPC job has been cap-deferred twice.
+    pub fn should_fission(&self, belief: usize, demand_gpcs: usize) -> bool {
+        self.cap.fission && demand_gpcs > 1 && self.defer_count(belief) >= 2
+    }
+
+    /// Record one demand halving (and reset the belief's defer count so
+    /// the halved job gets two fresh attempts before halving again).
+    pub fn note_fission(&mut self, belief: usize) {
+        self.fissions += 1;
+        self.defer_counts.insert(belief, 0);
+    }
+
+    /// Record `gpu_s` GPU-seconds spent parked (0 W instead of idle
+    /// floor).
+    pub fn note_parked(&mut self, gpu_s: f64) {
+        self.parked_gpu_s += gpu_s;
+    }
+
+    /// Integrated time with reserved draw above the cap, seconds. The
+    /// headline invariant: exactly `0.0` in every governed run.
+    pub fn violation_s(&self) -> f64 {
+        self.violation_s
+    }
+
+    /// Peak reserved fleet draw seen by the audit, W.
+    pub fn peak_reserved_w(&self) -> f64 {
+        self.peak_reserved_w
+    }
+
+    /// Total cap deferrals.
+    pub fn deferrals(&self) -> u64 {
+        self.deferrals
+    }
+
+    /// Total price deferrals.
+    pub fn price_deferrals(&self) -> u64 {
+        self.price_deferrals
+    }
+
+    /// Total demand halvings.
+    pub fn fissions(&self) -> u64 {
+        self.fissions
+    }
+
+    /// GPU-seconds spent parked at 0 W.
+    pub fn parked_gpu_s(&self) -> f64 {
+        self.parked_gpu_s
+    }
+
+    /// The deferral timeline, in event order.
+    pub fn timeline(&self) -> &[DeferEvent] {
+        &self.timeline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_limit_applies_headroom() {
+        let cap = FleetPowerCap::new(1000.0);
+        assert!((cap.admit_limit_w() - 950.0).abs() < 1e-9);
+        let tight = FleetPowerCap::new(1000.0).with_headroom(0.0);
+        assert_eq!(tight.admit_limit_w(), 1000.0);
+        let gov = PowerGovernor::new(cap);
+        assert!(!gov.would_breach(950.0));
+        assert!(gov.would_breach(950.1));
+    }
+
+    #[test]
+    fn audit_accumulates_zero_when_reserved_stays_under_cap() {
+        let mut gov = PowerGovernor::new(FleetPowerCap::new(500.0));
+        gov.audit(10.0, 400.0);
+        gov.audit(50.0, 499.9);
+        gov.audit(50.0, 499.9); // same instant: no double charge
+        gov.audit(120.0, 100.0);
+        assert_eq!(gov.violation_s(), 0.0);
+        assert_eq!(gov.peak_reserved_w(), 499.9);
+        // A breach (impossible by construction) would be charged.
+        gov.audit(130.0, 600.0);
+        gov.audit(131.0, 600.0);
+        assert!((gov.violation_s() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fission_triggers_after_two_cap_deferrals_and_resets() {
+        let mut gov = PowerGovernor::new(FleetPowerCap::new(500.0));
+        assert!(!gov.should_fission(7, 4));
+        gov.note_defer(1.0, DeferKind::Cap, 7, "train-a", 1.0);
+        assert!(!gov.should_fission(7, 4));
+        gov.note_defer(2.0, DeferKind::Cap, 7, "train-a", 2.0);
+        assert!(gov.should_fission(7, 4));
+        assert!(!gov.should_fission(7, 1), "1-GPC jobs cannot fission");
+        gov.note_fission(7);
+        assert_eq!(gov.fissions(), 1);
+        assert!(!gov.should_fission(7, 2), "count resets after fission");
+        // Fission disabled: never.
+        let mut off = PowerGovernor::new(FleetPowerCap::new(500.0).with_fission(false));
+        off.note_defer(1.0, DeferKind::Cap, 7, "x", 1.0);
+        off.note_defer(2.0, DeferKind::Cap, 7, "x", 2.0);
+        assert!(!off.should_fission(7, 4));
+    }
+
+    #[test]
+    fn price_release_waits_for_the_cheap_window() {
+        let sig = PriceSignal::trace(vec![(0.0, 0.10), (600.0, 0.30)], 1_000.0);
+        let gov = PowerGovernor::new(
+            FleetPowerCap::new(500.0).with_price_deferral(0.15),
+        )
+        .with_price(sig);
+        // Cheap now: no deferral.
+        assert_eq!(gov.price_release(10.0), None);
+        // Expensive: wait for the wrap.
+        assert_eq!(gov.price_release(700.0), Some(1_000.0));
+        // No threshold configured: never defers.
+        let no_thresh = PowerGovernor::new(FleetPowerCap::new(500.0))
+            .with_price(PriceSignal::Flat(9.0));
+        assert_eq!(no_thresh.price_release(700.0), None);
+        // Threshold but no signal: never defers.
+        let no_sig =
+            PowerGovernor::new(FleetPowerCap::new(500.0).with_price_deferral(0.15));
+        assert_eq!(no_sig.price_release(700.0), None);
+        // Never cheap enough: release immediately rather than hang.
+        let never = PowerGovernor::new(
+            FleetPowerCap::new(500.0).with_price_deferral(0.01),
+        )
+        .with_price(PriceSignal::Flat(0.30));
+        assert_eq!(never.price_release(5.0), None);
+    }
+
+    #[test]
+    fn timeline_records_both_kinds() {
+        let mut gov = PowerGovernor::new(FleetPowerCap::new(500.0));
+        gov.note_defer(1.0, DeferKind::Cap, 3, "a", 1.0);
+        gov.note_defer(2.0, DeferKind::Price, 4, "b", 9.0);
+        assert_eq!(gov.deferrals(), 1);
+        assert_eq!(gov.price_deferrals(), 1);
+        let tl = gov.timeline();
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl[0].kind.as_str(), "cap");
+        assert_eq!(tl[1].kind.as_str(), "price");
+        assert_eq!(tl[1].release_t, 9.0);
+    }
+}

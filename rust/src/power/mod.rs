@@ -1,0 +1,32 @@
+//! Power subsystem: per-instance draw attribution, the fleet power-cap
+//! governor, and energy-price-aware scheduling.
+//!
+//! Three layers, wired bottom-up through the stack:
+//!
+//! * [`model`] — a pluggable [`PowerModel`] on every
+//!   [`crate::mig::GpuSpec`]. The default [`PowerModel::Legacy`]
+//!   reproduces the original whole-GPU linear curve bit for bit (the
+//!   difftest/parity/resume suites run unchanged under it); the
+//!   [`PowerModel::SliceProportional`] (MISO, arXiv:2207.11428) and
+//!   [`PowerModel::Measured`] (arXiv:2501.17752) variants attribute
+//!   draw to individual MIG instances. Both sim engines integrate
+//!   energy through the model and expose `instance_power_w(id)`.
+//! * [`cap`] — the [`FleetPowerCap`] / [`PowerGovernor`] pair the
+//!   orchestrator consults before every launch: reservation-based
+//!   admission (cap-violation seconds are 0 by construction), deferral
+//!   of denied launches, demand fission to lower-power profiles, and
+//!   parking of drained GPUs.
+//! * [`price`] — deterministic [`PriceSignal`]s ($/kWh over simulated
+//!   time) with exact per-run cost integrals and the cheap-window
+//!   search behind price-aware deferral.
+//!
+//! See `docs/ARCHITECTURE.md` ("Power flow") for how the pieces
+//! compose and the determinism notes.
+
+pub mod cap;
+pub mod model;
+pub mod price;
+
+pub use cap::{DeferEvent, DeferKind, FleetPowerCap, PowerGovernor, CAP_EPS};
+pub use model::{Calibration, InstanceLoad, PowerBreakdown, PowerModel, ProfileCal};
+pub use price::PriceSignal;

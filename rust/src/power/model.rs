@@ -1,0 +1,525 @@
+//! Pluggable per-instance power attribution.
+//!
+//! The simulator's original power model is one whole-GPU linear curve:
+//! `idle_power_w + per_gpc * active` with
+//! `per_gpc = (max_power_w - idle_power_w) / total_compute`. That is
+//! kept, bit for bit, as [`PowerModel::Legacy`] — the default on every
+//! [`GpuSpec`] — so the difftest/parity/resume suites are untouched.
+//! Two richer variants attribute draw to individual MIG instances:
+//!
+//! * [`PowerModel::SliceProportional`] — the MISO assumption
+//!   (arXiv:2207.11428): an instance with *any* activity draws its full
+//!   compute-slice share of the dynamic range; idle instances draw only
+//!   their memory-slice share of the idle floor. Occupancy-based, so it
+//!   upper-bounds the utilization-scaled legacy curve.
+//! * [`PowerModel::Measured`] — per-profile calibration tables in the
+//!   spirit of "On the Partitioning of GPU Power among Multi-Instances"
+//!   (arXiv:2501.17752): an unattributable chassis floor, a static term
+//!   per allocated instance, and a nonlinear (`util^gamma`) activity
+//!   term per profile. Loadable via the `"power"` config knob.
+//!
+//! Every variant satisfies the attribution-sum property pinned by the
+//! tests below: the per-instance terms plus the chassis floor sum to
+//! the whole-GPU draw returned by [`PowerModel::total_w`]. Both sim
+//! engines build their [`InstanceLoad`] lists in `InstanceId` order, so
+//! float summation order — and therefore every integrated joule — is
+//! deterministic across engines and processes.
+
+use anyhow::{bail, Result};
+
+use crate::mig::{GpuSpec, InstanceId};
+use crate::util::Json;
+
+/// Activity of one live MIG instance at an instant: which profile it
+/// is, and how many GPC-equivalents of compute it is driving
+/// (`util x busy GPCs`, in `[0, compute_slices]`; 0.0 for an allocated
+/// but idle instance).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstanceLoad {
+    /// The live instance id.
+    pub id: InstanceId,
+    /// Index into `spec.profiles`.
+    pub profile: usize,
+    /// Active GPC-equivalents, in `[0, compute_slices]`.
+    pub active: f64,
+}
+
+/// Per-instance draw attribution at one instant: an unattributable
+/// chassis floor plus one wattage per live instance (id order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerBreakdown {
+    /// Draw not attributable to any instance (unallocated idle floor
+    /// for the linear models, the calibrated chassis constant for
+    /// [`PowerModel::Measured`]), W.
+    pub chassis_w: f64,
+    /// Per-instance draw, W, in `InstanceId` order.
+    pub per_instance: Vec<(InstanceId, f64)>,
+}
+
+impl PowerBreakdown {
+    /// Whole-GPU draw: chassis floor plus every instance term, W.
+    pub fn total_w(&self) -> f64 {
+        let mut w = self.chassis_w;
+        for &(_, p) in &self.per_instance {
+            w += p;
+        }
+        w
+    }
+
+    /// One instance's attributed draw, if it is in the breakdown.
+    pub fn instance_w(&self, id: InstanceId) -> Option<f64> {
+        self.per_instance
+            .iter()
+            .find(|&&(i, _)| i == id)
+            .map(|&(_, w)| w)
+    }
+}
+
+/// Per-profile calibration row of the [`PowerModel::Measured`] model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileCal {
+    /// Draw of an allocated-but-idle instance of this profile, W.
+    pub static_w: f64,
+    /// Full-utilization dynamic draw on top of `static_w`, W.
+    pub dynamic_w: f64,
+    /// Activity exponent: draw scales as `util^gamma` (sublinear for
+    /// `gamma < 1`, the measured shape).
+    pub gamma: f64,
+}
+
+/// Calibration table of the [`PowerModel::Measured`] model: one chassis
+/// floor plus one [`ProfileCal`] per `spec.profiles` entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    /// Unattributable whole-board floor (HBM controller, NVLink PHYs,
+    /// fans), W — drawn even with no instance allocated.
+    pub chassis_w: f64,
+    /// Per-profile rows, index-aligned with `spec.profiles`.
+    pub profiles: Vec<ProfileCal>,
+}
+
+impl Calibration {
+    /// A deterministic default table derived from the spec's linear
+    /// curve, in the measured paper's shape: half the idle floor is
+    /// chassis, the other half splits across instances by memory-slice
+    /// share; dynamic draw is the linear compute share with a mild
+    /// superlinear bump (small instances draw proportionally more than
+    /// their slice share, per the measurements) and a sublinear
+    /// `util^0.8` activity response.
+    pub fn default_for(spec: &GpuSpec) -> Calibration {
+        let profiles = spec
+            .profiles
+            .iter()
+            .map(|p| {
+                let mem_frac = p.mem_slices as f64 / spec.total_mem_slices as f64;
+                let comp_frac = p.compute_slices as f64 / spec.total_compute as f64;
+                ProfileCal {
+                    static_w: 0.5 * spec.idle_power_w * mem_frac,
+                    dynamic_w: (spec.max_power_w - spec.idle_power_w) * comp_frac * 1.1,
+                    gamma: 0.8,
+                }
+            })
+            .collect();
+        Calibration {
+            chassis_w: 0.5 * spec.idle_power_w,
+            profiles,
+        }
+    }
+
+    fn validate(&self, spec: &GpuSpec) -> Result<()> {
+        if self.profiles.len() != spec.profiles.len() {
+            bail!(
+                "power calibration has {} profile rows, spec '{}' has {} profiles",
+                self.profiles.len(),
+                spec.name,
+                spec.profiles.len()
+            );
+        }
+        if !(self.chassis_w >= 0.0) {
+            bail!("chassis_w must be >= 0, got {}", self.chassis_w);
+        }
+        for (i, p) in self.profiles.iter().enumerate() {
+            if !(p.static_w >= 0.0 && p.dynamic_w >= 0.0) {
+                bail!("profile {i} calibration terms must be >= 0");
+            }
+            if !(p.gamma > 0.0) {
+                bail!("profile {i} gamma must be > 0, got {}", p.gamma);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// How a [`GpuSpec`] converts instance activity into electrical draw.
+/// See the module docs for the three variants; [`PowerModel::Legacy`]
+/// is the default and reproduces the original whole-GPU curve bit for
+/// bit.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum PowerModel {
+    /// The original linear whole-GPU curve (default, byte-identical to
+    /// the pre-power-subsystem simulator).
+    #[default]
+    Legacy,
+    /// MISO-style occupancy model: an active instance draws its full
+    /// compute-slice share of the dynamic range.
+    SliceProportional,
+    /// Per-profile calibrated model with a chassis floor and nonlinear
+    /// activity terms (arXiv:2501.17752 shape).
+    Measured(Calibration),
+}
+
+impl PowerModel {
+    /// Stable short name (config knob / labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PowerModel::Legacy => "legacy",
+            PowerModel::SliceProportional => "slice-proportional",
+            PowerModel::Measured(_) => "measured",
+        }
+    }
+
+    /// Attribute draw to instances for one instant. `loads` must be in
+    /// `InstanceId` order (both engines produce it that way), which
+    /// fixes the float summation order of [`PowerBreakdown::total_w`].
+    pub fn breakdown(&self, spec: &GpuSpec, loads: &[InstanceLoad]) -> PowerBreakdown {
+        let per_gpc = (spec.max_power_w - spec.idle_power_w) / spec.total_compute as f64;
+        let mut alloc_mem = 0.0;
+        let mut per_instance = Vec::with_capacity(loads.len());
+        for l in loads {
+            let prof = &spec.profiles[l.profile];
+            let mem_frac = prof.mem_slices as f64 / spec.total_mem_slices as f64;
+            alloc_mem += mem_frac;
+            let w = match self {
+                PowerModel::Legacy => spec.idle_power_w * mem_frac + per_gpc * l.active,
+                PowerModel::SliceProportional => {
+                    let occupied = if l.active > 0.0 { 1.0 } else { 0.0 };
+                    let comp_frac = prof.compute_slices as f64 / spec.total_compute as f64;
+                    spec.idle_power_w * mem_frac
+                        + (spec.max_power_w - spec.idle_power_w) * comp_frac * occupied
+                }
+                PowerModel::Measured(cal) => {
+                    let row = &cal.profiles[l.profile];
+                    let util = (l.active / prof.compute_slices as f64).clamp(0.0, 1.0);
+                    row.static_w + row.dynamic_w * util.powf(row.gamma)
+                }
+            };
+            per_instance.push((l.id, w));
+        }
+        let chassis_w = match self {
+            PowerModel::Measured(cal) => cal.chassis_w,
+            // Idle floor of the unallocated memory slices.
+            _ => spec.idle_power_w * (1.0 - alloc_mem).max(0.0),
+        };
+        PowerBreakdown {
+            chassis_w,
+            per_instance,
+        }
+    }
+
+    /// Whole-GPU draw for one instant (the engines' integration term).
+    pub fn total_w(&self, spec: &GpuSpec, loads: &[InstanceLoad]) -> f64 {
+        self.breakdown(spec, loads).total_w()
+    }
+
+    /// Worst-case (reservation) draw: every load saturated to its
+    /// instance's full compute width. Monotone in `active` for all
+    /// three variants, so actual draw never exceeds it — the power-cap
+    /// governor's admission invariant.
+    pub fn reservation_w(&self, spec: &GpuSpec, loads: &[InstanceLoad]) -> f64 {
+        let saturated: Vec<InstanceLoad> = loads
+            .iter()
+            .map(|l| InstanceLoad {
+                active: if l.active > 0.0 {
+                    spec.profiles[l.profile].compute_slices as f64
+                } else {
+                    0.0
+                },
+                ..*l
+            })
+            .collect();
+        self.total_w(spec, &saturated)
+    }
+
+    /// Whole-GPU draw from an aggregate active-GPC count, for callers
+    /// (the serving engine) that track activity per replica rather than
+    /// per op. The `Legacy` arm is the exact expression the serving
+    /// loop used inline — same operations, same order — so serve
+    /// reports stay byte-identical under the default model.
+    pub fn whole_gpu_w(&self, spec: &GpuSpec, gpcs_active: f64) -> f64 {
+        match self {
+            PowerModel::Legacy | PowerModel::SliceProportional => {
+                let per_gpc =
+                    (spec.max_power_w - spec.idle_power_w) / spec.total_compute as f64;
+                spec.idle_power_w + per_gpc * gpcs_active
+            }
+            PowerModel::Measured(cal) => {
+                // No per-instance split available: treat the board as
+                // one full-width instance at util = active/total.
+                let util = (gpcs_active / spec.total_compute as f64).clamp(0.0, 1.0);
+                let full = spec
+                    .profiles
+                    .iter()
+                    .position(|p| p.compute_slices == spec.total_compute)
+                    .unwrap_or(spec.profiles.len() - 1);
+                let row = &cal.profiles[full];
+                cal.chassis_w + row.static_w + row.dynamic_w * util.powf(row.gamma)
+            }
+        }
+    }
+
+    /// Parse the `"power"` config knob: either a shorthand string
+    /// (`"legacy"` / `"slice-proportional"` / `"measured"`) or an
+    /// object `{"model": ..., "chassis_w": ..., "profiles": [...]}`
+    /// with optional calibration overrides (defaults derive from
+    /// [`Calibration::default_for`]).
+    pub fn from_json(doc: &Json, spec: &GpuSpec) -> Result<PowerModel> {
+        let parse_name = |s: &str| -> Result<PowerModel> {
+            match s {
+                "legacy" => Ok(PowerModel::Legacy),
+                "slice-proportional" => Ok(PowerModel::SliceProportional),
+                "measured" => Ok(PowerModel::Measured(Calibration::default_for(spec))),
+                other => bail!(
+                    "power model must be \"legacy\", \"slice-proportional\" or \
+                     \"measured\", got \"{other}\""
+                ),
+            }
+        };
+        let model = match doc {
+            Json::Str(s) => return parse_name(s),
+            Json::Obj(_) => match doc.get("model").as_str() {
+                Some(s) => parse_name(s)?,
+                None => bail!("'power' object requires a string 'model' field"),
+            },
+            other => bail!("'power' must be a string or an object, got {other}"),
+        };
+        let PowerModel::Measured(mut cal) = model else {
+            return Ok(model);
+        };
+        if let Some(c) = doc.get("chassis_w").as_f64() {
+            cal.chassis_w = c;
+        }
+        match doc.get("profiles") {
+            Json::Null => {}
+            Json::Arr(rows) => {
+                if rows.len() != cal.profiles.len() {
+                    bail!(
+                        "'power.profiles' has {} rows, spec '{}' has {} profiles",
+                        rows.len(),
+                        spec.name,
+                        cal.profiles.len()
+                    );
+                }
+                for (row, slot) in rows.iter().zip(cal.profiles.iter_mut()) {
+                    if let Some(v) = row.get("static_w").as_f64() {
+                        slot.static_w = v;
+                    }
+                    if let Some(v) = row.get("dynamic_w").as_f64() {
+                        slot.dynamic_w = v;
+                    }
+                    if let Some(v) = row.get("gamma").as_f64() {
+                        slot.gamma = v;
+                    }
+                }
+            }
+            other => bail!("'power.profiles' must be an array, got {other}"),
+        }
+        cal.validate(spec)?;
+        Ok(PowerModel::Measured(cal))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn spec() -> GpuSpec {
+        GpuSpec::a100_40gb()
+    }
+
+    /// A random non-overflowing partition with random activity.
+    fn random_loads(spec: &GpuSpec, rng: &mut Rng) -> Vec<InstanceLoad> {
+        let mut loads = Vec::new();
+        let mut mem_left = spec.total_mem_slices as i32;
+        let mut id: InstanceId = 1;
+        for _ in 0..rng.range(1, 6) {
+            let profile = rng.below(spec.profiles.len());
+            let p = &spec.profiles[profile];
+            if (p.mem_slices as i32) > mem_left {
+                continue;
+            }
+            mem_left -= p.mem_slices as i32;
+            let active = match rng.below(3) {
+                0 => 0.0,
+                1 => p.compute_slices as f64,
+                _ => rng.f64() * p.compute_slices as f64,
+            };
+            loads.push(InstanceLoad {
+                id,
+                profile,
+                active,
+            });
+            id += 1;
+        }
+        loads
+    }
+
+    fn models(spec: &GpuSpec) -> Vec<PowerModel> {
+        vec![
+            PowerModel::Legacy,
+            PowerModel::SliceProportional,
+            PowerModel::Measured(Calibration::default_for(spec)),
+        ]
+    }
+
+    #[test]
+    fn attributions_sum_to_whole_gpu_draw_for_all_variants() {
+        // The ISSUE's property: chassis + per-instance terms == total,
+        // for every variant, over random partitions and activity.
+        let spec = spec();
+        let mut rng = Rng::new(0xB0);
+        for _ in 0..200 {
+            let loads = random_loads(&spec, &mut rng);
+            for m in models(&spec) {
+                let b = m.breakdown(&spec, &loads);
+                assert_eq!(b.per_instance.len(), loads.len());
+                let sum: f64 = b.chassis_w + b.per_instance.iter().map(|&(_, w)| w).sum::<f64>();
+                let total = m.total_w(&spec, &loads);
+                assert!(
+                    (sum - total).abs() <= 1e-9 * total.max(1.0),
+                    "{}: {sum} vs {total}",
+                    m.name()
+                );
+                assert!(b.per_instance.iter().all(|&(_, w)| w >= 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn legacy_total_reproduces_the_linear_curve_bitwise() {
+        // total = idle + per_gpc * sum(active), accumulated in load
+        // order — the exact expression both sim engines inline.
+        let spec = spec();
+        let mut rng = Rng::new(0xB1);
+        for _ in 0..100 {
+            let loads = random_loads(&spec, &mut rng);
+            let per_gpc =
+                (spec.max_power_w - spec.idle_power_w) / spec.total_compute as f64;
+            let active: f64 = loads.iter().map(|l| l.active).sum();
+            let expect = spec.idle_power_w + per_gpc * active;
+            let got = PowerModel::Legacy.total_w(&spec, &loads);
+            assert!((got - expect).abs() <= 1e-9, "{got} vs {expect}");
+            // The whole-GPU helper is the literal serving expression.
+            assert_eq!(
+                PowerModel::Legacy.whole_gpu_w(&spec, active).to_bits(),
+                expect.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn reservation_upper_bounds_actual_draw() {
+        let spec = spec();
+        let mut rng = Rng::new(0xB2);
+        for _ in 0..200 {
+            let loads = random_loads(&spec, &mut rng);
+            for m in models(&spec) {
+                let actual = m.total_w(&spec, &loads);
+                let reserved = m.reservation_w(&spec, &loads);
+                assert!(
+                    reserved >= actual - 1e-9,
+                    "{}: reserved {reserved} < actual {actual}",
+                    m.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn slice_proportional_is_occupancy_based() {
+        let spec = spec();
+        let p = 0; // smallest profile
+        let slices = spec.profiles[p].compute_slices as f64;
+        let lo = vec![InstanceLoad {
+            id: 1,
+            profile: p,
+            active: 0.1,
+        }];
+        let hi = vec![InstanceLoad {
+            id: 1,
+            profile: p,
+            active: slices,
+        }];
+        let m = PowerModel::SliceProportional;
+        // any activity -> full slice share: draw is flat in utilization
+        assert_eq!(
+            m.total_w(&spec, &lo).to_bits(),
+            m.total_w(&spec, &hi).to_bits()
+        );
+        // but an idle instance draws only its memory floor share
+        let idle = vec![InstanceLoad {
+            id: 1,
+            profile: p,
+            active: 0.0,
+        }];
+        assert!(m.total_w(&spec, &idle) < m.total_w(&spec, &lo));
+    }
+
+    #[test]
+    fn measured_activity_response_is_sublinear() {
+        let spec = spec();
+        let m = PowerModel::Measured(Calibration::default_for(&spec));
+        let p = spec.profiles.len() - 1;
+        let slices = spec.profiles[p].compute_slices as f64;
+        let at = |util: f64| {
+            m.total_w(
+                &spec,
+                &[InstanceLoad {
+                    id: 1,
+                    profile: p,
+                    active: util * slices,
+                }],
+            )
+        };
+        let base = at(0.0);
+        // gamma < 1: half utilization draws more than half the dynamic
+        // range.
+        assert!(at(0.5) - base > 0.5 * (at(1.0) - base));
+        assert!(at(1.0) > at(0.5));
+    }
+
+    #[test]
+    fn config_knob_parses_shorthand_and_calibration_overrides() {
+        let spec = spec();
+        let m = PowerModel::from_json(&Json::str("slice-proportional"), &spec).unwrap();
+        assert_eq!(m, PowerModel::SliceProportional);
+        let m = PowerModel::from_json(&Json::str("legacy"), &spec).unwrap();
+        assert_eq!(m, PowerModel::Legacy);
+        let m = PowerModel::from_json(&Json::str("measured"), &spec).unwrap();
+        assert_eq!(m, PowerModel::Measured(Calibration::default_for(&spec)));
+
+        let doc = Json::obj(vec![
+            ("model", Json::str("measured")),
+            ("chassis_w", Json::num(40.0)),
+        ]);
+        match PowerModel::from_json(&doc, &spec).unwrap() {
+            PowerModel::Measured(cal) => {
+                assert_eq!(cal.chassis_w, 40.0);
+                assert_eq!(cal.profiles.len(), spec.profiles.len());
+            }
+            other => panic!("expected measured, got {}", other.name()),
+        }
+
+        for bad in [
+            Json::str("nuclear"),
+            Json::num(3.0),
+            Json::obj(vec![("model", Json::str("measured")), ("chassis_w", Json::num(-1.0))]),
+            Json::obj(vec![
+                ("model", Json::str("measured")),
+                ("profiles", Json::Arr(vec![])),
+            ]),
+        ] {
+            assert!(PowerModel::from_json(&bad, &spec).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! Deterministic time-varying electricity price signals and run-cost
+//! integrals.
+//!
+//! A [`PriceSignal`] maps simulated seconds to $/kWh. Both sim engines
+//! carry an optional signal and integrate `$ = ∫ price(t)·power(t) dt`
+//! alongside the energy integral, at the same event boundaries — the
+//! cost integral changes no event timing, no energy bits, and nothing
+//! in an unpriced run. The diurnal shape reuses the serving-traffic
+//! [`RateProfile`] sinusoid so "cheap hours" line up with the traffic
+//! troughs the autoscaler already exploits; trace replay is a cyclic
+//! piecewise-constant step function (the shape of day-ahead market
+//! data).
+//!
+//! For the price-aware deferral policy, [`PriceSignal::next_cheap_after`]
+//! finds the next instant the price drops to a threshold — the release
+//! time the power governor assigns to deferred batch work.
+
+use crate::workloads::mix::RateProfile;
+
+/// Price quantization of the diurnal sinusoid: segments per period.
+/// 96 = 15-minute settlement intervals on a 24h period, the standard
+/// market granularity; the integral walks these edges so two runs that
+/// split the same busy window at different event boundaries still
+/// accumulate identical cost.
+const DIURNAL_STEPS: usize = 96;
+
+/// A deterministic $/kWh price as a function of simulated time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PriceSignal {
+    /// Constant price (makes $/job a pure scaling of J/job — the
+    /// control arm in the bench).
+    Flat(f64),
+    /// Sinusoidal day: cheap at the trough, expensive at the peak,
+    /// quantized to [`DIURNAL_STEPS`] settlement intervals per period.
+    /// `base_rps`/`peak_rps` are reinterpreted as trough/peak $/kWh.
+    Diurnal(RateProfile),
+    /// Cyclic piecewise-constant trace: `(start_s, usd_per_kwh)`
+    /// points, strictly increasing in `start_s`, wrapped at
+    /// `period_s`.
+    Trace {
+        /// Segment starts (seconds into the period) and prices.
+        points: Vec<(f64, f64)>,
+        /// Cycle length, seconds.
+        period_s: f64,
+    },
+}
+
+impl PriceSignal {
+    /// Diurnal price between `trough` and `peak` $/kWh over `period_s`
+    /// seconds. Panics (via [`RateProfile::diurnal`]) unless
+    /// `0 < trough <= peak` and `period_s > 0`.
+    pub fn diurnal(trough: f64, peak: f64, period_s: f64) -> PriceSignal {
+        PriceSignal::Diurnal(RateProfile::diurnal(trough, peak, period_s))
+    }
+
+    /// Cyclic trace from `(start_s, usd_per_kwh)` points. Panics unless
+    /// points are non-empty, start at 0, are strictly increasing, stay
+    /// inside the period, and prices are non-negative.
+    pub fn trace(points: Vec<(f64, f64)>, period_s: f64) -> PriceSignal {
+        assert!(!points.is_empty(), "price trace needs at least one point");
+        assert!(period_s > 0.0);
+        assert_eq!(points[0].0, 0.0, "price trace must start at t=0");
+        for w in points.windows(2) {
+            assert!(w[0].0 < w[1].0, "price trace starts must increase");
+        }
+        let last = points.last().unwrap().0;
+        assert!(last < period_s, "last trace point must precede the period end");
+        assert!(points.iter().all(|&(_, p)| p >= 0.0));
+        PriceSignal::Trace { points, period_s }
+    }
+
+    /// Length of one settlement interval, seconds (the quantization
+    /// grid of the diurnal shape; `None` for signals with their own
+    /// explicit edges).
+    fn diurnal_step(profile: &RateProfile) -> f64 {
+        profile.period_s / DIURNAL_STEPS as f64
+    }
+
+    /// $/kWh at simulated time `t` (piecewise constant in `t`).
+    pub fn price_at(&self, t: f64) -> f64 {
+        match self {
+            PriceSignal::Flat(p) => *p,
+            PriceSignal::Diurnal(profile) => {
+                // Sample the sinusoid at the start of t's settlement
+                // interval so the price is a step function.
+                let step = Self::diurnal_step(profile);
+                let seg = (t / step).floor() * step;
+                profile.rate_at(seg)
+            }
+            PriceSignal::Trace { points, period_s } => {
+                let tau = t.rem_euclid(*period_s);
+                let mut price = points[points.len() - 1].1;
+                for &(start, p) in points {
+                    if start <= tau {
+                        price = p;
+                    } else {
+                        break;
+                    }
+                }
+                price
+            }
+        }
+    }
+
+    /// The next price-segment edge strictly after `t`, or `None` for a
+    /// flat signal. Cost integration walks these so the integral is
+    /// exact for the (piecewise-constant) signal regardless of how
+    /// event boundaries split a window.
+    pub fn next_change_after(&self, t: f64) -> Option<f64> {
+        match self {
+            PriceSignal::Flat(_) => None,
+            PriceSignal::Diurnal(profile) => {
+                let step = Self::diurnal_step(profile);
+                Some(((t / step).floor() + 1.0) * step)
+            }
+            PriceSignal::Trace { points, period_s } => {
+                let cycle = (t / period_s).floor();
+                let tau = t - cycle * period_s;
+                for &(start, _) in points {
+                    if start > tau {
+                        return Some(cycle * period_s + start);
+                    }
+                }
+                // Next edge is the wrap to the following cycle.
+                Some((cycle + 1.0) * period_s)
+            }
+        }
+    }
+
+    /// Cost in dollars of drawing a constant `watts` over `[t0, t1)`,
+    /// walking segment edges so the integral is exact.
+    pub fn cost_usd(&self, watts: f64, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 || watts == 0.0 {
+            return 0.0;
+        }
+        let mut cost = 0.0;
+        let mut t = t0;
+        while t < t1 {
+            let seg_end = match self.next_change_after(t) {
+                Some(e) if e < t1 => e,
+                _ => t1,
+            };
+            // $/kWh · W · s  /  (1000 W/kW · 3600 s/h)  =  $
+            cost += self.price_at(t) * watts * (seg_end - t) / 3.6e6;
+            t = seg_end;
+        }
+        cost
+    }
+
+    /// The earliest instant `>= t` at which the price is at or below
+    /// `threshold`, searching one full period ahead; `None` if the
+    /// signal never gets that cheap (callers must then release
+    /// immediately rather than defer forever).
+    pub fn next_cheap_after(&self, t: f64, threshold: f64) -> Option<f64> {
+        if self.price_at(t) <= threshold {
+            return Some(t);
+        }
+        let horizon = match self {
+            PriceSignal::Flat(_) => return None,
+            PriceSignal::Diurnal(profile) => profile.period_s,
+            PriceSignal::Trace { period_s, .. } => *period_s,
+        };
+        let mut edge = t;
+        loop {
+            edge = self.next_change_after(edge)?;
+            if edge > t + horizon {
+                return None;
+            }
+            if self.price_at(edge) <= threshold {
+                return Some(edge);
+            }
+        }
+    }
+
+    /// Mean price over one period, $/kWh (for report denominators and
+    /// picking defer thresholds).
+    pub fn mean_price(&self) -> f64 {
+        match self {
+            PriceSignal::Flat(p) => *p,
+            PriceSignal::Diurnal(profile) => profile.mean_rps(),
+            PriceSignal::Trace { points, period_s } => {
+                let mut sum = 0.0;
+                for (i, &(start, p)) in points.iter().enumerate() {
+                    let end = points.get(i + 1).map(|&(s, _)| s).unwrap_or(*period_s);
+                    sum += p * (end - start);
+                }
+                sum / period_s
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_signal_costs_are_exact() {
+        let s = PriceSignal::Flat(0.10);
+        assert_eq!(s.price_at(0.0), 0.10);
+        assert_eq!(s.next_change_after(123.0), None);
+        // 1 kW for 1 h at $0.10/kWh = $0.10
+        let c = s.cost_usd(1000.0, 0.0, 3600.0);
+        assert!((c - 0.10).abs() < 1e-12, "{c}");
+        assert_eq!(s.cost_usd(1000.0, 10.0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn diurnal_price_is_a_step_function_cheap_at_the_trough() {
+        let s = PriceSignal::diurnal(0.05, 0.25, 86_400.0);
+        // t=0 is the trough of the sinusoid, mid-period the peak.
+        assert!((s.price_at(0.0) - 0.05).abs() < 1e-12);
+        assert!(s.price_at(43_200.0) > 0.24);
+        // Constant within one settlement interval.
+        let step = 86_400.0 / 96.0;
+        assert_eq!(
+            s.price_at(10.0).to_bits(),
+            s.price_at(step - 1.0).to_bits()
+        );
+        assert_ne!(s.price_at(10.0).to_bits(), s.price_at(step + 1.0).to_bits());
+        // Edges land on the settlement grid.
+        assert_eq!(s.next_change_after(0.0), Some(step));
+        assert_eq!(s.next_change_after(step * 1.5), Some(step * 2.0));
+    }
+
+    #[test]
+    fn cost_integral_is_invariant_to_window_splits() {
+        // Splitting [t0, t1) at arbitrary interior points must not
+        // change the total — the difftest-safety property.
+        let s = PriceSignal::diurnal(0.05, 0.25, 1_000.0);
+        let whole = s.cost_usd(250.0, 37.0, 912.0);
+        let mut split = 0.0;
+        let cuts = [37.0, 100.3, 250.0, 499.99, 700.0, 912.0];
+        for w in cuts.windows(2) {
+            split += s.cost_usd(250.0, w[0], w[1]);
+        }
+        assert!((whole - split).abs() < 1e-12, "{whole} vs {split}");
+    }
+
+    #[test]
+    fn trace_replay_wraps_cyclically() {
+        let s = PriceSignal::trace(vec![(0.0, 0.10), (600.0, 0.30)], 1_000.0);
+        assert_eq!(s.price_at(0.0), 0.10);
+        assert_eq!(s.price_at(599.0), 0.10);
+        assert_eq!(s.price_at(600.0), 0.30);
+        assert_eq!(s.price_at(999.0), 0.30);
+        assert_eq!(s.price_at(1_001.0), 0.10); // wrapped
+        assert_eq!(s.next_change_after(0.0), Some(600.0));
+        assert_eq!(s.next_change_after(700.0), Some(1_000.0));
+        assert_eq!(s.next_change_after(1_100.0), Some(1_600.0));
+        let mean = s.mean_price();
+        assert!((mean - (0.10 * 0.6 + 0.30 * 0.4)).abs() < 1e-12, "{mean}");
+    }
+
+    #[test]
+    fn next_cheap_finds_the_trough_or_gives_up() {
+        let s = PriceSignal::trace(vec![(0.0, 0.10), (600.0, 0.30)], 1_000.0);
+        // Already cheap: release immediately.
+        assert_eq!(s.next_cheap_after(10.0, 0.15), Some(10.0));
+        // Expensive segment: wait for the wrap back to $0.10.
+        assert_eq!(s.next_cheap_after(700.0, 0.15), Some(1_000.0));
+        // Never cheap enough: None, caller releases immediately.
+        assert_eq!(s.next_cheap_after(700.0, 0.05), None);
+        assert_eq!(PriceSignal::Flat(0.2).next_cheap_after(5.0, 0.1), None);
+        assert_eq!(PriceSignal::Flat(0.2).next_cheap_after(5.0, 0.2), Some(5.0));
+        // Diurnal: from the peak, the next cheap instant is in the
+        // back half of the day, before the wrap.
+        let d = PriceSignal::diurnal(0.05, 0.25, 86_400.0);
+        let t = d.next_cheap_after(43_200.0, 0.06).unwrap();
+        assert!(t > 43_200.0 && t < 2.0 * 86_400.0, "{t}");
+        assert!(d.price_at(t) <= 0.06);
+    }
+
+    #[test]
+    #[should_panic]
+    fn trace_rejects_out_of_order_points() {
+        let _ = PriceSignal::trace(vec![(0.0, 0.1), (500.0, 0.2), (400.0, 0.3)], 1_000.0);
+    }
+}

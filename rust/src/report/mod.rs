@@ -621,6 +621,155 @@ pub fn online_arrivals(seed: u64, rate_jps: f64) -> (Vec<OnlineRow>, Table) {
     (rows, t)
 }
 
+/// One arm of the power-cap comparison (E12).
+#[derive(Debug, Clone)]
+pub struct PowerArm {
+    /// Arm label.
+    pub label: &'static str,
+    /// The run's absolute metrics.
+    pub metrics: BatchMetrics,
+    /// Electricity cost integral over the run, $.
+    pub cost_usd: f64,
+    /// Cost per completed job, $.
+    pub usd_per_job: f64,
+    /// Seconds the audited reserved draw spent above the cap — exactly
+    /// 0 by construction on every governed arm (0 trivially when
+    /// ungoverned).
+    pub violation_s: f64,
+    /// Peak reserved fleet draw the governor audited, W.
+    pub peak_reserved_w: f64,
+    /// Launches deferred because admission would breach the cap.
+    pub deferrals: u64,
+    /// Launches deferred into a cheaper price window.
+    pub price_deferrals: u64,
+    /// GPC-demand halvings triggered by repeated cap deferrals.
+    pub fissions: u64,
+    /// GPU-seconds spent parked at 0 W instead of the idle floor.
+    pub parked_gpu_s: f64,
+}
+
+/// Run the heterogeneous fleet batch once under an optional governor
+/// and price signal, collecting the power-side counters.
+fn power_arm(
+    specs: &[Arc<GpuSpec>],
+    m: &mix::Mix,
+    gov: Option<crate::power::PowerGovernor>,
+    price: Option<crate::power::PriceSignal>,
+    label: &'static str,
+) -> PowerArm {
+    let policy = FleetPolicy::scheme_b(specs, FleetKnobs::balanced(), SchemeBKnobs::default());
+    let mut orch = Orchestrator::new(specs.to_vec(), false, policy);
+    orch.set_power_governor(gov);
+    orch.set_price_signal(price);
+    orch.submit_mix(m);
+    orch.run_to_completion();
+    let r = orch.fleet_result();
+    let cost_usd = orch.fleet_cost_usd();
+    let (violation_s, peak_reserved_w, deferrals, price_deferrals, fissions, parked_gpu_s) =
+        match orch.power_governor() {
+            Some(g) => (
+                g.violation_s(),
+                g.peak_reserved_w(),
+                g.deferrals(),
+                g.price_deferrals(),
+                g.fissions(),
+                g.parked_gpu_s(),
+            ),
+            None => (0.0, 0.0, 0, 0, 0, 0.0),
+        };
+    PowerArm {
+        label,
+        usd_per_job: cost_usd / r.metrics.n_jobs.max(1) as f64,
+        cost_usd,
+        metrics: r.metrics,
+        violation_s,
+        peak_reserved_w,
+        deferrals,
+        price_deferrals,
+        fissions,
+        parked_gpu_s,
+    }
+}
+
+/// E12 — the power story: the same heterogeneous Ht2 batch run three
+/// ways — uncapped, under a rack-level
+/// [`FleetPowerCap`](crate::power::FleetPowerCap), and capped with
+/// price-aware deferral
+/// over a two-step price trace that starts expensive and turns cheap
+/// once the uncapped run would have drained. All three arms share one
+/// price signal for $/job accounting; only the third acts on it. The
+/// capped arms must report exactly zero cap-violation seconds, and the
+/// price-aware arm wins on $/job by shifting (parked, 0 W) into the
+/// cheap window.
+pub fn power_cap(seed: u64) -> (Vec<PowerArm>, Table) {
+    use crate::power::{FleetPowerCap, PowerGovernor, PriceSignal};
+    let specs = vec![
+        Arc::new(GpuSpec::a30_24gb()),
+        Arc::new(GpuSpec::a100_40gb()),
+        Arc::new(GpuSpec::h100_80gb()),
+    ];
+    let m = mix::ht2(seed);
+    // Probe run fixes the price trace: expensive exactly as long as
+    // the uncapped run takes, cheap after — so a price-blind run pays
+    // peak rate throughout and a price-aware run can dodge all of it.
+    let probe = power_arm(&specs, &m, None, None, "probe");
+    let cheap_at = probe.metrics.makespan_s;
+    let sig = PriceSignal::trace(vec![(0.0, 0.40), (cheap_at, 0.05)], cheap_at * 64.0);
+    // Rack cap: every idle floor plus ~55% of the combined dynamic
+    // range — any one GPU fits easily, the whole fleet flat-out does
+    // not, so the governor has real work.
+    let idle: f64 = specs.iter().map(|s| s.idle_power_w).sum();
+    let range: f64 = specs.iter().map(|s| s.max_power_w - s.idle_power_w).sum();
+    let cap_w = idle + 0.55 * range;
+    let arms = vec![
+        power_arm(&specs, &m, None, Some(sig.clone()), "uncapped"),
+        power_arm(
+            &specs,
+            &m,
+            Some(PowerGovernor::new(FleetPowerCap::new(cap_w)).with_price(sig.clone())),
+            Some(sig.clone()),
+            "capped",
+        ),
+        power_arm(
+            &specs,
+            &m,
+            Some(
+                PowerGovernor::new(FleetPowerCap::new(cap_w).with_price_deferral(0.15))
+                    .with_price(sig.clone()),
+            ),
+            Some(sig),
+            "capped+price-aware",
+        ),
+    ];
+    let mut t = Table::new(&[
+        "arm",
+        "makespan (s)",
+        "throughput (j/s)",
+        "J/job",
+        "$/job",
+        "cap-viol (s)",
+        "peak W",
+        "defer cap/price",
+        "fissions",
+        "parked (gpu-s)",
+    ]);
+    for a in &arms {
+        t.row(vec![
+            a.label.to_string(),
+            format!("{:.1}", a.metrics.makespan_s),
+            format!("{:.3}", a.metrics.throughput_jps),
+            format!("{:.0}", a.metrics.energy_per_job_j),
+            format!("{:.4}", a.usd_per_job),
+            format!("{:.1}", a.violation_s),
+            format!("{:.0}", a.peak_reserved_w),
+            format!("{}/{}", a.deferrals, a.price_deferrals),
+            a.fissions.to_string(),
+            format!("{:.0}", a.parked_gpu_s),
+        ]);
+    }
+    (arms, t)
+}
+
 /// Seed-sensitivity sweep over the heterogeneous mixes: A-vs-B
 /// throughput at each seed. The Ht1 ordering is draw-dependent;
 /// Ht2/Ht3's grouping advantage is structural.
@@ -667,6 +816,8 @@ pub fn all_reports() -> String {
     out.push_str(&table3_myocyte().1.render());
     out.push_str("\n== E10: Table 4 — Needleman-Wunsch PCIe contention ==\n");
     out.push_str(&table4_nw().1.render());
+    out.push_str("\n== E12: power cap — capped vs uncapped vs price-aware ==\n");
+    out.push_str(&power_cap(DEFAULT_SEED).1.render());
     out
 }
 
@@ -714,6 +865,37 @@ mod tests {
         // paper: +20.6% throughput, +6.3% energy
         assert!(r.throughput_gain > 1.02, "thr {}", r.throughput_gain);
         assert!(r.energy_gain > 1.0, "energy {}", r.energy_gain);
+    }
+
+    #[test]
+    fn power_report_caps_hold_and_price_awareness_wins_on_cost() {
+        let (arms, t) = power_cap(DEFAULT_SEED);
+        assert_eq!(arms.len(), 3);
+        assert_eq!(t.rows.len(), 3);
+        let (unc, cap, aware) = (&arms[0], &arms[1], &arms[2]);
+        assert_eq!(unc.label, "uncapped");
+        assert_eq!(cap.label, "capped");
+        assert_eq!(aware.label, "capped+price-aware");
+        // every arm completes the whole mix
+        for a in &arms {
+            assert_eq!(a.metrics.n_jobs, unc.metrics.n_jobs);
+            assert_eq!(a.violation_s, 0.0, "{}: cap violations must be 0", a.label);
+            assert!(a.cost_usd > 0.0, "{}: price signal attached", a.label);
+        }
+        // the cap bites (deferrals happen) but throughput loss is bounded
+        assert!(cap.deferrals > 0, "cap must defer something");
+        assert!(cap.metrics.makespan_s >= unc.metrics.makespan_s);
+        assert!(cap.metrics.makespan_s <= 3.0 * unc.metrics.makespan_s);
+        // price-aware shifts work into the cheap window and wins on $
+        assert!(aware.price_deferrals > 0);
+        assert!(aware.parked_gpu_s > 0.0);
+        assert!(
+            aware.usd_per_job < cap.usd_per_job,
+            "price-aware ${} !< price-blind ${}",
+            aware.usd_per_job,
+            cap.usd_per_job
+        );
+        assert!(aware.usd_per_job < unc.usd_per_job);
     }
 
     #[test]

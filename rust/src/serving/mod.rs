@@ -545,7 +545,6 @@ impl Engine<'_> {
             return;
         }
         let spec = &self.cfg.gpu;
-        let per_gpc = (spec.max_power_w - spec.idle_power_w) / spec.total_compute as f64;
         let mut gpcs = 0.0;
         let mut busy_gpcs = 0.0;
         let mut mem = 0.0;
@@ -555,7 +554,10 @@ impl Engine<'_> {
             busy_gpcs += r.slices as f64 * busy;
             mem += r.batcher.used_gb();
         }
-        self.energy_j += (spec.idle_power_w + per_gpc * gpcs) * dt;
+        // Draw comes from the spec's power model; the Legacy arm of
+        // `whole_gpu_w` is the exact linear expression this loop used
+        // inline, so default-model serve reports are byte-identical.
+        self.energy_j += spec.power.whole_gpu_w(spec, gpcs) * dt;
         self.gpc_integral += busy_gpcs * dt;
         self.mem_integral += mem * dt;
     }
@@ -878,6 +880,28 @@ mod tests {
         assert!(r.mem_utilization > 0.0 && r.mem_utilization < 1.0);
         // the external ledger saw every request
         assert!(r.j_per_request > 0.0);
+    }
+
+    #[test]
+    fn power_model_routes_through_serve_energy_without_touching_scheduling() {
+        use crate::power::{Calibration, PowerModel};
+        let legacy = run(&ServeConfig::smoke(7));
+        // SliceProportional collapses to the same linear whole-GPU
+        // curve, so its report pins the Legacy bytes exactly.
+        let mut cfg = ServeConfig::smoke(7);
+        cfg.gpu = cfg.gpu.clone().with_power_model(PowerModel::SliceProportional);
+        let slice = run(&cfg);
+        assert_eq!(legacy.to_json().to_string(), slice.to_json().to_string());
+        // Measured calibration bends the curve: request flow and
+        // timing stay bit-identical, only the energy integral moves.
+        let mut cfg = ServeConfig::smoke(7);
+        let cal = Calibration::default_for(&cfg.gpu);
+        cfg.gpu = cfg.gpu.clone().with_power_model(PowerModel::Measured(cal));
+        let measured = run(&cfg);
+        assert_eq!(legacy.completed, measured.completed);
+        assert_eq!(legacy.within_slo, measured.within_slo);
+        assert_eq!(legacy.duration_s.to_bits(), measured.duration_s.to_bits());
+        assert_ne!(legacy.energy_j.to_bits(), measured.energy_j.to_bits());
     }
 
     #[test]

@@ -368,6 +368,74 @@ fn property_sweep_mixed_pool_on_larger_slices() {
 }
 
 #[test]
+fn property_sweep_nonlegacy_power_models() {
+    // The pluggable power models change the energy integrand but not
+    // the event dynamics: both engines must stay in lockstep (event
+    // sequence AND energy) under SliceProportional and Measured
+    // attribution, exactly as they do under Legacy.
+    use crate::power::{Calibration, PowerModel};
+    for base in specs() {
+        let cal = Calibration::default_for(&base);
+        for model in [
+            PowerModel::SliceProportional,
+            PowerModel::Measured(cal.clone()),
+        ] {
+            let spec = Arc::new((*base).clone().with_power_model(model));
+            for seed in [31u64, 32] {
+                lockstep(spec.clone(), 0, &mix::hm2().jobs, false, seed);
+                lockstep(
+                    spec.clone(),
+                    1,
+                    &[llm::qwen2_7b().job(seed), llm::flan_t5_infer().job(seed + 1)],
+                    true,
+                    seed,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn flat_price_cost_integrals_agree_across_engines() {
+    // $ = ∫ price·power dt must agree between the engines within the
+    // same tolerance as the energy integral it is derived from.
+    use crate::power::PriceSignal;
+    let spec = Arc::new(GpuSpec::a100_40gb());
+    let jobs = mix::hm2().jobs;
+    let mut a = GpuSim::new(spec.clone(), false);
+    let mut b = NaiveGpuSim::new(spec, false);
+    a.set_price_signal(Some(PriceSignal::diurnal(0.08, 0.32, 10.0)));
+    b.set_price_signal(Some(PriceSignal::diurnal(0.08, 0.32, 10.0)));
+    let ia = a.mgr.alloc(2).unwrap();
+    assert_eq!(b.mgr.alloc(2).unwrap(), ia);
+    let mut backlog = jobs.clone();
+    backlog.reverse();
+    let first = backlog.pop().unwrap();
+    a.launch(first.clone(), ia, 0.0);
+    b.launch(first, ia, 0.0);
+    loop {
+        let (ea, eb) = (a.advance(), b.advance());
+        match (ea, eb) {
+            (None, None) => break,
+            (Some(x), Some(y)) => {
+                assert_events_equiv(&x, &y);
+                if matches!(x, SimEvent::Finished { .. }) {
+                    if let (Some(inst), Some(job)) = (ev_instance(&x), backlog.pop()) {
+                        let t = a.now();
+                        let id = a.launch(job.clone(), inst, t);
+                        assert_eq!(id, b.launch(job, inst, t));
+                    }
+                }
+            }
+            (x, y) => panic!("priced run diverged: indexed {x:?} vs oracle {y:?}"),
+        }
+    }
+    assert_close("priced energy", a.energy_j(), b.energy_j());
+    assert_close("cost integral", a.cost_usd(), b.cost_usd());
+    assert!(a.cost_usd() > 0.0);
+}
+
+#[test]
 fn oom_relaunch_storm_churns_slots_identically() {
     // Heavy churn: a too-big static job (kmeans, 6GB true) OOMs the
     // moment its alloc lands on a 5GB slice and is relaunched in place,

@@ -16,8 +16,14 @@
 //!   runs under, not the one it was launched under.
 //! * **Warp model** — a kernel step on `c` GPCs takes
 //!   `ceil(demand/c)` waves (paper §4.3's warp-folding model).
-//! * **Power** — `P = idle + per_gpc · Σ util_i · gpc_i`, integrated at
-//!   event granularity; energy is `∫P dt`.
+//! * **Power** — pluggable per-instance attribution via the spec's
+//!   [`PowerModel`] ([`crate::power::model`]). The default `Legacy`
+//!   model is the original linear curve
+//!   `P = idle + per_gpc · Σ util_i · gpc_i`, bit for bit; the
+//!   `SliceProportional` / `Measured` variants attribute draw to
+//!   individual MIG instances ([`GpuSim::instance_power_w`]). Energy is
+//!   `∫P dt` at event granularity; with a [`PriceSignal`] attached,
+//!   `$ = ∫ price·P dt` accrues alongside ([`GpuSim::cost_usd`]).
 //! * **Reconfiguration windows** — executing a
 //!   [`PartitionPlan`](crate::mig::PartitionPlan) opens a window whose
 //!   duration is the plan's modeled per-op cost
@@ -110,6 +116,7 @@ use std::collections::{BinaryHeap, HashMap};
 use std::sync::Arc;
 
 use crate::mig::{GpuSpec, InstanceId, PartitionManager};
+use crate::power::{InstanceLoad, PowerBreakdown, PowerModel, PriceSignal};
 use crate::predictor::Observation;
 use crate::trace::AllocatorTrace;
 use crate::workloads::{ComputeModel, JobKind, JobSpec};
@@ -798,6 +805,12 @@ pub struct GpuSim {
     next_id: JobId,
     energy_j: f64,
     mem_gb_integral: f64,
+    /// Electricity cost integral, $ = ∫ price·power dt. Stays exactly
+    /// 0.0 (and adds no work) unless a price signal is attached.
+    cost_usd: f64,
+    /// Optional $/kWh signal (structural, like the spec: re-attached by
+    /// the harness after a checkpoint restore, never serialized).
+    price: Option<PriceSignal>,
     /// Reconfiguration/restart counters the metrics layer consumes.
     pub counters: SimCounters,
     /// Completion records of every finished job.
@@ -834,6 +847,8 @@ impl GpuSim {
             next_id: 0,
             energy_j: 0.0,
             mem_gb_integral: 0.0,
+            cost_usd: 0.0,
+            price: None,
             counters: SimCounters::default(),
             records: Vec::new(),
             observe,
@@ -937,12 +952,128 @@ impl GpuSim {
         self.reconfig_due = Some(self.now + duration_s);
     }
 
-    /// Instantaneous power draw (W), from the incrementally-maintained
-    /// activity accumulator.
+    /// Instantaneous power draw (W). Under [`PowerModel::Legacy`] (the
+    /// default) this is the incrementally-maintained linear curve,
+    /// expression-for-expression the original code — runs are
+    /// byte-identical. The per-instance variants rebuild the load list
+    /// from the live partition (id order, so summation is bit-stable).
     fn power_w(&self) -> f64 {
-        let per_gpc =
-            (self.spec.max_power_w - self.spec.idle_power_w) / self.spec.total_compute as f64;
-        self.spec.idle_power_w + per_gpc * self.active_sum.max(0.0)
+        match &self.spec.power {
+            PowerModel::Legacy => {
+                let per_gpc = (self.spec.max_power_w - self.spec.idle_power_w)
+                    / self.spec.total_compute as f64;
+                self.spec.idle_power_w + per_gpc * self.active_sum.max(0.0)
+            }
+            model => model.total_w(&self.spec, &self.instance_loads()),
+        }
+    }
+
+    /// Per-instance activity of the live partition, in `InstanceId`
+    /// order (the power models' input; idle instances carry 0).
+    fn instance_loads(&self) -> Vec<InstanceLoad> {
+        self.mgr
+            .live_instances()
+            .into_iter()
+            .map(|(id, profile)| {
+                let active = self
+                    .by_instance
+                    .get(&id)
+                    .and_then(|&h| self.running.get(h))
+                    .and_then(|(_, r)| r.ops.get(r.cursor).map(|o| op_active(o, r.inst_slices)))
+                    .unwrap_or(0.0);
+                InstanceLoad {
+                    id,
+                    profile,
+                    active,
+                }
+            })
+            .collect()
+    }
+
+    /// Worst-case per-instance activity: every busy instance charged
+    /// `min(demand_gpcs, inst_slices)` — an upper bound on
+    /// [`op_active`] across every op kind — idle instances 0. The
+    /// candidate launch (if any) saturates its target instance the same
+    /// way.
+    fn reservation_loads(&self, candidate: Option<(InstanceId, u8)>) -> Vec<InstanceLoad> {
+        self.mgr
+            .live_instances()
+            .into_iter()
+            .map(|(id, profile)| {
+                let slices = self.spec.profiles[profile].compute_slices;
+                let mut active = self
+                    .by_instance
+                    .get(&id)
+                    .and_then(|&h| self.running.get(h))
+                    .map(|(_, r)| r.spec.demand_gpcs.min(r.inst_slices) as f64)
+                    .unwrap_or(0.0);
+                if let Some((cand, demand)) = candidate {
+                    if cand == id {
+                        active = demand.min(slices) as f64;
+                    }
+                }
+                InstanceLoad {
+                    id,
+                    profile,
+                    active,
+                }
+            })
+            .collect()
+    }
+
+    /// Instantaneous draw right now, W (the integrand of
+    /// [`energy_j`](Self::energy_j)).
+    pub fn current_power_w(&self) -> f64 {
+        self.power_w()
+    }
+
+    /// Per-instance draw attribution right now (chassis floor +
+    /// per-instance watts, id order). Available under every
+    /// [`PowerModel`] variant.
+    pub fn power_breakdown(&self) -> PowerBreakdown {
+        self.spec.power.breakdown(&self.spec, &self.instance_loads())
+    }
+
+    /// The draw attributed to one live instance right now, W (`None`
+    /// if the instance does not exist).
+    pub fn instance_power_w(&self, id: InstanceId) -> Option<f64> {
+        self.power_breakdown().instance_w(id)
+    }
+
+    /// Worst-case draw of the current workload, W: every busy instance
+    /// saturated to its job's demand. Actual draw never exceeds it
+    /// (monotonicity of every model variant), and it only changes at
+    /// launch/finish/reconfig events — the power-cap governor's
+    /// admission currency.
+    pub fn power_reservation_w(&self) -> f64 {
+        self.spec
+            .power
+            .total_w(&self.spec, &self.reservation_loads(None))
+    }
+
+    /// [`power_reservation_w`](Self::power_reservation_w) as it would
+    /// read after launching a `demand_gpcs` job on `instance`.
+    pub fn power_projection_w(&self, instance: InstanceId, demand_gpcs: u8) -> f64 {
+        self.spec
+            .power
+            .total_w(&self.spec, &self.reservation_loads(Some((instance, demand_gpcs))))
+    }
+
+    /// Attach (or clear) the electricity price signal. The cost
+    /// integral accrues from the current instant; an unpriced sim does
+    /// no cost work at all.
+    pub fn set_price_signal(&mut self, sig: Option<PriceSignal>) {
+        self.price = sig;
+    }
+
+    /// The attached price signal, if any.
+    pub fn price_signal(&self) -> Option<&PriceSignal> {
+        self.price.as_ref()
+    }
+
+    /// Electricity cost integrated so far, $ (0.0 with no signal).
+    pub fn cost_usd(&self) -> f64 {
+        self.cost_usd
     }
 
     /// Resolve a public `JobId` to its live slab handle. Linear scan:
@@ -1048,7 +1179,11 @@ impl GpuSim {
             // 2. integrate power + memory over [now, target)
             let dt = target - self.now;
             if dt > 0.0 {
-                self.energy_j += self.power_w() * dt;
+                let p = self.power_w();
+                self.energy_j += p * dt;
+                if let Some(sig) = &self.price {
+                    self.cost_usd += sig.cost_usd(p, self.now, target);
+                }
                 self.mem_gb_integral += self.mem_sum.max(0.0) * dt;
                 if self.n_bw > 0 {
                     self.v_now += dt / self.n_bw as f64;
@@ -1163,7 +1298,17 @@ impl GpuSim {
             "idle_until on a busy sim"
         );
         if t > self.now {
-            self.energy_j += self.spec.idle_power_w * (t - self.now);
+            // Legacy keeps the original expression (idle floor only);
+            // the per-instance models charge the allocated-but-idle
+            // floors of the current partition layout.
+            let p = match &self.spec.power {
+                PowerModel::Legacy => self.spec.idle_power_w,
+                model => model.total_w(&self.spec, &self.instance_loads()),
+            };
+            self.energy_j += p * (t - self.now);
+            if let Some(sig) = &self.price {
+                self.cost_usd += sig.cost_usd(p, self.now, t);
+            }
             self.now = t;
         }
     }
@@ -1368,6 +1513,7 @@ impl GpuSim {
             ("next_id", Json::num(self.next_id as f64)),
             ("energy_j", f64_to_json(self.energy_j)),
             ("mem_gb_integral", f64_to_json(self.mem_gb_integral)),
+            ("cost_usd", f64_to_json(self.cost_usd)),
             ("counters", counters_to_json(&self.counters)),
             ("records", records_to_json(&self.records)),
             ("mgr", self.mgr.snapshot().0),
@@ -1419,6 +1565,12 @@ impl GpuSim {
         self.next_id = usize_from_json(j.get("next_id"))?;
         self.energy_j = f64_from_json(j.get("energy_j"))?;
         self.mem_gb_integral = f64_from_json(j.get("mem_gb_integral"))?;
+        // Pre-power-subsystem snapshots have no cost key: 0.0.
+        self.cost_usd = if j.get("cost_usd").is_null() {
+            0.0
+        } else {
+            f64_from_json(j.get("cost_usd"))?
+        };
         self.counters = counters_from_json(j.get("counters"))?;
         self.records = records_from_json(j.get("records"))?;
         self.due_scratch.clear();
@@ -2010,6 +2162,126 @@ mod tests {
         s.launch(rodinia::by_name("gaussian").unwrap().job(7), i, s.now());
         while s.advance().is_some() {}
         assert_eq!(s.records.len(), 1);
+    }
+
+    #[test]
+    fn per_instance_attribution_sums_to_engine_draw_while_running() {
+        use crate::power::Calibration;
+        // Under every model variant, the public breakdown must sum to
+        // the draw the engine is integrating, at every event boundary.
+        let base = GpuSpec::a100_40gb();
+        let models = [
+            PowerModel::Legacy,
+            PowerModel::SliceProportional,
+            PowerModel::Measured(Calibration::default_for(&base)),
+        ];
+        for model in models {
+            let spec = Arc::new(GpuSpec::a100_40gb().with_power_model(model.clone()));
+            let mut s = GpuSim::new(spec, false);
+            let a = s.mgr.alloc(0).unwrap();
+            let b = s.mgr.alloc(1).unwrap();
+            s.launch(rodinia::by_name("nw").unwrap().job(7), a, 0.0);
+            s.launch(rodinia::by_name("gaussian").unwrap().job(3), b, 0.0);
+            loop {
+                let bd = s.power_breakdown();
+                let total = s.current_power_w();
+                assert!(
+                    (bd.total_w() - total).abs() <= 1e-9 * total.max(1.0),
+                    "{}: {} vs {total}",
+                    model.name(),
+                    bd.total_w()
+                );
+                assert_eq!(bd.per_instance.len(), 2);
+                assert_eq!(s.instance_power_w(a), bd.instance_w(a));
+                assert!(s.instance_power_w(a).unwrap() >= 0.0);
+                // Reservation bounds the actual draw at every instant.
+                assert!(s.power_reservation_w() >= total - 1e-9);
+                if s.advance().is_none() {
+                    break;
+                }
+            }
+            assert!(s.energy_j().is_finite() && s.energy_j() > 0.0);
+        }
+    }
+
+    #[test]
+    fn legacy_energy_is_bitwise_unchanged_by_the_model_plumbing() {
+        // The Legacy arm must reproduce the pre-subsystem curve bit for
+        // bit: same expression, same accumulator. Sanity-pin it against
+        // a hand-integrated run of the same mix.
+        let mut s = sim();
+        let a = s.mgr.alloc(0).unwrap();
+        s.launch(rodinia::by_name("gaussian").unwrap().job(7), a, 0.0);
+        while s.advance().is_some() {}
+        let per_gpc =
+            (s.spec.max_power_w - s.spec.idle_power_w) / s.spec.total_compute as f64;
+        // Solo job on a 1-GPC slice: active is util·1 per op; the
+        // energy must sit between the idle floor and idle+per_gpc.
+        assert!(s.energy_j() >= s.spec.idle_power_w * s.now() - 1e-9);
+        assert!(s.energy_j() <= (s.spec.idle_power_w + per_gpc) * s.now() + 1e-9);
+        // And cost stays exactly 0.0 with no signal attached.
+        assert_eq!(s.cost_usd(), 0.0);
+    }
+
+    #[test]
+    fn slice_proportional_draws_at_least_legacy() {
+        // Occupancy-based draw upper-bounds the utilization-scaled
+        // legacy curve (active_i <= slices_i · occupied_i), so the
+        // integrated energy must too.
+        let run = |model: PowerModel| {
+            let spec = Arc::new(GpuSpec::a100_40gb().with_power_model(model));
+            let mut s = GpuSim::new(spec, false);
+            let a = s.mgr.alloc(0).unwrap();
+            let b = s.mgr.alloc(1).unwrap();
+            s.launch(rodinia::by_name("nw").unwrap().job(7), a, 0.0);
+            s.launch(rodinia::by_name("myocyte").unwrap().job(2), b, 0.0);
+            while s.advance().is_some() {}
+            (s.now(), s.energy_j())
+        };
+        let (t_legacy, e_legacy) = run(PowerModel::Legacy);
+        let (t_miso, e_miso) = run(PowerModel::SliceProportional);
+        // The model never changes timing — only the draw.
+        assert_eq!(t_legacy.to_bits(), t_miso.to_bits());
+        assert!(e_miso >= e_legacy - 1e-9, "{e_miso} vs {e_legacy}");
+    }
+
+    #[test]
+    fn projection_matches_reservation_after_the_launch() {
+        let mut s = sim();
+        let a = s.mgr.alloc(1).unwrap(); // 2g.10gb
+        let job = rodinia::by_name("gaussian").unwrap().job(2);
+        let projected = s.power_projection_w(a, job.demand_gpcs);
+        s.launch(job, a, 0.0);
+        assert_eq!(projected.to_bits(), s.power_reservation_w().to_bits());
+    }
+
+    #[test]
+    fn flat_price_cost_tracks_energy_exactly() {
+        let mut priced = sim();
+        priced.set_price_signal(Some(PriceSignal::Flat(0.20)));
+        let mut plain = sim();
+        for s in [&mut priced, &mut plain] {
+            let i = s.mgr.alloc(0).unwrap();
+            s.launch(rodinia::by_name("nw").unwrap().job(7), i, 0.0);
+            while s.advance().is_some() {}
+            s.idle_until(s.now() + 50.0);
+        }
+        // The signal changes nothing about the run itself...
+        assert_eq!(priced.now().to_bits(), plain.now().to_bits());
+        assert_eq!(priced.energy_j().to_bits(), plain.energy_j().to_bits());
+        assert_eq!(plain.cost_usd(), 0.0);
+        // ...and under a flat tariff, $ = price · kWh.
+        let expect = 0.20 * priced.energy_j() / 3.6e6;
+        assert!(
+            (priced.cost_usd() - expect).abs() <= 1e-12 + 1e-9 * expect,
+            "{} vs {expect}",
+            priced.cost_usd()
+        );
+        // Cost survives the snapshot round-trip.
+        let snap = priced.snapshot();
+        let mut back = sim();
+        back.restore(&snap).unwrap();
+        assert_eq!(back.cost_usd().to_bits(), priced.cost_usd().to_bits());
     }
 
     #[test]

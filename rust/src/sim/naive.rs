@@ -22,6 +22,7 @@
 use std::sync::Arc;
 
 use crate::mig::{GpuSpec, InstanceId, PartitionManager};
+use crate::power::{InstanceLoad, PowerBreakdown, PowerModel, PriceSignal};
 use crate::predictor::Observation;
 use crate::workloads::{ComputeModel, JobSpec};
 
@@ -47,6 +48,10 @@ pub struct NaiveGpuSim {
     next_id: JobId,
     energy_j: f64,
     mem_gb_integral: f64,
+    /// Electricity cost integral, $ (exactly 0.0 with no signal).
+    cost_usd: f64,
+    /// Optional $/kWh signal (structural, never serialized).
+    price: Option<PriceSignal>,
     /// Reconfiguration/restart counters the metrics layer consumes.
     pub counters: SimCounters,
     /// Completion records of every finished job.
@@ -72,6 +77,8 @@ impl NaiveGpuSim {
             next_id: 0,
             energy_j: 0.0,
             mem_gb_integral: 0.0,
+            cost_usd: 0.0,
+            price: None,
             counters: SimCounters::default(),
             records: Vec::new(),
             observe,
@@ -152,18 +159,125 @@ impl NaiveGpuSim {
 
     /// Instantaneous power draw (W) — full scan over the running set,
     /// one [`op_active`] term per job (the same model the indexed
-    /// engine maintains incrementally).
+    /// engine maintains incrementally). Non-legacy models dispatch
+    /// through [`PowerModel`] on per-instance loads.
     fn power_w(&self) -> f64 {
-        let per_gpc =
-            (self.spec.max_power_w - self.spec.idle_power_w) / self.spec.total_compute as f64;
-        let mut active = 0.0;
-        for &(_, h) in &self.run_order {
-            let r = self.running.get(h).unwrap();
-            if let Some(op) = r.ops.get(r.cursor) {
-                active += op_active(op, r.inst_slices);
+        match &self.spec.power {
+            PowerModel::Legacy => {
+                let per_gpc = (self.spec.max_power_w - self.spec.idle_power_w)
+                    / self.spec.total_compute as f64;
+                let mut active = 0.0;
+                for &(_, h) in &self.run_order {
+                    let r = self.running.get(h).unwrap();
+                    if let Some(op) = r.ops.get(r.cursor) {
+                        active += op_active(op, r.inst_slices);
+                    }
+                }
+                self.spec.idle_power_w + per_gpc * active
             }
+            model => model.total_w(&self.spec, &self.instance_loads()),
         }
-        self.spec.idle_power_w + per_gpc * active
+    }
+
+    /// Per-instance activity, in [`InstanceId`] order (one O(n) scan
+    /// per live instance — this is the oracle). Must compute the same
+    /// values as the indexed engine's map-backed version.
+    fn instance_loads(&self) -> Vec<InstanceLoad> {
+        self.mgr
+            .live_instances()
+            .into_iter()
+            .map(|(id, profile)| {
+                let mut active = 0.0;
+                for &(_, h) in &self.run_order {
+                    let r = self.running.get(h).unwrap();
+                    if r.instance == id {
+                        if let Some(op) = r.ops.get(r.cursor) {
+                            active += op_active(op, r.inst_slices);
+                        }
+                    }
+                }
+                InstanceLoad {
+                    id,
+                    profile,
+                    active,
+                }
+            })
+            .collect()
+    }
+
+    /// Worst-case per-instance activity (see the indexed engine).
+    fn reservation_loads(&self, candidate: Option<(InstanceId, u8)>) -> Vec<InstanceLoad> {
+        self.mgr
+            .live_instances()
+            .into_iter()
+            .map(|(id, profile)| {
+                let slices = self.spec.profiles[profile].compute_slices;
+                let mut active = 0.0;
+                for &(_, h) in &self.run_order {
+                    let r = self.running.get(h).unwrap();
+                    if r.instance == id {
+                        active += r.spec.demand_gpcs.min(r.inst_slices) as f64;
+                    }
+                }
+                if let Some((cand, demand)) = candidate {
+                    if cand == id {
+                        active = demand.min(slices) as f64;
+                    }
+                }
+                InstanceLoad {
+                    id,
+                    profile,
+                    active,
+                }
+            })
+            .collect()
+    }
+
+    /// Current draw through the configured model (W), public mirror of
+    /// the internal integration path.
+    pub fn current_power_w(&self) -> f64 {
+        self.power_w()
+    }
+
+    /// Per-instance power attribution under the configured model.
+    pub fn power_breakdown(&self) -> PowerBreakdown {
+        self.spec.power.breakdown(&self.spec, &self.instance_loads())
+    }
+
+    /// Attributed draw of one instance (W), `None` if not allocated.
+    pub fn instance_power_w(&self, id: InstanceId) -> Option<f64> {
+        self.power_breakdown().instance_w(id)
+    }
+
+    /// Worst-case (reservation) fleet-admission draw (W).
+    pub fn power_reservation_w(&self) -> f64 {
+        self.spec
+            .power
+            .reservation_w(&self.spec, &self.reservation_loads(None))
+    }
+
+    /// Reservation draw if a job demanding `demand_gpcs` GPCs were
+    /// launched on `instance` (W).
+    pub fn power_projection_w(&self, instance: InstanceId, demand_gpcs: u8) -> f64 {
+        self.spec.power.reservation_w(
+            &self.spec,
+            &self.reservation_loads(Some((instance, demand_gpcs))),
+        )
+    }
+
+    /// Attach (or clear) the electricity price signal.
+    pub fn set_price_signal(&mut self, sig: Option<PriceSignal>) {
+        self.price = sig;
+    }
+
+    /// The attached price signal, if any.
+    pub fn price_signal(&self) -> Option<&PriceSignal> {
+        self.price.as_ref()
+    }
+
+    /// Electricity cost integrated so far ($; 0.0 with no signal).
+    pub fn cost_usd(&self) -> f64 {
+        self.cost_usd
     }
 
     fn n_bw_transfers(&self) -> usize {
@@ -235,7 +349,11 @@ impl NaiveGpuSim {
 
             // 2. integrate power + memory over [now, now+dt)
             if dt > 0.0 {
-                self.energy_j += self.power_w() * dt;
+                let p = self.power_w();
+                self.energy_j += p * dt;
+                if let Some(sig) = &self.price {
+                    self.cost_usd += sig.cost_usd(p, self.now, self.now + dt);
+                }
                 let mem_now: f64 = self
                     .run_order
                     .iter()
@@ -306,7 +424,14 @@ impl NaiveGpuSim {
             "idle_until on a busy sim"
         );
         if t > self.now {
-            self.energy_j += self.spec.idle_power_w * (t - self.now);
+            let p = match &self.spec.power {
+                PowerModel::Legacy => self.spec.idle_power_w,
+                model => model.total_w(&self.spec, &self.instance_loads()),
+            };
+            self.energy_j += p * (t - self.now);
+            if let Some(sig) = &self.price {
+                self.cost_usd += sig.cost_usd(p, self.now, t);
+            }
             self.now = t;
         }
     }
@@ -462,6 +587,7 @@ impl NaiveGpuSim {
             ("next_id", Json::num(self.next_id as f64)),
             ("energy_j", f64_to_json(self.energy_j)),
             ("mem_gb_integral", f64_to_json(self.mem_gb_integral)),
+            ("cost_usd", f64_to_json(self.cost_usd)),
             ("counters", super::counters_to_json(&self.counters)),
             ("records", super::records_to_json(&self.records)),
             ("mgr", self.mgr.snapshot().0),
@@ -503,6 +629,12 @@ impl NaiveGpuSim {
         self.next_id = usize_from_json(j.get("next_id"))?;
         self.energy_j = f64_from_json(j.get("energy_j"))?;
         self.mem_gb_integral = f64_from_json(j.get("mem_gb_integral"))?;
+        // Pre-power-subsystem snapshots have no cost integral: 0.0.
+        self.cost_usd = if j.get("cost_usd").is_null() {
+            0.0
+        } else {
+            f64_from_json(j.get("cost_usd"))?
+        };
         self.counters = super::counters_from_json(j.get("counters"))?;
         self.records = super::records_from_json(j.get("records"))?;
         Ok(())
@@ -604,6 +736,39 @@ mod tests {
         }
         assert_eq!(full.energy_j().to_bits(), resumed.energy_j().to_bits());
         assert_eq!(full.records.len(), resumed.records.len());
+    }
+
+    #[test]
+    fn oracle_attribution_sums_to_oracle_draw_under_every_model() {
+        use crate::power::{Calibration, PowerModel};
+        let base = GpuSpec::a100_40gb();
+        let models = [
+            PowerModel::Legacy,
+            PowerModel::SliceProportional,
+            PowerModel::Measured(Calibration::default_for(&base)),
+        ];
+        for model in models {
+            let spec = Arc::new(GpuSpec::a100_40gb().with_power_model(model));
+            let mut s = NaiveGpuSim::new(spec, false);
+            let a = s.mgr.alloc(0).unwrap();
+            let b = s.mgr.alloc(1).unwrap();
+            s.launch(rodinia::by_name("nw").unwrap().job(7), a, 0.0);
+            s.launch(rodinia::by_name("gaussian").unwrap().job(7), b, 0.0);
+            loop {
+                let sum = s.power_breakdown().total_w();
+                assert!(
+                    (sum - s.current_power_w()).abs() < 1e-9,
+                    "attribution {sum} vs draw {}",
+                    s.current_power_w()
+                );
+                assert!(s.power_reservation_w() + 1e-9 >= s.current_power_w());
+                if s.advance().is_none() {
+                    break;
+                }
+            }
+            assert!(s.energy_j().is_finite() && s.energy_j() > 0.0);
+            assert_eq!(s.cost_usd(), 0.0);
+        }
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::estimator::BeliefConfig;
 use crate::fleet::FleetPolicy;
 use crate::metrics::BatchMetrics;
 use crate::mig::GpuSpec;
+use crate::power::{FleetPowerCap, PowerGovernor, PriceSignal};
 use crate::scheduler::{
     baseline::BaselinePolicy, scheme_a::SchemeAPolicy, scheme_b::SchemeBPolicy, Orchestrator,
     OrchestratorCheckpoint, RunResult, SchedulingPolicy,
@@ -47,6 +48,20 @@ pub const W_P99: f64 = 0.25;
 /// Cap on any single normalized component.
 pub const COMPONENT_CAP: f64 = 10.0;
 
+/// A scenario-level fleet power budget. When present, every
+/// orchestrator built for the scenario gets a
+/// [`PowerGovernor`](crate::power::PowerGovernor) (and the optional
+/// price signal), which makes the candidates'
+/// `cap_headroom`/`defer_price` axes live.
+#[derive(Debug, Clone)]
+pub struct PowerScenario {
+    /// Fleet-wide cap on projected reserved draw, W.
+    pub cap_w: f64,
+    /// Electricity price signal ($/kWh); drives both cost integrals
+    /// and price-aware deferral (for candidates with `defer_price > 0`).
+    pub price: Option<PriceSignal>,
+}
+
 /// One fleet workload a sweep scores candidates on.
 #[derive(Debug, Clone)]
 pub struct Scenario {
@@ -63,6 +78,10 @@ pub struct Scenario {
     pub base_rate_jps: Option<f64>,
     /// Seed for mix shuffling and arrival draws.
     pub seed: u64,
+    /// Optional fleet power budget; `None` (the legacy shape) installs
+    /// no governor and leaves every run bit-identical to pre-power
+    /// builds.
+    pub power: Option<PowerScenario>,
 }
 
 impl Scenario {
@@ -92,6 +111,7 @@ impl Scenario {
             mix: m,
             base_rate_jps: None,
             seed,
+            power: None,
         })
     }
 
@@ -126,6 +146,7 @@ impl Scenario {
             mix: Mix::batch("synthetic-tier-fleet", jobs),
             base_rate_jps: None,
             seed,
+            power: None,
         }
     }
 
@@ -150,7 +171,16 @@ impl Scenario {
             mix: Mix::batch("hetero-skew", jobs),
             base_rate_jps: None,
             seed,
+            power: None,
         }
+    }
+
+    /// Attach a fleet power cap (and optional price signal), making
+    /// the candidates' power knobs live on this scenario.
+    pub fn with_power_cap(mut self, cap_w: f64, price: Option<PriceSignal>) -> Scenario {
+        self.name = format!("{}-cap{cap_w:.0}w", self.name);
+        self.power = Some(PowerScenario { cap_w, price });
+        self
     }
 
     /// The tiered fleet under open-loop Poisson arrivals (the
@@ -212,14 +242,31 @@ fn orchestrator_for(
         .enumerate()
         .map(|(g, spec)| shard_for(cand, spec, g))
         .collect();
-    Orchestrator::with_belief_config(
+    let mut orch = Orchestrator::with_belief_config(
         scen.specs.clone(),
         BeliefConfig {
             prediction: cand.prediction,
             knobs: cand.belief,
         },
         FleetPolicy::new(shards, cand.fleet.clone()),
-    )
+    );
+    // Power is structural (never checkpointed), so installing it here
+    // covers both the cold-start and the warm-restore paths — a warm
+    // resume restores job state into an orchestrator that already
+    // carries the governor and price signal.
+    if let Some(p) = &scen.power {
+        let mut cap = FleetPowerCap::new(p.cap_w).with_headroom(cand.cap_headroom);
+        if cand.defer_price > 0.0 {
+            cap = cap.with_price_deferral(cand.defer_price);
+        }
+        let mut gov = PowerGovernor::new(cap);
+        if let Some(sig) = &p.price {
+            gov = gov.with_price(sig.clone());
+            orch.set_price_signal(Some(sig.clone()));
+        }
+        orch.set_power_governor(Some(gov));
+    }
+    orch
 }
 
 /// Run one candidate over one scenario through the real orchestrator
@@ -692,6 +739,30 @@ mod tests {
         cand.fleet = crate::fleet::FleetKnobs::balanced();
         let r = evaluate_candidate(&cand, &scens, &refs);
         assert!(r.objective > 1.0, "objective {}", r.objective);
+    }
+
+    #[test]
+    fn capped_scenario_installs_the_governor_and_holds_the_cap() {
+        let base = Scenario::synthetic_fleet(1, 5);
+        let spec = base.specs[0].clone();
+        // Cap at ~60% of the dynamic range: tight enough to defer the
+        // full 12-slice wave, loose enough that every job still fits.
+        let cap_w = spec.idle_power_w + 0.6 * (spec.max_power_w - spec.idle_power_w);
+        let scen = base.with_power_cap(cap_w, None);
+        assert!(scen.name.contains("-cap"));
+        let cand = Candidate::reference();
+        let mut orch = orchestrator_for(&cand, &scen);
+        assert!(orch.power_governor().is_some());
+        orch.submit_mix(&scen.mix_for(&cand));
+        orch.run_to_completion();
+        let r = orch.fleet_result();
+        assert_eq!(r.records.len(), scen.mix.jobs.len());
+        let gov = orch.power_governor().unwrap();
+        assert_eq!(gov.violation_s(), 0.0, "cap violations must be 0 by construction");
+        assert!(gov.peak_reserved_w() <= cap_w + 1e-9);
+        // The legacy shape installs no governor at all.
+        let plain = orchestrator_for(&cand, &Scenario::synthetic_fleet(1, 5));
+        assert!(plain.power_governor().is_none());
     }
 
     #[test]

@@ -14,8 +14,9 @@
 //!   fusion width + idle-reuse slack, the predictor switch, the
 //!   fleet-routing knobs ([`FleetKnobs`](crate::fleet::FleetKnobs):
 //!   placement engine, work stealing, cost-model weights), arrival
-//!   intensity) and the deterministic candidate generators (grid,
-//!   seeded random).
+//!   intensity, and the power knobs — cap headroom and price-deferral
+//!   threshold, live on scenarios with a [`PowerScenario`] budget) and
+//!   the deterministic candidate generators (grid, seeded random).
 //! * [`eval`] — [`Scenario`] fleets (paper mixes on the A100, tiered
 //!   synthetic multi-GPU fleets, the mixed A30/A100/H100
 //!   heterogeneous fleet, batch or Poisson arrivals) and the
@@ -57,7 +58,7 @@ pub mod space;
 
 pub use eval::{
     advance_all, evaluate_all, reference_results, reference_stats, run_candidate,
-    CandidateProgress, CandidateResult, EvalStats, Scenario, ScenarioRef, WarmMode,
+    CandidateProgress, CandidateResult, EvalStats, PowerScenario, Scenario, ScenarioRef, WarmMode,
 };
 pub use report::{
     fleet_bench_row, warmstart_bench_row, FleetBenchArm, RankedCandidate, SweepReport,

@@ -43,6 +43,15 @@ pub struct Candidate {
     /// Multiplier on each online scenario's base Poisson rate (ignored
     /// by batch scenarios). Must be positive.
     pub arrival_scale: f64,
+    /// Power-cap admission headroom fraction in `[0, 1)` — live only
+    /// when the scenario defines a fleet power cap; otherwise the
+    /// governor is never installed and this is dead (but still part of
+    /// the canonical key, like `arrival_scale` on batch scenarios).
+    pub cap_headroom: f64,
+    /// Price-aware deferral threshold ($/kWh): launches defer while the
+    /// price signal sits above it. `0.0` disables deferral; live only
+    /// when the scenario carries both a power cap and a price signal.
+    pub defer_price: f64,
 }
 
 impl Candidate {
@@ -57,6 +66,8 @@ impl Candidate {
             fleet: FleetKnobs::default(),
             prediction: false,
             arrival_scale: 1.0,
+            cap_headroom: 0.05,
+            defer_price: 0.0,
         }
     }
 
@@ -86,6 +97,12 @@ impl Candidate {
             if (s.arrival_scale - 1.0).abs() > 1e-12 {
                 t.push_str(&format!(" x{:.2}", s.arrival_scale));
             }
+            if (s.cap_headroom - 0.05).abs() > 1e-12 || s.defer_price > 0.0 {
+                t.push_str(&format!(
+                    " pow h={:.2} p={:.2}",
+                    s.cap_headroom, s.defer_price
+                ));
+            }
             t
         };
         match self.scheme {
@@ -110,6 +127,8 @@ impl Candidate {
             ("fleet", self.fleet.to_json()),
             ("prediction", Json::Bool(self.prediction)),
             ("arrival_scale", Json::num(self.arrival_scale)),
+            ("cap_headroom", Json::num(self.cap_headroom)),
+            ("defer_price", Json::num(self.defer_price)),
         ])
     }
 
@@ -134,6 +153,22 @@ impl Candidate {
         if arrival_scale <= 0.0 {
             bail!("arrival_scale must be positive, got {arrival_scale}");
         }
+        // Missing power knobs take the v10 defaults, so pre-power
+        // candidate documents still parse and mean what they used to.
+        let cap_headroom = match doc.get("cap_headroom") {
+            Json::Null => 0.05,
+            v => v.as_f64().context("cap_headroom must be a number")?,
+        };
+        if !(0.0..1.0).contains(&cap_headroom) {
+            bail!("cap_headroom must be in [0, 1), got {cap_headroom}");
+        }
+        let defer_price = match doc.get("defer_price") {
+            Json::Null => 0.0,
+            v => v.as_f64().context("defer_price must be a number")?,
+        };
+        if defer_price < 0.0 {
+            bail!("defer_price must be >= 0, got {defer_price}");
+        }
         Ok(Candidate {
             scheme,
             a,
@@ -142,6 +177,8 @@ impl Candidate {
             fleet,
             prediction,
             arrival_scale,
+            cap_headroom,
+            defer_price,
         })
     }
 }
@@ -198,6 +235,12 @@ pub struct ParamSpace {
     pub fleet_energy_weights: Vec<f64>,
     /// Arrival-intensity multipliers (> 0) for online scenarios.
     pub arrival_scales: Vec<f64>,
+    /// Power-cap admission headrooms (in `[0, 1)`; live only on
+    /// scenarios with a fleet power cap).
+    pub cap_headrooms: Vec<f64>,
+    /// Price-deferral thresholds ($/kWh, >= 0; 0 disables — live only
+    /// on scenarios with both a cap and a price signal).
+    pub defer_prices: Vec<f64>,
 }
 
 impl ParamSpace {
@@ -220,6 +263,8 @@ impl ParamSpace {
             fleet_steals: vec![false, true],
             fleet_energy_weights: vec![1.0],
             arrival_scales: vec![1.0],
+            cap_headrooms: vec![0.05],
+            defer_prices: vec![0.0],
         }
     }
 
@@ -245,6 +290,11 @@ impl ParamSpace {
             fleet_steals: vec![false, true],
             fleet_energy_weights: vec![0.0, 1.0],
             arrival_scales: vec![0.5, 1.0, 2.0],
+            // Single defaults: the power axes only bite on capped
+            // scenarios, which the default sweep set doesn't include —
+            // widen these when sweeping a Scenario with a power cap.
+            cap_headrooms: vec![0.05],
+            defer_prices: vec![0.0],
         }
     }
 
@@ -262,6 +312,8 @@ impl ParamSpace {
             ("fleet_steals", self.fleet_steals.is_empty()),
             ("fleet_energy_weights", self.fleet_energy_weights.is_empty()),
             ("arrival_scales", self.arrival_scales.is_empty()),
+            ("cap_headrooms", self.cap_headrooms.is_empty()),
+            ("defer_prices", self.defer_prices.is_empty()),
         ] {
             if empty {
                 bail!("ParamSpace axis '{name}' is empty");
@@ -284,6 +336,12 @@ impl ParamSpace {
         }
         if self.fleet_energy_weights.iter().any(|&w| w < 0.0) {
             bail!("fleet_energy_weights must be >= 0");
+        }
+        if self.cap_headrooms.iter().any(|&h| !(0.0..1.0).contains(&h)) {
+            bail!("cap_headrooms must be in [0, 1)");
+        }
+        if self.defer_prices.iter().any(|&p| p < 0.0) {
+            bail!("defer_prices must be >= 0");
         }
         Ok(())
     }
@@ -382,16 +440,22 @@ impl ParamSpace {
                 for &belief in &self.belief_choices(prediction) {
                     for fleet in &fleets {
                         for &arrival_scale in &self.arrival_scales {
-                            let base = Candidate {
-                                scheme,
-                                a: SchemeAKnobs::default(),
-                                b: SchemeBKnobs::default(),
-                                belief,
-                                fleet: fleet.clone(),
-                                prediction,
-                                arrival_scale,
-                            };
-                            self.push_scheme_knobs(&mut by_key, base);
+                            for &cap_headroom in &self.cap_headrooms {
+                                for &defer_price in &self.defer_prices {
+                                    let base = Candidate {
+                                        scheme,
+                                        a: SchemeAKnobs::default(),
+                                        b: SchemeBKnobs::default(),
+                                        belief,
+                                        fleet: fleet.clone(),
+                                        prediction,
+                                        arrival_scale,
+                                        cap_headroom,
+                                        defer_price,
+                                    };
+                                    self.push_scheme_knobs(&mut by_key, base);
+                                }
+                            }
                         }
                     }
                 }
@@ -425,6 +489,8 @@ impl ParamSpace {
             let steal = *rng.choice(&self.fleet_steals);
             let energy = *rng.choice(&self.fleet_energy_weights);
             let arrival_scale = *rng.choice(&self.arrival_scales);
+            let cap_headroom = *rng.choice(&self.cap_headrooms);
+            let defer_price = *rng.choice(&self.defer_prices);
             let c = Candidate {
                 scheme,
                 a: match scheme {
@@ -460,6 +526,8 @@ impl ParamSpace {
                 },
                 prediction,
                 arrival_scale,
+                cap_headroom,
+                defer_price,
             };
             Self::push(&mut by_key, c);
         }
@@ -488,6 +556,8 @@ mod tests {
             fleet: FleetKnobs::balanced(),
             prediction: true,
             arrival_scale: 2.0,
+            cap_headroom: 0.1,
+            defer_price: 0.22,
         };
         let back = Candidate::from_json(&Json::parse(&c.key()).unwrap()).unwrap();
         assert_eq!(back, c);
@@ -532,6 +602,8 @@ mod tests {
             fleet_steals: vec![false],
             fleet_energy_weights: vec![0.5, 1.0],
             arrival_scales: vec![1.0],
+            cap_headrooms: vec![0.05],
+            defer_prices: vec![0.0],
         };
         // B-only axes don't multiply A candidates, belief axes are
         // dead without prediction, and the cost-model weight axis is
@@ -554,6 +626,8 @@ mod tests {
             fleet_steals: vec![false],
             fleet_energy_weights: vec![1.0],
             arrival_scales: vec![1.0],
+            cap_headrooms: vec![0.05],
+            defer_prices: vec![0.0],
         };
         // prediction on: 2 x 2 x 2 belief combos for the single A point
         assert_eq!(space.grid().unwrap().len(), 8);
@@ -571,6 +645,12 @@ mod tests {
         assert!(space.grid().is_err());
         space.safety_margins = vec![0.0];
         space.fleet_energy_weights = vec![-1.0];
+        assert!(space.grid().is_err());
+        space.fleet_energy_weights = vec![1.0];
+        space.cap_headrooms = vec![1.0];
+        assert!(space.grid().is_err());
+        space.cap_headrooms = vec![0.05];
+        space.defer_prices = vec![-0.1];
         assert!(space.grid().is_err());
     }
 

@@ -246,6 +246,84 @@ pub fn reachability_bench_row(
     ])
 }
 
+/// Schema tag of [`power_bench_row`]; bump on any shape change.
+pub const POWER_ROW_SCHEMA: &str = "migm.bench.power.v1";
+
+/// One arm of the power-cap bench row: the headline economics of a
+/// single governed (or ungoverned) fleet run.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerBenchArm<'a> {
+    /// Arm label ("uncapped" / "capped" / "capped+price-aware").
+    pub label: &'a str,
+    /// Batch makespan, s.
+    pub makespan_s: f64,
+    /// Throughput, jobs/s.
+    pub throughput_jps: f64,
+    /// Energy per job, J.
+    pub energy_per_job_j: f64,
+    /// Electricity cost per job, $.
+    pub usd_per_job: f64,
+    /// Seconds the audited reserved draw spent above the cap.
+    pub violation_s: f64,
+    /// Cap deferrals.
+    pub deferrals: u64,
+    /// Price deferrals.
+    pub price_deferrals: u64,
+    /// GPU-seconds parked at 0 W.
+    pub parked_gpu_s: f64,
+}
+
+impl PowerBenchArm<'_> {
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label)),
+            ("makespan_s", Json::num(self.makespan_s)),
+            ("throughput_jps", Json::num(self.throughput_jps)),
+            ("energy_per_job_j", Json::num(self.energy_per_job_j)),
+            ("usd_per_job", Json::num(self.usd_per_job)),
+            ("violation_s", Json::num(self.violation_s)),
+            ("deferrals", Json::num(self.deferrals as f64)),
+            ("price_deferrals", Json::num(self.price_deferrals as f64)),
+            ("parked_gpu_s", Json::num(self.parked_gpu_s)),
+        ])
+    }
+}
+
+/// Build the power-cap head-to-head row (`migm.bench.power.v1`): the
+/// same fleet batch uncapped, capped, and capped+price-aware over a
+/// shared price signal. `throughput_retention` is capped ÷ uncapped
+/// throughput (1.0 = the cap cost nothing); `usd_per_job_ratio` is
+/// price-blind ÷ price-aware $/job, so **> 1.0 means price awareness
+/// wins**. The validator rejects rows whose governed arms report any
+/// cap-violation seconds — zero is the governor's construction
+/// invariant, not a tuning outcome.
+pub fn power_bench_row(
+    bench: &str,
+    n_jobs: usize,
+    cap_w: f64,
+    uncapped: PowerBenchArm,
+    capped: PowerBenchArm,
+    price_aware: PowerBenchArm,
+) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str(POWER_ROW_SCHEMA)),
+        ("bench", Json::str(bench)),
+        ("n_jobs", Json::num(n_jobs as f64)),
+        ("cap_w", Json::num(cap_w)),
+        (
+            "throughput_retention",
+            Json::num(capped.throughput_jps / uncapped.throughput_jps.max(1e-12)),
+        ),
+        (
+            "usd_per_job_ratio",
+            Json::num(capped.usd_per_job / price_aware.usd_per_job.max(1e-12)),
+        ),
+        ("uncapped", uncapped.to_json()),
+        ("capped", capped.to_json()),
+        ("price_aware", price_aware.to_json()),
+    ])
+}
+
 fn require_keys(row: &Json, ctx: &str, keys: &[&str]) -> Result<(), String> {
     for k in keys {
         if row.get(k).is_null() {
@@ -382,6 +460,48 @@ pub fn validate_trajectory_row(row: &Json) -> Result<(), String> {
             }
             Ok(())
         }
+        "migm.bench.power.v1" => {
+            require_keys(
+                row,
+                schema,
+                &[
+                    "bench",
+                    "n_jobs",
+                    "cap_w",
+                    "throughput_retention",
+                    "usd_per_job_ratio",
+                    "uncapped",
+                    "capped",
+                    "price_aware",
+                ],
+            )?;
+            for arm in ["uncapped", "capped", "price_aware"] {
+                require_keys(
+                    row.get(arm),
+                    &format!("{schema}.{arm}"),
+                    &[
+                        "label",
+                        "makespan_s",
+                        "throughput_jps",
+                        "energy_per_job_j",
+                        "usd_per_job",
+                        "violation_s",
+                        "deferrals",
+                        "price_deferrals",
+                        "parked_gpu_s",
+                    ],
+                )?;
+            }
+            for arm in ["capped", "price_aware"] {
+                if row.get(arm).get("violation_s").as_f64() != Some(0.0) {
+                    return Err(format!(
+                        "{schema}.{arm}: violation_s must be exactly 0 — the governor \
+                         holds the cap by construction"
+                    ));
+                }
+            }
+            Ok(())
+        }
         "migm.bench.reachability.v1" => require_keys(
             row,
             schema,
@@ -503,6 +623,39 @@ mod tests {
             90.0,
         );
         validate_trajectory_row(&reach).expect("reachability row must validate");
+
+        let arm = |label, usd, viol| PowerBenchArm {
+            label,
+            makespan_s: 100.0,
+            throughput_jps: 0.5,
+            energy_per_job_j: 900.0,
+            usd_per_job: usd,
+            violation_s: viol,
+            deferrals: 4,
+            price_deferrals: 2,
+            parked_gpu_s: 60.0,
+        };
+        let power = power_bench_row(
+            "power_cap_hetero",
+            50,
+            1200.0,
+            arm("uncapped", 0.02, 0.0),
+            arm("capped", 0.02, 0.0),
+            arm("capped+price-aware", 0.004, 0.0),
+        );
+        validate_trajectory_row(&power).expect("power row must validate");
+        assert!((power.get("usd_per_job_ratio").as_f64().unwrap() - 5.0).abs() < 1e-9);
+        // a governed arm reporting violation seconds is rejected
+        let bad = power_bench_row(
+            "power_cap_hetero",
+            50,
+            1200.0,
+            arm("uncapped", 0.02, 0.0),
+            arm("capped", 0.02, 1.5),
+            arm("capped+price-aware", 0.004, 0.0),
+        );
+        let err = validate_trajectory_row(&bad).unwrap_err();
+        assert!(err.contains("violation_s"), "{err}");
 
         // the fault row built by the real builder is validated in
         // scheduler::fault's tests (it needs a full fault run).
